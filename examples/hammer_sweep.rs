@@ -1,0 +1,37 @@
+//! fdb-hammer scalability sweep: the thesis' headline comparison
+//! (Figs 4.12/4.21 shape) — DAOS vs Lustre vs Ceph as servers scale.
+//!
+//! Run: `cargo run --release --example hammer_sweep`
+
+use fdbr::bench::hammer::{run, HammerConfig};
+use fdbr::bench::scenario::{deploy, RedundancyOpt, SystemKind};
+use fdbr::hw::profiles::Testbed;
+
+fn main() {
+    println!("fdb-hammer sweep on simulated GCP (2:1 clients:servers, 8 procs/node)");
+    println!("{:<8} {:>8} {:>12} {:>12}", "system", "servers", "write GiB/s", "read GiB/s");
+    for kind in [SystemKind::Lustre, SystemKind::Daos, SystemKind::Ceph] {
+        for servers in [2usize, 4, 8] {
+            let dep = deploy(Testbed::Gcp, kind, servers, servers * 2, RedundancyOpt::None);
+            let (r, _) = run(
+                &dep,
+                HammerConfig {
+                    procs_per_node: 8,
+                    nsteps: 5,
+                    nparams: 5,
+                    nlevels: 4,
+                    field_size: 1 << 20,
+                    check: false,
+                    contention: false,
+                },
+            );
+            println!(
+                "{:<8} {:>8} {:>12.2} {:>12.2}",
+                kind.label(),
+                servers,
+                r.gibs_w(),
+                r.gibs_r()
+            );
+        }
+    }
+}

@@ -1,0 +1,47 @@
+//! Small-object performance (thesis Fig 4.26): 1 KiB fields expose the
+//! per-op costs — DAOS' user-space path wins big over kernel/TCP paths.
+//!
+//! Run: `cargo run --release --example small_objects`
+
+use fdbr::bench::hammer::{run, HammerConfig};
+use fdbr::bench::scenario::{deploy, RedundancyOpt, SystemKind};
+use fdbr::hw::profiles::Testbed;
+
+fn main() {
+    println!("1 KiB-object fdb-hammer (8 client procs/node, 4+4 nodes, GCP)");
+    println!("{:<8} {:>14} {:>14}", "system", "write MiB/s", "read MiB/s");
+    let mut daos = (0.0, 0.0);
+    let mut ceph = (0.0, 0.0);
+    let mut lustre_read = 0.0;
+    for kind in [SystemKind::Lustre, SystemKind::Daos, SystemKind::Ceph] {
+        let dep = deploy(Testbed::Gcp, kind, 2, 4, RedundancyOpt::None);
+        let (r, _) = run(
+            &dep,
+            HammerConfig {
+                procs_per_node: 8,
+                nsteps: 10,
+                nparams: 5,
+                nlevels: 4,
+                field_size: 1 << 10,
+                check: false,
+                contention: false,
+            },
+        );
+        let w = r.write_bw / (1u64 << 20) as f64;
+        let rd = r.read_bw / (1u64 << 20) as f64;
+        println!("{:<8} {:>14.1} {:>14.1}", kind.label(), w, rd);
+        match kind {
+            SystemKind::Daos => daos = (w, rd),
+            SystemKind::Ceph => ceph = (w, rd),
+            SystemKind::Lustre => lustre_read = rd,
+        }
+    }
+    // Thesis shape (Fig 4.26 / §2.5): DAOS is the only system with high
+    // KiB-object performance. Lustre's *apparent* write rate is page-cache
+    // buffering (not durable per op) — the honest comparisons are reads,
+    // and writes among the immediately-durable object stores.
+    assert!(daos.0 > ceph.0, "DAOS durable small writes should beat Ceph");
+    assert!(daos.1 > ceph.1, "DAOS small reads should beat Ceph");
+    assert!(daos.1 > 2.0 * lustre_read, "DAOS small reads should dwarf Lustre");
+    println!("shape check PASSED: DAOS leads KiB-scale durable I/O");
+}

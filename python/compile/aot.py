@@ -1,0 +1,84 @@
+"""AOT export: lower the L2 graphs to HLO **text** for the Rust runtime.
+
+HLO text (not ``HloModuleProto.serialize``) is the interchange format —
+jax ≥ 0.5 emits protos with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Usage: ``python -m compile.aot --outdir ../artifacts``
+Emits, for each grid size G in GRIDS and ensemble size E:
+
+* ``pgen_e{E}_g{G}.hlo.txt``   — pgen_products([E,G,G], thr)
+* ``model_step_g{G}.hlo.txt``  — model_step([G,G], [G,G])
+* ``codec_g{G}.hlo.txt``       — codec_roundtrip([G,G])
+* ``manifest.json``            — shapes/entry metadata for the loader
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+GRIDS = (32, 64)
+ENSEMBLE = 8
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export(outdir: str) -> dict:
+    os.makedirs(outdir, exist_ok=True)
+    manifest = {"ensemble": ENSEMBLE, "grids": list(GRIDS), "artifacts": {}}
+
+    def emit(name, fn, *args):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "inputs": [list(a.shape) for a in args],
+            "bytes": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for g in GRIDS:
+        field = jax.ShapeDtypeStruct((g, g), jnp.float32)
+        ens = jax.ShapeDtypeStruct((ENSEMBLE, g, g), jnp.float32)
+        thr = jax.ShapeDtypeStruct((), jnp.float32)
+        emit(f"pgen_e{ENSEMBLE}_g{g}", model.pgen_products, ens, thr)
+        emit(f"model_step_g{g}", model.model_step, field, field)
+        emit(f"codec_g{g}", model.codec_roundtrip, field)
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="compat: marker file path")
+    args = ap.parse_args()
+    outdir = args.outdir
+    if args.out:
+        outdir = os.path.dirname(args.out) or "."
+    export(outdir)
+    if args.out:
+        # marker for the Makefile dependency
+        with open(args.out, "w") as f:
+            f.write("see manifest.json\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""L1 Pallas kernel: fused ensemble statistics (PGEN's hot spot).
+
+For each spatial tile the full member axis is VMEM-resident, so mean,
+spread, and exceedance probability reduce over members without
+re-fetching the tile from HBM — the fusion a naive per-statistic jnp
+graph would lose. Grid: spatial tiles; member axis innermost (see
+DESIGN.md §Hardware-Adaptation).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 64
+
+
+def _stats_kernel(ens_ref, thr_ref, mean_ref, spread_ref, prob_ref):
+    ens = ens_ref[...]  # [E, bh, bw] — whole member axis in VMEM
+    thr = thr_ref[0]
+    e = ens.shape[0]
+    mean = jnp.sum(ens, axis=0) / e
+    var = jnp.sum((ens - mean[None, :, :]) ** 2, axis=0) / e
+    mean_ref[...] = mean
+    spread_ref[...] = jnp.sqrt(var)
+    prob_ref[...] = jnp.sum((ens > thr).astype(jnp.float32), axis=0) / e
+
+
+def ensemble_stats(ens, threshold):
+    """``[E, H, W] f32`` → (mean, spread, prob) each ``[H, W]``."""
+    e, h, w = ens.shape
+    bh = min(BLOCK, h)
+    bw = min(BLOCK, w)
+    grid = (pl.cdiv(h, bh), pl.cdiv(w, bw))
+    ens_spec = pl.BlockSpec((e, bh, bw), lambda i, j: (0, i, j))
+    out_spec = pl.BlockSpec((bh, bw), lambda i, j: (i, j))
+    scalar = pl.BlockSpec((1,), lambda i, j: (0,))
+    out_shape = jax.ShapeDtypeStruct((h, w), jnp.float32)
+    return pl.pallas_call(
+        _stats_kernel,
+        grid=grid,
+        in_specs=[ens_spec, scalar],
+        out_specs=(out_spec, out_spec, out_spec),
+        out_shape=(out_shape, out_shape, out_shape),
+        interpret=True,
+    )(ens, jnp.asarray(threshold, jnp.float32)[None])

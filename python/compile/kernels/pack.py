@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: GRIB-style simple packing (16-bit quantization).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the field is blocked
+``(BLOCK, BLOCK)`` so each tile fits VMEM; the min/max reduction is a
+separate jnp pass (XLA fuses it), and the quantize/dequantize maps run
+as Pallas grids over tiles with ``BlockSpec`` expressing the HBM↔VMEM
+schedule. ``interpret=True`` everywhere — the CPU PJRT plugin cannot run
+Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 64
+
+
+def _quantize_kernel(x_ref, lo_ref, scale_ref, q_ref):
+    lo = lo_ref[0]
+    scale = scale_ref[0]
+    x = x_ref[...]
+    q = jnp.clip(jnp.round((x - lo) / scale), 0.0, 65535.0)
+    q_ref[...] = q.astype(jnp.int32)
+
+
+def _dequantize_kernel(q_ref, lo_ref, scale_ref, x_ref):
+    lo = lo_ref[0]
+    scale = scale_ref[0]
+    x_ref[...] = lo + scale * q_ref[...].astype(jnp.float32)
+
+
+def _grid_specs(shape):
+    h, w = shape
+    bh = min(BLOCK, h)
+    bw = min(BLOCK, w)
+    grid = (pl.cdiv(h, bh), pl.cdiv(w, bw))
+    tile = pl.BlockSpec((bh, bw), lambda i, j: (i, j))
+    scalar = pl.BlockSpec((1,), lambda i, j: (0,))
+    return grid, tile, scalar
+
+
+def quantize(field):
+    """``[H, W] f32`` → ``(q i32, lo f32, scale f32)`` via a Pallas map."""
+    lo = jnp.min(field)
+    hi = jnp.max(field)
+    span = jnp.maximum(hi - lo, jnp.finfo(jnp.float32).tiny)
+    scale = span / 65535.0
+    grid, tile, scalar = _grid_specs(field.shape)
+    q = pl.pallas_call(
+        _quantize_kernel,
+        grid=grid,
+        in_specs=[tile, scalar, scalar],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct(field.shape, jnp.int32),
+        interpret=True,
+    )(field, lo[None], scale[None])
+    return q, lo, scale
+
+
+def dequantize(q, lo, scale):
+    """Inverse Pallas map of :func:`quantize`."""
+    grid, tile, scalar = _grid_specs(q.shape)
+    return pl.pallas_call(
+        _dequantize_kernel,
+        grid=grid,
+        in_specs=[tile, scalar, scalar],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct(q.shape, jnp.float32),
+        interpret=True,
+    )(q, lo[None], scale[None])
+
+
+def codec_roundtrip(field):
+    """quantize → dequantize: the store-side compression path whose
+    error bound tests assert GRIB-packing semantics."""
+    q, lo, scale = quantize(field)
+    return dequantize(q, lo, scale)

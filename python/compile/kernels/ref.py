@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness anchors.
+
+Every kernel in this package must match its oracle to float tolerance
+under pytest (and hypothesis shape/value sweeps). The oracles are also
+the semantic reference mirrored by the Rust-side implementations in
+``rust/src/workflow/fields.rs``.
+"""
+
+import jax.numpy as jnp
+
+
+def quantize_ref(field):
+    """GRIB simple packing (16-bit): returns (q_u16_as_i32, lo, scale)."""
+    lo = jnp.min(field)
+    hi = jnp.max(field)
+    span = jnp.maximum(hi - lo, jnp.finfo(jnp.float32).tiny)
+    scale = span / 65535.0
+    q = jnp.clip(jnp.round((field - lo) / scale), 0, 65535).astype(jnp.int32)
+    return q, lo, scale
+
+
+def dequantize_ref(q, lo, scale):
+    """Inverse of :func:`quantize_ref`."""
+    return lo + scale * q.astype(jnp.float32)
+
+
+def ensemble_stats_ref(ens, threshold):
+    """Ensemble statistics over the member axis (axis 0) of ``[E, H, W]``.
+
+    Returns (mean, spread, exceedance probability) each ``[H, W]``.
+    """
+    mean = jnp.mean(ens, axis=0)
+    spread = jnp.std(ens, axis=0)
+    prob = jnp.mean((ens > threshold).astype(jnp.float32), axis=0)
+    return mean, spread, prob
+
+
+def diffuse_ref(field):
+    """One 5-point diffusion sweep with edge clamping (the model step's
+    stencil): ``out = 0.5*c + 0.125*(up + down + left + right)``."""
+    up = jnp.roll(field, 1, axis=0).at[0, :].set(field[0, :])
+    dn = jnp.roll(field, -1, axis=0).at[-1, :].set(field[-1, :])
+    lf = jnp.roll(field, 1, axis=1).at[:, 0].set(field[:, 0])
+    rt = jnp.roll(field, -1, axis=1).at[:, -1].set(field[:, -1])
+    return 0.5 * field + 0.125 * (up + dn + lf + rt)

@@ -1,0 +1,28 @@
+"""L1 Pallas kernel: 5-point diffusion stencil (the synthetic model's
+dynamical core). The whole (small) grid is one VMEM block — NWP grids in
+this reproduction are ≤ 256², i.e. ≤ 256 KiB f32, comfortably inside
+VMEM; larger grids would tile with halo exchange via index_map overlap.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _diffuse_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    # edge-clamped neighbors (jnp.roll + boundary fix, vectorized)
+    up = jnp.concatenate([x[:1, :], x[:-1, :]], axis=0)
+    dn = jnp.concatenate([x[1:, :], x[-1:, :]], axis=0)
+    lf = jnp.concatenate([x[:, :1], x[:, :-1]], axis=1)
+    rt = jnp.concatenate([x[:, 1:], x[:, -1:]], axis=1)
+    o_ref[...] = 0.5 * x + 0.125 * (up + dn + lf + rt)
+
+
+def diffuse(field):
+    """One edge-clamped 5-point diffusion sweep, ``[H, W] f32``."""
+    return pl.pallas_call(
+        _diffuse_kernel,
+        out_shape=jax.ShapeDtypeStruct(field.shape, jnp.float32),
+        interpret=True,
+    )(field)

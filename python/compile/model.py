@@ -1,0 +1,42 @@
+"""L2: the JAX compute graphs AOT-compiled for the Rust coordinator.
+
+Three graphs, all calling the L1 Pallas kernels:
+
+* ``pgen_products`` — PGEN's derived-product generation: decode the
+  ensemble's quantized fields (codec path exercised end-to-end), fused
+  ensemble statistics, re-quantize the products for archival.
+* ``model_step`` — the synthetic NWP model: damped diffusion +
+  stochastic forcing, producing the next step's field.
+* ``codec_roundtrip`` — the store-side compression path alone.
+
+Python runs only at build time (``make artifacts``); the lowered HLO
+text is executed by ``rust/src/runtime`` via PJRT.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import ensemble, pack, stencil
+
+
+def pgen_products(ens, threshold):
+    """``[E, H, W] f32`` ensemble → stacked products ``[3, H, W]``:
+    mean, spread, exceedance probability — each roundtripped through the
+    16-bit codec exactly as they would be archived."""
+    mean, spread, prob = ensemble.ensemble_stats(ens, threshold)
+    mean_c = pack.codec_roundtrip(mean)
+    spread_c = pack.codec_roundtrip(spread)
+    # probabilities are archived unpacked (tiny dynamic range)
+    return jnp.stack([mean_c, spread_c, prob], axis=0)
+
+
+def model_step(state, noise):
+    """One synthetic model step: two diffusion sweeps, damping toward
+    climatology, stochastic forcing. ``[H, W] f32 × 2 → [H, W] f32``."""
+    x = stencil.diffuse(state)
+    x = stencil.diffuse(x)
+    return 0.98 * x + 0.3 * noise
+
+
+def codec_roundtrip(field):
+    """Quantize + dequantize one field (the Store compression path)."""
+    return pack.codec_roundtrip(field)

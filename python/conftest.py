@@ -1,0 +1,7 @@
+"""pytest path shim: lets `pytest python/tests/` work from the repo root
+(the `compile` package lives beside this file)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -1,0 +1,65 @@
+"""Hypothesis sweeps: kernel/oracle agreement over random shapes and
+value distributions (the property layer on top of test_kernels.py)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ensemble, pack, ref, stencil
+
+dims = st.integers(min_value=2, max_value=96)
+small_dims = st.integers(min_value=2, max_value=48)
+members = st.integers(min_value=1, max_value=8)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+spans = st.floats(min_value=1e-3, max_value=1e6, allow_nan=False)
+
+
+def field_from(h, w, seed, span):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        rng.uniform(-span, span, size=(h, w)).astype(np.float32)
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(h=dims, w=dims, seed=seeds, span=spans)
+def test_quantize_always_matches_ref(h, w, seed, span):
+    f = field_from(h, w, seed, span)
+    q, lo, scale = pack.quantize(f)
+    q_r, lo_r, scale_r = ref.quantize_ref(f)
+    assert float(lo) == float(lo_r)
+    np.testing.assert_allclose(scale, scale_r, rtol=1e-6)
+    assert int(jnp.max(jnp.abs(q - q_r))) <= 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(h=dims, w=dims, seed=seeds, span=spans)
+def test_codec_roundtrip_error_bounded(h, w, seed, span):
+    f = field_from(h, w, seed, span)
+    back = pack.codec_roundtrip(f)
+    value_span = float(jnp.max(f) - jnp.min(f))
+    bound = max(value_span, 1e-6) / 65535.0 * 0.51 + 1e-5 + value_span * 1e-6
+    assert float(jnp.max(jnp.abs(back - f))) <= bound
+
+
+@settings(max_examples=20, deadline=None)
+@given(e=members, h=small_dims, w=small_dims, seed=seeds, thr=st.floats(-50, 50))
+def test_ensemble_stats_match_ref(e, h, w, seed, thr):
+    rng = np.random.default_rng(seed)
+    ens = jnp.asarray(rng.normal(0, 10, size=(e, h, w)).astype(np.float32))
+    mean, spread, prob = ensemble.ensemble_stats(ens, thr)
+    mean_r, spread_r, prob_r = ref.ensemble_stats_ref(ens, thr)
+    np.testing.assert_allclose(mean, mean_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(spread, spread_r, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(prob, prob_r, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(h=dims, w=dims, seed=seeds)
+def test_stencil_matches_ref_and_bounds(h, w, seed):
+    f = field_from(h, w, seed, 100.0)
+    out = stencil.diffuse(f)
+    np.testing.assert_allclose(out, ref.diffuse_ref(f), rtol=1e-5, atol=1e-4)
+    # diffusion cannot exceed input extremes
+    assert float(jnp.max(out)) <= float(jnp.max(f)) + 1e-3
+    assert float(jnp.min(out)) >= float(jnp.min(f)) - 1e-3

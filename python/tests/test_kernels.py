@@ -1,0 +1,97 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal (pytest)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ensemble, pack, ref, stencil
+
+
+def smooth_field(h, w, seed):
+    rng = np.random.default_rng(seed)
+    f = rng.uniform(-10.0, 30.0, size=(h, w)).astype(np.float32)
+    # crude smoothing for realistic dynamic range
+    f = 0.25 * (np.roll(f, 1, 0) + np.roll(f, -1, 0) + np.roll(f, 1, 1) + np.roll(f, -1, 1))
+    return jnp.asarray(f)
+
+
+class TestQuantize:
+    @pytest.mark.parametrize("shape", [(32, 32), (64, 64), (64, 128), (100, 60)])
+    def test_matches_ref(self, shape):
+        f = smooth_field(*shape, seed=1)
+        q, lo, scale = pack.quantize(f)
+        q_r, lo_r, scale_r = ref.quantize_ref(f)
+        np.testing.assert_allclose(lo, lo_r, rtol=1e-6)
+        np.testing.assert_allclose(scale, scale_r, rtol=1e-6)
+        # quantization may differ by 1 ulp at rounding boundaries
+        assert int(jnp.max(jnp.abs(q - q_r))) <= 1
+
+    def test_q_range(self):
+        f = smooth_field(64, 64, seed=2)
+        q, _, _ = pack.quantize(f)
+        assert int(jnp.min(q)) >= 0
+        assert int(jnp.max(q)) <= 65535
+
+    def test_roundtrip_error_bound(self):
+        f = smooth_field(64, 64, seed=3)
+        back = pack.codec_roundtrip(f)
+        span = float(jnp.max(f) - jnp.min(f))
+        bound = span / 65535.0 * 0.51 + 1e-5
+        assert float(jnp.max(jnp.abs(back - f))) <= bound
+
+    def test_constant_field(self):
+        f = jnp.full((32, 32), 5.0, jnp.float32)
+        back = pack.codec_roundtrip(f)
+        np.testing.assert_allclose(back, f, atol=1e-3)
+
+    def test_dequantize_matches_ref(self):
+        f = smooth_field(64, 64, seed=4)
+        q, lo, scale = ref.quantize_ref(f)
+        a = pack.dequantize(q, lo, scale)
+        b = ref.dequantize_ref(q, lo, scale)
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+class TestEnsembleStats:
+    @pytest.mark.parametrize("e,h,w", [(4, 32, 32), (8, 64, 64), (8, 64, 128), (3, 100, 52)])
+    def test_matches_ref(self, e, h, w):
+        ens = jnp.stack([smooth_field(h, w, seed=i) for i in range(e)])
+        thr = 10.0
+        mean, spread, prob = ensemble.ensemble_stats(ens, thr)
+        mean_r, spread_r, prob_r = ref.ensemble_stats_ref(ens, thr)
+        np.testing.assert_allclose(mean, mean_r, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(spread, spread_r, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(prob, prob_r, rtol=1e-6, atol=1e-6)
+
+    def test_prob_bounds(self):
+        ens = jnp.stack([smooth_field(32, 32, seed=i) for i in range(5)])
+        _, _, prob = ensemble.ensemble_stats(ens, 0.0)
+        assert float(jnp.min(prob)) >= 0.0
+        assert float(jnp.max(prob)) <= 1.0
+
+    def test_identical_members_zero_spread(self):
+        f = smooth_field(32, 32, seed=9)
+        ens = jnp.stack([f] * 6)
+        mean, spread, _ = ensemble.ensemble_stats(ens, 0.0)
+        np.testing.assert_allclose(mean, f, rtol=1e-6)
+        np.testing.assert_allclose(spread, jnp.zeros_like(f), atol=1e-3)
+
+
+class TestStencil:
+    @pytest.mark.parametrize("shape", [(16, 16), (64, 64), (33, 65)])
+    def test_matches_ref(self, shape):
+        f = smooth_field(*shape, seed=5)
+        a = stencil.diffuse(f)
+        b = ref.diffuse_ref(f)
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+    def test_conserves_constant(self):
+        f = jnp.full((32, 32), 7.0, jnp.float32)
+        out = stencil.diffuse(f)
+        np.testing.assert_allclose(out, f, rtol=1e-6)
+
+    def test_smooths_extremes(self):
+        f = jnp.zeros((16, 16), jnp.float32).at[8, 8].set(100.0)
+        out = stencil.diffuse(f)
+        assert float(out[8, 8]) < 100.0
+        assert float(out[8, 9]) > 0.0

@@ -1,0 +1,155 @@
+//! Wall-clock microbenchmarks of the L3 hot paths (custom harness — no
+//! criterion offline). Reports ns/op mean over timed batches after
+//! warmup; results feed EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+use fdbr::fdb::datahandle::DataHandle;
+use fdbr::fdb::key::Key;
+use fdbr::fdb::location::FieldLocation;
+use fdbr::fdb::posix::index::{self, IndexEntry};
+use fdbr::sim::exec::Sim;
+use fdbr::sim::resource::Resource;
+use fdbr::sim::time::SimTime;
+use fdbr::util::content::{Bytes, Content};
+
+fn bench<F: FnMut()>(name: &str, iters: u64, mut f: F) {
+    // warmup
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let dt = t0.elapsed();
+    let per = dt.as_nanos() as f64 / iters as f64;
+    let rate = 1e9 / per;
+    println!("{name:<44} {per:>12.0} ns/op {rate:>14.0} op/s");
+}
+
+fn main() {
+    println!("== hotpath microbenchmarks (wall clock) ==");
+
+    // DES engine throughput: events/sec through sleep+resource ops
+    bench("sim: spawn+run 1000 tasks × 3 awaits", 20, || {
+        let sim = Sim::new();
+        let res = Resource::new("r", 4);
+        for i in 0..1000u64 {
+            let s = sim.clone();
+            let r = res.clone();
+            sim.spawn(async move {
+                s.sleep(SimTime::nanos(i)).await;
+                r.serve(&s, SimTime::nanos(100)).await;
+                s.sleep(SimTime::nanos(50)).await;
+            });
+        }
+        sim.run();
+    });
+
+    // Key canonicalization (every archive/retrieve calls this)
+    let id = Key::of(&[
+        ("class", "od"), ("expver", "0001"), ("stream", "oper"),
+        ("date", "20231201"), ("time", "1200"), ("type", "ef"),
+        ("levtype", "sfc"), ("step", "42"), ("number", "13"),
+        ("levelist", "100"), ("param", "v"),
+    ]);
+    bench("key: canonical() of 11-dim identifier", 200_000, || {
+        std::hint::black_box(id.canonical());
+    });
+    let canon = id.canonical();
+    bench("key: parse canonical", 100_000, || {
+        std::hint::black_box(Key::parse(&canon).unwrap());
+    });
+
+    // Index serialization + lookup (the POSIX catalogue hot path)
+    let entries: Vec<IndexEntry> = {
+        let mut es: Vec<IndexEntry> = (0..10_000)
+            .map(|i| IndexEntry {
+                elem: format!("param=p{},step={}", i % 20, i / 20),
+                uri_id: 0,
+                offset: i as u64 * 1024,
+                length: 1024,
+            })
+            .collect();
+        es.sort_by(|a, b| a.elem.cmp(&b.elem));
+        es
+    };
+    bench("index: serialize 10k entries", 50, || {
+        std::hint::black_box(index::serialize(&entries));
+    });
+    let blob = index::serialize(&entries);
+    let (hl, count) = index::parse_prelude(&blob[..12]).unwrap();
+    bench("index: parse header (10k entries)", 2_000, || {
+        std::hint::black_box(
+            index::parse_header(&blob[12..12 + hl as usize], count).unwrap(),
+        );
+    });
+    let header = index::parse_header(&blob[12..12 + hl as usize], count).unwrap();
+    bench("index: point lookup via page dir", 20_000, || {
+        let p = index::page_for(&header, "param=p7,step=200").unwrap();
+        let es = index::parse_page(&blob[p.off as usize..(p.off + p.len) as usize]).unwrap();
+        std::hint::black_box(es.iter().find(|e| e.elem == "param=p7,step=200"));
+    });
+
+    // DataHandle merging (PGEN's retrieve path)
+    let handles: Vec<DataHandle> = (0..1000)
+        .map(|i| {
+            DataHandle::from_location(&FieldLocation::PosixFile {
+                path: format!("/f{}", i % 4),
+                offset: (i / 4) * 1024,
+                length: 1024,
+            })
+        })
+        .collect();
+    bench("datahandle: merge 1000 → 4 files", 500, || {
+        std::hint::black_box(DataHandle::merge_all(handles.clone()));
+    });
+
+    // Content store ops (virtual-payload data plane)
+    bench("content: 1000 × 1MiB virtual appends", 200, || {
+        let mut c = Content::new();
+        for i in 0..1000u64 {
+            c.append(Bytes::virt(1 << 20, i));
+        }
+        std::hint::black_box(c.len());
+    });
+    let mut big = Content::new();
+    for i in 0..10_000u64 {
+        big.append(Bytes::virt(1 << 20, i));
+    }
+    bench("content: random 1MiB read of 10k-seg file", 20_000, || {
+        std::hint::black_box(big.read(4242 << 20, 1 << 20));
+    });
+
+    // end-to-end simulated archive op rate (DAOS hammer, small run)
+    let t0 = Instant::now();
+    let dep = fdbr::bench::scenario::deploy(
+        fdbr::hw::profiles::Testbed::Gcp,
+        fdbr::bench::scenario::SystemKind::Daos,
+        2,
+        4,
+        fdbr::bench::scenario::RedundancyOpt::None,
+    );
+    let (_, _) = fdbr::bench::hammer::run(
+        &dep,
+        fdbr::bench::hammer::HammerConfig {
+            procs_per_node: 8,
+            nsteps: 10,
+            nparams: 5,
+            nlevels: 4,
+            field_size: 1 << 20,
+            check: false,
+            contention: false,
+        },
+    );
+    let ops = 2 * 4 * 8 * 10 * 5 * 4; // write+read phases
+    let dt = t0.elapsed();
+    println!(
+        "{:<44} {:>12.0} ns/op {:>14.0} op/s",
+        "e2e: simulated hammer archive+retrieve",
+        dt.as_nanos() as f64 / ops as f64,
+        ops as f64 / dt.as_secs_f64()
+    );
+    println!("done");
+}

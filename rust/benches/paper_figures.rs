@@ -1,0 +1,27 @@
+//! `cargo bench --bench paper_figures` — regenerate every table and
+//! figure of the thesis' evaluation at a reduced (steady-state) scale.
+//! Pass full paper scale via `FDB_FIG_SCALE=1.0` (slow).
+
+fn main() {
+    let scale: f64 = std::env::var("FDB_FIG_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.05);
+    let only = std::env::var("FDB_FIG_ONLY").ok();
+    println!("== paper figures (scale {scale}) ==\n");
+    let mut ids = fdbr::bench::figures::all_ids();
+    ids.extend(fdbr::bench::ablations::ablation_ids());
+    for id in ids {
+        if let Some(ref f) = only {
+            if f != id {
+                continue;
+            }
+        }
+        let t0 = std::time::Instant::now();
+        let fig = fdbr::bench::figures::run_figure(id, scale)
+            .or_else(|| fdbr::bench::ablations::run_ablation(id, scale))
+            .expect("known id");
+        print!("{}", fig.render());
+        println!("   [{:.1}s wall]\n", t0.elapsed().as_secs_f64());
+    }
+}

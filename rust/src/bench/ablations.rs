@@ -1,0 +1,319 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! * `abl_hash_oid`   — the DAOS hash-OID retrieve optimisation the
+//!   thesis leaves as future work (§3.1.2): index-free retrieval vs the
+//!   KV-network path.
+//! * `abl_lustre_dne` — Lustre DNE metadata scaling (§2.2.1): MDS count
+//!   sweep under a metadata-heavy (file-per-field) workload.
+//! * `abl_pg_count`   — RADOS placement-group sensitivity (§2.4/§3.2).
+//! * `abl_s3_multipart` — S3 Store PutObject-per-field vs multipart
+//!   accumulation (§3.3's expected write win).
+
+use std::rc::Rc;
+
+use super::figures::{FigRow, Figure};
+use super::scenario::{deploy, RedundancyOpt, SystemKind, SystemUnderTest};
+use crate::bench::aggregate_bw;
+use crate::fdb::{setup, Fdb};
+use crate::hw::profiles::Testbed;
+use crate::lustre::{Lustre, LustreConfig, StripeSpec};
+use crate::sim::exec::{Sim, WaitGroup};
+use crate::util::content::Bytes;
+
+pub fn ablation_ids() -> Vec<&'static str> {
+    vec!["abl_hash_oid", "abl_lustre_dne", "abl_pg_count", "abl_s3_multipart"]
+}
+
+pub fn run_ablation(id: &str, scale: f64) -> Option<Figure> {
+    Some(match id {
+        "abl_hash_oid" => abl_hash_oid(scale),
+        "abl_lustre_dne" => abl_lustre_dne(scale),
+        "abl_pg_count" => abl_pg_count(scale),
+        "abl_s3_multipart" => abl_s3_multipart(scale),
+        _ => return None,
+    })
+}
+
+fn nops(scale: f64, paper: usize) -> usize {
+    ((paper as f64 * scale).round() as usize).max(20)
+}
+
+/// Measure mean retrieve()+read latency for small fields with and
+/// without hash-OIDs.
+fn abl_hash_oid(scale: f64) -> Figure {
+    let mut rows = Vec::new();
+    for hash_oids in [false, true] {
+        let dep = deploy(Testbed::Gcp, SystemKind::Daos, 2, 2, RedundancyOpt::None);
+        let SystemUnderTest::Daos(d) = &dep.system else {
+            unreachable!()
+        };
+        let n = nops(scale, 2000);
+        let mk = |node| {
+            let mut fdb = setup::daos_fdb(&dep.sim, d, node, "fdb");
+            if let crate::fdb::StoreBackend::Daos(s) = &mut fdb.store {
+                s.hash_oids = hash_oids;
+            }
+            fdb
+        };
+        let nodes = dep.client_nodes();
+        let mut w = mk(&nodes[0]);
+        dep.sim.spawn(async move {
+            for i in 0..n {
+                let id = super::hammer::field_id(0, 1 + (i / 100) as u32, (i % 10) as u32, (i % 7) as u32);
+                w.archive(&id, Bytes::virt(64 << 10, i as u64)).await.unwrap();
+            }
+        });
+        dep.sim.run();
+        let mut r = mk(&nodes[1]);
+        let t0 = dep.sim.now();
+        dep.sim.spawn(async move {
+            for i in 0..n {
+                let id = super::hammer::field_id(0, 1 + (i / 100) as u32, (i % 10) as u32, (i % 7) as u32);
+                let h = r.retrieve(&id).await.unwrap().expect("present");
+                r.read(&h).await;
+            }
+        });
+        let end = dep.sim.run();
+        let per_op_us = (end - t0).as_secs_f64() * 1e6 / n as f64;
+        rows.push(FigRow {
+            x: if hash_oids { "hash-OIDs" } else { "KV index" }.to_string(),
+            series: "retrieve+read latency".into(),
+            value: per_op_us,
+            unit: "us/field",
+        });
+    }
+    Figure {
+        id: "abl_hash_oid",
+        title: "DAOS hash-OID retrieval ablation (thesis §3.1.2 future work)",
+        expectation: "hash-OIDs cut the per-retrieve index round trips",
+        rows,
+        profiles: vec![],
+    }
+}
+
+/// Metadata-heavy workload (file per field) vs MDS count.
+fn abl_lustre_dne(scale: f64) -> Figure {
+    let mut rows = Vec::new();
+    for mds_count in [1usize, 2, 4] {
+        let sim = Sim::new();
+        let cluster = Rc::new(crate::hw::profiles::build_cluster(
+            Testbed::NextGenIo,
+            4,
+            8,
+            true,
+            true,
+        ));
+        let fs = Lustre::deploy(
+            &sim,
+            &cluster,
+            LustreConfig {
+                mds_count,
+                ..Default::default()
+            },
+        );
+        let n = nops(scale, 500);
+        let spans = super::scenario::new_spans();
+        let total = 8 * 8;
+        let wg = WaitGroup::new(total);
+        for (ni, node) in cluster.client_nodes().enumerate() {
+            for p in 0..8 {
+                let mut cli = fs.client(node);
+                let s = sim.clone();
+                let spans = spans.clone();
+                let wg = wg.clone();
+                let pid = ni * 8 + p;
+                sim.spawn(async move {
+                    let _ = cli.mkdir("/meta").await;
+                    let t0 = s.now();
+                    // file per field: create+write+fsync (metadata heavy)
+                    for i in 0..n {
+                        let path = format!("/meta/f{pid}-{i}");
+                        let fd = cli
+                            .create(&path, StripeSpec::default_layout())
+                            .await
+                            .unwrap();
+                        cli.write_data(&fd, Bytes::virt(4 << 10, i as u64))
+                            .await
+                            .unwrap();
+                        cli.fdatasync(&fd).await.unwrap();
+                    }
+                    spans
+                        .borrow_mut()
+                        .push((t0, s.now(), n as u64 * (4 << 10)));
+                    wg.done();
+                });
+            }
+        }
+        sim.run();
+        // report op rate, the metric DNE moves
+        let bw = aggregate_bw(&spans.borrow());
+        let ops_per_sec = bw / (4 << 10) as f64;
+        rows.push(FigRow {
+            x: format!("{mds_count} MDS"),
+            series: "file-per-field create rate".into(),
+            value: ops_per_sec / 1000.0,
+            unit: "kops/s",
+        });
+    }
+    Figure {
+        id: "abl_lustre_dne",
+        title: "Lustre DNE ablation: MDS count vs metadata throughput",
+        expectation: "create rate scales with MDS instances until OST/journal bound",
+        rows,
+        profiles: vec![],
+    }
+}
+
+/// RADOS PG-count sensitivity sweep.
+fn abl_pg_count(scale: f64) -> Figure {
+    let mut rows = Vec::new();
+    for pgs in [32usize, 400, 4096] {
+        let sim = Sim::new();
+        let cluster = Rc::new(crate::hw::profiles::build_cluster(
+            Testbed::Gcp,
+            4,
+            8,
+            true,
+            true,
+        ));
+        let ceph = crate::ceph::Ceph::deploy(&sim, &cluster, crate::ceph::CephConfig::default());
+        let pool = ceph.create_pool("p", pgs, crate::ceph::Redundancy::None);
+        let n = nops(scale, 1000);
+        let spans = super::scenario::new_spans();
+        let wg = WaitGroup::new(8 * 8);
+        for (ni, node) in cluster.client_nodes().enumerate() {
+            for p in 0..8 {
+                let cli = ceph.client(node);
+                let s = sim.clone();
+                let pool = pool.clone();
+                let spans = spans.clone();
+                let wg = wg.clone();
+                let pid = ni * 8 + p;
+                sim.spawn(async move {
+                    let t0 = s.now();
+                    for i in 0..n {
+                        cli.write_full_data(
+                            &pool,
+                            "ns",
+                            &format!("o{pid}-{i}"),
+                            Bytes::virt(1 << 20, i as u64),
+                        )
+                        .await
+                        .unwrap();
+                    }
+                    spans.borrow_mut().push((t0, s.now(), (n as u64) << 20));
+                    wg.done();
+                });
+            }
+        }
+        sim.run();
+        rows.push(FigRow {
+            x: format!("{pgs} PGs"),
+            series: "write".into(),
+            value: aggregate_bw(&spans.borrow()) / (1u64 << 30) as f64,
+            unit: "GiB/s",
+        });
+    }
+    Figure {
+        id: "abl_pg_count",
+        title: "RADOS PG-count sensitivity (4 OSDs; sweet spot ~400)",
+        expectation: "bandwidth peaks near ~100 PGs/OSD and degrades away from it",
+        rows,
+        profiles: vec![],
+    }
+}
+
+/// S3 Store: object-per-field vs multipart accumulation.
+fn abl_s3_multipart(scale: f64) -> Figure {
+    let mut rows = Vec::new();
+    for multipart in [false, true] {
+        let dep = deploy(Testbed::Gcp, SystemKind::Lustre, 1, 2, RedundancyOpt::None);
+        let server = dep.cluster.storage_nodes().next().unwrap().clone();
+        let cnode = dep.client_nodes()[0].clone();
+        let s3 = Rc::new(crate::s3::MemS3::new(&dep.sim, &server, &cnode));
+        let n = nops(scale, 1000);
+        let mut fdb: Fdb = setup::s3_fdb(&dep.sim, &s3, "p0");
+        if let crate::fdb::StoreBackend::S3(s) = &mut fdb.store {
+            s.multipart = multipart;
+        }
+        let spans = super::scenario::new_spans();
+        let spans2 = spans.clone();
+        let sim = dep.sim.clone();
+        dep.sim.spawn(async move {
+            let t0 = sim.now();
+            for i in 0..n {
+                let id = super::hammer::field_id(0, 1 + (i / 100) as u32, (i % 10) as u32, 0);
+                fdb.archive(&id, Bytes::virt(1 << 20, i as u64)).await.unwrap();
+            }
+            fdb.flush().await;
+            spans2.borrow_mut().push((t0, sim.now(), (n as u64) << 20));
+        });
+        dep.sim.run();
+        rows.push(FigRow {
+            x: if multipart {
+                "multipart-per-collocation"
+            } else {
+                "PutObject-per-field"
+            }
+            .to_string(),
+            series: "archive+flush".into(),
+            value: aggregate_bw(&spans.borrow()) / (1u64 << 30) as f64,
+            unit: "GiB/s",
+        });
+    }
+    Figure {
+        id: "abl_s3_multipart",
+        title: "S3 Store ablation: per-field PUTs vs multipart accumulation",
+        expectation: "multipart reduces object count and lifts write throughput",
+        rows,
+        profiles: vec![],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_oid_ablation_improves_latency() {
+        let f = run_ablation("abl_hash_oid", 0.05).unwrap();
+        let kv = f.value("KV index", "retrieve+read latency").unwrap();
+        let hashed = f.value("hash-OIDs", "retrieve+read latency").unwrap();
+        assert!(
+            hashed < kv,
+            "hash-OID retrieve {hashed}us should beat KV-index {kv}us"
+        );
+    }
+
+    #[test]
+    fn dne_scales_metadata_rate() {
+        let f = run_ablation("abl_lustre_dne", 0.1).unwrap();
+        let m1 = f.value("1 MDS", "file-per-field create rate").unwrap();
+        let m4 = f.value("4 MDS", "file-per-field create rate").unwrap();
+        assert!(m4 > m1, "DNE: 4 MDS rate {m4} should beat 1 MDS {m1}");
+    }
+
+    #[test]
+    fn pg_count_sweet_spot() {
+        let f = run_ablation("abl_pg_count", 0.05).unwrap();
+        let low = f.value("32 PGs", "write").unwrap();
+        let mid = f.value("400 PGs", "write").unwrap();
+        let high = f.value("4096 PGs", "write").unwrap();
+        assert!(mid >= low && mid >= high, "sweet spot: {low} {mid} {high}");
+    }
+
+    #[test]
+    fn s3_multipart_roundtrip_and_speedup() {
+        let f = run_ablation("abl_s3_multipart", 0.05).unwrap();
+        let put = f.value("PutObject-per-field", "archive+flush").unwrap();
+        let mp = f
+            .value("multipart-per-collocation", "archive+flush")
+            .unwrap();
+        assert!(mp > 0.0 && put > 0.0);
+    }
+
+    #[test]
+    fn unknown_ablation_is_none() {
+        assert!(run_ablation("abl_nope", 1.0).is_none());
+    }
+}

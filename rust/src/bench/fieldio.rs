@@ -1,0 +1,301 @@
+//! Field I/O (thesis Appendix B): the proof-of-concept pair of functions
+//! — write-and-index / de-reference-and-read a weather field — used for
+//! the early DAOS assessment (Figs 4.8–4.11) and the client-overhead
+//! measurement with a dummy libdaos (Fig 4.30).
+
+use super::scenario::{new_spans, Deployment, SystemUnderTest};
+use super::{aggregate_bw, BwResult};
+use crate::daos::{ObjClass, Oid};
+use crate::lustre::StripeSpec;
+use crate::sim::exec::WaitGroup;
+use crate::util::content::Bytes;
+
+#[derive(Clone, Copy, Debug)]
+pub struct FieldIoConfig {
+    pub procs_per_node: usize,
+    pub nfields: usize,
+    pub field_size: u64,
+    /// DAOS object class for the field arrays (Fig 4.10 sharding sweep)
+    pub array_class: ObjClass,
+    /// zero-cost server interactions ("dummy libdaos", Fig 4.30)
+    pub dummy: bool,
+    /// run writers and readers concurrently (Fig 4.9)
+    pub contention: bool,
+}
+
+impl Default for FieldIoConfig {
+    fn default() -> Self {
+        FieldIoConfig {
+            procs_per_node: 8,
+            nfields: 100,
+            field_size: 1 << 20,
+            array_class: ObjClass::S1,
+            dummy: false,
+            contention: false,
+        }
+    }
+}
+
+/// One Field I/O process: write fields + index entries, or de-reference
+/// + read them back.
+pub fn run(dep: &Deployment, cfg: FieldIoConfig) -> BwResult {
+    let clients = dep.client_nodes();
+    let mut result = BwResult::default();
+    let phases: Vec<&str> = if cfg.contention {
+        vec!["prepopulate", "concurrent"]
+    } else {
+        vec!["write", "read"]
+    };
+    for phase in phases {
+        let wspans = new_spans();
+        let rspans = new_spans();
+        let half = clients.len() / 2;
+        let participants = match phase {
+            "prepopulate" => half.max(1) * cfg.procs_per_node,
+            "concurrent" => clients.len() * cfg.procs_per_node,
+            _ => clients.len() * cfg.procs_per_node,
+        };
+        let wg = WaitGroup::new(participants);
+        for (ni, node) in clients.iter().enumerate() {
+            for p in 0..cfg.procs_per_node {
+                let write = match phase {
+                    "write" => true,
+                    "read" => false,
+                    "prepopulate" => {
+                        if ni >= half.max(1) {
+                            continue;
+                        }
+                        true
+                    }
+                    _ => ni < half, // concurrent: first half writes
+                };
+                let pid = ni * cfg.procs_per_node + p;
+                // member tag: in concurrent mode writers write fresh ids,
+                // readers read the pre-populated ones
+                let tag = if phase == "concurrent" && write {
+                    pid + 100_000
+                } else if phase == "concurrent" {
+                    (ni - half) * cfg.procs_per_node + p
+                } else {
+                    pid
+                };
+                let sim = dep.sim.clone();
+                let spans = if write { wspans.clone() } else { rspans.clone() };
+                let wg = wg.clone();
+                match &dep.system {
+                    SystemUnderTest::Daos(d) => {
+                        let d = d.clone();
+                        let node = node.clone();
+                        let dummy = cfg.dummy;
+                        dep.sim.spawn(async move {
+                            let cli = if dummy {
+                                d.dummy_client(&node)
+                            } else {
+                                d.client(&node)
+                            };
+                            let pool = cli.pool_connect("fdb").await.unwrap();
+                            let cont = cli
+                                .cont_create_with_label(&pool, "fieldio")
+                                .await
+                                .unwrap();
+                            let kv = cli.kv_open(
+                                &cont,
+                                Oid::new(4, tag as u64),
+                                ObjClass::S1,
+                            );
+                            let t0 = sim.now();
+                            for i in 0..cfg.nfields {
+                                let name = format!("fld-{tag}-{i}");
+                                if write {
+                                    // write field array + insert index entry
+                                    let oid = cli.alloc_oid(&cont).await;
+                                    let arr = cli.array_open_with_attr(
+                                        &cont,
+                                        oid,
+                                        cfg.array_class,
+                                    );
+                                    cli.array_write_data(
+                                        &arr,
+                                        0,
+                                        Bytes::virt(cfg.field_size, tag as u64 * 77 + i as u64),
+                                    )
+                                    .await;
+                                    let mut loc = Vec::with_capacity(16);
+                                    loc.extend_from_slice(&oid.hi.to_le_bytes());
+                                    loc.extend_from_slice(&oid.lo.to_le_bytes());
+                                    cli.kv_put(&kv, &name, &loc).await;
+                                } else {
+                                    // de-reference then read
+                                    let loc =
+                                        cli.kv_get(&kv, &name).await.unwrap().unwrap();
+                                    let oid = Oid::new(
+                                        u64::from_le_bytes(loc[0..8].try_into().unwrap()),
+                                        u64::from_le_bytes(loc[8..16].try_into().unwrap()),
+                                    );
+                                    let arr = cli.array_open_with_attr(
+                                        &cont,
+                                        oid,
+                                        cfg.array_class,
+                                    );
+                                    let got = cli
+                                        .array_read(&arr, 0, cfg.field_size)
+                                        .await
+                                        .unwrap();
+                                    assert_eq!(got.len(), cfg.field_size);
+                                }
+                            }
+                            spans.borrow_mut().push((
+                                t0,
+                                sim.now(),
+                                cfg.nfields as u64 * cfg.field_size,
+                            ));
+                            wg.done();
+                        });
+                    }
+                    SystemUnderTest::Lustre(fs) => {
+                        // Lustre equivalent: per-process data file + a
+                        // per-process index file of (name, offset) records
+                        let fs = fs.clone();
+                        let node = node.clone();
+                        dep.sim.spawn(async move {
+                            let mut cli = fs.client(&node);
+                            let _ = cli.mkdir("/fieldio").await;
+                            let data_path = format!("/fieldio/d{tag}");
+                            let idx_path = format!("/fieldio/i{tag}");
+                            let t0 = sim.now();
+                            if write {
+                                let dfd = cli
+                                    .create(&data_path, StripeSpec::fdb_data())
+                                    .await
+                                    .unwrap();
+                                let ifd = cli
+                                    .create(&idx_path, StripeSpec::default_layout())
+                                    .await
+                                    .unwrap();
+                                for i in 0..cfg.nfields {
+                                    let off = cli
+                                        .write_data(
+                                            &dfd,
+                                            Bytes::virt(
+                                                cfg.field_size,
+                                                tag as u64 * 77 + i as u64,
+                                            ),
+                                        )
+                                        .await
+                                        .unwrap();
+                                    cli.write(&ifd, &off.to_le_bytes()).await.unwrap();
+                                }
+                                cli.fdatasync(&dfd).await.unwrap();
+                                cli.fdatasync(&ifd).await.unwrap();
+                            } else {
+                                let ifd = cli.open(&idx_path).await.unwrap().unwrap();
+                                let dfd = cli.open(&data_path).await.unwrap().unwrap();
+                                for i in 0..cfg.nfields {
+                                    let rec =
+                                        cli.read(&ifd, i as u64 * 8, 8).await.unwrap();
+                                    let off = u64::from_le_bytes(
+                                        rec.to_vec().try_into().unwrap(),
+                                    );
+                                    let got = cli
+                                        .read(&dfd, off, cfg.field_size)
+                                        .await
+                                        .unwrap();
+                                    assert_eq!(got.len(), cfg.field_size);
+                                }
+                            }
+                            spans.borrow_mut().push((
+                                t0,
+                                sim.now(),
+                                cfg.nfields as u64 * cfg.field_size,
+                            ));
+                            wg.done();
+                        });
+                    }
+                    SystemUnderTest::Ceph(..) => {
+                        panic!("Field I/O was a DAOS/Lustre PoC (thesis App. B)")
+                    }
+                }
+            }
+        }
+        dep.sim.run();
+        match phase {
+            "write" | "prepopulate" => {
+                result.write_bw = aggregate_bw(&wspans.borrow());
+            }
+            "read" => {
+                result.read_bw = aggregate_bw(&rspans.borrow());
+            }
+            _ => {
+                // concurrent: both measured in the same window
+                result.write_bw = aggregate_bw(&wspans.borrow());
+                result.read_bw = aggregate_bw(&rspans.borrow());
+            }
+        }
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::scenario::{deploy, RedundancyOpt, SystemKind};
+    use crate::hw::profiles::Testbed;
+
+    fn cfg() -> FieldIoConfig {
+        FieldIoConfig {
+            procs_per_node: 2,
+            nfields: 20,
+            field_size: 512 << 10,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fieldio_daos_and_lustre() {
+        for kind in [SystemKind::Daos, SystemKind::Lustre] {
+            let dep = deploy(Testbed::NextGenIo, kind, 2, 2, RedundancyOpt::None);
+            let r = run(&dep, cfg());
+            assert!(r.write_bw > 0.0 && r.read_bw > 0.0, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn dummy_daos_much_faster() {
+        let real = {
+            let dep = deploy(Testbed::Gcp, SystemKind::Daos, 2, 2, RedundancyOpt::None);
+            run(&dep, cfg())
+        };
+        let dummy = {
+            let dep = deploy(Testbed::Gcp, SystemKind::Daos, 2, 2, RedundancyOpt::None);
+            let mut c = cfg();
+            c.dummy = true;
+            run(&dep, c)
+        };
+        assert!(
+            dummy.write_bw > 5.0 * real.write_bw,
+            "dummy {} vs real {}",
+            dummy.gibs_w(),
+            real.gibs_w()
+        );
+    }
+
+    #[test]
+    fn contention_mode_runs() {
+        let dep = deploy(Testbed::NextGenIo, SystemKind::Daos, 2, 4, RedundancyOpt::None);
+        let mut c = cfg();
+        c.contention = true;
+        let r = run(&dep, c);
+        assert!(r.write_bw > 0.0 && r.read_bw > 0.0);
+    }
+
+    #[test]
+    fn sharding_class_sweep_runs() {
+        for class in [ObjClass::S1, ObjClass::S2, ObjClass::Sx] {
+            let dep = deploy(Testbed::NextGenIo, SystemKind::Daos, 2, 2, RedundancyOpt::None);
+            let mut c = cfg();
+            c.array_class = class;
+            let r = run(&dep, c);
+            assert!(r.write_bw > 0.0, "{class:?}");
+        }
+    }
+}

@@ -1,0 +1,258 @@
+//! IOR-like generic I/O benchmark (thesis §4.1.1): every process writes
+//! then reads `nops × xfer_size`, file-per-process on Lustre (optionally
+//! via DFS on DAOS for Fig 4.29), object-per-op on DAOS/Ceph.
+
+use super::scenario::{new_spans, Deployment, SystemUnderTest};
+use super::{aggregate_bw, BwResult};
+use crate::daos::{dfs::Dfs, ObjClass};
+use crate::lustre::StripeSpec;
+use crate::sim::exec::WaitGroup;
+use crate::util::content::Bytes;
+
+#[derive(Clone, Copy, Debug)]
+pub struct IorConfig {
+    pub procs_per_node: usize,
+    pub nops: usize,
+    pub xfer: u64,
+    /// route DAOS through the DFS POSIX layer (IOR/HDF5 mode, Fig 4.29)
+    pub daos_via_dfs: bool,
+}
+
+impl Default for IorConfig {
+    fn default() -> Self {
+        IorConfig {
+            procs_per_node: 16,
+            nops: 100,
+            xfer: 1 << 20,
+            daos_via_dfs: false,
+        }
+    }
+}
+
+/// Run write phase then read phase; returns aggregate bandwidths.
+pub fn run(dep: &Deployment, cfg: IorConfig) -> BwResult {
+    let clients = dep.client_nodes();
+    let mut result = BwResult::default();
+    for write in [true, false] {
+        let spans = new_spans();
+        let total = clients.len() * cfg.procs_per_node;
+        let wg = WaitGroup::new(total);
+        for (ni, node) in clients.iter().enumerate() {
+            for p in 0..cfg.procs_per_node {
+                let sim = dep.sim.clone();
+                let node = node.clone();
+                let spans = spans.clone();
+                let wg = wg.clone();
+                let pid = ni * cfg.procs_per_node + p;
+                match &dep.system {
+                    SystemUnderTest::Lustre(fs) => {
+                        let fs = fs.clone();
+                        dep.sim.spawn(async move {
+                            let mut cli = fs.client(&node);
+                            let path = format!("/ior/f{pid}");
+                            let t0 = sim.now();
+                            if write {
+                                let _ = cli.mkdir("/ior").await;
+                                let fd = cli
+                                    .create(&path, StripeSpec::default_layout())
+                                    .await
+                                    .unwrap();
+                                for i in 0..cfg.nops {
+                                    cli.write_data(
+                                        &fd,
+                                        Bytes::virt(cfg.xfer, (pid * 1_000_000 + i) as u64),
+                                    )
+                                    .await
+                                    .unwrap();
+                                }
+                                cli.fdatasync(&fd).await.unwrap();
+                            } else {
+                                let fd = cli.open(&path).await.unwrap().unwrap();
+                                for i in 0..cfg.nops {
+                                    let got = cli
+                                        .read(&fd, (i as u64) * cfg.xfer, cfg.xfer)
+                                        .await
+                                        .unwrap();
+                                    assert_eq!(got.len(), cfg.xfer);
+                                }
+                            }
+                            spans.borrow_mut().push((
+                                t0,
+                                sim.now(),
+                                cfg.nops as u64 * cfg.xfer,
+                            ));
+                            wg.done();
+                        });
+                    }
+                    SystemUnderTest::Daos(d) => {
+                        let d = d.clone();
+                        let via_dfs = cfg.daos_via_dfs;
+                        dep.sim.spawn(async move {
+                            let cli = d.client(&node);
+                            let pool = cli.pool_connect("fdb").await.unwrap();
+                            let cont =
+                                cli.cont_create_with_label(&pool, "ior").await.unwrap();
+                            let t0 = sim.now();
+                            if via_dfs {
+                                let dfs = Dfs::mount(&cli, &cont);
+                                let path = format!("/ior/f{pid}");
+                                if write {
+                                    let f = dfs.create(&path, ObjClass::S1).await;
+                                    for i in 0..cfg.nops {
+                                        dfs.write_data(
+                                            &f,
+                                            (i as u64) * cfg.xfer,
+                                            Bytes::virt(
+                                                cfg.xfer,
+                                                (pid * 1_000_000 + i) as u64,
+                                            ),
+                                        )
+                                        .await;
+                                    }
+                                } else {
+                                    let f = dfs.open(&path).await.unwrap().unwrap();
+                                    for i in 0..cfg.nops {
+                                        let got = dfs
+                                            .read(&f, (i as u64) * cfg.xfer, cfg.xfer)
+                                            .await
+                                            .unwrap();
+                                        assert_eq!(got.len(), cfg.xfer);
+                                    }
+                                }
+                            } else {
+                                // native: one array per op
+                                for i in 0..cfg.nops {
+                                    let oid = crate::daos::Oid::new(
+                                        10 + pid as u64,
+                                        (if write { 0 } else { 0 }) + i as u64,
+                                    );
+                                    let arr = cli.array_open_with_attr(
+                                        &cont,
+                                        oid,
+                                        ObjClass::S1,
+                                    );
+                                    if write {
+                                        cli.array_write_data(
+                                            &arr,
+                                            0,
+                                            Bytes::virt(
+                                                cfg.xfer,
+                                                (pid * 1_000_000 + i) as u64,
+                                            ),
+                                        )
+                                        .await;
+                                    } else {
+                                        let got =
+                                            cli.array_read(&arr, 0, cfg.xfer).await.unwrap();
+                                        assert_eq!(got.len(), cfg.xfer);
+                                    }
+                                }
+                            }
+                            spans.borrow_mut().push((
+                                t0,
+                                sim.now(),
+                                cfg.nops as u64 * cfg.xfer,
+                            ));
+                            wg.done();
+                        });
+                    }
+                    SystemUnderTest::Ceph(c, pool) => {
+                        let c = c.clone();
+                        let pool = pool.clone();
+                        dep.sim.spawn(async move {
+                            let cli = c.client(&node);
+                            let t0 = sim.now();
+                            for i in 0..cfg.nops {
+                                let name = format!("ior-{pid}-{i}");
+                                if write {
+                                    cli.write_full_data(
+                                        &pool,
+                                        "ior",
+                                        &name,
+                                        Bytes::virt(cfg.xfer, (pid * 1_000_000 + i) as u64),
+                                    )
+                                    .await
+                                    .unwrap();
+                                } else {
+                                    let got = cli
+                                        .read(&pool, "ior", &name, 0, cfg.xfer)
+                                        .await
+                                        .unwrap()
+                                        .unwrap();
+                                    assert_eq!(got.len(), cfg.xfer);
+                                }
+                            }
+                            spans.borrow_mut().push((
+                                t0,
+                                sim.now(),
+                                cfg.nops as u64 * cfg.xfer,
+                            ));
+                            wg.done();
+                        });
+                    }
+                }
+            }
+        }
+        // wait for the phase to complete
+        let wg2 = wg.clone();
+        dep.sim.spawn(async move {
+            wg2.wait().await;
+        });
+        let t = dep.sim.run();
+        let bw = aggregate_bw(&spans.borrow());
+        if write {
+            result.write_bw = bw;
+            result.write_time = t;
+        } else {
+            result.read_bw = bw;
+            result.read_time = t;
+        }
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::scenario::{deploy, RedundancyOpt, SystemKind};
+    use crate::hw::profiles::Testbed;
+
+    fn run_small(kind: SystemKind) -> BwResult {
+        let dep = deploy(Testbed::Gcp, kind, 2, 4, RedundancyOpt::None);
+        run(
+            &dep,
+            IorConfig {
+                procs_per_node: 4,
+                nops: 20,
+                xfer: 1 << 20,
+                daos_via_dfs: false,
+            },
+        )
+    }
+
+    #[test]
+    fn ior_runs_on_all_systems() {
+        for kind in [SystemKind::Lustre, SystemKind::Daos, SystemKind::Ceph] {
+            let r = run_small(kind);
+            assert!(r.write_bw > 0.0, "{kind:?} write bw");
+            assert!(r.read_bw > 0.0, "{kind:?} read bw");
+            // sanity: below the 2-server aggregate device ceiling ×2
+            assert!(r.gibs_w() < 20.0, "{kind:?} write {}", r.gibs_w());
+        }
+    }
+
+    #[test]
+    fn daos_dfs_mode_runs() {
+        let dep = deploy(Testbed::Gcp, SystemKind::Daos, 2, 2, RedundancyOpt::None);
+        let r = run(
+            &dep,
+            IorConfig {
+                procs_per_node: 2,
+                nops: 10,
+                xfer: 1 << 20,
+                daos_via_dfs: true,
+            },
+        );
+        assert!(r.write_bw > 0.0 && r.read_bw > 0.0);
+    }
+}

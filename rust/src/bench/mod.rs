@@ -1,0 +1,68 @@
+//! Benchmark suite: IOR-like generic I/O, the Field I/O proof-of-concept,
+//! and fdb-hammer (thesis §4.1.1), plus the scenario registry that
+//! regenerates every evaluation table and figure.
+
+pub mod ablations;
+pub mod fieldio;
+pub mod figures;
+pub mod hammer;
+pub mod ior;
+pub mod scenario;
+
+use crate::sim::time::SimTime;
+
+/// A measured bandwidth pair (aggregate, bytes/sec).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BwResult {
+    pub write_bw: f64,
+    pub read_bw: f64,
+    pub write_time: SimTime,
+    pub read_time: SimTime,
+}
+
+impl BwResult {
+    pub fn gibs_w(&self) -> f64 {
+        self.write_bw / (1u64 << 30) as f64
+    }
+    pub fn gibs_r(&self) -> f64 {
+        self.read_bw / (1u64 << 30) as f64
+    }
+}
+
+/// Aggregate bandwidth from per-process (start, end, bytes) spans:
+/// total bytes / (max end − min start) — the thesis' preferred metric
+/// (§4.1.5, Fig 4.1: includes straggler effects).
+pub fn aggregate_bw(spans: &[(SimTime, SimTime, u64)]) -> f64 {
+    if spans.is_empty() {
+        return 0.0;
+    }
+    let start = spans.iter().map(|s| s.0).min().unwrap();
+    let end = spans.iter().map(|s| s.1).max().unwrap();
+    let bytes: u64 = spans.iter().map(|s| s.2).sum();
+    let dur = (end - start).as_secs_f64();
+    if dur <= 0.0 {
+        0.0
+    } else {
+        bytes as f64 / dur
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregate_includes_stragglers() {
+        let spans = vec![
+            (SimTime::ZERO, SimTime::secs(1), 1 << 30),
+            (SimTime::ZERO, SimTime::secs(2), 1 << 30), // straggler
+        ];
+        let bw = aggregate_bw(&spans);
+        assert!((bw - (1u64 << 30) as f64).abs() < 1.0);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        assert_eq!(aggregate_bw(&[]), 0.0);
+    }
+}

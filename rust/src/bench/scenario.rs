@@ -1,0 +1,146 @@
+//! Deployment scaffolding shared by all benchmarks: build a testbed
+//! cluster, deploy one storage system on it, hand out client slots.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::ceph::{Ceph, CephConfig, CephPool, Redundancy};
+use crate::daos::{Daos, DaosConfig};
+use crate::hw::cluster::Cluster;
+use crate::hw::node::Node;
+use crate::hw::profiles::{build_cluster, Testbed};
+use crate::lustre::{Lustre, LustreConfig};
+use crate::sim::exec::Sim;
+use crate::sim::time::SimTime;
+
+/// Which storage system a scenario runs against.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SystemKind {
+    Lustre,
+    Daos,
+    Ceph,
+}
+
+impl SystemKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            SystemKind::Lustre => "Lustre",
+            SystemKind::Daos => "DAOS",
+            SystemKind::Ceph => "Ceph",
+        }
+    }
+
+    /// Lustre and Ceph use an extra node for MDS/Mon (thesis Figs
+    /// 4.3/4.17: "+1 for Lustre and Ceph").
+    pub fn extra_md_node(self) -> bool {
+        !matches!(self, SystemKind::Daos)
+    }
+}
+
+/// A deployed system under test.
+pub enum SystemUnderTest {
+    Lustre(Rc<Lustre>),
+    Daos(Rc<Daos>),
+    Ceph(Rc<Ceph>, Rc<CephPool>),
+}
+
+pub struct Deployment {
+    pub sim: Sim,
+    pub cluster: Rc<Cluster>,
+    pub system: SystemUnderTest,
+    pub kind: SystemKind,
+    pub testbed: Testbed,
+}
+
+/// Redundancy options for Figs 4.27/4.28 (mapped per system).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum RedundancyOpt {
+    #[default]
+    None,
+    Replica2,
+    Ec2p1,
+}
+
+pub fn deploy(
+    testbed: Testbed,
+    kind: SystemKind,
+    servers: usize,
+    clients: usize,
+    redundancy: RedundancyOpt,
+) -> Deployment {
+    let sim = Sim::new();
+    // Ceph is TCP-only; Lustre on NEXTGenIO uses LNET over OPA (fast);
+    // DAOS uses PSM2 natively.
+    let tcp_only = matches!(kind, SystemKind::Ceph);
+    let cluster = Rc::new(build_cluster(
+        testbed,
+        servers,
+        clients,
+        kind.extra_md_node(),
+        tcp_only,
+    ));
+    let system = match kind {
+        SystemKind::Lustre => {
+            SystemUnderTest::Lustre(Lustre::deploy(&sim, &cluster, LustreConfig::default()))
+        }
+        SystemKind::Daos => {
+            let d = Daos::deploy(&sim, &cluster, DaosConfig::default());
+            d.create_pool("fdb");
+            SystemUnderTest::Daos(d)
+        }
+        SystemKind::Ceph => {
+            let c = Ceph::deploy(&sim, &cluster, CephConfig::default());
+            let red = match redundancy {
+                RedundancyOpt::None => Redundancy::None,
+                RedundancyOpt::Replica2 => Redundancy::Replica(2),
+                RedundancyOpt::Ec2p1 => Redundancy::Erasure(2, 1),
+            };
+            // ~100 PGs per OSD sweet spot
+            let pgs = (servers * 100).next_power_of_two().max(64);
+            let pool = c.create_pool("fdb", pgs, red);
+            SystemUnderTest::Ceph(c, pool)
+        }
+    };
+    Deployment {
+        sim,
+        cluster,
+        system,
+        kind,
+        testbed,
+    }
+}
+
+impl Deployment {
+    pub fn client_nodes(&self) -> Vec<Rc<Node>> {
+        self.cluster.client_nodes().cloned().collect()
+    }
+}
+
+/// Shared span collector used by benchmark client processes.
+pub type Spans = Rc<RefCell<Vec<(SimTime, SimTime, u64)>>>;
+
+pub fn new_spans() -> Spans {
+    Rc::new(RefCell::new(Vec::new()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deploy_each_kind() {
+        for kind in [SystemKind::Lustre, SystemKind::Daos, SystemKind::Ceph] {
+            let d = deploy(Testbed::Gcp, kind, 2, 4, RedundancyOpt::None);
+            assert_eq!(d.client_nodes().len(), 4);
+            assert_eq!(d.kind, kind);
+        }
+    }
+
+    #[test]
+    fn ceph_gets_md_node_daos_does_not() {
+        let c = deploy(Testbed::Gcp, SystemKind::Ceph, 2, 2, RedundancyOpt::None);
+        assert_eq!(c.cluster.metadata_nodes().count(), 1);
+        let d = deploy(Testbed::Gcp, SystemKind::Daos, 2, 2, RedundancyOpt::None);
+        assert_eq!(d.cluster.metadata_nodes().count(), 0);
+    }
+}

@@ -1,0 +1,314 @@
+//! Simulated Ceph RADOS (thesis §2.4).
+//!
+//! Mechanisms modeled:
+//!
+//! * **Monitor + OSDMap** — clients fetch the map once (a Paxos-backed
+//!   monitor round trip), then place objects client-side.
+//! * **PG-based CRUSH placement** — `pg = hash(name) % pg_num`, each PG
+//!   maps to an ordered OSD set; per-pool replication / 2+1 EC.
+//! * **Primary-copy writes** — the client sends data to the primary OSD,
+//!   which persists locally, fans out to replicas/EC shards, and acks
+//!   only after all are durable (the extra round trips behind Ceph's
+//!   write gap vs DAOS in Figs 4.21/4.27).
+//! * **TCP-only fabric** — RADOS cannot exploit PSM2/RDMA; all transfers
+//!   pay the kernel TCP costs regardless of the cluster interconnect.
+//! * **Omaps** — key-value objects on the primary OSD;
+//!   `omap_get_vals_by_keys` can fetch all entries in one RPC (richer
+//!   than DAOS KV listing — thesis §3.2.1).
+//! * **Object-size limit** — 128 MiB default (`osd_max_object_size`),
+//!   configurable at deployment; oversized writes are rejected.
+//! * **PG-count sensitivity** — service times scale by a penalty factor
+//!   when PGs/OSD strays from the ~100 sweet spot (empirical knob).
+//!
+//! Object/omap contents are real bytes; only time is simulated.
+
+mod omap;
+mod rados;
+
+pub use rados::{RadosError, RadosClient};
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::hw::cluster::Cluster;
+use crate::hw::fabric::{Fabric, FabricKind};
+use crate::hw::node::Node;
+use crate::sim::exec::Sim;
+use crate::sim::time::SimTime;
+
+/// Pool-level redundancy (RADOS: per-pool, not per-object — unlike DAOS).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Redundancy {
+    /// no replication (the thesis' baseline configuration)
+    None,
+    /// n-way replication (primary + n-1 copies)
+    Replica(usize),
+    /// k data + m parity erasure coding
+    Erasure(usize, usize),
+}
+
+impl Redundancy {
+    /// Number of OSDs an object touches.
+    pub fn width(self) -> usize {
+        match self {
+            Redundancy::None => 1,
+            Redundancy::Replica(n) => n,
+            Redundancy::Erasure(k, m) => k + m,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct CephCosts {
+    /// client-side per-op CPU (librados path)
+    pub client_op: SimTime,
+    /// OSD per-op service (BlueStore + messenger)
+    pub osd_op: SimTime,
+    /// monitor map fetch handling
+    pub mon_fetch: SimTime,
+    /// per-omap-entry media overhead
+    pub omap_entry_overhead: u64,
+}
+
+impl Default for CephCosts {
+    fn default() -> Self {
+        CephCosts {
+            client_op: SimTime::micros(3),
+            osd_op: SimTime::micros(15),
+            mon_fetch: SimTime::millis(1),
+            omap_entry_overhead: 128,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct CephConfig {
+    /// OSD daemons per storage node
+    pub osds_per_node: usize,
+    /// `osd_max_object_size` (default 128 MiB)
+    pub max_object_size: u64,
+    pub costs: CephCosts,
+}
+
+impl Default for CephConfig {
+    fn default() -> Self {
+        CephConfig {
+            osds_per_node: 1,
+            max_object_size: 128 << 20,
+            costs: CephCosts::default(),
+        }
+    }
+}
+
+/// A RADOS object: regular byte blob and/or omap entries.
+#[derive(Default)]
+pub(crate) struct RadosObj {
+    pub data: crate::util::content::Content,
+    pub omap: HashMap<String, Vec<u8>>,
+    pub xattrs: HashMap<String, Vec<u8>>,
+}
+
+/// A RADOS pool: PG count, redundancy, and its object namespace(s).
+pub struct CephPool {
+    pub name: String,
+    pub pg_num: usize,
+    pub redundancy: Redundancy,
+    /// key: (namespace, object name)
+    pub(crate) objects: RefCell<HashMap<(String, String), RadosObj>>,
+}
+
+pub(crate) struct Osd {
+    pub node: Rc<Node>,
+}
+
+/// The deployed RADOS cluster.
+pub struct Ceph {
+    pub sim: Sim,
+    pub cluster: Rc<Cluster>,
+    pub config: CephConfig,
+    /// RADOS always speaks TCP, whatever the cluster fabric is.
+    pub(crate) tcp: Rc<Fabric>,
+    pub(crate) osds: Vec<Osd>,
+    pub(crate) mon_node: Rc<Node>,
+    pub(crate) pools: RefCell<HashMap<String, Rc<CephPool>>>,
+    pub(crate) ops: Cell<u64>,
+    /// unique client-instance ids (process identity for object naming)
+    pub(crate) next_client: Cell<u64>,
+}
+
+impl Ceph {
+    pub fn deploy(sim: &Sim, cluster: &Rc<Cluster>, config: CephConfig) -> Rc<Ceph> {
+        let mut osds = Vec::new();
+        for node in cluster.storage_nodes() {
+            for _ in 0..config.osds_per_node {
+                osds.push(Osd { node: node.clone() });
+            }
+        }
+        assert!(!osds.is_empty(), "ceph needs storage nodes");
+        let mon_node = cluster
+            .metadata_nodes()
+            .next()
+            .or_else(|| cluster.storage_nodes().next())
+            .unwrap()
+            .clone();
+        // TCP-only fabric: mirror the testbed's TCP flavour
+        let tcp_kind = match cluster.fabric.spec.kind {
+            FabricKind::TcpGcp => FabricKind::TcpGcp,
+            _ => FabricKind::TcpOpa,
+        };
+        Rc::new(Ceph {
+            sim: sim.clone(),
+            cluster: cluster.clone(),
+            config,
+            tcp: Fabric::new(tcp_kind),
+            osds,
+            mon_node,
+            pools: RefCell::new(HashMap::new()),
+            ops: Cell::new(0),
+            next_client: Cell::new(0),
+        })
+    }
+
+    /// `ceph osd pool create` — admin op, outside measured windows.
+    pub fn create_pool(&self, name: &str, pg_num: usize, redundancy: Redundancy) -> Rc<CephPool> {
+        let pool = Rc::new(CephPool {
+            name: name.to_string(),
+            pg_num,
+            redundancy,
+            objects: RefCell::new(HashMap::new()),
+        });
+        self.pools
+            .borrow_mut()
+            .insert(name.to_string(), pool.clone());
+        pool
+    }
+
+    pub fn delete_pool(&self, name: &str) -> bool {
+        self.pools.borrow_mut().remove(name).is_some()
+    }
+
+    /// The replicated metadata pool (created on demand) used by omap
+    /// consumers when the data pool is erasure-coded.
+    pub fn meta_pool(&self) -> Rc<CephPool> {
+        if let Some(p) = self.pools.borrow().get("fdb-meta") {
+            return p.clone();
+        }
+        self.create_pool("fdb-meta", 128, Redundancy::None)
+    }
+
+    pub fn osd_count(&self) -> usize {
+        self.osds.len()
+    }
+
+    pub fn total_ops(&self) -> u64 {
+        self.ops.get()
+    }
+
+    /// Total PGs across pools (performance-sensitivity input).
+    pub fn total_pgs(&self) -> usize {
+        self.pools.borrow().values().map(|p| p.pg_num).sum()
+    }
+
+    /// Service-time penalty for PG-count imbalance: 1.0 at ~100 PGs/OSD,
+    /// growing with |log2(ratio)| (empirical; thesis §2.4 and §3.2 note
+    /// RADOS "can be very sensitive" to this parameter).
+    pub(crate) fn pg_penalty(&self) -> f64 {
+        let per_osd = self.total_pgs() as f64 / self.osds.len() as f64;
+        if per_osd <= 0.0 {
+            return 1.0;
+        }
+        let dev = (per_osd / 100.0).log2().abs();
+        1.0 + 0.15 * dev
+    }
+
+    /// CRUSH-like mapping: pg → ordered OSD set of size `width`.
+    pub(crate) fn osds_for(&self, pool: &CephPool, name: &str) -> Vec<usize> {
+        let n = self.osds.len();
+        let pg = (hash_name(name) % pool.pg_num as u64) as usize;
+        let width = pool.redundancy.width().min(n);
+        // deterministic pseudo-random walk seeded by (pool, pg)
+        let mut state = hash_name(&pool.name) ^ (pg as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut out = Vec::with_capacity(width);
+        while out.len() < width {
+            state = crate::util::rng::splitmix64(&mut state);
+            let cand = (state % n as u64) as usize;
+            if !out.contains(&cand) {
+                out.push(cand);
+            }
+        }
+        out
+    }
+}
+
+/// Stable 64-bit name hash (FNV-1a). Shared by CRUSH placement and the
+/// FDB DAOS catalogue's collocation→OID mapping.
+pub fn hash_name(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::hw::profiles::{build_cluster, Testbed};
+
+    pub fn small() -> (Sim, Rc<Ceph>, Rc<Cluster>) {
+        let sim = Sim::new();
+        let cluster = Rc::new(build_cluster(Testbed::Gcp, 4, 2, true, true));
+        let ceph = Ceph::deploy(&sim, &cluster, CephConfig::default());
+        (sim, ceph, cluster)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::small;
+    use super::*;
+
+    #[test]
+    fn deploy_counts() {
+        let (_s, ceph, _c) = small();
+        assert_eq!(ceph.osd_count(), 4);
+    }
+
+    #[test]
+    fn crush_is_deterministic_distinct_and_spread() {
+        let (_s, ceph, _c) = small();
+        let pool = ceph.create_pool("p", 512, Redundancy::Replica(3));
+        let a = ceph.osds_for(&pool, "obj-1");
+        let b = ceph.osds_for(&pool, "obj-1");
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 3);
+        let mut uniq = a.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 3, "replicas on distinct OSDs");
+        // different names spread primaries
+        let mut primaries = std::collections::HashSet::new();
+        for i in 0..64 {
+            primaries.insert(ceph.osds_for(&pool, &format!("obj-{i}"))[0]);
+        }
+        assert_eq!(primaries.len(), 4);
+    }
+
+    #[test]
+    fn pg_penalty_is_one_at_sweet_spot() {
+        let (_s, ceph, _c) = small();
+        ceph.create_pool("p", 400, Redundancy::None); // 100/OSD
+        assert!((ceph.pg_penalty() - 1.0).abs() < 1e-9);
+        ceph.create_pool("q", 400, Redundancy::None); // now 200/OSD
+        assert!(ceph.pg_penalty() > 1.1);
+    }
+
+    #[test]
+    fn redundancy_width() {
+        assert_eq!(Redundancy::None.width(), 1);
+        assert_eq!(Redundancy::Replica(2).width(), 2);
+        assert_eq!(Redundancy::Erasure(2, 1).width(), 3);
+    }
+}

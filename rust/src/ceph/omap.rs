@@ -1,0 +1,180 @@
+//! RADOS omap operations: key-value entries attached to an object,
+//! served by the object's primary OSD. Richer than DAOS KVs: a single
+//! call can return all keys *and* values (thesis §3.2.1 — this is what
+//! made the Ceph backend's `list()` more efficient).
+//!
+//! Omaps cannot live in EC pools (librados restriction, §2.4).
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use super::rados::{RadosClient, RadosError};
+use super::{CephPool, Redundancy};
+
+impl RadosClient {
+    /// `rados_write_op_omap_set2`: insert/overwrite entries, durable on
+    /// return. Creates the object if needed (write_op create + omap_set).
+    pub async fn omap_set(
+        &self,
+        pool: &Rc<CephPool>,
+        ns: &str,
+        name: &str,
+        entries: &[(&str, &[u8])],
+    ) -> Result<(), RadosError> {
+        if matches!(pool.redundancy, Redundancy::Erasure(..)) {
+            return Err(RadosError::NoSuchPool); // omaps unsupported on EC pools
+        }
+        self.ensure_map().await;
+        let bytes: u64 = entries
+            .iter()
+            .map(|(k, v)| k.len() as u64 + v.len() as u64 + self.sys.config.costs.omap_entry_overhead)
+            .sum();
+        self.write_path(pool, name, bytes).await;
+        self.obj_mut_content(pool, ns, name, |o| {
+            for (k, v) in entries {
+                o.omap.insert(k.to_string(), v.to_vec());
+            }
+        });
+        Ok(())
+    }
+
+    /// `rados_read_op_omap_get_vals_by_keys2`: fetch specific keys.
+    pub async fn omap_get(
+        &self,
+        pool: &Rc<CephPool>,
+        ns: &str,
+        name: &str,
+        keys: &[&str],
+    ) -> Result<HashMap<String, Vec<u8>>, RadosError> {
+        self.ensure_map().await;
+        let out: HashMap<String, Vec<u8>> = self.obj_content(pool, ns, name, |o| {
+            o.map(|o| {
+                keys.iter()
+                    .filter_map(|k| o.omap.get(*k).map(|v| (k.to_string(), v.clone())))
+                    .collect()
+            })
+            .unwrap_or_default()
+        });
+        let bytes: u64 = out
+            .iter()
+            .map(|(k, v)| (k.len() + v.len()) as u64)
+            .sum::<u64>()
+            + 64;
+        self.read_path(pool, name, bytes, bytes).await;
+        Ok(out)
+    }
+
+    /// Fetch ALL entries (keys and values) in a single RPC — the
+    /// capability DAOS KVs lack.
+    pub async fn omap_get_all(
+        &self,
+        pool: &Rc<CephPool>,
+        ns: &str,
+        name: &str,
+    ) -> Result<HashMap<String, Vec<u8>>, RadosError> {
+        self.ensure_map().await;
+        let out: HashMap<String, Vec<u8>> = self.obj_content(pool, ns, name, |o| {
+            o.map(|o| o.omap.clone()).unwrap_or_default()
+        });
+        let bytes: u64 = out
+            .iter()
+            .map(|(k, v)| (k.len() + v.len()) as u64)
+            .sum::<u64>()
+            + 64;
+        self.read_path(pool, name, bytes, bytes).await;
+        Ok(out)
+    }
+
+    /// `rados_read_op_omap_get_keys2`.
+    pub async fn omap_keys(
+        &self,
+        pool: &Rc<CephPool>,
+        ns: &str,
+        name: &str,
+    ) -> Result<Vec<String>, RadosError> {
+        self.ensure_map().await;
+        let keys: Vec<String> = self.obj_content(pool, ns, name, |o| {
+            o.map(|o| o.omap.keys().cloned().collect()).unwrap_or_default()
+        });
+        let bytes = keys.iter().map(|k| k.len() as u64).sum::<u64>() + 64;
+        self.read_path(pool, name, bytes, bytes).await;
+        Ok(keys)
+    }
+
+    /// `rados_write_op_omap_rm_keys2`.
+    pub async fn omap_rm(
+        &self,
+        pool: &Rc<CephPool>,
+        ns: &str,
+        name: &str,
+        keys: &[&str],
+    ) -> Result<(), RadosError> {
+        self.ensure_map().await;
+        self.write_path(pool, name, keys.iter().map(|k| k.len() as u64 + 32).sum())
+            .await;
+        self.obj_mut_content(pool, ns, name, |o| {
+            for k in keys {
+                o.omap.remove(*k);
+            }
+        });
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::small;
+    use super::*;
+
+    #[test]
+    fn omap_set_get_all() {
+        let (sim, ceph, c) = small();
+        let pool = ceph.create_pool("p", 512, Redundancy::None);
+        let node = c.client_nodes().next().unwrap().clone();
+        sim.spawn(async move {
+            let cli = ceph.client(&node);
+            cli.omap_set(&pool, "ns", "idx", &[("step=1", b"loc1"), ("step=2", b"loc2")])
+                .await
+                .unwrap();
+            let all = cli.omap_get_all(&pool, "ns", "idx").await.unwrap();
+            assert_eq!(all.len(), 2);
+            assert_eq!(all["step=1"], b"loc1");
+            let got = cli.omap_get(&pool, "ns", "idx", &["step=2"]).await.unwrap();
+            assert_eq!(got.len(), 1);
+            assert_eq!(got["step=2"], b"loc2");
+            let mut keys = cli.omap_keys(&pool, "ns", "idx").await.unwrap();
+            keys.sort();
+            assert_eq!(keys, vec!["step=1", "step=2"]);
+        });
+        sim.run();
+    }
+
+    #[test]
+    fn omap_overwrite_and_remove() {
+        let (sim, ceph, c) = small();
+        let pool = ceph.create_pool("p", 512, Redundancy::None);
+        let node = c.client_nodes().next().unwrap().clone();
+        sim.spawn(async move {
+            let cli = ceph.client(&node);
+            cli.omap_set(&pool, "ns", "i", &[("k", b"v1")]).await.unwrap();
+            cli.omap_set(&pool, "ns", "i", &[("k", b"v2")]).await.unwrap();
+            let all = cli.omap_get_all(&pool, "ns", "i").await.unwrap();
+            assert_eq!(all["k"], b"v2");
+            cli.omap_rm(&pool, "ns", "i", &["k"]).await.unwrap();
+            assert!(cli.omap_get_all(&pool, "ns", "i").await.unwrap().is_empty());
+        });
+        sim.run();
+    }
+
+    #[test]
+    fn omap_rejected_on_ec_pool() {
+        let (sim, ceph, c) = small();
+        let pool = ceph.create_pool("p", 512, Redundancy::Erasure(2, 1));
+        let node = c.client_nodes().next().unwrap().clone();
+        sim.spawn(async move {
+            let cli = ceph.client(&node);
+            assert!(cli.omap_set(&pool, "ns", "i", &[("k", b"v")]).await.is_err());
+        });
+        sim.run();
+    }
+}

@@ -1,0 +1,596 @@
+//! librados client: object write/read with primary-copy
+//! replication/EC, synchronous and asynchronous (aio) variants.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use super::{Ceph, CephPool, RadosObj};
+use crate::hw::node::Node;
+use crate::sim::futures::{boxed, join_all};
+use crate::sim::time::SimTime;
+use crate::util::content::Bytes;
+
+/// RADOS error surface.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RadosError {
+    NoSuchPool,
+    NoSuchObject,
+    ObjectTooLarge,
+}
+
+impl std::fmt::Display for RadosError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+impl std::error::Error for RadosError {}
+
+/// An in-flight asynchronous op (rados_aio_*): the *data may not be
+/// durable yet*; `aio_wait_for_complete` (via `flush_pending`) makes it
+/// so. The thesis found an FDB configuration relying on aio + flush did
+/// NOT meet the consistency requirements (Fig 3.5, patterned columns) —
+/// we model that: aio writes become *visible* only once flushed, and a
+/// configurable visibility lag mimics the observed late-visibility bug.
+pub(crate) struct PendingWrite {
+    pub pool: Rc<CephPool>,
+    pub ns: String,
+    pub name: String,
+    pub data: Bytes,
+}
+
+/// A librados client handle.
+pub struct RadosClient {
+    pub(crate) sys: Rc<Ceph>,
+    pub(crate) node: Rc<Node>,
+    /// process-unique client instance id (like host+pid in naming)
+    pub(crate) id: u64,
+    /// OSDMap fetched from the monitor on first use
+    map_fetched: RefCell<bool>,
+    pending: RefCell<Vec<PendingWrite>>,
+    /// emulate the observed aio visibility bug (thesis Fig 3.5 cfg 6)
+    pub aio_visibility_bug: bool,
+}
+
+impl Ceph {
+    pub fn client(self: &Rc<Self>, node: &Rc<Node>) -> RadosClient {
+        let id = self.next_client.get();
+        self.next_client.set(id + 1);
+        RadosClient {
+            sys: self.clone(),
+            node: node.clone(),
+            id,
+            map_fetched: RefCell::new(false),
+            pending: RefCell::new(Vec::new()),
+            aio_visibility_bug: false,
+        }
+    }
+}
+
+impl RadosClient {
+    pub fn pool(&self, name: &str) -> Result<Rc<CephPool>, RadosError> {
+        self.sys
+            .pools
+            .borrow()
+            .get(name)
+            .cloned()
+            .ok_or(RadosError::NoSuchPool)
+    }
+
+    /// First interaction fetches the OSDMap from a monitor.
+    pub(crate) async fn ensure_map(&self) {
+        if *self.map_fetched.borrow() {
+            return;
+        }
+        let sim = &self.sys.sim;
+        self.sys.tcp.rpc_rtt(sim).await;
+        self.sys
+            .mon_node
+            .cpu_serve(sim, self.sys.config.costs.mon_fetch)
+            .await;
+        *self.map_fetched.borrow_mut() = true;
+    }
+
+    fn osd_service(&self) -> SimTime {
+        SimTime::from_secs_f64(
+            self.sys.config.costs.osd_op.as_secs_f64() * self.sys.pg_penalty(),
+        )
+    }
+
+    /// Primary-copy write data path: client → primary (TCP), primary
+    /// persists, fans out to the remaining OSDs, acks after all durable.
+    pub(crate) async fn write_path(&self, pool: &Rc<CephPool>, name: &str, bytes: u64) {
+        self.sys.ops.set(self.sys.ops.get() + 1);
+        let sim = self.sys.sim.clone();
+        sim.sleep(self.sys.config.costs.client_op).await;
+        let osds = self.sys.osds_for(pool, name);
+        let primary = &self.sys.osds[osds[0]];
+        self.sys
+            .tcp
+            .xfer(&sim, &self.node.nic, &primary.node.nic, bytes)
+            .await;
+        primary.node.cpu_serve(&sim, self.osd_service()).await;
+        match pool.redundancy {
+            super::Redundancy::None => {
+                primary.node.dev().write(&sim, bytes).await;
+            }
+            super::Redundancy::Replica(_) => {
+                // primary persists and fans out concurrently
+                let futs = osds
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &oi)| {
+                        let osd = &self.sys.osds[oi];
+                        let primary_node = primary.node.clone();
+                        let sim = sim.clone();
+                        let tcp = self.sys.tcp.clone();
+                        let svc = self.osd_service();
+                        boxed(async move {
+                            if i > 0 {
+                                tcp.xfer(&sim, &primary_node.nic, &osd.node.nic, bytes).await;
+                                osd.node.cpu_serve(&sim, svc).await;
+                            }
+                            osd.node.dev().write(&sim, bytes).await;
+                        })
+                    })
+                    .collect();
+                join_all(futs).await;
+            }
+            super::Redundancy::Erasure(k, _m) => {
+                let chunk = bytes.div_ceil(k as u64);
+                let futs = osds
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &oi)| {
+                        let osd = &self.sys.osds[oi];
+                        let primary_node = primary.node.clone();
+                        let sim = sim.clone();
+                        let tcp = self.sys.tcp.clone();
+                        let svc = self.osd_service();
+                        boxed(async move {
+                            if i > 0 {
+                                tcp.xfer(&sim, &primary_node.nic, &osd.node.nic, chunk).await;
+                                osd.node.cpu_serve(&sim, svc).await;
+                            }
+                            osd.node.dev().write(&sim, chunk).await;
+                        })
+                    })
+                    .collect();
+                join_all(futs).await;
+            }
+        }
+        // ack
+        self.sys.tcp.msg(&sim).await;
+    }
+
+    /// Read path. EC pools fetch the FULL object extent even for partial
+    /// range reads (thesis §2.5 feature table).
+    pub(crate) async fn read_path(&self, pool: &Rc<CephPool>, name: &str, bytes: u64, full: u64) {
+        self.sys.ops.set(self.sys.ops.get() + 1);
+        let sim = self.sys.sim.clone();
+        sim.sleep(self.sys.config.costs.client_op).await;
+        let osds = self.sys.osds_for(pool, name);
+        let primary = &self.sys.osds[osds[0]];
+        self.sys.tcp.msg(&sim).await;
+        primary.node.cpu_serve(&sim, self.osd_service()).await;
+        match pool.redundancy {
+            super::Redundancy::Erasure(k, _m) => {
+                let chunk = full.div_ceil(k as u64);
+                let futs = osds[..k.min(osds.len())]
+                    .iter()
+                    .map(|&oi| {
+                        let osd = &self.sys.osds[oi];
+                        let primary_node = primary.node.clone();
+                        let sim = sim.clone();
+                        let tcp = self.sys.tcp.clone();
+                        boxed(async move {
+                            osd.node.dev().read(&sim, chunk).await;
+                            if !Rc::ptr_eq(&osd.node, &primary_node) {
+                                tcp.xfer(&sim, &osd.node.nic, &primary_node.nic, chunk).await;
+                            }
+                        })
+                    })
+                    .collect();
+                join_all(futs).await;
+                self.sys
+                    .tcp
+                    .xfer(&sim, &primary.node.nic, &self.node.nic, full)
+                    .await;
+            }
+            _ => {
+                primary.node.dev().read(&sim, bytes).await;
+                self.sys
+                    .tcp
+                    .xfer(&sim, &primary.node.nic, &self.node.nic, bytes)
+                    .await;
+            }
+        }
+    }
+
+    /// `rados_write_full`: create/replace an object, durable on return.
+    pub async fn write_full(
+        &self,
+        pool: &Rc<CephPool>,
+        ns: &str,
+        name: &str,
+        data: &[u8],
+    ) -> Result<(), RadosError> {
+        self.write_full_data(pool, ns, name, Bytes::real(data.to_vec()))
+            .await
+    }
+
+    /// `rados_write_full` of a (possibly virtual) byte string.
+    pub async fn write_full_data(
+        &self,
+        pool: &Rc<CephPool>,
+        ns: &str,
+        name: &str,
+        data: Bytes,
+    ) -> Result<(), RadosError> {
+        if data.len() > self.sys.config.max_object_size {
+            return Err(RadosError::ObjectTooLarge);
+        }
+        self.ensure_map().await;
+        self.write_path(pool, name, data.len()).await;
+        let mut objs = pool.objects.borrow_mut();
+        let obj = objs
+            .entry((ns.to_string(), name.to_string()))
+            .or_default();
+        obj.data = crate::util::content::Content::new();
+        obj.data.write(0, data);
+        Ok(())
+    }
+
+    /// `rados_write` at an offset (extends as needed).
+    pub async fn write_at(
+        &self,
+        pool: &Rc<CephPool>,
+        ns: &str,
+        name: &str,
+        offset: u64,
+        data: Bytes,
+    ) -> Result<(), RadosError> {
+        let end = offset + data.len();
+        if end > self.sys.config.max_object_size {
+            return Err(RadosError::ObjectTooLarge);
+        }
+        self.ensure_map().await;
+        self.write_path(pool, name, data.len()).await;
+        let mut objs = pool.objects.borrow_mut();
+        let obj = objs
+            .entry((ns.to_string(), name.to_string()))
+            .or_default();
+        obj.data.write(offset, data);
+        Ok(())
+    }
+
+    /// `rados_aio_write_full`: returns immediately after buffering; the
+    /// data is neither durable nor (with the visibility bug) readable
+    /// until `flush_pending`. Costs only the client-side submit.
+    pub async fn aio_write_full(
+        &self,
+        pool: &Rc<CephPool>,
+        ns: &str,
+        name: &str,
+        data: impl Into<Bytes>,
+    ) -> Result<(), RadosError> {
+        let data: Bytes = data.into();
+        if data.len() > self.sys.config.max_object_size {
+            return Err(RadosError::ObjectTooLarge);
+        }
+        self.sys
+            .sim
+            .sleep(self.sys.config.costs.client_op)
+            .await;
+        if !self.aio_visibility_bug {
+            // content visible immediately (but not durable)
+            let mut objs = pool.objects.borrow_mut();
+            let obj = objs
+                .entry((ns.to_string(), name.to_string()))
+                .or_default();
+            obj.data = crate::util::content::Content::new();
+            obj.data.write(0, data.clone());
+        }
+        self.pending.borrow_mut().push(PendingWrite {
+            pool: pool.clone(),
+            ns: ns.to_string(),
+            name: name.to_string(),
+            data,
+        });
+        Ok(())
+    }
+
+    /// `rados_aio_wait_for_complete` over all outstanding aio writes.
+    /// Transfers overlap with each other (that's the aio win).
+    pub async fn flush_pending(&self) {
+        self.ensure_map().await;
+        let pending: Vec<PendingWrite> = self.pending.borrow_mut().drain(..).collect();
+        if pending.is_empty() {
+            return;
+        }
+        let futs = pending
+            .iter()
+            .map(|w| {
+                boxed(async move {
+                    self.write_path(&w.pool, &w.name, w.data.len()).await;
+                })
+            })
+            .collect();
+        join_all(futs).await;
+        for w in pending {
+            let mut objs = w.pool.objects.borrow_mut();
+            let obj = objs.entry((w.ns.clone(), w.name.clone())).or_default();
+            obj.data = crate::util::content::Content::new();
+            obj.data.write(0, w.data);
+        }
+    }
+
+    /// `rados_read`: `Ok(None)` if absent.
+    pub async fn read(
+        &self,
+        pool: &Rc<CephPool>,
+        ns: &str,
+        name: &str,
+        offset: u64,
+        len: u64,
+    ) -> Result<Option<Bytes>, RadosError> {
+        self.ensure_map().await;
+        let (slice, full) = {
+            let objs = pool.objects.borrow();
+            match objs.get(&(ns.to_string(), name.to_string())) {
+                None => return Ok(None),
+                Some(o) => {
+                    let end = (offset + len).min(o.data.len());
+                    let start = offset.min(end);
+                    (o.data.read(start, end - start), o.data.len())
+                }
+            }
+        };
+        self.read_path(pool, name, slice.len(), full).await;
+        Ok(Some(slice))
+    }
+
+    /// `rados_stat`: object size, or None.
+    pub async fn stat(
+        &self,
+        pool: &Rc<CephPool>,
+        ns: &str,
+        name: &str,
+    ) -> Result<Option<u64>, RadosError> {
+        self.ensure_map().await;
+        self.sys.tcp.rpc_rtt(&self.sys.sim).await;
+        Ok(pool
+            .objects
+            .borrow()
+            .get(&(ns.to_string(), name.to_string()))
+            .map(|o| o.data.len()))
+    }
+
+    pub async fn remove(&self, pool: &Rc<CephPool>, ns: &str, name: &str) -> bool {
+        self.ensure_map().await;
+        self.write_path(pool, name, 64).await;
+        pool.objects
+            .borrow_mut()
+            .remove(&(ns.to_string(), name.to_string()))
+            .is_some()
+    }
+
+    /// List object names in a namespace (PG scan; one RPC per OSD).
+    pub async fn list_objects(&self, pool: &Rc<CephPool>, ns: &str) -> Vec<String> {
+        self.ensure_map().await;
+        let sim = &self.sys.sim;
+        for osd in &self.sys.osds {
+            self.sys.tcp.msg(sim).await;
+            osd.node.cpu_serve(sim, self.osd_service()).await;
+            self.sys.tcp.msg(sim).await;
+        }
+        pool.objects
+            .borrow()
+            .keys()
+            .filter(|(n, _)| n == ns)
+            .map(|(_, name)| name.clone())
+            .collect()
+    }
+
+    /// Set an object xattr (the 2019 backend attempt's overhead source).
+    pub async fn setxattr(
+        &self,
+        pool: &Rc<CephPool>,
+        ns: &str,
+        name: &str,
+        key: &str,
+        value: &[u8],
+    ) {
+        self.ensure_map().await;
+        self.write_path(pool, name, (key.len() + value.len()) as u64 + 256)
+            .await;
+        let mut objs = pool.objects.borrow_mut();
+        let obj = objs
+            .entry((ns.to_string(), name.to_string()))
+            .or_default();
+        obj.xattrs.insert(key.to_string(), value.to_vec());
+    }
+
+    pub(crate) fn obj_mut_content<R>(
+        &self,
+        pool: &Rc<CephPool>,
+        ns: &str,
+        name: &str,
+        f: impl FnOnce(&mut RadosObj) -> R,
+    ) -> R {
+        let mut objs = pool.objects.borrow_mut();
+        let obj = objs
+            .entry((ns.to_string(), name.to_string()))
+            .or_default();
+        f(obj)
+    }
+
+    pub(crate) fn obj_content<R>(
+        &self,
+        pool: &Rc<CephPool>,
+        ns: &str,
+        name: &str,
+        f: impl FnOnce(Option<&RadosObj>) -> R,
+    ) -> R {
+        let objs = pool.objects.borrow();
+        f(objs.get(&(ns.to_string(), name.to_string())))
+    }
+
+    /// Leak check helper for tests.
+    pub fn pending_count(&self) -> usize {
+        self.pending.borrow().len()
+    }
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::small;
+    use super::super::Redundancy;
+    use super::*;
+
+    #[test]
+    fn write_read_roundtrip() {
+        let (sim, ceph, c) = small();
+        let pool = ceph.create_pool("p", 512, Redundancy::None);
+        let node = c.client_nodes().next().unwrap().clone();
+        sim.spawn(async move {
+            let cli = ceph.client(&node);
+            cli.write_full(&pool, "ns", "obj", b"ceph bytes").await.unwrap();
+            let got = cli.read(&pool, "ns", "obj", 0, 10).await.unwrap();
+            assert_eq!(got.map(|b| b.to_vec()).as_deref(), Some(b"ceph bytes".as_ref()));
+            assert_eq!(cli.stat(&pool, "ns", "obj").await.unwrap(), Some(10));
+            assert!(cli.read(&pool, "ns", "missing", 0, 1).await.unwrap().is_none());
+        });
+        sim.run();
+    }
+
+    #[test]
+    fn namespaces_isolate_names() {
+        let (sim, ceph, c) = small();
+        let pool = ceph.create_pool("p", 512, Redundancy::None);
+        let node = c.client_nodes().next().unwrap().clone();
+        sim.spawn(async move {
+            let cli = ceph.client(&node);
+            cli.write_full(&pool, "ns1", "x", b"one").await.unwrap();
+            cli.write_full(&pool, "ns2", "x", b"two").await.unwrap();
+            assert_eq!(
+                cli.read(&pool, "ns1", "x", 0, 3).await.unwrap().map(|b| b.to_vec()).as_deref(),
+                Some(b"one".as_ref())
+            );
+            assert_eq!(
+                cli.read(&pool, "ns2", "x", 0, 3).await.unwrap().map(|b| b.to_vec()).as_deref(),
+                Some(b"two".as_ref())
+            );
+            let mut l1 = cli.list_objects(&pool, "ns1").await;
+            l1.sort();
+            assert_eq!(l1, vec!["x"]);
+        });
+        sim.run();
+    }
+
+    #[test]
+    fn object_size_limit_enforced() {
+        let (sim, ceph, c) = small();
+        let pool = ceph.create_pool("p", 512, Redundancy::None);
+        let node = c.client_nodes().next().unwrap().clone();
+        sim.spawn(async move {
+            let cli = ceph.client(&node);
+            let big = vec![0u8; (128 << 20) + 1];
+            assert_eq!(
+                cli.write_full(&pool, "ns", "big", &big).await.unwrap_err(),
+                RadosError::ObjectTooLarge
+            );
+        });
+        sim.run();
+    }
+
+    #[test]
+    fn replica_write_slower_than_none() {
+        let run = |red: Redundancy| {
+            let (sim, ceph, c) = small();
+            let pool = ceph.create_pool("p", 512, red);
+            let node = c.client_nodes().next().unwrap().clone();
+            sim.spawn(async move {
+                let cli = ceph.client(&node);
+                for i in 0..50 {
+                    cli.write_full(&pool, "ns", &format!("o{i}"), &vec![1u8; 1 << 20])
+                        .await
+                        .unwrap();
+                }
+            });
+            sim.run()
+        };
+        let none = run(Redundancy::None);
+        let rep2 = run(Redundancy::Replica(2));
+        assert!(
+            rep2.as_nanos() > (none.as_nanos() as f64 * 1.2) as u64,
+            "rep2 {rep2} vs none {none}"
+        );
+    }
+
+    #[test]
+    fn aio_durable_only_after_flush() {
+        let (sim, ceph, c) = small();
+        let pool = ceph.create_pool("p", 512, Redundancy::None);
+        let node = c.client_nodes().next().unwrap().clone();
+        sim.spawn(async move {
+            let cli = ceph.client(&node);
+            cli.aio_write_full(&pool, "ns", "a", b"async").await.unwrap();
+            assert_eq!(cli.pending_count(), 1);
+            cli.flush_pending().await;
+            assert_eq!(cli.pending_count(), 0);
+            assert_eq!(
+                cli.read(&pool, "ns", "a", 0, 5).await.unwrap().map(|b| b.to_vec()).as_deref(),
+                Some(b"async".as_ref())
+            );
+        });
+        sim.run();
+    }
+
+    #[test]
+    fn aio_visibility_bug_hides_data_until_flush() {
+        let (sim, ceph, c) = small();
+        let pool = ceph.create_pool("p", 512, Redundancy::None);
+        let node = c.client_nodes().next().unwrap().clone();
+        sim.spawn(async move {
+            let mut cli = ceph.client(&node);
+            cli.aio_visibility_bug = true;
+            cli.aio_write_full(&pool, "ns", "a", b"late").await.unwrap();
+            // another reader does NOT see it yet — the Fig 3.5 failure
+            let rdr = ceph.client(&node);
+            assert!(rdr.read(&pool, "ns", "a", 0, 4).await.unwrap().is_none());
+            cli.flush_pending().await;
+            assert!(rdr.read(&pool, "ns", "a", 0, 4).await.unwrap().is_some());
+        });
+        sim.run();
+    }
+
+    #[test]
+    fn ec_partial_read_fetches_full_object() {
+        // EC read of 1 KiB from a 64 MiB object must cost ~the full object
+        let run = |red: Redundancy| {
+            let (sim, ceph, c) = small();
+            let pool = ceph.create_pool("p", 512, red);
+            let node = c.client_nodes().next().unwrap().clone();
+            sim.spawn(async move {
+                let cli = ceph.client(&node);
+                cli.write_full(&pool, "ns", "o", &vec![1u8; 64 << 20])
+                    .await
+                    .unwrap();
+                let t0 = cli.sys.sim.now();
+                cli.read(&pool, "ns", "o", 0, 1024).await.unwrap();
+                let dt = cli.sys.sim.now() - t0;
+                // stash in an xattr-free way: assert here directly
+                match red {
+                    Redundancy::Erasure(..) => {
+                        assert!(dt > SimTime::millis(10), "EC partial read {dt}")
+                    }
+                    _ => assert!(dt < SimTime::millis(10), "replica partial read {dt}"),
+                }
+            });
+            sim.run()
+        };
+        run(Redundancy::None);
+        run(Redundancy::Erasure(2, 1));
+    }
+}

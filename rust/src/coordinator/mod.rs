@@ -1,0 +1,313 @@
+//! The leader/coordinator: wires configuration → deployed simulated
+//! cluster → workload → report, behind the `fdbctl` CLI and examples.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::bench::scenario::{deploy, RedundancyOpt, SystemKind};
+use crate::bench::{fieldio, hammer, ior};
+use crate::hw::profiles::Testbed;
+use crate::runtime::{PgenPipeline, PjrtRuntime};
+use crate::util::cli::Args;
+use crate::workflow::driver::{self, OperationalConfig};
+use crate::workflow::{Compute, NullCompute};
+
+pub fn parse_testbed(s: &str) -> Result<Testbed> {
+    Ok(match s {
+        "nextgenio" | "ngio" => Testbed::NextGenIo,
+        "gcp" => Testbed::Gcp,
+        other => bail!("unknown testbed `{other}` (nextgenio|gcp)"),
+    })
+}
+
+pub fn parse_system(s: &str) -> Result<SystemKind> {
+    Ok(match s {
+        "lustre" | "posix" => SystemKind::Lustre,
+        "daos" => SystemKind::Daos,
+        "ceph" | "rados" => SystemKind::Ceph,
+        other => bail!("unknown system `{other}` (lustre|daos|ceph)"),
+    })
+}
+
+/// `fdbctl hammer --system daos --testbed gcp --servers 4 --clients 8 ...`
+pub fn cmd_hammer(args: &Args) -> Result<()> {
+    let testbed = parse_testbed(args.get_or("testbed", "gcp"))?;
+    let kind = parse_system(args.get_or("system", "daos"))?;
+    let dep = deploy(
+        testbed,
+        kind,
+        args.usize("servers", 4),
+        args.usize("clients", 8),
+        RedundancyOpt::None,
+    );
+    let cfg = hammer::HammerConfig {
+        procs_per_node: args.usize("procs", 8),
+        nsteps: args.u64("steps", 10) as u32,
+        nparams: args.u64("params", 5) as u32,
+        nlevels: args.u64("levels", 4) as u32,
+        field_size: args.bytes("field-size", 1 << 20),
+        check: args.flag("check"),
+        contention: args.flag("contention"),
+    };
+    let (r, trace) = hammer::run(&dep, cfg);
+    println!(
+        "fdb-hammer {} on {} ({} srv / {} cli × {} procs, {} fields/proc of {})",
+        kind.label(),
+        testbed.name(),
+        args.usize("servers", 4),
+        args.usize("clients", 8),
+        cfg.procs_per_node,
+        cfg.fields_per_proc(),
+        crate::util::humansize::fmt_bytes(cfg.field_size),
+    );
+    println!("  write: {:8.2} GiB/s   ({})", r.gibs_w(), r.write_time);
+    println!("  read:  {:8.2} GiB/s   ({})", r.gibs_r(), r.read_time);
+    println!("  profile: {}", trace.render());
+    if cfg.check {
+        println!("  consistency check: PASSED (all fields found, bytes verified)");
+    }
+    Ok(())
+}
+
+/// `fdbctl ior --system lustre ...`
+pub fn cmd_ior(args: &Args) -> Result<()> {
+    let testbed = parse_testbed(args.get_or("testbed", "gcp"))?;
+    let kind = parse_system(args.get_or("system", "lustre"))?;
+    let dep = deploy(
+        testbed,
+        kind,
+        args.usize("servers", 4),
+        args.usize("clients", 8),
+        RedundancyOpt::None,
+    );
+    let cfg = ior::IorConfig {
+        procs_per_node: args.usize("procs", 8),
+        nops: args.usize("nops", 100),
+        xfer: args.bytes("xfer", 1 << 20),
+        daos_via_dfs: args.flag("dfs"),
+    };
+    let r = ior::run(&dep, cfg);
+    println!(
+        "IOR {} on {}: write {:.2} GiB/s, read {:.2} GiB/s",
+        kind.label(),
+        testbed.name(),
+        r.gibs_w(),
+        r.gibs_r()
+    );
+    Ok(())
+}
+
+/// `fdbctl fieldio --system daos [--dummy] ...`
+pub fn cmd_fieldio(args: &Args) -> Result<()> {
+    let testbed = parse_testbed(args.get_or("testbed", "nextgenio"))?;
+    let kind = parse_system(args.get_or("system", "daos"))?;
+    let dep = deploy(
+        testbed,
+        kind,
+        args.usize("servers", 2),
+        args.usize("clients", 4),
+        RedundancyOpt::None,
+    );
+    let cfg = fieldio::FieldIoConfig {
+        procs_per_node: args.usize("procs", 8),
+        nfields: args.usize("nfields", 200),
+        field_size: args.bytes("field-size", 1 << 20),
+        dummy: args.flag("dummy"),
+        contention: args.flag("contention"),
+        ..Default::default()
+    };
+    let r = fieldio::run(&dep, cfg);
+    println!(
+        "Field I/O {}{} on {}: write {:.2} GiB/s, read {:.2} GiB/s",
+        kind.label(),
+        if cfg.dummy { " (dummy)" } else { "" },
+        testbed.name(),
+        r.gibs_w(),
+        r.gibs_r()
+    );
+    Ok(())
+}
+
+/// `fdbctl figures [--only figN_M] [--scale 0.05]`
+pub fn cmd_figures(args: &Args) -> Result<()> {
+    let scale = args.f64("scale", 0.05);
+    let only = args.get("only");
+    let mut ids = crate::bench::figures::all_ids();
+    ids.extend(crate::bench::ablations::ablation_ids());
+    for id in ids {
+        if let Some(filter) = only {
+            if filter != id {
+                continue;
+            }
+        }
+        let t0 = std::time::Instant::now();
+        let fig = crate::bench::figures::run_figure(id, scale)
+            .or_else(|| crate::bench::ablations::run_ablation(id, scale));
+        match fig {
+            Some(fig) => {
+                print!("{}", fig.render());
+                println!("   [{:.1}s wall]", t0.elapsed().as_secs_f64());
+            }
+            None => bail!("unknown figure id `{id}`"),
+        }
+    }
+    Ok(())
+}
+
+/// `fdbctl opsrun --system daos --members 2 --steps 4 [--no-compute]`
+/// The end-to-end driver: operational workflow with real PGEN compute
+/// through the PJRT artifacts.
+pub fn cmd_opsrun(args: &Args) -> Result<()> {
+    let testbed = parse_testbed(args.get_or("testbed", "gcp"))?;
+    let kind = parse_system(args.get_or("system", "daos"))?;
+    let dep = deploy(
+        testbed,
+        kind,
+        args.usize("servers", 2),
+        args.usize("clients", 4),
+        RedundancyOpt::None,
+    );
+    let grid = args.usize("grid", 64);
+    let real_compute = !args.flag("no-compute");
+    let compute: Compute = if real_compute {
+        let rt = PjrtRuntime::cpu()?;
+        println!("PJRT platform: {}", rt.platform());
+        Rc::new(PgenPipeline::new(&rt, 8, grid)?)
+    } else {
+        Rc::new(NullCompute)
+    };
+    let cfg = OperationalConfig {
+        members: args.usize("members", 2),
+        procs_per_member: args.usize("procs-per-member", 4),
+        steps: args.u64("steps", 4) as u32,
+        fields_per_proc_step: args.u64("fields-per-step", 8) as u32,
+        grid,
+        real_compute,
+    };
+    let report = driver::run(&dep, cfg, compute);
+    println!(
+        "operational run on {} / {}: {} members × {} procs, {} steps",
+        kind.label(),
+        testbed.name(),
+        cfg.members,
+        cfg.procs_per_member,
+        cfg.steps
+    );
+    println!(
+        "  archived {} fields, post-processed {} fields ({}), {} products",
+        report.fields_written,
+        report.fields_read,
+        crate::util::humansize::fmt_bytes(report.bytes),
+        report.products
+    );
+    println!("  simulated makespan: {}", report.makespan);
+    println!("  profile: {}", report.trace.render());
+    assert_eq!(report.fields_read, report.fields_written);
+    println!("  end-to-end check: PASSED (every archived field post-processed)");
+    Ok(())
+}
+
+/// `fdbctl admin --system daos`: demonstrate the management tools —
+/// populate a demo dataset, print stats, wipe it, verify emptiness.
+pub fn cmd_admin(args: &Args) -> Result<()> {
+    let testbed = parse_testbed(args.get_or("testbed", "gcp"))?;
+    let kind = parse_system(args.get_or("system", "daos"))?;
+    let dep = deploy(testbed, kind, 2, 2, RedundancyOpt::None);
+    let node = dep.client_nodes()[0].clone();
+    let mut fdb = match &dep.system {
+        crate::bench::scenario::SystemUnderTest::Lustre(fs) => {
+            crate::fdb::setup::posix_fdb(&dep.sim, fs, &node, "/fdb")
+        }
+        crate::bench::scenario::SystemUnderTest::Daos(d) => {
+            crate::fdb::setup::daos_fdb(&dep.sim, d, &node, "fdb")
+        }
+        crate::bench::scenario::SystemUnderTest::Ceph(c, pool) => {
+            crate::fdb::setup::rados_fdb(&dep.sim, c, pool, &node)
+        }
+    };
+    let nfields = args.usize("nfields", 32);
+    dep.sim.spawn(async move {
+        use crate::fdb::schema::example_identifier;
+        for i in 0..nfields {
+            let id = example_identifier().with("step", (i + 1).to_string());
+            fdb.archive(&id, crate::util::content::Bytes::virt(1 << 20, i as u64))
+                .await
+                .unwrap();
+        }
+        fdb.flush().await;
+        fdb.close().await;
+        let ds = example_identifier()
+            .project(&fdb.schema.dataset.clone())
+            .unwrap();
+        let stats = fdb.stats(&ds).await;
+        println!(
+            "dataset {}: {} fields, {}, {} collocations",
+            ds.canonical(),
+            stats.fields,
+            crate::util::humansize::fmt_bytes(stats.bytes),
+            stats.collocations
+        );
+        let wiped = fdb.wipe(&ds).await;
+        fdb.invalidate_preload(&ds);
+        let after = fdb.stats(&ds).await;
+        println!("wipe: {wiped}; fields after wipe: {}", after.fields);
+        assert_eq!(after.fields, 0);
+    });
+    dep.sim.run();
+    println!("admin tooling OK");
+    Ok(())
+}
+
+pub fn usage() -> &'static str {
+    "fdbctl — FDB-on-object-stores reproduction driver\n\
+     \n\
+     USAGE: fdbctl <command> [options]\n\
+     \n\
+     COMMANDS:\n\
+       figures   regenerate the paper's tables/figures  [--only <id>] [--scale f]\n\
+       hammer    fdb-hammer                 [--system s] [--testbed t] [--servers n]\n\
+                 [--clients n] [--procs n] [--steps n] [--params n] [--levels n]\n\
+                 [--field-size sz] [--contention] [--check]\n\
+       ior       IOR-like generic benchmark [--system s] [--nops n] [--xfer sz] [--dfs]\n\
+       fieldio   Field I/O PoC              [--system s] [--nfields n] [--dummy]\n\
+       opsrun    end-to-end operational NWP run with PJRT PGEN compute\n\
+                 [--system s] [--members n] [--steps n] [--grid 32|64] [--no-compute]\n\
+       admin     dataset stats + wipe demo   [--system s] [--nfields n]\n\
+     \n\
+     systems: lustre | daos | ceph      testbeds: nextgenio | gcp"
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parsers() {
+        assert_eq!(parse_system("daos").unwrap(), SystemKind::Daos);
+        assert_eq!(parse_system("posix").unwrap(), SystemKind::Lustre);
+        assert!(parse_system("zfs").is_err());
+        assert_eq!(parse_testbed("gcp").unwrap(), Testbed::Gcp);
+        assert!(parse_testbed("azure").is_err());
+    }
+
+    #[test]
+    fn hammer_command_smoke() {
+        let args = Args::parse(
+            "--system daos --servers 2 --clients 2 --procs 2 --steps 2 --params 2 --levels 2 --field-size 65536"
+                .split_whitespace()
+                .map(String::from),
+        );
+        cmd_hammer(&args).unwrap();
+    }
+
+    #[test]
+    fn opsrun_no_compute_smoke() {
+        let args = Args::parse(
+            "--system lustre --members 1 --steps 2 --grid 32 --no-compute"
+                .split_whitespace()
+                .map(String::from),
+        );
+        cmd_opsrun(&args).unwrap();
+    }
+}

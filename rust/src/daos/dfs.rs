@@ -1,0 +1,149 @@
+//! libdfs: the POSIX files/directories emulation layer over DAOS
+//! key-values and arrays (thesis §2.3). Used by the IOR/HDF5 comparison
+//! (Fig 4.29): file data lives in an array per file, the namespace in a
+//! directory KV. Not fully POSIX (no O_APPEND, no advisory locks) — like
+//! the real libdfs.
+
+use std::rc::Rc;
+
+use super::{Container, DaosClient, DaosError, ObjClass, Oid};
+
+/// A DFS mount over one container.
+pub struct Dfs<'c> {
+    client: &'c DaosClient,
+    cont: Rc<Container>,
+    /// namespace KV at a reserved OID
+    ns_oid: Oid,
+}
+
+/// An open DFS file.
+pub struct DfsFile {
+    pub oid: Oid,
+    pub class: ObjClass,
+}
+
+const NS_OID: Oid = Oid { hi: u64::MAX, lo: 0 };
+
+impl<'c> Dfs<'c> {
+    /// Mount (create-if-needed) a DFS namespace in `cont`.
+    pub fn mount(client: &'c DaosClient, cont: &Rc<Container>) -> Dfs<'c> {
+        Dfs {
+            client,
+            cont: cont.clone(),
+            ns_oid: NS_OID,
+        }
+    }
+
+    fn ns(&self) -> super::KvHandle {
+        self.client.kv_open(&self.cont, self.ns_oid, ObjClass::S1)
+    }
+
+    /// Create a file (overwrites an existing mapping, like dfs_open+CREATE).
+    pub async fn create(&self, path: &str, class: ObjClass) -> DfsFile {
+        let oid = self.client.alloc_oid(&self.cont).await;
+        let mut rec = Vec::with_capacity(17);
+        rec.extend_from_slice(&oid.hi.to_le_bytes());
+        rec.extend_from_slice(&oid.lo.to_le_bytes());
+        rec.push(class_tag(class));
+        self.client.kv_put(&self.ns(), path, &rec).await;
+        DfsFile { oid, class }
+    }
+
+    /// Open an existing file.
+    pub async fn open(&self, path: &str) -> Result<Option<DfsFile>, DaosError> {
+        let rec = self.client.kv_get(&self.ns(), path).await?;
+        Ok(rec.map(|r| {
+            let hi = u64::from_le_bytes(r[0..8].try_into().unwrap());
+            let lo = u64::from_le_bytes(r[8..16].try_into().unwrap());
+            DfsFile {
+                oid: Oid::new(hi, lo),
+                class: tag_class(r[16]),
+            }
+        }))
+    }
+
+    pub async fn write(&self, f: &DfsFile, offset: u64, data: &[u8]) {
+        let arr = self
+            .client
+            .array_open_with_attr(&self.cont, f.oid, f.class);
+        self.client.array_write(&arr, offset, data).await;
+    }
+
+    /// Write a (possibly virtual) byte string — bulk IOR/HDF5 path.
+    pub async fn write_data(&self, f: &DfsFile, offset: u64, data: crate::util::content::Bytes) {
+        let arr = self
+            .client
+            .array_open_with_attr(&self.cont, f.oid, f.class);
+        self.client.array_write_data(&arr, offset, data).await;
+    }
+
+    pub async fn read(
+        &self,
+        f: &DfsFile,
+        offset: u64,
+        len: u64,
+    ) -> Result<crate::util::content::Bytes, DaosError> {
+        let arr = self
+            .client
+            .array_open_with_attr(&self.cont, f.oid, f.class);
+        self.client.array_read(&arr, offset, len).await
+    }
+
+    pub async fn readdir(&self) -> Vec<String> {
+        self.client.kv_list(&self.ns()).await
+    }
+
+    pub async fn unlink(&self, path: &str) {
+        self.client.kv_remove(&self.ns(), path).await;
+    }
+}
+
+fn class_tag(c: ObjClass) -> u8 {
+    match c {
+        ObjClass::S1 => 0,
+        ObjClass::S2 => 1,
+        ObjClass::Sx => 2,
+        ObjClass::Rp2 => 3,
+        ObjClass::Ec2p1 => 4,
+    }
+}
+
+fn tag_class(t: u8) -> ObjClass {
+    match t {
+        0 => ObjClass::S1,
+        1 => ObjClass::S2,
+        2 => ObjClass::Sx,
+        3 => ObjClass::Rp2,
+        _ => ObjClass::Ec2p1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::small;
+    use super::*;
+
+    #[test]
+    fn dfs_file_roundtrip() {
+        let (sim, d, c) = small();
+        d.create_pool("p");
+        let node = c.client_nodes().next().unwrap().clone();
+        sim.spawn(async move {
+            let cli = d.client(&node);
+            let pool = cli.pool_connect("p").await.unwrap();
+            let cont = cli.cont_create_with_label(&pool, "dfs").await.unwrap();
+            let dfs = Dfs::mount(&cli, &cont);
+            let f = dfs.create("/exp/out.h5", ObjClass::Sx).await;
+            dfs.write(&f, 0, b"hdf5-ish bytes").await;
+            let g = dfs.open("/exp/out.h5").await.unwrap().unwrap();
+            assert_eq!(g.oid, f.oid);
+            assert_eq!(g.class, ObjClass::Sx);
+            let got = dfs.read(&g, 0, 14).await.unwrap().to_vec();
+            assert_eq!(&got, b"hdf5-ish bytes");
+            assert_eq!(dfs.readdir().await, vec!["/exp/out.h5".to_string()]);
+            dfs.unlink("/exp/out.h5").await;
+            assert!(dfs.open("/exp/out.h5").await.unwrap().is_none());
+        });
+        sim.run();
+    }
+}

@@ -1,0 +1,532 @@
+//! Simulated DAOS object store (thesis §2.3).
+//!
+//! Models the mechanisms behind DAOS' measured advantages:
+//!
+//! * **Algorithmic placement** — objects map to targets by OID hash; no
+//!   metadata server round trips, every op goes straight to the right
+//!   engine.
+//! * **MVCC, no locks** — writes create new versions server-side; reads
+//!   see the latest committed version. Write+read contention costs
+//!   nothing beyond ordinary queueing.
+//! * **User-space, zero-copy** — tiny per-op client CPU cost; PSM2/RDMA
+//!   fabrics exploited natively.
+//! * **Immediate persistence** — an op returns only after the engine has
+//!   made it durable; `flush()` is a no-op upstream.
+//! * **Object classes** — `OC_S1/S2/SX` striping, `OC_RP_2G1`
+//!   replication, `OC_EC_2P1` erasure coding, per object.
+//!
+//! KV and array contents are real bytes; only time is simulated.
+
+mod array;
+pub mod dfs;
+mod kv;
+
+pub use array::ArrayHandle;
+pub use kv::KvHandle;
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::hw::cluster::Cluster;
+use crate::hw::node::Node;
+use crate::sim::exec::Sim;
+use crate::sim::time::SimTime;
+
+/// 128-bit DAOS object id (hi = user bits, lo = sequence).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Oid {
+    pub hi: u64,
+    pub lo: u64,
+}
+
+impl Oid {
+    pub const ROOT_KV: Oid = Oid { hi: 0, lo: 0 };
+
+    pub fn new(hi: u64, lo: u64) -> Oid {
+        Oid { hi, lo }
+    }
+
+    /// Deterministic placement hash.
+    pub(crate) fn place(&self) -> u64 {
+        // splitmix-style avalanche of both words
+        let mut z = self.hi ^ self.lo.rotate_left(32) ^ 0x9E37_79B9_7F4A_7C15;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// DAOS object class: redundancy/striping layout (thesis §3.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ObjClass {
+    /// single target (FDB default; best for many small parallel objects)
+    S1,
+    /// striped over 2 targets
+    S2,
+    /// striped over all targets
+    Sx,
+    /// replicated on 2 targets (OC_RP_2G1)
+    Rp2,
+    /// erasure-coded 2 data + 1 parity (OC_EC_2P1G1)
+    Ec2p1,
+}
+
+/// Per-op calibration for the engines.
+#[derive(Clone, Copy, Debug)]
+pub struct DaosCosts {
+    /// client user-space per-op CPU
+    pub client_op: SimTime,
+    /// engine-side per-op service
+    pub server_op: SimTime,
+    /// pool connect / container open / create RPC handling
+    pub pool_connect: SimTime,
+    pub cont_open: SimTime,
+    pub cont_create: SimTime,
+    /// per-KV-entry media overhead (index maintenance in SCM/WAL)
+    pub kv_entry_overhead: u64,
+    /// VOS write-ahead-log commit latency for small ops — DAOS does not
+    /// pay block-write latency for KiB-scale durable commits
+    pub wal_commit: SimTime,
+    /// byte-addressable read latency (indexed VOS extents / SCM)
+    pub byte_read_lat: SimTime,
+    /// ops at or below this size use the WAL/byte-addressable path
+    pub small_op_threshold: u64,
+}
+
+impl Default for DaosCosts {
+    fn default() -> Self {
+        DaosCosts {
+            client_op: SimTime::micros(2),
+            server_op: SimTime::micros(5),
+            pool_connect: SimTime::millis(2),
+            cont_open: SimTime::micros(500),
+            cont_create: SimTime::millis(5),
+            kv_entry_overhead: 128,
+            wal_commit: SimTime::micros(8),
+            byte_read_lat: SimTime::micros(20),
+            small_op_threshold: 256 << 10,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct DaosConfig {
+    /// targets per engine (one engine per storage node here)
+    pub targets_per_engine: usize,
+    pub costs: DaosCosts,
+}
+
+impl Default for DaosConfig {
+    fn default() -> Self {
+        DaosConfig {
+            targets_per_engine: 8,
+            costs: DaosCosts::default(),
+        }
+    }
+}
+
+/// A storage target: a slice of an engine node's device.
+pub(crate) struct Target {
+    pub node: Rc<Node>,
+}
+
+pub(crate) struct KvObj {
+    pub entries: HashMap<String, Vec<u8>>,
+}
+
+pub(crate) struct ArrayObj {
+    pub data: crate::util::content::Content,
+    /// recorded creation class (informational; access uses the handle's)
+    #[allow(dead_code)]
+    pub class: ObjClass,
+}
+
+/// A DAOS container: its own object address space.
+pub struct Container {
+    pub label: String,
+    pub(crate) kvs: RefCell<HashMap<Oid, KvObj>>,
+    pub(crate) arrays: RefCell<HashMap<Oid, ArrayObj>>,
+    pub(crate) next_oid_lo: Cell<u64>,
+}
+
+/// A DAOS pool over all engine targets.
+pub struct Pool {
+    pub label: String,
+    pub(crate) containers: RefCell<HashMap<String, Rc<Container>>>,
+}
+
+/// The deployed DAOS system.
+pub struct Daos {
+    pub sim: Sim,
+    pub cluster: Rc<Cluster>,
+    pub config: DaosConfig,
+    pub(crate) targets: Vec<Target>,
+    pub(crate) pools: RefCell<HashMap<String, Rc<Pool>>>,
+    pub(crate) ops: Cell<u64>,
+}
+
+/// Client handle: caches pool/container connections like libdaos.
+pub struct DaosClient {
+    pub(crate) sys: Rc<Daos>,
+    pub(crate) node: Rc<Node>,
+    connected_pools: RefCell<HashMap<String, Rc<Pool>>>,
+    open_conts: RefCell<HashMap<(String, String), Rc<Container>>>,
+    /// pre-allocated OID range per container (batched alloc RPC)
+    oid_cache: RefCell<HashMap<String, (u64, u64)>>,
+    /// if true, all server/network costs are elided ("dummy libdaos",
+    /// Fig 4.30 — measures pure client-side library overhead)
+    pub dummy: bool,
+}
+
+impl Daos {
+    pub fn deploy(sim: &Sim, cluster: &Rc<Cluster>, config: DaosConfig) -> Rc<Daos> {
+        let mut targets = Vec::new();
+        for node in cluster.storage_nodes() {
+            for _ in 0..config.targets_per_engine {
+                targets.push(Target { node: node.clone() });
+            }
+        }
+        assert!(!targets.is_empty(), "daos needs storage nodes");
+        Rc::new(Daos {
+            sim: sim.clone(),
+            cluster: cluster.clone(),
+            config,
+            targets,
+            pools: RefCell::new(HashMap::new()),
+            ops: Cell::new(0),
+        })
+    }
+
+    /// Administrative pool creation (`dmg pool create`) — setup outside
+    /// the measured window.
+    pub fn create_pool(&self, label: &str) -> Rc<Pool> {
+        let pool = Rc::new(Pool {
+            label: label.to_string(),
+            containers: RefCell::new(HashMap::new()),
+        });
+        self.pools
+            .borrow_mut()
+            .insert(label.to_string(), pool.clone());
+        pool
+    }
+
+    pub fn client(self: &Rc<Self>, node: &Rc<Node>) -> DaosClient {
+        DaosClient {
+            sys: self.clone(),
+            node: node.clone(),
+            connected_pools: RefCell::new(HashMap::new()),
+            open_conts: RefCell::new(HashMap::new()),
+            oid_cache: RefCell::new(HashMap::new()),
+            dummy: false,
+        }
+    }
+
+    /// "dummy libdaos" client: all server/network costs elided (Fig 4.30).
+    pub fn dummy_client(self: &Rc<Self>, node: &Rc<Node>) -> DaosClient {
+        let mut c = self.client(node);
+        c.dummy = true;
+        c
+    }
+
+    pub fn total_ops(&self) -> u64 {
+        self.ops.get()
+    }
+
+    pub fn target_count(&self) -> usize {
+        self.targets.len()
+    }
+
+    /// Targets an object lands on for its class.
+    pub(crate) fn targets_for(&self, oid: Oid, class: ObjClass) -> Vec<usize> {
+        let n = self.targets.len();
+        let first = (oid.place() % n as u64) as usize;
+        let spread = |k: usize| -> Vec<usize> { (0..k.min(n)).map(|i| (first + i) % n).collect() };
+        match class {
+            ObjClass::S1 => spread(1),
+            ObjClass::S2 => spread(2),
+            ObjClass::Sx => spread(n),
+            ObjClass::Rp2 => spread(2),
+            ObjClass::Ec2p1 => spread(3),
+        }
+    }
+}
+
+impl DaosClient {
+    /// `daos_pool_connect`: one RPC; cached for the client lifetime.
+    pub async fn pool_connect(&self, label: &str) -> Result<Rc<Pool>, DaosError> {
+        if let Some(p) = self.connected_pools.borrow().get(label) {
+            return Ok(p.clone());
+        }
+        if !self.dummy {
+            self.sys.cluster.fabric.rpc_rtt(&self.sys.sim).await;
+            self.sys
+                .sim
+                .sleep(self.sys.config.costs.pool_connect)
+                .await;
+        }
+        let p = self
+            .sys
+            .pools
+            .borrow()
+            .get(label)
+            .cloned()
+            .ok_or(DaosError::NoSuchPool)?;
+        self.connected_pools
+            .borrow_mut()
+            .insert(label.to_string(), p.clone());
+        Ok(p)
+    }
+
+    /// `daos_cont_create_with_label`: atomic create-if-absent.
+    pub async fn cont_create_with_label(
+        &self,
+        pool: &Rc<Pool>,
+        label: &str,
+    ) -> Result<Rc<Container>, DaosError> {
+        if !self.dummy {
+            self.sys.cluster.fabric.rpc_rtt(&self.sys.sim).await;
+            self.sys.sim.sleep(self.sys.config.costs.cont_create).await;
+        }
+        let c = {
+            let mut conts = pool.containers.borrow_mut();
+            conts
+                .entry(label.to_string())
+                .or_insert_with(|| {
+                    Rc::new(Container {
+                        label: label.to_string(),
+                        kvs: RefCell::new(HashMap::new()),
+                        arrays: RefCell::new(HashMap::new()),
+                        next_oid_lo: Cell::new(1),
+                    })
+                })
+                .clone()
+        };
+        self.open_conts
+            .borrow_mut()
+            .insert((pool.label.clone(), label.to_string()), c.clone());
+        Ok(c)
+    }
+
+    /// `daos_cont_open`: cached after first open. `Ok(None)` if missing.
+    pub async fn cont_open(
+        &self,
+        pool: &Rc<Pool>,
+        label: &str,
+    ) -> Result<Option<Rc<Container>>, DaosError> {
+        let key = (pool.label.clone(), label.to_string());
+        if let Some(c) = self.open_conts.borrow().get(&key) {
+            return Ok(Some(c.clone()));
+        }
+        if !self.dummy {
+            self.sys.cluster.fabric.rpc_rtt(&self.sys.sim).await;
+            self.sys.sim.sleep(self.sys.config.costs.cont_open).await;
+        }
+        let c = pool.containers.borrow().get(label).cloned();
+        if let Some(ref c) = c {
+            self.open_conts.borrow_mut().insert(key, c.clone());
+        }
+        Ok(c)
+    }
+
+    /// `daos_cont_destroy`: removes a dataset wholesale (thesis §3.1
+    /// maintenance argument for container-per-dataset).
+    pub fn cont_destroy(&self, pool: &Rc<Pool>, label: &str) -> bool {
+        self.open_conts
+            .borrow_mut()
+            .remove(&(pool.label.clone(), label.to_string()));
+        pool.containers.borrow_mut().remove(label).is_some()
+    }
+
+    /// `daos_cont_alloc_oids`: unique OIDs, one RPC per batch of 1024.
+    pub async fn alloc_oid(&self, cont: &Rc<Container>) -> Oid {
+        const BATCH: u64 = 1024;
+        {
+            let mut cache = self.oid_cache.borrow_mut();
+            let slot = cache.entry(cont.label.clone()).or_insert((0, 0));
+            if slot.0 < slot.1 {
+                let lo = slot.0;
+                slot.0 += 1;
+                return Oid::new(1, lo);
+            }
+        }
+        if !self.dummy {
+            self.sys.cluster.fabric.rpc_rtt(&self.sys.sim).await;
+        }
+        let base = cont.next_oid_lo.get();
+        cont.next_oid_lo.set(base + BATCH);
+        let mut cache = self.oid_cache.borrow_mut();
+        let slot = cache.entry(cont.label.clone()).or_insert((0, 0));
+        *slot = (base + 1, base + BATCH);
+        Oid::new(1, base)
+    }
+
+    /// Charge a server-side op with `bytes` payload against target `t`.
+    pub(crate) async fn target_op(&self, t: usize, bytes: u64, write: bool) {
+        self.sys.ops.set(self.sys.ops.get() + 1);
+        let sim = &self.sys.sim;
+        sim.sleep(self.sys.config.costs.client_op).await;
+        if self.dummy {
+            return;
+        }
+        let node = &self.sys.targets[t].node;
+        let costs = &self.sys.config.costs;
+        let small = bytes <= costs.small_op_threshold;
+        if write {
+            self.sys
+                .cluster
+                .fabric
+                .xfer(sim, &self.node.nic, &node.nic, bytes)
+                .await;
+            node.cpu_serve(sim, costs.server_op).await;
+            if small {
+                // VOS WAL commit: log-structured, no block-write latency
+                node.dev().write_with_lat(sim, bytes, costs.wal_commit).await;
+            } else {
+                node.dev().write(sim, bytes).await;
+            }
+        } else {
+            self.sys.cluster.fabric.msg(sim).await;
+            node.cpu_serve(sim, costs.server_op).await;
+            if small {
+                // byte-addressable indexed extent read
+                node.dev()
+                    .read_with_lat(sim, bytes, costs.byte_read_lat)
+                    .await;
+            } else {
+                node.dev().read(sim, bytes).await;
+            }
+            self.sys
+                .cluster
+                .fabric
+                .xfer(sim, &node.nic, &self.node.nic, bytes)
+                .await;
+        }
+    }
+}
+
+/// DAOS error surface.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DaosError {
+    NoSuchPool,
+    NoSuchContainer,
+    NoSuchObject,
+}
+
+impl std::fmt::Display for DaosError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+impl std::error::Error for DaosError {}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::hw::profiles::{build_cluster, Testbed};
+
+    pub fn small() -> (Sim, Rc<Daos>, Rc<Cluster>) {
+        let sim = Sim::new();
+        let cluster = Rc::new(build_cluster(Testbed::NextGenIo, 2, 2, false, false));
+        let daos = Daos::deploy(&sim, &cluster, DaosConfig::default());
+        (sim, daos, cluster)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::small;
+    use super::*;
+
+    #[test]
+    fn deploy_targets() {
+        let (_s, d, _c) = small();
+        assert_eq!(d.target_count(), 16);
+    }
+
+    #[test]
+    fn placement_is_deterministic_and_spread() {
+        let (_s, d, _c) = small();
+        let a = d.targets_for(Oid::new(1, 7), ObjClass::S1);
+        let b = d.targets_for(Oid::new(1, 7), ObjClass::S1);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 1);
+        assert_eq!(d.targets_for(Oid::new(1, 7), ObjClass::Sx).len(), 16);
+        assert_eq!(d.targets_for(Oid::new(1, 7), ObjClass::Ec2p1).len(), 3);
+        let mut seen = std::collections::HashSet::new();
+        for lo in 0..64 {
+            seen.insert(d.targets_for(Oid::new(1, lo), ObjClass::S1)[0]);
+        }
+        assert!(seen.len() > 8, "placement should spread: {}", seen.len());
+    }
+
+    #[test]
+    fn pool_and_container_lifecycle() {
+        let (sim, d, c) = small();
+        d.create_pool("fdb");
+        let node = c.client_nodes().next().unwrap().clone();
+        let d2 = d.clone();
+        sim.spawn(async move {
+            let cli = d2.client(&node);
+            let pool = cli.pool_connect("fdb").await.unwrap();
+            assert!(cli.cont_open(&pool, "ds1").await.unwrap().is_none());
+            let cont = cli.cont_create_with_label(&pool, "ds1").await.unwrap();
+            assert_eq!(cont.label, "ds1");
+            // racing create returns the same container
+            let cont2 = cli.cont_create_with_label(&pool, "ds1").await.unwrap();
+            assert!(Rc::ptr_eq(&cont, &cont2));
+            assert!(cli.cont_destroy(&pool, "ds1"));
+            assert!(cli.cont_open(&pool, "ds1").await.unwrap().is_none());
+        });
+        sim.run();
+    }
+
+    #[test]
+    fn missing_pool_errors() {
+        let (sim, d, c) = small();
+        let node = c.client_nodes().next().unwrap().clone();
+        sim.spawn(async move {
+            let cli = d.client(&node);
+            match cli.pool_connect("nope").await {
+                Err(e) => assert_eq!(e, DaosError::NoSuchPool),
+                Ok(_) => panic!("expected NoSuchPool"),
+            }
+        });
+        sim.run();
+    }
+
+    #[test]
+    fn oid_alloc_unique_and_batched() {
+        let (sim, d, c) = small();
+        d.create_pool("p");
+        let node = c.client_nodes().next().unwrap().clone();
+        sim.spawn(async move {
+            let cli = d.client(&node);
+            let pool = cli.pool_connect("p").await.unwrap();
+            let cont = cli.cont_create_with_label(&pool, "c").await.unwrap();
+            let mut seen = std::collections::HashSet::new();
+            for _ in 0..3000 {
+                assert!(seen.insert(cli.alloc_oid(&cont).await));
+            }
+        });
+        sim.run();
+    }
+
+    #[test]
+    fn dummy_client_is_near_free() {
+        let (sim, d, c) = small();
+        d.create_pool("p");
+        let node = c.client_nodes().next().unwrap().clone();
+        sim.spawn(async move {
+            let cli = d.dummy_client(&node);
+            let pool = cli.pool_connect("p").await.unwrap();
+            let cont = cli.cont_create_with_label(&pool, "c").await.unwrap();
+            for _ in 0..10 {
+                cli.alloc_oid(&cont).await;
+            }
+        });
+        let end = sim.run();
+        // only client-op sleeps, far below any real network cost
+        assert!(end < SimTime::micros(100), "dummy end {end}");
+    }
+}

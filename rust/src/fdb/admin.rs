@@ -1,0 +1,123 @@
+//! FDB administrative operations (thesis §2.7: "management command-line
+//! tools"): dataset inventory, statistics, and wipe. Wipe semantics per
+//! backend follow the thesis' maintenance discussion — a DAOS dataset is
+//! one `cont_destroy`; RADOS deletes the namespace's objects; POSIX
+//! unlinks the dataset directory tree.
+
+use crate::fdb::key::Key;
+use crate::fdb::request::Request;
+use crate::fdb::{CatalogueBackend, Fdb, StoreBackend};
+
+/// Summary statistics for one dataset.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DatasetStats {
+    pub fields: u64,
+    pub bytes: u64,
+    pub collocations: usize,
+}
+
+impl Fdb {
+    /// Count indexed fields/bytes/collocations of a dataset.
+    pub async fn stats(&mut self, ds: &Key) -> DatasetStats {
+        let listed = self.list(ds, &Request::parse("").unwrap()).await;
+        let mut collocs = std::collections::BTreeSet::new();
+        let mut bytes = 0u64;
+        for (id, loc) in &listed {
+            bytes += loc.length();
+            if let Some(c) = id.project(&self.schema.collocation) {
+                collocs.insert(c.canonical());
+            }
+        }
+        DatasetStats {
+            fields: listed.len() as u64,
+            bytes,
+            collocations: collocs.len(),
+        }
+    }
+
+    /// Remove a dataset wholesale. Returns whether anything was removed.
+    ///
+    /// * DAOS: one `daos_cont_destroy` (the thesis' argument for the
+    ///   container-per-dataset design) + root-KV deregistration.
+    /// * Ceph/RADOS: delete every object in the dataset namespace +
+    ///   deregister from the root omap.
+    /// * POSIX: unlink all files in the dataset directory.
+    pub async fn wipe(&mut self, ds: &Key) -> bool {
+        match (&mut self.store, &mut self.catalogue) {
+            (StoreBackend::Daos(store), CatalogueBackend::Daos(cat)) => {
+                let removed = store.wipe_dataset(ds).await;
+                cat.deregister_dataset(ds).await;
+                removed
+            }
+            (StoreBackend::Rados(store), CatalogueBackend::Rados(cat)) => {
+                let n = store.wipe_dataset(ds).await;
+                cat.deregister_dataset(ds).await;
+                n > 0
+            }
+            (StoreBackend::Posix(store), CatalogueBackend::Posix(_)) => {
+                store.wipe_dataset(ds).await
+            }
+            _ => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::bench::scenario::{deploy, RedundancyOpt, SystemKind, SystemUnderTest};
+    use crate::fdb::schema::example_identifier;
+    use crate::fdb::setup;
+    use crate::hw::profiles::Testbed;
+
+    fn backends(kind: SystemKind) -> (crate::bench::scenario::Deployment, crate::fdb::Fdb) {
+        let dep = deploy(Testbed::Gcp, kind, 2, 2, RedundancyOpt::None);
+        let node = dep.client_nodes()[0].clone();
+        let fdb = match &dep.system {
+            SystemUnderTest::Lustre(fs) => setup::posix_fdb(&dep.sim, fs, &node, "/fdb"),
+            SystemUnderTest::Daos(d) => setup::daos_fdb(&dep.sim, d, &node, "fdb"),
+            SystemUnderTest::Ceph(c, pool) => setup::rados_fdb(&dep.sim, c, pool, &node),
+        };
+        (dep, fdb)
+    }
+
+    #[test]
+    fn stats_and_wipe_roundtrip_all_backends() {
+        for kind in [SystemKind::Lustre, SystemKind::Daos, SystemKind::Ceph] {
+            let (dep, mut fdb) = backends(kind);
+            dep.sim.spawn(async move {
+                for step in 1..=4u32 {
+                    let id = example_identifier().with("step", step.to_string());
+                    fdb.archive(&id, vec![7u8; 2048]).await.unwrap();
+                }
+                fdb.flush().await;
+                fdb.close().await;
+                let ds = example_identifier()
+                    .project(&fdb.schema.dataset.clone())
+                    .unwrap();
+                let stats = fdb.stats(&ds).await;
+                assert_eq!(stats.fields, 4, "{kind:?}");
+                assert_eq!(stats.bytes, 4 * 2048, "{kind:?}");
+                assert!(stats.collocations >= 1, "{kind:?}");
+                // wipe and verify emptiness
+                assert!(fdb.wipe(&ds).await, "{kind:?} wipe");
+                fdb.invalidate_preload(&ds);
+                let stats = fdb.stats(&ds).await;
+                assert_eq!(stats.fields, 0, "{kind:?} after wipe");
+            });
+            dep.sim.run();
+        }
+    }
+
+    #[test]
+    fn wipe_missing_dataset_is_false() {
+        let (dep, mut fdb) = backends(SystemKind::Daos);
+        dep.sim.spawn(async move {
+            let ds = example_identifier()
+                .with("date", "19990101")
+                .project(&fdb.schema.dataset.clone())
+                .unwrap();
+            assert!(!fdb.wipe(&ds).await);
+        });
+        dep.sim.run();
+    }
+}

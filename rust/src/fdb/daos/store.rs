@@ -1,0 +1,166 @@
+//! The FDB DAOS Store (thesis §3.1.1): a DAOS array per archived object,
+//! immediate persistence, no-op flush(), no daos_array_get_size on the
+//! read path (lengths ride in the location descriptors).
+
+use std::rc::Rc;
+
+use crate::daos::{Container, DaosClient, ObjClass, Oid, Pool};
+use crate::fdb::key::Key;
+use crate::fdb::location::FieldLocation;
+use crate::util::content::Bytes;
+
+pub struct DaosStore {
+    pub(crate) client: DaosClient,
+    pool_label: String,
+    /// object class for field arrays (default OC_S1; override for
+    /// sharding/redundancy experiments — Figs 4.10/4.27/4.28)
+    pub array_class: ObjClass,
+    /// hash-OID mode (thesis §3.1.2 future-work optimisation): array
+    /// OIDs derive from the identifier hash, letting retrieve() skip the
+    /// index lookup at the cost of a daos_array_get_size RPC
+    pub hash_oids: bool,
+    pool: Option<Rc<Pool>>,
+    cont_cache: std::collections::HashMap<String, Rc<Container>>,
+}
+
+/// The deterministic OID of an identifier in hash-OID mode (hi=5
+/// namespace avoids collision with allocator-assigned hi=1 OIDs).
+pub fn hashed_oid(id: &crate::fdb::key::Key) -> Oid {
+    Oid::new(5, crate::ceph::hash_name(&id.canonical()))
+}
+
+impl DaosStore {
+    pub fn new(client: DaosClient, pool_label: &str) -> DaosStore {
+        DaosStore {
+            client,
+            pool_label: pool_label.to_string(),
+            array_class: ObjClass::S1,
+            hash_oids: false,
+            pool: None,
+            cont_cache: std::collections::HashMap::new(),
+        }
+    }
+
+    async fn pool(&mut self) -> Rc<Pool> {
+        if self.pool.is_none() {
+            self.pool = Some(
+                self.client
+                    .pool_connect(&self.pool_label)
+                    .await
+                    .expect("daos pool must exist"),
+            );
+        }
+        self.pool.as_ref().unwrap().clone()
+    }
+
+    pub(crate) async fn dataset_cont(&mut self, ds: &Key) -> Rc<Container> {
+        let label = ds.canonical();
+        if let Some(c) = self.cont_cache.get(&label) {
+            return c.clone();
+        }
+        let pool = self.pool().await;
+        let cont = self
+            .client
+            .cont_create_with_label(&pool, &label)
+            .await
+            .expect("cont create");
+        self.cont_cache.insert(label, cont.clone());
+        cont
+    }
+
+    /// Store archive(): new array per object; durable and visible on
+    /// return. The collocation key does NOT affect placement (§3.1.1).
+    pub async fn archive(&mut self, ds: &Key, _colloc: &Key, data: Bytes) -> FieldLocation {
+        let cont = self.dataset_cont(ds).await;
+        let oid = self.client.alloc_oid(&cont).await;
+        let arr = self
+            .client
+            .array_open_with_attr(&cont, oid, self.array_class);
+        let length = data.len();
+        self.client.array_write_data(&arr, 0, data).await;
+        FieldLocation::DaosArray {
+            pool: self.pool_label.clone(),
+            cont: cont.label.clone(),
+            oid,
+            length,
+        }
+    }
+
+    /// Hash-OID archive: the array OID is a pure function of the full
+    /// identifier — no allocator round trips, and readers can reach the
+    /// data without consulting the index.
+    pub async fn archive_hashed(
+        &mut self,
+        ds: &Key,
+        id: &crate::fdb::key::Key,
+        data: Bytes,
+    ) -> FieldLocation {
+        let cont = self.dataset_cont(ds).await;
+        let oid = hashed_oid(id);
+        let arr = self
+            .client
+            .array_open_with_attr(&cont, oid, self.array_class);
+        let length = data.len();
+        self.client.array_write_data(&arr, 0, data).await;
+        FieldLocation::DaosArray {
+            pool: self.pool_label.clone(),
+            cont: cont.label.clone(),
+            oid,
+            length,
+        }
+    }
+
+    /// Hash-OID retrieve fast path: one daos_array_get_size RPC replaces
+    /// the axis-preload + index kv_get chain. `None` when absent.
+    pub async fn retrieve_hashed(
+        &mut self,
+        ds: &Key,
+        id: &crate::fdb::key::Key,
+    ) -> Option<FieldLocation> {
+        let label = ds.canonical();
+        let pool = self.pool().await;
+        let cont = self.client.cont_open(&pool, &label).await.ok()??;
+        let oid = hashed_oid(id);
+        let arr = self
+            .client
+            .array_open_with_attr(&cont, oid, self.array_class);
+        let length = self.client.array_get_size(&arr).await.ok()?;
+        Some(FieldLocation::DaosArray {
+            pool: self.pool_label.clone(),
+            cont: label,
+            oid,
+            length,
+        })
+    }
+
+    /// flush(): nothing to do — archive() persisted immediately.
+    pub async fn flush(&mut self) {}
+
+    /// Destroy the dataset container (one admin op — thesis §3.1).
+    pub async fn wipe_dataset(&mut self, ds: &Key) -> bool {
+        let pool = self.pool().await;
+        let label = ds.canonical();
+        self.cont_cache.remove(&label);
+        self.client.cont_destroy(&pool, &label)
+    }
+
+    /// Read the parts of a DAOS handle (array per field; no merging).
+    pub async fn read_parts(&mut self, cont_label: &str, parts: &[(Oid, u64)]) -> Bytes {
+        let pool = self.pool().await;
+        let cont = self
+            .client
+            .cont_open(&pool, cont_label)
+            .await
+            .expect("cont open")
+            .expect("container must exist");
+        let mut out = Bytes::new();
+        for &(oid, len) in parts {
+            let arr = self
+                .client
+                .array_open_with_attr(&cont, oid, self.array_class);
+            // no daos_array_get_size: length came from the descriptor
+            out.append(self.client.array_read(&arr, 0, len).await.expect("read"));
+        }
+        out
+    }
+}

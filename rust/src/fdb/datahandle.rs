@@ -1,0 +1,315 @@
+//! DataHandles: deferred readers returned by `retrieve()` (thesis
+//! §2.7.1). POSIX handles support **merging** — adjacent/sorted ranges of
+//! the same file coalesce so bulk reads become few large I/O ops. Object
+//! backends don't merge (one array/object per field — nothing to merge,
+//! §3.1.1), but multi-part handles still batch the read loop.
+
+use super::location::FieldLocation;
+use crate::daos::Oid;
+
+/// A deferred reader for one or more field locations.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DataHandle {
+    Posix {
+        path: String,
+        /// sorted (offset, length) ranges, coalesced where adjacent
+        ranges: Vec<(u64, u64)>,
+    },
+    Daos {
+        pool: String,
+        cont: String,
+        parts: Vec<(Oid, u64)>,
+    },
+    Rados {
+        pool: String,
+        ns: String,
+        parts: Vec<(String, u64, u64)>,
+    },
+    S3 {
+        bucket: String,
+        parts: Vec<(String, u64)>,
+    },
+    Null {
+        length: u64,
+    },
+}
+
+impl DataHandle {
+    pub fn from_location(loc: &FieldLocation) -> DataHandle {
+        match loc {
+            FieldLocation::PosixFile {
+                path,
+                offset,
+                length,
+            } => DataHandle::Posix {
+                path: path.clone(),
+                ranges: vec![(*offset, *length)],
+            },
+            FieldLocation::DaosArray {
+                pool,
+                cont,
+                oid,
+                length,
+            } => DataHandle::Daos {
+                pool: pool.clone(),
+                cont: cont.clone(),
+                parts: vec![(*oid, *length)],
+            },
+            FieldLocation::RadosObj {
+                pool,
+                ns,
+                name,
+                offset,
+                length,
+            } => DataHandle::Rados {
+                pool: pool.clone(),
+                ns: ns.clone(),
+                parts: vec![(name.clone(), *offset, *length)],
+            },
+            FieldLocation::S3Obj {
+                bucket,
+                key,
+                length,
+            } => DataHandle::S3 {
+                bucket: bucket.clone(),
+                parts: vec![(key.clone(), *length)],
+            },
+            FieldLocation::Null { length } => DataHandle::Null { length: *length },
+        }
+    }
+
+    /// Total bytes this handle will deliver.
+    pub fn total_len(&self) -> u64 {
+        match self {
+            DataHandle::Posix { ranges, .. } => ranges.iter().map(|(_, l)| l).sum(),
+            DataHandle::Daos { parts, .. } => parts.iter().map(|(_, l)| l).sum(),
+            DataHandle::Rados { parts, .. } => parts.iter().map(|(_, _, l)| l).sum(),
+            DataHandle::S3 { parts, .. } => parts.iter().map(|(_, l)| l).sum(),
+            DataHandle::Null { length } => *length,
+        }
+    }
+
+    /// Number of I/O operations reading this handle will issue.
+    pub fn io_ops(&self) -> usize {
+        match self {
+            DataHandle::Posix { ranges, .. } => ranges.len(),
+            DataHandle::Daos { parts, .. } => parts.len(),
+            DataHandle::Rados { parts, .. } => parts.len(),
+            DataHandle::S3 { parts, .. } => parts.len(),
+            DataHandle::Null { .. } => 0,
+        }
+    }
+
+    /// Try to merge `other` into `self`. Returns `other` back on
+    /// incompatibility (different backend/file).
+    pub fn merge(&mut self, other: DataHandle) -> Option<DataHandle> {
+        match (self, other) {
+            (
+                DataHandle::Posix { path, ranges },
+                DataHandle::Posix {
+                    path: p2,
+                    ranges: r2,
+                },
+            ) if *path == p2 => {
+                ranges.extend(r2);
+                ranges.sort_unstable();
+                // coalesce adjacent/overlapping
+                let mut merged: Vec<(u64, u64)> = Vec::with_capacity(ranges.len());
+                for &(off, len) in ranges.iter() {
+                    match merged.last_mut() {
+                        Some((moff, mlen)) if *moff + *mlen >= off => {
+                            let end = (off + len).max(*moff + *mlen);
+                            *mlen = end - *moff;
+                        }
+                        _ => merged.push((off, len)),
+                    }
+                }
+                *ranges = merged;
+                None
+            }
+            (
+                DataHandle::Daos { pool, cont, parts },
+                DataHandle::Daos {
+                    pool: p2,
+                    cont: c2,
+                    parts: q2,
+                },
+            ) if *pool == p2 && *cont == c2 => {
+                parts.extend(q2);
+                None
+            }
+            (
+                DataHandle::Rados { pool, ns, parts },
+                DataHandle::Rados {
+                    pool: p2,
+                    ns: n2,
+                    parts: q2,
+                },
+            ) if *pool == p2 && *ns == n2 => {
+                parts.extend(q2);
+                None
+            }
+            (
+                DataHandle::S3 { bucket, parts },
+                DataHandle::S3 {
+                    bucket: b2,
+                    parts: q2,
+                },
+            ) if *bucket == b2 => {
+                parts.extend(q2);
+                None
+            }
+            (DataHandle::Null { length }, DataHandle::Null { length: l2 }) => {
+                *length += l2;
+                None
+            }
+            (_, other) => Some(other),
+        }
+    }
+
+    /// Merge a batch of handles into as few as possible (preserving
+    /// first-seen order of incompatible groups). Ranges are accumulated
+    /// per group and coalesced once at the end (perf: avoids re-sorting
+    /// per merge — O(n log n) total instead of O(n² log n)).
+    pub fn merge_all(handles: Vec<DataHandle>) -> Vec<DataHandle> {
+        let mut out: Vec<DataHandle> = Vec::new();
+        'next: for h in handles {
+            let mut h = h;
+            for existing in &mut out {
+                match existing.absorb(h) {
+                    None => continue 'next,
+                    Some(back) => h = back,
+                }
+            }
+            out.push(h);
+        }
+        for h in &mut out {
+            h.normalize();
+        }
+        out
+    }
+
+    /// Like [`DataHandle::merge`] but defers range coalescing (used by
+    /// `merge_all`; caller must `normalize()` afterwards).
+    fn absorb(&mut self, other: DataHandle) -> Option<DataHandle> {
+        match (self, other) {
+            (
+                DataHandle::Posix { path, ranges },
+                DataHandle::Posix {
+                    path: p2,
+                    ranges: r2,
+                },
+            ) if *path == p2 => {
+                ranges.extend(r2);
+                None
+            }
+            (a, b) => a.merge(b),
+        }
+    }
+
+    /// Sort + coalesce POSIX ranges (idempotent).
+    pub fn normalize(&mut self) {
+        if let DataHandle::Posix { ranges, .. } = self {
+            ranges.sort_unstable();
+            let mut merged: Vec<(u64, u64)> = Vec::with_capacity(ranges.len());
+            for &(off, len) in ranges.iter() {
+                match merged.last_mut() {
+                    Some((moff, mlen)) if *moff + *mlen >= off => {
+                        let end = (off + len).max(*moff + *mlen);
+                        *mlen = end - *moff;
+                    }
+                    _ => merged.push((off, len)),
+                }
+            }
+            *ranges = merged;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn posix(path: &str, off: u64, len: u64) -> DataHandle {
+        DataHandle::from_location(&FieldLocation::PosixFile {
+            path: path.into(),
+            offset: off,
+            length: len,
+        })
+    }
+
+    #[test]
+    fn posix_adjacent_ranges_coalesce() {
+        let mut a = posix("/d/f", 0, 100);
+        assert!(a.merge(posix("/d/f", 100, 50)).is_none());
+        match &a {
+            DataHandle::Posix { ranges, .. } => assert_eq!(ranges, &vec![(0, 150)]),
+            _ => unreachable!(),
+        }
+        assert_eq!(a.io_ops(), 1);
+        assert_eq!(a.total_len(), 150);
+    }
+
+    #[test]
+    fn posix_sparse_ranges_stay_separate() {
+        let mut a = posix("/d/f", 0, 100);
+        a.merge(posix("/d/f", 500, 100));
+        assert_eq!(a.io_ops(), 2);
+    }
+
+    #[test]
+    fn posix_out_of_order_sorted() {
+        let mut a = posix("/d/f", 500, 10);
+        a.merge(posix("/d/f", 0, 10));
+        match &a {
+            DataHandle::Posix { ranges, .. } => {
+                assert_eq!(ranges, &vec![(0, 10), (500, 10)])
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn different_files_do_not_merge() {
+        let mut a = posix("/d/f1", 0, 10);
+        let back = a.merge(posix("/d/f2", 0, 10));
+        assert!(back.is_some());
+    }
+
+    #[test]
+    fn merge_all_groups_by_file() {
+        let hs = vec![
+            posix("/d/a", 0, 10),
+            posix("/d/b", 0, 10),
+            posix("/d/a", 10, 10),
+            posix("/d/b", 20, 10),
+        ];
+        let merged = DataHandle::merge_all(hs);
+        assert_eq!(merged.len(), 2);
+        assert_eq!(merged[0].io_ops(), 1); // /d/a coalesced 0..20
+        assert_eq!(merged[1].io_ops(), 2); // /d/b sparse
+    }
+
+    #[test]
+    fn daos_parts_concatenate() {
+        let l1 = FieldLocation::DaosArray {
+            pool: "p".into(),
+            cont: "c".into(),
+            oid: Oid::new(1, 1),
+            length: 5,
+        };
+        let l2 = FieldLocation::DaosArray {
+            pool: "p".into(),
+            cont: "c".into(),
+            oid: Oid::new(1, 2),
+            length: 6,
+        };
+        let merged = DataHandle::merge_all(vec![
+            DataHandle::from_location(&l1),
+            DataHandle::from_location(&l2),
+        ]);
+        assert_eq!(merged.len(), 1);
+        assert_eq!(merged[0].total_len(), 11);
+        assert_eq!(merged[0].io_ops(), 2); // no real merge possible (§3.1.1)
+    }
+}

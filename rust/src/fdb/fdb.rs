@@ -1,0 +1,309 @@
+//! The top-level FDB API (thesis §2.7): `archive() / flush() /
+//! retrieve() / list()` plus `axes()` and `close()`, dispatching to a
+//! Store and a Catalogue backend, with per-op-class trace accounting
+//! that feeds the profiling figures.
+
+use crate::fdb::datahandle::DataHandle;
+use crate::fdb::key::Key;
+use crate::fdb::location::FieldLocation;
+use crate::fdb::request::Request;
+use crate::fdb::schema::Schema;
+use crate::sim::exec::Sim;
+use crate::sim::trace::{OpClass, Trace};
+
+use super::daos::catalogue::DaosCatalogue;
+use super::daos::store::DaosStore;
+use super::posix::catalogue::PosixCatalogue;
+use super::posix::store::PosixStore;
+use super::rados::catalogue::RadosCatalogue;
+use super::rados::store::RadosStore;
+use super::s3::store::S3Store;
+
+/// Store backend dispatch.
+pub enum StoreBackend {
+    Posix(PosixStore),
+    Daos(DaosStore),
+    Rados(RadosStore),
+    S3(S3Store),
+    /// data sink with zero cost — client-overhead experiments (Fig 4.30)
+    Null,
+}
+
+/// Catalogue backend dispatch.
+pub enum CatalogueBackend {
+    Posix(PosixCatalogue),
+    Daos(DaosCatalogue),
+    Rados(RadosCatalogue),
+    /// in-memory catalogue (no persistence) — used with Null stores
+    Null(std::collections::HashMap<String, FieldLocation>),
+}
+
+/// One FDB instance per simulated process (like linking libfdb).
+pub struct Fdb {
+    pub schema: Schema,
+    pub store: StoreBackend,
+    pub catalogue: CatalogueBackend,
+    pub trace: Trace,
+    sim: Sim,
+}
+
+impl Fdb {
+    pub fn new(
+        sim: &Sim,
+        schema: Schema,
+        store: StoreBackend,
+        catalogue: CatalogueBackend,
+    ) -> Fdb {
+        Fdb {
+            schema,
+            store,
+            catalogue,
+            trace: Trace::new(),
+            sim: sim.clone(),
+        }
+    }
+
+    /// Attach a shared trace collector (benchmark profiling).
+    pub fn with_trace(mut self, trace: Trace) -> Fdb {
+        self.trace = trace;
+        self
+    }
+
+    /// FDB archive(): Store archive then Catalogue archive (§2.7.1).
+    pub async fn archive(
+        &mut self,
+        id: &Key,
+        data: impl Into<crate::util::content::Bytes>,
+    ) -> Result<(), super::FdbError> {
+        let data: crate::util::content::Bytes = data.into();
+        let (ds, colloc, elem) = self.schema.split(id)?;
+        let t0 = self.sim.now();
+        let dlen = data.len();
+        let loc = match &mut self.store {
+            StoreBackend::Posix(s) => s.archive(&ds, &colloc, data).await,
+            StoreBackend::Daos(s) if s.hash_oids => s.archive_hashed(&ds, id, data).await,
+            StoreBackend::Daos(s) => s.archive(&ds, &colloc, data).await,
+            StoreBackend::Rados(s) => s.archive(&ds, &colloc, data).await,
+            StoreBackend::S3(s) => s.archive(&ds, &colloc, data).await,
+            StoreBackend::Null => FieldLocation::Null { length: dlen },
+        };
+        let lock1 = self.take_lock_time();
+        self.trace
+            .record(OpClass::DataWrite, self.sim.now() - t0 - lock1);
+        let t1 = self.sim.now();
+        match &mut self.catalogue {
+            CatalogueBackend::Posix(c) => c.archive(&ds, &colloc, &elem, &loc).await,
+            CatalogueBackend::Daos(c) => c.archive(&ds, &colloc, &elem, &loc).await,
+            CatalogueBackend::Rados(c) => c.archive(&ds, &colloc, &elem, &loc).await,
+            CatalogueBackend::Null(map) => {
+                map.insert(id.canonical(), loc.clone());
+            }
+        }
+        let lock2 = self.take_lock_time();
+        self.trace
+            .record(OpClass::IndexWrite, self.sim.now() - t1 - lock2);
+        if lock1 + lock2 > crate::sim::time::SimTime::ZERO {
+            self.trace.record(OpClass::Lock, lock1 + lock2);
+        }
+        Ok(())
+    }
+
+    /// FDB flush(): Store flush then Catalogue flush (§2.7.1).
+    pub async fn flush(&mut self) {
+        let t0 = self.sim.now();
+        match &mut self.store {
+            StoreBackend::Posix(s) => s.flush().await,
+            StoreBackend::Daos(s) => s.flush().await,
+            StoreBackend::Rados(s) => s.flush().await,
+            StoreBackend::S3(s) => s.flush().await,
+            StoreBackend::Null => {}
+        }
+        match &mut self.catalogue {
+            CatalogueBackend::Posix(c) => c.flush().await,
+            CatalogueBackend::Daos(c) => c.flush().await,
+            CatalogueBackend::Rados(c) => c.flush().await,
+            CatalogueBackend::Null(_) => {}
+        }
+        let lock = self.take_lock_time();
+        self.trace
+            .record(OpClass::Flush, self.sim.now() - t0 - lock);
+        if lock > crate::sim::time::SimTime::ZERO {
+            self.trace.record(OpClass::Lock, lock);
+        }
+    }
+
+    /// Catalogue close() at end of producer lifetime (§2.7.2).
+    pub async fn close(&mut self) {
+        let t0 = self.sim.now();
+        match &mut self.catalogue {
+            CatalogueBackend::Posix(c) => c.close().await,
+            CatalogueBackend::Daos(c) => c.close().await,
+            CatalogueBackend::Rados(c) => c.close().await,
+            CatalogueBackend::Null(_) => {}
+        }
+        let lock = self.take_lock_time();
+        self.trace
+            .record(OpClass::Flush, self.sim.now() - t0 - lock);
+        if lock > crate::sim::time::SimTime::ZERO {
+            self.trace.record(OpClass::Lock, lock);
+        }
+    }
+
+    /// FDB retrieve() for one fully-specified identifier.
+    pub async fn retrieve(&mut self, id: &Key) -> Result<Option<DataHandle>, super::FdbError> {
+        let (ds, colloc, elem) = self.schema.split(id)?;
+        let t0 = self.sim.now();
+        // hash-OID fast path (thesis §3.1.2 optimisation): bypass the
+        // Catalogue entirely for fully-specified identifiers
+        if let StoreBackend::Daos(s) = &mut self.store {
+            if s.hash_oids {
+                let loc = s.retrieve_hashed(&ds, id).await;
+                self.trace
+                    .record(OpClass::IndexRead, self.sim.now() - t0);
+                return Ok(loc.map(|l| DataHandle::from_location(&l)));
+            }
+        }
+        let loc = match &mut self.catalogue {
+            CatalogueBackend::Posix(c) => c.retrieve(&ds, &colloc, &elem).await,
+            CatalogueBackend::Daos(c) => c.retrieve(&ds, &colloc, &elem).await,
+            CatalogueBackend::Rados(c) => c.retrieve(&ds, &colloc, &elem).await,
+            CatalogueBackend::Null(map) => map.get(&id.canonical()).cloned(),
+        };
+        let lock = self.take_lock_time();
+        self.trace
+            .record(OpClass::IndexRead, self.sim.now() - t0 - lock);
+        if lock > crate::sim::time::SimTime::ZERO {
+            self.trace.record(OpClass::Lock, lock);
+        }
+        // not finding a field is NOT an error (cache use-case, §2.7.1)
+        Ok(loc.map(|l| DataHandle::from_location(&l)))
+    }
+
+    /// FDB retrieve() for a (possibly multi-valued) request: expands via
+    /// axis(), retrieves every identifier, merges the handles.
+    pub async fn retrieve_request(
+        &mut self,
+        request: &Request,
+    ) -> Result<Vec<DataHandle>, super::FdbError> {
+        let mut request = request.clone();
+        // expand wildcards from the axes
+        let wildcards = request.wildcards();
+        if !wildcards.is_empty() {
+            // need dataset+colloc keys from the fixed part
+            let fixed = request.fixed_key();
+            let ds = fixed
+                .project(&self.schema.dataset)
+                .ok_or(super::FdbError::UnderspecifiedRequest)?;
+            let colloc = fixed
+                .project(&self.schema.collocation)
+                .ok_or(super::FdbError::UnderspecifiedRequest)?;
+            for dim in wildcards {
+                let vals = self.axes(&ds, &colloc, &dim).await;
+                request.bind(&dim, vals);
+            }
+        }
+        let mut handles = Vec::new();
+        for id in request.expand() {
+            if let Some(h) = self.retrieve(&id).await? {
+                handles.push(h);
+            }
+        }
+        Ok(DataHandle::merge_all(handles))
+    }
+
+    /// Catalogue axis() values for one element dimension.
+    pub async fn axes(&mut self, ds: &Key, colloc: &Key, dim: &str) -> Vec<String> {
+        let t0 = self.sim.now();
+        let out = match &mut self.catalogue {
+            CatalogueBackend::Posix(c) => c.axis(ds, colloc, dim).await,
+            CatalogueBackend::Daos(c) => c.axis(ds, colloc, dim).await,
+            CatalogueBackend::Rados(c) => c.axis(ds, colloc, dim).await,
+            CatalogueBackend::Null(_) => Vec::new(),
+        };
+        self.trace.record(OpClass::IndexRead, self.sim.now() - t0);
+        out
+    }
+
+    /// FDB list(): all indexed identifiers matching a partial request.
+    pub async fn list(&mut self, ds: &Key, request: &Request) -> Vec<(Key, FieldLocation)> {
+        let t0 = self.sim.now();
+        let out = match &mut self.catalogue {
+            CatalogueBackend::Posix(c) => c.list(ds, request).await,
+            CatalogueBackend::Daos(c) => c.list(ds, request).await,
+            CatalogueBackend::Rados(c) => c.list(ds, request).await,
+            CatalogueBackend::Null(map) => map
+                .iter()
+                .filter_map(|(k, v)| {
+                    let key = Key::parse(k).ok()?;
+                    request.matches(&key).then(|| (key, v.clone()))
+                })
+                .collect(),
+        };
+        let lock = self.take_lock_time();
+        self.trace
+            .record(OpClass::IndexRead, self.sim.now() - t0 - lock);
+        if lock > crate::sim::time::SimTime::ZERO {
+            self.trace.record(OpClass::Lock, lock);
+        }
+        out
+    }
+
+    /// Drop reader-side caches so later flushes become visible.
+    pub fn invalidate_preload(&mut self, ds: &Key) {
+        match &mut self.catalogue {
+            CatalogueBackend::Posix(c) => c.invalidate_preload(ds),
+            CatalogueBackend::Daos(c) => c.invalidate_preload(ds),
+            CatalogueBackend::Rados(c) => c.invalidate_preload(ds),
+            CatalogueBackend::Null(_) => {}
+        }
+    }
+
+    /// Read a handle's bytes through the Store.
+    pub async fn read(&mut self, handle: &DataHandle) -> crate::util::content::Bytes {
+        let t0 = self.sim.now();
+        let out = match (&mut self.store, handle) {
+            (StoreBackend::Posix(s), DataHandle::Posix { path, ranges }) => {
+                s.read_ranges(path, ranges).await
+            }
+            (StoreBackend::Daos(s), DataHandle::Daos { cont, parts, .. }) => {
+                s.read_parts(cont, parts).await
+            }
+            (StoreBackend::Rados(s), DataHandle::Rados { pool, ns, parts }) => {
+                s.read_parts(pool, ns, parts).await
+            }
+            (StoreBackend::S3(s), DataHandle::S3 { bucket, parts }) => {
+                s.read_parts(bucket, parts).await
+            }
+            (StoreBackend::Null, DataHandle::Null { length }) => {
+                crate::util::content::Bytes::virt(*length, 0)
+            }
+            _ => panic!("DataHandle backend mismatch"),
+        };
+        let lock = self.take_lock_time();
+        self.trace
+            .record(OpClass::DataRead, self.sim.now() - t0 - lock);
+        if lock > crate::sim::time::SimTime::ZERO {
+            self.trace.record(OpClass::Lock, lock);
+        }
+        out
+    }
+
+    fn take_lock_time(&self) -> crate::sim::time::SimTime {
+        match &self.store {
+            StoreBackend::Posix(s) => {
+                let mut t = s.take_lock_time();
+                if let CatalogueBackend::Posix(c) = &self.catalogue {
+                    t += c.client.take_lock_time();
+                }
+                t
+            }
+            _ => {
+                if let CatalogueBackend::Posix(c) = &self.catalogue {
+                    c.client.take_lock_time()
+                } else {
+                    crate::sim::time::SimTime::ZERO
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! Metadata keys: the scientifically-meaningful identifiers of the FDB.
+//!
+//! A [`Key`] is an ordered set of `dimension=value` pairs (thesis
+//! Listing 2.1). Identifiers are *full* keys naming exactly one object;
+//! the schema splits them into dataset / collocation / element sub-keys.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// An ordered `dim=value` map with a canonical textual form.
+#[derive(Clone, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Key(pub BTreeMap<String, String>);
+
+impl Key {
+    pub fn new() -> Key {
+        Key::default()
+    }
+
+    /// Build from `("dim", "value")` pairs.
+    pub fn of(pairs: &[(&str, &str)]) -> Key {
+        Key(pairs
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect())
+    }
+
+    /// Parse the canonical form `a=1,b=2`. Whitespace tolerated.
+    pub fn parse(s: &str) -> Result<Key, String> {
+        let mut map = BTreeMap::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| format!("bad key component `{part}`"))?;
+            map.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(Key(map))
+    }
+
+    pub fn get(&self, dim: &str) -> Option<&str> {
+        self.0.get(dim).map(|s| s.as_str())
+    }
+
+    pub fn set(&mut self, dim: &str, value: impl Into<String>) {
+        self.0.insert(dim.to_string(), value.into());
+    }
+
+    pub fn with(mut self, dim: &str, value: impl Into<String>) -> Key {
+        self.set(dim, value);
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    pub fn dims(&self) -> impl Iterator<Item = &str> {
+        self.0.keys().map(|s| s.as_str())
+    }
+
+    /// Canonical text: dims in lexicographic order, `a=1,b=2`.
+    pub fn canonical(&self) -> String {
+        let mut out = String::new();
+        for (i, (k, v)) in self.0.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(k);
+            out.push('=');
+            out.push_str(v);
+        }
+        out
+    }
+
+    /// Sub-key projection over `dims`; `None` if any dim is missing.
+    pub fn project(&self, dims: &[String]) -> Option<Key> {
+        let mut out = BTreeMap::new();
+        for d in dims {
+            out.insert(d.clone(), self.0.get(d)?.clone());
+        }
+        Some(Key(out))
+    }
+
+    /// Does `self` (a partial key) match `other` (a full key)?
+    /// Every dim present in `self` must match exactly in `other`.
+    pub fn matches(&self, other: &Key) -> bool {
+        self.0
+            .iter()
+            .all(|(k, v)| other.0.get(k).map(|ov| ov == v).unwrap_or(false))
+    }
+
+    /// Merge: `other`'s dims override/extend `self`'s.
+    pub fn merged(&self, other: &Key) -> Key {
+        let mut m = self.0.clone();
+        for (k, v) in &other.0 {
+            m.insert(k.clone(), v.clone());
+        }
+        Key(m)
+    }
+}
+
+impl fmt::Display for Key {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.canonical())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_is_sorted_and_stable() {
+        let k = Key::of(&[("stream", "oper"), ("class", "od"), ("date", "20231201")]);
+        assert_eq!(k.canonical(), "class=od,date=20231201,stream=oper");
+        let re = Key::parse(&k.canonical()).unwrap();
+        assert_eq!(k, re);
+    }
+
+    #[test]
+    fn parse_tolerates_whitespace() {
+        let k = Key::parse(" a = 1 , b = 2 ").unwrap();
+        assert_eq!(k.get("a"), Some("1"));
+        assert_eq!(k.get("b"), Some("2"));
+    }
+
+    #[test]
+    fn parse_rejects_bad_component() {
+        assert!(Key::parse("novalue").is_err());
+    }
+
+    #[test]
+    fn project_full_and_missing() {
+        let k = Key::of(&[("a", "1"), ("b", "2"), ("c", "3")]);
+        let p = k
+            .project(&["a".to_string(), "c".to_string()])
+            .unwrap();
+        assert_eq!(p.canonical(), "a=1,c=3");
+        assert!(k.project(&["z".to_string()]).is_none());
+    }
+
+    #[test]
+    fn partial_match() {
+        let full = Key::of(&[("step", "1"), ("param", "v"), ("levelist", "10")]);
+        assert!(Key::of(&[("step", "1")]).matches(&full));
+        assert!(Key::new().matches(&full));
+        assert!(!Key::of(&[("step", "2")]).matches(&full));
+        assert!(!Key::of(&[("absent", "x")]).matches(&full));
+    }
+
+    #[test]
+    fn merged_overrides() {
+        let a = Key::of(&[("x", "1"), ("y", "2")]);
+        let b = Key::of(&[("y", "9"), ("z", "3")]);
+        assert_eq!(a.merged(&b).canonical(), "x=1,y=9,z=3");
+    }
+}

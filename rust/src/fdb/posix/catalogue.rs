@@ -1,0 +1,528 @@
+//! The FDB POSIX I/O Catalogue (thesis §2.7.2): in-memory partial + full
+//! B-tree indexes with axes and URI stores, persisted to per-process
+//! index/sub-TOC files on flush()/close(), bound together by the shared
+//! TOC file, with masking and TOC pre-loading on the read side.
+
+use std::collections::{BTreeMap, HashMap};
+
+use super::index;
+use super::store::sanitize;
+use super::toc::{Axes, IndexRef, TocRecord};
+use crate::fdb::key::Key;
+use crate::fdb::location::FieldLocation;
+use crate::fdb::request::Request;
+use crate::fdb::schema::Schema;
+use crate::lustre::{Fd, FsError, LustreClient, StripeSpec};
+
+/// One collocation's live (in-memory) indexing state for a writer.
+struct CollocState {
+    /// entries since the last flush: elem canonical → (uri_id, off, len)
+    partial: BTreeMap<String, (u32, u64, u64)>,
+    /// all entries of this process lifetime
+    full: BTreeMap<String, (u32, u64, u64)>,
+    axes_partial: Axes,
+    axes_full: Axes,
+    /// URI store: uri string → id, plus the ordered table
+    uri_ids: HashMap<String, u32>,
+    uris: Vec<String>,
+    partial_fd: Fd,
+    full_fd: Fd,
+}
+
+/// Per-dataset writer-side state.
+struct DatasetState {
+    dir: String,
+    collocs: BTreeMap<String, CollocState>,
+    subtoc_fd: Option<Fd>,
+    toc_fd: Option<Fd>,
+}
+
+/// Reader-side pre-loaded state for one dataset (thesis "TOC pre-loading").
+struct Preloaded {
+    /// newest-first index references (full indexes before their masked
+    /// sub-TOC partials, per reverse TOC order)
+    refs: Vec<IndexRef>,
+}
+
+pub struct PosixCatalogue {
+    pub(crate) client: LustreClient,
+    root: String,
+    schema: Schema,
+    write_state: HashMap<String, DatasetState>,
+    preloaded: HashMap<String, Preloaded>,
+}
+
+impl PosixCatalogue {
+    pub fn new(client: LustreClient, root: &str, schema: Schema) -> PosixCatalogue {
+        PosixCatalogue {
+            client,
+            root: root.to_string(),
+            schema,
+            write_state: HashMap::new(),
+            preloaded: HashMap::new(),
+        }
+    }
+
+    fn ds_dir(&self, ds: &Key) -> String {
+        format!("{}/{}", self.root, ds.canonical())
+    }
+
+    fn toc_path(dir: &str) -> String {
+        format!("{dir}/toc")
+    }
+
+    /// Dataset init: mkdir, TOC creation + Init record, schema copy.
+    /// All steps tolerate racing writers (thesis consistency mechanisms).
+    async fn ensure_dataset(&mut self, ds: &Key) -> &mut DatasetState {
+        let dsc = ds.canonical();
+        if !self.write_state.contains_key(&dsc) {
+            let dir = self.ds_dir(ds);
+            match self.client.mkdir(&dir).await {
+                Ok(()) | Err(FsError::AlreadyExists) => {}
+                Err(e) => panic!("mkdir {dir}: {e}"),
+            }
+            let toc_path = Self::toc_path(&dir);
+            let toc_fd = match self.client.create(&toc_path, StripeSpec::default_layout()).await
+            {
+                Ok(fd) => {
+                    // we won the race: write the Init header + schema copy
+                    let rec = TocRecord::Init { dataset: dsc.clone() }.encode();
+                    self.client.write(&fd, &rec).await.unwrap();
+                    self.client.fdatasync(&fd).await.unwrap();
+                    let schema_path = format!("{dir}/schema");
+                    if let Ok(sfd) = self
+                        .client
+                        .create(&schema_path, StripeSpec::default_layout())
+                        .await
+                    {
+                        let text = self.schema.to_text();
+                        self.client.write(&sfd, text.as_bytes()).await.unwrap();
+                        self.client.fdatasync(&sfd).await.unwrap();
+                    }
+                    fd
+                }
+                Err(FsError::AlreadyExists) => self
+                    .client
+                    .open_append(&toc_path)
+                    .await
+                    .unwrap()
+                    .expect("toc exists"),
+                Err(e) => panic!("create toc: {e}"),
+            };
+            self.write_state.insert(
+                dsc.clone(),
+                DatasetState {
+                    dir,
+                    collocs: BTreeMap::new(),
+                    subtoc_fd: None,
+                    toc_fd: Some(toc_fd),
+                },
+            );
+        }
+        self.write_state.get_mut(&dsc).unwrap()
+    }
+
+    /// Catalogue archive(): pure in-memory indexing (no I/O beyond
+    /// first-call file creation).
+    pub async fn archive(&mut self, ds: &Key, colloc: &Key, elem: &Key, loc: &FieldLocation) {
+        let client_id = self.client.id;
+        let state = self.ensure_dataset(ds).await;
+        let dir = state.dir.clone();
+        let cc = colloc.canonical();
+        if !state.collocs.contains_key(&cc) {
+            // create the pair of per-process index files
+            let base = format!("{dir}/{}.{}", sanitize(&cc), client_id);
+            let partial_fd = self
+                .client
+                .create(&format!("{base}.pindex"), StripeSpec::default_layout())
+                .await
+                .expect("unique partial index file");
+            let full_fd = self
+                .client
+                .create(&format!("{base}.findex"), StripeSpec::default_layout())
+                .await
+                .expect("unique full index file");
+            let state = self.write_state.get_mut(&ds.canonical()).unwrap();
+            state.collocs.insert(
+                cc.clone(),
+                CollocState {
+                    partial: BTreeMap::new(),
+                    full: BTreeMap::new(),
+                    axes_partial: Axes::new(),
+                    axes_full: Axes::new(),
+                    uri_ids: HashMap::new(),
+                    uris: Vec::new(),
+                    partial_fd,
+                    full_fd,
+                },
+            );
+        }
+        let state = self.write_state.get_mut(&ds.canonical()).unwrap();
+        let cs = state.collocs.get_mut(&cc).unwrap();
+        // URI store: split the location into a file root + (offset, len)
+        let (uri_root, off, len) = match loc {
+            FieldLocation::PosixFile {
+                path,
+                offset,
+                length,
+            } => (format!("posix://{path}"), *offset, *length),
+            other => (other.to_uri(), 0, other.length()),
+        };
+        let next_id = cs.uris.len() as u32;
+        let uri_id = *cs.uri_ids.entry(uri_root.clone()).or_insert_with(|| {
+            cs.uris.push(uri_root);
+            next_id
+        });
+        let ec = elem.canonical();
+        cs.partial.insert(ec.clone(), (uri_id, off, len));
+        cs.full.insert(ec, (uri_id, off, len));
+        cs.axes_partial.insert_key(elem);
+        cs.axes_full.insert_key(elem);
+    }
+
+    /// Catalogue flush(): persist partial indexes, then sub-TOC entries
+    /// (creating the sub-TOC and its TOC pointer on first flush).
+    pub async fn flush(&mut self) {
+        let client_id = self.client.id;
+        let datasets: Vec<String> = self.write_state.keys().cloned().collect();
+        for dsc in datasets {
+            // collect work first (borrow discipline)
+            let dirty: Vec<String> = {
+                let state = self.write_state.get(&dsc).unwrap();
+                state
+                    .collocs
+                    .iter()
+                    .filter(|(_, cs)| !cs.partial.is_empty())
+                    .map(|(k, _)| k.clone())
+                    .collect()
+            };
+            if dirty.is_empty() {
+                continue;
+            }
+            // ensure sub-TOC exists + TOC pointer appended (first flush)
+            let (dir, needs_subtoc) = {
+                let state = self.write_state.get(&dsc).unwrap();
+                (state.dir.clone(), state.subtoc_fd.is_none())
+            };
+            if needs_subtoc {
+                let path = format!("{dir}/p{client_id}.subtoc");
+                let fd = self
+                    .client
+                    .create(&path, StripeSpec::default_layout())
+                    .await
+                    .expect("unique subtoc");
+                // contend to append the pointer to the shared TOC
+                let toc_fd = {
+                    let state = self.write_state.get(&dsc).unwrap();
+                    state.toc_fd.clone().unwrap()
+                };
+                let rec = TocRecord::SubToc { path: path.clone() }.encode();
+                self.client.write(&toc_fd, &rec).await.unwrap();
+                self.client.fdatasync(&toc_fd).await.unwrap();
+                self.write_state.get_mut(&dsc).unwrap().subtoc_fd = Some(fd);
+            }
+            for cc in dirty {
+                // serialize the partial index and append it to the pindex file
+                let (blob, subtoc_rec, partial_fd, subtoc_fd) = {
+                    let state = self.write_state.get_mut(&dsc).unwrap();
+                    let cs = state.collocs.get_mut(&cc).unwrap();
+                    let entries: Vec<index::IndexEntry> = cs
+                        .partial
+                        .iter()
+                        .map(|(elem, &(uri_id, offset, length))| index::IndexEntry {
+                            elem: elem.clone(),
+                            uri_id,
+                            offset,
+                            length,
+                        })
+                        .collect();
+                    let blob = index::serialize(&entries);
+                    let offset = self.client.cached_size(&cs.partial_fd);
+                    let r = IndexRef {
+                        colloc: cc.clone(),
+                        index_path: cs.partial_fd.path().to_string(),
+                        offset,
+                        length: blob.len() as u64,
+                        axes: cs.axes_partial.clone(),
+                        uris: cs.uris.clone(),
+                    };
+                    cs.partial.clear();
+                    cs.axes_partial = Axes::new();
+                    (
+                        blob,
+                        TocRecord::Index(r).encode(),
+                        cs.partial_fd.clone(),
+                        state.subtoc_fd.clone().unwrap(),
+                    )
+                };
+                self.client.write(&partial_fd, &blob).await.unwrap();
+                self.client.fdatasync(&partial_fd).await.unwrap();
+                self.client.write(&subtoc_fd, &subtoc_rec).await.unwrap();
+                self.client.fdatasync(&subtoc_fd).await.unwrap();
+            }
+        }
+    }
+
+    /// Catalogue close(): persist full indexes, append their TOC entries,
+    /// and mask the now-superseded sub-TOCs.
+    pub async fn close(&mut self) {
+        let datasets: Vec<String> = self.write_state.keys().cloned().collect();
+        for dsc in datasets {
+            let collocs: Vec<String> = {
+                let state = self.write_state.get(&dsc).unwrap();
+                state
+                    .collocs
+                    .iter()
+                    .filter(|(_, cs)| !cs.full.is_empty())
+                    .map(|(k, _)| k.clone())
+                    .collect()
+            };
+            for cc in collocs {
+                let (blob, toc_rec, full_fd, toc_fd) = {
+                    let state = self.write_state.get_mut(&dsc).unwrap();
+                    let cs = state.collocs.get_mut(&cc).unwrap();
+                    let entries: Vec<index::IndexEntry> = cs
+                        .full
+                        .iter()
+                        .map(|(elem, &(uri_id, offset, length))| index::IndexEntry {
+                            elem: elem.clone(),
+                            uri_id,
+                            offset,
+                            length,
+                        })
+                        .collect();
+                    let blob = index::serialize(&entries);
+                    let r = IndexRef {
+                        colloc: cc.clone(),
+                        index_path: cs.full_fd.path().to_string(),
+                        offset: 0,
+                        length: blob.len() as u64,
+                        axes: cs.axes_full.clone(),
+                        uris: cs.uris.clone(),
+                    };
+                    (
+                        blob,
+                        TocRecord::Index(r).encode(),
+                        cs.full_fd.clone(),
+                        state.toc_fd.clone().unwrap(),
+                    )
+                };
+                self.client.write(&full_fd, &blob).await.unwrap();
+                self.client.fdatasync(&full_fd).await.unwrap();
+                self.client.write(&toc_fd, &toc_rec).await.unwrap();
+                self.client.fdatasync(&toc_fd).await.unwrap();
+            }
+            // mask this process' sub-TOC
+            let (subtoc_path, toc_fd) = {
+                let state = self.write_state.get(&dsc).unwrap();
+                (
+                    state.subtoc_fd.as_ref().map(|f| f.path().to_string()),
+                    state.toc_fd.clone(),
+                )
+            };
+            if let (Some(path), Some(toc_fd)) = (subtoc_path, toc_fd) {
+                let rec = TocRecord::Mask { path }.encode();
+                self.client.write(&toc_fd, &rec).await.unwrap();
+                self.client.fdatasync(&toc_fd).await.unwrap();
+            }
+        }
+    }
+
+    /// TOC pre-loading (thesis): read the TOC + all unmasked sub-TOCs,
+    /// rebuilding every IndexRef (with axes + URI stores) in memory.
+    async fn ensure_preloaded(&mut self, ds: &Key) {
+        let dsc = ds.canonical();
+        if self.preloaded.contains_key(&dsc) {
+            return;
+        }
+        let dir = self.ds_dir(ds);
+        let toc_path = Self::toc_path(&dir);
+        let toc_bytes = match self.client.read_all(&toc_path).await {
+            Ok(b) => b.to_vec(),
+            Err(_) => {
+                self.preloaded.insert(dsc, Preloaded { refs: Vec::new() });
+                return;
+            }
+        };
+        let records = TocRecord::parse_stream(&toc_bytes);
+        // reverse scan: collect masks before visiting sub-TOCs
+        let mut masked: std::collections::HashSet<String> = std::collections::HashSet::new();
+        let mut refs: Vec<IndexRef> = Vec::new();
+        for rec in records.iter().rev() {
+            match rec {
+                TocRecord::Mask { path } => {
+                    masked.insert(path.clone());
+                }
+                TocRecord::Index(r) => refs.push(r.clone()),
+                TocRecord::SubToc { path } => {
+                    if masked.contains(path) {
+                        continue;
+                    }
+                    if let Ok(bytes) = self.client.read_all(path).await {
+                        let bytes = bytes.to_vec();
+                        for sub in TocRecord::parse_stream(&bytes).iter().rev() {
+                            if let TocRecord::Index(r) = sub {
+                                refs.push(r.clone());
+                            }
+                        }
+                    }
+                }
+                TocRecord::Init { .. } => {}
+            }
+        }
+        self.preloaded.insert(dsc, Preloaded { refs });
+    }
+
+    /// Drop cached pre-loaded state (new flushes become visible — used by
+    /// consumers that re-list per step, like PGEN).
+    pub fn invalidate_preload(&mut self, ds: &Key) {
+        self.preloaded.remove(&ds.canonical());
+    }
+
+    /// Load one index blob from its file: 3 reads (prelude, header, page)
+    /// for a point lookup; `2 + npages` reads for a full scan.
+    async fn load_index_lookup(
+        &mut self,
+        r: &IndexRef,
+        elem: &Key,
+    ) -> Option<(u32, u64, u64)> {
+        let fd = self.client.open(&r.index_path).await.ok()??;
+        let prelude = self.client.read(&fd, r.offset, 12).await.ok()?.to_vec();
+        let (header_len, count) = index::parse_prelude(&prelude)?;
+        let hdr_bytes = self
+            .client
+            .read(&fd, r.offset + 12, header_len as u64)
+            .await
+            .ok()?
+            .to_vec();
+        let header = index::parse_header(&hdr_bytes, count)?;
+        let ec = elem.canonical();
+        let page = index::page_for(&header, &ec)?;
+        let page_bytes = self
+            .client
+            .read(&fd, r.offset + page.off, page.len)
+            .await
+            .ok()?
+            .to_vec();
+        let entries = index::parse_page(&page_bytes)?;
+        entries
+            .into_iter()
+            .find(|e| e.elem == ec)
+            .map(|e| (e.uri_id, e.offset, e.length))
+    }
+
+    async fn load_index_full(&mut self, r: &IndexRef) -> Vec<index::IndexEntry> {
+        let Some(fd) = self.client.open(&r.index_path).await.ok().flatten() else {
+            return Vec::new();
+        };
+        let Ok(prelude) = self.client.read(&fd, r.offset, 12).await else {
+            return Vec::new();
+        };
+        let Some((header_len, count)) = index::parse_prelude(&prelude.to_vec()) else {
+            return Vec::new();
+        };
+        let Ok(hdr_bytes) = self
+            .client
+            .read(&fd, r.offset + 12, header_len as u64)
+            .await
+        else {
+            return Vec::new();
+        };
+        let Some(header) = index::parse_header(&hdr_bytes.to_vec(), count) else {
+            return Vec::new();
+        };
+        let mut out = Vec::new();
+        for p in &header.pages {
+            if let Ok(bytes) = self.client.read(&fd, r.offset + p.off, p.len).await {
+                if let Some(es) = index::parse_page(&bytes.to_vec()) {
+                    out.extend(es);
+                }
+            }
+        }
+        out
+    }
+
+    fn expand_uri(r: &IndexRef, uri_id: u32, off: u64, len: u64) -> Option<FieldLocation> {
+        let root = r.uris.get(uri_id as usize)?;
+        if let Some(path) = root.strip_prefix("posix://") {
+            Some(FieldLocation::PosixFile {
+                path: path.to_string(),
+                offset: off,
+                length: len,
+            })
+        } else {
+            FieldLocation::parse_uri(root)
+        }
+    }
+
+    /// Catalogue axis(): merged values for one element dimension.
+    pub async fn axis(&mut self, ds: &Key, colloc: &Key, dim: &str) -> Vec<String> {
+        self.ensure_preloaded(ds).await;
+        let cc = colloc.canonical();
+        let pre = &self.preloaded[&ds.canonical()];
+        let mut vals: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
+        for r in pre.refs.iter().filter(|r| r.colloc == cc) {
+            vals.extend(r.axes.values(dim));
+        }
+        vals.into_iter().collect()
+    }
+
+    /// Catalogue retrieve(): newest matching index wins.
+    pub async fn retrieve(
+        &mut self,
+        ds: &Key,
+        colloc: &Key,
+        elem: &Key,
+    ) -> Option<FieldLocation> {
+        self.ensure_preloaded(ds).await;
+        let cc = colloc.canonical();
+        let candidates: Vec<IndexRef> = self.preloaded[&ds.canonical()]
+            .refs
+            .iter()
+            .filter(|r| r.colloc == cc && r.axes.may_contain(elem))
+            .cloned()
+            .collect();
+        for r in candidates {
+            if let Some((uri_id, off, len)) = self.load_index_lookup(&r, elem).await {
+                return Self::expand_uri(&r, uri_id, off, len);
+            }
+        }
+        None
+    }
+
+    /// Catalogue list(): all indexed (identifier, location) pairs of the
+    /// dataset matching the request. Newest entry wins per identifier.
+    pub async fn list(&mut self, ds: &Key, request: &Request) -> Vec<(Key, FieldLocation)> {
+        self.ensure_preloaded(ds).await;
+        let refs: Vec<IndexRef> = self.preloaded[&ds.canonical()].refs.clone();
+        let mut seen: std::collections::HashSet<String> = std::collections::HashSet::new();
+        let mut out = Vec::new();
+        for r in refs {
+            // collocation filter: all request dims fixed in the colloc key
+            // must match
+            let ck = Key::parse(&r.colloc).unwrap_or_default();
+            let fixed = request.fixed_key();
+            let colloc_conflict = ck
+                .0
+                .iter()
+                .any(|(d, v)| fixed.get(d).map(|fv| fv != v).unwrap_or(false));
+            if colloc_conflict {
+                continue;
+            }
+            for e in self.load_index_full(&r).await {
+                let ek = Key::parse(&e.elem).unwrap_or_default();
+                let full = ds.merged(&ck).merged(&ek);
+                if !request.matches(&full) {
+                    continue;
+                }
+                if !seen.insert(full.canonical()) {
+                    continue; // an older duplicate — masked by newer
+                }
+                if let Some(loc) = Self::expand_uri(&r, e.uri_id, e.offset, e.length) {
+                    out.push((full, loc));
+                }
+            }
+        }
+        out
+    }
+}

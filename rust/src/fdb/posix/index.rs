@@ -1,0 +1,247 @@
+//! Serialized paged index — the on-media form of the POSIX Catalogue's
+//! B*-tree indexes (thesis §2.7.2).
+//!
+//! Layout of one index blob (appended to a partial or full index file):
+//!
+//! ```text
+//! [magic u32][header_len u32][count u32]          <- 12-byte prelude
+//! header: npages u32, then per page:
+//!   first_elem str, page_off u64 (relative to blob start), page_len u64
+//! pages: sequence of entries
+//!   entry: elem str, uri_id u32, offset u64, length u64
+//! ```
+//!
+//! Lookup therefore costs three read ops (prelude → header → leaf page);
+//! a full scan costs `2 + npages` — reproducing the "multiple read system
+//! calls" behaviour of the real FDB's B*-trees.
+
+use crate::fdb::wire::{Dec, Enc};
+
+pub const MAGIC: u32 = 0xFDB_1DE7;
+/// Target serialized page size (like a 4 KiB B-tree node).
+pub const PAGE_BYTES: usize = 4096;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct IndexEntry {
+    pub elem: String,
+    pub uri_id: u32,
+    pub offset: u64,
+    pub length: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct PageMeta {
+    pub first_elem: String,
+    /// offset of the page relative to the blob start
+    pub off: u64,
+    pub len: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct IndexHeader {
+    pub count: u32,
+    pub pages: Vec<PageMeta>,
+}
+
+/// Serialize `entries` (must be sorted by `elem`) into an index blob.
+pub fn serialize(entries: &[IndexEntry]) -> Vec<u8> {
+    debug_assert!(entries.windows(2).all(|w| w[0].elem <= w[1].elem));
+    // 1. cut entries into pages of ~PAGE_BYTES
+    let mut pages: Vec<(String, Vec<u8>)> = Vec::new();
+    let mut cur = Enc::new();
+    let mut cur_first: Option<String> = None;
+    for e in entries {
+        if cur_first.is_none() {
+            cur_first = Some(e.elem.clone());
+        }
+        cur.str(&e.elem).u32(e.uri_id).u64(e.offset).u64(e.length);
+        if cur.buf.len() >= PAGE_BYTES {
+            pages.push((cur_first.take().unwrap(), std::mem::take(&mut cur).finish()));
+            cur = Enc::new();
+        }
+    }
+    if cur_first.is_some() {
+        pages.push((cur_first.unwrap(), cur.finish()));
+    }
+    // 2. header
+    let mut header = Enc::new();
+    header.u32(pages.len() as u32);
+    // compute page offsets: prelude(12) + header_len + payload offsets.
+    // header size depends on its own content only (offsets are u64s we
+    // fill after a first pass measuring the header length).
+    let mut measure = Enc::new();
+    measure.u32(pages.len() as u32);
+    for (first, data) in &pages {
+        measure.str(first).u64(0).u64(data.len() as u64);
+    }
+    let header_len = measure.finish().len();
+    let mut off = 12 + header_len as u64;
+    for (first, data) in &pages {
+        header.str(first).u64(off).u64(data.len() as u64);
+        off += data.len() as u64;
+    }
+    let header = header.finish();
+    debug_assert_eq!(header.len(), header_len);
+    // 3. assemble
+    let mut out = Enc::new();
+    out.u32(MAGIC);
+    let mut blob = out.finish();
+    blob.extend_from_slice(&(header.len() as u32).to_le_bytes());
+    blob.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+    blob.extend_from_slice(&header);
+    for (_, data) in pages {
+        blob.extend_from_slice(&data);
+    }
+    blob
+}
+
+/// Parse the 12-byte prelude → (header_len, entry count).
+pub fn parse_prelude(bytes: &[u8]) -> Option<(u32, u32)> {
+    let mut d = Dec::new(bytes);
+    if d.u32()? != MAGIC {
+        return None;
+    }
+    let header_len = d.u32()?;
+    let count = d.u32()?;
+    Some((header_len, count))
+}
+
+/// Parse the header region (bytes immediately after the prelude).
+pub fn parse_header(bytes: &[u8], count: u32) -> Option<IndexHeader> {
+    let mut d = Dec::new(bytes);
+    let npages = d.u32()?;
+    let mut pages = Vec::with_capacity(npages as usize);
+    for _ in 0..npages {
+        pages.push(PageMeta {
+            first_elem: d.str()?,
+            off: d.u64()?,
+            len: d.u64()?,
+        });
+    }
+    Some(IndexHeader { count, pages })
+}
+
+/// Parse one page's entries.
+pub fn parse_page(bytes: &[u8]) -> Option<Vec<IndexEntry>> {
+    let mut d = Dec::new(bytes);
+    let mut out = Vec::new();
+    while d.remaining() > 0 {
+        out.push(IndexEntry {
+            elem: d.str()?,
+            uri_id: d.u32()?,
+            offset: d.u64()?,
+            length: d.u64()?,
+        });
+    }
+    Some(out)
+}
+
+/// Which page may contain `elem` (binary search over first keys).
+pub fn page_for<'h>(header: &'h IndexHeader, elem: &str) -> Option<&'h PageMeta> {
+    if header.pages.is_empty() {
+        return None;
+    }
+    let idx = match header
+        .pages
+        .binary_search_by(|p| p.first_elem.as_str().cmp(elem))
+    {
+        Ok(i) => i,
+        Err(0) => return None, // elem sorts before the first page
+        Err(i) => i - 1,
+    };
+    Some(&header.pages[idx])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entries(n: usize) -> Vec<IndexEntry> {
+        let mut v: Vec<IndexEntry> = (0..n)
+            .map(|i| IndexEntry {
+                elem: format!("param=p{:04},step={:03}", i % 7, i),
+                uri_id: (i % 3) as u32,
+                offset: (i * 1024) as u64,
+                length: 1024,
+            })
+            .collect();
+        v.sort_by(|a, b| a.elem.cmp(&b.elem));
+        v
+    }
+
+    fn parse_all(blob: &[u8]) -> Vec<IndexEntry> {
+        let (hl, count) = parse_prelude(&blob[..12]).unwrap();
+        let header = parse_header(&blob[12..12 + hl as usize], count).unwrap();
+        let mut out = Vec::new();
+        for p in &header.pages {
+            out.extend(
+                parse_page(&blob[p.off as usize..(p.off + p.len) as usize]).unwrap(),
+            );
+        }
+        out
+    }
+
+    #[test]
+    fn roundtrip_small() {
+        let es = entries(5);
+        let blob = serialize(&es);
+        assert_eq!(parse_all(&blob), es);
+    }
+
+    #[test]
+    fn roundtrip_multipage() {
+        let es = entries(2000);
+        let blob = serialize(&es);
+        let (hl, count) = parse_prelude(&blob[..12]).unwrap();
+        assert_eq!(count, 2000);
+        let header = parse_header(&blob[12..12 + hl as usize], count).unwrap();
+        assert!(header.pages.len() > 5, "expected multiple pages");
+        assert_eq!(parse_all(&blob), es);
+    }
+
+    #[test]
+    fn lookup_via_page_directory() {
+        let es = entries(2000);
+        let blob = serialize(&es);
+        let (hl, count) = parse_prelude(&blob[..12]).unwrap();
+        let header = parse_header(&blob[12..12 + hl as usize], count).unwrap();
+        for probe in [0usize, 1, 999, 1999] {
+            let elem = &es[probe].elem;
+            let page = page_for(&header, elem).unwrap();
+            let items =
+                parse_page(&blob[page.off as usize..(page.off + page.len) as usize]).unwrap();
+            let found = items.iter().find(|e| &e.elem == elem).unwrap();
+            assert_eq!(found, &es[probe]);
+        }
+    }
+
+    #[test]
+    fn missing_key_page_scan_misses() {
+        let es = entries(100);
+        let blob = serialize(&es);
+        let (hl, count) = parse_prelude(&blob[..12]).unwrap();
+        let header = parse_header(&blob[12..12 + hl as usize], count).unwrap();
+        if let Some(page) = page_for(&header, "zzz=unknown") {
+            let items =
+                parse_page(&blob[page.off as usize..(page.off + page.len) as usize]).unwrap();
+            assert!(items.iter().all(|e| e.elem != "zzz=unknown"));
+        }
+    }
+
+    #[test]
+    fn empty_index() {
+        let blob = serialize(&[]);
+        let (hl, count) = parse_prelude(&blob[..12]).unwrap();
+        assert_eq!(count, 0);
+        let header = parse_header(&blob[12..12 + hl as usize], count).unwrap();
+        assert!(header.pages.is_empty());
+        assert!(page_for(&header, "anything").is_none());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut blob = serialize(&entries(3));
+        blob[0] ^= 0xFF;
+        assert!(parse_prelude(&blob[..12]).is_none());
+    }
+}

@@ -1,0 +1,128 @@
+//! The FDB POSIX I/O Store (thesis §2.7.2): per-process data files under
+//! a directory per dataset key, buffered writes, persistence on flush(),
+//! 8×8 MiB striping on Lustre.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::fdb::key::Key;
+use crate::fdb::location::FieldLocation;
+use crate::lustre::{Fd, FsError, LustreClient, StripeSpec};
+use crate::util::content::Bytes;
+
+pub struct PosixStore {
+    pub(crate) client: LustreClient,
+    root: String,
+    /// per (dataset, collocation): the process-unique data file
+    data_files: HashMap<(String, String), Fd>,
+    known_dirs: HashSet<String>,
+    file_counter: u64,
+}
+
+impl PosixStore {
+    pub fn new(client: LustreClient, root: &str) -> PosixStore {
+        PosixStore {
+            client,
+            root: root.to_string(),
+            data_files: HashMap::new(),
+            known_dirs: HashSet::new(),
+            file_counter: 0,
+        }
+    }
+
+    pub fn dataset_dir(&self, ds: &Key) -> String {
+        format!("{}/{}", self.root, ds.canonical())
+    }
+
+    /// Create-if-missing of the dataset directory (atomic mkdir).
+    pub(crate) async fn ensure_dir(&mut self, dir: &str) {
+        if self.known_dirs.contains(dir) {
+            return;
+        }
+        match self.client.mkdir(dir).await {
+            Ok(()) | Err(FsError::AlreadyExists) => {}
+            Err(e) => panic!("mkdir {dir}: {e}"),
+        }
+        self.known_dirs.insert(dir.to_string());
+    }
+
+    /// Store archive(): buffer the object into the per-process data file;
+    /// returns a location descriptor immediately (data not yet durable).
+    pub async fn archive(&mut self, ds: &Key, colloc: &Key, data: Bytes) -> FieldLocation {
+        let dir = self.dataset_dir(ds);
+        self.ensure_dir(&dir).await;
+        let key = (ds.canonical(), colloc.canonical());
+        if !self.data_files.contains_key(&key) {
+            // unique per process: collocation + client id + counter
+            // (stands in for host+pid+time in the real naming scheme)
+            let path = format!(
+                "{dir}/{}.{}.{}.data",
+                sanitize(&colloc.canonical()),
+                self.client.id,
+                self.file_counter
+            );
+            self.file_counter += 1;
+            let fd = self
+                .client
+                .create(&path, StripeSpec::fdb_data())
+                .await
+                .expect("data file must be unique per process");
+            self.data_files.insert(key.clone(), fd);
+        }
+        let fd = self.data_files.get(&key).unwrap().clone();
+        let length = data.len();
+        let offset = self.client.write_data(&fd, data).await.expect("write");
+        FieldLocation::PosixFile {
+            path: fd.path().to_string(),
+            offset,
+            length,
+        }
+    }
+
+    /// Store flush(): fdatasync every data file this process wrote.
+    pub async fn flush(&mut self) {
+        let fds: Vec<Fd> = self.data_files.values().cloned().collect();
+        for fd in fds {
+            self.client.fdatasync(&fd).await.expect("fdatasync");
+        }
+    }
+
+    /// Read the byte ranges of a (merged) POSIX handle.
+    pub async fn read_ranges(&mut self, path: &str, ranges: &[(u64, u64)]) -> Bytes {
+        let fd = self
+            .client
+            .open(path)
+            .await
+            .expect("open")
+            .expect("data file must exist");
+        let mut out = Bytes::new();
+        for &(off, len) in ranges {
+            out.append(self.client.read(&fd, off, len).await.expect("read"));
+        }
+        out
+    }
+
+    /// Profiling helper: drain DLM lock time accumulated by this client.
+    pub fn take_lock_time(&self) -> crate::sim::time::SimTime {
+        self.client.take_lock_time()
+    }
+
+    /// Unlink every file of the dataset directory (fdb-wipe).
+    pub async fn wipe_dataset(&mut self, ds: &Key) -> bool {
+        let dir = self.dataset_dir(ds);
+        let Ok(children) = self.client.readdir(&dir).await else {
+            return false;
+        };
+        let any = !children.is_empty();
+        for child in children {
+            let _ = self.client.unlink(&format!("{dir}/{child}")).await;
+        }
+        self.data_files
+            .retain(|(d, _), _| d != &ds.canonical());
+        any
+    }
+}
+
+/// Replace path-hostile characters in canonical keys.
+pub(crate) fn sanitize(s: &str) -> String {
+    s.replace(['/', '\\'], "_")
+}

@@ -1,0 +1,285 @@
+//! TOC / sub-TOC record formats (thesis §2.7.2, Figs 2.5–2.10).
+//!
+//! The shared TOC file binds all per-process structures together:
+//! `Init` (dataset header), `SubToc` (pointer appended on first flush),
+//! `Index` (full-index entry appended at close), `Mask` (signals readers
+//! to skip superseded sub-TOCs). Sub-TOC files hold `IndexRef` records:
+//! one per flushed partial index, carrying the axes + URI store so
+//! readers get summaries without scanning index pages.
+//!
+//! Records are framed `[type u8][len u32][payload]`; appends are atomic
+//! (single O_APPEND write < block size for TOC pointers — the POSIX
+//! guarantee the thesis relies on).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::fdb::key::Key;
+use crate::fdb::wire::{Dec, Enc};
+
+/// Axes: per element-dimension value summaries (thesis "axes" helper).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Axes(pub BTreeMap<String, BTreeSet<String>>);
+
+impl Axes {
+    pub fn new() -> Axes {
+        Axes::default()
+    }
+
+    /// Record all dims of an element key.
+    pub fn insert_key(&mut self, elem: &Key) {
+        for (dim, val) in &elem.0 {
+            self.0
+                .entry(dim.clone())
+                .or_default()
+                .insert(val.clone());
+        }
+    }
+
+    /// Could this axes summary contain the element key?
+    pub fn may_contain(&self, elem: &Key) -> bool {
+        elem.0.iter().all(|(dim, val)| {
+            self.0
+                .get(dim)
+                .map(|vals| vals.contains(val))
+                .unwrap_or(false)
+        })
+    }
+
+    pub fn values(&self, dim: &str) -> Vec<String> {
+        self.0
+            .get(dim)
+            .map(|s| s.iter().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    pub fn merge(&mut self, other: &Axes) {
+        for (dim, vals) in &other.0 {
+            self.0.entry(dim.clone()).or_default().extend(vals.iter().cloned());
+        }
+    }
+
+    fn encode(&self, e: &mut Enc) {
+        e.u32(self.0.len() as u32);
+        for (dim, vals) in &self.0 {
+            e.str(dim).u32(vals.len() as u32);
+            for v in vals {
+                e.str(v);
+            }
+        }
+    }
+
+    fn decode(d: &mut Dec) -> Option<Axes> {
+        let ndims = d.u32()?;
+        let mut out = BTreeMap::new();
+        for _ in 0..ndims {
+            let dim = d.str()?;
+            let nvals = d.u32()?;
+            let mut set = BTreeSet::new();
+            for _ in 0..nvals {
+                set.insert(d.str()?);
+            }
+            out.insert(dim, set);
+        }
+        Some(Axes(out))
+    }
+}
+
+/// A pointer to one serialized index blob + its summaries.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct IndexRef {
+    /// canonical collocation key
+    pub colloc: String,
+    pub index_path: String,
+    /// blob offset within the index file
+    pub offset: u64,
+    pub length: u64,
+    pub axes: Axes,
+    /// URI store: uri_id → data-file URI root
+    pub uris: Vec<String>,
+}
+
+impl IndexRef {
+    fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.str(&self.colloc)
+            .str(&self.index_path)
+            .u64(self.offset)
+            .u64(self.length);
+        self.axes.encode(&mut e);
+        e.u32(self.uris.len() as u32);
+        for u in &self.uris {
+            e.str(u);
+        }
+        e.finish()
+    }
+
+    fn decode(bytes: &[u8]) -> Option<IndexRef> {
+        let mut d = Dec::new(bytes);
+        let colloc = d.str()?;
+        let index_path = d.str()?;
+        let offset = d.u64()?;
+        let length = d.u64()?;
+        let axes = Axes::decode(&mut d)?;
+        let nuris = d.u32()?;
+        let mut uris = Vec::with_capacity(nuris as usize);
+        for _ in 0..nuris {
+            uris.push(d.str()?);
+        }
+        Some(IndexRef {
+            colloc,
+            index_path,
+            offset,
+            length,
+            axes,
+            uris,
+        })
+    }
+}
+
+/// A TOC (or sub-TOC) record.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TocRecord {
+    /// dataset initialisation header
+    Init { dataset: String },
+    /// pointer to a per-process sub-TOC file
+    SubToc { path: String },
+    /// a full-index entry (appended at Catalogue close())
+    Index(IndexRef),
+    /// mask: readers skip the named sub-TOC path
+    Mask { path: String },
+}
+
+impl TocRecord {
+    pub fn encode(&self) -> Vec<u8> {
+        let (tag, payload): (u8, Vec<u8>) = match self {
+            TocRecord::Init { dataset } => {
+                let mut e = Enc::new();
+                e.str(dataset);
+                (0, e.finish())
+            }
+            TocRecord::SubToc { path } => {
+                let mut e = Enc::new();
+                e.str(path);
+                (1, e.finish())
+            }
+            TocRecord::Index(r) => (2, r.encode()),
+            TocRecord::Mask { path } => {
+                let mut e = Enc::new();
+                e.str(path);
+                (3, e.finish())
+            }
+        };
+        let mut out = Vec::with_capacity(payload.len() + 5);
+        out.push(tag);
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    /// Parse a whole TOC/sub-TOC file into records (in append order).
+    /// Tolerates a torn trailing record (dropped, like the real FDB).
+    pub fn parse_stream(bytes: &[u8]) -> Vec<TocRecord> {
+        let mut out = Vec::new();
+        let mut pos = 0usize;
+        while pos + 5 <= bytes.len() {
+            let tag = bytes[pos];
+            let len =
+                u32::from_le_bytes(bytes[pos + 1..pos + 5].try_into().unwrap()) as usize;
+            if pos + 5 + len > bytes.len() {
+                break; // torn tail
+            }
+            let payload = &bytes[pos + 5..pos + 5 + len];
+            pos += 5 + len;
+            let rec = match tag {
+                0 => Dec::new(payload).str().map(|dataset| TocRecord::Init { dataset }),
+                1 => Dec::new(payload).str().map(|path| TocRecord::SubToc { path }),
+                2 => IndexRef::decode(payload).map(TocRecord::Index),
+                3 => Dec::new(payload).str().map(|path| TocRecord::Mask { path }),
+                _ => None,
+            };
+            match rec {
+                Some(r) => out.push(r),
+                None => break,
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_ref() -> IndexRef {
+        let mut axes = Axes::new();
+        axes.insert_key(&Key::of(&[("step", "1"), ("param", "v")]));
+        axes.insert_key(&Key::of(&[("step", "2"), ("param", "v")]));
+        IndexRef {
+            colloc: "levtype=sfc,type=ef".into(),
+            index_path: "/fdb/ds/x.index".into(),
+            offset: 4096,
+            length: 512,
+            axes,
+            uris: vec!["posix:///fdb/ds/x.data".into()],
+        }
+    }
+
+    #[test]
+    fn record_stream_roundtrip() {
+        let records = vec![
+            TocRecord::Init {
+                dataset: "class=od,date=20231201".into(),
+            },
+            TocRecord::SubToc {
+                path: "/fdb/ds/p0.subtoc".into(),
+            },
+            TocRecord::Index(sample_ref()),
+            TocRecord::Mask {
+                path: "/fdb/ds/p0.subtoc".into(),
+            },
+        ];
+        let mut bytes = Vec::new();
+        for r in &records {
+            bytes.extend(r.encode());
+        }
+        let parsed = TocRecord::parse_stream(&bytes);
+        assert_eq!(parsed, records);
+    }
+
+    #[test]
+    fn torn_tail_dropped() {
+        let mut bytes = TocRecord::Init {
+            dataset: "d".into(),
+        }
+        .encode();
+        let full = TocRecord::SubToc {
+            path: "/x".into(),
+        }
+        .encode();
+        bytes.extend_from_slice(&full[..full.len() - 1]); // torn
+        let parsed = TocRecord::parse_stream(&bytes);
+        assert_eq!(parsed.len(), 1);
+    }
+
+    #[test]
+    fn axes_summary_logic() {
+        let mut axes = Axes::new();
+        axes.insert_key(&Key::of(&[("step", "1"), ("param", "v")]));
+        assert!(axes.may_contain(&Key::of(&[("step", "1"), ("param", "v")])));
+        assert!(!axes.may_contain(&Key::of(&[("step", "2"), ("param", "v")])));
+        assert!(!axes.may_contain(&Key::of(&[("step", "1"), ("number", "0")])));
+        assert_eq!(axes.values("step"), vec!["1"]);
+        assert!(axes.values("missing").is_empty());
+    }
+
+    #[test]
+    fn axes_merge() {
+        let mut a = Axes::new();
+        a.insert_key(&Key::of(&[("step", "1")]));
+        let mut b = Axes::new();
+        b.insert_key(&Key::of(&[("step", "2"), ("param", "t")]));
+        a.merge(&b);
+        assert_eq!(a.values("step"), vec!["1", "2"]);
+        assert_eq!(a.values("param"), vec!["t"]);
+    }
+}

@@ -1,0 +1,290 @@
+//! The FDB Ceph/RADOS Catalogue (thesis §3.2.1): the DAOS catalogue
+//! design with Omaps in place of KVs. Namespaces encapsulate datasets;
+//! `omap_get_all` fetches whole indexes in one RPC, making `list()`
+//! more efficient than on DAOS.
+
+use std::collections::{HashMap, HashSet};
+use std::rc::Rc;
+
+use crate::ceph::{CephPool, RadosClient};
+use crate::fdb::key::Key;
+use crate::fdb::location::FieldLocation;
+use crate::fdb::request::Request;
+use crate::fdb::schema::Schema;
+
+fn index_obj(colloc: &str) -> String {
+    format!("fdb.index.{:016x}", crate::ceph::hash_name(colloc))
+}
+
+fn axis_obj(colloc: &str, dim: &str) -> String {
+    format!(
+        "fdb.axis.{:016x}",
+        crate::ceph::hash_name(&format!("{colloc}\u{1}{dim}"))
+    )
+}
+
+const ROOT_NS: &str = "fdb-root";
+const ROOT_OBJ: &str = "fdb.root";
+const CAT_OBJ: &str = "fdb.catalogue";
+
+pub struct RadosCatalogue {
+    pub(crate) client: RadosClient,
+    pool: Rc<CephPool>,
+    schema: Schema,
+    known_datasets: HashSet<String>,
+    known_collocs: HashSet<(String, String)>,
+    axis_history: HashSet<(String, String, String)>,
+    axes_cache: HashMap<(String, String), HashMap<String, Vec<String>>>,
+}
+
+impl RadosCatalogue {
+    pub fn new(client: RadosClient, pool: &Rc<CephPool>, schema: Schema) -> RadosCatalogue {
+        RadosCatalogue {
+            client,
+            pool: pool.clone(),
+            schema,
+            known_datasets: HashSet::new(),
+            known_collocs: HashSet::new(),
+            axis_history: HashSet::new(),
+            axes_cache: HashMap::new(),
+        }
+    }
+
+    /// Dataset namespace = canonical dataset key (cheap: no creation RPC,
+    /// namespaces are implicit in RADOS — §3.2.1 "more lightweight").
+    fn ns_of(ds: &Key) -> String {
+        ds.canonical()
+    }
+
+    async fn ensure_dataset(&mut self, ds: &Key, create: bool) -> Option<String> {
+        let label = ds.canonical();
+        let ns = Self::ns_of(ds);
+        if self.known_datasets.contains(&label) {
+            return Some(ns);
+        }
+        let found = self
+            .client
+            .omap_get(&self.pool, ROOT_NS, ROOT_OBJ, &[label.as_str()])
+            .await
+            .ok()?;
+        if found.is_empty() {
+            if !create {
+                return None;
+            }
+            // catalogue omap: dataset key + schema copy
+            self.client
+                .omap_set(
+                    &self.pool,
+                    &ns,
+                    CAT_OBJ,
+                    &[
+                        ("key", label.as_bytes()),
+                        ("schema", self.schema.to_text().as_bytes()),
+                    ],
+                )
+                .await
+                .ok()?;
+            let uri = format!("radosomap://{}/{}", self.pool.name, ns);
+            self.client
+                .omap_set(&self.pool, ROOT_NS, ROOT_OBJ, &[(&label, uri.as_bytes())])
+                .await
+                .ok()?;
+        }
+        self.known_datasets.insert(label);
+        Some(ns)
+    }
+
+    /// Catalogue archive(): immediate, persistent omap insertions.
+    pub async fn archive(&mut self, ds: &Key, colloc: &Key, elem: &Key, loc: &FieldLocation) {
+        let ns = self
+            .ensure_dataset(ds, true)
+            .await
+            .expect("writer creates dataset");
+        let cc = colloc.canonical();
+        let pair = (ds.canonical(), cc.clone());
+        let idx = index_obj(&cc);
+        if !self.known_collocs.contains(&pair) {
+            let found = self
+                .client
+                .omap_get(&self.pool, &ns, CAT_OBJ, &[&format!("colloc:{cc}")])
+                .await
+                .unwrap_or_default();
+            if found.is_empty() {
+                let dims: Vec<String> = elem.dims().map(String::from).collect();
+                self.client
+                    .omap_set(
+                        &self.pool,
+                        &ns,
+                        &idx,
+                        &[("key", cc.as_bytes()), ("axes", dims.join(",").as_bytes())],
+                    )
+                    .await
+                    .expect("omap set");
+                let uri = format!("radosomap://{}/{}/{}", self.pool.name, ns, idx);
+                self.client
+                    .omap_set(
+                        &self.pool,
+                        &ns,
+                        CAT_OBJ,
+                        &[(&format!("colloc:{cc}"), uri.as_bytes())],
+                    )
+                    .await
+                    .expect("omap set");
+            }
+            self.known_collocs.insert(pair);
+        }
+        self.client
+            .omap_set(
+                &self.pool,
+                &ns,
+                &idx,
+                &[(&elem.canonical(), loc.to_uri().as_bytes())],
+            )
+            .await
+            .expect("omap set");
+        for (dim, val) in &elem.0 {
+            let hk = (cc.clone(), dim.clone(), val.clone());
+            if self.axis_history.contains(&hk) {
+                continue;
+            }
+            self.client
+                .omap_set(&self.pool, &ns, &axis_obj(&cc, dim), &[(val, &[1u8])])
+                .await
+                .expect("omap set");
+            self.axis_history.insert(hk);
+        }
+    }
+
+    pub async fn flush(&mut self) {}
+    pub async fn close(&mut self) {}
+
+    /// Remove the dataset's root-omap registration after a wipe.
+    pub async fn deregister_dataset(&mut self, ds: &Key) {
+        let label = ds.canonical();
+        let _ = self
+            .client
+            .omap_rm(&self.pool, ROOT_NS, ROOT_OBJ, &[label.as_str()])
+            .await;
+        self.known_datasets.remove(&label);
+        self.known_collocs.retain(|(d, _)| d != &label);
+        self.axes_cache.retain(|(d, _), _| d != &label);
+    }
+
+    async fn ensure_axes(&mut self, ds: &Key, colloc: &Key) -> Option<()> {
+        let key = (ds.canonical(), colloc.canonical());
+        if self.axes_cache.contains_key(&key) {
+            return Some(());
+        }
+        let ns = self.ensure_dataset(ds, false).await?;
+        let cc = colloc.canonical();
+        let idx = index_obj(&cc);
+        let meta = self
+            .client
+            .omap_get(&self.pool, &ns, &idx, &["axes"])
+            .await
+            .ok()?;
+        let dims = String::from_utf8(meta.get("axes")?.clone()).ok()?;
+        let mut axes = HashMap::new();
+        for dim in dims.split(',').filter(|d| !d.is_empty()) {
+            // one RPC per axis: keys are the values
+            let mut vals = self
+                .client
+                .omap_keys(&self.pool, &ns, &axis_obj(&cc, dim))
+                .await
+                .unwrap_or_default();
+            vals.sort();
+            axes.insert(dim.to_string(), vals);
+        }
+        self.axes_cache.insert(key, axes);
+        Some(())
+    }
+
+    pub fn invalidate_preload(&mut self, ds: &Key) {
+        let dsc = ds.canonical();
+        self.axes_cache.retain(|(d, _), _| d != &dsc);
+    }
+
+    pub async fn axis(&mut self, ds: &Key, colloc: &Key, dim: &str) -> Vec<String> {
+        if self.ensure_axes(ds, colloc).await.is_none() {
+            return Vec::new();
+        }
+        self.axes_cache[&(ds.canonical(), colloc.canonical())]
+            .get(dim)
+            .cloned()
+            .unwrap_or_default()
+    }
+
+    pub async fn retrieve(
+        &mut self,
+        ds: &Key,
+        colloc: &Key,
+        elem: &Key,
+    ) -> Option<FieldLocation> {
+        self.ensure_axes(ds, colloc).await?;
+        {
+            let axes = &self.axes_cache[&(ds.canonical(), colloc.canonical())];
+            for (dim, val) in &elem.0 {
+                if !axes.get(dim)?.contains(val) {
+                    return None;
+                }
+            }
+        }
+        let ns = Self::ns_of(ds);
+        let cc = colloc.canonical();
+        let got = self
+            .client
+            .omap_get(&self.pool, &ns, &index_obj(&cc), &[&elem.canonical()])
+            .await
+            .ok()?;
+        let raw = got.get(&elem.canonical())?;
+        FieldLocation::parse_uri(&String::from_utf8(raw.clone()).ok()?)
+    }
+
+    /// list(): whole indexes fetched with single `omap_get_all` RPCs.
+    pub async fn list(&mut self, ds: &Key, request: &Request) -> Vec<(Key, FieldLocation)> {
+        let Some(ns) = self.ensure_dataset(ds, false).await else {
+            return Vec::new();
+        };
+        let cat = self
+            .client
+            .omap_get_all(&self.pool, &ns, CAT_OBJ)
+            .await
+            .unwrap_or_default();
+        let fixed = request.fixed_key();
+        let mut out = Vec::new();
+        for (k, _) in cat {
+            let Some(cc) = k.strip_prefix("colloc:") else {
+                continue;
+            };
+            let ck = Key::parse(cc).unwrap_or_default();
+            let conflict = ck
+                .0
+                .iter()
+                .any(|(d, v)| fixed.get(d).map(|fv| fv != v).unwrap_or(false));
+            if conflict {
+                continue;
+            }
+            let entries = self
+                .client
+                .omap_get_all(&self.pool, &ns, &index_obj(cc))
+                .await
+                .unwrap_or_default();
+            for (elem_key, raw) in entries {
+                if elem_key == "key" || elem_key == "axes" {
+                    continue;
+                }
+                let ek = Key::parse(&elem_key).unwrap_or_default();
+                let full = ds.merged(&ck).merged(&ek);
+                if !request.matches(&full) {
+                    continue;
+                }
+                if let Some(loc) =
+                    FieldLocation::parse_uri(&String::from_utf8(raw).unwrap_or_default())
+                {
+                    out.push((full, loc));
+                }
+            }
+        }
+        out
+    }
+}

@@ -1,0 +1,153 @@
+//! Retrieval requests: identifiers with multi-value expressions
+//! (`step=1/2/3`, or `step=*` to be expanded from the axes) — thesis
+//! §2.7.1 `axis()`.
+
+use std::collections::BTreeMap;
+
+use super::key::Key;
+
+/// A (possibly multi-valued, possibly partial) request.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Request {
+    /// dim → candidate values; a `*` wildcard is an empty vec
+    pub dims: BTreeMap<String, Vec<String>>,
+}
+
+impl Request {
+    /// Parse `a=1,b=2/3,c=*`.
+    pub fn parse(s: &str) -> Result<Request, String> {
+        let mut dims = BTreeMap::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| format!("bad request component `{part}`"))?;
+            let vals: Vec<String> = if v.trim() == "*" {
+                Vec::new()
+            } else {
+                v.split('/').map(|x| x.trim().to_string()).collect()
+            };
+            dims.insert(k.trim().to_string(), vals);
+        }
+        Ok(Request { dims })
+    }
+
+    pub fn from_key(key: &Key) -> Request {
+        Request {
+            dims: key
+                .0
+                .iter()
+                .map(|(k, v)| (k.clone(), vec![v.clone()]))
+                .collect(),
+        }
+    }
+
+    /// Wildcard dims that need axis expansion.
+    pub fn wildcards(&self) -> Vec<String> {
+        self.dims
+            .iter()
+            .filter(|(_, v)| v.is_empty())
+            .map(|(k, _)| k.clone())
+            .collect()
+    }
+
+    /// Substitute axis values for a wildcard dim.
+    pub fn bind(&mut self, dim: &str, values: Vec<String>) {
+        self.dims.insert(dim.to_string(), values);
+    }
+
+    /// Cartesian expansion into fully-specified identifiers.
+    /// Wildcards must have been bound first.
+    pub fn expand(&self) -> Vec<Key> {
+        let mut out = vec![Key::new()];
+        for (dim, vals) in &self.dims {
+            assert!(
+                !vals.is_empty(),
+                "unbound wildcard dim `{dim}` — call bind() with axis values first"
+            );
+            let mut next = Vec::with_capacity(out.len() * vals.len());
+            for k in &out {
+                for v in vals {
+                    next.push(k.clone().with(dim, v.clone()));
+                }
+            }
+            out = next;
+        }
+        out
+    }
+
+    /// The partial key of single-valued dims (used for list() matching).
+    pub fn fixed_key(&self) -> Key {
+        let mut k = Key::new();
+        for (dim, vals) in &self.dims {
+            if vals.len() == 1 {
+                k.set(dim, vals[0].clone());
+            }
+        }
+        k
+    }
+
+    /// Does a full key satisfy this request?
+    pub fn matches(&self, key: &Key) -> bool {
+        self.dims.iter().all(|(dim, vals)| match key.get(dim) {
+            None => false,
+            Some(v) => vals.is_empty() || vals.iter().any(|x| x == v),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_multi_and_wildcard() {
+        let r = Request::parse("step=1/2,param=v,levelist=*").unwrap();
+        assert_eq!(r.dims["step"], vec!["1", "2"]);
+        assert_eq!(r.dims["param"], vec!["v"]);
+        assert!(r.dims["levelist"].is_empty());
+        assert_eq!(r.wildcards(), vec!["levelist"]);
+    }
+
+    #[test]
+    fn expand_cartesian() {
+        let r = Request::parse("a=1/2,b=x/y").unwrap();
+        let keys = r.expand();
+        assert_eq!(keys.len(), 4);
+        let canon: Vec<String> = keys.iter().map(|k| k.canonical()).collect();
+        assert!(canon.contains(&"a=1,b=x".to_string()));
+        assert!(canon.contains(&"a=2,b=y".to_string()));
+    }
+
+    #[test]
+    #[should_panic(expected = "unbound wildcard")]
+    fn expand_panics_on_unbound_wildcard() {
+        Request::parse("a=*").unwrap().expand();
+    }
+
+    #[test]
+    fn bind_then_expand() {
+        let mut r = Request::parse("step=*").unwrap();
+        r.bind("step", vec!["1".into(), "2".into(), "3".into()]);
+        assert_eq!(r.expand().len(), 3);
+    }
+
+    #[test]
+    fn matching() {
+        let r = Request::parse("step=1/2,param=*").unwrap();
+        assert!(r.matches(&Key::of(&[("step", "1"), ("param", "v")])));
+        assert!(r.matches(&Key::of(&[("step", "2"), ("param", "t")])));
+        assert!(!r.matches(&Key::of(&[("step", "3"), ("param", "v")])));
+        assert!(!r.matches(&Key::of(&[("param", "v")])));
+    }
+
+    #[test]
+    fn from_key_roundtrip() {
+        let k = Key::of(&[("a", "1"), ("b", "2")]);
+        let r = Request::from_key(&k);
+        assert_eq!(r.expand(), vec![k]);
+    }
+}

@@ -1,0 +1,153 @@
+//! The FDB S3 Store (thesis §3.3): bucket per dataset, object per field,
+//! blocking PutObject on archive() (durable + visible on return), no-op
+//! flush(). No S3 Catalogue exists — S3 lacks atomic append and
+//! key-values (the thesis discarded it); pair this Store with a
+//! Catalogue from another backend.
+
+use std::collections::HashSet;
+use std::rc::Rc;
+
+use crate::fdb::key::Key;
+use crate::fdb::location::FieldLocation;
+use crate::s3::{MemS3, S3Api};
+use crate::util::content::Bytes;
+
+pub struct S3Store {
+    pub(crate) s3: Rc<MemS3>,
+    known_buckets: HashSet<String>,
+    counter: u64,
+    client_tag: String,
+    /// multipart mode: fields for a (dataset, collocation) accumulate as
+    /// parts of one S3 object, assembled on flush() (thesis §3.3 —
+    /// fewer S3 objects, visibility deferred to flush)
+    pub multipart: bool,
+    uploads: std::collections::HashMap<(String, String), (String, u64, u32, u64)>,
+}
+
+impl S3Store {
+    pub fn new(s3: &Rc<MemS3>, client_tag: &str) -> S3Store {
+        S3Store {
+            s3: s3.clone(),
+            known_buckets: HashSet::new(),
+            counter: 0,
+            client_tag: client_tag.to_string(),
+            multipart: false,
+            uploads: std::collections::HashMap::new(),
+        }
+    }
+
+    fn bucket_of(ds: &Key) -> String {
+        // bucket names: lowercase alnum + dashes
+        let mut b = String::from("fdb-");
+        for c in ds.canonical().chars() {
+            b.push(match c {
+                'a'..='z' | '0'..='9' => c,
+                'A'..='Z' => c.to_ascii_lowercase(),
+                _ => '-',
+            });
+        }
+        b
+    }
+
+    /// Store archive(): unique key from (time proxy, host, pid) — here the
+    /// client tag + a counter; a blocking PutObject (or an UploadPart in
+    /// multipart mode).
+    pub async fn archive(&mut self, ds: &Key, colloc: &Key, data: Bytes) -> FieldLocation {
+        let bucket = Self::bucket_of(ds);
+        if !self.known_buckets.contains(&bucket) {
+            self.s3.create_bucket(&bucket).await;
+            self.known_buckets.insert(bucket.clone());
+        }
+        if self.multipart {
+            return self.archive_part(ds, colloc, &bucket, data).await;
+        }
+        self.counter += 1;
+        let key = format!("{}-{}", self.client_tag, self.counter);
+        let length = data.len();
+        self.s3
+            .put_object(&bucket, &key, data)
+            .await
+            .expect("bucket exists");
+        FieldLocation::S3Obj {
+            bucket,
+            key,
+            length,
+        }
+    }
+
+    /// One part of the per-(dataset, collocation) multipart object.
+    async fn archive_part(
+        &mut self,
+        ds: &Key,
+        colloc: &Key,
+        bucket: &str,
+        data: Bytes,
+    ) -> FieldLocation {
+        let key = (ds.canonical(), colloc.canonical());
+        if !self.uploads.contains_key(&key) {
+            self.counter += 1;
+            let obj_key = format!("{}-{}-mp", self.client_tag, self.counter);
+            let upload = self
+                .s3
+                .create_multipart(bucket, &obj_key)
+                .await
+                .expect("bucket exists");
+            self.uploads
+                .insert(key.clone(), (obj_key, upload, 0, 0));
+        }
+        let (obj_key, upload, part_no, offset) = {
+            let u = self.uploads.get_mut(&key).unwrap();
+            u.2 += 1;
+            let off = u.3;
+            u.3 += data.len();
+            (u.0.clone(), u.1, u.2, off)
+        };
+        let length = data.len();
+        self.s3
+            .upload_part(bucket, upload, part_no, data)
+            .await
+            .expect("upload part");
+        // NOTE: the object is NOT visible until flush() completes the
+        // multipart upload — like the POSIX backends' deferred visibility
+        FieldLocation::S3Obj {
+            bucket: bucket.to_string(),
+            key: format!("{obj_key}?part-offset={offset}&len={length}"),
+            length,
+        }
+    }
+
+    /// flush(): no-op for PutObject mode; completes multipart uploads.
+    pub async fn flush(&mut self) {
+        if !self.multipart {
+            return;
+        }
+        let uploads: Vec<((String, String), (String, u64, u32, u64))> =
+            self.uploads.drain().collect();
+        for ((ds, _), (obj_key, upload, _, _)) in uploads {
+            let bucket = Self::bucket_of(&Key::parse(&ds).unwrap_or_default());
+            let _ = self.s3.complete_multipart(&bucket, &obj_key, upload).await;
+        }
+    }
+
+    pub async fn read_parts(&mut self, bucket: &str, parts: &[(String, u64)]) -> Bytes {
+        let mut out = Bytes::new();
+        for (key, len) in parts {
+            // multipart keys carry a range: `obj?part-offset=N&len=L`
+            let (key, range) = match key.split_once("?part-offset=") {
+                Some((k, rest)) => {
+                    let off: u64 = rest
+                        .split('&')
+                        .next()
+                        .and_then(|v| v.parse().ok())
+                        .unwrap_or(0);
+                    (k, Some((off, *len)))
+                }
+                None => (key.as_str(), Some((0, *len))),
+            };
+            if let Ok(Some(bytes)) = self.s3.get_object(bucket, key, range).await {
+                out.append(bytes);
+            }
+        }
+        out
+    }
+}

@@ -1,0 +1,198 @@
+//! The FDB schema: which identifier dimensions form the dataset,
+//! collocation, and element sub-keys (thesis §2.7).
+//!
+//! Two stock schemas matter for the reproduction:
+//! * [`Schema::default_posix`] — the operational schema used with the
+//!   POSIX backends: collocation = `type,levtype` (many parallel
+//!   processes share a collocation key; fine with per-process files).
+//! * [`Schema::daos_variant`] — the modified schema used with the
+//!   DAOS/Ceph backends: `number,levelist` join the collocation key so
+//!   parallel processes never contend on the same index KV (§3.1).
+
+use super::key::Key;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Schema {
+    pub dataset: Vec<String>,
+    pub collocation: Vec<String>,
+    pub element: Vec<String>,
+}
+
+fn dims(names: &[&str]) -> Vec<String> {
+    names.iter().map(|s| s.to_string()).collect()
+}
+
+impl Schema {
+    /// Operational POSIX-backend schema.
+    pub fn default_posix() -> Schema {
+        Schema {
+            dataset: dims(&["class", "expver", "stream", "date", "time"]),
+            collocation: dims(&["type", "levtype"]),
+            element: dims(&["step", "number", "levelist", "param"]),
+        }
+    }
+
+    /// Modified schema for object-store backends (avoids index-KV
+    /// contention across parallel writers).
+    pub fn daos_variant() -> Schema {
+        Schema {
+            dataset: dims(&["class", "expver", "stream", "date", "time"]),
+            collocation: dims(&["type", "levtype", "number", "levelist"]),
+            element: dims(&["step", "param"]),
+        }
+    }
+
+    /// All dims an identifier must carry.
+    pub fn all_dims(&self) -> Vec<String> {
+        let mut v = self.dataset.clone();
+        v.extend(self.collocation.clone());
+        v.extend(self.element.clone());
+        v
+    }
+
+    /// Split a full identifier into (dataset, collocation, element) keys.
+    pub fn split(&self, id: &Key) -> Result<(Key, Key, Key), SchemaError> {
+        let ds = id
+            .project(&self.dataset)
+            .ok_or_else(|| SchemaError::missing(&self.dataset, id))?;
+        let co = id
+            .project(&self.collocation)
+            .ok_or_else(|| SchemaError::missing(&self.collocation, id))?;
+        let el = id
+            .project(&self.element)
+            .ok_or_else(|| SchemaError::missing(&self.element, id))?;
+        Ok((ds, co, el))
+    }
+
+    /// Serialize for the in-dataset schema copy (`schema` file / KV).
+    pub fn to_text(&self) -> String {
+        format!(
+            "dataset: {}\ncollocation: {}\nelement: {}\n",
+            self.dataset.join(","),
+            self.collocation.join(","),
+            self.element.join(",")
+        )
+    }
+
+    /// Parse the `to_text` form.
+    pub fn parse(text: &str) -> Result<Schema, SchemaError> {
+        let mut dataset = None;
+        let mut collocation = None;
+        let mut element = None;
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once(':')
+                .ok_or(SchemaError::Malformed)?;
+            let vals: Vec<String> = v
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            match k.trim() {
+                "dataset" => dataset = Some(vals),
+                "collocation" => collocation = Some(vals),
+                "element" => element = Some(vals),
+                _ => return Err(SchemaError::Malformed),
+            }
+        }
+        Ok(Schema {
+            dataset: dataset.ok_or(SchemaError::Malformed)?,
+            collocation: collocation.ok_or(SchemaError::Malformed)?,
+            element: element.ok_or(SchemaError::Malformed)?,
+        })
+    }
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SchemaError {
+    MissingDims { wanted: String, got: String },
+    Malformed,
+}
+
+impl SchemaError {
+    fn missing(wanted: &[String], id: &Key) -> SchemaError {
+        SchemaError::MissingDims {
+            wanted: wanted.join(","),
+            got: id.canonical(),
+        }
+    }
+}
+
+impl std::fmt::Display for SchemaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SchemaError::MissingDims { wanted, got } => {
+                write!(f, "identifier `{got}` missing schema dims `{wanted}`")
+            }
+            SchemaError::Malformed => write!(f, "malformed schema text"),
+        }
+    }
+}
+impl std::error::Error for SchemaError {}
+
+/// The thesis' example identifier (Listing 2.1) — used across tests.
+pub fn example_identifier() -> Key {
+    Key::of(&[
+        ("class", "od"),
+        ("expver", "0001"),
+        ("stream", "oper"),
+        ("date", "20231201"),
+        ("time", "1200"),
+        ("type", "ef"),
+        ("levtype", "sfc"),
+        ("step", "1"),
+        ("number", "13"),
+        ("levelist", "1"),
+        ("param", "v"),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_matches_thesis_listing() {
+        let schema = Schema::default_posix();
+        let id = example_identifier();
+        let (ds, co, el) = schema.split(&id).unwrap();
+        assert_eq!(
+            ds.canonical(),
+            "class=od,date=20231201,expver=0001,stream=oper,time=1200"
+        );
+        assert_eq!(co.canonical(), "levtype=sfc,type=ef");
+        assert_eq!(el.canonical(), "levelist=1,number=13,param=v,step=1");
+    }
+
+    #[test]
+    fn daos_variant_moves_number_levelist() {
+        let schema = Schema::daos_variant();
+        let (_, co, el) = schema.split(&example_identifier()).unwrap();
+        assert_eq!(co.canonical(), "levelist=1,levtype=sfc,number=13,type=ef");
+        assert_eq!(el.canonical(), "param=v,step=1");
+    }
+
+    #[test]
+    fn split_rejects_missing_dims() {
+        let schema = Schema::default_posix();
+        let id = Key::of(&[("class", "od")]);
+        assert!(schema.split(&id).is_err());
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let s = Schema::daos_variant();
+        let back = Schema::parse(&s.to_text()).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Schema::parse("nonsense").is_err());
+        assert!(Schema::parse("dataset: a\n").is_err());
+    }
+}

@@ -1,0 +1,146 @@
+//! Binary wire format helpers for the FDB's persistent structures
+//! (TOC records, sub-TOC entries, index pages). Little-endian,
+//! length-prefixed strings — everything written to simulated storage is
+//! real serialized bytes that the readers genuinely parse back.
+
+/// Append-only encoder.
+#[derive(Default)]
+pub struct Enc {
+    pub buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new() -> Enc {
+        Enc::default()
+    }
+
+    pub fn u8(&mut self, v: u8) -> &mut Self {
+        self.buf.push(v);
+        self
+    }
+
+    pub fn u32(&mut self, v: u32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn str(&mut self, s: &str) -> &mut Self {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+        self
+    }
+
+    pub fn bytes(&mut self, b: &[u8]) -> &mut Self {
+        self.u32(b.len() as u32);
+        self.buf.extend_from_slice(b);
+        self
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Cursor-based decoder; all methods return `None` on truncation so
+/// corrupt/torn records are detected, never panic.
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    pub fn u8(&mut self) -> Option<u8> {
+        let v = *self.buf.get(self.pos)?;
+        self.pos += 1;
+        Some(v)
+    }
+
+    pub fn u32(&mut self) -> Option<u32> {
+        let b = self.buf.get(self.pos..self.pos + 4)?;
+        self.pos += 4;
+        Some(u32::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Option<u64> {
+        let b = self.buf.get(self.pos..self.pos + 8)?;
+        self.pos += 8;
+        Some(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    pub fn str(&mut self) -> Option<String> {
+        let n = self.u32()? as usize;
+        let b = self.buf.get(self.pos..self.pos + n)?;
+        self.pos += n;
+        String::from_utf8(b.to_vec()).ok()
+    }
+
+    pub fn bytes(&mut self) -> Option<Vec<u8>> {
+        let n = self.u32()? as usize;
+        let b = self.buf.get(self.pos..self.pos + n)?;
+        self.pos += n;
+        Some(b.to_vec())
+    }
+
+    pub fn skip(&mut self, n: usize) -> Option<()> {
+        if self.pos + n > self.buf.len() {
+            return None;
+        }
+        self.pos += n;
+        Some(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_types() {
+        let mut e = Enc::new();
+        e.u8(7).u32(1234).u64(u64::MAX).str("hello").bytes(&[1, 2, 3]);
+        let buf = e.finish();
+        let mut d = Dec::new(&buf);
+        assert_eq!(d.u8(), Some(7));
+        assert_eq!(d.u32(), Some(1234));
+        assert_eq!(d.u64(), Some(u64::MAX));
+        assert_eq!(d.str().as_deref(), Some("hello"));
+        assert_eq!(d.bytes(), Some(vec![1, 2, 3]));
+        assert_eq!(d.remaining(), 0);
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let mut e = Enc::new();
+        e.str("truncate-me");
+        let buf = e.finish();
+        let mut d = Dec::new(&buf[..buf.len() - 2]);
+        assert_eq!(d.str(), None);
+    }
+
+    #[test]
+    fn empty_string_and_bytes() {
+        let mut e = Enc::new();
+        e.str("").bytes(&[]);
+        let buf = e.finish();
+        let mut d = Dec::new(&buf);
+        assert_eq!(d.str().as_deref(), Some(""));
+        assert_eq!(d.bytes(), Some(vec![]));
+    }
+}

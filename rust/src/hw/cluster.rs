@@ -1,0 +1,69 @@
+//! A set of nodes joined by a fabric — the deployment unit benchmarks run on.
+
+use std::rc::Rc;
+
+use crate::hw::fabric::Fabric;
+use crate::hw::node::{Node, NodeRole};
+use crate::sim::exec::Sim;
+
+pub struct Cluster {
+    pub fabric: Rc<Fabric>,
+    pub nodes: Vec<Rc<Node>>,
+}
+
+impl Cluster {
+    pub fn new(fabric: Rc<Fabric>, nodes: Vec<Rc<Node>>) -> Cluster {
+        Cluster { fabric, nodes }
+    }
+
+    pub fn storage_nodes(&self) -> impl Iterator<Item = &Rc<Node>> {
+        self.nodes
+            .iter()
+            .filter(|n| n.role == NodeRole::Storage)
+    }
+
+    pub fn client_nodes(&self) -> impl Iterator<Item = &Rc<Node>> {
+        self.nodes.iter().filter(|n| n.role == NodeRole::Client)
+    }
+
+    pub fn metadata_nodes(&self) -> impl Iterator<Item = &Rc<Node>> {
+        self.nodes
+            .iter()
+            .filter(|n| n.role == NodeRole::Metadata)
+    }
+
+    pub fn node(&self, id: usize) -> &Rc<Node> {
+        &self.nodes[id]
+    }
+
+    /// Bulk transfer helper between two nodes of this cluster.
+    pub async fn xfer(&self, sim: &Sim, src: &Rc<Node>, dst: &Rc<Node>, bytes: u64) {
+        self.fabric.xfer(sim, &src.nic, &dst.nic, bytes).await;
+    }
+
+    /// RPC round trip between two nodes (latency only, no payload).
+    pub async fn rpc(&self, sim: &Sim, _src: &Rc<Node>, _dst: &Rc<Node>) {
+        self.fabric.rpc_rtt(sim).await;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::fabric::FabricKind;
+    use crate::hw::node::NodeRole;
+
+    #[test]
+    fn role_filters() {
+        let fabric = Fabric::new(FabricKind::Psm2);
+        let nodes = vec![
+            Node::new(0, NodeRole::Storage, 4, vec![]),
+            Node::new(1, NodeRole::Client, 4, vec![]),
+            Node::new(2, NodeRole::Client, 4, vec![]),
+        ];
+        let c = Cluster::new(fabric, nodes);
+        assert_eq!(c.storage_nodes().count(), 1);
+        assert_eq!(c.client_nodes().count(), 2);
+        assert_eq!(c.metadata_nodes().count(), 0);
+    }
+}

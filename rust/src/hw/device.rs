@@ -1,0 +1,209 @@
+//! Storage-device models: SCM (Optane DCPMM), NVMe SSD, HDD.
+//!
+//! A device is modeled in two stages:
+//!  * an **op stage** — a k-server queue whose service time is the device
+//!    access latency (k = internal parallelism / queue depth), which caps
+//!    small-op IOPS at `k / latency`;
+//!  * a **bandwidth pipe** — a 1-server queue at the full sequential
+//!    bandwidth, which caps aggregate throughput for bulk transfers.
+//!
+//! A single streaming client thus sees `latency + bytes/bw` per op and can
+//! saturate the device; many small-op clients saturate the op stage first.
+
+use std::rc::Rc;
+
+use crate::sim::exec::Sim;
+use crate::sim::resource::Resource;
+use crate::sim::time::{transfer_time, SimTime};
+
+/// Static description of a device's performance envelope.
+#[derive(Clone, Debug)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    /// sequential write bandwidth, bytes/sec
+    pub write_bw: f64,
+    /// sequential read bandwidth, bytes/sec
+    pub read_bw: f64,
+    /// per-op write access latency
+    pub write_lat: SimTime,
+    /// per-op read access latency
+    pub read_lat: SimTime,
+    /// internal op parallelism (queue depth the device services at once)
+    pub parallelism: usize,
+}
+
+impl DeviceSpec {
+    /// Intel Optane DCPMM (SCM) aggregate per NEXTGenIO node (6 DIMMs/socket
+    /// ×2 used as one pool): very low latency, strong read, weaker write.
+    pub fn scm_node() -> DeviceSpec {
+        DeviceSpec {
+            name: "optane-dcpmm",
+            write_bw: 8.0 * (1u64 << 30) as f64,
+            read_bw: 30.0 * (1u64 << 30) as f64,
+            write_lat: SimTime::nanos(350),
+            read_lat: SimTime::nanos(180),
+            parallelism: 16,
+        }
+    }
+
+    /// GCP local NVMe SSD aggregate per n2-custom-36 VM (16×375 GB = 6 TiB).
+    pub fn nvme_gcp_node() -> DeviceSpec {
+        DeviceSpec {
+            name: "nvme-local-gcp",
+            write_bw: 3.0 * (1u64 << 30) as f64,
+            read_bw: 6.6 * (1u64 << 30) as f64,
+            write_lat: SimTime::micros(25),
+            read_lat: SimTime::micros(90),
+            parallelism: 32,
+        }
+    }
+
+    /// A small metadata-grade SSD (Lustre MDT on the extra node).
+    pub fn mdt_ssd() -> DeviceSpec {
+        DeviceSpec {
+            name: "mdt-ssd",
+            write_bw: 2.0 * (1u64 << 30) as f64,
+            read_bw: 3.0 * (1u64 << 30) as f64,
+            write_lat: SimTime::micros(15),
+            read_lat: SimTime::micros(60),
+            parallelism: 16,
+        }
+    }
+}
+
+/// A live simulated device bound to a `Sim`.
+pub struct Device {
+    pub spec: DeviceSpec,
+    write_ops: Rc<Resource>,
+    read_ops: Rc<Resource>,
+    write_pipe: Rc<Resource>,
+    read_pipe: Rc<Resource>,
+}
+
+impl Device {
+    pub fn new(spec: DeviceSpec, tag: &str) -> Rc<Device> {
+        Rc::new(Device {
+            write_ops: Resource::new(format!("{tag}/wops"), spec.parallelism),
+            read_ops: Resource::new(format!("{tag}/rops"), spec.parallelism),
+            write_pipe: Resource::new(format!("{tag}/wbw"), 1),
+            read_pipe: Resource::new(format!("{tag}/rbw"), 1),
+            spec,
+        })
+    }
+
+    /// Persist `bytes`; returns when durable (no volatile cache modeled —
+    /// write-back caching is a *client*-side concern, see lustre::client).
+    pub async fn write(&self, sim: &Sim, bytes: u64) {
+        self.write_with_lat(sim, bytes, self.spec.write_lat).await;
+    }
+
+    /// Write with an overridden commit latency — used by log-structured
+    /// consumers (DAOS VOS WAL) whose small commits don't pay the full
+    /// block-write latency.
+    pub async fn write_with_lat(&self, sim: &Sim, bytes: u64, lat: SimTime) {
+        self.write_ops.serve(sim, lat).await;
+        self.write_pipe
+            .serve(sim, transfer_time(bytes, self.spec.write_bw))
+            .await;
+    }
+
+    /// Read `bytes` from media.
+    pub async fn read(&self, sim: &Sim, bytes: u64) {
+        self.read_with_lat(sim, bytes, self.spec.read_lat).await;
+    }
+
+    /// Read with an overridden access latency — byte-addressable
+    /// consumers (DAOS on SCM, indexed VOS extents) skip the block
+    /// fetch path.
+    pub async fn read_with_lat(&self, sim: &Sim, bytes: u64, lat: SimTime) {
+        self.read_ops.serve(sim, lat).await;
+        self.read_pipe
+            .serve(sim, transfer_time(bytes, self.spec.read_bw))
+            .await;
+    }
+
+    /// Observed busy time of the write pipe (utilization reporting).
+    pub fn write_busy(&self) -> SimTime {
+        self.write_pipe.busy_time()
+    }
+
+    pub fn read_busy(&self) -> SimTime {
+        self.read_pipe.busy_time()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::Cell;
+
+    fn run_writes(spec: DeviceSpec, nclients: usize, ops: usize, bytes: u64) -> f64 {
+        let sim = Sim::new();
+        let dev = Device::new(spec, "t");
+        for _ in 0..nclients {
+            let s = sim.clone();
+            let d = dev.clone();
+            sim.spawn(async move {
+                for _ in 0..ops {
+                    d.write(&s, bytes).await;
+                }
+            });
+        }
+        let end = sim.run();
+        (nclients * ops) as u64 as f64 * bytes as f64 / end.as_secs_f64()
+    }
+
+    #[test]
+    fn bulk_write_saturates_bandwidth() {
+        // 8 clients × 100 × 1 MiB on an 8 GiB/s SCM node ≈ 8 GiB/s aggregate
+        let bw = run_writes(DeviceSpec::scm_node(), 8, 100, 1 << 20);
+        let ideal = 8.0 * (1u64 << 30) as f64;
+        assert!(bw > 0.85 * ideal, "bw {bw} vs ideal {ideal}");
+        assert!(bw <= ideal * 1.01);
+    }
+
+    #[test]
+    fn single_client_also_near_full_bw() {
+        let bw = run_writes(DeviceSpec::scm_node(), 1, 200, 1 << 20);
+        let ideal = 8.0 * (1u64 << 30) as f64;
+        assert!(bw > 0.7 * ideal, "bw {bw}");
+    }
+
+    #[test]
+    fn small_ops_are_iops_capped() {
+        // 64-byte writes: throughput must be far below the bandwidth cap.
+        let bw = run_writes(DeviceSpec::nvme_gcp_node(), 16, 200, 64);
+        let ideal = 3.0 * (1u64 << 30) as f64;
+        assert!(bw < 0.05 * ideal, "bw {bw}");
+    }
+
+    #[test]
+    fn read_faster_than_write_on_scm() {
+        let sim = Sim::new();
+        let dev = Device::new(DeviceSpec::scm_node(), "t");
+        let wr_end = Cell::new(SimTime::ZERO);
+        {
+            let s = sim.clone();
+            let d = dev.clone();
+            sim.spawn(async move {
+                for _ in 0..100 {
+                    d.write(&s, 1 << 20).await;
+                }
+            });
+        }
+        let w = sim.run();
+        wr_end.set(w);
+        let sim2 = Sim::new();
+        let dev2 = Device::new(DeviceSpec::scm_node(), "t2");
+        {
+            let s = sim2.clone();
+            sim2.spawn(async move {
+                for _ in 0..100 {
+                    dev2.read(&s, 1 << 20).await;
+                }
+            });
+        }
+        let r = sim2.run();
+        assert!(r < w, "read {r} should beat write {w}");
+    }
+}

@@ -1,0 +1,230 @@
+//! Network fabric models: Omni-Path PSM2, TCP (over OPA or GCP VPC), RDMA.
+//!
+//! Each node owns a full-duplex NIC (tx pipe + rx pipe at link bandwidth).
+//! A bulk transfer holds the sender's tx pipe and the receiver's rx pipe
+//! concurrently (acquired in global order to avoid cycles) for
+//! `bytes / link_bw`, plus one message latency. Small control messages
+//! (RPCs) cost latency only plus a per-message CPU overhead constant —
+//! this is where TCP's kernel involvement hurts vs user-space PSM2,
+//! reproducing Table 4.1's ratio.
+
+use std::rc::Rc;
+
+use crate::sim::exec::Sim;
+use crate::sim::resource::Resource;
+use crate::sim::time::{transfer_time, SimTime};
+
+/// Fabric technology profile.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FabricKind {
+    /// Omni-Path with PSM2: user-space, ~1.5 µs latency, ~11.2 GiB/s.
+    Psm2,
+    /// TCP over Omni-Path: kernel path, ~25 µs, ~2.8 GiB/s effective.
+    TcpOpa,
+    /// GCP VPC TCP: ~30 µs, ~3.1 GiB/s per VM (32 Gbit/s egress).
+    TcpGcp,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct FabricSpec {
+    pub kind: FabricKind,
+    /// one-way small-message latency
+    pub msg_lat: SimTime,
+    /// per-NIC link bandwidth, bytes/sec
+    pub link_bw: f64,
+    /// per-message CPU/kernel overhead charged to the initiating side
+    pub per_msg_cpu: SimTime,
+}
+
+impl FabricSpec {
+    pub fn of(kind: FabricKind) -> FabricSpec {
+        match kind {
+            FabricKind::Psm2 => FabricSpec {
+                kind,
+                msg_lat: SimTime::nanos(1_500),
+                link_bw: 11.2 * (1u64 << 30) as f64,
+                per_msg_cpu: SimTime::nanos(400),
+            },
+            FabricKind::TcpOpa => FabricSpec {
+                kind,
+                msg_lat: SimTime::micros(25),
+                link_bw: 2.8 * (1u64 << 30) as f64,
+                per_msg_cpu: SimTime::micros(4),
+            },
+            FabricKind::TcpGcp => FabricSpec {
+                kind,
+                msg_lat: SimTime::micros(30),
+                link_bw: 3.1 * (1u64 << 30) as f64,
+                per_msg_cpu: SimTime::micros(4),
+            },
+        }
+    }
+}
+
+/// A node's network interface: independent tx and rx bandwidth pipes.
+pub struct Nic {
+    pub id: usize,
+    tx: Rc<Resource>,
+    rx: Rc<Resource>,
+}
+
+impl Nic {
+    pub fn new(id: usize) -> Rc<Nic> {
+        Rc::new(Nic {
+            id,
+            tx: Resource::new(format!("nic{id}/tx"), 1),
+            rx: Resource::new(format!("nic{id}/rx"), 1),
+        })
+    }
+
+    pub fn tx_busy(&self) -> SimTime {
+        self.tx.busy_time()
+    }
+    pub fn rx_busy(&self) -> SimTime {
+        self.rx.busy_time()
+    }
+}
+
+/// The fabric connecting all nodes of a cluster.
+pub struct Fabric {
+    pub spec: FabricSpec,
+}
+
+impl Fabric {
+    pub fn new(kind: FabricKind) -> Rc<Fabric> {
+        Rc::new(Fabric {
+            spec: FabricSpec::of(kind),
+        })
+    }
+
+    /// Bulk transfer of `bytes` from `src` to `dst`.
+    ///
+    /// Holds src.tx and dst.rx concurrently for the wire time. Resources
+    /// are acquired in (nic id, direction) order so concurrent opposing
+    /// transfers cannot deadlock.
+    pub async fn xfer(&self, sim: &Sim, src: &Rc<Nic>, dst: &Rc<Nic>, bytes: u64) {
+        sim.sleep(self.spec.msg_lat + self.spec.per_msg_cpu).await;
+        if src.id == dst.id {
+            // intra-node: charge a memcpy at 4x link speed, no NIC usage
+            sim.sleep(transfer_time(bytes, self.spec.link_bw * 4.0)).await;
+            return;
+        }
+        let dur = transfer_time(bytes, self.spec.link_bw);
+        // global acquisition order: lower nic id first; tx before rx on tie
+        let (first, second) = if src.id <= dst.id {
+            (&src.tx, &dst.rx)
+        } else {
+            (&dst.rx, &src.tx)
+        };
+        first.acquire().await;
+        second.acquire().await;
+        sim.sleep(dur).await;
+        second.release();
+        first.release();
+    }
+
+    /// Small control message one-way (e.g. an RPC request or reply).
+    pub async fn msg(&self, sim: &Sim) {
+        sim.sleep(self.spec.msg_lat + self.spec.per_msg_cpu).await;
+    }
+
+    /// A full request/reply round trip with no payload.
+    pub async fn rpc_rtt(&self, sim: &Sim) {
+        self.msg(sim).await;
+        self.msg(sim).await;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::Cell;
+    use std::rc::Rc;
+
+    #[test]
+    fn single_stream_hits_link_bw() {
+        let sim = Sim::new();
+        let fabric = Fabric::new(FabricKind::Psm2);
+        let a = Nic::new(0);
+        let b = Nic::new(1);
+        let s = sim.clone();
+        let f = fabric.clone();
+        let (a2, b2) = (a.clone(), b.clone());
+        sim.spawn(async move {
+            for _ in 0..100 {
+                f.xfer(&s, &a2, &b2, 8 << 20).await;
+            }
+        });
+        let end = sim.run();
+        let bw = 100.0 * (8u64 << 20) as f64 / end.as_secs_f64();
+        let ideal = 11.2 * (1u64 << 30) as f64;
+        assert!(bw > 0.9 * ideal, "bw {bw}");
+    }
+
+    #[test]
+    fn many_to_one_shares_receiver() {
+        let sim = Sim::new();
+        let fabric = Fabric::new(FabricKind::TcpGcp);
+        let server = Nic::new(0);
+        for i in 1..=4 {
+            let cli = Nic::new(i);
+            let s = sim.clone();
+            let f = fabric.clone();
+            let srv = server.clone();
+            sim.spawn(async move {
+                for _ in 0..50 {
+                    f.xfer(&s, &cli, &srv, 1 << 20).await;
+                }
+            });
+        }
+        let end = sim.run();
+        let bw = 200.0 * (1u64 << 20) as f64 / end.as_secs_f64();
+        let ideal = 3.1 * (1u64 << 30) as f64;
+        assert!(bw < ideal * 1.01, "bw {bw} cannot exceed receiver link");
+        assert!(bw > 0.8 * ideal, "bw {bw} should approach receiver link");
+    }
+
+    #[test]
+    fn psm2_latency_beats_tcp() {
+        let lat = |kind| {
+            let sim = Sim::new();
+            let f = Fabric::new(kind);
+            let done = Rc::new(Cell::new(SimTime::ZERO));
+            let d = done.clone();
+            let s = sim.clone();
+            sim.spawn(async move {
+                for _ in 0..100 {
+                    f.rpc_rtt(&s).await;
+                }
+                d.set(s.now());
+            });
+            sim.run();
+            done.get()
+        };
+        let psm2 = lat(FabricKind::Psm2);
+        let tcp = lat(FabricKind::TcpOpa);
+        assert!(
+            tcp.as_nanos() > 10 * psm2.as_nanos(),
+            "tcp {tcp} vs psm2 {psm2}"
+        );
+    }
+
+    #[test]
+    fn opposing_transfers_no_deadlock() {
+        let sim = Sim::new();
+        let fabric = Fabric::new(FabricKind::Psm2);
+        let a = Nic::new(0);
+        let b = Nic::new(1);
+        for _ in 0..10 {
+            let (s, f, x, y) = (sim.clone(), fabric.clone(), a.clone(), b.clone());
+            sim.spawn(async move {
+                f.xfer(&s, &x, &y, 4 << 20).await;
+            });
+            let (s, f, x, y) = (sim.clone(), fabric.clone(), b.clone(), a.clone());
+            sim.spawn(async move {
+                f.xfer(&s, &x, &y, 4 << 20).await;
+            });
+        }
+        sim.run(); // must terminate
+    }
+}

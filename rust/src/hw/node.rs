@@ -1,0 +1,88 @@
+//! A simulated cluster node: NIC + CPU pool + storage device(s).
+
+use std::rc::Rc;
+
+use crate::hw::device::{Device, DeviceSpec};
+use crate::hw::fabric::Nic;
+use crate::sim::exec::Sim;
+use crate::sim::resource::Resource;
+use crate::sim::time::SimTime;
+
+/// Node role — informational, used by deployments and reports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeRole {
+    Client,
+    Storage,
+    Metadata,
+    Monitor,
+}
+
+pub struct Node {
+    pub id: usize,
+    pub role: NodeRole,
+    pub nic: Rc<Nic>,
+    /// CPU service pool for server-side request handling.
+    pub cpu: Rc<Resource>,
+    /// Storage devices (empty for pure clients).
+    pub devices: Vec<Rc<Device>>,
+}
+
+impl Node {
+    pub fn new(id: usize, role: NodeRole, cores: usize, devs: Vec<DeviceSpec>) -> Rc<Node> {
+        Rc::new(Node {
+            id,
+            role,
+            nic: Nic::new(id),
+            cpu: Resource::new(format!("node{id}/cpu"), cores.max(1)),
+            devices: devs
+                .into_iter()
+                .enumerate()
+                .map(|(i, spec)| Device::new(spec, &format!("node{id}/dev{i}")))
+                .collect(),
+        })
+    }
+
+    /// Primary device (most nodes have exactly one storage pool).
+    pub fn dev(&self) -> &Rc<Device> {
+        &self.devices[0]
+    }
+
+    /// Charge server-side CPU for handling one request.
+    pub async fn cpu_serve(&self, sim: &Sim, dur: SimTime) {
+        self.cpu.serve(sim, dur).await;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_construction() {
+        let n = Node::new(3, NodeRole::Storage, 36, vec![DeviceSpec::scm_node()]);
+        assert_eq!(n.id, 3);
+        assert_eq!(n.devices.len(), 1);
+        assert_eq!(n.dev().spec.name, "optane-dcpmm");
+    }
+
+    #[test]
+    fn client_has_no_devices() {
+        let n = Node::new(0, NodeRole::Client, 48, vec![]);
+        assert!(n.devices.is_empty());
+    }
+
+    #[test]
+    fn cpu_pool_limits_concurrency() {
+        let sim = Sim::new();
+        let n = Node::new(0, NodeRole::Storage, 2, vec![]);
+        for _ in 0..4 {
+            let s = sim.clone();
+            let node = n.clone();
+            sim.spawn(async move {
+                node.cpu_serve(&s, SimTime::micros(10)).await;
+            });
+        }
+        // 4 jobs on 2 cores, 10us each → 20us makespan
+        assert_eq!(sim.run(), SimTime::micros(20));
+    }
+}

@@ -1,0 +1,115 @@
+//! Testbed profiles: NEXTGenIO (SCM + Omni-Path) and GCP (NVMe + VPC TCP).
+//!
+//! These encode the calibration constants in DESIGN.md. The figure
+//! harness builds clusters from a profile + node counts, matching the
+//! paper's deployments (e.g. "16 server VMs + 32 client VMs, 2:1").
+
+use std::rc::Rc;
+
+use crate::hw::cluster::Cluster;
+use crate::hw::device::DeviceSpec;
+use crate::hw::fabric::{Fabric, FabricKind};
+use crate::hw::node::{Node, NodeRole};
+
+/// Which testbed a deployment models.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Testbed {
+    /// NEXTGenIO: Optane DCPMM nodes, Omni-Path (PSM2 for DAOS, TCP-capable).
+    NextGenIo,
+    /// GCP: n2-custom-36-153600 VMs with 6 TiB local NVMe, VPC TCP.
+    Gcp,
+}
+
+impl Testbed {
+    pub fn storage_device(self) -> DeviceSpec {
+        match self {
+            Testbed::NextGenIo => DeviceSpec::scm_node(),
+            Testbed::Gcp => DeviceSpec::nvme_gcp_node(),
+        }
+    }
+
+    /// The fabric a given storage system can exploit on this testbed.
+    /// Ceph cannot use PSM2/RDMA (thesis §2.4) — always TCP.
+    pub fn fabric_for(self, tcp_only: bool) -> FabricKind {
+        match (self, tcp_only) {
+            (Testbed::NextGenIo, false) => FabricKind::Psm2,
+            (Testbed::NextGenIo, true) => FabricKind::TcpOpa,
+            (Testbed::Gcp, _) => FabricKind::TcpGcp,
+        }
+    }
+
+    pub fn cores(self) -> usize {
+        match self {
+            Testbed::NextGenIo => 48,
+            Testbed::Gcp => 36,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Testbed::NextGenIo => "NEXTGenIO",
+            Testbed::Gcp => "GCP n2-custom-36",
+        }
+    }
+}
+
+/// Build a cluster: `servers` storage nodes, `clients` client nodes, and
+/// optionally one extra metadata/monitor node (Lustre MDS / Ceph Mon).
+pub fn build_cluster(
+    testbed: Testbed,
+    servers: usize,
+    clients: usize,
+    extra_md_node: bool,
+    tcp_only: bool,
+) -> Cluster {
+    let fabric = Fabric::new(testbed.fabric_for(tcp_only));
+    let mut nodes: Vec<Rc<Node>> = Vec::new();
+    let mut id = 0;
+    for _ in 0..servers {
+        nodes.push(Node::new(
+            id,
+            NodeRole::Storage,
+            testbed.cores(),
+            vec![testbed.storage_device()],
+        ));
+        id += 1;
+    }
+    if extra_md_node {
+        nodes.push(Node::new(
+            id,
+            NodeRole::Metadata,
+            testbed.cores(),
+            vec![DeviceSpec::mdt_ssd()],
+        ));
+        id += 1;
+    }
+    for _ in 0..clients {
+        nodes.push(Node::new(id, NodeRole::Client, testbed.cores(), vec![]));
+        id += 1;
+    }
+    Cluster::new(fabric, nodes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nextgenio_uses_psm2_unless_tcp_only() {
+        assert_eq!(
+            Testbed::NextGenIo.fabric_for(false),
+            FabricKind::Psm2
+        );
+        assert_eq!(Testbed::NextGenIo.fabric_for(true), FabricKind::TcpOpa);
+        assert_eq!(Testbed::Gcp.fabric_for(false), FabricKind::TcpGcp);
+    }
+
+    #[test]
+    fn cluster_layout() {
+        let c = build_cluster(Testbed::Gcp, 4, 8, true, false);
+        assert_eq!(c.storage_nodes().count(), 4);
+        assert_eq!(c.client_nodes().count(), 8);
+        assert_eq!(c.metadata_nodes().count(), 1);
+        assert_eq!(c.nodes.len(), 13);
+    }
+}

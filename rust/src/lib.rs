@@ -1,0 +1,64 @@
+//! # fdb-rs
+//!
+//! Reproduction of *"Exploring Novel Data Storage Approaches for
+//! Large-Scale Numerical Weather Prediction"* (Manubens Gil, 2025).
+//!
+//! The crate contains, bottom-up:
+//!
+//! * [`util`] — self-contained replacements for crates unavailable in the
+//!   offline build (PRNG, CLI parsing, JSON, property testing, stats).
+//! * [`sim`] — a deterministic single-threaded virtual-time async executor
+//!   (the discrete-event engine), timed FIFO resources, and per-op-class
+//!   trace accounting.
+//! * [`hw`] — hardware models: SCM/NVMe devices, NICs, PSM2/TCP fabrics,
+//!   nodes, clusters, and the NEXTGenIO / GCP testbed profiles.
+//! * [`lustre`], [`daos`], [`ceph`], [`s3`] — the storage substrates the
+//!   thesis evaluates, implemented as faithful behavioural simulators
+//!   (real data + real index structures, virtual time).
+//! * [`fdb`] — the FDB meteorological object store: schema-driven keys,
+//!   Catalogue/Store abstractions, and the POSIX, DAOS, Ceph/RADOS and S3
+//!   backends described in Chapters 2–3.
+//! * [`bench`] — IOR-like, Field I/O, and fdb-hammer workload generators
+//!   plus the scenario registry that regenerates every evaluation figure.
+//! * [`workflow`] — the operational NWP I/O pattern: I/O servers, flush
+//!   barriers, staggered PGEN jobs.
+//! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas PGEN
+//!   artifacts (`artifacts/*.hlo.txt`); python never runs at request time.
+//! * [`coordinator`] — the leader that wires configs, clusters, workloads
+//!   and the runtime together behind the `fdbctl` CLI.
+
+pub mod util {
+    pub mod cli;
+    pub mod content;
+    pub mod humansize;
+    pub mod json;
+    pub mod prop;
+    pub mod rng;
+    pub mod stats;
+}
+
+pub mod sim {
+    pub mod exec;
+    pub mod futures;
+    pub mod resource;
+    pub mod time;
+    pub mod trace;
+}
+
+pub mod hw {
+    pub mod cluster;
+    pub mod device;
+    pub mod fabric;
+    pub mod node;
+    pub mod profiles;
+}
+
+pub mod lustre;
+pub mod daos;
+pub mod ceph;
+pub mod s3;
+pub mod fdb;
+pub mod bench;
+pub mod workflow;
+pub mod runtime;
+pub mod coordinator;

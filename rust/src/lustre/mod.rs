@@ -1,0 +1,395 @@
+//! Simulated Lustre distributed file system (thesis §2.2.1).
+//!
+//! Faithful to the architectural mechanisms that drive the paper's
+//! results:
+//!
+//! * **Centralized metadata** — every namespace op (create/open/stat/
+//!   mkdir/unlink) is an RPC to the single MDS node, served by a bounded
+//!   thread pool and journaled on the MDT device. This is the scaling
+//!   bottleneck object stores avoid via algorithmic placement.
+//! * **Distributed Lock Manager** — whole-file extent locks with client
+//!   lock caching and revocation callbacks. Write+read contention causes
+//!   lock ping-pong plus forced dirty-page flushes, reproducing the
+//!   thesis' contention penalty (Figs 4.13/4.15/4.22/4.25).
+//! * **Client page cache** — writes buffer in client memory (a memcpy)
+//!   and persist on fsync/fdatasync or dirty-budget pressure; this is why
+//!   Lustre wins at small scale and why flush() is expensive.
+//! * **Striping** — files split across OSTs in `stripe_size` chunks,
+//!   transfers to distinct OSTs proceed concurrently.
+//!
+//! File *content* is real bytes held in shared state (POSIX strong
+//! consistency: reads always observe prior writes); only time is
+//! simulated.
+
+mod dlm;
+mod posix;
+
+pub use dlm::{DlmStats, LockMode};
+pub use posix::{Fd, FsError, LustreClient};
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::hw::cluster::Cluster;
+use crate::hw::node::Node;
+use crate::sim::exec::Sim;
+use crate::sim::resource::Resource;
+use crate::sim::time::SimTime;
+
+/// Striping layout for a file (Lustre `lfs setstripe`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StripeSpec {
+    /// number of OSTs the file is spread over
+    pub count: usize,
+    /// bytes per stripe chunk
+    pub size: u64,
+}
+
+impl StripeSpec {
+    /// Lustre default: a single OST, 1 MiB stripes.
+    pub fn default_layout() -> StripeSpec {
+        StripeSpec {
+            count: 1,
+            size: 1 << 20,
+        }
+    }
+
+    /// The FDB's data-file layout: 8 OSTs × 8 MiB (thesis §2.7.2).
+    pub fn fdb_data() -> StripeSpec {
+        StripeSpec {
+            count: 8,
+            size: 8 << 20,
+        }
+    }
+}
+
+/// Per-file authoritative state.
+pub(crate) struct FileState {
+    pub data: crate::util::content::Content,
+    pub stripe: StripeSpec,
+    /// OST indices this file's stripes live on (round-robin)
+    pub osts: Vec<usize>,
+}
+
+/// MDS service-time calibration (per metadata op class).
+#[derive(Clone, Copy, Debug)]
+pub struct MdsCosts {
+    pub create: SimTime,
+    pub open: SimTime,
+    pub stat: SimTime,
+    pub mkdir: SimTime,
+    pub unlink: SimTime,
+    pub readdir_base: SimTime,
+}
+
+impl Default for MdsCosts {
+    fn default() -> Self {
+        MdsCosts {
+            create: SimTime::micros(120),
+            open: SimTime::micros(40),
+            stat: SimTime::micros(30),
+            mkdir: SimTime::micros(100),
+            unlink: SimTime::micros(80),
+            readdir_base: SimTime::micros(50),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct LustreConfig {
+    /// OSTs per OSS node (each OST shares the node device)
+    pub osts_per_oss: usize,
+    /// DNE: number of MDS service instances the metadata workload is
+    /// balanced over (DNE2-style striped directories; thesis §2.2.1)
+    pub mds_count: usize,
+    /// MDS service thread pool size (per MDS)
+    pub mds_threads: usize,
+    pub mds_costs: MdsCosts,
+    /// per-bulk-op OSS server CPU cost (kernel + ldiskfs path)
+    pub oss_op_cpu: SimTime,
+    /// per-syscall client kernel overhead
+    pub syscall_cpu: SimTime,
+    /// client page-cache memcpy bandwidth (bytes/s)
+    pub memcpy_bw: f64,
+    /// per-(client,file) dirty budget before forced writeback
+    pub dirty_budget: u64,
+    pub default_stripe: StripeSpec,
+}
+
+impl Default for LustreConfig {
+    fn default() -> Self {
+        LustreConfig {
+            osts_per_oss: 1,
+            mds_count: 1,
+            mds_threads: 16,
+            mds_costs: MdsCosts::default(),
+            oss_op_cpu: SimTime::micros(20),
+            syscall_cpu: SimTime::micros(3),
+            memcpy_bw: 9.0 * (1u64 << 30) as f64,
+            dirty_budget: 256 << 20,
+            default_stripe: StripeSpec::default_layout(),
+        }
+    }
+}
+
+/// One OST: served by an OSS node (sharing that node's device + NIC).
+pub(crate) struct Ost {
+    pub oss_node: Rc<Node>,
+}
+
+/// The deployed file system.
+pub struct Lustre {
+    pub sim: Sim,
+    pub cluster: Rc<Cluster>,
+    pub config: LustreConfig,
+    pub(crate) mds_node: Rc<Node>,
+    /// one bounded service pool per DNE MDS instance
+    pub(crate) mds_pools: Vec<Rc<Resource>>,
+    pub(crate) osts: Vec<Ost>,
+    pub(crate) namespace: RefCell<HashMap<String, u64>>,
+    pub(crate) dirs: RefCell<HashMap<String, Vec<String>>>,
+    pub(crate) files: RefCell<HashMap<u64, FileState>>,
+    pub(crate) next_ino: Cell<u64>,
+    pub(crate) next_ost: Cell<usize>,
+    pub(crate) dlm: dlm::Dlm,
+    pub(crate) next_client: Cell<u64>,
+    /// dirty-byte accounting visible across clients, keyed by
+    /// (client id, inode) — needed for cooperative lock revocation.
+    pub(crate) foreign_dirty: RefCell<HashMap<(u64, u64), u64>>,
+}
+
+impl Lustre {
+    /// Deploy over a cluster: storage nodes become OSSs; the metadata node
+    /// (or the first storage node if none) hosts the MDS.
+    pub fn deploy(sim: &Sim, cluster: &Rc<Cluster>, config: LustreConfig) -> Rc<Lustre> {
+        let mds_node = cluster
+            .metadata_nodes()
+            .next()
+            .or_else(|| cluster.storage_nodes().next())
+            .expect("lustre needs at least one storage or metadata node")
+            .clone();
+        let mut osts = Vec::new();
+        for oss in cluster.storage_nodes() {
+            for _ in 0..config.osts_per_oss {
+                osts.push(Ost {
+                    oss_node: oss.clone(),
+                });
+            }
+        }
+        assert!(!osts.is_empty(), "lustre needs at least one OST");
+        let mds_pools = (0..config.mds_count.max(1))
+            .map(|i| Resource::new(format!("mds{i}/threads"), config.mds_threads))
+            .collect();
+        Rc::new(Lustre {
+            sim: sim.clone(),
+            cluster: cluster.clone(),
+            config,
+            mds_node,
+            mds_pools,
+            osts,
+            namespace: RefCell::new(HashMap::new()),
+            dirs: RefCell::new(HashMap::new()),
+            files: RefCell::new(HashMap::new()),
+            next_ino: Cell::new(1),
+            next_ost: Cell::new(0),
+            dlm: dlm::Dlm::new(),
+            next_client: Cell::new(0),
+            foreign_dirty: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Create a client mounted from `node`. One per simulated process.
+    pub fn client(self: &Rc<Self>, node: &Rc<Node>) -> LustreClient {
+        let id = self.next_client.get();
+        self.next_client.set(id + 1);
+        LustreClient::new(self.clone(), node.clone(), id)
+    }
+
+    /// Aggregate DLM statistics (revocations, conflicts) for reporting.
+    pub fn dlm_stats(&self) -> DlmStats {
+        self.dlm.stats()
+    }
+
+    /// Number of OSTs deployed.
+    pub fn ost_count(&self) -> usize {
+        self.osts.len()
+    }
+
+    /// Charge an MDS metadata op: client→MDS round trip + bounded service
+    /// threads + MDT journal write for mutating ops. With DNE the
+    /// workload balances over `mds_count` service instances by a path
+    /// hash (DNE2 striped-directory behaviour).
+    pub(crate) async fn mds_op(&self, sim: &Sim, cost: SimTime, journal: bool) {
+        self.mds_op_on(sim, cost, journal, 0).await;
+    }
+
+    pub(crate) async fn mds_op_on(&self, sim: &Sim, cost: SimTime, journal: bool, shard: u64) {
+        let pool = &self.mds_pools[(shard as usize) % self.mds_pools.len()];
+        self.cluster.fabric.msg(sim).await;
+        pool.acquire().await;
+        self.mds_node.cpu_serve(sim, cost).await;
+        if journal {
+            self.mds_node.dev().write(sim, 4096).await;
+        }
+        pool.release();
+        self.cluster.fabric.msg(sim).await;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::profiles::{build_cluster, Testbed};
+
+    fn small_fs() -> (Sim, Rc<Lustre>, Rc<Cluster>) {
+        let sim = Sim::new();
+        let cluster = Rc::new(build_cluster(Testbed::NextGenIo, 2, 2, true, true));
+        let fs = Lustre::deploy(&sim, &cluster, LustreConfig::default());
+        (sim, fs, cluster)
+    }
+
+    #[test]
+    fn deploy_assigns_osts_and_mds() {
+        let (_sim, fs, _c) = small_fs();
+        assert_eq!(fs.ost_count(), 2);
+        assert_eq!(fs.mds_node.role, crate::hw::node::NodeRole::Metadata);
+    }
+
+    #[test]
+    fn write_read_roundtrip_cross_client() {
+        let (sim, fs, cluster) = small_fs();
+        let client_node = cluster.client_nodes().next().unwrap().clone();
+        let fs2 = fs.clone();
+        sim.spawn(async move {
+            let mut cli = fs2.client(&client_node);
+            cli.mkdir("/data").await.unwrap();
+            let fd = cli
+                .create("/data/f1", StripeSpec::fdb_data())
+                .await
+                .unwrap();
+            cli.write(&fd, b"hello lustre").await.unwrap();
+            cli.fdatasync(&fd).await.unwrap();
+            let back = cli.read(&fd, 0, 12).await.unwrap().to_vec();
+            assert_eq!(&back, b"hello lustre");
+            // cross-client visibility
+            let reader_node = fs2.cluster.client_nodes().nth(1).unwrap().clone();
+            let mut rdr = fs2.client(&reader_node);
+            let fd2 = rdr.open("/data/f1").await.unwrap().unwrap();
+            let got = rdr.read(&fd2, 6, 6).await.unwrap().to_vec();
+            assert_eq!(&got, b"lustre");
+        });
+        sim.run();
+    }
+
+    #[test]
+    fn mkdir_reports_already_exists() {
+        let (sim, fs, cluster) = small_fs();
+        let node = cluster.client_nodes().next().unwrap().clone();
+        sim.spawn(async move {
+            let mut cli = fs.client(&node);
+            cli.mkdir("/d").await.unwrap();
+            assert!(matches!(
+                cli.mkdir("/d").await,
+                Err(FsError::AlreadyExists)
+            ));
+        });
+        sim.run();
+    }
+
+    #[test]
+    fn stat_missing_file() {
+        let (sim, fs, cluster) = small_fs();
+        let node = cluster.client_nodes().next().unwrap().clone();
+        sim.spawn(async move {
+            let mut cli = fs.client(&node);
+            assert!(cli.stat("/nope").await.is_none());
+        });
+        sim.run();
+    }
+
+    #[test]
+    fn append_mode_appends_atomically() {
+        let (sim, fs, cluster) = small_fs();
+        let node = cluster.client_nodes().next().unwrap().clone();
+        sim.spawn(async move {
+            let mut a = fs.client(&node);
+            a.mkdir("/d").await.unwrap();
+            let fd = a
+                .create("/d/toc", StripeSpec::default_layout())
+                .await
+                .unwrap();
+            a.write(&fd, b"AAAA").await.unwrap();
+            a.fdatasync(&fd).await.unwrap();
+            let fd2 = a.open_append("/d/toc").await.unwrap().unwrap();
+            a.write(&fd2, b"BBBB").await.unwrap();
+            a.fdatasync(&fd2).await.unwrap();
+            let all = a.read_all("/d/toc").await.unwrap().to_vec();
+            assert_eq!(&all, b"AAAABBBB");
+        });
+        sim.run();
+    }
+
+    #[test]
+    fn striped_file_lands_on_multiple_osts() {
+        let (sim, fs, cluster) = small_fs();
+        let node = cluster.client_nodes().next().unwrap().clone();
+        let fs2 = fs.clone();
+        sim.spawn(async move {
+            let mut cli = fs2.client(&node);
+            cli.mkdir("/d").await.unwrap();
+            let fd = cli
+                .create(
+                    "/d/wide",
+                    StripeSpec {
+                        count: 2,
+                        size: 1 << 20,
+                    },
+                )
+                .await
+                .unwrap();
+            cli.write(&fd, &vec![7u8; 4 << 20]).await.unwrap();
+            cli.fdatasync(&fd).await.unwrap();
+            let files = fs2.files.borrow();
+            let f = files.get(&fd.ino()).unwrap();
+            assert_eq!(f.osts.len(), 2);
+            assert_ne!(f.osts[0], f.osts[1]);
+        });
+        sim.run();
+    }
+
+    #[test]
+    fn readdir_lists_children() {
+        let (sim, fs, cluster) = small_fs();
+        let node = cluster.client_nodes().next().unwrap().clone();
+        sim.spawn(async move {
+            let mut cli = fs.client(&node);
+            cli.mkdir("/root").await.unwrap();
+            for i in 0..3 {
+                cli.create(&format!("/root/f{i}"), StripeSpec::default_layout())
+                    .await
+                    .unwrap();
+            }
+            let mut names = cli.readdir("/root").await.unwrap();
+            names.sort();
+            assert_eq!(names, vec!["f0", "f1", "f2"]);
+        });
+        sim.run();
+    }
+
+    #[test]
+    fn unlink_removes_file() {
+        let (sim, fs, cluster) = small_fs();
+        let node = cluster.client_nodes().next().unwrap().clone();
+        sim.spawn(async move {
+            let mut cli = fs.client(&node);
+            cli.mkdir("/d").await.unwrap();
+            cli.create("/d/x", StripeSpec::default_layout())
+                .await
+                .unwrap();
+            cli.unlink("/d/x").await.unwrap();
+            assert!(cli.stat("/d/x").await.is_none());
+        });
+        sim.run();
+    }
+}

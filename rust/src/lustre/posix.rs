@@ -1,0 +1,481 @@
+//! POSIX client API over the simulated Lustre: open/create/write/read/
+//! fsync/stat/mkdir/readdir/unlink with page-cache and DLM semantics.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use super::dlm::LockMode;
+use super::{Lustre, StripeSpec};
+use crate::util::content::Bytes;
+use crate::sim::futures::{boxed, join_all};
+use crate::sim::time::{transfer_time, SimTime};
+use crate::hw::node::Node;
+
+/// File-system error surface (subset of POSIX errno space).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FsError {
+    NotFound,
+    AlreadyExists,
+    NotADirectory,
+}
+
+impl std::fmt::Display for FsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+impl std::error::Error for FsError {}
+
+/// An open file handle.
+#[derive(Clone, Debug)]
+pub struct Fd {
+    ino: u64,
+    path: String,
+    append: bool,
+}
+
+impl Fd {
+    pub fn ino(&self) -> u64 {
+        self.ino
+    }
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+}
+
+/// A mounted client; one per simulated process.
+pub struct LustreClient {
+    fs: Rc<Lustre>,
+    node: Rc<Node>,
+    pub id: u64,
+    /// dirty page bytes per inode, held in this client's page cache
+    dirty: HashMap<u64, u64>,
+    /// accumulated virtual time spent acquiring DLM locks (incl. forced
+    /// revocation flushes) — consumed by FDB profiling (Figs 4.15/4.25)
+    lock_time: std::cell::Cell<crate::sim::time::SimTime>,
+}
+
+impl LustreClient {
+    pub(crate) fn new(fs: Rc<Lustre>, node: Rc<Node>, id: u64) -> LustreClient {
+        LustreClient {
+            fs,
+            node,
+            id,
+            dirty: HashMap::new(),
+            lock_time: std::cell::Cell::new(crate::sim::time::SimTime::ZERO),
+        }
+    }
+
+    /// Drain the accumulated DLM lock time (profiling helper).
+    pub fn take_lock_time(&self) -> crate::sim::time::SimTime {
+        let t = self.lock_time.get();
+        self.lock_time
+            .set(crate::sim::time::SimTime::ZERO);
+        t
+    }
+
+    pub fn node(&self) -> &Rc<Node> {
+        &self.node
+    }
+
+    async fn syscall(&self) {
+        self.fs
+            .sim
+            .sleep(self.fs.config.syscall_cpu)
+            .await;
+    }
+
+    fn parent_of(path: &str) -> &str {
+        match path.rfind('/') {
+            Some(0) => "/",
+            Some(i) => &path[..i],
+            None => "/",
+        }
+    }
+
+    fn leaf_of(path: &str) -> &str {
+        path.rsplit('/').next().unwrap_or(path)
+    }
+
+    fn shard_of(path: &str) -> u64 {
+        crate::ceph::hash_name(path)
+    }
+
+    /// `mkdir`: atomic even under contention (MDS serializes).
+    pub async fn mkdir(&mut self, path: &str) -> Result<(), FsError> {
+        self.syscall().await;
+        self.fs
+            .mds_op_on(
+                &self.fs.sim,
+                self.fs.config.mds_costs.mkdir,
+                true,
+                Self::shard_of(path),
+            )
+            .await;
+        let mut dirs = self.fs.dirs.borrow_mut();
+        if dirs.contains_key(path) {
+            return Err(FsError::AlreadyExists);
+        }
+        dirs.insert(path.to_string(), Vec::new());
+        Ok(())
+    }
+
+    pub async fn dir_exists(&mut self, path: &str) -> bool {
+        self.syscall().await;
+        self.fs
+            .mds_op(&self.fs.sim, self.fs.config.mds_costs.stat, false)
+            .await;
+        self.fs.dirs.borrow().contains_key(path)
+    }
+
+    /// `open(O_CREAT|O_EXCL)` with an explicit striping layout.
+    pub async fn create(&mut self, path: &str, stripe: StripeSpec) -> Result<Fd, FsError> {
+        self.syscall().await;
+        self.fs
+            .mds_op_on(
+                &self.fs.sim,
+                self.fs.config.mds_costs.create,
+                true,
+                Self::shard_of(path),
+            )
+            .await;
+        {
+            let ns = self.fs.namespace.borrow();
+            if ns.contains_key(path) {
+                return Err(FsError::AlreadyExists);
+            }
+        }
+        let ino = self.fs.next_ino.get();
+        self.fs.next_ino.set(ino + 1);
+        // allocate OSTs round-robin starting from a rotating cursor
+        let nost = self.fs.osts.len();
+        let count = stripe.count.min(nost).max(1);
+        let first = self.fs.next_ost.get();
+        self.fs.next_ost.set((first + count) % nost);
+        let osts = (0..count).map(|i| (first + i) % nost).collect();
+        self.fs.namespace.borrow_mut().insert(path.to_string(), ino);
+        self.fs.files.borrow_mut().insert(
+            ino,
+            super::FileState {
+                data: crate::util::content::Content::new(),
+                stripe,
+                osts,
+            },
+        );
+        self.fs
+            .dirs
+            .borrow_mut()
+            .entry(Self::parent_of(path).to_string())
+            .or_default()
+            .push(Self::leaf_of(path).to_string());
+        Ok(Fd {
+            ino,
+            path: path.to_string(),
+            append: true,
+        })
+    }
+
+    /// `open` existing for read/write. `Ok(None)` if missing.
+    pub async fn open(&mut self, path: &str) -> Result<Option<Fd>, FsError> {
+        self.syscall().await;
+        self.fs
+            .mds_op_on(
+                &self.fs.sim,
+                self.fs.config.mds_costs.open,
+                false,
+                Self::shard_of(path),
+            )
+            .await;
+        Ok(self
+            .fs
+            .namespace
+            .borrow()
+            .get(path)
+            .map(|&ino| Fd {
+                ino,
+                path: path.to_string(),
+                append: false,
+            }))
+    }
+
+    /// `open(O_APPEND)`.
+    pub async fn open_append(&mut self, path: &str) -> Result<Option<Fd>, FsError> {
+        let fd = self.open(path).await?;
+        Ok(fd.map(|mut f| {
+            f.append = true;
+            f
+        }))
+    }
+
+    pub async fn stat(&mut self, path: &str) -> Option<u64> {
+        self.syscall().await;
+        self.fs
+            .mds_op(&self.fs.sim, self.fs.config.mds_costs.stat, false)
+            .await;
+        let ns = self.fs.namespace.borrow();
+        let ino = ns.get(path)?;
+        self.fs.files.borrow().get(ino).map(|f| f.data.len())
+    }
+
+    pub async fn readdir(&mut self, path: &str) -> Result<Vec<String>, FsError> {
+        self.syscall().await;
+        // cost grows with entry count (getdents batches)
+        let n = self
+            .fs
+            .dirs
+            .borrow()
+            .get(path)
+            .map(|v| v.len())
+            .ok_or(FsError::NotFound)?;
+        let extra = SimTime::micros((n as u64 / 64) * 10);
+        self.fs
+            .mds_op(
+                &self.fs.sim,
+                self.fs.config.mds_costs.readdir_base + extra,
+                false,
+            )
+            .await;
+        Ok(self.fs.dirs.borrow().get(path).cloned().unwrap_or_default())
+    }
+
+    pub async fn unlink(&mut self, path: &str) -> Result<(), FsError> {
+        self.syscall().await;
+        self.fs
+            .mds_op(&self.fs.sim, self.fs.config.mds_costs.unlink, true)
+            .await;
+        let ino = self
+            .fs
+            .namespace
+            .borrow_mut()
+            .remove(path)
+            .ok_or(FsError::NotFound)?;
+        self.fs.files.borrow_mut().remove(&ino);
+        self.fs.dlm.drop_client(ino, self.id);
+        if let Some(children) = self
+            .fs
+            .dirs
+            .borrow_mut()
+            .get_mut(Self::parent_of(path))
+        {
+            children.retain(|c| c != Self::leaf_of(path));
+        }
+        Ok(())
+    }
+
+    /// Acquire a lock, charging conflict round trips and displaced-writer
+    /// dirty flushes to this caller (cooperative revocation model).
+    async fn lock(&mut self, ino: u64, mode: LockMode) {
+        let t0 = self.fs.sim.now();
+        self.lock_inner(ino, mode).await;
+        let dt = self.fs.sim.now() - t0;
+        self.lock_time.set(self.lock_time.get() + dt);
+    }
+
+    async fn lock_inner(&mut self, ino: u64, mode: LockMode) {
+        let outcome = self.fs.dlm.request(ino, self.id, mode).await;
+        if outcome.cached {
+            return;
+        }
+        // grant round trip to the lock server (resident on the OSS/MDS)
+        self.fs.cluster.fabric.rpc_rtt(&self.fs.sim).await;
+        if outcome.had_conflict {
+            // revocation callback round trip per displaced holder
+            self.fs.cluster.fabric.rpc_rtt(&self.fs.sim).await;
+        }
+        for w in outcome.revoked_writers {
+            // force write-back of the displaced writer's dirty pages
+            let dirty = self
+                .fs
+                .files
+                .borrow()
+                .get(&ino)
+                .map(|_| ())
+                .and_then(|_| self.take_foreign_dirty(w, ino));
+            if let Some(bytes) = dirty {
+                self.writeback(ino, bytes).await;
+            }
+        }
+    }
+
+    /// Remove another client's dirty accounting for `ino` (shared map).
+    fn take_foreign_dirty(&self, client: u64, ino: u64) -> Option<u64> {
+        let mut map = self.fs.foreign_dirty.borrow_mut();
+        map.remove(&(client, ino)).filter(|&b| b > 0)
+    }
+
+    fn publish_dirty(&self, ino: u64, bytes: u64) {
+        *self
+            .fs
+            .foreign_dirty
+            .borrow_mut()
+            .entry((self.id, ino))
+            .or_insert(0) = bytes;
+    }
+
+    /// Write `buf` (append). Data lands in the client page cache (a
+    /// memcpy) and the shared authoritative content immediately; media
+    /// persistence happens on fsync/fdatasync or dirty-budget pressure.
+    pub async fn write(&mut self, fd: &Fd, buf: &[u8]) -> Result<u64, FsError> {
+        self.write_data(fd, Bytes::real(buf.to_vec())).await
+    }
+
+    /// Append a (possibly virtual) byte string — the bulk-data path.
+    pub async fn write_data(&mut self, fd: &Fd, data: Bytes) -> Result<u64, FsError> {
+        self.syscall().await;
+        self.lock(fd.ino, LockMode::Pw).await;
+        let dlen = data.len();
+        // page-cache memcpy
+        self.fs
+            .sim
+            .sleep(transfer_time(dlen, self.fs.config.memcpy_bw))
+            .await;
+        let offset = {
+            let mut files = self.fs.files.borrow_mut();
+            let f = files.get_mut(&fd.ino).ok_or(FsError::NotFound)?;
+            f.data.append(data)
+        };
+        let d = self.dirty.entry(fd.ino).or_insert(0);
+        *d += dlen;
+        let now_dirty = *d;
+        self.publish_dirty(fd.ino, now_dirty);
+        if now_dirty > self.fs.config.dirty_budget {
+            self.flush_ino(fd.ino).await;
+        }
+        Ok(offset)
+    }
+
+    /// Positional write at an arbitrary offset (extends the file if needed).
+    pub async fn pwrite(&mut self, fd: &Fd, offset: u64, buf: &[u8]) -> Result<(), FsError> {
+        self.syscall().await;
+        self.lock(fd.ino, LockMode::Pw).await;
+        self.fs
+            .sim
+            .sleep(transfer_time(buf.len() as u64, self.fs.config.memcpy_bw))
+            .await;
+        {
+            let mut files = self.fs.files.borrow_mut();
+            let f = files.get_mut(&fd.ino).ok_or(FsError::NotFound)?;
+            f.data.write(offset, Bytes::real(buf.to_vec()));
+        }
+        let d = self.dirty.entry(fd.ino).or_insert(0);
+        *d += buf.len() as u64;
+        let now_dirty = *d;
+        self.publish_dirty(fd.ino, now_dirty);
+        Ok(())
+    }
+
+    /// Transfer `bytes` of (this or a displaced client's) dirty pages to
+    /// the file's OSTs, striped and concurrent.
+    async fn writeback(&self, ino: u64, bytes: u64) {
+        let (osts, stripe) = {
+            let files = self.fs.files.borrow();
+            let Some(f) = files.get(&ino) else { return };
+            (f.osts.clone(), f.stripe)
+        };
+        let per_ost = bytes / osts.len() as u64;
+        let rem = bytes % osts.len() as u64;
+        let sim = self.fs.sim.clone();
+        let futs = osts
+            .iter()
+            .enumerate()
+            .map(|(i, &oi)| {
+                let oss = self.fs.osts[oi].oss_node.clone();
+                let fabric = self.fs.cluster.fabric.clone();
+                let me = self.node.clone();
+                let sim = sim.clone();
+                let oss_cpu = self.fs.config.oss_op_cpu;
+                let chunk = per_ost + if (i as u64) < rem { 1 } else { 0 };
+                boxed(async move {
+                    if chunk == 0 {
+                        return;
+                    }
+                    // per-RPC ops of stripe_size each
+                    let nops = chunk.div_ceil(stripe.size).max(1);
+                    fabric.xfer(&sim, &me.nic, &oss.nic, chunk).await;
+                    oss.cpu_serve(&sim, SimTime::nanos(oss_cpu.as_nanos() * nops))
+                        .await;
+                    oss.dev().write(&sim, chunk).await;
+                })
+            })
+            .collect();
+        join_all(futs).await;
+    }
+
+    async fn flush_ino(&mut self, ino: u64) {
+        let bytes = self.dirty.remove(&ino).unwrap_or(0);
+        self.publish_dirty(ino, 0);
+        if bytes > 0 {
+            self.writeback(ino, bytes).await;
+        }
+    }
+
+    /// `fdatasync`: persist this client's dirty pages for the file.
+    pub async fn fdatasync(&mut self, fd: &Fd) -> Result<(), FsError> {
+        self.syscall().await;
+        self.flush_ino(fd.ino).await;
+        Ok(())
+    }
+
+    /// `fsync` — same data path; metadata journal already on MDS.
+    pub async fn fsync(&mut self, fd: &Fd) -> Result<(), FsError> {
+        self.fdatasync(fd).await
+    }
+
+    /// Read `len` bytes at `offset`. Takes a PR lock (revoking and
+    /// flushing any conflicting writer), then streams from the OSTs.
+    pub async fn read(&mut self, fd: &Fd, offset: u64, len: u64) -> Result<Bytes, FsError> {
+        self.syscall().await;
+        self.lock(fd.ino, LockMode::Pr).await;
+        let (osts, stripe, data) = {
+            let files = self.fs.files.borrow();
+            let f = files.get(&fd.ino).ok_or(FsError::NotFound)?;
+            let end = (offset + len).min(f.data.len());
+            let start = offset.min(end);
+            (f.osts.clone(), f.stripe, f.data.read(start, end - start))
+        };
+        let bytes = data.len();
+        if bytes > 0 {
+            // concurrent per-OST streams back to the client
+            let touched = osts.len().min(bytes.div_ceil(stripe.size).max(1) as usize);
+            let per_ost = bytes / touched as u64;
+            let sim = self.fs.sim.clone();
+            let futs = osts
+                .iter()
+                .take(touched)
+                .map(|&oi| {
+                    let oss = self.fs.osts[oi].oss_node.clone();
+                    let fabric = self.fs.cluster.fabric.clone();
+                    let me = self.node.clone();
+                    let sim = sim.clone();
+                    let oss_cpu = self.fs.config.oss_op_cpu;
+                    boxed(async move {
+                        let nops = per_ost.div_ceil(stripe.size).max(1);
+                        oss.cpu_serve(&sim, SimTime::nanos(oss_cpu.as_nanos() * nops))
+                            .await;
+                        oss.dev().read(&sim, per_ost).await;
+                        fabric.xfer(&sim, &oss.nic, &me.nic, per_ost).await;
+                    })
+                })
+                .collect();
+            join_all(futs).await;
+        }
+        Ok(data)
+    }
+
+    /// Read a whole file (stat + read).
+    pub async fn read_all(&mut self, path: &str) -> Result<Bytes, FsError> {
+        let size = self.stat(path).await.ok_or(FsError::NotFound)?;
+        let fd = self.open(path).await?.ok_or(FsError::NotFound)?;
+        self.read(&fd, 0, size).await
+    }
+
+    /// Current size without an MDS round trip (used internally by FDB).
+    pub fn cached_size(&self, fd: &Fd) -> u64 {
+        self.fs
+            .files
+            .borrow()
+            .get(&fd.ino)
+            .map(|f| f.data.len())
+            .unwrap_or(0)
+    }
+}

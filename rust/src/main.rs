@@ -1,0 +1,35 @@
+//! `fdbctl` — the leader binary: runs benchmarks, figure regeneration,
+//! and the end-to-end operational NWP workflow on the simulated testbeds.
+
+use fdbr::coordinator;
+use fdbr::util::cli::Args;
+
+fn main() {
+    let mut raw: Vec<String> = std::env::args().skip(1).collect();
+    if raw.is_empty() {
+        println!("{}", coordinator::usage());
+        std::process::exit(2);
+    }
+    let cmd = raw.remove(0);
+    let args = Args::parse(raw);
+    let result = match cmd.as_str() {
+        "figures" => coordinator::cmd_figures(&args),
+        "hammer" => coordinator::cmd_hammer(&args),
+        "ior" => coordinator::cmd_ior(&args),
+        "fieldio" => coordinator::cmd_fieldio(&args),
+        "opsrun" => coordinator::cmd_opsrun(&args),
+        "admin" => coordinator::cmd_admin(&args),
+        "help" | "--help" | "-h" => {
+            println!("{}", coordinator::usage());
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command `{other}`\n\n{}", coordinator::usage());
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

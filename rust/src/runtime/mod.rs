@@ -1,0 +1,212 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) and execute them from the L3 hot path.
+//! Python never runs here — the interchange is HLO text (see
+//! `python/compile/aot.py` and /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::sim::time::SimTime;
+use crate::workflow::PgenCompute;
+
+/// Locates artifact files. `FDB_ARTIFACTS` overrides the default dir.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("FDB_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| {
+            // crate root: next to Cargo.toml
+            std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        })
+}
+
+/// A PJRT CPU client with a cache of compiled executables.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    execs: std::cell::RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    dir: std::path::PathBuf,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<Rc<PjrtRuntime>> {
+        Ok(Rc::new(PjrtRuntime {
+            client: xla::PjRtClient::cpu().context("PJRT CPU client")?,
+            execs: std::cell::RefCell::new(HashMap::new()),
+            dir: artifacts_dir(),
+        }))
+    }
+
+    pub fn with_dir(dir: impl Into<std::path::PathBuf>) -> Result<Rc<PjrtRuntime>> {
+        Ok(Rc::new(PjrtRuntime {
+            client: xla::PjRtClient::cpu().context("PJRT CPU client")?,
+            execs: std::cell::RefCell::new(HashMap::new()),
+            dir: dir.into(),
+        }))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile `<name>.hlo.txt` (cached).
+    pub fn load(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.execs.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path utf8")?,
+        )
+        .with_context(|| format!("parse {path:?} — run `make artifacts`"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp).context("pjrt compile")?);
+        self.execs
+            .borrow_mut()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute with f32 inputs of the given shapes; returns flat f32
+    /// outputs (the jax export wraps results in a 1-tuple).
+    pub fn run_f32(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[(&[f32], &[i64])],
+    ) -> Result<Vec<f32>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let lit = if dims.is_empty() {
+                xla::Literal::scalar(data[0])
+            } else {
+                xla::Literal::vec1(data).reshape(dims)?
+            };
+            literals.push(lit);
+        }
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// PGEN product generation via the AOT `pgen_e{E}_g{G}` artifact.
+pub struct PgenPipeline {
+    runtime: Rc<PjrtRuntime>,
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    pub ensemble: usize,
+    pub grid: usize,
+    pub threshold: f32,
+    /// virtual-time cost per executed group, charged to the simulation
+    pub group_cost: SimTime,
+    invocations: std::cell::Cell<u64>,
+}
+
+impl PgenPipeline {
+    pub fn new(runtime: &Rc<PjrtRuntime>, ensemble: usize, grid: usize) -> Result<PgenPipeline> {
+        let exe = runtime.load(&format!("pgen_e{ensemble}_g{grid}"))?;
+        Ok(PgenPipeline {
+            runtime: runtime.clone(),
+            exe,
+            ensemble,
+            grid,
+            threshold: 15.0,
+            group_cost: SimTime::millis(2),
+            invocations: std::cell::Cell::new(0),
+        })
+    }
+
+    pub fn invocations(&self) -> u64 {
+        self.invocations.get()
+    }
+
+    /// Run one ensemble group `[E, G, G]` (flat) → `[3, G, G]` (flat).
+    pub fn run_group(&self, ens_flat: &[f32]) -> Result<Vec<f32>> {
+        let g = self.grid as i64;
+        self.invocations.set(self.invocations.get() + 1);
+        self.runtime.run_f32(
+            &self.exe,
+            &[
+                (ens_flat, &[self.ensemble as i64, g, g]),
+                (&[self.threshold], &[]),
+            ],
+        )
+    }
+}
+
+impl PgenCompute for PgenPipeline {
+    fn run(&self, fields: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let gg = self.grid * self.grid;
+        let mut products = Vec::new();
+        // groups of E fields; the tail group pads by repeating the last
+        for group in fields.chunks(self.ensemble) {
+            let mut flat = Vec::with_capacity(self.ensemble * gg);
+            for f in group {
+                assert_eq!(f.len(), gg, "field grid mismatch");
+                flat.extend_from_slice(f);
+            }
+            while flat.len() < self.ensemble * gg {
+                let last = group.last().expect("non-empty group");
+                flat.extend_from_slice(last);
+            }
+            let out = self
+                .run_group(&flat)
+                .expect("pgen artifact execution failed");
+            // split [3, G, G] into three products
+            for p in 0..3 {
+                products.push(out[p * gg..(p + 1) * gg].to_vec());
+            }
+        }
+        products
+    }
+
+    fn cost(&self) -> SimTime {
+        self.group_cost
+    }
+}
+
+/// The synthetic model integrator via the `model_step_g{G}` artifact.
+pub struct ModelStepper {
+    runtime: Rc<PjrtRuntime>,
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    pub grid: usize,
+}
+
+impl ModelStepper {
+    pub fn new(runtime: &Rc<PjrtRuntime>, grid: usize) -> Result<ModelStepper> {
+        let exe = runtime.load(&format!("model_step_g{grid}"))?;
+        Ok(ModelStepper {
+            runtime: runtime.clone(),
+            exe,
+            grid,
+        })
+    }
+
+    pub fn step(&self, state: &[f32], noise: &[f32]) -> Result<Vec<f32>> {
+        let g = self.grid as i64;
+        self.runtime
+            .run_f32(&self.exe, &[(state, &[g, g]), (noise, &[g, g])])
+    }
+}
+
+/// The codec roundtrip via the `codec_g{G}` artifact (store-side path).
+pub struct Codec {
+    runtime: Rc<PjrtRuntime>,
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    pub grid: usize,
+}
+
+impl Codec {
+    pub fn new(runtime: &Rc<PjrtRuntime>, grid: usize) -> Result<Codec> {
+        let exe = runtime.load(&format!("codec_g{grid}"))?;
+        Ok(Codec {
+            runtime: runtime.clone(),
+            exe,
+            grid,
+        })
+    }
+
+    pub fn roundtrip(&self, field: &[f32]) -> Result<Vec<f32>> {
+        let g = self.grid as i64;
+        self.runtime.run_f32(&self.exe, &[(field, &[g, g])])
+    }
+}

@@ -1,0 +1,427 @@
+//! S3 protocol layer (thesis §3.3): buckets + objects over HTTP.
+//!
+//! Two providers:
+//! * [`MemS3`] — a MinIO-like standalone store on one node (what the
+//!   thesis verified the FDB S3 backend against);
+//! * [`RgwS3`] — the Ceph RADOS Gateway: S3 ops translate to RADOS ops,
+//!   paying an extra HTTP hop through a gateway node.
+//!
+//! Both enforce S3 semantics: PUT is all-or-nothing and replaces,
+//! objects are immutable (no append), GET supports byte ranges,
+//! multipart uploads assemble parts on completion.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::ceph::{Ceph, CephPool, RadosClient};
+use crate::hw::fabric::{Fabric, FabricKind};
+use crate::hw::node::Node;
+use crate::sim::exec::Sim;
+use crate::sim::time::SimTime;
+use crate::util::content::Bytes;
+
+/// HTTP request overhead per S3 operation (parse/auth/sign).
+const HTTP_OP: SimTime = SimTime(200_000); // 200 µs
+
+/// S3 errors.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum S3Error {
+    NoSuchBucket,
+    NoSuchKey,
+    NoSuchUpload,
+}
+
+impl std::fmt::Display for S3Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+impl std::error::Error for S3Error {}
+
+/// The S3 API surface used by the FDB S3 Store backend.
+#[allow(async_fn_in_trait)] // single-threaded DES: no Send bounds needed
+pub trait S3Api {
+    async fn create_bucket(&self, bucket: &str);
+    async fn put_object(&self, bucket: &str, key: &str, data: Bytes) -> Result<(), S3Error>;
+    async fn get_object(
+        &self,
+        bucket: &str,
+        key: &str,
+        range: Option<(u64, u64)>,
+    ) -> Result<Option<Bytes>, S3Error>;
+    async fn head_object(&self, bucket: &str, key: &str) -> Result<Option<u64>, S3Error>;
+    async fn delete_object(&self, bucket: &str, key: &str) -> Result<(), S3Error>;
+    async fn list_objects(&self, bucket: &str, prefix: &str) -> Result<Vec<String>, S3Error>;
+}
+
+// ---------------------------------------------------------------- MemS3
+
+struct MemBucket {
+    objects: HashMap<String, Bytes>,
+    uploads: HashMap<u64, Vec<(u32, Bytes)>>,
+}
+
+/// MinIO-like single-node S3 store.
+pub struct MemS3 {
+    sim: Sim,
+    fabric: Rc<Fabric>,
+    pub server: Rc<Node>,
+    client_node: Rc<Node>,
+    buckets: RefCell<HashMap<String, MemBucket>>,
+    next_upload: std::cell::Cell<u64>,
+}
+
+impl MemS3 {
+    pub fn new(sim: &Sim, server: &Rc<Node>, client_node: &Rc<Node>) -> MemS3 {
+        MemS3 {
+            sim: sim.clone(),
+            fabric: Fabric::new(FabricKind::TcpGcp),
+            server: server.clone(),
+            client_node: client_node.clone(),
+            buckets: RefCell::new(HashMap::new()),
+            next_upload: std::cell::Cell::new(1),
+        }
+    }
+
+    async fn http(&self, payload_up: u64, payload_down: u64) {
+        self.sim.sleep(HTTP_OP).await;
+        self.fabric
+            .xfer(&self.sim, &self.client_node.nic, &self.server.nic, payload_up.max(512))
+            .await;
+        self.server.cpu_serve(&self.sim, SimTime::micros(50)).await;
+        self.fabric
+            .xfer(&self.sim, &self.server.nic, &self.client_node.nic, payload_down.max(512))
+            .await;
+    }
+
+    /// Initiate a multipart upload; returns the upload id.
+    pub async fn create_multipart(&self, bucket: &str, _key: &str) -> Result<u64, S3Error> {
+        self.http(512, 512).await;
+        if !self.buckets.borrow().contains_key(bucket) {
+            return Err(S3Error::NoSuchBucket);
+        }
+        let id = self.next_upload.get();
+        self.next_upload.set(id + 1);
+        self.buckets
+            .borrow_mut()
+            .get_mut(bucket)
+            .unwrap()
+            .uploads
+            .insert(id, Vec::new());
+        Ok(id)
+    }
+
+    /// Upload one part; returns the part number.
+    pub async fn upload_part(
+        &self,
+        bucket: &str,
+        upload: u64,
+        part_no: u32,
+        data: Bytes,
+    ) -> Result<u32, S3Error> {
+        self.http(data.len(), 512).await;
+        self.server.dev().write(&self.sim, data.len()).await;
+        let mut buckets = self.buckets.borrow_mut();
+        let b = buckets.get_mut(bucket).ok_or(S3Error::NoSuchBucket)?;
+        let parts = b.uploads.get_mut(&upload).ok_or(S3Error::NoSuchUpload)?;
+        parts.push((part_no, data));
+        Ok(part_no)
+    }
+
+    /// Complete: assemble parts (in part-number order) into the object.
+    pub async fn complete_multipart(
+        &self,
+        bucket: &str,
+        key: &str,
+        upload: u64,
+    ) -> Result<(), S3Error> {
+        self.http(512, 512).await;
+        let mut buckets = self.buckets.borrow_mut();
+        let b = buckets.get_mut(bucket).ok_or(S3Error::NoSuchBucket)?;
+        let mut parts = b.uploads.remove(&upload).ok_or(S3Error::NoSuchUpload)?;
+        parts.sort_by_key(|(n, _)| *n);
+        let mut data = Bytes::new();
+        for (_, d) in parts {
+            data.append(d);
+        }
+        b.objects.insert(key.to_string(), data);
+        Ok(())
+    }
+}
+
+impl S3Api for MemS3 {
+    async fn create_bucket(&self, bucket: &str) {
+        self.http(512, 512).await;
+        self.buckets
+            .borrow_mut()
+            .entry(bucket.to_string())
+            .or_insert_with(|| MemBucket {
+                objects: HashMap::new(),
+                uploads: HashMap::new(),
+            });
+    }
+
+    async fn put_object(&self, bucket: &str, key: &str, data: Bytes) -> Result<(), S3Error> {
+        self.http(data.len(), 512).await;
+        self.server.dev().write(&self.sim, data.len()).await;
+        let mut buckets = self.buckets.borrow_mut();
+        let b = buckets.get_mut(bucket).ok_or(S3Error::NoSuchBucket)?;
+        // all-or-nothing replace: last racing PUT prevails
+        b.objects.insert(key.to_string(), data);
+        Ok(())
+    }
+
+    async fn get_object(
+        &self,
+        bucket: &str,
+        key: &str,
+        range: Option<(u64, u64)>,
+    ) -> Result<Option<Bytes>, S3Error> {
+        let data = {
+            let buckets = self.buckets.borrow();
+            let b = buckets.get(bucket).ok_or(S3Error::NoSuchBucket)?;
+            match b.objects.get(key) {
+                None => return Ok(None),
+                Some(d) => match range {
+                    None => d.clone(),
+                    Some((off, len)) => d.slice(off, len),
+                },
+            }
+        };
+        self.server.dev().read(&self.sim, data.len()).await;
+        self.http(512, data.len()).await;
+        Ok(Some(data))
+    }
+
+    async fn head_object(&self, bucket: &str, key: &str) -> Result<Option<u64>, S3Error> {
+        self.http(512, 512).await;
+        let buckets = self.buckets.borrow();
+        let b = buckets.get(bucket).ok_or(S3Error::NoSuchBucket)?;
+        Ok(b.objects.get(key).map(|d| d.len()))
+    }
+
+    async fn delete_object(&self, bucket: &str, key: &str) -> Result<(), S3Error> {
+        self.http(512, 512).await;
+        let mut buckets = self.buckets.borrow_mut();
+        let b = buckets.get_mut(bucket).ok_or(S3Error::NoSuchBucket)?;
+        b.objects.remove(key);
+        Ok(())
+    }
+
+    async fn list_objects(&self, bucket: &str, prefix: &str) -> Result<Vec<String>, S3Error> {
+        self.http(512, 4096).await;
+        let buckets = self.buckets.borrow();
+        let b = buckets.get(bucket).ok_or(S3Error::NoSuchBucket)?;
+        Ok(b.objects
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect())
+    }
+}
+
+// ---------------------------------------------------------------- RgwS3
+
+/// RADOS Gateway: S3 ops forwarded to a RADOS pool; bucket → namespace.
+pub struct RgwS3 {
+    sim: Sim,
+    pub gateway: Rc<Node>,
+    client_node: Rc<Node>,
+    rados: RadosClient,
+    pool: Rc<CephPool>,
+    http: Rc<Fabric>,
+}
+
+impl RgwS3 {
+    pub fn new(
+        sim: &Sim,
+        ceph: &Rc<Ceph>,
+        pool: &Rc<CephPool>,
+        gateway: &Rc<Node>,
+        client_node: &Rc<Node>,
+    ) -> RgwS3 {
+        RgwS3 {
+            sim: sim.clone(),
+            gateway: gateway.clone(),
+            client_node: client_node.clone(),
+            // the RGW daemon is the RADOS client, running on the gateway
+            rados: ceph.client(gateway),
+            pool: pool.clone(),
+            http: Fabric::new(FabricKind::TcpGcp),
+        }
+    }
+
+    async fn hop(&self, up: u64, down: u64) {
+        self.sim.sleep(HTTP_OP).await;
+        self.http
+            .xfer(&self.sim, &self.client_node.nic, &self.gateway.nic, up.max(512))
+            .await;
+        self.gateway.cpu_serve(&self.sim, SimTime::micros(80)).await;
+        self.http
+            .xfer(&self.sim, &self.gateway.nic, &self.client_node.nic, down.max(512))
+            .await;
+    }
+}
+
+impl S3Api for RgwS3 {
+    async fn create_bucket(&self, _bucket: &str) {
+        self.hop(512, 512).await;
+    }
+
+    async fn put_object(&self, bucket: &str, key: &str, data: Bytes) -> Result<(), S3Error> {
+        self.hop(data.len(), 512).await;
+        self.rados
+            .write_full_data(&self.pool, bucket, key, data)
+            .await
+            .map_err(|_| S3Error::NoSuchBucket)?;
+        Ok(())
+    }
+
+    async fn get_object(
+        &self,
+        bucket: &str,
+        key: &str,
+        range: Option<(u64, u64)>,
+    ) -> Result<Option<Bytes>, S3Error> {
+        let (off, len) = range.unwrap_or((0, u64::MAX / 2));
+        let got = self
+            .rados
+            .read(&self.pool, bucket, key, off, len)
+            .await
+            .map_err(|_| S3Error::NoSuchBucket)?;
+        let down = got.as_ref().map(|d| d.len()).unwrap_or(0);
+        self.hop(512, down).await;
+        Ok(got)
+    }
+
+    async fn head_object(&self, bucket: &str, key: &str) -> Result<Option<u64>, S3Error> {
+        self.hop(512, 512).await;
+        self.rados
+            .stat(&self.pool, bucket, key)
+            .await
+            .map_err(|_| S3Error::NoSuchBucket)
+    }
+
+    async fn delete_object(&self, bucket: &str, key: &str) -> Result<(), S3Error> {
+        self.hop(512, 512).await;
+        self.rados.remove(&self.pool, bucket, key).await;
+        Ok(())
+    }
+
+    async fn list_objects(&self, bucket: &str, prefix: &str) -> Result<Vec<String>, S3Error> {
+        self.hop(512, 4096).await;
+        Ok(self
+            .rados
+            .list_objects(&self.pool, bucket)
+            .await
+            .into_iter()
+            .filter(|k| k.starts_with(prefix))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ceph::{CephConfig, Redundancy};
+    use crate::hw::profiles::{build_cluster, Testbed};
+
+    fn mem_setup() -> (Sim, Rc<MemS3>) {
+        let sim = Sim::new();
+        let cluster = Rc::new(build_cluster(Testbed::Gcp, 1, 1, false, true));
+        let server = cluster.storage_nodes().next().unwrap().clone();
+        let client = cluster.client_nodes().next().unwrap().clone();
+        let s3 = Rc::new(MemS3::new(&sim, &server, &client));
+        (sim, s3)
+    }
+
+    #[test]
+    fn put_get_head_delete() {
+        let (sim, s3) = mem_setup();
+        sim.spawn(async move {
+            s3.create_bucket("fdb-ds1").await;
+            s3.put_object("fdb-ds1", "field-1", Bytes::real(b"grib-bytes".to_vec())).await.unwrap();
+            assert_eq!(
+                s3.get_object("fdb-ds1", "field-1", None).await.unwrap().map(|b| b.to_vec()).as_deref(),
+                Some(b"grib-bytes".as_ref())
+            );
+            assert_eq!(
+                s3.get_object("fdb-ds1", "field-1", Some((5, 5))).await.unwrap().map(|b| b.to_vec()).as_deref(),
+                Some(b"bytes".as_ref())
+            );
+            assert_eq!(s3.head_object("fdb-ds1", "field-1").await.unwrap(), Some(10));
+            s3.delete_object("fdb-ds1", "field-1").await.unwrap();
+            assert!(s3.get_object("fdb-ds1", "field-1", None).await.unwrap().is_none());
+        });
+        sim.run();
+    }
+
+    #[test]
+    fn put_replaces_whole_object() {
+        let (sim, s3) = mem_setup();
+        sim.spawn(async move {
+            s3.create_bucket("b").await;
+            s3.put_object("b", "k", Bytes::real(b"version-1".to_vec())).await.unwrap();
+            s3.put_object("b", "k", Bytes::real(b"v2".to_vec())).await.unwrap();
+            assert_eq!(
+                s3.get_object("b", "k", None).await.unwrap().map(|b| b.to_vec()).as_deref(),
+                Some(b"v2".as_ref())
+            );
+        });
+        sim.run();
+    }
+
+    #[test]
+    fn multipart_assembles_in_order() {
+        let (sim, s3) = mem_setup();
+        sim.spawn(async move {
+            s3.create_bucket("b").await;
+            let up = s3.create_multipart("b", "k").await.unwrap();
+            // upload out of order
+            s3.upload_part("b", up, 2, Bytes::real(b"world".to_vec())).await.unwrap();
+            s3.upload_part("b", up, 1, Bytes::real(b"hello ".to_vec())).await.unwrap();
+            s3.complete_multipart("b", "k", up).await.unwrap();
+            assert_eq!(
+                s3.get_object("b", "k", None).await.unwrap().map(|b| b.to_vec()).as_deref(),
+                Some(b"hello world".as_ref())
+            );
+        });
+        sim.run();
+    }
+
+    #[test]
+    fn missing_bucket_errors() {
+        let (sim, s3) = mem_setup();
+        sim.spawn(async move {
+            assert_eq!(
+                s3.put_object("nope", "k", Bytes::real(b"x".to_vec())).await.unwrap_err(),
+                S3Error::NoSuchBucket
+            );
+        });
+        sim.run();
+    }
+
+    #[test]
+    fn rgw_roundtrip_over_rados() {
+        let sim = Sim::new();
+        let cluster = Rc::new(build_cluster(Testbed::Gcp, 2, 1, true, true));
+        let ceph = Ceph::deploy(&sim, &cluster, CephConfig::default());
+        let pool = ceph.create_pool("rgw", 512, Redundancy::None);
+        let gw = cluster.storage_nodes().next().unwrap().clone();
+        let client = cluster.client_nodes().next().unwrap().clone();
+        let s3 = Rc::new(RgwS3::new(&sim, &ceph, &pool, &gw, &client));
+        sim.spawn(async move {
+            s3.create_bucket("b").await;
+            s3.put_object("b", "k", Bytes::real(b"via-rgw".to_vec())).await.unwrap();
+            assert_eq!(
+                s3.get_object("b", "k", None).await.unwrap().map(|b| b.to_vec()).as_deref(),
+                Some(b"via-rgw".as_ref())
+            );
+            assert_eq!(s3.head_object("b", "k").await.unwrap(), Some(7));
+            let keys = s3.list_objects("b", "").await.unwrap();
+            assert_eq!(keys, vec!["k"]);
+        });
+        sim.run();
+    }
+}

@@ -1,0 +1,461 @@
+//! Single-threaded virtual-time async executor — the discrete-event engine.
+//!
+//! Simulated processes are plain `async` blocks spawned on a [`Sim`].
+//! The only ways time passes are awaiting [`Sim::sleep`] /
+//! [`Sim::sleep_until`] or awaiting a queued resource
+//! (see [`crate::sim::resource`]). The run loop repeatedly polls every
+//! ready task, then advances the virtual clock to the earliest pending
+//! timer. Execution is fully deterministic given the spawn order.
+//!
+//! This replaces tokio (unavailable offline) and is *faster* for this use
+//! case: no syscalls, no atomics on the hot path beyond the waker queue.
+
+use std::cell::{Cell, RefCell};
+use std::collections::{BinaryHeap, VecDeque};
+use std::future::Future;
+use std::pin::Pin;
+use std::rc::Rc;
+use std::sync::{Arc, Mutex};
+use std::task::{Context, Poll, Wake, Waker};
+
+use super::time::SimTime;
+
+type TaskId = u64;
+type BoxFuture = Pin<Box<dyn Future<Output = ()>>>;
+
+/// Thread-safe wake queue (wakers must be Send+Sync by contract even though
+/// we only ever use them on one thread).
+struct WakeQueue {
+    ready: Mutex<VecDeque<TaskId>>,
+}
+
+struct TaskWaker {
+    id: TaskId,
+    queue: Arc<WakeQueue>,
+}
+
+impl Wake for TaskWaker {
+    fn wake(self: Arc<Self>) {
+        self.queue.ready.lock().unwrap().push_back(self.id);
+    }
+    fn wake_by_ref(self: &Arc<Self>) {
+        self.queue.ready.lock().unwrap().push_back(self.id);
+    }
+}
+
+/// Timer entry: min-heap ordered by (deadline, seq) for determinism.
+struct Timer {
+    deadline: SimTime,
+    seq: u64,
+    waker: Waker,
+}
+
+impl PartialEq for Timer {
+    fn eq(&self, other: &Self) -> bool {
+        self.deadline == other.deadline && self.seq == other.seq
+    }
+}
+impl Eq for Timer {}
+impl PartialOrd for Timer {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Timer {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // reversed: BinaryHeap is a max-heap, we want the earliest first
+        other
+            .deadline
+            .cmp(&self.deadline)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+struct SimInner {
+    now: Cell<SimTime>,
+    timers: RefCell<BinaryHeap<Timer>>,
+    /// slab keyed by sequential TaskId (perf: no hashing on the poll path)
+    tasks: RefCell<Vec<Option<(BoxFuture, Waker)>>>,
+    next_task: Cell<TaskId>,
+    timer_seq: Cell<u64>,
+    wake_queue: Arc<WakeQueue>,
+    live_tasks: Cell<u64>,
+    /// Total number of task polls — a cheap engine-throughput metric.
+    polls: Cell<u64>,
+}
+
+/// Handle to the simulation; cheap to clone, single-threaded.
+#[derive(Clone)]
+pub struct Sim {
+    inner: Rc<SimInner>,
+}
+
+impl Default for Sim {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Sim {
+    pub fn new() -> Sim {
+        Sim {
+            inner: Rc::new(SimInner {
+                now: Cell::new(SimTime::ZERO),
+                timers: RefCell::new(BinaryHeap::new()),
+                tasks: RefCell::new(Vec::new()),
+                next_task: Cell::new(0),
+                timer_seq: Cell::new(0),
+                wake_queue: Arc::new(WakeQueue {
+                    ready: Mutex::new(VecDeque::new()),
+                }),
+                live_tasks: Cell::new(0),
+                polls: Cell::new(0),
+            }),
+        }
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> SimTime {
+        self.inner.now.get()
+    }
+
+    /// Number of task polls performed so far (engine throughput metric).
+    pub fn poll_count(&self) -> u64 {
+        self.inner.polls.get()
+    }
+
+    /// Spawn a simulated process. It starts running on the next executor turn.
+    pub fn spawn<F: Future<Output = ()> + 'static>(&self, fut: F) {
+        let id = self.inner.next_task.get();
+        self.inner.next_task.set(id + 1);
+        // one Waker per task, reused across polls (perf: no per-poll Arc)
+        let waker = Waker::from(Arc::new(TaskWaker {
+            id,
+            queue: self.inner.wake_queue.clone(),
+        }));
+        {
+            let mut tasks = self.inner.tasks.borrow_mut();
+            debug_assert_eq!(tasks.len() as u64, id);
+            tasks.push(Some((Box::pin(fut), waker)));
+        }
+        self.inner.live_tasks.set(self.inner.live_tasks.get() + 1);
+        self.inner.wake_queue.ready.lock().unwrap().push_back(id);
+    }
+
+    /// Sleep for a duration of virtual time.
+    pub fn sleep(&self, d: SimTime) -> Sleep {
+        self.sleep_until(self.now() + d)
+    }
+
+    /// Sleep until an absolute virtual deadline.
+    pub fn sleep_until(&self, deadline: SimTime) -> Sleep {
+        Sleep {
+            sim: self.clone(),
+            deadline,
+            registered: false,
+        }
+    }
+
+    /// Yield once (reschedule at the current time, after other ready tasks).
+    pub fn yield_now(&self) -> Sleep {
+        self.sleep(SimTime::ZERO)
+    }
+
+    fn register_timer(&self, deadline: SimTime, waker: Waker) {
+        let seq = self.inner.timer_seq.get();
+        self.inner.timer_seq.set(seq + 1);
+        self.inner.timers.borrow_mut().push(Timer {
+            deadline,
+            seq,
+            waker,
+        });
+    }
+
+    fn poll_task(&self, id: TaskId) {
+        // Take the future out so re-entrant spawn() can't alias the slot.
+        let slot = {
+            let mut tasks = self.inner.tasks.borrow_mut();
+            match tasks.get_mut(id as usize) {
+                Some(s) => s.take(),
+                None => None,
+            }
+        };
+        let Some((mut fut, waker)) = slot else { return };
+        let mut cx = Context::from_waker(&waker);
+        self.inner.polls.set(self.inner.polls.get() + 1);
+        match fut.as_mut().poll(&mut cx) {
+            Poll::Ready(()) => {
+                self.inner.live_tasks.set(self.inner.live_tasks.get() - 1);
+            }
+            Poll::Pending => {
+                self.inner.tasks.borrow_mut()[id as usize] = Some((fut, waker));
+            }
+        }
+    }
+
+    /// Run until all spawned tasks complete. Returns the final virtual time.
+    ///
+    /// Panics on deadlock (live tasks but no timers and nothing ready),
+    /// which in practice means a resource was acquired and never released.
+    pub fn run(&self) -> SimTime {
+        loop {
+            // Drain the ready queue.
+            loop {
+                let next = self.inner.wake_queue.ready.lock().unwrap().pop_front();
+                match next {
+                    Some(id) => self.poll_task(id),
+                    None => break,
+                }
+            }
+            if self.inner.live_tasks.get() == 0 {
+                return self.now();
+            }
+            // Advance virtual time to the earliest timer.
+            let timer = self.inner.timers.borrow_mut().pop();
+            match timer {
+                Some(t) => {
+                    debug_assert!(t.deadline >= self.now());
+                    self.inner.now.set(t.deadline);
+                    t.waker.wake();
+                }
+                None => {
+                    panic!(
+                        "sim deadlock: {} live task(s) but no pending timers",
+                        self.inner.live_tasks.get()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Future returned by [`Sim::sleep`].
+pub struct Sleep {
+    sim: Sim,
+    deadline: SimTime,
+    registered: bool,
+}
+
+impl Future for Sleep {
+    type Output = ();
+    fn poll(mut self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
+        if self.sim.now() >= self.deadline {
+            return Poll::Ready(());
+        }
+        if !self.registered {
+            self.registered = true;
+            let deadline = self.deadline;
+            self.sim.register_timer(deadline, cx.waker().clone());
+        }
+        Poll::Pending
+    }
+}
+
+/// Completion latch: lets one task wait for N others (like a WaitGroup).
+pub struct WaitGroup {
+    count: Cell<usize>,
+    wakers: RefCell<Vec<Waker>>,
+}
+
+impl WaitGroup {
+    pub fn new(count: usize) -> Rc<WaitGroup> {
+        Rc::new(WaitGroup {
+            count: Cell::new(count),
+            wakers: RefCell::new(Vec::new()),
+        })
+    }
+
+    /// Signal one completion.
+    pub fn done(&self) {
+        let c = self.count.get();
+        assert!(c > 0, "WaitGroup::done called too many times");
+        self.count.set(c - 1);
+        if c == 1 {
+            for w in self.wakers.borrow_mut().drain(..) {
+                w.wake();
+            }
+        }
+    }
+
+    /// Wait until the counter reaches zero.
+    pub fn wait(self: &Rc<Self>) -> WaitFut {
+        WaitFut { wg: self.clone() }
+    }
+}
+
+pub struct WaitFut {
+    wg: Rc<WaitGroup>,
+}
+
+impl Future for WaitFut {
+    type Output = ();
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
+        if self.wg.count.get() == 0 {
+            Poll::Ready(())
+        } else {
+            self.wg.wakers.borrow_mut().push(cx.waker().clone());
+            Poll::Pending
+        }
+    }
+}
+
+/// One-shot cell a task can park on until a value is produced.
+pub struct OnceCellFut<T> {
+    value: RefCell<Option<T>>,
+    wakers: RefCell<Vec<Waker>>,
+}
+
+impl<T: Clone> OnceCellFut<T> {
+    pub fn new() -> Rc<Self> {
+        Rc::new(OnceCellFut {
+            value: RefCell::new(None),
+            wakers: RefCell::new(Vec::new()),
+        })
+    }
+
+    pub fn set(&self, v: T) {
+        *self.value.borrow_mut() = Some(v);
+        for w in self.wakers.borrow_mut().drain(..) {
+            w.wake();
+        }
+    }
+
+    pub async fn get(self: &Rc<Self>) -> T {
+        GetFut { cell: self.clone() }.await
+    }
+}
+
+struct GetFut<T> {
+    cell: Rc<OnceCellFut<T>>,
+}
+
+impl<T: Clone> Future for GetFut<T> {
+    type Output = T;
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<T> {
+        if let Some(v) = self.cell.value.borrow().as_ref() {
+            return Poll::Ready(v.clone());
+        }
+        self.cell.wakers.borrow_mut().push(cx.waker().clone());
+        Poll::Pending
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::rc::Rc;
+
+    #[test]
+    fn sleep_advances_clock() {
+        let sim = Sim::new();
+        let s = sim.clone();
+        sim.spawn(async move {
+            s.sleep(SimTime::micros(10)).await;
+            assert_eq!(s.now(), SimTime::micros(10));
+            s.sleep(SimTime::micros(5)).await;
+            assert_eq!(s.now(), SimTime::micros(15));
+        });
+        let end = sim.run();
+        assert_eq!(end, SimTime::micros(15));
+    }
+
+    #[test]
+    fn concurrent_tasks_interleave_by_time() {
+        let sim = Sim::new();
+        let order = Rc::new(RefCell::new(Vec::new()));
+        for (i, d) in [(0u32, 30u64), (1, 10), (2, 20)] {
+            let s = sim.clone();
+            let ord = order.clone();
+            sim.spawn(async move {
+                s.sleep(SimTime::micros(d)).await;
+                ord.borrow_mut().push(i);
+            });
+        }
+        sim.run();
+        assert_eq!(*order.borrow(), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn waitgroup_joins() {
+        let sim = Sim::new();
+        let wg = WaitGroup::new(3);
+        for i in 0..3u64 {
+            let s = sim.clone();
+            let wg = wg.clone();
+            sim.spawn(async move {
+                s.sleep(SimTime::micros(i + 1)).await;
+                wg.done();
+            });
+        }
+        let s = sim.clone();
+        let wg2 = wg.clone();
+        let done_at = Rc::new(Cell::new(SimTime::ZERO));
+        let done_at2 = done_at.clone();
+        sim.spawn(async move {
+            wg2.wait().await;
+            done_at2.set(s.now());
+        });
+        sim.run();
+        assert_eq!(done_at.get(), SimTime::micros(3));
+    }
+
+    #[test]
+    fn spawn_from_task() {
+        let sim = Sim::new();
+        let s = sim.clone();
+        let hits = Rc::new(Cell::new(0u32));
+        let h = hits.clone();
+        sim.spawn(async move {
+            let h2 = h.clone();
+            let s2 = s.clone();
+            s.spawn(async move {
+                s2.sleep(SimTime::micros(1)).await;
+                h2.set(h2.get() + 1);
+            });
+            h.set(h.get() + 1);
+        });
+        sim.run();
+        assert_eq!(hits.get(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "sim deadlock")]
+    fn deadlock_detected() {
+        let sim = Sim::new();
+        let cell: Rc<OnceCellFut<u32>> = OnceCellFut::new();
+        sim.spawn(async move {
+            let _ = cell.get().await; // never set
+        });
+        sim.run();
+    }
+
+    #[test]
+    fn once_cell_delivers() {
+        let sim = Sim::new();
+        let cell: Rc<OnceCellFut<u32>> = OnceCellFut::new();
+        let c1 = cell.clone();
+        let s = sim.clone();
+        sim.spawn(async move {
+            s.sleep(SimTime::micros(2)).await;
+            c1.set(7);
+        });
+        let got = Rc::new(Cell::new(0u32));
+        let g = got.clone();
+        sim.spawn(async move {
+            g.set(cell.get().await);
+        });
+        sim.run();
+        assert_eq!(got.get(), 7);
+    }
+
+    #[test]
+    fn zero_sleep_yields() {
+        let sim = Sim::new();
+        let s = sim.clone();
+        sim.spawn(async move {
+            s.yield_now().await;
+            s.yield_now().await;
+        });
+        assert_eq!(sim.run(), SimTime::ZERO);
+    }
+}

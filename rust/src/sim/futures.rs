@@ -1,0 +1,122 @@
+//! Future combinators for the virtual-time executor (no `futures` crate).
+
+use std::future::Future;
+use std::pin::Pin;
+use std::task::{Context, Poll};
+
+type BoxFut<'a, T> = Pin<Box<dyn Future<Output = T> + 'a>>;
+
+/// Drive a set of futures concurrently; resolve when all complete.
+/// Results are returned in input order.
+pub struct JoinAll<'a, T> {
+    slots: Vec<Option<BoxFut<'a, T>>>,
+    results: Vec<Option<T>>,
+}
+
+/// Run all futures to completion concurrently (in virtual time).
+pub fn join_all<'a, T: 'a>(futs: Vec<BoxFut<'a, T>>) -> JoinAll<'a, T> {
+    let n = futs.len();
+    JoinAll {
+        slots: futs.into_iter().map(Some).collect(),
+        results: (0..n).map(|_| None).collect(),
+    }
+}
+
+/// Convenience: box a future for `join_all`.
+pub fn boxed<'a, T, F: Future<Output = T> + 'a>(f: F) -> BoxFut<'a, T> {
+    Box::pin(f)
+}
+
+// Safe: JoinAll never projects a pin into `T`; stored futures are boxed.
+impl<'a, T> Unpin for JoinAll<'a, T> {}
+
+impl<'a, T> Future for JoinAll<'a, T> {
+    type Output = Vec<T>;
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Vec<T>> {
+        // JoinAll is Unpin: it only holds boxed (already-pinned) futures.
+        let this = self.get_mut();
+        let mut all_done = true;
+        for i in 0..this.slots.len() {
+            if let Some(f) = this.slots[i].as_mut() {
+                match f.as_mut().poll(cx) {
+                    Poll::Ready(v) => {
+                        this.results[i] = Some(v);
+                        this.slots[i] = None;
+                    }
+                    Poll::Pending => all_done = false,
+                }
+            }
+        }
+        if all_done {
+            Poll::Ready(this.results.iter_mut().map(|r| r.take().unwrap()).collect())
+        } else {
+            Poll::Pending
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::exec::Sim;
+    use crate::sim::resource::Resource;
+    use crate::sim::time::SimTime;
+    use std::cell::Cell;
+    use std::rc::Rc;
+
+    #[test]
+    fn join_all_overlaps_in_time() {
+        let sim = Sim::new();
+        let s = sim.clone();
+        let end = Rc::new(Cell::new(SimTime::ZERO));
+        let e = end.clone();
+        sim.spawn(async move {
+            let futs = (1..=3u64)
+                .map(|i| {
+                    let s2 = s.clone();
+                    boxed(async move {
+                        s2.sleep(SimTime::micros(10 * i)).await;
+                        i
+                    })
+                })
+                .collect();
+            let out = join_all(futs).await;
+            assert_eq!(out, vec![1, 2, 3]);
+            e.set(s.now());
+        });
+        sim.run();
+        // concurrent, so makespan = max (30us), not sum (60us)
+        assert_eq!(end.get(), SimTime::micros(30));
+    }
+
+    #[test]
+    fn join_all_contends_on_shared_resource() {
+        let sim = Sim::new();
+        let res = Resource::new("r", 1);
+        let s = sim.clone();
+        sim.spawn(async move {
+            let futs = (0..3)
+                .map(|_| {
+                    let s2 = s.clone();
+                    let r = res.clone();
+                    boxed(async move {
+                        r.serve(&s2, SimTime::micros(10)).await;
+                    })
+                })
+                .collect();
+            join_all(futs).await;
+        });
+        // serialized by the 1-server resource
+        assert_eq!(sim.run(), SimTime::micros(30));
+    }
+
+    #[test]
+    fn empty_join() {
+        let sim = Sim::new();
+        sim.spawn(async move {
+            let out: Vec<u32> = join_all(vec![]).await;
+            assert!(out.is_empty());
+        });
+        sim.run();
+    }
+}

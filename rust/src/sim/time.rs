@@ -1,0 +1,129 @@
+//! Virtual time for the discrete-event simulation: nanosecond ticks.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// A point in (or span of) virtual time, in nanoseconds.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimTime(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+
+    pub fn nanos(n: u64) -> SimTime {
+        SimTime(n)
+    }
+    pub fn micros(us: u64) -> SimTime {
+        SimTime(us * 1_000)
+    }
+    pub fn millis(ms: u64) -> SimTime {
+        SimTime(ms * 1_000_000)
+    }
+    pub fn secs(s: u64) -> SimTime {
+        SimTime(s * 1_000_000_000)
+    }
+
+    /// From fractional seconds, rounding to the nearest nanosecond.
+    pub fn from_secs_f64(s: f64) -> SimTime {
+        SimTime((s * 1e9).round().max(0.0) as u64)
+    }
+
+    pub fn as_nanos(self) -> u64 {
+        self.0
+    }
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+
+    pub fn saturating_sub(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.saturating_sub(rhs.0))
+    }
+
+    pub fn max(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.max(rhs.0))
+    }
+    pub fn min(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.min(rhs.0))
+    }
+}
+
+impl Add for SimTime {
+    type Output = SimTime;
+    fn add(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for SimTime {
+    fn add_assign(&mut self, rhs: SimTime) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for SimTime {
+    type Output = SimTime;
+    fn sub(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0 - rhs.0)
+    }
+}
+
+impl fmt::Debug for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self)
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let ns = self.0;
+        if ns >= 1_000_000_000 {
+            write!(f, "{:.3}s", ns as f64 / 1e9)
+        } else if ns >= 1_000_000 {
+            write!(f, "{:.3}ms", ns as f64 / 1e6)
+        } else if ns >= 1_000 {
+            write!(f, "{:.3}us", ns as f64 / 1e3)
+        } else {
+            write!(f, "{ns}ns")
+        }
+    }
+}
+
+/// Duration for transferring `bytes` at `bytes_per_sec`.
+pub fn transfer_time(bytes: u64, bytes_per_sec: f64) -> SimTime {
+    if bytes_per_sec <= 0.0 {
+        return SimTime::ZERO;
+    }
+    SimTime::from_secs_f64(bytes as f64 / bytes_per_sec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let t = SimTime::micros(3) + SimTime::nanos(500);
+        assert_eq!(t.as_nanos(), 3_500);
+        assert_eq!((t - SimTime::nanos(500)).as_nanos(), 3_000);
+    }
+
+    #[test]
+    fn conversions() {
+        assert_eq!(SimTime::secs(2).as_secs_f64(), 2.0);
+        assert_eq!(SimTime::from_secs_f64(1.5).as_nanos(), 1_500_000_000);
+    }
+
+    #[test]
+    fn transfer() {
+        // 1 GiB at 1 GiB/s = 1 s
+        let t = transfer_time(1 << 30, (1u64 << 30) as f64);
+        assert_eq!(t.as_nanos(), 1_000_000_000);
+    }
+
+    #[test]
+    fn display_units() {
+        assert_eq!(SimTime::nanos(5).to_string(), "5ns");
+        assert_eq!(SimTime::micros(5).to_string(), "5.000us");
+        assert_eq!(SimTime::secs(5).to_string(), "5.000s");
+    }
+}

@@ -1,0 +1,193 @@
+//! Per-operation-class virtual-time accounting — the "profiling" figures.
+//!
+//! The thesis presents profiling breakdowns (Figs 4.14/4.15/4.23–4.25)
+//! showing where client processes spend time (data write, index ops,
+//! metadata, locks, ...). Simulated processes report spans into a
+//! [`Trace`] collector keyed by [`OpClass`]; the figure harness renders
+//! the aggregate per-class percentages.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use super::time::SimTime;
+
+/// Operation classes matching the thesis' profiling categories.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum OpClass {
+    /// pool/container connect, mount, dataset-dir init
+    Init,
+    /// bulk object/field data writes
+    DataWrite,
+    /// bulk object/field data reads
+    DataRead,
+    /// index insert/put ops (KV put, B-tree insert, index file write)
+    IndexWrite,
+    /// index lookups (KV get/list, TOC/sub-TOC/index loads)
+    IndexRead,
+    /// metadata ops: file create/open/stat, OID alloc, namespace ops
+    Meta,
+    /// distributed-lock traffic (Lustre DLM only)
+    Lock,
+    /// flush/fsync barriers
+    Flush,
+    /// PGEN/model compute
+    Compute,
+    /// idle / waiting on barriers
+    Wait,
+}
+
+impl OpClass {
+    pub const ALL: [OpClass; 10] = [
+        OpClass::Init,
+        OpClass::DataWrite,
+        OpClass::DataRead,
+        OpClass::IndexWrite,
+        OpClass::IndexRead,
+        OpClass::Meta,
+        OpClass::Lock,
+        OpClass::Flush,
+        OpClass::Compute,
+        OpClass::Wait,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            OpClass::Init => "init",
+            OpClass::DataWrite => "data-write",
+            OpClass::DataRead => "data-read",
+            OpClass::IndexWrite => "index-write",
+            OpClass::IndexRead => "index-read",
+            OpClass::Meta => "metadata",
+            OpClass::Lock => "lock",
+            OpClass::Flush => "flush",
+            OpClass::Compute => "compute",
+            OpClass::Wait => "wait",
+        }
+    }
+}
+
+#[derive(Default)]
+struct TraceInner {
+    spans: BTreeMap<OpClass, (SimTime, u64)>, // (total time, count)
+}
+
+/// Shared trace collector. Clone-cheap; one per benchmark run.
+#[derive(Clone, Default)]
+pub struct Trace {
+    inner: Rc<RefCell<TraceInner>>,
+}
+
+impl Trace {
+    pub fn new() -> Trace {
+        Trace::default()
+    }
+
+    /// Record `dur` of virtual time under `class`.
+    pub fn record(&self, class: OpClass, dur: SimTime) {
+        let mut inner = self.inner.borrow_mut();
+        let e = inner.spans.entry(class).or_insert((SimTime::ZERO, 0));
+        e.0 += dur;
+        e.1 += 1;
+    }
+
+    pub fn total(&self, class: OpClass) -> SimTime {
+        self.inner
+            .borrow()
+            .spans
+            .get(&class)
+            .map(|e| e.0)
+            .unwrap_or(SimTime::ZERO)
+    }
+
+    pub fn count(&self, class: OpClass) -> u64 {
+        self.inner
+            .borrow()
+            .spans
+            .get(&class)
+            .map(|e| e.1)
+            .unwrap_or(0)
+    }
+
+    /// Sum over all classes.
+    pub fn grand_total(&self) -> SimTime {
+        SimTime(
+            self.inner
+                .borrow()
+                .spans
+                .values()
+                .map(|e| e.0 .0)
+                .sum::<u64>(),
+        )
+    }
+
+    /// Percentage breakdown, ordered as [`OpClass::ALL`], skipping zeros.
+    pub fn breakdown(&self) -> Vec<(OpClass, f64, SimTime)> {
+        let total = self.grand_total().as_nanos() as f64;
+        if total == 0.0 {
+            return Vec::new();
+        }
+        OpClass::ALL
+            .iter()
+            .filter_map(|&c| {
+                let t = self.total(c);
+                if t == SimTime::ZERO {
+                    None
+                } else {
+                    Some((c, 100.0 * t.as_nanos() as f64 / total, t))
+                }
+            })
+            .collect()
+    }
+
+    /// Render a one-line textual bar-chart style breakdown.
+    pub fn render(&self) -> String {
+        self.breakdown()
+            .iter()
+            .map(|(c, pct, t)| format!("{}={:.1}% ({})", c.label(), pct, t))
+            .collect::<Vec<_>>()
+            .join("  ")
+    }
+}
+
+/// RAII-less span helper: measure an async op's virtual duration.
+#[macro_export]
+macro_rules! traced {
+    ($trace:expr, $sim:expr, $class:expr, $body:expr) => {{
+        let __t0 = $sim.now();
+        let __out = $body;
+        $trace.record($class, $sim.now() - __t0);
+        __out
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_breaks_down() {
+        let t = Trace::new();
+        t.record(OpClass::DataWrite, SimTime::micros(75));
+        t.record(OpClass::IndexWrite, SimTime::micros(25));
+        let b = t.breakdown();
+        assert_eq!(b.len(), 2);
+        assert!((b[0].1 - 75.0).abs() < 1e-9);
+        assert!((b[1].1 - 25.0).abs() < 1e-9);
+        assert_eq!(t.count(OpClass::DataWrite), 1);
+    }
+
+    #[test]
+    fn empty_breakdown() {
+        let t = Trace::new();
+        assert!(t.breakdown().is_empty());
+        assert_eq!(t.grand_total(), SimTime::ZERO);
+    }
+
+    #[test]
+    fn render_contains_labels() {
+        let t = Trace::new();
+        t.record(OpClass::Lock, SimTime::micros(10));
+        assert!(t.render().contains("lock"));
+    }
+}

@@ -1,0 +1,117 @@
+//! Minimal command-line argument parser (no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Byte-size option accepting unit suffixes (`--size 1MiB`).
+    pub fn bytes(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .and_then(crate::util::humansize::parse_bytes_or_plain)
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        // NB: `--flag value`-style ambiguity is resolved greedily, so
+        // boolean flags go after positionals (or use `--flag=`-less form
+        // followed by another `--option`).
+        let a = parse("run target --nodes 4 --size=1MiB --verbose");
+        assert_eq!(a.positional, vec!["run", "target"]);
+        assert_eq!(a.get("nodes"), Some("4"));
+        assert_eq!(a.get("size"), Some("1MiB"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.usize("nodes", 1), 4);
+        assert_eq!(a.bytes("size", 0), 1 << 20);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("x --check");
+        assert!(a.flag("check"));
+        assert_eq!(a.positional, vec!["x"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.usize("missing", 7), 7);
+        assert_eq!(a.get_or("absent", "dflt"), "dflt");
+    }
+}

@@ -1,0 +1,69 @@
+//! Byte-size formatting/parsing helpers (KiB/MiB/GiB, powers of two).
+
+pub const KIB: u64 = 1 << 10;
+pub const MIB: u64 = 1 << 20;
+pub const GIB: u64 = 1 << 30;
+pub const TIB: u64 = 1 << 40;
+
+/// Format a byte count compactly: `1.00 MiB`, `512 B`, `3.50 GiB`.
+pub fn fmt_bytes(n: u64) -> String {
+    if n >= TIB {
+        format!("{:.2} TiB", n as f64 / TIB as f64)
+    } else if n >= GIB {
+        format!("{:.2} GiB", n as f64 / GIB as f64)
+    } else if n >= MIB {
+        format!("{:.2} MiB", n as f64 / MIB as f64)
+    } else if n >= KIB {
+        format!("{:.2} KiB", n as f64 / KIB as f64)
+    } else {
+        format!("{n} B")
+    }
+}
+
+/// Parse `"1MiB"`, `"4K"`, `"512"`, `"2g"` into bytes.
+pub fn parse_bytes(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let split = s.find(|c: char| !c.is_ascii_digit() && c != '.')?;
+    let (num, unit) = if split == 0 {
+        return None;
+    } else {
+        s.split_at(split)
+    };
+    let v: f64 = num.parse().ok()?;
+    let mult = match unit.trim().to_ascii_lowercase().as_str() {
+        "" | "b" => 1,
+        "k" | "kib" | "kb" => KIB,
+        "m" | "mib" | "mb" => MIB,
+        "g" | "gib" | "gb" => GIB,
+        "t" | "tib" | "tb" => TIB,
+        _ => return None,
+    };
+    Some((v * mult as f64) as u64)
+}
+
+/// Parse with fallback for plain integers (no unit suffix).
+pub fn parse_bytes_or_plain(s: &str) -> Option<u64> {
+    s.trim().parse::<u64>().ok().or_else(|| parse_bytes(s))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_roundtrip() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(MIB), "1.00 MiB");
+        assert_eq!(fmt_bytes(GIB * 3 + GIB / 2), "3.50 GiB");
+    }
+
+    #[test]
+    fn parse_variants() {
+        assert_eq!(parse_bytes("1MiB"), Some(MIB));
+        assert_eq!(parse_bytes("4K"), Some(4 * KIB));
+        assert_eq!(parse_bytes("2g"), Some(2 * GIB));
+        assert_eq!(parse_bytes("1.5M"), Some((1.5 * MIB as f64) as u64));
+        assert_eq!(parse_bytes("junk"), None);
+        assert_eq!(parse_bytes_or_plain("12345"), Some(12345));
+    }
+}

@@ -1,0 +1,132 @@
+//! Miniature property-testing harness (no `proptest` offline).
+//!
+//! `check(seed, cases, gen, prop)` runs `prop` against `cases` random
+//! inputs produced by `gen`. On failure it performs a simple greedy
+//! shrink (if a `Shrink` impl exists) and panics with the offending case.
+
+use crate::util::rng::Rng;
+
+/// Types that can propose smaller variants of themselves for shrinking.
+pub trait Shrink: Sized {
+    fn shrink(&self) -> Vec<Self>;
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0 {
+            vec![]
+        } else {
+            vec![0, self / 2, self - 1]
+        }
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0 {
+            vec![]
+        } else {
+            vec![0, self / 2, self - 1]
+        }
+    }
+}
+
+impl<T: Clone + Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if !self.is_empty() {
+            // drop halves
+            out.push(self[..self.len() / 2].to_vec());
+            out.push(self[self.len() / 2..].to_vec());
+            // drop one element
+            if self.len() <= 16 {
+                for i in 0..self.len() {
+                    let mut v = self.clone();
+                    v.remove(i);
+                    out.push(v);
+                }
+            }
+            // shrink one element
+            for (i, first) in self
+                .iter()
+                .enumerate()
+                .take(8)
+                .flat_map(|(i, x)| x.shrink().into_iter().next().map(|s| (i, s)))
+                .collect::<Vec<_>>()
+            {
+                let mut v = self.clone();
+                v[i] = first;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+/// Run a property over random cases; shrink + panic on first failure.
+pub fn check<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: Clone + std::fmt::Debug + Shrink,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> bool,
+{
+    let mut rng = Rng::new(seed);
+    for case_no in 0..cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            // greedy shrink
+            let mut best = input.clone();
+            'outer: loop {
+                for cand in best.shrink() {
+                    if !prop(&cand) {
+                        best = cand;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (seed={seed}, case={case_no})\n  original: {input:?}\n  shrunk:   {best:?}"
+            );
+        }
+    }
+}
+
+/// Variant without shrinking for non-`Shrink` inputs.
+pub fn check_no_shrink<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> bool,
+{
+    let mut rng = Rng::new(seed);
+    for case_no in 0..cases {
+        let input = gen(&mut rng);
+        assert!(
+            prop(&input),
+            "property failed (seed={seed}, case={case_no})\n  input: {input:?}"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(1, 200, |r| r.below(100), |&x| x < 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_shrinks() {
+        check(2, 200, |r| r.below(1000), |&x| x < 500);
+    }
+
+    #[test]
+    fn vec_shrink_produces_smaller() {
+        let v: Vec<u64> = vec![5, 6, 7, 8];
+        assert!(v.shrink().iter().all(|s| s.len() <= v.len()));
+    }
+}

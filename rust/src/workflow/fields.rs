@@ -1,0 +1,155 @@
+//! Synthetic weather fields + GRIB-style *simple packing* (the Rust
+//! mirror of the L1 Pallas kernel in `python/compile/kernels/pack.py`).
+//!
+//! Fields are smooth pseudo-random f32 grids (red-noise: seeded white
+//! noise passed through a few diffusion sweeps). Simple packing follows
+//! GRIB2 template 5.0 with 16-bit integers: `v ≈ ref + scale * n`.
+
+use crate::util::content::Bytes;
+use crate::util::rng::Rng;
+
+/// Generate a smooth H×W field from a seed (ensemble member/param/step).
+pub fn synth_field(h: usize, w: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut f: Vec<f32> = (0..h * w)
+        .map(|_| rng.f32() * 40.0 - 10.0) // ~[-10, 30] "temperature"
+        .collect();
+    // three 5-point diffusion sweeps → spatially-correlated field
+    for _ in 0..3 {
+        let snap = f.clone();
+        for y in 0..h {
+            for x in 0..w {
+                let idx = y * w + x;
+                let up = snap[y.saturating_sub(1) * w + x];
+                let dn = snap[(y + 1).min(h - 1) * w + x];
+                let lf = snap[y * w + x.saturating_sub(1)];
+                let rt = snap[y * w + (x + 1).min(w - 1)];
+                f[idx] = 0.5 * snap[idx] + 0.125 * (up + dn + lf + rt);
+            }
+        }
+    }
+    f
+}
+
+/// f32 grid → raw little-endian bytes.
+pub fn to_bytes(field: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(field.len() * 4);
+    for v in field {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Raw little-endian bytes → f32 grid.
+pub fn from_bytes(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+pub fn to_payload(field: &[f32]) -> Bytes {
+    Bytes::real(to_bytes(field))
+}
+
+/// GRIB simple packing (16-bit): header `[ref f32][scale f32][n u32]`
+/// then `n` little-endian u16 quantized values.
+pub fn pack_simple(field: &[f32]) -> Vec<u8> {
+    let lo = field.iter().copied().fold(f32::INFINITY, f32::min);
+    let hi = field.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let span = (hi - lo).max(f32::MIN_POSITIVE);
+    let scale = span / 65535.0;
+    let mut out = Vec::with_capacity(12 + field.len() * 2);
+    out.extend_from_slice(&lo.to_le_bytes());
+    out.extend_from_slice(&scale.to_le_bytes());
+    out.extend_from_slice(&(field.len() as u32).to_le_bytes());
+    for v in field {
+        let q = (((v - lo) / scale).round() as u32).min(65535) as u16;
+        out.extend_from_slice(&q.to_le_bytes());
+    }
+    out
+}
+
+/// Inverse of [`pack_simple`].
+pub fn unpack_simple(packed: &[u8]) -> Option<Vec<f32>> {
+    if packed.len() < 12 {
+        return None;
+    }
+    let lo = f32::from_le_bytes(packed[0..4].try_into().unwrap());
+    let scale = f32::from_le_bytes(packed[4..8].try_into().unwrap());
+    let n = u32::from_le_bytes(packed[8..12].try_into().unwrap()) as usize;
+    if packed.len() < 12 + 2 * n {
+        return None;
+    }
+    Some(
+        packed[12..12 + 2 * n]
+            .chunks_exact(2)
+            .map(|c| lo + scale * u16::from_le_bytes(c.try_into().unwrap()) as f32)
+            .collect(),
+    )
+}
+
+/// Max quantization error bound for a field under simple packing.
+pub fn packing_error_bound(field: &[f32]) -> f32 {
+    let lo = field.iter().copied().fold(f32::INFINITY, f32::min);
+    let hi = field.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    (hi - lo).max(f32::MIN_POSITIVE) / 65535.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_field_is_deterministic_and_smooth() {
+        let a = synth_field(32, 32, 7);
+        let b = synth_field(32, 32, 7);
+        assert_eq!(a, b);
+        assert_ne!(a, synth_field(32, 32, 8));
+        // smoothness: mean |neighbor diff| far below the value range
+        let mut diffs = 0.0f32;
+        let mut n = 0;
+        for y in 0..32 {
+            for x in 0..31 {
+                diffs += (a[y * 32 + x + 1] - a[y * 32 + x]).abs();
+                n += 1;
+            }
+        }
+        assert!(diffs / (n as f32) < 5.0, "mean diff {}", diffs / n as f32);
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let f = synth_field(16, 16, 3);
+        assert_eq!(from_bytes(&to_bytes(&f)), f);
+    }
+
+    #[test]
+    fn pack_roundtrip_within_error_bound() {
+        let f = synth_field(64, 64, 11);
+        let packed = pack_simple(&f);
+        assert_eq!(packed.len(), 12 + f.len() * 2); // ~2x compression
+        let back = unpack_simple(&packed).unwrap();
+        let bound = packing_error_bound(&f) * 0.51 + 1e-4;
+        for (a, b) in f.iter().zip(&back) {
+            assert!((a - b).abs() <= bound, "{a} vs {b} (bound {bound})");
+        }
+    }
+
+    #[test]
+    fn pack_constant_field() {
+        let f = vec![5.0f32; 100];
+        let back = unpack_simple(&pack_simple(&f)).unwrap();
+        for v in back {
+            assert!((v - 5.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn unpack_rejects_truncated() {
+        let f = synth_field(8, 8, 1);
+        let packed = pack_simple(&f);
+        assert!(unpack_simple(&packed[..10]).is_none());
+        assert!(unpack_simple(&packed[..packed.len() - 1]).is_none());
+    }
+}

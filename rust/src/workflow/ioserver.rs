@@ -1,0 +1,77 @@
+//! I/O server processes (thesis Fig 2.11): receive model fields and
+//! archive them step by step, flushing at step end and signalling the
+//! workflow manager so PGEN can start.
+
+use std::rc::Rc;
+
+use super::driver::StepBarrier;
+use crate::fdb::{Fdb, Key};
+use crate::sim::exec::Sim;
+use crate::workflow::fields;
+
+#[derive(Clone, Copy, Debug)]
+pub struct IoServerConfig {
+    pub member: usize,
+    pub proc: usize,
+    pub steps: u32,
+    /// fields archived per process per step (65 operationally)
+    pub fields_per_step: u32,
+    /// grid side (fields are side×side f32)
+    pub grid: usize,
+}
+
+/// Identifier for one model output field.
+pub fn model_field_id(member: usize, proc: usize, step: u32, f: u32) -> Key {
+    Key::of(&[
+        ("class", "od"),
+        ("expver", "0001"),
+        ("stream", "oper"),
+        ("date", "20231201"),
+        ("time", "0000"),
+        ("type", "fc"),
+        ("levtype", "ml"),
+    ])
+    .with("number", member.to_string())
+    .with("levelist", (proc + 1).to_string())
+    .with("step", step.to_string())
+    .with("param", format!("p{f}"))
+}
+
+/// Payload seed so readers can verify content without re-generating grids.
+pub fn model_field_seed(id: &Key) -> u64 {
+    crate::ceph::hash_name(&id.canonical())
+}
+
+/// Run one I/O server process to completion.
+pub async fn run(
+    mut fdb: Fdb,
+    sim: Sim,
+    cfg: IoServerConfig,
+    barrier: Rc<StepBarrier>,
+    real_fields: bool,
+) {
+    for step in 1..=cfg.steps {
+        for f in 0..cfg.fields_per_step {
+            let id = model_field_id(cfg.member, cfg.proc, step, f);
+            let payload = if real_fields {
+                // actual f32 grid bytes (PGEN will compute on them)
+                let grid = fields::synth_field(
+                    cfg.grid,
+                    cfg.grid,
+                    model_field_seed(&id),
+                );
+                fields::to_payload(&grid)
+            } else {
+                crate::util::content::Bytes::virt(
+                    (cfg.grid * cfg.grid * 4) as u64,
+                    model_field_seed(&id),
+                )
+            };
+            fdb.archive(&id, payload).await.expect("archive");
+        }
+        fdb.flush().await;
+        barrier.arrive(step).await;
+    }
+    fdb.close().await;
+    let _ = sim;
+}

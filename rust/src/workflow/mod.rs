@@ -1,0 +1,39 @@
+//! The operational NWP I/O pattern (thesis §2.7.2 / Fig 2.11): I/O server
+//! processes archiving per-step fields with flush barriers, and staggered
+//! PGEN (product generation) jobs reading each step back while the model
+//! still writes — the write+read contention the evaluation centres on.
+
+pub mod driver;
+pub mod fields;
+pub mod ioserver;
+pub mod pgen;
+
+use std::rc::Rc;
+
+use crate::sim::time::SimTime;
+
+/// The PGEN compute hook: derived-product generation over a step's
+/// ensemble fields. The production implementation executes the
+/// AOT-compiled JAX/Pallas graph via PJRT (`runtime::PgenPipeline`);
+/// tests use [`NullCompute`].
+pub trait PgenCompute {
+    /// Consume the step's fields (each a f32 grid), produce derived
+    /// products (e.g. ensemble mean/spread/exceedance probability).
+    fn run(&self, fields: &[Vec<f32>]) -> Vec<Vec<f32>>;
+    /// Virtual-time cost charged to the simulation for one invocation.
+    fn cost(&self) -> SimTime;
+}
+
+/// No-op compute (I/O-only workflows, like fdb-hammer).
+pub struct NullCompute;
+
+impl PgenCompute for NullCompute {
+    fn run(&self, _fields: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        Vec::new()
+    }
+    fn cost(&self) -> SimTime {
+        SimTime::ZERO
+    }
+}
+
+pub type Compute = Rc<dyn PgenCompute>;

@@ -1,0 +1,293 @@
+//! Cross-backend consistency integration tests: the FDB ACID semantics
+//! (thesis §2.7) hold on every Store/Catalogue pair, under parallelism
+//! and write+read contention, with byte-exact verification.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use fdbr::bench::scenario::{deploy, RedundancyOpt, SystemKind, SystemUnderTest};
+use fdbr::fdb::{setup, Fdb, Key, Request};
+use fdbr::hw::profiles::Testbed;
+use fdbr::sim::exec::WaitGroup;
+use fdbr::util::content::Bytes;
+
+fn make_fdb(dep: &fdbr::bench::scenario::Deployment, node_idx: usize) -> Fdb {
+    let node = dep.client_nodes()[node_idx].clone();
+    match &dep.system {
+        SystemUnderTest::Lustre(fs) => setup::posix_fdb(&dep.sim, fs, &node, "/fdb"),
+        SystemUnderTest::Daos(d) => setup::daos_fdb(&dep.sim, d, &node, "fdb"),
+        SystemUnderTest::Ceph(c, pool) => setup::rados_fdb(&dep.sim, c, pool, &node),
+    }
+}
+
+fn id_for(member: usize, step: u32, param: u32) -> Key {
+    Key::of(&[
+        ("class", "od"),
+        ("expver", "0001"),
+        ("stream", "oper"),
+        ("date", "20231201"),
+        ("time", "1200"),
+        ("type", "ef"),
+        ("levtype", "sfc"),
+        ("levelist", "1"),
+    ])
+    .with("number", member.to_string())
+    .with("step", step.to_string())
+    .with("param", format!("p{param}"))
+}
+
+fn seed_of(id: &Key) -> u64 {
+    fdbr::ceph::hash_name(&id.canonical())
+}
+
+/// 8 parallel writers × 40 fields each; all fields byte-verified by 8
+/// parallel readers afterwards. Exercises TOC/index contention paths.
+#[test]
+fn parallel_writers_then_readers_all_backends() {
+    for kind in [SystemKind::Lustre, SystemKind::Daos, SystemKind::Ceph] {
+        let dep = deploy(Testbed::Gcp, kind, 2, 4, RedundancyOpt::None);
+        let nwriters = 8;
+        let wg = WaitGroup::new(nwriters);
+        for w in 0..nwriters {
+            let mut fdb = make_fdb(&dep, w % 4);
+            let wg = wg.clone();
+            dep.sim.spawn(async move {
+                for step in 1..=5u32 {
+                    for param in 0..8 {
+                        let id = id_for(w, step, param);
+                        fdb.archive(&id, Bytes::virt(64 << 10, seed_of(&id)))
+                            .await
+                            .unwrap();
+                    }
+                    fdb.flush().await;
+                }
+                fdb.close().await;
+                wg.done();
+            });
+        }
+        dep.sim.run();
+        // readers verify everything
+        let failures = Rc::new(RefCell::new(Vec::new()));
+        for r in 0..nwriters {
+            let mut fdb = make_fdb(&dep, (r + 1) % 4);
+            let failures = failures.clone();
+            dep.sim.spawn(async move {
+                for step in 1..=5u32 {
+                    for param in 0..8 {
+                        let id = id_for(r, step, param);
+                        match fdb.retrieve(&id).await.unwrap() {
+                            None => failures.borrow_mut().push(format!("missing {id}")),
+                            Some(h) => {
+                                let data = fdb.read(&h).await;
+                                if !data.content_eq(&Bytes::virt(64 << 10, seed_of(&id))) {
+                                    failures
+                                        .borrow_mut()
+                                        .push(format!("bytes differ for {id}"));
+                                }
+                            }
+                        }
+                    }
+                }
+            });
+        }
+        dep.sim.run();
+        assert!(
+            failures.borrow().is_empty(),
+            "{kind:?}: {:?}",
+            failures.borrow()
+        );
+    }
+}
+
+/// Concurrent writer + reader on the SAME identifiers: the reader must
+/// see either nothing (not yet visible) or complete, correct bytes —
+/// never torn data (ACID item 1).
+#[test]
+fn no_torn_reads_under_live_contention() {
+    for kind in [SystemKind::Daos, SystemKind::Ceph] {
+        let dep = deploy(Testbed::Gcp, kind, 2, 2, RedundancyOpt::None);
+        let mut w = make_fdb(&dep, 0);
+        let mut r = make_fdb(&dep, 1);
+        let hits = Rc::new(RefCell::new((0u32, 0u32))); // (found, missing)
+        let h2 = hits.clone();
+        dep.sim.spawn(async move {
+            for step in 1..=20u32 {
+                let id = id_for(0, step, 0);
+                w.archive(&id, Bytes::virt(256 << 10, seed_of(&id)))
+                    .await
+                    .unwrap();
+            }
+        });
+        let sim = dep.sim.clone();
+        dep.sim.spawn(async move {
+            for step in 1..=20u32 {
+                // poll while the writer runs (first ~7 ms are the
+                // writer's pool-connect + container-create ramp)
+                sim.sleep(fdbr::sim::time::SimTime::millis(2)).await;
+                let id = id_for(0, step, 0);
+                // fresh view per poll, like a new PGEN job (pre-loaded
+                // axes are a point-in-time snapshot — thesis §3.1.2)
+                let ds = id.project(&r.schema.dataset.clone()).unwrap();
+                r.invalidate_preload(&ds);
+                match r.retrieve(&id).await.unwrap() {
+                    None => h2.borrow_mut().1 += 1,
+                    Some(h) => {
+                        let data = r.read(&h).await;
+                        assert!(
+                            data.content_eq(&Bytes::virt(256 << 10, seed_of(&id))),
+                            "{kind:?}: torn read for {id}"
+                        );
+                        h2.borrow_mut().0 += 1;
+                    }
+                }
+            }
+        });
+        dep.sim.run();
+        let (found, _missing) = *hits.borrow();
+        assert!(found > 0, "{kind:?}: reader should observe some fields");
+    }
+}
+
+/// Re-archiving an identifier replaces it transactionally on every
+/// backend (ACID item 5); list() reports exactly one entry per id.
+#[test]
+fn rearchive_replaces_and_list_deduplicates() {
+    for kind in [SystemKind::Lustre, SystemKind::Daos, SystemKind::Ceph] {
+        let dep = deploy(Testbed::Gcp, kind, 2, 2, RedundancyOpt::None);
+        let mut w = make_fdb(&dep, 0);
+        dep.sim.spawn(async move {
+            let id = id_for(0, 1, 0);
+            w.archive(&id, b"version-one").await.unwrap();
+            w.flush().await;
+            w.archive(&id, b"version-two!").await.unwrap();
+            w.flush().await;
+            w.close().await;
+        });
+        dep.sim.run();
+        let mut r = make_fdb(&dep, 1);
+        let kind2 = kind;
+        dep.sim.spawn(async move {
+            let id = id_for(0, 1, 0);
+            let h = r.retrieve(&id).await.unwrap().expect("found");
+            assert_eq!(
+                r.read(&h).await.to_vec(),
+                b"version-two!",
+                "{kind2:?}: newest version wins"
+            );
+            let ds = id.project(&r.schema.dataset.clone()).unwrap();
+            let listed = r.list(&ds, &Request::parse("").unwrap()).await;
+            assert_eq!(listed.len(), 1, "{kind2:?}: list must deduplicate");
+        });
+        dep.sim.run();
+    }
+}
+
+/// POSIX-only: flush() is the visibility barrier; sub-TOC masking after
+/// close() keeps results identical.
+#[test]
+fn posix_flush_visibility_and_masking() {
+    let dep = deploy(
+        Testbed::NextGenIo,
+        SystemKind::Lustre,
+        2,
+        2,
+        RedundancyOpt::None,
+    );
+    let mut w = make_fdb(&dep, 0);
+    let dep_sim = dep.sim.clone();
+    let SystemUnderTest::Lustre(fs) = &dep.system else {
+        unreachable!()
+    };
+    let fs = fs.clone();
+    let node1 = dep.client_nodes()[1].clone();
+    dep.sim.spawn(async move {
+        let id = id_for(3, 7, 2);
+        w.archive(&id, b"masked-payload").await.unwrap();
+        // before flush: a fresh reader sees nothing
+        let mut r1 = setup::posix_fdb(&dep_sim, &fs, &node1, "/fdb");
+        assert!(r1.retrieve(&id).await.unwrap().is_none());
+        w.flush().await;
+        // after flush (partial index via sub-TOC): visible
+        let mut r2 = setup::posix_fdb(&dep_sim, &fs, &node1, "/fdb");
+        assert!(r2.retrieve(&id).await.unwrap().is_some());
+        w.close().await;
+        // after close (full index + mask): still exactly one result
+        let mut r3 = setup::posix_fdb(&dep_sim, &fs, &node1, "/fdb");
+        let h = r3.retrieve(&id).await.unwrap().expect("still visible");
+        assert_eq!(r3.read(&h).await.to_vec(), b"masked-payload");
+        let ds = id.project(&r3.schema.dataset.clone()).unwrap();
+        let listed = r3.list(&ds, &Request::parse("").unwrap()).await;
+        assert_eq!(listed.len(), 1, "masking prevents duplicates");
+    });
+    dep.sim.run();
+}
+
+/// Failure injection: a writer that never flushes nor closes must leave
+/// the dataset readable (its flushed steps) and consistent.
+#[test]
+fn crashed_writer_leaves_consistent_dataset() {
+    let dep = deploy(Testbed::Gcp, SystemKind::Lustre, 2, 2, RedundancyOpt::None);
+    let mut w = make_fdb(&dep, 0);
+    dep.sim.spawn(async move {
+        // step 1 flushed
+        for param in 0..4 {
+            let id = id_for(0, 1, param);
+            w.archive(&id, Bytes::virt(8 << 10, seed_of(&id)))
+                .await
+                .unwrap();
+        }
+        w.flush().await;
+        // step 2 archived but NEVER flushed — then the process "dies"
+        for param in 0..4 {
+            let id = id_for(0, 2, param);
+            w.archive(&id, Bytes::virt(8 << 10, seed_of(&id)))
+                .await
+                .unwrap();
+        }
+        drop(w); // no flush, no close
+    });
+    dep.sim.run();
+    let mut r = make_fdb(&dep, 1);
+    dep.sim.spawn(async move {
+        // step 1 fully present and correct
+        for param in 0..4 {
+            let id = id_for(0, 1, param);
+            let h = r
+                .retrieve(&id)
+                .await
+                .unwrap()
+                .expect("flushed step visible");
+            assert!(r
+                .read(&h)
+                .await
+                .content_eq(&Bytes::virt(8 << 10, seed_of(&id))));
+        }
+        // step 2 invisible (never flushed): cache semantics, not an error
+        for param in 0..4 {
+            let id = id_for(0, 2, param);
+            assert!(r.retrieve(&id).await.unwrap().is_none());
+        }
+    });
+    dep.sim.run();
+}
+
+/// S3 Store semantics: PUT durable on archive; last racing PUT prevails.
+#[test]
+fn s3_store_put_semantics() {
+    let dep = deploy(Testbed::Gcp, SystemKind::Lustre, 1, 2, RedundancyOpt::None);
+    let server = dep.cluster.storage_nodes().next().unwrap().clone();
+    let cnode = dep.client_nodes()[0].clone();
+    let s3 = Rc::new(fdbr::s3::MemS3::new(&dep.sim, &server, &cnode));
+    let mut fdb = setup::s3_fdb(&dep.sim, &s3, "proc0");
+    dep.sim.spawn(async move {
+        let id = id_for(0, 1, 0);
+        fdb.archive(&id, b"first").await.unwrap();
+        // visible with NO flush (PutObject blocks until durable)
+        let h = fdb.retrieve(&id).await.unwrap().unwrap();
+        assert_eq!(fdb.read(&h).await.to_vec(), b"first");
+        fdb.archive(&id, b"second").await.unwrap();
+        let h = fdb.retrieve(&id).await.unwrap().unwrap();
+        assert_eq!(fdb.read(&h).await.to_vec(), b"second");
+    });
+    dep.sim.run();
+}

@@ -1,0 +1,125 @@
+//! PJRT runtime integration: load every AOT artifact, execute it, and
+//! verify numerics against the Rust-side mirrors — the L1/L2 ⇄ L3
+//! interchange check. Requires `make artifacts` (skips gracefully if
+//! artifacts are missing so `cargo test` works pre-build).
+
+use fdbr::runtime::{artifacts_dir, Codec, ModelStepper, PgenPipeline, PjrtRuntime};
+use fdbr::workflow::fields;
+use fdbr::workflow::PgenCompute;
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("pgen_e8_g32.hlo.txt").exists()
+}
+
+#[test]
+fn codec_artifact_matches_rust_mirror() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = PjrtRuntime::cpu().unwrap();
+    let codec = Codec::new(&rt, 32).unwrap();
+    let field = fields::synth_field(32, 32, 42);
+    let via_pjrt = codec.roundtrip(&field).unwrap();
+    let via_rust = fields::unpack_simple(&fields::pack_simple(&field)).unwrap();
+    // both are 16-bit quantizations of the same field: equal within the
+    // combined quantization error
+    let bound = 2.0 * fields::packing_error_bound(&field) + 1e-4;
+    for (a, b) in via_pjrt.iter().zip(&via_rust) {
+        assert!(
+            (a - b).abs() <= bound,
+            "pjrt {a} vs rust {b} (bound {bound})"
+        );
+    }
+}
+
+#[test]
+fn model_step_artifact_damps_constant_field() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = PjrtRuntime::cpu().unwrap();
+    let stepper = ModelStepper::new(&rt, 32).unwrap();
+    let state = vec![10.0f32; 32 * 32];
+    let noise = vec![0.0f32; 32 * 32];
+    let next = stepper.step(&state, &noise).unwrap();
+    // diffusion preserves a constant; damping scales by 0.98
+    for v in &next {
+        assert!((v - 9.8).abs() < 1e-3, "expected 9.8, got {v}");
+    }
+    // forcing adds 0.3 × noise
+    let forced = stepper.step(&state, &vec![1.0f32; 32 * 32]).unwrap();
+    for v in &forced {
+        assert!((v - 10.1).abs() < 1e-3, "expected 10.1, got {v}");
+    }
+}
+
+#[test]
+fn pgen_artifact_products_match_direct_statistics() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = PjrtRuntime::cpu().unwrap();
+    let pgen = PgenPipeline::new(&rt, 8, 32).unwrap();
+    let gg = 32 * 32;
+    let members: Vec<Vec<f32>> = (0..8)
+        .map(|i| fields::synth_field(32, 32, 100 + i))
+        .collect();
+    let products = pgen.run(&members);
+    assert_eq!(products.len(), 3); // mean, spread, prob for one group
+    // direct ensemble mean
+    let mut mean = vec![0.0f32; gg];
+    for m in &members {
+        for (acc, v) in mean.iter_mut().zip(m) {
+            *acc += v / 8.0;
+        }
+    }
+    // product[0] is the codec-roundtripped mean: compare within packing err
+    let span = mean.iter().cloned().fold(f32::NEG_INFINITY, f32::max)
+        - mean.iter().cloned().fold(f32::INFINITY, f32::min);
+    let bound = span / 65535.0 + 1e-3;
+    for (a, b) in products[0].iter().zip(&mean) {
+        assert!((a - b).abs() <= bound, "mean: pjrt {a} vs direct {b}");
+    }
+    // probabilities in [0, 1]
+    for p in &products[2] {
+        assert!((0.0..=1.0).contains(p), "prob {p}");
+    }
+}
+
+#[test]
+fn pgen_pads_partial_groups() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = PjrtRuntime::cpu().unwrap();
+    let pgen = PgenPipeline::new(&rt, 8, 32).unwrap();
+    // 11 fields → two groups (8 + 3-padded-to-8) → 6 products
+    let members: Vec<Vec<f32>> = (0..11)
+        .map(|i| fields::synth_field(32, 32, 200 + i))
+        .collect();
+    let products = pgen.run(&members);
+    assert_eq!(products.len(), 6);
+    assert_eq!(pgen.invocations(), 2);
+}
+
+#[test]
+fn model_integration_produces_smooth_evolution() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = PjrtRuntime::cpu().unwrap();
+    let stepper = ModelStepper::new(&rt, 32).unwrap();
+    let mut state = fields::synth_field(32, 32, 7);
+    for step in 0..10 {
+        let noise = fields::synth_field(32, 32, 1000 + step);
+        state = stepper.step(&state, &noise).unwrap();
+        assert!(state.iter().all(|v| v.is_finite()), "step {step} diverged");
+    }
+    let max = state.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    assert!(max < 200.0, "model should stay bounded, max {max}");
+}
