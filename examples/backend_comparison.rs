@@ -7,9 +7,9 @@
 
 use std::rc::Rc;
 
-use fdbr::bench::scenario::{deploy, RedundancyOpt, SystemKind, SystemUnderTest};
-use fdbr::fdb::{setup, Fdb};
+use fdbr::bench::scenario::{deploy, RedundancyOpt, SystemKind};
 use fdbr::fdb::schema::example_identifier;
+use fdbr::fdb::{BackendConfig, Fdb, FdbBuilder};
 use fdbr::hw::profiles::Testbed;
 use fdbr::sim::exec::Sim;
 
@@ -20,7 +20,7 @@ fn exercise(mut w: Fdb, mut r: Fdb, sim: &Sim, label: &'static str) {
         w.flush().await;
         w.close().await;
         let h = r.retrieve(&id).await.unwrap().expect("retrievable");
-        let bytes = r.read(&h).await.to_vec();
+        let bytes = r.read(&h).await.unwrap().to_vec();
         assert_eq!(bytes, b"backend-comparison-payload");
         println!("  {label:<14} archive→flush→retrieve roundtrip OK");
     });
@@ -31,20 +31,8 @@ fn main() {
     for kind in [SystemKind::Lustre, SystemKind::Daos, SystemKind::Ceph] {
         let dep = deploy(Testbed::Gcp, kind, 2, 2, RedundancyOpt::None);
         let nodes = dep.client_nodes();
-        let (w, r) = match &dep.system {
-            SystemUnderTest::Lustre(fs) => (
-                setup::posix_fdb(&dep.sim, fs, &nodes[0], "/fdb"),
-                setup::posix_fdb(&dep.sim, fs, &nodes[1], "/fdb"),
-            ),
-            SystemUnderTest::Daos(d) => (
-                setup::daos_fdb(&dep.sim, d, &nodes[0], "fdb"),
-                setup::daos_fdb(&dep.sim, d, &nodes[1], "fdb"),
-            ),
-            SystemUnderTest::Ceph(c, pool) => (
-                setup::rados_fdb(&dep.sim, c, pool, &nodes[0]),
-                setup::rados_fdb(&dep.sim, c, pool, &nodes[1]),
-            ),
-        };
+        // the same declarative construction path for every backend
+        let (w, r) = (dep.fdb(&nodes[0]), dep.fdb(&nodes[1]));
         exercise(w, r, &dep.sim, kind.label());
         dep.sim.run();
     }
@@ -53,12 +41,19 @@ fn main() {
     let server = dep.cluster.storage_nodes().next().unwrap().clone();
     let cnode = dep.client_nodes()[0].clone();
     let s3 = Rc::new(fdbr::s3::MemS3::new(&dep.sim, &server, &cnode));
-    let mut fdb = setup::s3_fdb(&dep.sim, &s3, "p0");
+    let mut fdb = FdbBuilder::new(&dep.sim)
+        .backend(BackendConfig::S3 {
+            s3: s3.clone(),
+            client_tag: "p0".to_string(),
+            multipart: false,
+        })
+        .build()
+        .expect("valid config");
     dep.sim.spawn(async move {
         let id = example_identifier();
         fdb.archive(&id, b"s3-payload").await.unwrap();
         let h = fdb.retrieve(&id).await.unwrap().unwrap();
-        assert_eq!(fdb.read(&h).await.to_vec(), b"s3-payload");
+        assert_eq!(fdb.read(&h).await.unwrap().to_vec(), b"s3-payload");
         println!("  {:<14} archive→retrieve roundtrip OK (PutObject durable on archive)", "S3");
     });
     dep.sim.run();

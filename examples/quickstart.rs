@@ -3,10 +3,8 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use std::rc::Rc;
-
 use fdbr::bench::scenario::{deploy, RedundancyOpt, SystemKind};
-use fdbr::fdb::{setup, Key, Request};
+use fdbr::fdb::{BackendConfig, FdbBuilder, Key, Request};
 use fdbr::hw::profiles::Testbed;
 
 fn main() {
@@ -15,12 +13,26 @@ fn main() {
     let writer_node = dep.client_nodes()[0].clone();
     let reader_node = dep.client_nodes()[1].clone();
 
-    // 2. One FDB instance per process (like linking libfdb).
+    // 2. One FDB instance per process (like linking libfdb), built
+    //    declaratively: the BackendConfig names the backend pair + knobs.
     let fdbr::bench::scenario::SystemUnderTest::Daos(daos) = &dep.system else {
         unreachable!()
     };
-    let mut writer = setup::daos_fdb(&dep.sim, daos, &writer_node, "fdb");
-    let mut reader = setup::daos_fdb(&dep.sim, daos, &reader_node, "fdb");
+    let config = || BackendConfig::Daos {
+        daos: daos.clone(),
+        pool: "fdb".to_string(),
+        hash_oids: false,
+    };
+    let mut writer = FdbBuilder::new(&dep.sim)
+        .node(&writer_node)
+        .backend(config())
+        .build()
+        .expect("valid config");
+    let mut reader = FdbBuilder::new(&dep.sim)
+        .node(&reader_node)
+        .backend(config())
+        .build()
+        .expect("valid config");
 
     // 3. Archive a few fields, then retrieve them from another process.
     dep.sim.spawn(async move {
@@ -46,7 +58,7 @@ fn main() {
         req.bind("step", vec![]); // `*` → wildcard
         let handles = reader.retrieve_request(&req).await.unwrap();
         for h in &handles {
-            let bytes = reader.read(h).await.to_vec();
+            let bytes = reader.read(h).await.unwrap().to_vec();
             println!(
                 "retrieved {} bytes: {:?}...",
                 bytes.len(),

@@ -1,8 +1,14 @@
 """Hypothesis sweeps: kernel/oracle agreement over random shapes and
-value distributions (the property layer on top of test_kernels.py)."""
+value distributions (the property layer on top of test_kernels.py).
+
+Skips cleanly when hypothesis is not installed (offline containers);
+test_kernels.py still covers the deterministic cases."""
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import ensemble, pack, ref, stencil

@@ -14,7 +14,7 @@ use std::rc::Rc;
 use super::figures::{FigRow, Figure};
 use super::scenario::{deploy, RedundancyOpt, SystemKind, SystemUnderTest};
 use crate::bench::aggregate_bw;
-use crate::fdb::{setup, Fdb};
+use crate::fdb::{BackendConfig, Fdb, FdbBuilder};
 use crate::hw::profiles::Testbed;
 use crate::lustre::{Lustre, LustreConfig, StripeSpec};
 use crate::sim::exec::{Sim, WaitGroup};
@@ -49,11 +49,15 @@ fn abl_hash_oid(scale: f64) -> Figure {
         };
         let n = nops(scale, 2000);
         let mk = |node| {
-            let mut fdb = setup::daos_fdb(&dep.sim, d, node, "fdb");
-            if let crate::fdb::StoreBackend::Daos(s) = &mut fdb.store {
-                s.hash_oids = hash_oids;
-            }
-            fdb
+            FdbBuilder::new(&dep.sim)
+                .node(node)
+                .backend(BackendConfig::Daos {
+                    daos: d.clone(),
+                    pool: "fdb".to_string(),
+                    hash_oids,
+                })
+                .build()
+                .unwrap()
         };
         let nodes = dep.client_nodes();
         let mut w = mk(&nodes[0]);
@@ -70,7 +74,7 @@ fn abl_hash_oid(scale: f64) -> Figure {
             for i in 0..n {
                 let id = super::hammer::field_id(0, 1 + (i / 100) as u32, (i % 10) as u32, (i % 7) as u32);
                 let h = r.retrieve(&id).await.unwrap().expect("present");
-                r.read(&h).await;
+                r.read(&h).await.unwrap();
             }
         });
         let end = dep.sim.run();
@@ -232,10 +236,14 @@ fn abl_s3_multipart(scale: f64) -> Figure {
         let cnode = dep.client_nodes()[0].clone();
         let s3 = Rc::new(crate::s3::MemS3::new(&dep.sim, &server, &cnode));
         let n = nops(scale, 1000);
-        let mut fdb: Fdb = setup::s3_fdb(&dep.sim, &s3, "p0");
-        if let crate::fdb::StoreBackend::S3(s) = &mut fdb.store {
-            s.multipart = multipart;
-        }
+        let mut fdb: Fdb = FdbBuilder::new(&dep.sim)
+            .backend(BackendConfig::S3 {
+                s3: s3.clone(),
+                client_tag: "p0".to_string(),
+                multipart,
+            })
+            .build()
+            .unwrap();
         let spans = super::scenario::new_spans();
         let spans2 = spans.clone();
         let sim = dep.sim.clone();

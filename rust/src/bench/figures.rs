@@ -721,7 +721,7 @@ fn run_fig3_5_config(
     raise_max: bool,
 ) -> crate::bench::BwResult {
     use crate::bench::{aggregate_bw, BwResult};
-    use crate::fdb::{CatalogueBackend, Fdb, Schema, StoreBackend};
+    use crate::fdb::{BackendConfig, FdbBuilder};
     use crate::sim::exec::WaitGroup;
     use crate::util::content::Bytes;
 
@@ -743,21 +743,15 @@ fn run_fig3_5_config(
     };
     let clients = dep.client_nodes();
     let mk = |node: &std::rc::Rc<crate::hw::node::Node>| {
-        let schema = Schema::daos_variant();
-        let store =
-            crate::fdb::rados::store::RadosStore::new(&ceph, ceph.client(node), &pool)
-                .with_config(store_cfg.clone());
-        let catalogue = crate::fdb::rados::catalogue::RadosCatalogue::new(
-            ceph.client(node),
-            &pool,
-            schema.clone(),
-        );
-        Fdb::new(
-            &dep.sim,
-            schema,
-            StoreBackend::Rados(store),
-            CatalogueBackend::Rados(catalogue),
-        )
+        FdbBuilder::new(&dep.sim)
+            .node(node)
+            .backend(BackendConfig::Rados {
+                ceph: ceph.clone(),
+                pool: pool.clone(),
+                store: store_cfg.clone(),
+            })
+            .build()
+            .unwrap()
     };
     let mut result = BwResult::default();
     // write phase
@@ -805,7 +799,7 @@ fn run_fig3_5_config(
                 for i in 0..nfields {
                     let id = hammer::field_id(ni, 1 + (i / 50) as u32, (i % 10) as u32, (p * 1000 + i % 5) as u32);
                     if let Some(h) = fdb.retrieve(&id).await.unwrap() {
-                        fdb.read(&h).await;
+                        fdb.read(&h).await.unwrap();
                     }
                 }
                 spans

@@ -8,9 +8,9 @@
 
 use std::rc::Rc;
 
-use super::scenario::{new_spans, Deployment, SystemUnderTest};
+use super::scenario::{new_spans, Deployment};
 use super::{aggregate_bw, BwResult};
-use crate::fdb::{setup, Fdb, Key};
+use crate::fdb::{Fdb, Key};
 use crate::sim::exec::{Sim, WaitGroup};
 use crate::sim::trace::Trace;
 use crate::util::content::Bytes;
@@ -73,12 +73,20 @@ pub fn field_seed(id: &Key) -> u64 {
 }
 
 fn make_fdb(dep: &Deployment, node: &Rc<crate::hw::node::Node>, trace: &Trace) -> Fdb {
-    let fdb = match &dep.system {
-        SystemUnderTest::Lustre(fs) => setup::posix_fdb(&dep.sim, fs, node, "/fdb"),
-        SystemUnderTest::Daos(d) => setup::daos_fdb(&dep.sim, d, node, "fdb"),
-        SystemUnderTest::Ceph(c, pool) => setup::rados_fdb(&dep.sim, c, pool, node),
-    };
-    fdb.with_trace(trace.clone())
+    dep.fdb_traced(node, trace)
+}
+
+/// The step's identifiers for one (member, proc) writer/reader.
+fn step_ids(member: usize, proc: usize, step: u32, cfg: &HammerConfig) -> Vec<Key> {
+    let mut ids = Vec::with_capacity((cfg.nparams * cfg.nlevels) as usize);
+    // levels are partitioned over a node's processes so identifiers are
+    // process-unique, like the real fdb-hammer
+    for param in 0..cfg.nparams {
+        for level in 0..cfg.nlevels {
+            ids.push(field_id(member, step, param, level * 1000 + proc as u32));
+        }
+    }
+    ids
 }
 
 async fn writer(
@@ -91,16 +99,16 @@ async fn writer(
     wg: Rc<WaitGroup>,
 ) {
     let t0 = sim.now();
-    // levels are partitioned over a node's processes so identifiers are
-    // process-unique, like the real fdb-hammer
+    // one archive_many batch per step — the batched small-object path
     for step in 1..=cfg.nsteps {
-        for param in 0..cfg.nparams {
-            for level in 0..cfg.nlevels {
-                let id = field_id(member, step, param, level * 1000 + proc as u32);
+        let batch: Vec<(Key, Bytes)> = step_ids(member, proc, step, &cfg)
+            .into_iter()
+            .map(|id| {
                 let data = Bytes::virt(cfg.field_size, field_seed(&id));
-                fdb.archive(&id, data).await.expect("archive");
-            }
-        }
+                (id, data)
+            })
+            .collect();
+        fdb.archive_many(batch).await.expect("archive_many");
         fdb.flush().await;
     }
     fdb.close().await;
@@ -120,23 +128,18 @@ async fn reader(
 ) {
     let t0 = sim.now();
     let mut missing = 0u64;
+    // batched retrieve per step: catalogue lookups pipeline with reads
     for step in 1..=cfg.nsteps {
-        for param in 0..cfg.nparams {
-            for level in 0..cfg.nlevels {
-                let id = field_id(member, step, param, level * 1000 + proc as u32);
-                match fdb.retrieve(&id).await.expect("retrieve") {
-                    None => missing += 1,
-                    Some(h) => {
-                        let data = fdb.read(&h).await;
-                        if cfg.check {
-                            let expect = Bytes::virt(cfg.field_size, field_seed(&id));
-                            assert!(
-                                data.content_eq(&expect),
-                                "consistency check failed for {id}"
-                            );
-                        }
-                    }
-                }
+        let ids = step_ids(member, proc, step, &cfg);
+        let fetched = fdb.retrieve_many(&ids).await.expect("retrieve_many");
+        missing += (ids.len() - fetched.len()) as u64;
+        if cfg.check {
+            for (id, data) in &fetched {
+                let expect = Bytes::virt(cfg.field_size, field_seed(id));
+                assert!(
+                    data.content_eq(&expect),
+                    "consistency check failed for {id}"
+                );
             }
         }
     }

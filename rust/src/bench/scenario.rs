@@ -6,12 +6,14 @@ use std::rc::Rc;
 
 use crate::ceph::{Ceph, CephConfig, CephPool, Redundancy};
 use crate::daos::{Daos, DaosConfig};
+use crate::fdb::{BackendConfig, Fdb, FdbBuilder};
 use crate::hw::cluster::Cluster;
 use crate::hw::node::Node;
 use crate::hw::profiles::{build_cluster, Testbed};
 use crate::lustre::{Lustre, LustreConfig};
 use crate::sim::exec::Sim;
 use crate::sim::time::SimTime;
+use crate::sim::trace::Trace;
 
 /// Which storage system a scenario runs against.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -113,6 +115,46 @@ pub fn deploy(
 impl Deployment {
     pub fn client_nodes(&self) -> Vec<Rc<Node>> {
         self.cluster.client_nodes().cloned().collect()
+    }
+
+    /// The default [`BackendConfig`] for this deployment's system —
+    /// the single place mapping a deployed system to FDB backends.
+    pub fn backend_config(&self) -> BackendConfig {
+        match &self.system {
+            SystemUnderTest::Lustre(fs) => BackendConfig::Posix {
+                fs: fs.clone(),
+                root: "/fdb".to_string(),
+            },
+            SystemUnderTest::Daos(d) => BackendConfig::Daos {
+                daos: d.clone(),
+                pool: "fdb".to_string(),
+                hash_oids: false,
+            },
+            SystemUnderTest::Ceph(c, pool) => BackendConfig::Rados {
+                ceph: c.clone(),
+                pool: pool.clone(),
+                store: crate::fdb::rados::store::RadosStoreConfig::default(),
+            },
+        }
+    }
+
+    /// One FDB instance (per simulated process) on `node`.
+    pub fn fdb(&self, node: &Rc<Node>) -> Fdb {
+        FdbBuilder::new(&self.sim)
+            .node(node)
+            .backend(self.backend_config())
+            .build()
+            .expect("deployment backend config is valid")
+    }
+
+    /// Like [`Deployment::fdb`] with a shared trace collector attached.
+    pub fn fdb_traced(&self, node: &Rc<Node>, trace: &Trace) -> Fdb {
+        FdbBuilder::new(&self.sim)
+            .node(node)
+            .trace(trace)
+            .backend(self.backend_config())
+            .build()
+            .expect("deployment backend config is valid")
     }
 }
 

@@ -215,17 +215,8 @@ pub fn cmd_admin(args: &Args) -> Result<()> {
     let kind = parse_system(args.get_or("system", "daos"))?;
     let dep = deploy(testbed, kind, 2, 2, RedundancyOpt::None);
     let node = dep.client_nodes()[0].clone();
-    let mut fdb = match &dep.system {
-        crate::bench::scenario::SystemUnderTest::Lustre(fs) => {
-            crate::fdb::setup::posix_fdb(&dep.sim, fs, &node, "/fdb")
-        }
-        crate::bench::scenario::SystemUnderTest::Daos(d) => {
-            crate::fdb::setup::daos_fdb(&dep.sim, d, &node, "fdb")
-        }
-        crate::bench::scenario::SystemUnderTest::Ceph(c, pool) => {
-            crate::fdb::setup::rados_fdb(&dep.sim, c, pool, &node)
-        }
-    };
+    // one declarative construction path for every backend
+    let mut fdb = dep.fdb(&node);
     let nfields = args.usize("nfields", 32);
     dep.sim.spawn(async move {
         use crate::fdb::schema::example_identifier;

@@ -1,12 +1,12 @@
 //! FDB administrative operations (thesis §2.7: "management command-line
-//! tools"): dataset inventory, statistics, and wipe. Wipe semantics per
-//! backend follow the thesis' maintenance discussion — a DAOS dataset is
-//! one `cont_destroy`; RADOS deletes the namespace's objects; POSIX
-//! unlinks the dataset directory tree.
+//! tools"): dataset inventory and statistics. The backend-specific wipe
+//! semantics live behind the [`crate::fdb::backend::Store`] /
+//! [`crate::fdb::backend::Catalogue`] traits (`wipe_dataset` /
+//! `deregister_dataset`), dispatched by [`Fdb::wipe`].
 
 use crate::fdb::key::Key;
 use crate::fdb::request::Request;
-use crate::fdb::{CatalogueBackend, Fdb, StoreBackend};
+use crate::fdb::Fdb;
 
 /// Summary statistics for one dataset.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -34,49 +34,18 @@ impl Fdb {
             collocations: collocs.len(),
         }
     }
-
-    /// Remove a dataset wholesale. Returns whether anything was removed.
-    ///
-    /// * DAOS: one `daos_cont_destroy` (the thesis' argument for the
-    ///   container-per-dataset design) + root-KV deregistration.
-    /// * Ceph/RADOS: delete every object in the dataset namespace +
-    ///   deregister from the root omap.
-    /// * POSIX: unlink all files in the dataset directory.
-    pub async fn wipe(&mut self, ds: &Key) -> bool {
-        match (&mut self.store, &mut self.catalogue) {
-            (StoreBackend::Daos(store), CatalogueBackend::Daos(cat)) => {
-                let removed = store.wipe_dataset(ds).await;
-                cat.deregister_dataset(ds).await;
-                removed
-            }
-            (StoreBackend::Rados(store), CatalogueBackend::Rados(cat)) => {
-                let n = store.wipe_dataset(ds).await;
-                cat.deregister_dataset(ds).await;
-                n > 0
-            }
-            (StoreBackend::Posix(store), CatalogueBackend::Posix(_)) => {
-                store.wipe_dataset(ds).await
-            }
-            _ => false,
-        }
-    }
 }
 
 #[cfg(test)]
 mod tests {
-    use crate::bench::scenario::{deploy, RedundancyOpt, SystemKind, SystemUnderTest};
+    use crate::bench::scenario::{deploy, RedundancyOpt, SystemKind};
     use crate::fdb::schema::example_identifier;
-    use crate::fdb::setup;
     use crate::hw::profiles::Testbed;
 
     fn backends(kind: SystemKind) -> (crate::bench::scenario::Deployment, crate::fdb::Fdb) {
         let dep = deploy(Testbed::Gcp, kind, 2, 2, RedundancyOpt::None);
         let node = dep.client_nodes()[0].clone();
-        let fdb = match &dep.system {
-            SystemUnderTest::Lustre(fs) => setup::posix_fdb(&dep.sim, fs, &node, "/fdb"),
-            SystemUnderTest::Daos(d) => setup::daos_fdb(&dep.sim, d, &node, "fdb"),
-            SystemUnderTest::Ceph(c, pool) => setup::rados_fdb(&dep.sim, c, pool, &node),
-        };
+        let fdb = dep.fdb(&node);
         (dep, fdb)
     }
 

@@ -1,0 +1,236 @@
+//! Declarative FDB construction: a [`BackendConfig`] names the backend
+//! pair and its knobs; [`FdbBuilder`] validates it and wires a matching
+//! Store/Catalogue pair. Replaces the former ad-hoc
+//! `setup::{posix,daos,rados,s3}_fdb` constructors so the coordinator,
+//! benches, workflow driver, examples, and tests all construct FDBs the
+//! same way.
+
+use std::rc::Rc;
+
+use super::backend::{Catalogue, NullCatalogue, NullStore, Store};
+use super::daos::catalogue::DaosCatalogue;
+use super::daos::store::DaosStore;
+use super::fdb::Fdb;
+use super::posix::catalogue::PosixCatalogue;
+use super::posix::store::PosixStore;
+use super::rados::catalogue::RadosCatalogue;
+use super::rados::store::{RadosStore, RadosStoreConfig};
+use super::s3::store::S3Store;
+use super::schema::Schema;
+use super::FdbError;
+use crate::ceph::{Ceph, CephPool, Redundancy};
+use crate::daos::Daos;
+use crate::hw::node::Node;
+use crate::lustre::Lustre;
+use crate::s3::MemS3;
+use crate::sim::exec::Sim;
+use crate::sim::trace::Trace;
+
+/// Which backend pair an FDB instance runs over, plus its knobs.
+pub enum BackendConfig {
+    /// POSIX Store + Catalogue on a Lustre mount (thesis §2.7.2).
+    Posix { fs: Rc<Lustre>, root: String },
+    /// DAOS Store + Catalogue (thesis §3.1). `hash_oids` enables the
+    /// identifier-hash OID mode (§3.1.2 future-work optimisation):
+    /// retrieve() bypasses the Catalogue entirely.
+    Daos {
+        daos: Rc<Daos>,
+        pool: String,
+        hash_oids: bool,
+    },
+    /// Ceph/RADOS Store + Catalogue (thesis §3.2) with the Fig 3.5
+    /// store-configuration sweep knobs.
+    Rados {
+        ceph: Rc<Ceph>,
+        pool: Rc<CephPool>,
+        store: RadosStoreConfig,
+    },
+    /// S3 Store + process-local Null catalogue (thesis §3.3 discarded an
+    /// S3 Catalogue for lack of atomic append). `multipart` accumulates
+    /// fields per (dataset, collocation) into one multipart object.
+    S3 {
+        s3: Rc<MemS3>,
+        client_tag: String,
+        multipart: bool,
+    },
+    /// Zero-cost sink + in-memory catalogue — client-overhead
+    /// experiments (Fig 4.30) and API tests.
+    Null,
+}
+
+impl BackendConfig {
+    /// Short tag for diagnostics.
+    pub fn label(&self) -> &'static str {
+        match self {
+            BackendConfig::Posix { .. } => "posix",
+            BackendConfig::Daos { .. } => "daos",
+            BackendConfig::Rados { .. } => "rados",
+            BackendConfig::S3 { .. } => "s3",
+            BackendConfig::Null => "null",
+        }
+    }
+
+    /// The schema variant a backend pair defaults to.
+    fn default_schema(&self) -> Schema {
+        match self {
+            BackendConfig::Posix { .. } => Schema::default_posix(),
+            _ => Schema::daos_variant(),
+        }
+    }
+
+    fn validate(&self, node: Option<&Rc<Node>>) -> Result<(), FdbError> {
+        let invalid = |msg: &str| Err(FdbError::InvalidConfig(msg.to_string()));
+        match self {
+            BackendConfig::Posix { root, .. } => {
+                if root.is_empty() || !root.starts_with('/') {
+                    return invalid("posix root must be an absolute path");
+                }
+                if node.is_none() {
+                    return invalid("posix backend needs a client node");
+                }
+            }
+            BackendConfig::Daos { pool, .. } => {
+                if pool.is_empty() {
+                    return invalid("daos pool label must be non-empty");
+                }
+                if node.is_none() {
+                    return invalid("daos backend needs a client node");
+                }
+            }
+            BackendConfig::Rados { store, .. } => {
+                if store.pg_per_pool == 0 {
+                    return invalid("rados pg_per_pool must be > 0");
+                }
+                if node.is_none() {
+                    return invalid("rados backend needs a client node");
+                }
+            }
+            BackendConfig::S3 { client_tag, .. } => {
+                if client_tag.is_empty() {
+                    return invalid("s3 client tag must be non-empty");
+                }
+            }
+            BackendConfig::Null => {}
+        }
+        Ok(())
+    }
+}
+
+/// Builds one [`Fdb`] per simulated process from a [`BackendConfig`].
+pub struct FdbBuilder {
+    sim: Sim,
+    node: Option<Rc<Node>>,
+    trace: Option<Trace>,
+    schema: Option<Schema>,
+    config: Option<BackendConfig>,
+}
+
+impl FdbBuilder {
+    pub fn new(sim: &Sim) -> FdbBuilder {
+        FdbBuilder {
+            sim: sim.clone(),
+            node: None,
+            trace: None,
+            schema: None,
+            config: None,
+        }
+    }
+
+    /// The client node this FDB instance's backends run on (required
+    /// for all backends except S3/Null).
+    pub fn node(mut self, node: &Rc<Node>) -> FdbBuilder {
+        self.node = Some(node.clone());
+        self
+    }
+
+    /// Attach a shared trace collector (benchmark profiling).
+    pub fn trace(mut self, trace: &Trace) -> FdbBuilder {
+        self.trace = Some(trace.clone());
+        self
+    }
+
+    /// Override the backend's default schema variant.
+    pub fn schema(mut self, schema: Schema) -> FdbBuilder {
+        self.schema = Some(schema);
+        self
+    }
+
+    pub fn backend(mut self, config: BackendConfig) -> FdbBuilder {
+        self.config = Some(config);
+        self
+    }
+
+    /// Validate the config and wire the matching Store/Catalogue pair.
+    pub fn build(self) -> Result<Fdb, FdbError> {
+        let config = self
+            .config
+            .ok_or_else(|| FdbError::InvalidConfig("no backend configured".to_string()))?;
+        config.validate(self.node.as_ref())?;
+        let schema = self
+            .schema
+            .unwrap_or_else(|| config.default_schema());
+        let (store, catalogue): (Box<dyn Store>, Box<dyn Catalogue>) = match config {
+            BackendConfig::Posix { fs, root } => {
+                let node = self.node.as_ref().unwrap();
+                let store = PosixStore::new(fs.client(node), &root);
+                let catalogue =
+                    PosixCatalogue::new(fs.client(node), &root, schema.clone());
+                (Box::new(store), Box::new(catalogue))
+            }
+            BackendConfig::Daos {
+                daos,
+                pool,
+                hash_oids,
+            } => {
+                let node = self.node.as_ref().unwrap();
+                let mut store = DaosStore::new(daos.client(node), &pool);
+                store.hash_oids = hash_oids;
+                // root container label fixed by the administrator
+                // (thesis §3.1.2)
+                let catalogue = DaosCatalogue::new(
+                    daos.client(node),
+                    &pool,
+                    "fdb_root",
+                    schema.clone(),
+                );
+                (Box::new(store), Box::new(catalogue))
+            }
+            BackendConfig::Rados {
+                ceph,
+                pool,
+                store: store_cfg,
+            } => {
+                let node = self.node.as_ref().unwrap();
+                let store = RadosStore::new(&ceph, ceph.client(node), &pool)
+                    .with_config(store_cfg);
+                // Omaps cannot live in erasure-coded pools (librados
+                // restriction, thesis §2.4) — for an EC data pool the
+                // Catalogue uses the replicated metadata pool, the
+                // standard Ceph deployment pattern.
+                let meta_pool = if matches!(pool.redundancy, Redundancy::Erasure(..)) {
+                    ceph.meta_pool()
+                } else {
+                    pool.clone()
+                };
+                let catalogue =
+                    RadosCatalogue::new(ceph.client(node), &meta_pool, schema.clone());
+                (Box::new(store), Box::new(catalogue))
+            }
+            BackendConfig::S3 {
+                s3,
+                client_tag,
+                multipart,
+            } => {
+                let mut store = S3Store::new(&s3, &client_tag);
+                store.multipart = multipart;
+                (Box::new(store), Box::new(NullCatalogue::new()))
+            }
+            BackendConfig::Null => (Box::new(NullStore), Box::new(NullCatalogue::new())),
+        };
+        let mut fdb = Fdb::new(&self.sim, schema, store, catalogue);
+        if let Some(trace) = self.trace {
+            fdb = fdb.with_trace(trace);
+        }
+        Ok(fdb)
+    }
+}

@@ -309,3 +309,58 @@ impl DaosCatalogue {
         out
     }
 }
+
+impl crate::fdb::backend::Catalogue for DaosCatalogue {
+    fn name(&self) -> &'static str {
+        "daos"
+    }
+
+    fn archive<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        colloc: &'a Key,
+        elem: &'a Key,
+        _id: &'a Key,
+        loc: &'a FieldLocation,
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, ()> {
+        Box::pin(DaosCatalogue::archive(self, ds, colloc, elem, loc))
+    }
+
+    fn retrieve<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        colloc: &'a Key,
+        elem: &'a Key,
+        _id: &'a Key,
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, Option<FieldLocation>> {
+        Box::pin(DaosCatalogue::retrieve(self, ds, colloc, elem))
+    }
+
+    fn axis<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        colloc: &'a Key,
+        dim: &'a str,
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, Vec<String>> {
+        Box::pin(DaosCatalogue::axis(self, ds, colloc, dim))
+    }
+
+    fn list<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        request: &'a Request,
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, Vec<(Key, FieldLocation)>> {
+        Box::pin(DaosCatalogue::list(self, ds, request))
+    }
+
+    fn invalidate_preload(&mut self, ds: &Key) {
+        DaosCatalogue::invalidate_preload(self, ds);
+    }
+
+    fn deregister_dataset<'a>(
+        &'a mut self,
+        ds: &'a Key,
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, ()> {
+        Box::pin(DaosCatalogue::deregister_dataset(self, ds))
+    }
+}

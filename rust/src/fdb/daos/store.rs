@@ -164,3 +164,71 @@ impl DaosStore {
         out
     }
 }
+
+impl crate::fdb::backend::Store for DaosStore {
+    fn name(&self) -> &'static str {
+        "daos"
+    }
+
+    fn archive<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        colloc: &'a Key,
+        id: &'a Key,
+        data: Bytes,
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, FieldLocation> {
+        Box::pin(async move {
+            if self.hash_oids {
+                DaosStore::archive_hashed(self, ds, id, data).await
+            } else {
+                DaosStore::archive(self, ds, colloc, data).await
+            }
+        })
+    }
+
+    fn flush<'a>(&'a mut self) -> crate::fdb::backend::LocalBoxFuture<'a, ()> {
+        Box::pin(DaosStore::flush(self))
+    }
+
+    fn read<'a>(
+        &'a mut self,
+        handle: &'a crate::fdb::DataHandle,
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, Result<Bytes, crate::fdb::FdbError>> {
+        Box::pin(async move {
+            match handle {
+                crate::fdb::DataHandle::Daos { cont, parts, .. } => {
+                    Ok(self.read_parts(cont, parts).await)
+                }
+                other => Err(crate::fdb::FdbError::BackendMismatch {
+                    store: "daos",
+                    handle: other.backend_name(),
+                }),
+            }
+        })
+    }
+
+    fn direct_retrieve_enabled(&self) -> bool {
+        // hash-OID mode resolves fully-specified identifiers without the
+        // Catalogue (thesis §3.1.2)
+        self.hash_oids
+    }
+
+    fn retrieve_direct<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        id: &'a Key,
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, Option<FieldLocation>> {
+        Box::pin(DaosStore::retrieve_hashed(self, ds, id))
+    }
+
+    fn supports_wipe(&self) -> bool {
+        true
+    }
+
+    fn wipe_dataset<'a>(
+        &'a mut self,
+        ds: &'a Key,
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, bool> {
+        Box::pin(DaosStore::wipe_dataset(self, ds))
+    }
+}

@@ -78,6 +78,18 @@ impl DataHandle {
         }
     }
 
+    /// Which backend family this handle belongs to (for
+    /// [`crate::fdb::FdbError::BackendMismatch`] diagnostics).
+    pub fn backend_name(&self) -> &'static str {
+        match self {
+            DataHandle::Posix { .. } => "posix",
+            DataHandle::Daos { .. } => "daos",
+            DataHandle::Rados { .. } => "rados",
+            DataHandle::S3 { .. } => "s3",
+            DataHandle::Null { .. } => "null",
+        }
+    }
+
     /// Total bytes this handle will deliver.
     pub fn total_len(&self) -> u64 {
         match self {

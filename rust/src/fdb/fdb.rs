@@ -1,58 +1,47 @@
 //! The top-level FDB API (thesis §2.7): `archive() / flush() /
-//! retrieve() / list()` plus `axes()` and `close()`, dispatching to a
-//! Store and a Catalogue backend, with per-op-class trace accounting
-//! that feeds the profiling figures.
+//! retrieve() / list()` plus `axes()` and `close()`, and the batched
+//! `archive_many()` / `retrieve_many()` paths the DAOS follow-up papers
+//! identify as the key to scalable small-object I/O.
+//!
+//! All backend dispatch is virtual: one `Box<dyn Store>` and one
+//! `Box<dyn Catalogue>` (see [`crate::fdb::backend`]), with per-op-class
+//! trace and distributed-lock accounting factored into a single shared
+//! wrapper ([`Fdb::account`]). Construction goes through
+//! [`crate::fdb::builder::FdbBuilder`].
 
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
+use std::task::Waker;
+
+use crate::fdb::backend::{Catalogue, Store};
 use crate::fdb::datahandle::DataHandle;
 use crate::fdb::key::Key;
-use crate::fdb::location::FieldLocation;
 use crate::fdb::request::Request;
 use crate::fdb::schema::Schema;
 use crate::sim::exec::Sim;
+use crate::sim::futures::{boxed, join_all};
+use crate::sim::time::SimTime;
 use crate::sim::trace::{OpClass, Trace};
-
-use super::daos::catalogue::DaosCatalogue;
-use super::daos::store::DaosStore;
-use super::posix::catalogue::PosixCatalogue;
-use super::posix::store::PosixStore;
-use super::rados::catalogue::RadosCatalogue;
-use super::rados::store::RadosStore;
-use super::s3::store::S3Store;
-
-/// Store backend dispatch.
-pub enum StoreBackend {
-    Posix(PosixStore),
-    Daos(DaosStore),
-    Rados(RadosStore),
-    S3(S3Store),
-    /// data sink with zero cost — client-overhead experiments (Fig 4.30)
-    Null,
-}
-
-/// Catalogue backend dispatch.
-pub enum CatalogueBackend {
-    Posix(PosixCatalogue),
-    Daos(DaosCatalogue),
-    Rados(RadosCatalogue),
-    /// in-memory catalogue (no persistence) — used with Null stores
-    Null(std::collections::HashMap<String, FieldLocation>),
-}
+use crate::util::content::Bytes;
 
 /// One FDB instance per simulated process (like linking libfdb).
 pub struct Fdb {
     pub schema: Schema,
-    pub store: StoreBackend,
-    pub catalogue: CatalogueBackend,
+    store: Box<dyn Store>,
+    catalogue: Box<dyn Catalogue>,
     pub trace: Trace,
     sim: Sim,
 }
 
 impl Fdb {
+    /// Wire a Store/Catalogue pair directly. Prefer
+    /// [`crate::fdb::builder::FdbBuilder`], which validates configs and
+    /// picks matching pairs.
     pub fn new(
         sim: &Sim,
         schema: Schema,
-        store: StoreBackend,
-        catalogue: CatalogueBackend,
+        store: Box<dyn Store>,
+        catalogue: Box<dyn Catalogue>,
     ) -> Fdb {
         Fdb {
             schema,
@@ -69,124 +58,190 @@ impl Fdb {
         self
     }
 
+    /// Backend tags of the wired (store, catalogue) pair.
+    pub fn backend_names(&self) -> (&'static str, &'static str) {
+        (self.store.name(), self.catalogue.name())
+    }
+
+    /// The shared trace/lock wrapper: record the span since `t0` under
+    /// `class`, with any distributed-lock time drained from both
+    /// backends split out into [`OpClass::Lock`].
+    fn account(&mut self, class: OpClass, t0: SimTime) {
+        let lock = self.store.take_lock_time() + self.catalogue.take_lock_time();
+        self.trace.record(class, self.sim.now() - t0 - lock);
+        if lock > SimTime::ZERO {
+            self.trace.record(OpClass::Lock, lock);
+        }
+    }
+
     /// FDB archive(): Store archive then Catalogue archive (§2.7.1).
     pub async fn archive(
         &mut self,
         id: &Key,
-        data: impl Into<crate::util::content::Bytes>,
+        data: impl Into<Bytes>,
     ) -> Result<(), super::FdbError> {
-        let data: crate::util::content::Bytes = data.into();
+        let data: Bytes = data.into();
         let (ds, colloc, elem) = self.schema.split(id)?;
         let t0 = self.sim.now();
-        let dlen = data.len();
-        let loc = match &mut self.store {
-            StoreBackend::Posix(s) => s.archive(&ds, &colloc, data).await,
-            StoreBackend::Daos(s) if s.hash_oids => s.archive_hashed(&ds, id, data).await,
-            StoreBackend::Daos(s) => s.archive(&ds, &colloc, data).await,
-            StoreBackend::Rados(s) => s.archive(&ds, &colloc, data).await,
-            StoreBackend::S3(s) => s.archive(&ds, &colloc, data).await,
-            StoreBackend::Null => FieldLocation::Null { length: dlen },
-        };
-        let lock1 = self.take_lock_time();
-        self.trace
-            .record(OpClass::DataWrite, self.sim.now() - t0 - lock1);
+        let loc = self.store.archive(&ds, &colloc, id, data).await;
+        self.account(OpClass::DataWrite, t0);
         let t1 = self.sim.now();
-        match &mut self.catalogue {
-            CatalogueBackend::Posix(c) => c.archive(&ds, &colloc, &elem, &loc).await,
-            CatalogueBackend::Daos(c) => c.archive(&ds, &colloc, &elem, &loc).await,
-            CatalogueBackend::Rados(c) => c.archive(&ds, &colloc, &elem, &loc).await,
-            CatalogueBackend::Null(map) => {
-                map.insert(id.canonical(), loc.clone());
-            }
+        self.catalogue.archive(&ds, &colloc, &elem, id, &loc).await;
+        self.account(OpClass::IndexWrite, t1);
+        Ok(())
+    }
+
+    /// Batched archive: all Store writes first, then all Catalogue
+    /// inserts — the small-object batching pattern (arXiv:2311.18714).
+    /// Identifiers are validated up front; nothing is written on error.
+    /// Equivalent to a loop of [`Fdb::archive`] followed by the same
+    /// `flush()` (visibility semantics per backend are unchanged).
+    pub async fn archive_many(
+        &mut self,
+        items: Vec<(Key, Bytes)>,
+    ) -> Result<(), super::FdbError> {
+        let mut split = Vec::with_capacity(items.len());
+        for (id, _) in &items {
+            split.push(self.schema.split(id)?);
         }
-        let lock2 = self.take_lock_time();
-        self.trace
-            .record(OpClass::IndexWrite, self.sim.now() - t1 - lock2);
-        if lock1 + lock2 > crate::sim::time::SimTime::ZERO {
-            self.trace.record(OpClass::Lock, lock1 + lock2);
+        let t0 = self.sim.now();
+        let mut indexed = Vec::with_capacity(items.len());
+        for ((id, data), (ds, colloc, elem)) in items.into_iter().zip(split) {
+            let loc = self.store.archive(&ds, &colloc, &id, data).await;
+            indexed.push((id, ds, colloc, elem, loc));
         }
+        self.account(OpClass::DataWrite, t0);
+        let t1 = self.sim.now();
+        for (id, ds, colloc, elem, loc) in &indexed {
+            self.catalogue.archive(ds, colloc, elem, id, loc).await;
+        }
+        self.account(OpClass::IndexWrite, t1);
         Ok(())
     }
 
     /// FDB flush(): Store flush then Catalogue flush (§2.7.1).
     pub async fn flush(&mut self) {
         let t0 = self.sim.now();
-        match &mut self.store {
-            StoreBackend::Posix(s) => s.flush().await,
-            StoreBackend::Daos(s) => s.flush().await,
-            StoreBackend::Rados(s) => s.flush().await,
-            StoreBackend::S3(s) => s.flush().await,
-            StoreBackend::Null => {}
-        }
-        match &mut self.catalogue {
-            CatalogueBackend::Posix(c) => c.flush().await,
-            CatalogueBackend::Daos(c) => c.flush().await,
-            CatalogueBackend::Rados(c) => c.flush().await,
-            CatalogueBackend::Null(_) => {}
-        }
-        let lock = self.take_lock_time();
-        self.trace
-            .record(OpClass::Flush, self.sim.now() - t0 - lock);
-        if lock > crate::sim::time::SimTime::ZERO {
-            self.trace.record(OpClass::Lock, lock);
-        }
+        self.store.flush().await;
+        self.catalogue.flush().await;
+        self.account(OpClass::Flush, t0);
     }
 
     /// Catalogue close() at end of producer lifetime (§2.7.2).
     pub async fn close(&mut self) {
         let t0 = self.sim.now();
-        match &mut self.catalogue {
-            CatalogueBackend::Posix(c) => c.close().await,
-            CatalogueBackend::Daos(c) => c.close().await,
-            CatalogueBackend::Rados(c) => c.close().await,
-            CatalogueBackend::Null(_) => {}
-        }
-        let lock = self.take_lock_time();
-        self.trace
-            .record(OpClass::Flush, self.sim.now() - t0 - lock);
-        if lock > crate::sim::time::SimTime::ZERO {
-            self.trace.record(OpClass::Lock, lock);
-        }
+        self.catalogue.close().await;
+        self.account(OpClass::Flush, t0);
     }
 
     /// FDB retrieve() for one fully-specified identifier.
     pub async fn retrieve(&mut self, id: &Key) -> Result<Option<DataHandle>, super::FdbError> {
         let (ds, colloc, elem) = self.schema.split(id)?;
         let t0 = self.sim.now();
-        // hash-OID fast path (thesis §3.1.2 optimisation): bypass the
-        // Catalogue entirely for fully-specified identifiers
-        if let StoreBackend::Daos(s) = &mut self.store {
-            if s.hash_oids {
-                let loc = s.retrieve_hashed(&ds, id).await;
-                self.trace
-                    .record(OpClass::IndexRead, self.sim.now() - t0);
-                return Ok(loc.map(|l| DataHandle::from_location(&l)));
-            }
-        }
-        let loc = match &mut self.catalogue {
-            CatalogueBackend::Posix(c) => c.retrieve(&ds, &colloc, &elem).await,
-            CatalogueBackend::Daos(c) => c.retrieve(&ds, &colloc, &elem).await,
-            CatalogueBackend::Rados(c) => c.retrieve(&ds, &colloc, &elem).await,
-            CatalogueBackend::Null(map) => map.get(&id.canonical()).cloned(),
+        // hash-OID fast path (thesis §3.1.2 optimisation): a Store that
+        // derives placement from identifiers bypasses the Catalogue
+        let loc = if self.store.direct_retrieve_enabled() {
+            self.store.retrieve_direct(&ds, id).await
+        } else {
+            self.catalogue.retrieve(&ds, &colloc, &elem, id).await
         };
-        let lock = self.take_lock_time();
-        self.trace
-            .record(OpClass::IndexRead, self.sim.now() - t0 - lock);
-        if lock > crate::sim::time::SimTime::ZERO {
-            self.trace.record(OpClass::Lock, lock);
-        }
+        self.account(OpClass::IndexRead, t0);
         // not finding a field is NOT an error (cache use-case, §2.7.1)
         Ok(loc.map(|l| DataHandle::from_location(&l)))
     }
 
-    /// FDB retrieve() for a (possibly multi-valued) request: expands via
-    /// axis(), retrieves every identifier, merges the handles.
-    pub async fn retrieve_request(
+    /// Batched retrieve+read: Catalogue lookups stream into Store reads
+    /// through an in-process pipe, so the lookup for `ids[i+1]` overlaps
+    /// the data read for `ids[i]` in virtual time. (The pipe is
+    /// unbounded: handles are tiny descriptors, so at most `ids.len()`
+    /// of them queue if lookups outpace reads.) Returns the found
+    /// `(identifier, bytes)` pairs in input order; absent fields are
+    /// skipped (cache semantics, like [`Fdb::retrieve`]).
+    pub async fn retrieve_many(
+        &mut self,
+        ids: &[Key],
+    ) -> Result<Vec<(Key, Bytes)>, super::FdbError> {
+        let mut split = Vec::with_capacity(ids.len());
+        for id in ids {
+            split.push(self.schema.split(id)?);
+        }
+        if self.store.direct_retrieve_enabled() {
+            // direct mode: the Store serves the lookups too, so lookup
+            // and read contend for the same client — run sequentially
+            let mut out = Vec::new();
+            for (id, (ds, _, _)) in ids.iter().zip(&split) {
+                let t0 = self.sim.now();
+                let loc = self.store.retrieve_direct(ds, id).await;
+                self.account(OpClass::IndexRead, t0);
+                if let Some(loc) = loc {
+                    let h = DataHandle::from_location(&loc);
+                    let t1 = self.sim.now();
+                    let bytes = self.store.read(&h).await;
+                    self.account(OpClass::DataRead, t1);
+                    out.push((id.clone(), bytes?));
+                }
+            }
+            return Ok(out);
+        }
+        let pipe: Pipe<(Key, DataHandle)> = Pipe::new();
+        let out: RefCell<Vec<(Key, Bytes)>> = RefCell::new(Vec::new());
+        let failed: Cell<Option<super::FdbError>> = Cell::new(None);
+        let lock_total: Cell<SimTime> = Cell::new(SimTime::ZERO);
+        let sim = self.sim.clone();
+        let trace = self.trace.clone();
+        // split borrows: the Catalogue drives lookups while the Store
+        // serves reads — the two halves of the pipeline. Lock time is
+        // drained per op (like `account`) so the IndexRead/DataRead
+        // spans exclude it and it is recorded once under Lock.
+        let store = &mut self.store;
+        let catalogue = &mut self.catalogue;
+        let lookups = async {
+            for (id, (ds, colloc, elem)) in ids.iter().zip(&split) {
+                let t0 = sim.now();
+                let loc = catalogue.retrieve(ds, colloc, elem, id).await;
+                let lock = catalogue.take_lock_time();
+                lock_total.set(lock_total.get() + lock);
+                trace.record(OpClass::IndexRead, sim.now() - t0 - lock);
+                if let Some(loc) = loc {
+                    pipe.push((id.clone(), DataHandle::from_location(&loc)));
+                }
+            }
+            pipe.close();
+        };
+        let reads = async {
+            while let Some((id, handle)) = pipe.pop().await {
+                let t0 = sim.now();
+                match store.read(&handle).await {
+                    Ok(bytes) => {
+                        let lock = store.take_lock_time();
+                        lock_total.set(lock_total.get() + lock);
+                        trace.record(OpClass::DataRead, sim.now() - t0 - lock);
+                        out.borrow_mut().push((id, bytes));
+                    }
+                    Err(e) => {
+                        failed.set(Some(e));
+                        break;
+                    }
+                }
+            }
+        };
+        join_all(vec![boxed(lookups), boxed(reads)]).await;
+        let lock = lock_total.get();
+        if lock > SimTime::ZERO {
+            self.trace.record(OpClass::Lock, lock);
+        }
+        if let Some(e) = failed.take() {
+            return Err(e);
+        }
+        Ok(out.into_inner())
+    }
+
+    /// Expand a request's wildcard dimensions from the axes.
+    async fn expand_request(
         &mut self,
         request: &Request,
-    ) -> Result<Vec<DataHandle>, super::FdbError> {
+    ) -> Result<Vec<Key>, super::FdbError> {
         let mut request = request.clone();
-        // expand wildcards from the axes
         let wildcards = request.wildcards();
         if !wildcards.is_empty() {
             // need dataset+colloc keys from the fixed part
@@ -202,8 +257,17 @@ impl Fdb {
                 request.bind(&dim, vals);
             }
         }
+        Ok(request.expand())
+    }
+
+    /// FDB retrieve() for a (possibly multi-valued) request: expands via
+    /// axis(), retrieves every identifier, merges the handles.
+    pub async fn retrieve_request(
+        &mut self,
+        request: &Request,
+    ) -> Result<Vec<DataHandle>, super::FdbError> {
         let mut handles = Vec::new();
-        for id in request.expand() {
+        for id in self.expand_request(request).await? {
             if let Some(h) = self.retrieve(&id).await? {
                 handles.push(h);
             }
@@ -211,99 +275,122 @@ impl Fdb {
         Ok(DataHandle::merge_all(handles))
     }
 
+    /// Streaming request retrieval: wildcard expansion, then the
+    /// pipelined [`Fdb::retrieve_many`] path (lookups overlap reads).
+    pub async fn retrieve_request_streaming(
+        &mut self,
+        request: &Request,
+    ) -> Result<Vec<(Key, Bytes)>, super::FdbError> {
+        let ids = self.expand_request(request).await?;
+        self.retrieve_many(&ids).await
+    }
+
     /// Catalogue axis() values for one element dimension.
     pub async fn axes(&mut self, ds: &Key, colloc: &Key, dim: &str) -> Vec<String> {
         let t0 = self.sim.now();
-        let out = match &mut self.catalogue {
-            CatalogueBackend::Posix(c) => c.axis(ds, colloc, dim).await,
-            CatalogueBackend::Daos(c) => c.axis(ds, colloc, dim).await,
-            CatalogueBackend::Rados(c) => c.axis(ds, colloc, dim).await,
-            CatalogueBackend::Null(_) => Vec::new(),
-        };
-        self.trace.record(OpClass::IndexRead, self.sim.now() - t0);
+        let out = self.catalogue.axis(ds, colloc, dim).await;
+        self.account(OpClass::IndexRead, t0);
         out
     }
 
     /// FDB list(): all indexed identifiers matching a partial request.
-    pub async fn list(&mut self, ds: &Key, request: &Request) -> Vec<(Key, FieldLocation)> {
+    pub async fn list(
+        &mut self,
+        ds: &Key,
+        request: &Request,
+    ) -> Vec<(Key, crate::fdb::location::FieldLocation)> {
         let t0 = self.sim.now();
-        let out = match &mut self.catalogue {
-            CatalogueBackend::Posix(c) => c.list(ds, request).await,
-            CatalogueBackend::Daos(c) => c.list(ds, request).await,
-            CatalogueBackend::Rados(c) => c.list(ds, request).await,
-            CatalogueBackend::Null(map) => map
-                .iter()
-                .filter_map(|(k, v)| {
-                    let key = Key::parse(k).ok()?;
-                    request.matches(&key).then(|| (key, v.clone()))
-                })
-                .collect(),
-        };
-        let lock = self.take_lock_time();
-        self.trace
-            .record(OpClass::IndexRead, self.sim.now() - t0 - lock);
-        if lock > crate::sim::time::SimTime::ZERO {
-            self.trace.record(OpClass::Lock, lock);
-        }
+        let out = self.catalogue.list(ds, request).await;
+        self.account(OpClass::IndexRead, t0);
         out
     }
 
     /// Drop reader-side caches so later flushes become visible.
     pub fn invalidate_preload(&mut self, ds: &Key) {
-        match &mut self.catalogue {
-            CatalogueBackend::Posix(c) => c.invalidate_preload(ds),
-            CatalogueBackend::Daos(c) => c.invalidate_preload(ds),
-            CatalogueBackend::Rados(c) => c.invalidate_preload(ds),
-            CatalogueBackend::Null(_) => {}
-        }
+        self.catalogue.invalidate_preload(ds);
     }
 
-    /// Read a handle's bytes through the Store.
-    pub async fn read(&mut self, handle: &DataHandle) -> crate::util::content::Bytes {
+    /// Read a handle's bytes through the Store. A handle minted by a
+    /// different backend yields [`super::FdbError::BackendMismatch`].
+    pub async fn read(&mut self, handle: &DataHandle) -> Result<Bytes, super::FdbError> {
         let t0 = self.sim.now();
-        let out = match (&mut self.store, handle) {
-            (StoreBackend::Posix(s), DataHandle::Posix { path, ranges }) => {
-                s.read_ranges(path, ranges).await
-            }
-            (StoreBackend::Daos(s), DataHandle::Daos { cont, parts, .. }) => {
-                s.read_parts(cont, parts).await
-            }
-            (StoreBackend::Rados(s), DataHandle::Rados { pool, ns, parts }) => {
-                s.read_parts(pool, ns, parts).await
-            }
-            (StoreBackend::S3(s), DataHandle::S3 { bucket, parts }) => {
-                s.read_parts(bucket, parts).await
-            }
-            (StoreBackend::Null, DataHandle::Null { length }) => {
-                crate::util::content::Bytes::virt(*length, 0)
-            }
-            _ => panic!("DataHandle backend mismatch"),
-        };
-        let lock = self.take_lock_time();
-        self.trace
-            .record(OpClass::DataRead, self.sim.now() - t0 - lock);
-        if lock > crate::sim::time::SimTime::ZERO {
-            self.trace.record(OpClass::Lock, lock);
-        }
+        let out = self.store.read(handle).await;
+        self.account(OpClass::DataRead, t0);
         out
     }
 
-    fn take_lock_time(&self) -> crate::sim::time::SimTime {
-        match &self.store {
-            StoreBackend::Posix(s) => {
-                let mut t = s.take_lock_time();
-                if let CatalogueBackend::Posix(c) = &self.catalogue {
-                    t += c.client.take_lock_time();
-                }
-                t
-            }
-            _ => {
-                if let CatalogueBackend::Posix(c) = &self.catalogue {
-                    c.client.take_lock_time()
-                } else {
-                    crate::sim::time::SimTime::ZERO
-                }
-            }
+    /// Remove a dataset wholesale (fdb-wipe). Returns whether anything
+    /// was removed. One Store wipe + one Catalogue deregistration —
+    /// DAOS: a single `daos_cont_destroy` (the container-per-dataset
+    /// argument); RADOS: per-object deletes in the dataset namespace;
+    /// POSIX: unlink of the dataset directory's files. A strict no-op
+    /// on Stores without wipe support (S3, Null): deregistering the
+    /// catalogue while the data survives would orphan live objects.
+    pub async fn wipe(&mut self, ds: &Key) -> bool {
+        if !self.store.supports_wipe() {
+            return false;
         }
+        let removed = self.store.wipe_dataset(ds).await;
+        self.catalogue.deregister_dataset(ds).await;
+        removed
+    }
+}
+
+/// A single-producer single-consumer in-process queue connecting the
+/// two halves of the retrieve pipeline. Waker-based so the consumer
+/// suspends cleanly while the producer awaits backend I/O.
+struct Pipe<T> {
+    queue: RefCell<VecDeque<T>>,
+    closed: Cell<bool>,
+    waker: RefCell<Option<Waker>>,
+}
+
+impl<T> Pipe<T> {
+    fn new() -> Pipe<T> {
+        Pipe {
+            queue: RefCell::new(VecDeque::new()),
+            closed: Cell::new(false),
+            waker: RefCell::new(None),
+        }
+    }
+
+    fn push(&self, item: T) {
+        self.queue.borrow_mut().push_back(item);
+        if let Some(w) = self.waker.borrow_mut().take() {
+            w.wake();
+        }
+    }
+
+    fn close(&self) {
+        self.closed.set(true);
+        if let Some(w) = self.waker.borrow_mut().take() {
+            w.wake();
+        }
+    }
+
+    fn pop(&self) -> Pop<'_, T> {
+        Pop { pipe: self }
+    }
+}
+
+struct Pop<'a, T> {
+    pipe: &'a Pipe<T>,
+}
+
+impl<'a, T> std::future::Future for Pop<'a, T> {
+    type Output = Option<T>;
+
+    fn poll(
+        self: std::pin::Pin<&mut Self>,
+        cx: &mut std::task::Context<'_>,
+    ) -> std::task::Poll<Option<T>> {
+        if let Some(item) = self.pipe.queue.borrow_mut().pop_front() {
+            return std::task::Poll::Ready(Some(item));
+        }
+        if self.pipe.closed.get() {
+            return std::task::Poll::Ready(None);
+        }
+        *self.pipe.waker.borrow_mut() = Some(cx.waker().clone());
+        std::task::Poll::Pending
     }
 }

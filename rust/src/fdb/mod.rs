@@ -1,8 +1,27 @@
 //! The FDB: a domain-specific object store for meteorological data
-//! (thesis Chapters 2–3), with POSIX/Lustre, DAOS, Ceph-RADOS, and S3
-//! backends behind abstract Store/Catalogue interfaces.
+//! (thesis Chapters 2–3).
+//!
+//! The architecture is trait-based: [`backend::Store`] (field data) and
+//! [`backend::Catalogue`] (the index network) are object-safe traits
+//! implemented by each backend pair — POSIX/Lustre, DAOS, Ceph/RADOS,
+//! S3 (+ the in-memory Null pair). [`Fdb`] holds one boxed trait object
+//! of each and dispatches every operation virtually, with trace and
+//! distributed-lock accounting in one shared wrapper; a new backend
+//! (tiered cache, sharded catalogue, replicated store) is a single new
+//! trait impl.
+//!
+//! Construction is declarative: a [`BackendConfig`] names the pair and
+//! its knobs (`Daos { pool, hash_oids }`, `Rados { store, .. }`, ...)
+//! and [`FdbBuilder`] validates it and wires the matching pair. On top
+//! of the one-field calls, [`Fdb::archive_many`] and
+//! [`Fdb::retrieve_many`] provide the batched paths — catalogue lookups
+//! pipelined with store reads — that the DAOS interface papers
+//! (arXiv:2311.18714, arXiv:2409.18682) identify as the key to scalable
+//! small-object I/O.
 
 pub mod admin;
+pub mod backend;
+pub mod builder;
 pub mod datahandle;
 pub mod fdb;
 pub mod key;
@@ -32,8 +51,10 @@ pub mod s3 {
     pub mod store;
 }
 
+pub use backend::{Catalogue, NullCatalogue, NullStore, Store};
+pub use builder::{BackendConfig, FdbBuilder};
 pub use datahandle::DataHandle;
-pub use fdb::{CatalogueBackend, Fdb, StoreBackend};
+pub use fdb::Fdb;
 pub use key::Key;
 pub use location::FieldLocation;
 pub use request::Request;
@@ -44,6 +65,13 @@ pub use schema::Schema;
 pub enum FdbError {
     Schema(schema::SchemaError),
     UnderspecifiedRequest,
+    /// A [`DataHandle`] minted by one Store was read through another.
+    BackendMismatch {
+        store: &'static str,
+        handle: &'static str,
+    },
+    /// A [`BackendConfig`] failed [`FdbBuilder`] validation.
+    InvalidConfig(String),
 }
 
 impl From<schema::SchemaError> for FdbError {
@@ -59,98 +87,15 @@ impl std::fmt::Display for FdbError {
             FdbError::UnderspecifiedRequest => {
                 write!(f, "request lacks dataset/collocation dims for axis expansion")
             }
+            FdbError::BackendMismatch { store, handle } => write!(
+                f,
+                "DataHandle backend mismatch: `{handle}` handle read through the `{store}` store"
+            ),
+            FdbError::InvalidConfig(msg) => write!(f, "invalid backend config: {msg}"),
         }
     }
 }
 impl std::error::Error for FdbError {}
-
-/// Convenience constructors wiring an [`Fdb`] to each backend pair.
-pub mod setup {
-    use std::rc::Rc;
-
-    use super::fdb::{CatalogueBackend, Fdb, StoreBackend};
-    use super::schema::Schema;
-    use crate::ceph::{Ceph, CephPool};
-    use crate::daos::Daos;
-    use crate::hw::node::Node;
-    use crate::lustre::Lustre;
-    use crate::s3::MemS3;
-    use crate::sim::exec::Sim;
-
-    /// FDB over the POSIX backends on a Lustre mount.
-    pub fn posix_fdb(sim: &Sim, fs: &Rc<Lustre>, node: &Rc<Node>, root: &str) -> Fdb {
-        let schema = Schema::default_posix();
-        let store = super::posix::store::PosixStore::new(fs.client(node), root);
-        let catalogue =
-            super::posix::catalogue::PosixCatalogue::new(fs.client(node), root, schema.clone());
-        Fdb::new(
-            sim,
-            schema,
-            StoreBackend::Posix(store),
-            CatalogueBackend::Posix(catalogue),
-        )
-    }
-
-    /// FDB over the DAOS backends (pool must exist; root container label
-    /// fixed by the administrator — thesis §3.1.2).
-    pub fn daos_fdb(sim: &Sim, daos: &Rc<Daos>, node: &Rc<Node>, pool: &str) -> Fdb {
-        let schema = Schema::daos_variant();
-        let store = super::daos::store::DaosStore::new(daos.client(node), pool);
-        let catalogue = super::daos::catalogue::DaosCatalogue::new(
-            daos.client(node),
-            pool,
-            "fdb_root",
-            schema.clone(),
-        );
-        Fdb::new(
-            sim,
-            schema,
-            StoreBackend::Daos(store),
-            CatalogueBackend::Daos(catalogue),
-        )
-    }
-
-    /// FDB over the Ceph/RADOS backends (default Fig 3.5 configuration:
-    /// namespace per dataset, object per archive, blocking I/O).
-    ///
-    /// Omaps cannot live in erasure-coded pools (librados restriction,
-    /// thesis §2.4) — when `pool` is EC, the Catalogue automatically uses
-    /// a separate replicated metadata pool, the standard Ceph deployment
-    /// pattern (data EC + metadata replicated).
-    pub fn rados_fdb(sim: &Sim, ceph: &Rc<Ceph>, pool: &Rc<CephPool>, node: &Rc<Node>) -> Fdb {
-        let schema = Schema::daos_variant();
-        let store = super::rados::store::RadosStore::new(ceph, ceph.client(node), pool);
-        let meta_pool = if matches!(pool.redundancy, crate::ceph::Redundancy::Erasure(..)) {
-            ceph.meta_pool()
-        } else {
-            pool.clone()
-        };
-        let catalogue = super::rados::catalogue::RadosCatalogue::new(
-            ceph.client(node),
-            &meta_pool,
-            schema.clone(),
-        );
-        Fdb::new(
-            sim,
-            schema,
-            StoreBackend::Rados(store),
-            CatalogueBackend::Rados(catalogue),
-        )
-    }
-
-    /// FDB with the S3 Store (paired with a process-local Null catalogue;
-    /// the thesis discarded an S3 Catalogue for lack of atomic append).
-    pub fn s3_fdb(sim: &Sim, s3: &Rc<MemS3>, client_tag: &str) -> Fdb {
-        let schema = Schema::daos_variant();
-        let store = super::s3::store::S3Store::new(s3, client_tag);
-        Fdb::new(
-            sim,
-            schema,
-            StoreBackend::S3(store),
-            CatalogueBackend::Null(std::collections::HashMap::new()),
-        )
-    }
-}
 
 #[cfg(test)]
 mod tests {
@@ -195,7 +140,7 @@ mod tests {
                 .await
                 .unwrap()
                 .unwrap_or_else(|| panic!("missing {id}"));
-            let bytes = r.read(&h).await.to_vec();
+            let bytes = r.read(&h).await.unwrap().to_vec();
             assert_eq!(bytes, field_bytes(id), "bytes for {id}");
         }
         // absent field: no error, no handle
@@ -209,6 +154,21 @@ mod tests {
         assert_eq!(listed.len(), ids.len());
     }
 
+    fn posix_config(fs: &Rc<Lustre>) -> BackendConfig {
+        BackendConfig::Posix {
+            fs: fs.clone(),
+            root: "/fdb".to_string(),
+        }
+    }
+
+    fn daos_config(daos: &Rc<Daos>) -> BackendConfig {
+        BackendConfig::Daos {
+            daos: daos.clone(),
+            pool: "fdb".to_string(),
+            hash_oids: false,
+        }
+    }
+
     #[test]
     fn posix_end_to_end() {
         let sim = Sim::new();
@@ -216,8 +176,16 @@ mod tests {
         let fs = Lustre::deploy(&sim, &cluster, LustreConfig::default());
         let wnode = cluster.client_nodes().next().unwrap().clone();
         let rnode = cluster.client_nodes().nth(1).unwrap().clone();
-        let w = setup::posix_fdb(&sim, &fs, &wnode, "/fdb");
-        let r = setup::posix_fdb(&sim, &fs, &rnode, "/fdb");
+        let w = FdbBuilder::new(&sim)
+            .node(&wnode)
+            .backend(posix_config(&fs))
+            .build()
+            .unwrap();
+        let r = FdbBuilder::new(&sim)
+            .node(&rnode)
+            .backend(posix_config(&fs))
+            .build()
+            .unwrap();
         sim.spawn(async move { writer_reader_roundtrip(w, r).await });
         sim.run();
     }
@@ -230,8 +198,16 @@ mod tests {
         daos.create_pool("fdb");
         let wnode = cluster.client_nodes().next().unwrap().clone();
         let rnode = cluster.client_nodes().nth(1).unwrap().clone();
-        let w = setup::daos_fdb(&sim, &daos, &wnode, "fdb");
-        let r = setup::daos_fdb(&sim, &daos, &rnode, "fdb");
+        let w = FdbBuilder::new(&sim)
+            .node(&wnode)
+            .backend(daos_config(&daos))
+            .build()
+            .unwrap();
+        let r = FdbBuilder::new(&sim)
+            .node(&rnode)
+            .backend(daos_config(&daos))
+            .build()
+            .unwrap();
         sim.spawn(async move { writer_reader_roundtrip(w, r).await });
         sim.run();
     }
@@ -244,8 +220,19 @@ mod tests {
         let pool = ceph.create_pool("fdb", 512, Redundancy::None);
         let wnode = cluster.client_nodes().next().unwrap().clone();
         let rnode = cluster.client_nodes().nth(1).unwrap().clone();
-        let w = setup::rados_fdb(&sim, &ceph, &pool, &wnode);
-        let r = setup::rados_fdb(&sim, &ceph, &pool, &rnode);
+        let mk = |node: &Rc<crate::hw::node::Node>| {
+            FdbBuilder::new(&sim)
+                .node(node)
+                .backend(BackendConfig::Rados {
+                    ceph: ceph.clone(),
+                    pool: pool.clone(),
+                    store: crate::fdb::rados::store::RadosStoreConfig::default(),
+                })
+                .build()
+                .unwrap()
+        };
+        let w = mk(&wnode);
+        let r = mk(&rnode);
         sim.spawn(async move { writer_reader_roundtrip(w, r).await });
         sim.run();
     }
@@ -260,7 +247,14 @@ mod tests {
         let server = cluster.storage_nodes().next().unwrap().clone();
         let cnode = cluster.client_nodes().next().unwrap().clone();
         let s3 = Rc::new(crate::s3::MemS3::new(&sim, &server, &cnode));
-        let mut w = setup::s3_fdb(&sim, &s3, "p0");
+        let mut w = FdbBuilder::new(&sim)
+            .backend(BackendConfig::S3 {
+                s3: s3.clone(),
+                client_tag: "p0".to_string(),
+                multipart: false,
+            })
+            .build()
+            .unwrap();
         sim.spawn(async move {
             let ids = ids(2, 3);
             for id in &ids {
@@ -269,7 +263,7 @@ mod tests {
             w.flush().await;
             for id in &ids {
                 let h = w.retrieve(id).await.unwrap().unwrap();
-                assert_eq!(w.read(&h).await.to_vec(), field_bytes(id));
+                assert_eq!(w.read(&h).await.unwrap().to_vec(), field_bytes(id));
             }
         });
         sim.run();
@@ -283,18 +277,30 @@ mod tests {
         let fs = Lustre::deploy(&sim, &cluster, LustreConfig::default());
         let wnode = cluster.client_nodes().next().unwrap().clone();
         let rnode = cluster.client_nodes().nth(1).unwrap().clone();
-        let mut w = setup::posix_fdb(&sim, &fs, &wnode, "/fdb");
+        let mut w = FdbBuilder::new(&sim)
+            .node(&wnode)
+            .backend(posix_config(&fs))
+            .build()
+            .unwrap();
         let fs2 = fs.clone();
         let sim2 = sim.clone();
         sim.spawn(async move {
             let id = schema::example_identifier();
             w.archive(&id, b"payload").await.unwrap();
             // reader BEFORE flush: index not yet persisted
-            let mut r1 = setup::posix_fdb(&sim2, &fs2, &rnode, "/fdb");
+            let mut r1 = FdbBuilder::new(&sim2)
+                .node(&rnode)
+                .backend(posix_config(&fs2))
+                .build()
+                .unwrap();
             assert!(r1.retrieve(&id).await.unwrap().is_none());
             w.flush().await;
             // fresh reader AFTER flush: visible
-            let mut r2 = setup::posix_fdb(&sim2, &fs2, &rnode, "/fdb");
+            let mut r2 = FdbBuilder::new(&sim2)
+                .node(&rnode)
+                .backend(posix_config(&fs2))
+                .build()
+                .unwrap();
             assert!(r2.retrieve(&id).await.unwrap().is_some());
         });
         sim.run();
@@ -308,14 +314,22 @@ mod tests {
         daos.create_pool("fdb");
         let wnode = cluster.client_nodes().next().unwrap().clone();
         let rnode = cluster.client_nodes().nth(1).unwrap().clone();
-        let mut w = setup::daos_fdb(&sim, &daos, &wnode, "fdb");
-        let mut r = setup::daos_fdb(&sim, &daos, &rnode, "fdb");
+        let mut w = FdbBuilder::new(&sim)
+            .node(&wnode)
+            .backend(daos_config(&daos))
+            .build()
+            .unwrap();
+        let mut r = FdbBuilder::new(&sim)
+            .node(&rnode)
+            .backend(daos_config(&daos))
+            .build()
+            .unwrap();
         sim.spawn(async move {
             let id = schema::example_identifier();
             w.archive(&id, b"now").await.unwrap();
             // NO flush — still visible (thesis §3.1 immediate persistence)
             let h = r.retrieve(&id).await.unwrap().unwrap();
-            assert_eq!(r.read(&h).await.to_vec(), b"now");
+            assert_eq!(r.read(&h).await.unwrap().to_vec(), b"now");
         });
         sim.run();
     }
@@ -327,15 +341,23 @@ mod tests {
         let daos = Daos::deploy(&sim, &cluster, DaosConfig::default());
         daos.create_pool("fdb");
         let node = cluster.client_nodes().next().unwrap().clone();
-        let mut w = setup::daos_fdb(&sim, &daos, &node, "fdb");
+        let mut w = FdbBuilder::new(&sim)
+            .node(&node)
+            .backend(daos_config(&daos))
+            .build()
+            .unwrap();
         let rnode = cluster.client_nodes().nth(1).unwrap().clone();
-        let mut r = setup::daos_fdb(&sim, &daos, &rnode, "fdb");
+        let mut r = FdbBuilder::new(&sim)
+            .node(&rnode)
+            .backend(daos_config(&daos))
+            .build()
+            .unwrap();
         sim.spawn(async move {
             let id = schema::example_identifier();
             w.archive(&id, b"old-data").await.unwrap();
             w.archive(&id, b"new-data").await.unwrap();
             let h = r.retrieve(&id).await.unwrap().unwrap();
-            assert_eq!(r.read(&h).await.to_vec(), b"new-data");
+            assert_eq!(r.read(&h).await.unwrap().to_vec(), b"new-data");
         });
         sim.run();
     }
@@ -347,9 +369,17 @@ mod tests {
         let daos = Daos::deploy(&sim, &cluster, DaosConfig::default());
         daos.create_pool("fdb");
         let node = cluster.client_nodes().next().unwrap().clone();
-        let mut w = setup::daos_fdb(&sim, &daos, &node, "fdb");
+        let mut w = FdbBuilder::new(&sim)
+            .node(&node)
+            .backend(daos_config(&daos))
+            .build()
+            .unwrap();
         let rnode = cluster.client_nodes().nth(1).unwrap().clone();
-        let mut r = setup::daos_fdb(&sim, &daos, &rnode, "fdb");
+        let mut r = FdbBuilder::new(&sim)
+            .node(&rnode)
+            .backend(daos_config(&daos))
+            .build()
+            .unwrap();
         sim.spawn(async move {
             for step in 1..=5u32 {
                 let id = schema::example_identifier().with("step", step.to_string());
@@ -362,6 +392,11 @@ mod tests {
             let handles = r.retrieve_request(&req).await.unwrap();
             let total: u64 = handles.iter().map(|h| h.total_len()).sum();
             assert_eq!(total, 10); // "s1".."s5" → 2 bytes each
+            // the streaming path delivers the same fields with bytes
+            let fetched = r.retrieve_request_streaming(&req).await.unwrap();
+            assert_eq!(fetched.len(), 5);
+            let streamed: u64 = fetched.iter().map(|(_, b)| b.len()).sum();
+            assert_eq!(streamed, 10);
         });
         sim.run();
     }
@@ -373,7 +408,11 @@ mod tests {
         let fs = Lustre::deploy(&sim, &cluster, LustreConfig::default());
         let wnode = cluster.client_nodes().next().unwrap().clone();
         let rnode = cluster.client_nodes().nth(1).unwrap().clone();
-        let mut w = setup::posix_fdb(&sim, &fs, &wnode, "/fdb");
+        let mut w = FdbBuilder::new(&sim)
+            .node(&wnode)
+            .backend(posix_config(&fs))
+            .build()
+            .unwrap();
         let sim2 = sim.clone();
         let fs2 = fs.clone();
         sim.spawn(async move {
@@ -385,7 +424,11 @@ mod tests {
             }
             w.flush().await;
             w.close().await;
-            let mut r = setup::posix_fdb(&sim2, &fs2, &rnode, "/fdb");
+            let mut r = FdbBuilder::new(&sim2)
+                .node(&rnode)
+                .backend(posix_config(&fs2))
+                .build()
+                .unwrap();
             let mut req = Request::from_key(&ids[0]);
             req.bind("step", (1..=6).map(|s| s.to_string()).collect());
             let handles = r.retrieve_request(&req).await.unwrap();
@@ -394,7 +437,7 @@ mod tests {
             assert_eq!(handles.len(), 1);
             assert_eq!(handles[0].io_ops(), 1);
             assert_eq!(handles[0].total_len(), 6 * 128);
-            let bytes = r.read(&handles[0]).await;
+            let bytes = r.read(&handles[0]).await.unwrap();
             assert_eq!(bytes.len(), 6 * 128);
         });
         sim.run();

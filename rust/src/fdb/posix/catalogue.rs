@@ -526,3 +526,73 @@ impl PosixCatalogue {
         out
     }
 }
+
+impl crate::fdb::backend::Catalogue for PosixCatalogue {
+    fn name(&self) -> &'static str {
+        "posix"
+    }
+
+    fn archive<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        colloc: &'a Key,
+        elem: &'a Key,
+        _id: &'a Key,
+        loc: &'a FieldLocation,
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, ()> {
+        Box::pin(PosixCatalogue::archive(self, ds, colloc, elem, loc))
+    }
+
+    fn flush<'a>(&'a mut self) -> crate::fdb::backend::LocalBoxFuture<'a, ()> {
+        Box::pin(PosixCatalogue::flush(self))
+    }
+
+    fn close<'a>(&'a mut self) -> crate::fdb::backend::LocalBoxFuture<'a, ()> {
+        Box::pin(PosixCatalogue::close(self))
+    }
+
+    fn retrieve<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        colloc: &'a Key,
+        elem: &'a Key,
+        _id: &'a Key,
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, Option<FieldLocation>> {
+        Box::pin(PosixCatalogue::retrieve(self, ds, colloc, elem))
+    }
+
+    fn axis<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        colloc: &'a Key,
+        dim: &'a str,
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, Vec<String>> {
+        Box::pin(PosixCatalogue::axis(self, ds, colloc, dim))
+    }
+
+    fn list<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        request: &'a Request,
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, Vec<(Key, FieldLocation)>> {
+        Box::pin(PosixCatalogue::list(self, ds, request))
+    }
+
+    fn invalidate_preload(&mut self, ds: &Key) {
+        PosixCatalogue::invalidate_preload(self, ds);
+    }
+
+    fn deregister_dataset<'a>(
+        &'a mut self,
+        ds: &'a Key,
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, ()> {
+        // the Store wipe unlinked the dataset's files; drop any stale
+        // pre-loaded TOC view so readers re-scan
+        PosixCatalogue::invalidate_preload(self, ds);
+        crate::fdb::backend::ready(())
+    }
+
+    fn take_lock_time(&self) -> crate::sim::time::SimTime {
+        self.client.take_lock_time()
+    }
+}

@@ -122,6 +122,58 @@ impl PosixStore {
     }
 }
 
+impl crate::fdb::backend::Store for PosixStore {
+    fn name(&self) -> &'static str {
+        "posix"
+    }
+
+    fn archive<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        colloc: &'a Key,
+        _id: &'a Key,
+        data: Bytes,
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, FieldLocation> {
+        Box::pin(PosixStore::archive(self, ds, colloc, data))
+    }
+
+    fn flush<'a>(&'a mut self) -> crate::fdb::backend::LocalBoxFuture<'a, ()> {
+        Box::pin(PosixStore::flush(self))
+    }
+
+    fn read<'a>(
+        &'a mut self,
+        handle: &'a crate::fdb::DataHandle,
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, Result<Bytes, crate::fdb::FdbError>> {
+        Box::pin(async move {
+            match handle {
+                crate::fdb::DataHandle::Posix { path, ranges } => {
+                    Ok(self.read_ranges(path, ranges).await)
+                }
+                other => Err(crate::fdb::FdbError::BackendMismatch {
+                    store: "posix",
+                    handle: other.backend_name(),
+                }),
+            }
+        })
+    }
+
+    fn supports_wipe(&self) -> bool {
+        true
+    }
+
+    fn wipe_dataset<'a>(
+        &'a mut self,
+        ds: &'a Key,
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, bool> {
+        Box::pin(PosixStore::wipe_dataset(self, ds))
+    }
+
+    fn take_lock_time(&self) -> crate::sim::time::SimTime {
+        PosixStore::take_lock_time(self)
+    }
+}
+
 /// Replace path-hostile characters in canonical keys.
 pub(crate) fn sanitize(s: &str) -> String {
     s.replace(['/', '\\'], "_")

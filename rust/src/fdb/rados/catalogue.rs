@@ -288,3 +288,58 @@ impl RadosCatalogue {
         out
     }
 }
+
+impl crate::fdb::backend::Catalogue for RadosCatalogue {
+    fn name(&self) -> &'static str {
+        "rados"
+    }
+
+    fn archive<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        colloc: &'a Key,
+        elem: &'a Key,
+        _id: &'a Key,
+        loc: &'a FieldLocation,
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, ()> {
+        Box::pin(RadosCatalogue::archive(self, ds, colloc, elem, loc))
+    }
+
+    fn retrieve<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        colloc: &'a Key,
+        elem: &'a Key,
+        _id: &'a Key,
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, Option<FieldLocation>> {
+        Box::pin(RadosCatalogue::retrieve(self, ds, colloc, elem))
+    }
+
+    fn axis<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        colloc: &'a Key,
+        dim: &'a str,
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, Vec<String>> {
+        Box::pin(RadosCatalogue::axis(self, ds, colloc, dim))
+    }
+
+    fn list<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        request: &'a Request,
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, Vec<(Key, FieldLocation)>> {
+        Box::pin(RadosCatalogue::list(self, ds, request))
+    }
+
+    fn invalidate_preload(&mut self, ds: &Key) {
+        RadosCatalogue::invalidate_preload(self, ds);
+    }
+
+    fn deregister_dataset<'a>(
+        &'a mut self,
+        ds: &'a Key,
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, ()> {
+        Box::pin(RadosCatalogue::deregister_dataset(self, ds))
+    }
+}

@@ -270,3 +270,51 @@ impl RadosClient {
         self.id
     }
 }
+
+impl crate::fdb::backend::Store for RadosStore {
+    fn name(&self) -> &'static str {
+        "rados"
+    }
+
+    fn archive<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        colloc: &'a Key,
+        _id: &'a Key,
+        data: Bytes,
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, FieldLocation> {
+        Box::pin(RadosStore::archive(self, ds, colloc, data))
+    }
+
+    fn flush<'a>(&'a mut self) -> crate::fdb::backend::LocalBoxFuture<'a, ()> {
+        Box::pin(RadosStore::flush(self))
+    }
+
+    fn read<'a>(
+        &'a mut self,
+        handle: &'a crate::fdb::DataHandle,
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, Result<Bytes, crate::fdb::FdbError>> {
+        Box::pin(async move {
+            match handle {
+                crate::fdb::DataHandle::Rados { pool, ns, parts } => {
+                    Ok(self.read_parts(pool, ns, parts).await)
+                }
+                other => Err(crate::fdb::FdbError::BackendMismatch {
+                    store: "rados",
+                    handle: other.backend_name(),
+                }),
+            }
+        })
+    }
+
+    fn supports_wipe(&self) -> bool {
+        true
+    }
+
+    fn wipe_dataset<'a>(
+        &'a mut self,
+        ds: &'a Key,
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, bool> {
+        Box::pin(async move { RadosStore::wipe_dataset(self, ds).await > 0 })
+    }
+}

@@ -151,3 +151,40 @@ impl S3Store {
         out
     }
 }
+
+impl crate::fdb::backend::Store for S3Store {
+    fn name(&self) -> &'static str {
+        "s3"
+    }
+
+    fn archive<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        colloc: &'a Key,
+        _id: &'a Key,
+        data: Bytes,
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, FieldLocation> {
+        Box::pin(S3Store::archive(self, ds, colloc, data))
+    }
+
+    fn flush<'a>(&'a mut self) -> crate::fdb::backend::LocalBoxFuture<'a, ()> {
+        Box::pin(S3Store::flush(self))
+    }
+
+    fn read<'a>(
+        &'a mut self,
+        handle: &'a crate::fdb::DataHandle,
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, Result<Bytes, crate::fdb::FdbError>> {
+        Box::pin(async move {
+            match handle {
+                crate::fdb::DataHandle::S3 { bucket, parts } => {
+                    Ok(self.read_parts(bucket, parts).await)
+                }
+                other => Err(crate::fdb::FdbError::BackendMismatch {
+                    store: "s3",
+                    handle: other.backend_name(),
+                }),
+            }
+        })
+    }
+}

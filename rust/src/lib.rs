@@ -16,8 +16,12 @@
 //!   thesis evaluates, implemented as faithful behavioural simulators
 //!   (real data + real index structures, virtual time).
 //! * [`fdb`] — the FDB meteorological object store: schema-driven keys,
-//!   Catalogue/Store abstractions, and the POSIX, DAOS, Ceph/RADOS and S3
-//!   backends described in Chapters 2–3.
+//!   the object-safe [`fdb::Store`] / [`fdb::Catalogue`] backend traits
+//!   with POSIX, DAOS, Ceph/RADOS, S3 and Null implementations
+//!   (Chapters 2–3), declarative construction via [`fdb::FdbBuilder`] /
+//!   [`fdb::BackendConfig`], and the batched `archive_many` /
+//!   `retrieve_many` paths that pipeline catalogue lookups with store
+//!   reads.
 //! * [`bench`] — IOR-like, Field I/O, and fdb-hammer workload generators
 //!   plus the scenario registry that regenerates every evaluation figure.
 //! * [`workflow`] — the operational NWP I/O pattern: I/O servers, flush

@@ -10,8 +10,8 @@ use std::task::Waker;
 use super::ioserver::{self, IoServerConfig};
 use super::pgen::{self, PgenConfig};
 use super::Compute;
-use crate::bench::scenario::{Deployment, SystemUnderTest};
-use crate::fdb::{setup, Fdb};
+use crate::bench::scenario::Deployment;
+use crate::fdb::Fdb;
 use crate::sim::exec::{Sim, WaitGroup};
 use crate::sim::time::SimTime;
 use crate::sim::trace::Trace;
@@ -132,12 +132,7 @@ pub struct RunReport {
 }
 
 fn make_fdb(dep: &Deployment, node: &Rc<crate::hw::node::Node>, trace: &Trace) -> Fdb {
-    let fdb = match &dep.system {
-        SystemUnderTest::Lustre(fs) => setup::posix_fdb(&dep.sim, fs, node, "/fdb"),
-        SystemUnderTest::Daos(d) => setup::daos_fdb(&dep.sim, d, node, "fdb"),
-        SystemUnderTest::Ceph(c, pool) => setup::rados_fdb(&dep.sim, c, pool, node),
-    };
-    fdb.with_trace(trace.clone())
+    dep.fdb_traced(node, trace)
 }
 
 /// Run a full operational cycle: all steps written, all steps

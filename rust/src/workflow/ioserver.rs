@@ -42,7 +42,9 @@ pub fn model_field_seed(id: &Key) -> u64 {
     crate::ceph::hash_name(&id.canonical())
 }
 
-/// Run one I/O server process to completion.
+/// Run one I/O server process to completion. Each step's fields go
+/// through the batched `archive_many` path (one Store pass, one
+/// Catalogue pass), then the step flush + barrier signal.
 pub async fn run(
     mut fdb: Fdb,
     sim: Sim,
@@ -51,6 +53,7 @@ pub async fn run(
     real_fields: bool,
 ) {
     for step in 1..=cfg.steps {
+        let mut batch = Vec::with_capacity(cfg.fields_per_step as usize);
         for f in 0..cfg.fields_per_step {
             let id = model_field_id(cfg.member, cfg.proc, step, f);
             let payload = if real_fields {
@@ -67,8 +70,9 @@ pub async fn run(
                     model_field_seed(&id),
                 )
             };
-            fdb.archive(&id, payload).await.expect("archive");
+            batch.push((id, payload));
         }
+        fdb.archive_many(batch).await.expect("archive_many");
         fdb.flush().await;
         barrier.arrive(step).await;
     }

@@ -48,34 +48,44 @@ pub async fn run(
         .expect("dataset dims");
     fdb.invalidate_preload(&ds);
 
-    let mut fields_read = 0u64;
-    let mut bytes_read = 0u64;
-    let mut grids: Vec<Vec<f32>> = Vec::new();
+    // the transposed access: every member/proc's fields for this step,
+    // fetched through the batched path (catalogue lookups pipelined
+    // with store reads)
+    let mut ids = Vec::new();
     for member in 0..cfg.members {
         for proc in 0..cfg.procs_per_member {
             for f in 0..cfg.fields_per_proc_step {
-                let id = model_field_id(member, proc, cfg.step, f);
-                let handle = fdb
-                    .retrieve(&id)
-                    .await
-                    .expect("retrieve")
-                    .unwrap_or_else(|| panic!("PGEN step {}: missing {id}", cfg.step));
-                let data = fdb.read(&handle).await;
-                bytes_read += data.len();
-                fields_read += 1;
-                if cfg.verify_only {
-                    let expect = crate::util::content::Bytes::virt(
-                        (cfg.grid * cfg.grid * 4) as u64,
-                        model_field_seed(&id),
-                    );
-                    assert!(
-                        data.content_eq(&expect),
-                        "PGEN consistency check failed for {id}"
-                    );
-                } else {
-                    grids.push(fields::from_bytes(&data.to_vec()));
-                }
+                ids.push(model_field_id(member, proc, cfg.step, f));
             }
+        }
+    }
+    let fetched = fdb.retrieve_many(&ids).await.expect("retrieve_many");
+    if fetched.len() != ids.len() {
+        let found: std::collections::HashSet<&crate::fdb::Key> =
+            fetched.iter().map(|(id, _)| id).collect();
+        let missing = ids
+            .iter()
+            .find(|id| !found.contains(id))
+            .expect("some id must be missing");
+        panic!("PGEN step {}: missing {missing}", cfg.step);
+    }
+    let mut fields_read = 0u64;
+    let mut bytes_read = 0u64;
+    let mut grids: Vec<Vec<f32>> = Vec::new();
+    for (id, data) in &fetched {
+        bytes_read += data.len();
+        fields_read += 1;
+        if cfg.verify_only {
+            let expect = crate::util::content::Bytes::virt(
+                (cfg.grid * cfg.grid * 4) as u64,
+                model_field_seed(id),
+            );
+            assert!(
+                data.content_eq(&expect),
+                "PGEN consistency check failed for {id}"
+            );
+        } else {
+            grids.push(fields::from_bytes(&data.to_vec()));
         }
     }
     // derived products over the ensemble

@@ -6,18 +6,14 @@ use std::cell::RefCell;
 use std::rc::Rc;
 
 use fdbr::bench::scenario::{deploy, RedundancyOpt, SystemKind, SystemUnderTest};
-use fdbr::fdb::{setup, Fdb, Key, Request};
+use fdbr::fdb::{BackendConfig, Fdb, FdbBuilder, Key, Request};
 use fdbr::hw::profiles::Testbed;
 use fdbr::sim::exec::WaitGroup;
 use fdbr::util::content::Bytes;
 
 fn make_fdb(dep: &fdbr::bench::scenario::Deployment, node_idx: usize) -> Fdb {
     let node = dep.client_nodes()[node_idx].clone();
-    match &dep.system {
-        SystemUnderTest::Lustre(fs) => setup::posix_fdb(&dep.sim, fs, &node, "/fdb"),
-        SystemUnderTest::Daos(d) => setup::daos_fdb(&dep.sim, d, &node, "fdb"),
-        SystemUnderTest::Ceph(c, pool) => setup::rados_fdb(&dep.sim, c, pool, &node),
-    }
+    dep.fdb(&node)
 }
 
 fn id_for(member: usize, step: u32, param: u32) -> Key {
@@ -78,7 +74,7 @@ fn parallel_writers_then_readers_all_backends() {
                         match fdb.retrieve(&id).await.unwrap() {
                             None => failures.borrow_mut().push(format!("missing {id}")),
                             Some(h) => {
-                                let data = fdb.read(&h).await;
+                                let data = fdb.read(&h).await.unwrap();
                                 if !data.content_eq(&Bytes::virt(64 << 10, seed_of(&id))) {
                                     failures
                                         .borrow_mut()
@@ -132,7 +128,7 @@ fn no_torn_reads_under_live_contention() {
                 match r.retrieve(&id).await.unwrap() {
                     None => h2.borrow_mut().1 += 1,
                     Some(h) => {
-                        let data = r.read(&h).await;
+                        let data = r.read(&h).await.unwrap();
                         assert!(
                             data.content_eq(&Bytes::virt(256 << 10, seed_of(&id))),
                             "{kind:?}: torn read for {id}"
@@ -170,7 +166,7 @@ fn rearchive_replaces_and_list_deduplicates() {
             let id = id_for(0, 1, 0);
             let h = r.retrieve(&id).await.unwrap().expect("found");
             assert_eq!(
-                r.read(&h).await.to_vec(),
+                r.read(&h).await.unwrap().to_vec(),
                 b"version-two!",
                 "{kind2:?}: newest version wins"
             );
@@ -204,17 +200,38 @@ fn posix_flush_visibility_and_masking() {
         let id = id_for(3, 7, 2);
         w.archive(&id, b"masked-payload").await.unwrap();
         // before flush: a fresh reader sees nothing
-        let mut r1 = setup::posix_fdb(&dep_sim, &fs, &node1, "/fdb");
+        let mut r1 = FdbBuilder::new(&dep_sim)
+            .node(&node1)
+            .backend(BackendConfig::Posix {
+                fs: fs.clone(),
+                root: "/fdb".to_string(),
+            })
+            .build()
+            .unwrap();
         assert!(r1.retrieve(&id).await.unwrap().is_none());
         w.flush().await;
         // after flush (partial index via sub-TOC): visible
-        let mut r2 = setup::posix_fdb(&dep_sim, &fs, &node1, "/fdb");
+        let mut r2 = FdbBuilder::new(&dep_sim)
+            .node(&node1)
+            .backend(BackendConfig::Posix {
+                fs: fs.clone(),
+                root: "/fdb".to_string(),
+            })
+            .build()
+            .unwrap();
         assert!(r2.retrieve(&id).await.unwrap().is_some());
         w.close().await;
         // after close (full index + mask): still exactly one result
-        let mut r3 = setup::posix_fdb(&dep_sim, &fs, &node1, "/fdb");
+        let mut r3 = FdbBuilder::new(&dep_sim)
+            .node(&node1)
+            .backend(BackendConfig::Posix {
+                fs: fs.clone(),
+                root: "/fdb".to_string(),
+            })
+            .build()
+            .unwrap();
         let h = r3.retrieve(&id).await.unwrap().expect("still visible");
-        assert_eq!(r3.read(&h).await.to_vec(), b"masked-payload");
+        assert_eq!(r3.read(&h).await.unwrap().to_vec(), b"masked-payload");
         let ds = id.project(&r3.schema.dataset.clone()).unwrap();
         let listed = r3.list(&ds, &Request::parse("").unwrap()).await;
         assert_eq!(listed.len(), 1, "masking prevents duplicates");
@@ -260,6 +277,7 @@ fn crashed_writer_leaves_consistent_dataset() {
             assert!(r
                 .read(&h)
                 .await
+                .unwrap()
                 .content_eq(&Bytes::virt(8 << 10, seed_of(&id))));
         }
         // step 2 invisible (never flushed): cache semantics, not an error
@@ -278,16 +296,23 @@ fn s3_store_put_semantics() {
     let server = dep.cluster.storage_nodes().next().unwrap().clone();
     let cnode = dep.client_nodes()[0].clone();
     let s3 = Rc::new(fdbr::s3::MemS3::new(&dep.sim, &server, &cnode));
-    let mut fdb = setup::s3_fdb(&dep.sim, &s3, "proc0");
+    let mut fdb = FdbBuilder::new(&dep.sim)
+        .backend(BackendConfig::S3 {
+            s3: s3.clone(),
+            client_tag: "proc0".to_string(),
+            multipart: false,
+        })
+        .build()
+        .unwrap();
     dep.sim.spawn(async move {
         let id = id_for(0, 1, 0);
         fdb.archive(&id, b"first").await.unwrap();
         // visible with NO flush (PutObject blocks until durable)
         let h = fdb.retrieve(&id).await.unwrap().unwrap();
-        assert_eq!(fdb.read(&h).await.to_vec(), b"first");
+        assert_eq!(fdb.read(&h).await.unwrap().to_vec(), b"first");
         fdb.archive(&id, b"second").await.unwrap();
         let h = fdb.retrieve(&id).await.unwrap().unwrap();
-        assert_eq!(fdb.read(&h).await.to_vec(), b"second");
+        assert_eq!(fdb.read(&h).await.unwrap().to_vec(), b"second");
     });
     dep.sim.run();
 }

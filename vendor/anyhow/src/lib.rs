@@ -1,0 +1,206 @@
+//! Vendored offline subset of the `anyhow` API: `Error`, `Result`,
+//! `Context`, `anyhow!`, `bail!`. Enough surface for this crate's
+//! coordinator/runtime error paths; no backtraces, no `Send` bound
+//! (the simulator is single-threaded).
+
+use std::fmt;
+
+/// A context-carrying error: a message plus an optional boxed cause.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + 'static>>,
+}
+
+impl Error {
+    pub fn msg(msg: impl fmt::Display) -> Error {
+        Error {
+            msg: msg.to_string(),
+            source: None,
+        }
+    }
+
+    /// Wrap an existing error under a new context message.
+    pub fn context(self, msg: impl fmt::Display) -> Error {
+        Error {
+            msg: msg.to_string(),
+            source: Some(Box::new(Wrapped(self))),
+        }
+    }
+
+    fn chain_string(&self) -> String {
+        let mut out = self.msg.clone();
+        let mut src: Option<&(dyn std::error::Error + 'static)> = self.source.as_deref();
+        while let Some(e) = src {
+            out.push_str(": ");
+            out.push_str(&e.to_string());
+            src = e.source();
+        }
+        out
+    }
+}
+
+/// Adapter so an [`Error`] can sit in the `source` chain (anyhow::Error
+/// itself intentionally does not implement `std::error::Error`).
+struct Wrapped(Error);
+
+impl fmt::Display for Wrapped {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0.msg)
+    }
+}
+
+impl fmt::Debug for Wrapped {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0.msg)
+    }
+}
+
+impl std::error::Error for Wrapped {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        self.0.source.as_deref()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` renders the whole context chain, like real anyhow
+            write!(f, "{}", self.chain_string())
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut src: Option<&(dyn std::error::Error + 'static)> = self.source.as_deref();
+        if src.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = src {
+            write!(f, "\n    {e}")?;
+            src = e.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error {
+            msg: e.to_string(),
+            source: e.source().map(|_| {
+                // keep only the rendered chain: sources of borrowed
+                // errors can't be moved, so flatten them into the message
+                Box::new(Flat(flatten_sources(&e))) as Box<dyn std::error::Error>
+            }),
+        }
+    }
+}
+
+fn flatten_sources(e: &dyn std::error::Error) -> String {
+    let mut parts = Vec::new();
+    let mut src = e.source();
+    while let Some(s) = src {
+        parts.push(s.to_string());
+        src = s.source();
+    }
+    parts.join(": ")
+}
+
+struct Flat(String);
+
+impl fmt::Display for Flat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Debug for Flat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Flat {}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: std::error::Error + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn context_chain_renders_alternate() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening artifact").unwrap_err();
+        assert_eq!(format!("{e}"), "opening artifact");
+        assert_eq!(format!("{e:#}"), "opening artifact: gone");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing");
+        assert_eq!(Some(7u32).context("missing").unwrap(), 7);
+    }
+
+    #[test]
+    fn bail_macro_returns_err() {
+        fn f(x: bool) -> Result<u32> {
+            if x {
+                bail!("bad flag {x}");
+            }
+            Ok(1)
+        }
+        assert!(f(true).is_err());
+        assert_eq!(f(false).unwrap(), 1);
+    }
+}
