@@ -17,7 +17,7 @@ fn exercise(mut w: Fdb, mut r: Fdb, sim: &Sim, label: &'static str) {
     sim.spawn(async move {
         let id = example_identifier();
         w.archive(&id, b"backend-comparison-payload").await.unwrap();
-        w.flush().await;
+        w.flush().await.expect("flush");
         w.close().await;
         let h = r.retrieve(&id).await.unwrap().expect("retrievable");
         let bytes = r.read(&h).await.unwrap().to_vec();

@@ -47,7 +47,7 @@ fn main() {
             writer.archive(&id, payload.as_bytes()).await.unwrap();
             println!("archived  {id}");
         }
-        writer.flush().await; // no-op on DAOS: already durable + visible
+        writer.flush().await.expect("flush"); // no-op on DAOS: already durable + visible
 
         // multi-step request with a wildcard, expanded from the axes
         let mut req = Request::parse(

@@ -8,6 +8,9 @@
 //! * `abl_pg_count`   — RADOS placement-group sensitivity (§2.4/§3.2).
 //! * `abl_s3_multipart` — S3 Store PutObject-per-field vs multipart
 //!   accumulation (§3.3's expected write win).
+//! * `abl_wrappers`   — the composable backend wrappers (tiered cache,
+//!   replicated store, sharded catalogue) over the same fdb-hammer
+//!   workload, against the bare backend baseline.
 
 use std::rc::Rc;
 
@@ -21,7 +24,13 @@ use crate::sim::exec::{Sim, WaitGroup};
 use crate::util::content::Bytes;
 
 pub fn ablation_ids() -> Vec<&'static str> {
-    vec!["abl_hash_oid", "abl_lustre_dne", "abl_pg_count", "abl_s3_multipart"]
+    vec![
+        "abl_hash_oid",
+        "abl_lustre_dne",
+        "abl_pg_count",
+        "abl_s3_multipart",
+        "abl_wrappers",
+    ]
 }
 
 pub fn run_ablation(id: &str, scale: f64) -> Option<Figure> {
@@ -30,6 +39,7 @@ pub fn run_ablation(id: &str, scale: f64) -> Option<Figure> {
         "abl_lustre_dne" => abl_lustre_dne(scale),
         "abl_pg_count" => abl_pg_count(scale),
         "abl_s3_multipart" => abl_s3_multipart(scale),
+        "abl_wrappers" => abl_wrappers(scale),
         _ => return None,
     })
 }
@@ -253,7 +263,7 @@ fn abl_s3_multipart(scale: f64) -> Figure {
                 let id = super::hammer::field_id(0, 1 + (i / 100) as u32, (i % 10) as u32, 0);
                 fdb.archive(&id, Bytes::virt(1 << 20, i as u64)).await.unwrap();
             }
-            fdb.flush().await;
+            fdb.flush().await.expect("flush");
             spans2.borrow_mut().push((t0, sim.now(), (n as u64) << 20));
         });
         dep.sim.run();
@@ -273,6 +283,50 @@ fn abl_s3_multipart(scale: f64) -> Figure {
         id: "abl_s3_multipart",
         title: "S3 Store ablation: per-field PUTs vs multipart accumulation",
         expectation: "multipart reduces object count and lifts write throughput",
+        rows,
+        profiles: vec![],
+    }
+}
+
+/// Composable wrapper ablation: the same fdb-hammer workload through
+/// the bare Lustre backend, a tiered store (POSIX /scm front tier),
+/// a 2-way replicated store, and a 4-shard catalogue.
+fn abl_wrappers(scale: f64) -> Figure {
+    use crate::bench::hammer::{self, HammerConfig};
+    use crate::bench::scenario::WrapperOpt;
+    let mut rows = Vec::new();
+    for wrapper in [
+        WrapperOpt::Bare,
+        WrapperOpt::Tiered,
+        WrapperOpt::Replicated(2),
+        WrapperOpt::Sharded(4),
+    ] {
+        let dep = deploy(Testbed::Gcp, SystemKind::Lustre, 2, 2, RedundancyOpt::None)
+            .with_wrapper(wrapper);
+        let cfg = HammerConfig {
+            procs_per_node: 2,
+            nsteps: nops(scale, 100).min(20) as u32,
+            nparams: 2,
+            nlevels: 2,
+            field_size: 256 << 10,
+            check: true,
+            contention: false,
+        };
+        let (r, _) = hammer::run(&dep, cfg);
+        for (series, gibs) in [("write", r.gibs_w()), ("read", r.gibs_r())] {
+            rows.push(FigRow {
+                x: wrapper.label(),
+                series: series.into(),
+                value: gibs,
+                unit: "GiB/s",
+            });
+        }
+    }
+    Figure {
+        id: "abl_wrappers",
+        title: "Composable backend wrappers vs bare Lustre (fdb-hammer)",
+        expectation: "replication pays ~2x on writes; the sharded catalogue \
+                      and tiered front change index/write paths, not bytes",
         rows,
         profiles: vec![],
     }
@@ -323,5 +377,22 @@ mod tests {
     #[test]
     fn unknown_ablation_is_none() {
         assert!(run_ablation("abl_nope", 1.0).is_none());
+    }
+
+    #[test]
+    fn wrapper_ablation_runs_all_variants() {
+        let f = run_ablation("abl_wrappers", 0.05).unwrap();
+        for x in ["bare", "tiered", "replicated-2", "sharded-4"] {
+            let w = f.value(x, "write").unwrap();
+            let r = f.value(x, "read").unwrap();
+            assert!(w > 0.0 && r > 0.0, "{x}: write {w} read {r}");
+        }
+        // replication writes every byte twice — it cannot beat bare
+        let bare = f.value("bare", "write").unwrap();
+        let rep = f.value("replicated-2", "write").unwrap();
+        assert!(
+            rep <= bare * 1.05,
+            "2-way replication write {rep} should not beat bare {bare}"
+        );
     }
 }

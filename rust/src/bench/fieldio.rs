@@ -211,7 +211,7 @@ pub fn run(dep: &Deployment, cfg: FieldIoConfig) -> BwResult {
                             wg.done();
                         });
                     }
-                    SystemUnderTest::Ceph(..) => {
+                    SystemUnderTest::Ceph(..) | SystemUnderTest::Null(_) => {
                         panic!("Field I/O was a DAOS/Lustre PoC (thesis App. B)")
                     }
                 }

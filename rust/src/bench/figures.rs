@@ -771,10 +771,10 @@ fn run_fig3_5_config(
                         .await
                         .unwrap();
                     if i % 50 == 49 {
-                        fdb.flush().await;
+                        fdb.flush().await.expect("flush");
                     }
                 }
-                fdb.flush().await;
+                fdb.flush().await.expect("flush");
                 spans
                     .borrow_mut()
                     .push((t0, sim.now(), nfields as u64 * (1 << 20)));

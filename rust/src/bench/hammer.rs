@@ -109,7 +109,7 @@ async fn writer(
             })
             .collect();
         fdb.archive_many(batch).await.expect("archive_many");
-        fdb.flush().await;
+        fdb.flush().await.expect("flush");
     }
     fdb.close().await;
     let bytes = cfg.fields_per_proc() * cfg.field_size;
@@ -272,7 +272,7 @@ pub fn run(dep: &Deployment, cfg: HammerConfig) -> (BwResult, Trace) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::bench::scenario::{deploy, RedundancyOpt, SystemKind};
+    use crate::bench::scenario::{deploy, RedundancyOpt, SystemKind, WrapperOpt};
     use crate::hw::profiles::Testbed;
 
     fn small_cfg() -> HammerConfig {
@@ -295,6 +295,37 @@ mod tests {
             assert!(r.write_bw > 0.0, "{kind:?}");
             assert!(r.read_bw > 0.0, "{kind:?}");
         }
+    }
+
+    #[test]
+    fn hammer_consistency_through_wrappers() {
+        // the full fdb-hammer workload (byte verification on) through
+        // every composable wrapper over a Lustre deployment
+        for wrapper in [
+            WrapperOpt::Tiered,
+            WrapperOpt::Replicated(2),
+            WrapperOpt::Sharded(4),
+        ] {
+            let dep = deploy(Testbed::Gcp, SystemKind::Lustre, 2, 2, RedundancyOpt::None)
+                .with_wrapper(wrapper);
+            let (r, _) = run(&dep, small_cfg());
+            assert!(r.write_bw > 0.0, "{wrapper:?}");
+            assert!(r.read_bw > 0.0, "{wrapper:?}");
+        }
+    }
+
+    #[test]
+    fn hammer_null_backend_with_shared_catalogue() {
+        // readers are separate FDB instances: they only find the
+        // writers' fields because the Null deployment shares one index
+        let dep = deploy(Testbed::Gcp, SystemKind::Null, 1, 2, RedundancyOpt::None);
+        let mut cfg = small_cfg();
+        cfg.check = false; // the zero-cost store returns virtual zeros
+        let (_, trace) = run(&dep, cfg);
+        use crate::sim::trace::OpClass;
+        // the reader asserted zero missing fields inside run(); the
+        // trace proves the batched paths executed
+        assert!(trace.count(OpClass::IndexRead) > 0);
     }
 
     #[test]

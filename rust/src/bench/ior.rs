@@ -190,6 +190,9 @@ pub fn run(dep: &Deployment, cfg: IorConfig) -> BwResult {
                             wg.done();
                         });
                     }
+                    SystemUnderTest::Null(_) => {
+                        panic!("IOR needs a deployed storage system (lustre|daos|ceph)")
+                    }
                 }
             }
         }

@@ -6,7 +6,7 @@ use std::rc::Rc;
 
 use crate::ceph::{Ceph, CephConfig, CephPool, Redundancy};
 use crate::daos::{Daos, DaosConfig};
-use crate::fdb::{BackendConfig, Fdb, FdbBuilder};
+use crate::fdb::{BackendConfig, Fdb, FdbBuilder, SharedNullCatalogue};
 use crate::hw::cluster::Cluster;
 use crate::hw::node::Node;
 use crate::hw::profiles::{build_cluster, Testbed};
@@ -21,6 +21,10 @@ pub enum SystemKind {
     Lustre,
     Daos,
     Ceph,
+    /// No storage system: the zero-cost Null store with a deployment-
+    /// shared Null catalogue — client-overhead runs (Fig 4.30) and CI
+    /// smoke tests.
+    Null,
 }
 
 impl SystemKind {
@@ -29,13 +33,14 @@ impl SystemKind {
             SystemKind::Lustre => "Lustre",
             SystemKind::Daos => "DAOS",
             SystemKind::Ceph => "Ceph",
+            SystemKind::Null => "Null",
         }
     }
 
     /// Lustre and Ceph use an extra node for MDS/Mon (thesis Figs
     /// 4.3/4.17: "+1 for Lustre and Ceph").
     pub fn extra_md_node(self) -> bool {
-        !matches!(self, SystemKind::Daos)
+        matches!(self, SystemKind::Lustre | SystemKind::Ceph)
     }
 }
 
@@ -44,6 +49,42 @@ pub enum SystemUnderTest {
     Lustre(Rc<Lustre>),
     Daos(Rc<Daos>),
     Ceph(Rc<Ceph>, Rc<CephPool>),
+    /// Nothing deployed; the shared catalogue gives every FDB instance
+    /// of the deployment one index (the bare Null catalogue is
+    /// process-local, so readers would see nothing).
+    Null(SharedNullCatalogue),
+}
+
+/// A composable backend wrapper layered over a deployment's base
+/// backend — sweeps the `fdb::wrappers` subsystem from benches and the
+/// CLI without touching the workload code.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum WrapperOpt {
+    #[default]
+    Bare,
+    /// [`crate::fdb::wrappers::TieredStore`]: a fast front tier absorbs
+    /// writes ahead of the system's own store. On Lustre the front is a
+    /// POSIX store on a dedicated `/scm` burst-buffer root; elsewhere a
+    /// second instance of the system's store doubles as the absorbing
+    /// tier.
+    Tiered,
+    /// [`crate::fdb::wrappers::ReplicatedStore`] over n instances of
+    /// the system's store.
+    Replicated(usize),
+    /// [`crate::fdb::wrappers::ShardedCatalogue`] over n instances of
+    /// the system's catalogue.
+    Sharded(usize),
+}
+
+impl WrapperOpt {
+    pub fn label(self) -> String {
+        match self {
+            WrapperOpt::Bare => "bare".to_string(),
+            WrapperOpt::Tiered => "tiered".to_string(),
+            WrapperOpt::Replicated(n) => format!("replicated-{n}"),
+            WrapperOpt::Sharded(n) => format!("sharded-{n}"),
+        }
+    }
 }
 
 pub struct Deployment {
@@ -52,6 +93,7 @@ pub struct Deployment {
     pub system: SystemUnderTest,
     pub kind: SystemKind,
     pub testbed: Testbed,
+    pub wrapper: WrapperOpt,
 }
 
 /// Redundancy options for Figs 4.27/4.28 (mapped per system).
@@ -102,6 +144,7 @@ pub fn deploy(
             let pool = c.create_pool("fdb", pgs, red);
             SystemUnderTest::Ceph(c, pool)
         }
+        SystemKind::Null => SystemUnderTest::Null(SharedNullCatalogue::new()),
     };
     Deployment {
         sim,
@@ -109,6 +152,7 @@ pub fn deploy(
         system,
         kind,
         testbed,
+        wrapper: WrapperOpt::Bare,
     }
 }
 
@@ -117,9 +161,15 @@ impl Deployment {
         self.cluster.client_nodes().cloned().collect()
     }
 
-    /// The default [`BackendConfig`] for this deployment's system —
-    /// the single place mapping a deployed system to FDB backends.
-    pub fn backend_config(&self) -> BackendConfig {
+    /// Layer a composable backend wrapper over the deployment's base
+    /// backend for every FDB instance subsequently built from it.
+    pub fn with_wrapper(mut self, wrapper: WrapperOpt) -> Deployment {
+        self.wrapper = wrapper;
+        self
+    }
+
+    /// The unwrapped [`BackendConfig`] of the deployed system.
+    fn base_config(&self) -> BackendConfig {
         match &self.system {
             SystemUnderTest::Lustre(fs) => BackendConfig::Posix {
                 fs: fs.clone(),
@@ -134,6 +184,42 @@ impl Deployment {
                 ceph: c.clone(),
                 pool: pool.clone(),
                 store: crate::fdb::rados::store::RadosStoreConfig::default(),
+            },
+            SystemUnderTest::Null(cat) => BackendConfig::SharedNull(cat.clone()),
+        }
+    }
+
+    /// The front-tier config for [`WrapperOpt::Tiered`]: on Lustre a
+    /// POSIX store on a dedicated burst-buffer root; elsewhere a second
+    /// instance of the system's own store stands in for the fast tier.
+    fn front_tier_config(&self) -> BackendConfig {
+        match &self.system {
+            SystemUnderTest::Lustre(fs) => BackendConfig::Posix {
+                fs: fs.clone(),
+                root: "/scm".to_string(),
+            },
+            _ => self.base_config(),
+        }
+    }
+
+    /// The default [`BackendConfig`] for this deployment's system with
+    /// the selected wrapper applied — the single place mapping a
+    /// deployed system to FDB backends.
+    pub fn backend_config(&self) -> BackendConfig {
+        let base = self.base_config();
+        match self.wrapper {
+            WrapperOpt::Bare => base,
+            WrapperOpt::Tiered => BackendConfig::Tiered {
+                front: Box::new(self.front_tier_config()),
+                back: Box::new(base),
+            },
+            WrapperOpt::Replicated(copies) => BackendConfig::Replicated {
+                inner: Box::new(base),
+                copies,
+            },
+            WrapperOpt::Sharded(shards) => BackendConfig::Sharded {
+                inner: Box::new(base),
+                shards,
             },
         }
     }
@@ -171,11 +257,50 @@ mod tests {
 
     #[test]
     fn deploy_each_kind() {
-        for kind in [SystemKind::Lustre, SystemKind::Daos, SystemKind::Ceph] {
+        for kind in [
+            SystemKind::Lustre,
+            SystemKind::Daos,
+            SystemKind::Ceph,
+            SystemKind::Null,
+        ] {
             let d = deploy(Testbed::Gcp, kind, 2, 4, RedundancyOpt::None);
             assert_eq!(d.client_nodes().len(), 4);
             assert_eq!(d.kind, kind);
         }
+    }
+
+    #[test]
+    fn null_deployment_shares_one_index_across_processes() {
+        let d = deploy(Testbed::Gcp, SystemKind::Null, 1, 2, RedundancyOpt::None);
+        let nodes = d.client_nodes();
+        let mut w = d.fdb(&nodes[0]);
+        let mut r = d.fdb(&nodes[1]);
+        d.sim.spawn(async move {
+            let id = crate::fdb::schema::example_identifier();
+            w.archive(&id, vec![1u8; 64]).await.unwrap();
+            // a *different* FDB instance of the same deployment sees it
+            let h = r.retrieve(&id).await.unwrap().expect("shared index");
+            assert_eq!(r.read(&h).await.unwrap().len(), 64);
+        });
+        d.sim.run();
+    }
+
+    #[test]
+    fn wrapped_configs_build_and_describe() {
+        let d = deploy(Testbed::Gcp, SystemKind::Lustre, 2, 2, RedundancyOpt::None);
+        for (wrapper, shape) in [
+            (WrapperOpt::Bare, "posix"),
+            (WrapperOpt::Tiered, "tiered(posix,posix)"),
+            (WrapperOpt::Replicated(2), "replicated2(posix)"),
+            (WrapperOpt::Sharded(4), "sharded4(posix)"),
+        ] {
+            let d2 = deploy(Testbed::Gcp, SystemKind::Lustre, 2, 2, RedundancyOpt::None)
+                .with_wrapper(wrapper);
+            assert_eq!(d2.backend_config().describe(), shape);
+            let node = d2.client_nodes()[0].clone();
+            let _ = d2.fdb(&node); // constructible
+        }
+        assert_eq!(d.backend_config().describe(), "posix");
     }
 
     #[test]

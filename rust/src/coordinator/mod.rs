@@ -5,7 +5,7 @@ use std::rc::Rc;
 
 use anyhow::{bail, Result};
 
-use crate::bench::scenario::{deploy, RedundancyOpt, SystemKind};
+use crate::bench::scenario::{deploy, RedundancyOpt, SystemKind, WrapperOpt};
 use crate::bench::{fieldio, hammer, ior};
 use crate::hw::profiles::Testbed;
 use crate::runtime::{PgenPipeline, PjrtRuntime};
@@ -26,37 +26,89 @@ pub fn parse_system(s: &str) -> Result<SystemKind> {
         "lustre" | "posix" => SystemKind::Lustre,
         "daos" => SystemKind::Daos,
         "ceph" | "rados" => SystemKind::Ceph,
-        other => bail!("unknown system `{other}` (lustre|daos|ceph)"),
+        "null" => SystemKind::Null,
+        other => bail!("unknown system `{other}` (lustre|daos|ceph|null)"),
     })
 }
 
-/// `fdbctl hammer --system daos --testbed gcp --servers 4 --clients 8 ...`
+/// `none | tiered | replicated[:n] | sharded[:n]` → a composable
+/// backend wrapper layered over the system's base backend.
+pub fn parse_wrapper(s: &str) -> Result<WrapperOpt> {
+    let (name, n) = match s.split_once(':') {
+        Some((name, n)) => (
+            name,
+            Some(n.parse::<usize>().map_err(|_| {
+                anyhow::anyhow!("wrapper count in `{s}` must be a positive integer")
+            })?),
+        ),
+        None => (s, None),
+    };
+    if n == Some(0) {
+        bail!("wrapper count in `{s}` must be >= 1");
+    }
+    Ok(match name {
+        "none" | "bare" | "tiered" => {
+            if n.is_some() {
+                bail!("wrapper `{name}` takes no count (got `{s}`)");
+            }
+            if name == "tiered" {
+                WrapperOpt::Tiered
+            } else {
+                WrapperOpt::Bare
+            }
+        }
+        "replicated" => WrapperOpt::Replicated(n.unwrap_or(2)),
+        "sharded" => WrapperOpt::Sharded(n.unwrap_or(4)),
+        other => bail!("unknown wrapper `{other}` (none|tiered|replicated[:n]|sharded[:n])"),
+    })
+}
+
+/// A value-taking CLI option with a default; a dangling `--name` (no
+/// value) is a usage error rather than a silent fallback.
+fn opt<'a>(args: &'a Args, name: &str, default: &'a str) -> Result<&'a str> {
+    args.value_of(name)
+        .map(|v| v.unwrap_or(default))
+        .map_err(|e| anyhow::anyhow!(e))
+}
+
+/// Numeric option with a default; a dangling flag or an unparseable
+/// value is a usage error rather than a silent default.
+fn num<T: std::str::FromStr>(args: &Args, name: &str, default: T) -> Result<T> {
+    args.parsed_or(name, default).map_err(|e| anyhow::anyhow!(e))
+}
+
+/// Byte-size option (unit suffixes allowed) with the same strictness.
+fn size(args: &Args, name: &str, default: u64) -> Result<u64> {
+    args.bytes_of(name, default).map_err(|e| anyhow::anyhow!(e))
+}
+
+/// `fdbctl hammer --system daos --testbed gcp --servers 4 --clients 8
+/// [--wrapper tiered|replicated[:n]|sharded[:n]] ...`
 pub fn cmd_hammer(args: &Args) -> Result<()> {
-    let testbed = parse_testbed(args.get_or("testbed", "gcp"))?;
-    let kind = parse_system(args.get_or("system", "daos"))?;
-    let dep = deploy(
-        testbed,
-        kind,
-        args.usize("servers", 4),
-        args.usize("clients", 8),
-        RedundancyOpt::None,
-    );
+    let testbed = parse_testbed(opt(args, "testbed", "gcp")?)?;
+    let kind = parse_system(opt(args, "system", "daos")?)?;
+    let wrapper = parse_wrapper(opt(args, "wrapper", "none")?)?;
+    let servers = num(args, "servers", 4usize)?;
+    let clients = num(args, "clients", 8usize)?;
+    let dep = deploy(testbed, kind, servers, clients, RedundancyOpt::None)
+        .with_wrapper(wrapper);
     let cfg = hammer::HammerConfig {
-        procs_per_node: args.usize("procs", 8),
-        nsteps: args.u64("steps", 10) as u32,
-        nparams: args.u64("params", 5) as u32,
-        nlevels: args.u64("levels", 4) as u32,
-        field_size: args.bytes("field-size", 1 << 20),
+        procs_per_node: num(args, "procs", 8usize)?,
+        nsteps: num(args, "steps", 10u32)?,
+        nparams: num(args, "params", 5u32)?,
+        nlevels: num(args, "levels", 4u32)?,
+        field_size: size(args, "field-size", 1 << 20)?,
         check: args.flag("check"),
         contention: args.flag("contention"),
     };
     let (r, trace) = hammer::run(&dep, cfg);
     println!(
-        "fdb-hammer {} on {} ({} srv / {} cli × {} procs, {} fields/proc of {})",
+        "fdb-hammer {} [{}] on {} ({} srv / {} cli × {} procs, {} fields/proc of {})",
         kind.label(),
+        dep.backend_config().describe(),
         testbed.name(),
-        args.usize("servers", 4),
-        args.usize("clients", 8),
+        servers,
+        clients,
         cfg.procs_per_node,
         cfg.fields_per_proc(),
         crate::util::humansize::fmt_bytes(cfg.field_size),
@@ -72,19 +124,22 @@ pub fn cmd_hammer(args: &Args) -> Result<()> {
 
 /// `fdbctl ior --system lustre ...`
 pub fn cmd_ior(args: &Args) -> Result<()> {
-    let testbed = parse_testbed(args.get_or("testbed", "gcp"))?;
-    let kind = parse_system(args.get_or("system", "lustre"))?;
+    let testbed = parse_testbed(opt(args, "testbed", "gcp")?)?;
+    let kind = parse_system(opt(args, "system", "lustre")?)?;
+    if kind == SystemKind::Null {
+        bail!("ior needs a deployed storage system (lustre|daos|ceph)");
+    }
     let dep = deploy(
         testbed,
         kind,
-        args.usize("servers", 4),
-        args.usize("clients", 8),
+        num(args, "servers", 4usize)?,
+        num(args, "clients", 8usize)?,
         RedundancyOpt::None,
     );
     let cfg = ior::IorConfig {
-        procs_per_node: args.usize("procs", 8),
-        nops: args.usize("nops", 100),
-        xfer: args.bytes("xfer", 1 << 20),
+        procs_per_node: num(args, "procs", 8usize)?,
+        nops: num(args, "nops", 100usize)?,
+        xfer: size(args, "xfer", 1 << 20)?,
         daos_via_dfs: args.flag("dfs"),
     };
     let r = ior::run(&dep, cfg);
@@ -100,19 +155,22 @@ pub fn cmd_ior(args: &Args) -> Result<()> {
 
 /// `fdbctl fieldio --system daos [--dummy] ...`
 pub fn cmd_fieldio(args: &Args) -> Result<()> {
-    let testbed = parse_testbed(args.get_or("testbed", "nextgenio"))?;
-    let kind = parse_system(args.get_or("system", "daos"))?;
+    let testbed = parse_testbed(opt(args, "testbed", "nextgenio")?)?;
+    let kind = parse_system(opt(args, "system", "daos")?)?;
+    if !matches!(kind, SystemKind::Daos | SystemKind::Lustre) {
+        bail!("fieldio was a DAOS/Lustre PoC (thesis App. B)");
+    }
     let dep = deploy(
         testbed,
         kind,
-        args.usize("servers", 2),
-        args.usize("clients", 4),
+        num(args, "servers", 2usize)?,
+        num(args, "clients", 4usize)?,
         RedundancyOpt::None,
     );
     let cfg = fieldio::FieldIoConfig {
-        procs_per_node: args.usize("procs", 8),
-        nfields: args.usize("nfields", 200),
-        field_size: args.bytes("field-size", 1 << 20),
+        procs_per_node: num(args, "procs", 8usize)?,
+        nfields: num(args, "nfields", 200usize)?,
+        field_size: size(args, "field-size", 1 << 20)?,
         dummy: args.flag("dummy"),
         contention: args.flag("contention"),
         ..Default::default()
@@ -131,8 +189,8 @@ pub fn cmd_fieldio(args: &Args) -> Result<()> {
 
 /// `fdbctl figures [--only figN_M] [--scale 0.05]`
 pub fn cmd_figures(args: &Args) -> Result<()> {
-    let scale = args.f64("scale", 0.05);
-    let only = args.get("only");
+    let scale = num(args, "scale", 0.05f64)?;
+    let only = args.value_of("only").map_err(|e| anyhow::anyhow!(e))?;
     let mut ids = crate::bench::figures::all_ids();
     ids.extend(crate::bench::ablations::ablation_ids());
     for id in ids {
@@ -159,16 +217,16 @@ pub fn cmd_figures(args: &Args) -> Result<()> {
 /// The end-to-end driver: operational workflow with real PGEN compute
 /// through the PJRT artifacts.
 pub fn cmd_opsrun(args: &Args) -> Result<()> {
-    let testbed = parse_testbed(args.get_or("testbed", "gcp"))?;
-    let kind = parse_system(args.get_or("system", "daos"))?;
+    let testbed = parse_testbed(opt(args, "testbed", "gcp")?)?;
+    let kind = parse_system(opt(args, "system", "daos")?)?;
     let dep = deploy(
         testbed,
         kind,
-        args.usize("servers", 2),
-        args.usize("clients", 4),
+        num(args, "servers", 2usize)?,
+        num(args, "clients", 4usize)?,
         RedundancyOpt::None,
     );
-    let grid = args.usize("grid", 64);
+    let grid = num(args, "grid", 64usize)?;
     let real_compute = !args.flag("no-compute");
     let compute: Compute = if real_compute {
         let rt = PjrtRuntime::cpu()?;
@@ -178,10 +236,10 @@ pub fn cmd_opsrun(args: &Args) -> Result<()> {
         Rc::new(NullCompute)
     };
     let cfg = OperationalConfig {
-        members: args.usize("members", 2),
-        procs_per_member: args.usize("procs-per-member", 4),
-        steps: args.u64("steps", 4) as u32,
-        fields_per_proc_step: args.u64("fields-per-step", 8) as u32,
+        members: num(args, "members", 2usize)?,
+        procs_per_member: num(args, "procs-per-member", 4usize)?,
+        steps: num(args, "steps", 4u32)?,
+        fields_per_proc_step: num(args, "fields-per-step", 8u32)?,
         grid,
         real_compute,
     };
@@ -211,13 +269,16 @@ pub fn cmd_opsrun(args: &Args) -> Result<()> {
 /// `fdbctl admin --system daos`: demonstrate the management tools —
 /// populate a demo dataset, print stats, wipe it, verify emptiness.
 pub fn cmd_admin(args: &Args) -> Result<()> {
-    let testbed = parse_testbed(args.get_or("testbed", "gcp"))?;
-    let kind = parse_system(args.get_or("system", "daos"))?;
+    let testbed = parse_testbed(opt(args, "testbed", "gcp")?)?;
+    let kind = parse_system(opt(args, "system", "daos")?)?;
+    if kind == SystemKind::Null {
+        bail!("admin needs a wipe-capable backend (lustre|daos|ceph)");
+    }
     let dep = deploy(testbed, kind, 2, 2, RedundancyOpt::None);
     let node = dep.client_nodes()[0].clone();
     // one declarative construction path for every backend
     let mut fdb = dep.fdb(&node);
-    let nfields = args.usize("nfields", 32);
+    let nfields = num(args, "nfields", 32usize)?;
     dep.sim.spawn(async move {
         use crate::fdb::schema::example_identifier;
         for i in 0..nfields {
@@ -226,7 +287,7 @@ pub fn cmd_admin(args: &Args) -> Result<()> {
                 .await
                 .unwrap();
         }
-        fdb.flush().await;
+        fdb.flush().await.expect("flush");
         fdb.close().await;
         let ds = example_identifier()
             .project(&fdb.schema.dataset.clone())
@@ -260,13 +321,14 @@ pub fn usage() -> &'static str {
        hammer    fdb-hammer                 [--system s] [--testbed t] [--servers n]\n\
                  [--clients n] [--procs n] [--steps n] [--params n] [--levels n]\n\
                  [--field-size sz] [--contention] [--check]\n\
+                 [--wrapper none|tiered|replicated[:n]|sharded[:n]]\n\
        ior       IOR-like generic benchmark [--system s] [--nops n] [--xfer sz] [--dfs]\n\
        fieldio   Field I/O PoC              [--system s] [--nfields n] [--dummy]\n\
        opsrun    end-to-end operational NWP run with PJRT PGEN compute\n\
                  [--system s] [--members n] [--steps n] [--grid 32|64] [--no-compute]\n\
        admin     dataset stats + wipe demo   [--system s] [--nfields n]\n\
      \n\
-     systems: lustre | daos | ceph      testbeds: nextgenio | gcp"
+     systems: lustre | daos | ceph | null      testbeds: nextgenio | gcp"
 }
 
 #[cfg(test)]
@@ -277,9 +339,50 @@ mod tests {
     fn parsers() {
         assert_eq!(parse_system("daos").unwrap(), SystemKind::Daos);
         assert_eq!(parse_system("posix").unwrap(), SystemKind::Lustre);
+        assert_eq!(parse_system("null").unwrap(), SystemKind::Null);
         assert!(parse_system("zfs").is_err());
         assert_eq!(parse_testbed("gcp").unwrap(), Testbed::Gcp);
         assert!(parse_testbed("azure").is_err());
+        assert_eq!(parse_wrapper("none").unwrap(), WrapperOpt::Bare);
+        assert_eq!(parse_wrapper("tiered").unwrap(), WrapperOpt::Tiered);
+        assert_eq!(
+            parse_wrapper("replicated:3").unwrap(),
+            WrapperOpt::Replicated(3)
+        );
+        assert_eq!(parse_wrapper("sharded").unwrap(), WrapperOpt::Sharded(4));
+        assert!(parse_wrapper("raid0").is_err());
+        assert!(parse_wrapper("replicated:x").is_err());
+        assert!(parse_wrapper("replicated:0").is_err());
+    }
+
+    #[test]
+    fn dangling_value_option_is_usage_error_not_panic() {
+        // regression: `fdbctl hammer --system` (no value) used to fall
+        // back silently to the default system; now it's a usage error
+        let args = Args::parse(["--system".to_string()]);
+        let err = cmd_hammer(&args).unwrap_err();
+        assert!(err.to_string().contains("--system"), "{err}");
+    }
+
+    #[test]
+    fn hammer_null_backend_smoke() {
+        // the CI smoke configuration: zero-cost store, shared catalogue
+        let args = Args::parse(
+            "--system null --servers 1 --clients 2 --procs 2 --steps 2 --params 2 --levels 2 --field-size 65536"
+                .split_whitespace()
+                .map(String::from),
+        );
+        cmd_hammer(&args).unwrap();
+    }
+
+    #[test]
+    fn hammer_wrapped_backend_smoke() {
+        let args = Args::parse(
+            "--system lustre --wrapper replicated:2 --servers 2 --clients 2 --procs 1 --steps 2 --params 2 --levels 1 --field-size 65536 --check"
+                .split_whitespace()
+                .map(String::from),
+        );
+        cmd_hammer(&args).unwrap();
     }
 
     #[test]

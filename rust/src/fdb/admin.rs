@@ -58,7 +58,7 @@ mod tests {
                     let id = example_identifier().with("step", step.to_string());
                     fdb.archive(&id, vec![7u8; 2048]).await.unwrap();
                 }
-                fdb.flush().await;
+                fdb.flush().await.expect("flush");
                 fdb.close().await;
                 let ds = example_identifier()
                     .project(&fdb.schema.dataset.clone())

@@ -29,6 +29,28 @@ pub fn ready<'a, T: 'a>(value: T) -> LocalBoxFuture<'a, T> {
     Box::pin(std::future::ready(value))
 }
 
+/// Drive a boxed future to completion on a no-op waker — shared test
+/// helper for backends whose futures never actually suspend (the Null
+/// pair and wrappers over it).
+#[cfg(test)]
+pub(crate) fn block_on_ready<T>(mut fut: LocalBoxFuture<'_, T>) -> T {
+    use std::task::{Context, Poll, RawWaker, RawWakerVTable, Waker};
+    fn clone(_: *const ()) -> RawWaker {
+        noop_raw()
+    }
+    fn noop(_: *const ()) {}
+    static VTABLE: RawWakerVTable = RawWakerVTable::new(clone, noop, noop, noop);
+    fn noop_raw() -> RawWaker {
+        RawWaker::new(std::ptr::null(), &VTABLE)
+    }
+    let waker = unsafe { Waker::from_raw(noop_raw()) };
+    let mut cx = Context::from_waker(&waker);
+    match fut.as_mut().poll(&mut cx) {
+        Poll::Ready(v) => v,
+        Poll::Pending => panic!("never-suspending backend future suspended"),
+    }
+}
+
 /// The data plane: where field bytes live (thesis §2.7.1 "Store").
 pub trait Store {
     /// Short backend tag used in errors and diagnostics.
@@ -37,18 +59,21 @@ pub trait Store {
     /// Write one field; returns its location descriptor. `id` is the
     /// full identifier (backends with identifier-derived placement, like
     /// hash-OID DAOS, use it; others key placement off `ds`/`colloc`).
+    /// Backend failures (mkdir on a non-directory, a stale multipart
+    /// upload, ...) surface as [`FdbError::Backend`], never a panic.
     fn archive<'a>(
         &'a mut self,
         ds: &'a Key,
         colloc: &'a Key,
         id: &'a Key,
         data: Bytes,
-    ) -> LocalBoxFuture<'a, FieldLocation>;
+    ) -> LocalBoxFuture<'a, Result<FieldLocation, FdbError>>;
 
     /// Make prior archives durable (no-op for immediately-durable
-    /// backends).
-    fn flush<'a>(&'a mut self) -> LocalBoxFuture<'a, ()> {
-        ready(())
+    /// backends). Fallible: a tiered store spills its absorbed writes to
+    /// the backing tier here, and that spill can fail like any archive.
+    fn flush<'a>(&'a mut self) -> LocalBoxFuture<'a, Result<(), FdbError>> {
+        ready(Ok(()))
     }
 
     /// Read the bytes a (possibly merged) handle refers to. Handles from
@@ -179,8 +204,8 @@ impl Store for NullStore {
         _colloc: &'a Key,
         _id: &'a Key,
         data: Bytes,
-    ) -> LocalBoxFuture<'a, FieldLocation> {
-        ready(FieldLocation::Null { length: data.len() })
+    ) -> LocalBoxFuture<'a, Result<FieldLocation, FdbError>> {
+        ready(Ok(FieldLocation::Null { length: data.len() }))
     }
 
     fn read<'a>(
@@ -218,6 +243,40 @@ impl NullCatalogue {
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
+
+    // Synchronous core ops, shared by the `Catalogue` impls of both
+    // `NullCatalogue` and `SharedNullCatalogue` (the latter must not
+    // hold its interior borrow across an await).
+
+    fn insert(&mut self, id: &Key, loc: &FieldLocation) {
+        self.map.insert(id.clone(), loc.clone());
+    }
+
+    fn lookup(&self, id: &Key) -> Option<FieldLocation> {
+        self.map.get(id).cloned()
+    }
+
+    fn axis_values(&self, ds: &Key, colloc: &Key, dim: &str) -> Vec<String> {
+        let vals: std::collections::BTreeSet<String> = self
+            .map
+            .keys()
+            .filter(|k| ds.matches(k) && colloc.matches(k))
+            .filter_map(|k| k.get(dim).map(String::from))
+            .collect();
+        vals.into_iter().collect()
+    }
+
+    fn entries(&self, ds: &Key, request: &Request) -> Vec<(Key, FieldLocation)> {
+        self.map
+            .iter()
+            .filter(|(k, _)| ds.matches(k) && request.matches(k))
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
+    }
+
+    fn remove_dataset(&mut self, ds: &Key) {
+        self.map.retain(|k, _| !ds.matches(k));
+    }
 }
 
 impl Catalogue for NullCatalogue {
@@ -233,7 +292,7 @@ impl Catalogue for NullCatalogue {
         id: &'a Key,
         loc: &'a FieldLocation,
     ) -> LocalBoxFuture<'a, ()> {
-        self.map.insert(id.clone(), loc.clone());
+        self.insert(id, loc);
         ready(())
     }
 
@@ -244,7 +303,7 @@ impl Catalogue for NullCatalogue {
         _elem: &'a Key,
         id: &'a Key,
     ) -> LocalBoxFuture<'a, Option<FieldLocation>> {
-        ready(self.map.get(id).cloned())
+        ready(self.lookup(id))
     }
 
     fn axis<'a>(
@@ -253,13 +312,7 @@ impl Catalogue for NullCatalogue {
         colloc: &'a Key,
         dim: &'a str,
     ) -> LocalBoxFuture<'a, Vec<String>> {
-        let vals: std::collections::BTreeSet<String> = self
-            .map
-            .keys()
-            .filter(|k| ds.matches(k) && colloc.matches(k))
-            .filter_map(|k| k.get(dim).map(String::from))
-            .collect();
-        ready(vals.into_iter().collect())
+        ready(self.axis_values(ds, colloc, dim))
     }
 
     fn list<'a>(
@@ -267,17 +320,86 @@ impl Catalogue for NullCatalogue {
         ds: &'a Key,
         request: &'a Request,
     ) -> LocalBoxFuture<'a, Vec<(Key, FieldLocation)>> {
-        ready(
-            self.map
-                .iter()
-                .filter(|(k, _)| ds.matches(k) && request.matches(k))
-                .map(|(k, v)| (k.clone(), v.clone()))
-                .collect(),
-        )
+        ready(self.entries(ds, request))
     }
 
     fn deregister_dataset<'a>(&'a mut self, ds: &'a Key) -> LocalBoxFuture<'a, ()> {
-        self.map.retain(|k, _| !ds.matches(k));
+        self.remove_dataset(ds);
+        ready(())
+    }
+}
+
+/// A [`NullCatalogue`] shared by every FDB instance cloned from the same
+/// handle — cross-process index visibility for Null deployments (the
+/// bare catalogue is process-local, so a reader process would see an
+/// empty index). Safe to share on the single-threaded DES executor: all
+/// ops delegate synchronously to the inner map, so the interior borrow
+/// never spans an await point.
+#[derive(Clone, Default)]
+pub struct SharedNullCatalogue {
+    inner: std::rc::Rc<std::cell::RefCell<NullCatalogue>>,
+}
+
+impl SharedNullCatalogue {
+    pub fn new() -> SharedNullCatalogue {
+        SharedNullCatalogue::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.borrow().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.borrow().is_empty()
+    }
+}
+
+impl Catalogue for SharedNullCatalogue {
+    fn name(&self) -> &'static str {
+        "null"
+    }
+
+    fn archive<'a>(
+        &'a mut self,
+        _ds: &'a Key,
+        _colloc: &'a Key,
+        _elem: &'a Key,
+        id: &'a Key,
+        loc: &'a FieldLocation,
+    ) -> LocalBoxFuture<'a, ()> {
+        self.inner.borrow_mut().insert(id, loc);
+        ready(())
+    }
+
+    fn retrieve<'a>(
+        &'a mut self,
+        _ds: &'a Key,
+        _colloc: &'a Key,
+        _elem: &'a Key,
+        id: &'a Key,
+    ) -> LocalBoxFuture<'a, Option<FieldLocation>> {
+        ready(self.inner.borrow().lookup(id))
+    }
+
+    fn axis<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        colloc: &'a Key,
+        dim: &'a str,
+    ) -> LocalBoxFuture<'a, Vec<String>> {
+        ready(self.inner.borrow().axis_values(ds, colloc, dim))
+    }
+
+    fn list<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        request: &'a Request,
+    ) -> LocalBoxFuture<'a, Vec<(Key, FieldLocation)>> {
+        ready(self.inner.borrow().entries(ds, request))
+    }
+
+    fn deregister_dataset<'a>(&'a mut self, ds: &'a Key) -> LocalBoxFuture<'a, ()> {
+        self.inner.borrow_mut().remove_dataset(ds);
         ready(())
     }
 }
@@ -286,28 +408,10 @@ impl Catalogue for NullCatalogue {
 mod tests {
     use super::*;
 
+    use super::block_on_ready as block_on;
+
     fn loc(n: u64) -> FieldLocation {
         FieldLocation::Null { length: n }
-    }
-
-    // Drive a boxed future to completion on a no-op waker (the default
-    // trait bodies and Null backends never actually suspend).
-    fn block_on<T>(mut fut: LocalBoxFuture<'_, T>) -> T {
-        use std::task::{Context, Poll, RawWaker, RawWakerVTable, Waker};
-        fn clone(_: *const ()) -> RawWaker {
-            noop_raw()
-        }
-        fn noop(_: *const ()) {}
-        static VTABLE: RawWakerVTable = RawWakerVTable::new(clone, noop, noop, noop);
-        fn noop_raw() -> RawWaker {
-            RawWaker::new(std::ptr::null(), &VTABLE)
-        }
-        let waker = unsafe { Waker::from_raw(noop_raw()) };
-        let mut cx = Context::from_waker(&waker);
-        match fut.as_mut().poll(&mut cx) {
-            Poll::Ready(v) => v,
-            Poll::Pending => panic!("null backend future suspended"),
-        }
     }
 
     #[test]
@@ -368,10 +472,26 @@ mod tests {
         let mut store = NullStore;
         let ds = Key::new();
         let id = Key::of(&[("step", "1")]);
-        let l = block_on(store.archive(&ds, &ds, &id, Bytes::virt(64, 1)));
+        let l = block_on(store.archive(&ds, &ds, &id, Bytes::virt(64, 1))).unwrap();
         assert_eq!(l.length(), 64);
         let h = DataHandle::from_location(&l);
         let bytes = block_on(store.read(&h)).unwrap();
         assert_eq!(bytes.len(), 64);
+    }
+
+    #[test]
+    fn shared_null_catalogue_visible_across_clones() {
+        // two "processes" (clones of the shared handle) see one index
+        let shared = SharedNullCatalogue::new();
+        let mut writer_view = shared.clone();
+        let mut reader_view = shared.clone();
+        let id = Key::of(&[("class", "od"), ("step", "1")]);
+        let ds = Key::new();
+        block_on(writer_view.archive(&ds, &ds, &id, &id, &loc(3)));
+        assert_eq!(shared.len(), 1);
+        let got = block_on(reader_view.retrieve(&ds, &ds, &id, &id));
+        assert_eq!(got, Some(loc(3)));
+        block_on(reader_view.deregister_dataset(&ds));
+        assert!(shared.is_empty());
     }
 }

@@ -4,10 +4,15 @@
 //! `setup::{posix,daos,rados,s3}_fdb` constructors so the coordinator,
 //! benches, workflow driver, examples, and tests all construct FDBs the
 //! same way.
+//!
+//! Configs compose recursively through the wrapper variants: `Tiered`,
+//! `Replicated`, and `Sharded` wrap *other* configs, so a tiered store
+//! over a replicated RADOS store with a sharded catalogue is a single
+//! config tree, validated and built as a whole.
 
 use std::rc::Rc;
 
-use super::backend::{Catalogue, NullCatalogue, NullStore, Store};
+use super::backend::{Catalogue, NullCatalogue, NullStore, SharedNullCatalogue, Store};
 use super::daos::catalogue::DaosCatalogue;
 use super::daos::store::DaosStore;
 use super::fdb::Fdb;
@@ -17,6 +22,7 @@ use super::rados::catalogue::RadosCatalogue;
 use super::rados::store::{RadosStore, RadosStoreConfig};
 use super::s3::store::S3Store;
 use super::schema::Schema;
+use super::wrappers::{ReplicatedStore, ShardedCatalogue, TieredStore};
 use super::FdbError;
 use crate::ceph::{Ceph, CephPool, Redundancy};
 use crate::daos::Daos;
@@ -27,6 +33,9 @@ use crate::sim::exec::Sim;
 use crate::sim::trace::Trace;
 
 /// Which backend pair an FDB instance runs over, plus its knobs.
+/// Wrapper variants (`Tiered`, `Replicated`, `Sharded`) nest other
+/// configs and compose recursively.
+#[derive(Clone)]
 pub enum BackendConfig {
     /// POSIX Store + Catalogue on a Lustre mount (thesis §2.7.2).
     Posix { fs: Rc<Lustre>, root: String },
@@ -56,6 +65,31 @@ pub enum BackendConfig {
     /// Zero-cost sink + in-memory catalogue — client-overhead
     /// experiments (Fig 4.30) and API tests.
     Null,
+    /// Zero-cost sink + a [`SharedNullCatalogue`]: every FDB built from
+    /// a clone of this config shares one index, giving Null deployments
+    /// cross-process visibility (fdb-hammer readers find the writers'
+    /// fields).
+    SharedNull(SharedNullCatalogue),
+    /// [`TieredStore`]: `front` absorbs archives, write-through to
+    /// `back` on flush. The Catalogue comes from the durable `back`
+    /// tier.
+    Tiered {
+        front: Box<BackendConfig>,
+        back: Box<BackendConfig>,
+    },
+    /// [`ReplicatedStore`]: `copies` independent instances of `inner`'s
+    /// Store; the Catalogue comes from a single `inner` instance.
+    Replicated {
+        inner: Box<BackendConfig>,
+        copies: usize,
+    },
+    /// [`ShardedCatalogue`]: `shards` independent instances of `inner`'s
+    /// Catalogue, hash-partitioned on the collocation key; the Store
+    /// comes from a single `inner` instance.
+    Sharded {
+        inner: Box<BackendConfig>,
+        shards: usize,
+    },
 }
 
 impl BackendConfig {
@@ -66,14 +100,38 @@ impl BackendConfig {
             BackendConfig::Daos { .. } => "daos",
             BackendConfig::Rados { .. } => "rados",
             BackendConfig::S3 { .. } => "s3",
-            BackendConfig::Null => "null",
+            BackendConfig::Null | BackendConfig::SharedNull(_) => "null",
+            BackendConfig::Tiered { .. } => "tiered",
+            BackendConfig::Replicated { .. } => "replicated",
+            BackendConfig::Sharded { .. } => "sharded",
         }
     }
 
-    /// The schema variant a backend pair defaults to.
+    /// Recursive human-readable shape, e.g.
+    /// `sharded4(tiered(posix,replicated2(rados)))`.
+    pub fn describe(&self) -> String {
+        match self {
+            BackendConfig::Tiered { front, back } => {
+                format!("tiered({},{})", front.describe(), back.describe())
+            }
+            BackendConfig::Replicated { inner, copies } => {
+                format!("replicated{}({})", copies, inner.describe())
+            }
+            BackendConfig::Sharded { inner, shards } => {
+                format!("sharded{}({})", shards, inner.describe())
+            }
+            other => other.label().to_string(),
+        }
+    }
+
+    /// The schema variant a backend pair defaults to (wrappers defer to
+    /// the config their Catalogue comes from).
     fn default_schema(&self) -> Schema {
         match self {
             BackendConfig::Posix { .. } => Schema::default_posix(),
+            BackendConfig::Tiered { back, .. } => back.default_schema(),
+            BackendConfig::Replicated { inner, .. }
+            | BackendConfig::Sharded { inner, .. } => inner.default_schema(),
             _ => Schema::daos_variant(),
         }
     }
@@ -110,9 +168,140 @@ impl BackendConfig {
                     return invalid("s3 client tag must be non-empty");
                 }
             }
-            BackendConfig::Null => {}
+            BackendConfig::Null | BackendConfig::SharedNull(_) => {}
+            BackendConfig::Tiered { front, back } => {
+                front.validate(node)?;
+                back.validate(node)?;
+            }
+            BackendConfig::Replicated { inner, copies } => {
+                if *copies == 0 {
+                    return invalid("replicated store needs copies >= 1");
+                }
+                inner.validate(node)?;
+            }
+            BackendConfig::Sharded { inner, shards } => {
+                if *shards == 0 {
+                    return invalid("sharded catalogue needs shards >= 1");
+                }
+                inner.validate(node)?;
+            }
         }
         Ok(())
+    }
+
+    /// Build this config's Store side (recursing through wrappers).
+    /// Callers validate first; a missing node on a node-requiring
+    /// backend still surfaces as `InvalidConfig` rather than a panic.
+    fn build_store(&self, node: Option<&Rc<Node>>) -> Result<Box<dyn Store>, FdbError> {
+        let need_node = || {
+            FdbError::InvalidConfig(format!("{} backend needs a client node", self.label()))
+        };
+        Ok(match self {
+            BackendConfig::Posix { fs, root } => {
+                let node = node.ok_or_else(need_node)?;
+                Box::new(PosixStore::new(fs.client(node), root))
+            }
+            BackendConfig::Daos {
+                daos,
+                pool,
+                hash_oids,
+            } => {
+                let node = node.ok_or_else(need_node)?;
+                let mut store = DaosStore::new(daos.client(node), pool);
+                store.hash_oids = *hash_oids;
+                Box::new(store)
+            }
+            BackendConfig::Rados {
+                ceph,
+                pool,
+                store: store_cfg,
+            } => {
+                let node = node.ok_or_else(need_node)?;
+                Box::new(
+                    RadosStore::new(ceph, ceph.client(node), pool)
+                        .with_config(store_cfg.clone()),
+                )
+            }
+            BackendConfig::S3 {
+                s3,
+                client_tag,
+                multipart,
+            } => {
+                let mut store = S3Store::new(s3, client_tag);
+                store.multipart = *multipart;
+                Box::new(store)
+            }
+            BackendConfig::Null | BackendConfig::SharedNull(_) => Box::new(NullStore),
+            BackendConfig::Tiered { front, back } => Box::new(TieredStore::new(
+                front.build_store(node)?,
+                back.build_store(node)?,
+            )),
+            BackendConfig::Replicated { inner, copies } => {
+                let mut replicas = Vec::with_capacity(*copies);
+                for _ in 0..*copies {
+                    replicas.push(inner.build_store(node)?);
+                }
+                Box::new(ReplicatedStore::new(replicas))
+            }
+            BackendConfig::Sharded { inner, .. } => inner.build_store(node)?,
+        })
+    }
+
+    /// Build this config's Catalogue side (recursing through wrappers).
+    fn build_catalogue(
+        &self,
+        node: Option<&Rc<Node>>,
+        schema: &Schema,
+    ) -> Result<Box<dyn Catalogue>, FdbError> {
+        let need_node = || {
+            FdbError::InvalidConfig(format!("{} backend needs a client node", self.label()))
+        };
+        Ok(match self {
+            BackendConfig::Posix { fs, root } => {
+                let node = node.ok_or_else(need_node)?;
+                Box::new(PosixCatalogue::new(fs.client(node), root, schema.clone()))
+            }
+            BackendConfig::Daos { daos, pool, .. } => {
+                let node = node.ok_or_else(need_node)?;
+                // root container label fixed by the administrator
+                // (thesis §3.1.2)
+                Box::new(DaosCatalogue::new(
+                    daos.client(node),
+                    pool,
+                    "fdb_root",
+                    schema.clone(),
+                ))
+            }
+            BackendConfig::Rados { ceph, pool, .. } => {
+                let node = node.ok_or_else(need_node)?;
+                // Omaps cannot live in erasure-coded pools (librados
+                // restriction, thesis §2.4) — for an EC data pool the
+                // Catalogue uses the replicated metadata pool, the
+                // standard Ceph deployment pattern.
+                let meta_pool = if matches!(pool.redundancy, Redundancy::Erasure(..)) {
+                    ceph.meta_pool()
+                } else {
+                    pool.clone()
+                };
+                Box::new(RadosCatalogue::new(
+                    ceph.client(node),
+                    &meta_pool,
+                    schema.clone(),
+                ))
+            }
+            BackendConfig::S3 { .. } | BackendConfig::Null => Box::new(NullCatalogue::new()),
+            BackendConfig::SharedNull(cat) => Box::new(cat.clone()),
+            // the durable back tier owns the index
+            BackendConfig::Tiered { back, .. } => back.build_catalogue(node, schema)?,
+            BackendConfig::Replicated { inner, .. } => inner.build_catalogue(node, schema)?,
+            BackendConfig::Sharded { inner, shards } => {
+                let mut parts = Vec::with_capacity(*shards);
+                for _ in 0..*shards {
+                    parts.push(inner.build_catalogue(node, schema)?);
+                }
+                Box::new(ShardedCatalogue::new(parts))
+            }
+        })
     }
 }
 
@@ -160,7 +349,8 @@ impl FdbBuilder {
         self
     }
 
-    /// Validate the config and wire the matching Store/Catalogue pair.
+    /// Validate the config tree and wire the matching Store/Catalogue
+    /// pair, recursing through wrapper configs.
     pub fn build(self) -> Result<Fdb, FdbError> {
         let config = self
             .config
@@ -169,64 +359,8 @@ impl FdbBuilder {
         let schema = self
             .schema
             .unwrap_or_else(|| config.default_schema());
-        let (store, catalogue): (Box<dyn Store>, Box<dyn Catalogue>) = match config {
-            BackendConfig::Posix { fs, root } => {
-                let node = self.node.as_ref().unwrap();
-                let store = PosixStore::new(fs.client(node), &root);
-                let catalogue =
-                    PosixCatalogue::new(fs.client(node), &root, schema.clone());
-                (Box::new(store), Box::new(catalogue))
-            }
-            BackendConfig::Daos {
-                daos,
-                pool,
-                hash_oids,
-            } => {
-                let node = self.node.as_ref().unwrap();
-                let mut store = DaosStore::new(daos.client(node), &pool);
-                store.hash_oids = hash_oids;
-                // root container label fixed by the administrator
-                // (thesis §3.1.2)
-                let catalogue = DaosCatalogue::new(
-                    daos.client(node),
-                    &pool,
-                    "fdb_root",
-                    schema.clone(),
-                );
-                (Box::new(store), Box::new(catalogue))
-            }
-            BackendConfig::Rados {
-                ceph,
-                pool,
-                store: store_cfg,
-            } => {
-                let node = self.node.as_ref().unwrap();
-                let store = RadosStore::new(&ceph, ceph.client(node), &pool)
-                    .with_config(store_cfg);
-                // Omaps cannot live in erasure-coded pools (librados
-                // restriction, thesis §2.4) — for an EC data pool the
-                // Catalogue uses the replicated metadata pool, the
-                // standard Ceph deployment pattern.
-                let meta_pool = if matches!(pool.redundancy, Redundancy::Erasure(..)) {
-                    ceph.meta_pool()
-                } else {
-                    pool.clone()
-                };
-                let catalogue =
-                    RadosCatalogue::new(ceph.client(node), &meta_pool, schema.clone());
-                (Box::new(store), Box::new(catalogue))
-            }
-            BackendConfig::S3 {
-                s3,
-                client_tag,
-                multipart,
-            } => {
-                let mut store = S3Store::new(&s3, &client_tag);
-                store.multipart = multipart;
-                (Box::new(store), Box::new(NullCatalogue::new()))
-            }
-            BackendConfig::Null => (Box::new(NullStore), Box::new(NullCatalogue::new())),
-        };
+        let store = config.build_store(self.node.as_ref())?;
+        let catalogue = config.build_catalogue(self.node.as_ref(), &schema)?;
         let mut fdb = Fdb::new(&self.sim, schema, store, catalogue);
         if let Some(trace) = self.trace {
             fdb = fdb.with_trace(trace);

@@ -176,18 +176,15 @@ impl crate::fdb::backend::Store for DaosStore {
         colloc: &'a Key,
         id: &'a Key,
         data: Bytes,
-    ) -> crate::fdb::backend::LocalBoxFuture<'a, FieldLocation> {
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, Result<FieldLocation, crate::fdb::FdbError>>
+    {
         Box::pin(async move {
-            if self.hash_oids {
+            Ok(if self.hash_oids {
                 DaosStore::archive_hashed(self, ds, id, data).await
             } else {
                 DaosStore::archive(self, ds, colloc, data).await
-            }
+            })
         })
-    }
-
-    fn flush<'a>(&'a mut self) -> crate::fdb::backend::LocalBoxFuture<'a, ()> {
-        Box::pin(DaosStore::flush(self))
     }
 
     fn read<'a>(

@@ -85,6 +85,7 @@ impl Fdb {
         let t0 = self.sim.now();
         let loc = self.store.archive(&ds, &colloc, id, data).await;
         self.account(OpClass::DataWrite, t0);
+        let loc = loc?;
         let t1 = self.sim.now();
         self.catalogue.archive(&ds, &colloc, &elem, id, &loc).await;
         self.account(OpClass::IndexWrite, t1);
@@ -93,9 +94,10 @@ impl Fdb {
 
     /// Batched archive: all Store writes first, then all Catalogue
     /// inserts — the small-object batching pattern (arXiv:2311.18714).
-    /// Identifiers are validated up front; nothing is written on error.
-    /// Equivalent to a loop of [`Fdb::archive`] followed by the same
-    /// `flush()` (visibility semantics per backend are unchanged).
+    /// Identifiers are validated up front; nothing is written on a
+    /// validation error. A Store error mid-batch stops before the
+    /// Catalogue pass: the already-written fields stay un-indexed and
+    /// therefore invisible, like a crashed writer's unflushed step.
     pub async fn archive_many(
         &mut self,
         items: Vec<(Key, Bytes)>,
@@ -106,11 +108,20 @@ impl Fdb {
         }
         let t0 = self.sim.now();
         let mut indexed = Vec::with_capacity(items.len());
+        let mut failed = None;
         for ((id, data), (ds, colloc, elem)) in items.into_iter().zip(split) {
-            let loc = self.store.archive(&ds, &colloc, &id, data).await;
-            indexed.push((id, ds, colloc, elem, loc));
+            match self.store.archive(&ds, &colloc, &id, data).await {
+                Ok(loc) => indexed.push((id, ds, colloc, elem, loc)),
+                Err(e) => {
+                    failed = Some(e);
+                    break;
+                }
+            }
         }
         self.account(OpClass::DataWrite, t0);
+        if let Some(e) = failed {
+            return Err(e);
+        }
         let t1 = self.sim.now();
         for (id, ds, colloc, elem, loc) in &indexed {
             self.catalogue.archive(ds, colloc, elem, id, loc).await;
@@ -119,12 +130,18 @@ impl Fdb {
         Ok(())
     }
 
-    /// FDB flush(): Store flush then Catalogue flush (§2.7.1).
-    pub async fn flush(&mut self) {
+    /// FDB flush(): Store flush then Catalogue flush (§2.7.1). Fallible
+    /// since tiered stores write absorbed fields through to the backing
+    /// tier here; on a Store error the Catalogue flush is skipped, so an
+    /// index for non-durable data is never published.
+    pub async fn flush(&mut self) -> Result<(), super::FdbError> {
         let t0 = self.sim.now();
-        self.store.flush().await;
-        self.catalogue.flush().await;
+        let flushed = self.store.flush().await;
+        if flushed.is_ok() {
+            self.catalogue.flush().await;
+        }
         self.account(OpClass::Flush, t0);
+        flushed
     }
 
     /// Catalogue close() at end of producer lifetime (§2.7.2).

@@ -6,14 +6,20 @@
 //! implemented by each backend pair — POSIX/Lustre, DAOS, Ceph/RADOS,
 //! S3 (+ the in-memory Null pair). [`Fdb`] holds one boxed trait object
 //! of each and dispatches every operation virtually, with trace and
-//! distributed-lock accounting in one shared wrapper; a new backend
-//! (tiered cache, sharded catalogue, replicated store) is a single new
-//! trait impl.
+//! distributed-lock accounting in one shared wrapper. The [`wrappers`]
+//! module exploits that: [`wrappers::TieredStore`],
+//! [`wrappers::ReplicatedStore`] and [`wrappers::ShardedCatalogue`]
+//! wrap *other* backends and compose recursively through
+//! [`BackendConfig`] (a tiered store over a replicated store with a
+//! sharded catalogue is one config tree).
 //!
 //! Construction is declarative: a [`BackendConfig`] names the pair and
-//! its knobs (`Daos { pool, hash_oids }`, `Rados { store, .. }`, ...)
-//! and [`FdbBuilder`] validates it and wires the matching pair. On top
-//! of the one-field calls, [`Fdb::archive_many`] and
+//! its knobs (`Daos { pool, hash_oids }`, `Rados { store, .. }`,
+//! `Tiered { front, back }`, ...) and [`FdbBuilder`] validates it and
+//! wires the matching pair. Backend failures are typed
+//! ([`FdbError::Backend`], [`FdbError::AllReplicasFailed`]) — archive/
+//! flush paths return `Result` instead of panicking inside the
+//! simulator. On top of the one-field calls, [`Fdb::archive_many`] and
 //! [`Fdb::retrieve_many`] provide the batched paths — catalogue lookups
 //! pipelined with store reads — that the DAOS interface papers
 //! (arXiv:2311.18714, arXiv:2409.18682) identify as the key to scalable
@@ -51,7 +57,9 @@ pub mod s3 {
     pub mod store;
 }
 
-pub use backend::{Catalogue, NullCatalogue, NullStore, Store};
+pub mod wrappers;
+
+pub use backend::{Catalogue, NullCatalogue, NullStore, SharedNullCatalogue, Store};
 pub use builder::{BackendConfig, FdbBuilder};
 pub use datahandle::DataHandle;
 pub use fdb::Fdb;
@@ -72,6 +80,19 @@ pub enum FdbError {
     },
     /// A [`BackendConfig`] failed [`FdbBuilder`] validation.
     InvalidConfig(String),
+    /// A backend operation failed (filesystem error, stale multipart
+    /// upload state, ...). Replaces the former backend-internal panics.
+    Backend {
+        backend: &'static str,
+        detail: String,
+    },
+    /// Every replica of a [`wrappers::ReplicatedStore`] failed the
+    /// operation; `last` is the final replica's underlying error.
+    AllReplicasFailed {
+        op: &'static str,
+        copies: usize,
+        last: Box<FdbError>,
+    },
 }
 
 impl From<schema::SchemaError> for FdbError {
@@ -92,6 +113,13 @@ impl std::fmt::Display for FdbError {
                 "DataHandle backend mismatch: `{handle}` handle read through the `{store}` store"
             ),
             FdbError::InvalidConfig(msg) => write!(f, "invalid backend config: {msg}"),
+            FdbError::Backend { backend, detail } => {
+                write!(f, "{backend} backend error: {detail}")
+            }
+            FdbError::AllReplicasFailed { op, copies, last } => write!(
+                f,
+                "all {copies} replicas failed {op}; last error: {last}"
+            ),
         }
     }
 }
@@ -131,7 +159,7 @@ mod tests {
         for id in &ids {
             w.archive(id, field_bytes(id)).await.unwrap();
         }
-        w.flush().await;
+        w.flush().await.expect("flush");
         w.close().await;
         // reader sees every field with exact bytes
         for id in &ids {
@@ -260,7 +288,7 @@ mod tests {
             for id in &ids {
                 w.archive(id, field_bytes(id)).await.unwrap();
             }
-            w.flush().await;
+            w.flush().await.expect("flush");
             for id in &ids {
                 let h = w.retrieve(id).await.unwrap().unwrap();
                 assert_eq!(w.read(&h).await.unwrap().to_vec(), field_bytes(id));
@@ -294,7 +322,7 @@ mod tests {
                 .build()
                 .unwrap();
             assert!(r1.retrieve(&id).await.unwrap().is_none());
-            w.flush().await;
+            w.flush().await.expect("flush");
             // fresh reader AFTER flush: visible
             let mut r2 = FdbBuilder::new(&sim2)
                 .node(&rnode)
@@ -422,7 +450,7 @@ mod tests {
                 w.archive(&id, vec![step as u8; 128]).await.unwrap();
                 ids.push(id);
             }
-            w.flush().await;
+            w.flush().await.expect("flush");
             w.close().await;
             let mut r = FdbBuilder::new(&sim2)
                 .node(&rnode)

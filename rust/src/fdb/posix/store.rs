@@ -6,8 +6,18 @@ use std::collections::{HashMap, HashSet};
 
 use crate::fdb::key::Key;
 use crate::fdb::location::FieldLocation;
+use crate::fdb::FdbError;
 use crate::lustre::{Fd, FsError, LustreClient, StripeSpec};
 use crate::util::content::Bytes;
+
+/// Typed backend error for a failed filesystem operation (replaces the
+/// former `panic!`/`expect` sites on the archive path).
+fn fs_err(op: &str, path: &str, e: FsError) -> FdbError {
+    FdbError::Backend {
+        backend: "posix",
+        detail: format!("{op} {path}: {e}"),
+    }
+}
 
 pub struct PosixStore {
     pub(crate) client: LustreClient,
@@ -33,23 +43,31 @@ impl PosixStore {
         format!("{}/{}", self.root, ds.canonical())
     }
 
-    /// Create-if-missing of the dataset directory (atomic mkdir).
-    pub(crate) async fn ensure_dir(&mut self, dir: &str) {
+    /// Create-if-missing of the dataset directory (atomic mkdir). A
+    /// real failure (e.g. a path component that is a regular file)
+    /// surfaces as [`FdbError::Backend`] — it used to panic.
+    pub(crate) async fn ensure_dir(&mut self, dir: &str) -> Result<(), FdbError> {
         if self.known_dirs.contains(dir) {
-            return;
+            return Ok(());
         }
         match self.client.mkdir(dir).await {
             Ok(()) | Err(FsError::AlreadyExists) => {}
-            Err(e) => panic!("mkdir {dir}: {e}"),
+            Err(e) => return Err(fs_err("mkdir", dir, e)),
         }
         self.known_dirs.insert(dir.to_string());
+        Ok(())
     }
 
     /// Store archive(): buffer the object into the per-process data file;
     /// returns a location descriptor immediately (data not yet durable).
-    pub async fn archive(&mut self, ds: &Key, colloc: &Key, data: Bytes) -> FieldLocation {
+    pub async fn archive(
+        &mut self,
+        ds: &Key,
+        colloc: &Key,
+        data: Bytes,
+    ) -> Result<FieldLocation, FdbError> {
         let dir = self.dataset_dir(ds);
-        self.ensure_dir(&dir).await;
+        self.ensure_dir(&dir).await?;
         let key = (ds.canonical(), colloc.canonical());
         if !self.data_files.contains_key(&key) {
             // unique per process: collocation + client id + counter
@@ -65,25 +83,33 @@ impl PosixStore {
                 .client
                 .create(&path, StripeSpec::fdb_data())
                 .await
-                .expect("data file must be unique per process");
+                .map_err(|e| fs_err("create", &path, e))?;
             self.data_files.insert(key.clone(), fd);
         }
         let fd = self.data_files.get(&key).unwrap().clone();
         let length = data.len();
-        let offset = self.client.write_data(&fd, data).await.expect("write");
-        FieldLocation::PosixFile {
+        let offset = self
+            .client
+            .write_data(&fd, data)
+            .await
+            .map_err(|e| fs_err("write", fd.path(), e))?;
+        Ok(FieldLocation::PosixFile {
             path: fd.path().to_string(),
             offset,
             length,
-        }
+        })
     }
 
     /// Store flush(): fdatasync every data file this process wrote.
-    pub async fn flush(&mut self) {
+    pub async fn flush(&mut self) -> Result<(), FdbError> {
         let fds: Vec<Fd> = self.data_files.values().cloned().collect();
         for fd in fds {
-            self.client.fdatasync(&fd).await.expect("fdatasync");
+            self.client
+                .fdatasync(&fd)
+                .await
+                .map_err(|e| fs_err("fdatasync", fd.path(), e))?;
         }
+        Ok(())
     }
 
     /// Read the byte ranges of a (merged) POSIX handle.
@@ -133,11 +159,14 @@ impl crate::fdb::backend::Store for PosixStore {
         colloc: &'a Key,
         _id: &'a Key,
         data: Bytes,
-    ) -> crate::fdb::backend::LocalBoxFuture<'a, FieldLocation> {
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, Result<FieldLocation, crate::fdb::FdbError>>
+    {
         Box::pin(PosixStore::archive(self, ds, colloc, data))
     }
 
-    fn flush<'a>(&'a mut self) -> crate::fdb::backend::LocalBoxFuture<'a, ()> {
+    fn flush<'a>(
+        &'a mut self,
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, Result<(), crate::fdb::FdbError>> {
         Box::pin(PosixStore::flush(self))
     }
 

@@ -282,12 +282,18 @@ impl crate::fdb::backend::Store for RadosStore {
         colloc: &'a Key,
         _id: &'a Key,
         data: Bytes,
-    ) -> crate::fdb::backend::LocalBoxFuture<'a, FieldLocation> {
-        Box::pin(RadosStore::archive(self, ds, colloc, data))
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, Result<FieldLocation, crate::fdb::FdbError>>
+    {
+        Box::pin(async move { Ok(RadosStore::archive(self, ds, colloc, data).await) })
     }
 
-    fn flush<'a>(&'a mut self) -> crate::fdb::backend::LocalBoxFuture<'a, ()> {
-        Box::pin(RadosStore::flush(self))
+    fn flush<'a>(
+        &'a mut self,
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, Result<(), crate::fdb::FdbError>> {
+        Box::pin(async move {
+            RadosStore::flush(self).await;
+            Ok(())
+        })
     }
 
     fn read<'a>(

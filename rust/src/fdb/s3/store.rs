@@ -9,8 +9,18 @@ use std::rc::Rc;
 
 use crate::fdb::key::Key;
 use crate::fdb::location::FieldLocation;
+use crate::fdb::FdbError;
 use crate::s3::{MemS3, S3Api};
 use crate::util::content::Bytes;
+
+/// Typed backend error for a failed S3 call (replaces the former
+/// `expect`/`unwrap` sites on the archive path).
+fn s3_err(op: &str, detail: impl std::fmt::Display) -> FdbError {
+    FdbError::Backend {
+        backend: "s3",
+        detail: format!("{op}: {detail}"),
+    }
+}
 
 pub struct S3Store {
     pub(crate) s3: Rc<MemS3>,
@@ -52,7 +62,12 @@ impl S3Store {
     /// Store archive(): unique key from (time proxy, host, pid) — here the
     /// client tag + a counter; a blocking PutObject (or an UploadPart in
     /// multipart mode).
-    pub async fn archive(&mut self, ds: &Key, colloc: &Key, data: Bytes) -> FieldLocation {
+    pub async fn archive(
+        &mut self,
+        ds: &Key,
+        colloc: &Key,
+        data: Bytes,
+    ) -> Result<FieldLocation, FdbError> {
         let bucket = Self::bucket_of(ds);
         if !self.known_buckets.contains(&bucket) {
             self.s3.create_bucket(&bucket).await;
@@ -67,22 +82,25 @@ impl S3Store {
         self.s3
             .put_object(&bucket, &key, data)
             .await
-            .expect("bucket exists");
-        FieldLocation::S3Obj {
+            .map_err(|e| s3_err("put_object", format!("{bucket}/{key}: {e:?}")))?;
+        Ok(FieldLocation::S3Obj {
             bucket,
             key,
             length,
-        }
+        })
     }
 
     /// One part of the per-(dataset, collocation) multipart object.
+    /// Missing upload state and an UploadPart rejected by the server
+    /// (e.g. the upload was completed out of order by another actor)
+    /// are typed [`FdbError::Backend`]s, not crashes.
     async fn archive_part(
         &mut self,
         ds: &Key,
         colloc: &Key,
         bucket: &str,
         data: Bytes,
-    ) -> FieldLocation {
+    ) -> Result<FieldLocation, FdbError> {
         let key = (ds.canonical(), colloc.canonical());
         if !self.uploads.contains_key(&key) {
             self.counter += 1;
@@ -91,12 +109,16 @@ impl S3Store {
                 .s3
                 .create_multipart(bucket, &obj_key)
                 .await
-                .expect("bucket exists");
-            self.uploads
-                .insert(key.clone(), (obj_key, upload, 0, 0));
+                .map_err(|e| s3_err("create_multipart", format!("{bucket}/{obj_key}: {e:?}")))?;
+            self.uploads.insert(key.clone(), (obj_key, upload, 0, 0));
         }
         let (obj_key, upload, part_no, offset) = {
-            let u = self.uploads.get_mut(&key).unwrap();
+            let u = self.uploads.get_mut(&key).ok_or_else(|| {
+                s3_err(
+                    "upload_part",
+                    format!("no open multipart upload for ({}, {})", key.0, key.1),
+                )
+            })?;
             u.2 += 1;
             let off = u.3;
             u.3 += data.len();
@@ -106,14 +128,19 @@ impl S3Store {
         self.s3
             .upload_part(bucket, upload, part_no, data)
             .await
-            .expect("upload part");
+            .map_err(|e| {
+                s3_err(
+                    "upload_part",
+                    format!("{bucket}/{obj_key} part {part_no} (upload {upload}): {e:?}"),
+                )
+            })?;
         // NOTE: the object is NOT visible until flush() completes the
         // multipart upload — like the POSIX backends' deferred visibility
-        FieldLocation::S3Obj {
+        Ok(FieldLocation::S3Obj {
             bucket: bucket.to_string(),
             key: format!("{obj_key}?part-offset={offset}&len={length}"),
             length,
-        }
+        })
     }
 
     /// flush(): no-op for PutObject mode; completes multipart uploads.
@@ -163,12 +190,18 @@ impl crate::fdb::backend::Store for S3Store {
         colloc: &'a Key,
         _id: &'a Key,
         data: Bytes,
-    ) -> crate::fdb::backend::LocalBoxFuture<'a, FieldLocation> {
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, Result<FieldLocation, crate::fdb::FdbError>>
+    {
         Box::pin(S3Store::archive(self, ds, colloc, data))
     }
 
-    fn flush<'a>(&'a mut self) -> crate::fdb::backend::LocalBoxFuture<'a, ()> {
-        Box::pin(S3Store::flush(self))
+    fn flush<'a>(
+        &'a mut self,
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, Result<(), crate::fdb::FdbError>> {
+        Box::pin(async move {
+            S3Store::flush(self).await;
+            Ok(())
+        })
     }
 
     fn read<'a>(
@@ -186,5 +219,58 @@ impl crate::fdb::backend::Store for S3Store {
                 }),
             }
         })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::profiles::{build_cluster, Testbed};
+    use crate::sim::exec::Sim;
+
+    #[test]
+    fn stale_multipart_upload_is_typed_error_not_panic() {
+        // regression for the `uploads.get_mut(&key).unwrap()` /
+        // `.expect("upload part")` sites: an upload completed out of
+        // order (by another actor) must surface as FdbError::Backend
+        let sim = Sim::new();
+        let cluster = Rc::new(build_cluster(Testbed::Gcp, 1, 1, false, true));
+        let server = cluster.storage_nodes().next().unwrap().clone();
+        let cnode = cluster.client_nodes().next().unwrap().clone();
+        let s3 = Rc::new(MemS3::new(&sim, &server, &cnode));
+        let s3_2 = s3.clone();
+        sim.spawn(async move {
+            let mut store = S3Store::new(&s3_2, "p0");
+            store.multipart = true;
+            let ds = Key::of(&[("class", "od"), ("date", "20231201")]);
+            let colloc = Key::of(&[("step", "1")]);
+            store
+                .archive(&ds, &colloc, Bytes::virt(1024, 1))
+                .await
+                .unwrap();
+            // another actor completes the open upload behind our back
+            let (obj_key, upload) = {
+                let (_, (k, u, _, _)) = store.uploads.iter().next().unwrap();
+                (k.clone(), *u)
+            };
+            let bucket = S3Store::bucket_of(&ds);
+            s3_2.complete_multipart(&bucket, &obj_key, upload)
+                .await
+                .unwrap();
+            // the next part for the same collocation targets the stale
+            // upload id: a typed error, not a simulator crash
+            let err = store
+                .archive(&ds, &colloc, Bytes::virt(1024, 2))
+                .await
+                .unwrap_err();
+            match err {
+                crate::fdb::FdbError::Backend { backend, detail } => {
+                    assert_eq!(backend, "s3");
+                    assert!(detail.contains("upload_part"), "{detail}");
+                }
+                other => panic!("expected typed backend error, got {other}"),
+            }
+        });
+        sim.run();
     }
 }

@@ -1,0 +1,34 @@
+//! Composable backend wrappers: Store/Catalogue impls that wrap *other*
+//! Store/Catalogue impls instead of talking to a storage system
+//! directly. They are the follow-on the trait split (PR 1) was built
+//! for — each scaling construct in the companion papers is one wrapper:
+//!
+//! * [`TieredStore`] — an SCM/NVMe front tier absorbs bursty NWP
+//!   `archive()` writes ahead of a slower backing object store and
+//!   writes them through on `flush()` (the burst-buffer pattern of
+//!   arXiv:2404.03107). Reads are served from whichever tier minted the
+//!   handle.
+//! * [`ReplicatedStore`] — fan-out writes to N replica Stores, read
+//!   from the first healthy replica, with a typed
+//!   [`FdbError::AllReplicasFailed`](crate::fdb::FdbError) when every
+//!   replica rejects the handle.
+//! * [`ShardedCatalogue`] — hash-partitions the index network across N
+//!   inner Catalogues keyed on the collocation key (the distributed
+//!   index-KV design DAOS demonstrated over Lustre, arXiv:2208.06752);
+//!   `list()`/`axis()` merge across shards with per-identifier dedup.
+//!
+//! Wrappers compose recursively through
+//! [`BackendConfig`](crate::fdb::BackendConfig): a tiered store over a
+//! replicated RADOS store with a sharded catalogue is
+//! `Sharded { inner: Tiered { front, back: Replicated { .. } }, .. }`.
+//! [`FdbBuilder::build`](crate::fdb::FdbBuilder) validates and wires the
+//! whole tree; benches sweep the wrappers via
+//! [`WrapperOpt`](crate::bench::scenario::WrapperOpt).
+
+pub mod replicated;
+pub mod sharded;
+pub mod tiered;
+
+pub use replicated::ReplicatedStore;
+pub use sharded::ShardedCatalogue;
+pub use tiered::TieredStore;

@@ -1,0 +1,168 @@
+//! [`ReplicatedStore`]: fan-out writes to N replica Stores, reads from
+//! the first healthy replica.
+
+use crate::fdb::backend::{LocalBoxFuture, Store};
+use crate::fdb::datahandle::DataHandle;
+use crate::fdb::key::Key;
+use crate::fdb::location::FieldLocation;
+use crate::fdb::FdbError;
+use crate::sim::time::SimTime;
+use crate::util::content::Bytes;
+
+/// A replicating Store. `archive()` writes the field to every replica
+/// and returns the primary's (replica 0's) location — that is what the
+/// Catalogue indexes. `read()` offers the handle to each replica in
+/// order and returns the first healthy answer; replicas whose client
+/// cannot resolve the handle report [`FdbError::BackendMismatch`] and
+/// are skipped. If every replica fails, the typed
+/// [`FdbError::AllReplicasFailed`] carries the replica count and the
+/// last underlying error.
+pub struct ReplicatedStore {
+    replicas: Vec<Box<dyn Store>>,
+}
+
+impl ReplicatedStore {
+    /// `replicas` must be non-empty; the builder validates `copies >= 1`
+    /// before constructing one.
+    pub fn new(replicas: Vec<Box<dyn Store>>) -> ReplicatedStore {
+        assert!(!replicas.is_empty(), "ReplicatedStore needs >= 1 replica");
+        ReplicatedStore { replicas }
+    }
+
+    pub fn copies(&self) -> usize {
+        self.replicas.len()
+    }
+}
+
+impl Store for ReplicatedStore {
+    fn name(&self) -> &'static str {
+        "replicated"
+    }
+
+    fn archive<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        colloc: &'a Key,
+        id: &'a Key,
+        data: Bytes,
+    ) -> LocalBoxFuture<'a, Result<FieldLocation, FdbError>> {
+        Box::pin(async move {
+            let mut primary = None;
+            for replica in &mut self.replicas {
+                let loc = replica.archive(ds, colloc, id, data.clone()).await?;
+                if primary.is_none() {
+                    primary = Some(loc);
+                }
+            }
+            Ok(primary.expect("at least one replica"))
+        })
+    }
+
+    fn flush<'a>(&'a mut self) -> LocalBoxFuture<'a, Result<(), FdbError>> {
+        Box::pin(async move {
+            for replica in &mut self.replicas {
+                replica.flush().await?;
+            }
+            Ok(())
+        })
+    }
+
+    fn read<'a>(
+        &'a mut self,
+        handle: &'a DataHandle,
+    ) -> LocalBoxFuture<'a, Result<Bytes, FdbError>> {
+        Box::pin(async move {
+            let copies = self.replicas.len();
+            let mut last = None;
+            for replica in &mut self.replicas {
+                match replica.read(handle).await {
+                    Ok(bytes) => return Ok(bytes),
+                    Err(e) => last = Some(e),
+                }
+            }
+            Err(FdbError::AllReplicasFailed {
+                op: "read",
+                copies,
+                last: Box::new(last.expect("at least one replica")),
+            })
+        })
+    }
+
+    /// Catalogue-bypassing retrieval is forwarded when EVERY replica
+    /// supports it (replicas are instances of one config, so in practice
+    /// all or none do); lookups try replicas in order, first hit wins.
+    fn direct_retrieve_enabled(&self) -> bool {
+        self.replicas.iter().all(|r| r.direct_retrieve_enabled())
+    }
+
+    fn retrieve_direct<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        id: &'a Key,
+    ) -> LocalBoxFuture<'a, Option<FieldLocation>> {
+        Box::pin(async move {
+            for replica in &mut self.replicas {
+                if let Some(loc) = replica.retrieve_direct(ds, id).await {
+                    return Some(loc);
+                }
+            }
+            None
+        })
+    }
+
+    fn supports_wipe(&self) -> bool {
+        self.replicas.iter().all(|r| r.supports_wipe())
+    }
+
+    fn wipe_dataset<'a>(&'a mut self, ds: &'a Key) -> LocalBoxFuture<'a, bool> {
+        Box::pin(async move {
+            let mut any = false;
+            for replica in &mut self.replicas {
+                any |= replica.wipe_dataset(ds).await;
+            }
+            any
+        })
+    }
+
+    fn take_lock_time(&self) -> SimTime {
+        self.replicas
+            .iter()
+            .map(|r| r.take_lock_time())
+            .fold(SimTime::ZERO, |a, b| a + b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fdb::backend::{block_on_ready as block_on, NullStore};
+
+    #[test]
+    fn primary_location_returned_and_reads_serve() {
+        let mut rep = ReplicatedStore::new(vec![Box::new(NullStore), Box::new(NullStore)]);
+        assert_eq!(rep.copies(), 2);
+        let ds = Key::new();
+        let id = Key::of(&[("step", "1")]);
+        let loc = block_on(rep.archive(&ds, &ds, &id, Bytes::virt(64, 3))).unwrap();
+        let h = DataHandle::from_location(&loc);
+        assert_eq!(block_on(rep.read(&h)).unwrap().len(), 64);
+    }
+
+    #[test]
+    fn all_replicas_mismatching_is_typed_error() {
+        let mut rep = ReplicatedStore::new(vec![Box::new(NullStore), Box::new(NullStore)]);
+        let foreign = DataHandle::Posix {
+            path: "/f".into(),
+            ranges: vec![(0, 4)],
+        };
+        let err = block_on(rep.read(&foreign)).unwrap_err();
+        match err {
+            FdbError::AllReplicasFailed { op, copies, last } => {
+                assert_eq!(op, "read");
+                assert_eq!(copies, 2);
+                assert!(matches!(*last, FdbError::BackendMismatch { .. }));
+            }
+            other => panic!("expected AllReplicasFailed, got {other}"),
+        }
+    }
+}

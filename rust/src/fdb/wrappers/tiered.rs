@@ -1,0 +1,165 @@
+//! [`TieredStore`]: a fast front Store absorbing writes ahead of a
+//! backing object Store (SCM/NVMe burst-buffer pattern, arXiv:2404.03107).
+
+use crate::fdb::backend::{LocalBoxFuture, Store};
+use crate::fdb::datahandle::DataHandle;
+use crate::fdb::key::Key;
+use crate::fdb::location::FieldLocation;
+use crate::fdb::FdbError;
+use crate::sim::time::SimTime;
+use crate::util::content::Bytes;
+
+/// A two-tier Store. `archive()` lands in the fast front tier only (and
+/// the returned location — what the Catalogue indexes — points there);
+/// `flush()` first writes every absorbed field through to the backing
+/// tier, then flushes both tiers, so a flush leaves the data durable in
+/// the back store as well. `read()` serves a handle from whichever tier
+/// minted it: the front is tried first and a
+/// [`FdbError::BackendMismatch`] falls through to the back, so handles
+/// from either tier resolve.
+pub struct TieredStore {
+    front: Box<dyn Store>,
+    back: Box<dyn Store>,
+    /// fields absorbed since the last flush, pending write-through
+    pending: Vec<(Key, Key, Key, Bytes)>,
+}
+
+impl TieredStore {
+    pub fn new(front: Box<dyn Store>, back: Box<dyn Store>) -> TieredStore {
+        TieredStore {
+            front,
+            back,
+            pending: Vec::new(),
+        }
+    }
+
+    /// Fields absorbed by the front tier and not yet written through.
+    pub fn pending_fields(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Write every absorbed field through to the backing tier. On a
+    /// back-tier error the failed field and everything after it stay
+    /// pending, so a later flush retries them.
+    async fn spill(&mut self) -> Result<(), FdbError> {
+        let pending = std::mem::take(&mut self.pending);
+        for (i, (ds, colloc, id, data)) in pending.iter().enumerate() {
+            if let Err(e) = self.back.archive(ds, colloc, id, data.clone()).await {
+                self.pending = pending[i..].to_vec();
+                return Err(e);
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Store for TieredStore {
+    fn name(&self) -> &'static str {
+        "tiered"
+    }
+
+    fn archive<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        colloc: &'a Key,
+        id: &'a Key,
+        data: Bytes,
+    ) -> LocalBoxFuture<'a, Result<FieldLocation, FdbError>> {
+        Box::pin(async move {
+            let loc = self.front.archive(ds, colloc, id, data.clone()).await?;
+            self.pending
+                .push((ds.clone(), colloc.clone(), id.clone(), data));
+            Ok(loc)
+        })
+    }
+
+    fn flush<'a>(&'a mut self) -> LocalBoxFuture<'a, Result<(), FdbError>> {
+        Box::pin(async move {
+            self.spill().await?;
+            self.front.flush().await?;
+            self.back.flush().await
+        })
+    }
+
+    fn read<'a>(
+        &'a mut self,
+        handle: &'a DataHandle,
+    ) -> LocalBoxFuture<'a, Result<Bytes, FdbError>> {
+        Box::pin(async move {
+            match self.front.read(handle).await {
+                Err(FdbError::BackendMismatch { .. }) => self.back.read(handle).await,
+                other => other,
+            }
+        })
+    }
+
+    /// Direct (catalogue-bypassing) retrieval is forwarded from the
+    /// FRONT tier only: every archived field lands there first, so a
+    /// direct-capable front resolves unflushed fields too. A
+    /// direct-capable back alone stays on the catalogue path — the back
+    /// tier only sees fields after flush, so bypassing the catalogue
+    /// through it would lose unspilled fields.
+    fn direct_retrieve_enabled(&self) -> bool {
+        self.front.direct_retrieve_enabled()
+    }
+
+    fn retrieve_direct<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        id: &'a Key,
+    ) -> LocalBoxFuture<'a, Option<FieldLocation>> {
+        self.front.retrieve_direct(ds, id)
+    }
+
+    /// Wipe needs both tiers to support it: removing only one tier's
+    /// copy while the Catalogue deregisters would orphan the other.
+    fn supports_wipe(&self) -> bool {
+        self.front.supports_wipe() && self.back.supports_wipe()
+    }
+
+    fn wipe_dataset<'a>(&'a mut self, ds: &'a Key) -> LocalBoxFuture<'a, bool> {
+        Box::pin(async move {
+            self.pending.retain(|(d, _, _, _)| d != ds);
+            let front = self.front.wipe_dataset(ds).await;
+            let back = self.back.wipe_dataset(ds).await;
+            front || back
+        })
+    }
+
+    fn take_lock_time(&self) -> SimTime {
+        self.front.take_lock_time() + self.back.take_lock_time()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fdb::backend::{block_on_ready as block_on, NullStore};
+
+    #[test]
+    fn absorbs_until_flush_then_spills() {
+        let mut tiered = TieredStore::new(Box::new(NullStore), Box::new(NullStore));
+        let ds = Key::new();
+        let id = Key::of(&[("step", "1")]);
+        let loc = block_on(tiered.archive(&ds, &ds, &id, Bytes::virt(128, 7))).unwrap();
+        assert_eq!(loc.length(), 128);
+        assert_eq!(tiered.pending_fields(), 1);
+        block_on(tiered.flush()).unwrap();
+        assert_eq!(tiered.pending_fields(), 0);
+    }
+
+    #[test]
+    fn reads_fall_through_to_back_tier() {
+        // front is Null; a posix handle mismatches it, and the back tier
+        // (also Null here) mismatches too → the back tier's typed error
+        let mut tiered = TieredStore::new(Box::new(NullStore), Box::new(NullStore));
+        let null_handle = DataHandle::Null { length: 16 };
+        assert_eq!(block_on(tiered.read(&null_handle)).unwrap().len(), 16);
+        let posix_handle = DataHandle::Posix {
+            path: "/f".into(),
+            ranges: vec![(0, 4)],
+        };
+        let err = block_on(tiered.read(&posix_handle)).unwrap_err();
+        assert!(matches!(err, FdbError::BackendMismatch { .. }));
+    }
+}

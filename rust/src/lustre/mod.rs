@@ -298,6 +298,28 @@ mod tests {
     }
 
     #[test]
+    fn mkdir_under_a_file_is_not_a_directory() {
+        let (sim, fs, cluster) = small_fs();
+        let node = cluster.client_nodes().next().unwrap().clone();
+        sim.spawn(async move {
+            let mut cli = fs.client(&node);
+            cli.create("/plainfile", StripeSpec::default_layout())
+                .await
+                .unwrap();
+            // ENOTDIR: both the path itself and a child path of a file
+            assert!(matches!(
+                cli.mkdir("/plainfile").await,
+                Err(FsError::NotADirectory)
+            ));
+            assert!(matches!(
+                cli.mkdir("/plainfile/sub").await,
+                Err(FsError::NotADirectory)
+            ));
+        });
+        sim.run();
+    }
+
+    #[test]
     fn stat_missing_file() {
         let (sim, fs, cluster) = small_fs();
         let node = cluster.client_nodes().next().unwrap().clone();

@@ -112,6 +112,14 @@ impl LustreClient {
                 Self::shard_of(path),
             )
             .await;
+        {
+            // ENOTDIR: the path or its parent already exists as a
+            // regular file
+            let ns = self.fs.namespace.borrow();
+            if ns.contains_key(path) || ns.contains_key(Self::parent_of(path)) {
+                return Err(FsError::NotADirectory);
+            }
+        }
         let mut dirs = self.fs.dirs.borrow_mut();
         if dirs.contains_key(path) {
             return Err(FsError::AlreadyExists);

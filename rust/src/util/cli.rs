@@ -20,12 +20,11 @@ impl Args {
             if let Some(stripped) = a.strip_prefix("--") {
                 if let Some((k, v)) = stripped.split_once('=') {
                     out.options.insert(k.to_string(), v.to_string());
-                } else if it
-                    .peek()
-                    .map(|n| !n.starts_with("--"))
-                    .unwrap_or(false)
-                {
-                    let v = it.next().unwrap();
+                } else if let Some(v) = it.next_if(|n| !n.starts_with("--")) {
+                    // `next_if` peeks and consumes in one step; a
+                    // value-taking flag as the LAST argument falls to
+                    // the flag branch, and `value_of` turns that into a
+                    // usage error instead of a silent default
                     out.options.insert(stripped.to_string(), v);
                 } else {
                     out.flags.push(stripped.to_string());
@@ -47,6 +46,47 @@ impl Args {
 
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
+    }
+
+    /// A value-taking option: `Ok(Some(v))` when given with a value,
+    /// `Ok(None)` when absent, and a usage error when the flag was
+    /// passed dangling (`--opt` as the last argument, or followed by
+    /// another `--option`) — instead of silently falling back to a
+    /// default.
+    pub fn value_of(&self, name: &str) -> Result<Option<&str>, String> {
+        match self.get(name) {
+            Some(v) => Ok(Some(v)),
+            None if self.flag(name) => Err(format!(
+                "usage error: option --{name} requires a value (--{name} <value>)"
+            )),
+            None => Ok(None),
+        }
+    }
+
+    /// Strict parsed option: the default when absent, a usage error on
+    /// a dangling flag or an unparseable value — unlike [`Args::usize`]
+    /// and friends, which silently fall back to the default.
+    pub fn parsed_or<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: T,
+    ) -> Result<T, String> {
+        match self.value_of(name)? {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                format!("usage error: invalid value `{v}` for --{name}")
+            }),
+        }
+    }
+
+    /// Strict byte-size option accepting unit suffixes (`--size 1MiB`).
+    pub fn bytes_of(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.value_of(name)? {
+            None => Ok(default),
+            Some(v) => crate::util::humansize::parse_bytes_or_plain(v).ok_or_else(|| {
+                format!("usage error: invalid size `{v}` for --{name}")
+            }),
+        }
     }
 
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
@@ -113,5 +153,40 @@ mod tests {
         let a = parse("");
         assert_eq!(a.usize("missing", 7), 7);
         assert_eq!(a.get_or("absent", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn trailing_value_flag_does_not_panic_and_is_a_usage_error() {
+        // `--system` as the last argument must parse cleanly (no
+        // unwrap-on-missing-value code path left in the parser) ...
+        let a = parse("run --system");
+        assert_eq!(a.positional, vec!["run"]);
+        assert!(a.flag("system"));
+        assert_eq!(a.get("system"), None);
+        // ... and the strict accessor turns it into a usage error
+        // instead of the old silent fall-back to a default
+        let err = a.value_of("system").unwrap_err();
+        assert!(err.contains("--system"), "{err}");
+        // present-with-value and absent both stay Ok
+        let b = parse("--system daos");
+        assert_eq!(b.value_of("system").unwrap(), Some("daos"));
+        assert_eq!(b.value_of("testbed").unwrap(), None);
+    }
+
+    #[test]
+    fn strict_numeric_accessors_reject_garbage_and_dangling_flags() {
+        let a = parse("--servers 4 --size 1MiB");
+        assert_eq!(a.parsed_or("servers", 1usize).unwrap(), 4);
+        assert_eq!(a.parsed_or("missing", 7u32).unwrap(), 7);
+        assert_eq!(a.bytes_of("size", 0).unwrap(), 1 << 20);
+        assert_eq!(a.bytes_of("absent", 512).unwrap(), 512);
+        // unparseable values are usage errors, not silent defaults
+        let b = parse("--servers many --size huge");
+        assert!(b.parsed_or("servers", 1usize).is_err());
+        assert!(b.bytes_of("size", 0).is_err());
+        // dangling value flags propagate the value_of usage error
+        let c = parse("--servers");
+        assert!(c.parsed_or("servers", 1usize).is_err());
+        assert!(c.bytes_of("servers", 0).is_err());
     }
 }

@@ -47,12 +47,15 @@ impl Summary {
     }
 
     /// Percentile by nearest-rank on the sorted sample, `p` in [0,100].
+    /// Total order via `f64::total_cmp`, so NaN samples (e.g. a rate
+    /// computed over a zero-length span) sort last instead of panicking
+    /// the comparator.
     pub fn percentile(&self, p: f64) -> f64 {
         if self.values.is_empty() {
             return 0.0;
         }
         let mut sorted = self.values.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
         sorted[rank.min(sorted.len() - 1)]
     }
@@ -87,5 +90,18 @@ mod tests {
         let s = Summary::new();
         assert_eq!(s.mean(), 0.0);
         assert_eq!(s.percentile(99.0), 0.0);
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic_percentile() {
+        // regression: `partial_cmp().unwrap()` used to panic on NaN
+        let mut s = Summary::new();
+        for x in [3.0, f64::NAN, 1.0, 2.0] {
+            s.add(x);
+        }
+        // finite samples keep their order; NaN sorts last (total_cmp)
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(50.0), 3.0); // nearest rank 2 of [1,2,3,NaN]
+        assert!(s.percentile(100.0).is_nan());
     }
 }

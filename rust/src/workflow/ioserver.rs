@@ -73,7 +73,7 @@ pub async fn run(
             batch.push((id, payload));
         }
         fdb.archive_many(batch).await.expect("archive_many");
-        fdb.flush().await;
+        fdb.flush().await.expect("flush");
         barrier.arrive(step).await;
     }
     fdb.close().await;

@@ -87,7 +87,7 @@ fn every_deployed_backend_constructible_and_roundtrips() {
                     .await
                     .unwrap();
             }
-            w.flush().await;
+            w.flush().await.expect("flush");
             w.close().await;
             for step in 1..=3u32 {
                 let id = id_step(step);
@@ -177,7 +177,7 @@ fn archive_many_equivalent_to_loop() {
             })
             .collect();
         batch_writer.archive_many(batch).await.unwrap();
-        batch_writer.flush().await;
+        batch_writer.flush().await.expect("flush");
         batch_writer.close().await;
         for s in 11..=18u32 {
             let id = id_step(s);
@@ -186,7 +186,7 @@ fn archive_many_equivalent_to_loop() {
                 .await
                 .unwrap();
         }
-        loop_writer.flush().await;
+        loop_writer.flush().await.expect("flush");
         loop_writer.close().await;
         // every field from both paths retrievable with identical bytes
         for s in (1..=8u32).chain(11..=18u32) {
@@ -220,7 +220,7 @@ fn retrieve_many_equivalent_to_retrieve_loop() {
                     .await
                     .unwrap();
             }
-            w.flush().await;
+            w.flush().await.expect("flush");
             w.close().await;
             // one absent id mixed in: both paths must skip it silently
             let mut ask = ids.clone();

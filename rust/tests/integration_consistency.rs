@@ -55,7 +55,7 @@ fn parallel_writers_then_readers_all_backends() {
                             .await
                             .unwrap();
                     }
-                    fdb.flush().await;
+                    fdb.flush().await.expect("flush");
                 }
                 fdb.close().await;
                 wg.done();
@@ -154,9 +154,9 @@ fn rearchive_replaces_and_list_deduplicates() {
         dep.sim.spawn(async move {
             let id = id_for(0, 1, 0);
             w.archive(&id, b"version-one").await.unwrap();
-            w.flush().await;
+            w.flush().await.expect("flush");
             w.archive(&id, b"version-two!").await.unwrap();
-            w.flush().await;
+            w.flush().await.expect("flush");
             w.close().await;
         });
         dep.sim.run();
@@ -209,7 +209,7 @@ fn posix_flush_visibility_and_masking() {
             .build()
             .unwrap();
         assert!(r1.retrieve(&id).await.unwrap().is_none());
-        w.flush().await;
+        w.flush().await.expect("flush");
         // after flush (partial index via sub-TOC): visible
         let mut r2 = FdbBuilder::new(&dep_sim)
             .node(&node1)
@@ -253,7 +253,7 @@ fn crashed_writer_leaves_consistent_dataset() {
                 .await
                 .unwrap();
         }
-        w.flush().await;
+        w.flush().await.expect("flush");
         // step 2 archived but NEVER flushed — then the process "dies"
         for param in 0..4 {
             let id = id_for(0, 2, param);

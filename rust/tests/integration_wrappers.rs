@@ -1,0 +1,350 @@
+//! Wrapper-equivalence property tests: `TieredStore`, `ReplicatedStore`
+//! and `ShardedCatalogue` (in any recursive composition) must be
+//! observably identical to the bare inner backend — byte-identical
+//! retrieves, identical listings and axes — on the archive/flush/
+//! retrieve/list workloads of `integration_consistency.rs`. Plus
+//! regression tests that the former backend panic sites now surface as
+//! typed `FdbError`s.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use fdbr::bench::scenario::{deploy, RedundancyOpt, SystemKind, SystemUnderTest, WrapperOpt};
+use fdbr::fdb::{BackendConfig, Fdb, FdbBuilder, FdbError, Key, Request};
+use fdbr::hw::profiles::Testbed;
+use fdbr::sim::exec::Sim;
+use fdbr::util::content::Bytes;
+use fdbr::util::prop;
+use fdbr::util::rng::Rng;
+
+/// One randomized workload: fields addressed by (step, param) with
+/// per-field payload sizes. Repeats re-archive (replace) the field.
+#[derive(Clone, Debug)]
+struct Workload {
+    fields: Vec<(u32, u32, u64)>,
+}
+
+fn gen_workload(rng: &mut Rng) -> Workload {
+    let n = 1 + rng.below(12) as usize;
+    let fields = (0..n)
+        .map(|_| {
+            (
+                1 + rng.below(4) as u32,
+                rng.below(3) as u32,
+                64 + rng.below(4096),
+            )
+        })
+        .collect();
+    Workload { fields }
+}
+
+fn field_id(step: u32, param: u32) -> Key {
+    fdbr::bench::hammer::field_id(0, step, param, 0)
+}
+
+fn payload(step: u32, param: u32, size: u64) -> Bytes {
+    Bytes::virt(size, (u64::from(step) << 32) | u64::from(param))
+}
+
+/// FNV-1a over materialized bytes (payloads here are tiny).
+fn digest(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Everything observable about a dataset after the workload: per-id
+/// retrieve outcomes (byte digests), the sorted listing, and one axis.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+struct Fingerprint {
+    retrieved: Vec<(String, Option<(u64, u64)>)>,
+    listed: Vec<String>,
+    axis: Vec<String>,
+}
+
+/// Run the workload: archive everything through `w` (flush + close),
+/// then observe through `r` (or through `w` itself when `r` is `None` —
+/// process-local catalogues like the bare Null pair).
+fn run_workload(sim: &Sim, w: Fdb, r: Option<Fdb>, wl: &Workload) -> Fingerprint {
+    let out = Rc::new(RefCell::new(Fingerprint::default()));
+    let out2 = out.clone();
+    let wl = wl.clone();
+    let mut w = w;
+    sim.spawn(async move {
+        let mut ids: Vec<Key> = Vec::new();
+        for &(step, param, size) in &wl.fields {
+            let id = field_id(step, param);
+            w.archive(&id, payload(step, param, size)).await.unwrap();
+            ids.push(id);
+        }
+        w.flush().await.unwrap();
+        w.close().await;
+        let mut r = r.unwrap_or(w);
+        let mut fp = Fingerprint::default();
+        let mut seen = std::collections::BTreeSet::new();
+        for id in &ids {
+            if !seen.insert(id.canonical()) {
+                continue;
+            }
+            let got = match r.retrieve(id).await.unwrap() {
+                None => None,
+                Some(h) => {
+                    let bytes = r.read(&h).await.unwrap().to_vec();
+                    Some((bytes.len() as u64, digest(&bytes)))
+                }
+            };
+            fp.retrieved.push((id.canonical(), got));
+        }
+        let ds = ids[0].project(&r.schema.dataset.clone()).unwrap();
+        let colloc = ids[0].project(&r.schema.collocation.clone()).unwrap();
+        let mut listed: Vec<String> = r
+            .list(&ds, &Request::parse("").unwrap())
+            .await
+            .iter()
+            .map(|(k, _)| k.canonical())
+            .collect();
+        listed.sort();
+        fp.listed = listed;
+        fp.axis = r.axes(&ds, &colloc, "step").await;
+        *out2.borrow_mut() = fp;
+    });
+    sim.run();
+    let fp = out.borrow().clone();
+    fp
+}
+
+/// Fingerprint a config on a fresh standalone Sim, same-process
+/// writer/reader (Null-family backends need no cluster).
+fn null_fingerprint(config: BackendConfig, wl: &Workload) -> Fingerprint {
+    let sim = Sim::new();
+    let w = FdbBuilder::new(&sim).backend(config).build().unwrap();
+    run_workload(&sim, w, None, wl)
+}
+
+#[test]
+fn wrappers_over_null_equivalent_to_bare() {
+    // property: for random workloads, every wrapper composition over the
+    // Null pair fingerprints identically to the bare Null pair
+    prop::check_no_shrink(0xB0B, 10, gen_workload, |wl| {
+        let base = null_fingerprint(BackendConfig::Null, wl);
+        assert!(
+            !base.listed.is_empty(),
+            "workload must index at least one field"
+        );
+        let compositions: Vec<BackendConfig> = vec![
+            BackendConfig::Tiered {
+                front: Box::new(BackendConfig::Null),
+                back: Box::new(BackendConfig::Null),
+            },
+            BackendConfig::Replicated {
+                inner: Box::new(BackendConfig::Null),
+                copies: 3,
+            },
+            BackendConfig::Sharded {
+                inner: Box::new(BackendConfig::Null),
+                shards: 3,
+            },
+            // recursive composition: sharded catalogue over a tiered
+            // store whose back tier is replicated
+            BackendConfig::Sharded {
+                inner: Box::new(BackendConfig::Tiered {
+                    front: Box::new(BackendConfig::Null),
+                    back: Box::new(BackendConfig::Replicated {
+                        inner: Box::new(BackendConfig::Null),
+                        copies: 2,
+                    }),
+                }),
+                shards: 2,
+            },
+        ];
+        compositions
+            .into_iter()
+            .all(|c| null_fingerprint(c, wl) == base)
+    });
+}
+
+#[test]
+fn wrappers_over_posix_equivalent_to_bare() {
+    // cross-process equivalence on a real (simulated) Lustre deployment:
+    // writer on node 0, reader on node 1, random workloads
+    let mut rng = Rng::new(0x5EED);
+    let cases: Vec<Workload> = (0..4).map(|_| gen_workload(&mut rng)).collect();
+    let fingerprints = |wrapper: WrapperOpt| -> Vec<Fingerprint> {
+        let dep = deploy(Testbed::Gcp, SystemKind::Lustre, 2, 2, RedundancyOpt::None)
+            .with_wrapper(wrapper);
+        let nodes = dep.client_nodes();
+        cases
+            .iter()
+            .map(|wl| {
+                let w = dep.fdb(&nodes[0]);
+                let r = dep.fdb(&nodes[1]);
+                run_workload(&dep.sim, w, Some(r), wl)
+            })
+            .collect()
+    };
+    let base = fingerprints(WrapperOpt::Bare);
+    assert!(base.iter().all(|fp| !fp.listed.is_empty()));
+    for wrapper in [
+        WrapperOpt::Tiered,
+        WrapperOpt::Replicated(2),
+        WrapperOpt::Sharded(3),
+    ] {
+        assert_eq!(
+            fingerprints(wrapper),
+            base,
+            "{wrapper:?} must be observably identical to bare posix"
+        );
+    }
+}
+
+#[test]
+fn recursive_posix_composition_equivalent_to_bare() {
+    // sharded catalogue over a tiered store whose back tier is a 2-way
+    // replicated posix store — the "everything at once" composition
+    let mut rng = Rng::new(0xC0FFEE);
+    let cases: Vec<Workload> = (0..3).map(|_| gen_workload(&mut rng)).collect();
+    let run_with = |nested: bool| -> Vec<Fingerprint> {
+        let dep = deploy(Testbed::Gcp, SystemKind::Lustre, 2, 2, RedundancyOpt::None);
+        let SystemUnderTest::Lustre(fs) = &dep.system else {
+            unreachable!()
+        };
+        let config = if nested {
+            BackendConfig::Sharded {
+                inner: Box::new(BackendConfig::Tiered {
+                    front: Box::new(BackendConfig::Posix {
+                        fs: fs.clone(),
+                        root: "/scm".to_string(),
+                    }),
+                    back: Box::new(BackendConfig::Replicated {
+                        inner: Box::new(BackendConfig::Posix {
+                            fs: fs.clone(),
+                            root: "/fdb".to_string(),
+                        }),
+                        copies: 2,
+                    }),
+                }),
+                shards: 2,
+            }
+        } else {
+            BackendConfig::Posix {
+                fs: fs.clone(),
+                root: "/fdb".to_string(),
+            }
+        };
+        assert_eq!(
+            config.describe(),
+            if nested {
+                "sharded2(tiered(posix,replicated2(posix)))"
+            } else {
+                "posix"
+            }
+        );
+        let nodes = dep.client_nodes();
+        cases
+            .iter()
+            .map(|wl| {
+                let mk = |node| {
+                    FdbBuilder::new(&dep.sim)
+                        .node(node)
+                        .backend(config.clone())
+                        .build()
+                        .unwrap()
+                };
+                let w = mk(&nodes[0]);
+                let r = mk(&nodes[1]);
+                run_workload(&dep.sim, w, Some(r), wl)
+            })
+            .collect()
+    };
+    assert_eq!(run_with(true), run_with(false));
+}
+
+#[test]
+fn wrapper_configs_validated_recursively() {
+    let sim = Sim::new();
+    // zero copies / zero shards rejected
+    let err = FdbBuilder::new(&sim)
+        .backend(BackendConfig::Replicated {
+            inner: Box::new(BackendConfig::Null),
+            copies: 0,
+        })
+        .build()
+        .err()
+        .unwrap();
+    assert!(matches!(err, FdbError::InvalidConfig(_)), "{err}");
+    let err = FdbBuilder::new(&sim)
+        .backend(BackendConfig::Sharded {
+            inner: Box::new(BackendConfig::Null),
+            shards: 0,
+        })
+        .build()
+        .err()
+        .unwrap();
+    assert!(matches!(err, FdbError::InvalidConfig(_)), "{err}");
+    // invalid INNER config caught through the wrapper: posix without a
+    // node, nested two levels deep
+    let dep = deploy(Testbed::Gcp, SystemKind::Lustre, 1, 1, RedundancyOpt::None);
+    let SystemUnderTest::Lustre(fs) = &dep.system else {
+        unreachable!()
+    };
+    let err = FdbBuilder::new(&dep.sim)
+        .backend(BackendConfig::Tiered {
+            front: Box::new(BackendConfig::Null),
+            back: Box::new(BackendConfig::Replicated {
+                inner: Box::new(BackendConfig::Posix {
+                    fs: fs.clone(),
+                    root: "relative/not/absolute".to_string(),
+                }),
+                copies: 2,
+            }),
+        })
+        .build()
+        .err()
+        .unwrap();
+    assert!(matches!(err, FdbError::InvalidConfig(_)), "{err}");
+}
+
+#[test]
+fn posix_mkdir_failure_is_typed_error_not_panic() {
+    // regression for the `panic!("mkdir {dir}: {e}")` site: point the
+    // store's root at a regular FILE — mkdir of the dataset dir fails
+    // with ENOTDIR and archive() must return FdbError::Backend
+    let dep = deploy(Testbed::Gcp, SystemKind::Lustre, 1, 2, RedundancyOpt::None);
+    let SystemUnderTest::Lustre(fs) = &dep.system else {
+        unreachable!()
+    };
+    let fs2 = fs.clone();
+    let node = dep.client_nodes()[0].clone();
+    let mut fdb = FdbBuilder::new(&dep.sim)
+        .node(&node)
+        .backend(BackendConfig::Posix {
+            fs: fs.clone(),
+            root: "/notadir".to_string(),
+        })
+        .build()
+        .unwrap();
+    let node2 = node.clone();
+    dep.sim.spawn(async move {
+        let mut cli = fs2.client(&node2);
+        cli.create("/notadir", fdbr::lustre::StripeSpec::default_layout())
+            .await
+            .unwrap();
+        let id = field_id(1, 0);
+        let err = fdb.archive(&id, b"payload").await.unwrap_err();
+        match err {
+            FdbError::Backend { backend, detail } => {
+                assert_eq!(backend, "posix");
+                assert!(detail.contains("mkdir"), "{detail}");
+            }
+            other => panic!("expected FdbError::Backend, got {other}"),
+        }
+        // the batched path reports the same typed error
+        let batch = vec![(field_id(2, 0), Bytes::virt(64, 1))];
+        let err = fdb.archive_many(batch).await.unwrap_err();
+        assert!(matches!(err, FdbError::Backend { backend: "posix", .. }));
+    });
+    dep.sim.run();
+}
