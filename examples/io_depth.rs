@@ -1,0 +1,88 @@
+//! The I/O-depth engine quickstart: drive N concurrent store reads and
+//! writes on the batched FDB paths via per-request client sessions, and
+//! watch the retrieve phase's virtual time fall as the queue deepens —
+//! results stay byte-identical at every depth.
+//!
+//! Run: `cargo run --release --example io_depth`
+
+use fdbr::bench::hammer::{field_id, field_seed};
+use fdbr::bench::scenario::{deploy, RedundancyOpt, SystemKind};
+use fdbr::fdb::{IoProfile, Key};
+use fdbr::hw::profiles::Testbed;
+use fdbr::util::content::Bytes;
+
+const FIELD: u64 = 64 << 10;
+
+fn ids() -> Vec<Key> {
+    let mut out = Vec::new();
+    for step in 1..=4u32 {
+        for param in 0..4 {
+            for level in 0..4 {
+                out.push(field_id(0, step, param, level));
+            }
+        }
+    }
+    out
+}
+
+fn main() {
+    println!("== queue-depth I/O engine (per-backend client sessions) ==");
+    let mut baseline = None;
+    for depth in [1usize, 2, 4, 8, 16] {
+        // index caching rides along so the serial catalogue client does
+        // not mask the store-side parallelism we are sweeping
+        let io = IoProfile::depth(depth).with_preload_indexes(true);
+        let dep = deploy(Testbed::Gcp, SystemKind::Lustre, 2, 2, RedundancyOpt::None)
+            .with_io(io);
+        let nodes = dep.client_nodes();
+        let mut writer = dep.fdb(&nodes[0]);
+        let mut reader = dep.fdb(&nodes[1]);
+        let (t_read, fingerprint) = {
+            use std::cell::Cell;
+            use std::rc::Rc;
+            let out: Rc<Cell<(f64, u64)>> = Rc::new(Cell::new((0.0, 0)));
+            let out2 = out.clone();
+            let sim = dep.sim.clone();
+            dep.sim.spawn(async move {
+                let batch: Vec<(Key, Bytes)> = ids()
+                    .into_iter()
+                    .map(|id| {
+                        let data = Bytes::virt(FIELD, field_seed(&id));
+                        (id, data)
+                    })
+                    .collect();
+                // archive_many fans the store pass out over `depth`
+                // client sessions; flush covers every session's files
+                writer.archive_many(batch).await.unwrap();
+                writer.flush().await.unwrap();
+                writer.close().await;
+
+                let t0 = sim.now();
+                let fetched = reader.retrieve_many(&ids()).await.unwrap();
+                let dt = (sim.now() - t0).as_secs_f64() * 1e3;
+                // order + content fingerprint: identical at every depth
+                assert_eq!(fetched.len(), ids().len());
+                let mut fp: u64 = 0;
+                for (id, bytes) in &fetched {
+                    assert!(bytes.content_eq(&Bytes::virt(FIELD, field_seed(id))));
+                    fp = fp
+                        .wrapping_mul(1099511628211)
+                        .wrapping_add(bytes.len() ^ field_seed(id));
+                }
+                assert!(reader.io_inflight_peak() <= depth);
+                out2.set((dt, fp));
+            });
+            dep.sim.run();
+            out.get()
+        };
+        let speedup = baseline.map(|b: f64| b / t_read).unwrap_or(1.0);
+        if baseline.is_none() {
+            baseline = Some(t_read);
+        }
+        println!(
+            "  io-depth {depth:>2}: retrieve phase {t_read:8.2} ms  \
+             ({speedup:4.1}x vs depth 1, fingerprint {fingerprint:016x})"
+        );
+    }
+    println!("identical bytes at every depth; only virtual time changed");
+}

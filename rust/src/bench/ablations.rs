@@ -30,6 +30,7 @@ pub fn ablation_ids() -> Vec<&'static str> {
         "abl_pg_count",
         "abl_s3_multipart",
         "abl_wrappers",
+        "abl_iodepth",
     ]
 }
 
@@ -40,6 +41,7 @@ pub fn run_ablation(id: &str, scale: f64) -> Option<Figure> {
         "abl_pg_count" => abl_pg_count(scale),
         "abl_s3_multipart" => abl_s3_multipart(scale),
         "abl_wrappers" => abl_wrappers(scale),
+        "abl_iodepth" => abl_iodepth(scale),
         _ => return None,
     })
 }
@@ -332,6 +334,66 @@ fn abl_wrappers(scale: f64) -> Figure {
     }
 }
 
+/// Queue-depth sweep (`BENCH_iodepth.json`): the fdb-hammer workload's
+/// retrieve phase at I/O depth 1→16 on each backend. The Lustre rows
+/// run with the POSIX index cache on, so the serial catalogue client
+/// does not mask store-side parallelism — the IOR-style queue-depth
+/// scaling shape of the DAOS interface papers. Small fields keep the
+/// reads latency-bound (where queue depth pays); the write phase rides
+/// along as a secondary series.
+fn abl_iodepth(scale: f64) -> Figure {
+    use crate::bench::hammer::{self, HammerConfig};
+    use crate::fdb::IoProfile;
+    let mut rows = Vec::new();
+    let depths = [1usize, 2, 4, 8, 16];
+    for kind in [SystemKind::Lustre, SystemKind::Daos, SystemKind::Null] {
+        for &depth in &depths {
+            let dep = deploy(Testbed::Gcp, kind, 2, 2, RedundancyOpt::None)
+                .with_io(IoProfile::depth(depth).with_preload_indexes(true));
+            let cfg = HammerConfig {
+                procs_per_node: 1,
+                // paper scale = 160 steps; clamp so small scales still
+                // exercise the pipeline and large ones stay bounded
+                nsteps: ((160.0 * scale).round() as u32).clamp(2, 16),
+                nparams: 4,
+                nlevels: 4,
+                field_size: 64 << 10,
+                // byte verification on every depth: results must be
+                // identical, only virtual time may change
+                check: kind != SystemKind::Null,
+                contention: false,
+            };
+            let (r, _) = hammer::run(&dep, cfg);
+            rows.push(FigRow {
+                x: format!("depth {depth}"),
+                series: format!("{} read time", kind.label()),
+                value: r.read_time.as_secs_f64() * 1e3,
+                unit: "ms",
+            });
+            rows.push(FigRow {
+                x: format!("depth {depth}"),
+                series: format!("{} read", kind.label()),
+                value: r.gibs_r(),
+                unit: "GiB/s",
+            });
+            rows.push(FigRow {
+                x: format!("depth {depth}"),
+                series: format!("{} write", kind.label()),
+                value: r.gibs_w(),
+                unit: "GiB/s",
+            });
+        }
+    }
+    Figure {
+        id: "abl_iodepth",
+        title: "I/O-depth engine: fdb-hammer retrieve phase vs queue depth",
+        expectation: "depth 8 at least halves the POSIX/Lustre retrieve time; \
+                      scaling saturates once the client NIC / OST pipes bind",
+        rows,
+        profiles: vec![],
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -377,6 +439,30 @@ mod tests {
     #[test]
     fn unknown_ablation_is_none() {
         assert!(run_ablation("abl_nope", 1.0).is_none());
+    }
+
+    #[test]
+    fn iodepth_depth8_halves_posix_retrieve_time() {
+        // the PR's acceptance bar: depth 8 completes the POSIX/Lustre-sim
+        // retrieve phase in <= 1/2 the virtual time of depth 1, with the
+        // hammer byte-verification on at every depth (identical results)
+        let f = run_ablation("abl_iodepth", 0.05).unwrap();
+        let t1 = f.value("depth 1", "Lustre read time").unwrap();
+        let t8 = f.value("depth 8", "Lustre read time").unwrap();
+        assert!(
+            t8 <= 0.5 * t1,
+            "depth-8 retrieve ({t8:.2} ms) should be <= half of depth-1 ({t1:.2} ms)"
+        );
+        // monotone-ish scaling: depth 16 must not regress past depth 1
+        let t16 = f.value("depth 16", "Lustre read time").unwrap();
+        assert!(t16 <= t1, "depth-16 ({t16:.2} ms) regressed past depth-1 ({t1:.2} ms)");
+        // every backend produced non-degenerate sweeps
+        for series in ["Lustre read", "DAOS read", "Null read"] {
+            for depth in [1, 2, 4, 8, 16] {
+                let v = f.value(&format!("depth {depth}"), series).unwrap();
+                assert!(v >= 0.0, "{series} at depth {depth}: {v}");
+            }
+        }
     }
 
     #[test]

@@ -75,6 +75,27 @@ impl Figure {
             .map(|r| r.value)
     }
 
+    /// Machine-readable form (benchmark records like `BENCH_iodepth.json`).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                Json::obj()
+                    .set("x", r.x.clone())
+                    .set("series", r.series.clone())
+                    .set("value", r.value)
+                    .set("unit", r.unit)
+            })
+            .collect();
+        Json::obj()
+            .set("id", self.id)
+            .set("title", self.title)
+            .set("expectation", self.expectation)
+            .set("rows", Json::Arr(rows))
+    }
+
     /// Sum of a series across x (for coarse comparisons).
     pub fn series_mean(&self, series: &str) -> f64 {
         let vals: Vec<f64> = self

@@ -6,7 +6,7 @@ use std::rc::Rc;
 
 use crate::ceph::{Ceph, CephConfig, CephPool, Redundancy};
 use crate::daos::{Daos, DaosConfig};
-use crate::fdb::{BackendConfig, Fdb, FdbBuilder, SharedNullCatalogue};
+use crate::fdb::{BackendConfig, Fdb, FdbBuilder, IoProfile, SharedNullCatalogue};
 use crate::hw::cluster::Cluster;
 use crate::hw::node::Node;
 use crate::hw::profiles::{build_cluster, Testbed};
@@ -94,6 +94,9 @@ pub struct Deployment {
     pub kind: SystemKind,
     pub testbed: Testbed,
     pub wrapper: WrapperOpt,
+    /// I/O-depth profile applied to every FDB instance built from this
+    /// deployment (queue depth + POSIX index caching)
+    pub io: IoProfile,
 }
 
 /// Redundancy options for Figs 4.27/4.28 (mapped per system).
@@ -153,6 +156,7 @@ pub fn deploy(
         kind,
         testbed,
         wrapper: WrapperOpt::Bare,
+        io: IoProfile::default(),
     }
 }
 
@@ -165,6 +169,19 @@ impl Deployment {
     /// backend for every FDB instance subsequently built from it.
     pub fn with_wrapper(mut self, wrapper: WrapperOpt) -> Deployment {
         self.wrapper = wrapper;
+        self
+    }
+
+    /// Set the full I/O-depth profile for every FDB instance built from
+    /// this deployment (coordinator, benches, I/O servers alike).
+    pub fn with_io(mut self, io: IoProfile) -> Deployment {
+        self.io = io;
+        self
+    }
+
+    /// Convenience: just the queue depth.
+    pub fn with_io_depth(mut self, depth: usize) -> Deployment {
+        self.io.depth = depth;
         self
     }
 
@@ -229,6 +246,7 @@ impl Deployment {
         FdbBuilder::new(&self.sim)
             .node(node)
             .backend(self.backend_config())
+            .io(self.io)
             .build()
             .expect("deployment backend config is valid")
     }
@@ -239,6 +257,7 @@ impl Deployment {
             .node(node)
             .trace(trace)
             .backend(self.backend_config())
+            .io(self.io)
             .build()
             .expect("deployment backend config is valid")
     }

@@ -67,6 +67,15 @@ impl Ceph {
 }
 
 impl RadosClient {
+    /// A fresh librados client instance on the same cluster and node
+    /// (own id for object naming, own aio queue) — backs the FDB
+    /// per-request I/O sessions.
+    pub fn fork(&self) -> RadosClient {
+        let mut c = self.sys.client(&self.node);
+        c.aio_visibility_bug = self.aio_visibility_bug;
+        c
+    }
+
     pub fn pool(&self, name: &str) -> Result<Rc<CephPool>, RadosError> {
         self.sys
             .pools

@@ -83,6 +83,7 @@ fn size(args: &Args, name: &str, default: u64) -> Result<u64> {
 }
 
 /// `fdbctl hammer --system daos --testbed gcp --servers 4 --clients 8
+/// [--io-depth n] [--index-cache]
 /// [--wrapper tiered|replicated[:n]|sharded[:n]] ...`
 pub fn cmd_hammer(args: &Args) -> Result<()> {
     let testbed = parse_testbed(opt(args, "testbed", "gcp")?)?;
@@ -90,8 +91,12 @@ pub fn cmd_hammer(args: &Args) -> Result<()> {
     let wrapper = parse_wrapper(opt(args, "wrapper", "none")?)?;
     let servers = num(args, "servers", 4usize)?;
     let clients = num(args, "clients", 8usize)?;
+    let io = crate::fdb::IoProfile::depth(num(args, "io-depth", 1usize)?)
+        .with_preload_indexes(args.flag("index-cache"));
+    io.validate().map_err(|e| anyhow::anyhow!("--io-depth: {e}"))?;
     let dep = deploy(testbed, kind, servers, clients, RedundancyOpt::None)
-        .with_wrapper(wrapper);
+        .with_wrapper(wrapper)
+        .with_io(io);
     let cfg = hammer::HammerConfig {
         procs_per_node: num(args, "procs", 8usize)?,
         nsteps: num(args, "steps", 10u32)?,
@@ -103,7 +108,7 @@ pub fn cmd_hammer(args: &Args) -> Result<()> {
     };
     let (r, trace) = hammer::run(&dep, cfg);
     println!(
-        "fdb-hammer {} [{}] on {} ({} srv / {} cli × {} procs, {} fields/proc of {})",
+        "fdb-hammer {} [{}] on {} ({} srv / {} cli × {} procs, {} fields/proc of {}, io-depth {})",
         kind.label(),
         dep.backend_config().describe(),
         testbed.name(),
@@ -112,6 +117,7 @@ pub fn cmd_hammer(args: &Args) -> Result<()> {
         cfg.procs_per_node,
         cfg.fields_per_proc(),
         crate::util::humansize::fmt_bytes(cfg.field_size),
+        dep.io.depth,
     );
     println!("  write: {:8.2} GiB/s   ({})", r.gibs_w(), r.write_time);
     println!("  read:  {:8.2} GiB/s   ({})", r.gibs_r(), r.read_time);
@@ -187,12 +193,20 @@ pub fn cmd_fieldio(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `fdbctl figures [--only figN_M] [--scale 0.05]`
+/// `fdbctl figures [--only figN_M] [--scale 0.05] [--json out.json]`
+/// With `--json`, the figures that ran are also written as a JSON array
+/// (machine-readable benchmark record, e.g. `BENCH_iodepth.json` from
+/// `--only abl_iodepth` in CI).
 pub fn cmd_figures(args: &Args) -> Result<()> {
     let scale = num(args, "scale", 0.05f64)?;
     let only = args.value_of("only").map_err(|e| anyhow::anyhow!(e))?;
+    let json_path = args
+        .value_of("json")
+        .map_err(|e| anyhow::anyhow!(e))?
+        .map(str::to_string);
     let mut ids = crate::bench::figures::all_ids();
     ids.extend(crate::bench::ablations::ablation_ids());
+    let mut emitted = Vec::new();
     for id in ids {
         if let Some(filter) = only {
             if filter != id {
@@ -206,9 +220,16 @@ pub fn cmd_figures(args: &Args) -> Result<()> {
             Some(fig) => {
                 print!("{}", fig.render());
                 println!("   [{:.1}s wall]", t0.elapsed().as_secs_f64());
+                emitted.push(fig.to_json());
             }
             None => bail!("unknown figure id `{id}`"),
         }
+    }
+    if let Some(path) = json_path {
+        let doc = crate::util::json::Json::Arr(emitted);
+        std::fs::write(&path, format!("{doc}"))
+            .map_err(|e| anyhow::anyhow!("write {path}: {e}"))?;
+        println!("wrote {path}");
     }
     Ok(())
 }
@@ -219,13 +240,18 @@ pub fn cmd_figures(args: &Args) -> Result<()> {
 pub fn cmd_opsrun(args: &Args) -> Result<()> {
     let testbed = parse_testbed(opt(args, "testbed", "gcp")?)?;
     let kind = parse_system(opt(args, "system", "daos")?)?;
+    // the queue depth reaches the I/O servers through the deployment:
+    // every `dep.fdb_traced` instance (writers and PGEN readers) gets it
+    let io = crate::fdb::IoProfile::depth(num(args, "io-depth", 1usize)?);
+    io.validate().map_err(|e| anyhow::anyhow!("--io-depth: {e}"))?;
     let dep = deploy(
         testbed,
         kind,
         num(args, "servers", 2usize)?,
         num(args, "clients", 4usize)?,
         RedundancyOpt::None,
-    );
+    )
+    .with_io(io);
     let grid = num(args, "grid", 64usize)?;
     let real_compute = !args.flag("no-compute");
     let compute: Compute = if real_compute {
@@ -318,14 +344,17 @@ pub fn usage() -> &'static str {
      \n\
      COMMANDS:\n\
        figures   regenerate the paper's tables/figures  [--only <id>] [--scale f]\n\
+                 [--json out.json]\n\
        hammer    fdb-hammer                 [--system s] [--testbed t] [--servers n]\n\
                  [--clients n] [--procs n] [--steps n] [--params n] [--levels n]\n\
                  [--field-size sz] [--contention] [--check]\n\
+                 [--io-depth n] [--index-cache]\n\
                  [--wrapper none|tiered|replicated[:n]|sharded[:n]]\n\
        ior       IOR-like generic benchmark [--system s] [--nops n] [--xfer sz] [--dfs]\n\
        fieldio   Field I/O PoC              [--system s] [--nfields n] [--dummy]\n\
        opsrun    end-to-end operational NWP run with PJRT PGEN compute\n\
                  [--system s] [--members n] [--steps n] [--grid 32|64] [--no-compute]\n\
+                 [--io-depth n]\n\
        admin     dataset stats + wipe demo   [--system s] [--nfields n]\n\
      \n\
      systems: lustre | daos | ceph | null      testbeds: nextgenio | gcp"

@@ -253,6 +253,15 @@ impl Daos {
 }
 
 impl DaosClient {
+    /// A fresh client handle on the same system and node (own connection
+    /// caches and OID batch) — the libdaos event-queue analogue backing
+    /// the FDB per-request I/O sessions.
+    pub fn fork(&self) -> DaosClient {
+        let mut c = self.sys.client(&self.node);
+        c.dummy = self.dummy;
+        c
+    }
+
     /// `daos_pool_connect`: one RPC; cached for the client lifetime.
     pub async fn pool_connect(&self, label: &str) -> Result<Rc<Pool>, DaosError> {
         if let Some(p) = self.connected_pools.borrow().get(label) {

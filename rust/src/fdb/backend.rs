@@ -6,6 +6,15 @@
 //! catalogue, replicated store) is one new trait impl instead of a
 //! cross-cutting edit of every FDB method.
 //!
+//! On top of the single-client surface, [`Store::session`] mints
+//! independent per-request **client sessions** ([`StoreSession`]): each
+//! session owns its own backend client handle (a fresh Lustre mount
+//! identity, DAOS event-queue equivalent, RADOS/S3 client instance), so
+//! the I/O-depth engine in [`crate::fdb::Fdb`] can keep N reads/writes
+//! in flight instead of serializing on the one `&mut` Store — the
+//! client-side asynchrony the DAOS papers identify as the real source
+//! of object-store throughput (arXiv:2311.18714, arXiv:2409.18682).
+//!
 //! The simulator is single-threaded, so the async methods return
 //! [`LocalBoxFuture`]s with no `Send` bound.
 
@@ -118,6 +127,34 @@ pub trait Store {
     fn take_lock_time(&self) -> SimTime {
         SimTime::ZERO
     }
+
+    /// Mint an independent per-request client session: a Store instance
+    /// over the *same* deployed backend but with its own client handle,
+    /// so its operations can be in flight concurrently with the parent's
+    /// and with other sessions'. `None` means the backend has no session
+    /// support and callers must stay on the serial path (the default).
+    fn session(&mut self) -> Option<Box<dyn StoreSession>> {
+        None
+    }
+}
+
+/// A per-request client session minted by [`Store::session`]. Sessions
+/// are full [`Store`]s (they carry `archive`/`read`/`flush` and the
+/// DAOS direct-retrieve fast path), plus [`StoreSession::into_store`]
+/// so wrapper backends can assemble sessions of their inner stores into
+/// a wrapper-of-sessions. The blanket impl makes every `'static` Store
+/// a session; backends only decide *how to construct* one (usually: a
+/// fresh instance over a forked client).
+pub trait StoreSession: Store {
+    /// Recover the plain `Store` view (wrappers hold inner sessions as
+    /// `Box<dyn Store>` fields).
+    fn into_store(self: Box<Self>) -> Box<dyn Store>;
+}
+
+impl<S: Store + 'static> StoreSession for S {
+    fn into_store(self: Box<Self>) -> Box<dyn Store> {
+        self
+    }
 }
 
 /// The metadata plane: the index network mapping identifiers to
@@ -128,7 +165,11 @@ pub trait Catalogue {
 
     /// Index one archived field. `elem` is the schema's element sub-key;
     /// `id` the full identifier (kept whole for catalogues that index by
-    /// complete keys, like the in-memory Null catalogue).
+    /// complete keys, like the in-memory Null catalogue). Backend
+    /// failures (mkdir on a non-directory during dataset init, index
+    /// file creation, ...) surface as [`FdbError::Backend`], never a
+    /// panic — the store-side twin of this guarantee landed first, this
+    /// is the catalogue-side ripple.
     fn archive<'a>(
         &'a mut self,
         ds: &'a Key,
@@ -136,7 +177,7 @@ pub trait Catalogue {
         elem: &'a Key,
         id: &'a Key,
         loc: &'a FieldLocation,
-    ) -> LocalBoxFuture<'a, ()>;
+    ) -> LocalBoxFuture<'a, Result<(), FdbError>>;
 
     /// Persist partial indexes (POSIX); no-op on immediately-persistent
     /// backends.
@@ -220,6 +261,11 @@ impl Store for NullStore {
             }),
         })
     }
+
+    fn session(&mut self) -> Option<Box<dyn StoreSession>> {
+        // the zero-cost sink is stateless: a fresh instance is a session
+        Some(Box::new(NullStore))
+    }
 }
 
 /// In-memory catalogue (no persistence, process-local visibility) —
@@ -291,9 +337,9 @@ impl Catalogue for NullCatalogue {
         _elem: &'a Key,
         id: &'a Key,
         loc: &'a FieldLocation,
-    ) -> LocalBoxFuture<'a, ()> {
+    ) -> LocalBoxFuture<'a, Result<(), FdbError>> {
         self.insert(id, loc);
-        ready(())
+        ready(Ok(()))
     }
 
     fn retrieve<'a>(
@@ -366,9 +412,9 @@ impl Catalogue for SharedNullCatalogue {
         _elem: &'a Key,
         id: &'a Key,
         loc: &'a FieldLocation,
-    ) -> LocalBoxFuture<'a, ()> {
+    ) -> LocalBoxFuture<'a, Result<(), FdbError>> {
         self.inner.borrow_mut().insert(id, loc);
-        ready(())
+        ready(Ok(()))
     }
 
     fn retrieve<'a>(
@@ -422,7 +468,7 @@ mod tests {
         let id = Key::new().with("expr", "a=b,c").with("step", "1");
         let ds = Key::new();
         let colloc = Key::new();
-        block_on(cat.archive(&ds, &colloc, &id, &id, &loc(7)));
+        block_on(cat.archive(&ds, &colloc, &id, &id, &loc(7))).unwrap();
         assert_eq!(cat.len(), 1);
         let listed = block_on(cat.list(&ds, &Request::parse("").unwrap()));
         assert_eq!(listed.len(), 1, "lossy round-trip must not drop keys");
@@ -438,7 +484,7 @@ mod tests {
         let colloc = Key::new();
         for step in ["1", "2", "2"] {
             let id = Key::of(&[("class", "od"), ("step", step)]).with("n", step);
-            block_on(cat.archive(&ds, &colloc, &id, &id, &loc(1)));
+            block_on(cat.archive(&ds, &colloc, &id, &id, &loc(1))).unwrap();
         }
         let axis = block_on(cat.axis(&ds, &colloc, "step"));
         assert_eq!(axis, vec!["1".to_string(), "2".to_string()]);
@@ -487,7 +533,7 @@ mod tests {
         let mut reader_view = shared.clone();
         let id = Key::of(&[("class", "od"), ("step", "1")]);
         let ds = Key::new();
-        block_on(writer_view.archive(&ds, &ds, &id, &id, &loc(3)));
+        block_on(writer_view.archive(&ds, &ds, &id, &id, &loc(3))).unwrap();
         assert_eq!(shared.len(), 1);
         let got = block_on(reader_view.retrieve(&ds, &ds, &id, &id));
         assert_eq!(got, Some(loc(3)));

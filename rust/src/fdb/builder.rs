@@ -32,6 +32,65 @@ use crate::s3::MemS3;
 use crate::sim::exec::Sim;
 use crate::sim::trace::Trace;
 
+/// The client's I/O-depth profile: how many store operations an FDB
+/// instance may keep in flight on the batched paths, and whether the
+/// POSIX catalogue may cache loaded index blobs reader-side.
+///
+/// `depth = 1` (the default) is exactly the pre-engine behaviour: one
+/// store client, serial ops. `depth = N` mints N per-request client
+/// sessions ([`crate::fdb::backend::StoreSession`]) and admits up to N
+/// concurrent reads/writes through a sim-native semaphore — the event-
+/// queue asynchrony of the DAOS interface papers. Results are byte- and
+/// order-identical across depths; only virtual time changes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct IoProfile {
+    /// max in-flight store operations on `archive_many` /
+    /// `retrieve_many` (1..=64)
+    pub depth: usize,
+    /// POSIX catalogue reader-side index caching: point lookups load an
+    /// index blob once per `(file, offset)` and serve later lookups from
+    /// memory (the real FDB loads indexes whole; blobs are immutable so
+    /// this is always coherent). Off by default to keep the thesis'
+    /// calibrated lookup costs; the queue-depth sweeps enable it so the
+    /// serial index client does not mask store-side parallelism.
+    pub preload_indexes: bool,
+}
+
+impl Default for IoProfile {
+    fn default() -> IoProfile {
+        IoProfile {
+            depth: 1,
+            preload_indexes: false,
+        }
+    }
+}
+
+impl IoProfile {
+    /// Shorthand for a depth-N profile with default caching.
+    pub fn depth(depth: usize) -> IoProfile {
+        IoProfile {
+            depth,
+            ..IoProfile::default()
+        }
+    }
+
+    pub fn with_preload_indexes(mut self, on: bool) -> IoProfile {
+        self.preload_indexes = on;
+        self
+    }
+
+    /// Bounds check (shared by the builder and the CLI front-ends).
+    pub fn validate(&self) -> Result<(), FdbError> {
+        if self.depth == 0 || self.depth > 64 {
+            return Err(FdbError::InvalidConfig(format!(
+                "io depth must be in 1..=64 (got {})",
+                self.depth
+            )));
+        }
+        Ok(())
+    }
+}
+
 /// Which backend pair an FDB instance runs over, plus its knobs.
 /// Wrapper variants (`Tiered`, `Replicated`, `Sharded`) nest other
 /// configs and compose recursively.
@@ -252,6 +311,7 @@ impl BackendConfig {
         &self,
         node: Option<&Rc<Node>>,
         schema: &Schema,
+        io: &IoProfile,
     ) -> Result<Box<dyn Catalogue>, FdbError> {
         let need_node = || {
             FdbError::InvalidConfig(format!("{} backend needs a client node", self.label()))
@@ -259,7 +319,10 @@ impl BackendConfig {
         Ok(match self {
             BackendConfig::Posix { fs, root } => {
                 let node = node.ok_or_else(need_node)?;
-                Box::new(PosixCatalogue::new(fs.client(node), root, schema.clone()))
+                Box::new(
+                    PosixCatalogue::new(fs.client(node), root, schema.clone())
+                        .with_index_cache(io.preload_indexes),
+                )
             }
             BackendConfig::Daos { daos, pool, .. } => {
                 let node = node.ok_or_else(need_node)?;
@@ -292,12 +355,14 @@ impl BackendConfig {
             BackendConfig::S3 { .. } | BackendConfig::Null => Box::new(NullCatalogue::new()),
             BackendConfig::SharedNull(cat) => Box::new(cat.clone()),
             // the durable back tier owns the index
-            BackendConfig::Tiered { back, .. } => back.build_catalogue(node, schema)?,
-            BackendConfig::Replicated { inner, .. } => inner.build_catalogue(node, schema)?,
+            BackendConfig::Tiered { back, .. } => back.build_catalogue(node, schema, io)?,
+            BackendConfig::Replicated { inner, .. } => {
+                inner.build_catalogue(node, schema, io)?
+            }
             BackendConfig::Sharded { inner, shards } => {
                 let mut parts = Vec::with_capacity(*shards);
                 for _ in 0..*shards {
-                    parts.push(inner.build_catalogue(node, schema)?);
+                    parts.push(inner.build_catalogue(node, schema, io)?);
                 }
                 Box::new(ShardedCatalogue::new(parts))
             }
@@ -312,6 +377,7 @@ pub struct FdbBuilder {
     trace: Option<Trace>,
     schema: Option<Schema>,
     config: Option<BackendConfig>,
+    io: IoProfile,
 }
 
 impl FdbBuilder {
@@ -322,6 +388,7 @@ impl FdbBuilder {
             trace: None,
             schema: None,
             config: None,
+            io: IoProfile::default(),
         }
     }
 
@@ -349,6 +416,18 @@ impl FdbBuilder {
         self
     }
 
+    /// Set the full I/O-depth profile.
+    pub fn io(mut self, io: IoProfile) -> FdbBuilder {
+        self.io = io;
+        self
+    }
+
+    /// Convenience: just the queue depth, default caching.
+    pub fn io_depth(mut self, depth: usize) -> FdbBuilder {
+        self.io.depth = depth;
+        self
+    }
+
     /// Validate the config tree and wire the matching Store/Catalogue
     /// pair, recursing through wrapper configs.
     pub fn build(self) -> Result<Fdb, FdbError> {
@@ -356,12 +435,13 @@ impl FdbBuilder {
             .config
             .ok_or_else(|| FdbError::InvalidConfig("no backend configured".to_string()))?;
         config.validate(self.node.as_ref())?;
+        self.io.validate()?;
         let schema = self
             .schema
             .unwrap_or_else(|| config.default_schema());
         let store = config.build_store(self.node.as_ref())?;
-        let catalogue = config.build_catalogue(self.node.as_ref(), &schema)?;
-        let mut fdb = Fdb::new(&self.sim, schema, store, catalogue);
+        let catalogue = config.build_catalogue(self.node.as_ref(), &schema, &self.io)?;
+        let mut fdb = Fdb::new(&self.sim, schema, store, catalogue).with_io(self.io);
         if let Some(trace) = self.trace {
             fdb = fdb.with_trace(trace);
         }

@@ -322,8 +322,13 @@ impl crate::fdb::backend::Catalogue for DaosCatalogue {
         elem: &'a Key,
         _id: &'a Key,
         loc: &'a FieldLocation,
-    ) -> crate::fdb::backend::LocalBoxFuture<'a, ()> {
-        Box::pin(DaosCatalogue::archive(self, ds, colloc, elem, loc))
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, Result<(), crate::fdb::FdbError>> {
+        // DAOS index inserts are kv_puts into created-on-demand KVs —
+        // no fallible filesystem surface on this path
+        Box::pin(async move {
+            DaosCatalogue::archive(self, ds, colloc, elem, loc).await;
+            Ok(())
+        })
     }
 
     fn retrieve<'a>(

@@ -228,4 +228,14 @@ impl crate::fdb::backend::Store for DaosStore {
     ) -> crate::fdb::backend::LocalBoxFuture<'a, bool> {
         Box::pin(DaosStore::wipe_dataset(self, ds))
     }
+
+    fn session(&mut self) -> Option<Box<dyn crate::fdb::backend::StoreSession>> {
+        // own client handle = own event queue: container creation is
+        // create-if-absent and OID batches come from shared container
+        // state, so concurrent sessions never collide
+        let mut s = DaosStore::new(self.client.fork(), &self.pool_label);
+        s.array_class = self.array_class;
+        s.hash_oids = self.hash_oids;
+        Some(Box::new(s))
+    }
 }

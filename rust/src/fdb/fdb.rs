@@ -8,21 +8,38 @@
 //! trace and distributed-lock accounting factored into a single shared
 //! wrapper ([`Fdb::account`]). Construction goes through
 //! [`crate::fdb::builder::FdbBuilder`].
+//!
+//! The **I/O-depth engine**: with [`IoProfile::depth`] > 1 the batched
+//! paths stop serializing on the single Store client and instead drive
+//! up to `depth` concurrent operations over per-request
+//! [`StoreSession`]s, admitted by a sim-native semaphore (a FIFO
+//! [`Resource`] with `depth` servers). Results are re-ordered to input
+//! order and per-op-class trace/lock accounting is preserved, so any
+//! `depth >= 1` is byte- and order-identical to `depth = 1` — only the
+//! virtual time changes. This is the queue-depth client asynchrony of
+//! the DAOS interface papers (event queues with N outstanding ops).
 
 use std::cell::{Cell, RefCell};
 use std::collections::VecDeque;
 use std::task::Waker;
 
-use crate::fdb::backend::{Catalogue, Store};
+use crate::fdb::backend::{Catalogue, Store, StoreSession};
+use crate::fdb::builder::IoProfile;
 use crate::fdb::datahandle::DataHandle;
 use crate::fdb::key::Key;
+use crate::fdb::location::FieldLocation;
 use crate::fdb::request::Request;
 use crate::fdb::schema::Schema;
 use crate::sim::exec::Sim;
 use crate::sim::futures::{boxed, join_all};
+use crate::sim::resource::Resource;
 use crate::sim::time::SimTime;
 use crate::sim::trace::{OpClass, Trace};
 use crate::util::content::Bytes;
+
+/// One store-pass result awaiting its catalogue insert:
+/// `(identifier, dataset, collocation, element, location)`.
+type Indexed = (Key, Key, Key, Key, FieldLocation);
 
 /// One FDB instance per simulated process (like linking libfdb).
 pub struct Fdb {
@@ -31,6 +48,14 @@ pub struct Fdb {
     catalogue: Box<dyn Catalogue>,
     pub trace: Trace,
     sim: Sim,
+    /// queue-depth configuration (depth 1 = the serial legacy paths)
+    io: IoProfile,
+    /// lazily-minted client sessions, one per admitted in-flight op;
+    /// reused across batches so session client state (open files, page
+    /// caches) persists like a real client's
+    sessions: Vec<Box<dyn StoreSession>>,
+    io_inflight: Cell<usize>,
+    io_inflight_peak: Cell<usize>,
 }
 
 impl Fdb {
@@ -49,6 +74,10 @@ impl Fdb {
             catalogue,
             trace: Trace::new(),
             sim: sim.clone(),
+            io: IoProfile::default(),
+            sessions: Vec::new(),
+            io_inflight: Cell::new(0),
+            io_inflight_peak: Cell::new(0),
         }
     }
 
@@ -58,16 +87,63 @@ impl Fdb {
         self
     }
 
+    /// Set the I/O-depth profile (callers go through
+    /// [`crate::fdb::builder::FdbBuilder::io`], which validates it).
+    pub fn with_io(mut self, io: IoProfile) -> Fdb {
+        self.io = io;
+        self
+    }
+
+    /// The active I/O profile.
+    pub fn io_profile(&self) -> IoProfile {
+        self.io
+    }
+
+    /// Client sessions minted so far (0 until a batched op runs at
+    /// depth > 1).
+    pub fn io_sessions(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// High-water mark of concurrently in-flight session operations —
+    /// never exceeds [`IoProfile::depth`] (the engine's semaphore bound;
+    /// asserted by the integration tests).
+    pub fn io_inflight_peak(&self) -> usize {
+        self.io_inflight_peak.get()
+    }
+
     /// Backend tags of the wired (store, catalogue) pair.
     pub fn backend_names(&self) -> (&'static str, &'static str) {
         (self.store.name(), self.catalogue.name())
     }
 
+    /// Fill the session pool up to the configured depth. Returns whether
+    /// the fan-out engine can run; `false` (depth 1, or a backend
+    /// without session support) keeps callers on the serial paths.
+    fn ensure_sessions(&mut self) -> bool {
+        if self.io.depth <= 1 {
+            return false;
+        }
+        while self.sessions.len() < self.io.depth {
+            match self.store.session() {
+                Some(s) => self.sessions.push(s),
+                None => {
+                    self.sessions.clear();
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
     /// The shared trace/lock wrapper: record the span since `t0` under
-    /// `class`, with any distributed-lock time drained from both
-    /// backends split out into [`OpClass::Lock`].
+    /// `class`, with any distributed-lock time drained from the backends
+    /// (and any idle sessions) split out into [`OpClass::Lock`].
     fn account(&mut self, class: OpClass, t0: SimTime) {
-        let lock = self.store.take_lock_time() + self.catalogue.take_lock_time();
+        let mut lock = self.store.take_lock_time() + self.catalogue.take_lock_time();
+        for s in &self.sessions {
+            lock = lock + s.take_lock_time();
+        }
         self.trace.record(class, self.sim.now() - t0 - lock);
         if lock > SimTime::ZERO {
             self.trace.record(OpClass::Lock, lock);
@@ -87,17 +163,23 @@ impl Fdb {
         self.account(OpClass::DataWrite, t0);
         let loc = loc?;
         let t1 = self.sim.now();
-        self.catalogue.archive(&ds, &colloc, &elem, id, &loc).await;
+        let indexed = self.catalogue.archive(&ds, &colloc, &elem, id, &loc).await;
         self.account(OpClass::IndexWrite, t1);
-        Ok(())
+        // on a catalogue error the written field stays un-indexed and
+        // therefore invisible — same story as a crashed writer
+        indexed
     }
 
     /// Batched archive: all Store writes first, then all Catalogue
     /// inserts — the small-object batching pattern (arXiv:2311.18714).
     /// Identifiers are validated up front; nothing is written on a
-    /// validation error. A Store error mid-batch stops before the
+    /// validation error. A Store error in the batch stops before the
     /// Catalogue pass: the already-written fields stay un-indexed and
     /// therefore invisible, like a crashed writer's unflushed step.
+    ///
+    /// At [`IoProfile::depth`] > 1 the Store pass fans out over client
+    /// sessions with up to `depth` writes in flight; the Catalogue pass
+    /// stays in input order either way, so the index is identical.
     pub async fn archive_many(
         &mut self,
         items: Vec<(Key, Bytes)>,
@@ -106,37 +188,136 @@ impl Fdb {
         for (id, _) in &items {
             split.push(self.schema.split(id)?);
         }
-        let t0 = self.sim.now();
-        let mut indexed = Vec::with_capacity(items.len());
-        let mut failed = None;
-        for ((id, data), (ds, colloc, elem)) in items.into_iter().zip(split) {
-            match self.store.archive(&ds, &colloc, &id, data).await {
-                Ok(loc) => indexed.push((id, ds, colloc, elem, loc)),
-                Err(e) => {
-                    failed = Some(e);
-                    break;
+        let indexed = if self.ensure_sessions() {
+            self.archive_fanout(items, split).await?
+        } else {
+            let t0 = self.sim.now();
+            let mut indexed = Vec::with_capacity(items.len());
+            let mut failed = None;
+            for ((id, data), (ds, colloc, elem)) in items.into_iter().zip(split) {
+                match self.store.archive(&ds, &colloc, &id, data).await {
+                    Ok(loc) => indexed.push((id, ds, colloc, elem, loc)),
+                    Err(e) => {
+                        failed = Some(e);
+                        break;
+                    }
                 }
             }
-        }
-        self.account(OpClass::DataWrite, t0);
-        if let Some(e) = failed {
-            return Err(e);
-        }
+            self.account(OpClass::DataWrite, t0);
+            if let Some(e) = failed {
+                return Err(e);
+            }
+            indexed
+        };
         let t1 = self.sim.now();
         for (id, ds, colloc, elem, loc) in &indexed {
-            self.catalogue.archive(ds, colloc, elem, id, loc).await;
+            let r = self.catalogue.archive(ds, colloc, elem, id, loc).await;
+            if let Err(e) = r {
+                // later fields of the batch stay un-indexed — invisible,
+                // like the store-error story above
+                self.account(OpClass::IndexWrite, t1);
+                return Err(e);
+            }
         }
         self.account(OpClass::IndexWrite, t1);
         Ok(())
     }
 
-    /// FDB flush(): Store flush then Catalogue flush (§2.7.1). Fallible
-    /// since tiered stores write absorbed fields through to the backing
-    /// tier here; on a Store error the Catalogue flush is skipped, so an
-    /// index for non-durable data is never published.
+    /// The Store half of [`Fdb::archive_many`] at depth > 1: one task
+    /// per field, admitted by a `depth`-server semaphore; each admitted
+    /// task checks a client session out of the pool, writes through it,
+    /// and returns it. Locations come back in input order. On errors the
+    /// whole batch reports the first (by input index) error and nothing
+    /// is indexed.
+    async fn archive_fanout(
+        &mut self,
+        items: Vec<(Key, Bytes)>,
+        split: Vec<(Key, Key, Key)>,
+    ) -> Result<Vec<Indexed>, super::FdbError> {
+        let n = items.len();
+        let (ids, datas): (Vec<Key>, Vec<Bytes>) = items.into_iter().unzip();
+        let sem = Resource::new("fdb/io-depth", self.sessions.len().max(1));
+        let pool: RefCell<Vec<Box<dyn StoreSession>>> =
+            RefCell::new(std::mem::take(&mut self.sessions));
+        let locs: RefCell<Vec<Option<FieldLocation>>> =
+            RefCell::new((0..n).map(|_| None).collect());
+        let failed: RefCell<Option<(usize, super::FdbError)>> = RefCell::new(None);
+        let sim = self.sim.clone();
+        let trace = self.trace.clone();
+        {
+            let (pool, locs, failed) = (&pool, &locs, &failed);
+            let (sem, sim, trace) = (&sem, &sim, &trace);
+            let inflight = &self.io_inflight;
+            let peak = &self.io_inflight_peak;
+            let tasks: Vec<_> = datas
+                .into_iter()
+                .enumerate()
+                .map(|(i, data)| {
+                    let id = &ids[i];
+                    let (ds, colloc, _elem) = &split[i];
+                    boxed(async move {
+                        sem.acquire().await;
+                        let mut session =
+                            pool.borrow_mut().pop().expect("session free under semaphore");
+                        inflight.set(inflight.get() + 1);
+                        peak.set(peak.get().max(inflight.get()));
+                        let t0 = sim.now();
+                        let r = session.archive(ds, colloc, id, data).await;
+                        let lock = session.take_lock_time();
+                        inflight.set(inflight.get() - 1);
+                        pool.borrow_mut().push(session);
+                        sem.release();
+                        match r {
+                            Ok(loc) => {
+                                trace.record(OpClass::DataWrite, sim.now() - t0 - lock);
+                                if lock > SimTime::ZERO {
+                                    trace.record(OpClass::Lock, lock);
+                                }
+                                locs.borrow_mut()[i] = Some(loc);
+                            }
+                            Err(e) => {
+                                let mut f = failed.borrow_mut();
+                                if f.as_ref().map(|(j, _)| i < *j).unwrap_or(true) {
+                                    *f = Some((i, e));
+                                }
+                            }
+                        }
+                    })
+                })
+                .collect();
+            join_all(tasks).await;
+        }
+        self.sessions = pool.into_inner();
+        if let Some((_, e)) = failed.into_inner() {
+            return Err(e);
+        }
+        let mut indexed = Vec::with_capacity(n);
+        for ((id, (ds, colloc, elem)), loc) in
+            ids.into_iter().zip(split).zip(locs.into_inner())
+        {
+            let loc = loc.expect("no failure => every field has a location");
+            indexed.push((id, ds, colloc, elem, loc));
+        }
+        Ok(indexed)
+    }
+
+    /// FDB flush(): Store flush (including every minted client session —
+    /// their buffered writes must be durable too), then Catalogue flush
+    /// (§2.7.1). Fallible since tiered stores write absorbed fields
+    /// through to the backing tier here; on a Store error the Catalogue
+    /// flush is skipped, so an index for non-durable data is never
+    /// published.
     pub async fn flush(&mut self) -> Result<(), super::FdbError> {
         let t0 = self.sim.now();
-        let flushed = self.store.flush().await;
+        let mut flushed = self.store.flush().await;
+        if flushed.is_ok() {
+            for s in &mut self.sessions {
+                flushed = s.flush().await;
+                if flushed.is_err() {
+                    break;
+                }
+            }
+        }
         if flushed.is_ok() {
             self.catalogue.flush().await;
         }
@@ -174,6 +355,11 @@ impl Fdb {
     /// of them queue if lookups outpace reads.) Returns the found
     /// `(identifier, bytes)` pairs in input order; absent fields are
     /// skipped (cache semantics, like [`Fdb::retrieve`]).
+    ///
+    /// At [`IoProfile::depth`] > 1 the Store half fans out over client
+    /// sessions: up to `depth` data reads in flight behind the pipelined
+    /// lookups, results re-ordered to input order — the intra-store read
+    /// parallelism the serial pipe cannot express.
     pub async fn retrieve_many(
         &mut self,
         ids: &[Key],
@@ -182,7 +368,11 @@ impl Fdb {
         for id in ids {
             split.push(self.schema.split(id)?);
         }
+        let fanout = self.ensure_sessions();
         if self.store.direct_retrieve_enabled() {
+            if fanout {
+                return self.retrieve_direct_fanout(ids, &split).await;
+            }
             // direct mode: the Store serves the lookups too, so lookup
             // and read contend for the same client — run sequentially
             let mut out = Vec::new();
@@ -199,6 +389,9 @@ impl Fdb {
                 }
             }
             return Ok(out);
+        }
+        if fanout {
+            return self.retrieve_fanout(ids, &split).await;
         }
         let pipe: Pipe<(Key, DataHandle)> = Pipe::new();
         let out: RefCell<Vec<(Key, Bytes)>> = RefCell::new(Vec::new());
@@ -251,6 +444,174 @@ impl Fdb {
             return Err(e);
         }
         Ok(out.into_inner())
+    }
+
+    /// [`Fdb::retrieve_many`] at depth > 1: the Catalogue client still
+    /// runs its lookups serially (one index client, like the pipe path),
+    /// but each resolved handle is handed to a per-field read task via a
+    /// one-shot slot. Read tasks are admitted by a `depth`-server
+    /// semaphore and check client sessions out of the pool, so up to
+    /// `depth` store reads are in flight at once. Results land in an
+    /// input-order table; absent fields are skipped.
+    async fn retrieve_fanout(
+        &mut self,
+        ids: &[Key],
+        split: &[(Key, Key, Key)],
+    ) -> Result<Vec<(Key, Bytes)>, super::FdbError> {
+        let n = ids.len();
+        let sem = Resource::new("fdb/io-depth", self.sessions.len().max(1));
+        let pool: RefCell<Vec<Box<dyn StoreSession>>> =
+            RefCell::new(std::mem::take(&mut self.sessions));
+        let slots: Vec<Slot<Option<DataHandle>>> = (0..n).map(|_| Slot::new()).collect();
+        let out: RefCell<Vec<Option<(Key, Bytes)>>> =
+            RefCell::new((0..n).map(|_| None).collect());
+        let failed: RefCell<Option<(usize, super::FdbError)>> = RefCell::new(None);
+        let lock_total: Cell<SimTime> = Cell::new(SimTime::ZERO);
+        let sim = self.sim.clone();
+        let trace = self.trace.clone();
+        {
+            let (pool, slots, out, failed) = (&pool, &slots, &out, &failed);
+            let (sem, sim, trace, lock_total) = (&sem, &sim, &trace, &lock_total);
+            let inflight = &self.io_inflight;
+            let peak = &self.io_inflight_peak;
+            let catalogue = &mut self.catalogue;
+            let lookups = boxed(async move {
+                for (i, (id, (ds, colloc, elem))) in ids.iter().zip(split).enumerate() {
+                    let t0 = sim.now();
+                    let loc = catalogue.retrieve(ds, colloc, elem, id).await;
+                    let lock = catalogue.take_lock_time();
+                    lock_total.set(lock_total.get() + lock);
+                    trace.record(OpClass::IndexRead, sim.now() - t0 - lock);
+                    slots[i].put(loc.map(|l| DataHandle::from_location(&l)));
+                }
+            });
+            let mut tasks = vec![lookups];
+            for (i, id) in ids.iter().enumerate() {
+                tasks.push(boxed(async move {
+                    let Some(handle) = slots[i].take().await else {
+                        return; // absent field: cache semantics
+                    };
+                    sem.acquire().await;
+                    let mut session =
+                        pool.borrow_mut().pop().expect("session free under semaphore");
+                    inflight.set(inflight.get() + 1);
+                    peak.set(peak.get().max(inflight.get()));
+                    let t0 = sim.now();
+                    let r = session.read(&handle).await;
+                    let lock = session.take_lock_time();
+                    lock_total.set(lock_total.get() + lock);
+                    inflight.set(inflight.get() - 1);
+                    pool.borrow_mut().push(session);
+                    sem.release();
+                    match r {
+                        Ok(bytes) => {
+                            trace.record(OpClass::DataRead, sim.now() - t0 - lock);
+                            out.borrow_mut()[i] = Some((id.clone(), bytes));
+                        }
+                        Err(e) => {
+                            let mut f = failed.borrow_mut();
+                            if f.as_ref().map(|(j, _)| i < *j).unwrap_or(true) {
+                                *f = Some((i, e));
+                            }
+                        }
+                    }
+                }));
+            }
+            join_all(tasks).await;
+        }
+        self.sessions = pool.into_inner();
+        let lock = lock_total.get();
+        if lock > SimTime::ZERO {
+            self.trace.record(OpClass::Lock, lock);
+        }
+        if let Some((_, e)) = failed.into_inner() {
+            return Err(e);
+        }
+        Ok(out.into_inner().into_iter().flatten().collect())
+    }
+
+    /// The direct-retrieve (hash-OID) variant of the fan-out: lookups
+    /// would contend with reads on the single Store client, which is why
+    /// the serial path runs them back-to-back — but sessions remove that
+    /// contention entirely: each task resolves *and* reads through its
+    /// own client, `depth` fields in flight.
+    async fn retrieve_direct_fanout(
+        &mut self,
+        ids: &[Key],
+        split: &[(Key, Key, Key)],
+    ) -> Result<Vec<(Key, Bytes)>, super::FdbError> {
+        let n = ids.len();
+        let sem = Resource::new("fdb/io-depth", self.sessions.len().max(1));
+        let pool: RefCell<Vec<Box<dyn StoreSession>>> =
+            RefCell::new(std::mem::take(&mut self.sessions));
+        let out: RefCell<Vec<Option<(Key, Bytes)>>> =
+            RefCell::new((0..n).map(|_| None).collect());
+        let failed: RefCell<Option<(usize, super::FdbError)>> = RefCell::new(None);
+        let lock_total: Cell<SimTime> = Cell::new(SimTime::ZERO);
+        let sim = self.sim.clone();
+        let trace = self.trace.clone();
+        {
+            let (pool, out, failed) = (&pool, &out, &failed);
+            let (sem, sim, trace, lock_total) = (&sem, &sim, &trace, &lock_total);
+            let inflight = &self.io_inflight;
+            let peak = &self.io_inflight_peak;
+            let tasks: Vec<_> = ids
+                .iter()
+                .enumerate()
+                .map(|(i, id)| {
+                    let (ds, _, _) = &split[i];
+                    boxed(async move {
+                        sem.acquire().await;
+                        let mut session =
+                            pool.borrow_mut().pop().expect("session free under semaphore");
+                        inflight.set(inflight.get() + 1);
+                        peak.set(peak.get().max(inflight.get()));
+                        let t0 = sim.now();
+                        let loc = session.retrieve_direct(ds, id).await;
+                        let lock = session.take_lock_time();
+                        lock_total.set(lock_total.get() + lock);
+                        trace.record(OpClass::IndexRead, sim.now() - t0 - lock);
+                        let mut result = Ok(None);
+                        if let Some(loc) = loc {
+                            let h = DataHandle::from_location(&loc);
+                            let t1 = sim.now();
+                            let r = session.read(&h).await;
+                            let lock = session.take_lock_time();
+                            lock_total.set(lock_total.get() + lock);
+                            result = r.map(Some);
+                            if result.is_ok() {
+                                trace.record(OpClass::DataRead, sim.now() - t1 - lock);
+                            }
+                        }
+                        inflight.set(inflight.get() - 1);
+                        pool.borrow_mut().push(session);
+                        sem.release();
+                        match result {
+                            Ok(Some(bytes)) => {
+                                out.borrow_mut()[i] = Some((id.clone(), bytes));
+                            }
+                            Ok(None) => {}
+                            Err(e) => {
+                                let mut f = failed.borrow_mut();
+                                if f.as_ref().map(|(j, _)| i < *j).unwrap_or(true) {
+                                    *f = Some((i, e));
+                                }
+                            }
+                        }
+                    })
+                })
+                .collect();
+            join_all(tasks).await;
+        }
+        self.sessions = pool.into_inner();
+        let lock = lock_total.get();
+        if lock > SimTime::ZERO {
+            self.trace.record(OpClass::Lock, lock);
+        }
+        if let Some((_, e)) = failed.into_inner() {
+            return Err(e);
+        }
+        Ok(out.into_inner().into_iter().flatten().collect())
     }
 
     /// Expand a request's wildcard dimensions from the axes.
@@ -348,6 +709,14 @@ impl Fdb {
             return false;
         }
         let removed = self.store.wipe_dataset(ds).await;
+        // sessions wipe too: that purges their per-dataset client state
+        // (open data files, absorbed-but-unspilled tiered fields) for
+        // `ds` only — state for OTHER datasets must survive exactly as
+        // it does at depth 1. The main store already unlinked the files,
+        // so session wipes find nothing on disk.
+        for s in &mut self.sessions {
+            s.wipe_dataset(ds).await;
+        }
         self.catalogue.deregister_dataset(ds).await;
         removed
     }
@@ -408,6 +777,55 @@ impl<'a, T> std::future::Future for Pop<'a, T> {
             return std::task::Poll::Ready(None);
         }
         *self.pipe.waker.borrow_mut() = Some(cx.waker().clone());
+        std::task::Poll::Pending
+    }
+}
+
+/// A one-shot value slot connecting the lookup task to a per-field read
+/// task in the fan-out engine: the producer `put`s exactly once, the
+/// single consumer `take().await`s it. Waker-based so the consumer
+/// suspends cleanly while the catalogue client is still looking up
+/// earlier identifiers.
+struct Slot<T> {
+    value: RefCell<Option<T>>,
+    waker: RefCell<Option<Waker>>,
+}
+
+impl<T> Slot<T> {
+    fn new() -> Slot<T> {
+        Slot {
+            value: RefCell::new(None),
+            waker: RefCell::new(None),
+        }
+    }
+
+    fn put(&self, value: T) {
+        *self.value.borrow_mut() = Some(value);
+        if let Some(w) = self.waker.borrow_mut().take() {
+            w.wake();
+        }
+    }
+
+    fn take(&self) -> TakeSlot<'_, T> {
+        TakeSlot { slot: self }
+    }
+}
+
+struct TakeSlot<'a, T> {
+    slot: &'a Slot<T>,
+}
+
+impl<'a, T> std::future::Future for TakeSlot<'a, T> {
+    type Output = T;
+
+    fn poll(
+        self: std::pin::Pin<&mut Self>,
+        cx: &mut std::task::Context<'_>,
+    ) -> std::task::Poll<T> {
+        if let Some(value) = self.slot.value.borrow_mut().take() {
+            return std::task::Poll::Ready(value);
+        }
+        *self.slot.waker.borrow_mut() = Some(cx.waker().clone());
         std::task::Poll::Pending
     }
 }

@@ -18,12 +18,21 @@
 //! `Tiered { front, back }`, ...) and [`FdbBuilder`] validates it and
 //! wires the matching pair. Backend failures are typed
 //! ([`FdbError::Backend`], [`FdbError::AllReplicasFailed`]) — archive/
-//! flush paths return `Result` instead of panicking inside the
-//! simulator. On top of the one-field calls, [`Fdb::archive_many`] and
-//! [`Fdb::retrieve_many`] provide the batched paths — catalogue lookups
-//! pipelined with store reads — that the DAOS interface papers
-//! (arXiv:2311.18714, arXiv:2409.18682) identify as the key to scalable
-//! small-object I/O.
+//! flush paths (store *and* catalogue side) return `Result` instead of
+//! panicking inside the simulator. On top of the one-field calls,
+//! [`Fdb::archive_many`] and [`Fdb::retrieve_many`] provide the batched
+//! paths — catalogue lookups pipelined with store reads — that the DAOS
+//! interface papers (arXiv:2311.18714, arXiv:2409.18682) identify as
+//! the key to scalable small-object I/O.
+//!
+//! The batched paths scale past one outstanding op through the
+//! **I/O-depth engine**: an [`IoProfile`] (`FdbBuilder::io` /
+//! `io_depth`, `fdbctl hammer --io-depth N`) mints per-request client
+//! sessions ([`backend::StoreSession`], one forked backend client each)
+//! and a sim-native semaphore admits up to `depth` concurrent store
+//! reads/writes, with results re-ordered to input order. Depth 1 is
+//! bit-for-bit the legacy serial behaviour; any depth returns identical
+//! bytes — only virtual time changes (see the `abl_iodepth` ablation).
 
 pub mod admin;
 pub mod backend;
@@ -59,8 +68,10 @@ pub mod s3 {
 
 pub mod wrappers;
 
-pub use backend::{Catalogue, NullCatalogue, NullStore, SharedNullCatalogue, Store};
-pub use builder::{BackendConfig, FdbBuilder};
+pub use backend::{
+    Catalogue, NullCatalogue, NullStore, SharedNullCatalogue, Store, StoreSession,
+};
+pub use builder::{BackendConfig, FdbBuilder, IoProfile};
 pub use datahandle::DataHandle;
 pub use fdb::Fdb;
 pub use key::Key;

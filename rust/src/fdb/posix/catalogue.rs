@@ -4,14 +4,16 @@
 //! TOC file, with masking and TOC pre-loading on the read side.
 
 use std::collections::{BTreeMap, HashMap};
+use std::rc::Rc;
 
 use super::index;
-use super::store::sanitize;
+use super::store::{fs_err, sanitize};
 use super::toc::{Axes, IndexRef, TocRecord};
 use crate::fdb::key::Key;
 use crate::fdb::location::FieldLocation;
 use crate::fdb::request::Request;
 use crate::fdb::schema::Schema;
+use crate::fdb::FdbError;
 use crate::lustre::{Fd, FsError, LustreClient, StripeSpec};
 
 /// One collocation's live (in-memory) indexing state for a writer.
@@ -50,6 +52,12 @@ pub struct PosixCatalogue {
     schema: Schema,
     write_state: HashMap<String, DatasetState>,
     preloaded: HashMap<String, Preloaded>,
+    /// reader-side index caching (IoProfile::preload_indexes): loaded
+    /// index blobs are immutable — partial flushes append *new* blobs at
+    /// new offsets and get new TOC records — so entries cached per
+    /// (index file, blob offset) are always coherent
+    index_cache_on: bool,
+    index_cache: HashMap<(String, u64), Rc<Vec<index::IndexEntry>>>,
 }
 
 impl PosixCatalogue {
@@ -60,7 +68,17 @@ impl PosixCatalogue {
             schema,
             write_state: HashMap::new(),
             preloaded: HashMap::new(),
+            index_cache_on: false,
+            index_cache: HashMap::new(),
         }
+    }
+
+    /// Enable reader-side index-blob caching (the real FDB loads indexes
+    /// whole and keeps them; the default-off 3-read point lookup models
+    /// the thesis' uncached cost).
+    pub fn with_index_cache(mut self, on: bool) -> PosixCatalogue {
+        self.index_cache_on = on;
+        self
     }
 
     fn ds_dir(&self, ds: &Key) -> String {
@@ -72,14 +90,17 @@ impl PosixCatalogue {
     }
 
     /// Dataset init: mkdir, TOC creation + Init record, schema copy.
-    /// All steps tolerate racing writers (thesis consistency mechanisms).
-    async fn ensure_dataset(&mut self, ds: &Key) -> &mut DatasetState {
+    /// All steps tolerate racing writers (thesis consistency mechanisms);
+    /// real filesystem failures (a root path component that is a regular
+    /// file, ...) surface as [`FdbError::Backend`] — the mkdir here used
+    /// to be the last remaining archive-path panic.
+    async fn ensure_dataset(&mut self, ds: &Key) -> Result<&mut DatasetState, FdbError> {
         let dsc = ds.canonical();
         if !self.write_state.contains_key(&dsc) {
             let dir = self.ds_dir(ds);
             match self.client.mkdir(&dir).await {
                 Ok(()) | Err(FsError::AlreadyExists) => {}
-                Err(e) => panic!("mkdir {dir}: {e}"),
+                Err(e) => return Err(fs_err("mkdir", &dir, e)),
             }
             let toc_path = Self::toc_path(&dir);
             let toc_fd = match self.client.create(&toc_path, StripeSpec::default_layout()).await
@@ -87,8 +108,14 @@ impl PosixCatalogue {
                 Ok(fd) => {
                     // we won the race: write the Init header + schema copy
                     let rec = TocRecord::Init { dataset: dsc.clone() }.encode();
-                    self.client.write(&fd, &rec).await.unwrap();
-                    self.client.fdatasync(&fd).await.unwrap();
+                    self.client
+                        .write(&fd, &rec)
+                        .await
+                        .map_err(|e| fs_err("write", &toc_path, e))?;
+                    self.client
+                        .fdatasync(&fd)
+                        .await
+                        .map_err(|e| fs_err("fdatasync", &toc_path, e))?;
                     let schema_path = format!("{dir}/schema");
                     if let Ok(sfd) = self
                         .client
@@ -96,18 +123,25 @@ impl PosixCatalogue {
                         .await
                     {
                         let text = self.schema.to_text();
-                        self.client.write(&sfd, text.as_bytes()).await.unwrap();
-                        self.client.fdatasync(&sfd).await.unwrap();
+                        self.client
+                            .write(&sfd, text.as_bytes())
+                            .await
+                            .map_err(|e| fs_err("write", &schema_path, e))?;
+                        self.client
+                            .fdatasync(&sfd)
+                            .await
+                            .map_err(|e| fs_err("fdatasync", &schema_path, e))?;
                     }
                     fd
                 }
+                // lost the race: a peer owns the Init record
                 Err(FsError::AlreadyExists) => self
                     .client
                     .open_append(&toc_path)
                     .await
-                    .unwrap()
-                    .expect("toc exists"),
-                Err(e) => panic!("create toc: {e}"),
+                    .map_err(|e| fs_err("open", &toc_path, e))?
+                    .ok_or_else(|| fs_err("open", &toc_path, FsError::NotFound))?,
+                Err(e) => return Err(fs_err("create", &toc_path, e)),
             };
             self.write_state.insert(
                 dsc.clone(),
@@ -119,29 +153,38 @@ impl PosixCatalogue {
                 },
             );
         }
-        self.write_state.get_mut(&dsc).unwrap()
+        Ok(self.write_state.get_mut(&dsc).unwrap())
     }
 
     /// Catalogue archive(): pure in-memory indexing (no I/O beyond
-    /// first-call file creation).
-    pub async fn archive(&mut self, ds: &Key, colloc: &Key, elem: &Key, loc: &FieldLocation) {
+    /// first-call file creation). Fallible: dataset init and index-file
+    /// creation hit the filesystem.
+    pub async fn archive(
+        &mut self,
+        ds: &Key,
+        colloc: &Key,
+        elem: &Key,
+        loc: &FieldLocation,
+    ) -> Result<(), FdbError> {
         let client_id = self.client.id;
-        let state = self.ensure_dataset(ds).await;
+        let state = self.ensure_dataset(ds).await?;
         let dir = state.dir.clone();
         let cc = colloc.canonical();
         if !state.collocs.contains_key(&cc) {
             // create the pair of per-process index files
             let base = format!("{dir}/{}.{}", sanitize(&cc), client_id);
+            let ppath = format!("{base}.pindex");
             let partial_fd = self
                 .client
-                .create(&format!("{base}.pindex"), StripeSpec::default_layout())
+                .create(&ppath, StripeSpec::default_layout())
                 .await
-                .expect("unique partial index file");
+                .map_err(|e| fs_err("create", &ppath, e))?;
+            let fpath = format!("{base}.findex");
             let full_fd = self
                 .client
-                .create(&format!("{base}.findex"), StripeSpec::default_layout())
+                .create(&fpath, StripeSpec::default_layout())
                 .await
-                .expect("unique full index file");
+                .map_err(|e| fs_err("create", &fpath, e))?;
             let state = self.write_state.get_mut(&ds.canonical()).unwrap();
             state.collocs.insert(
                 cc.clone(),
@@ -178,6 +221,7 @@ impl PosixCatalogue {
         cs.full.insert(ec, (uri_id, off, len));
         cs.axes_partial.insert_key(elem);
         cs.axes_full.insert_key(elem);
+        Ok(())
     }
 
     /// Catalogue flush(): persist partial indexes, then sub-TOC entries
@@ -374,9 +418,32 @@ impl PosixCatalogue {
     }
 
     /// Drop cached pre-loaded state (new flushes become visible — used by
-    /// consumers that re-list per step, like PGEN).
+    /// consumers that re-list per step, like PGEN). Also drops cached
+    /// index blobs under the dataset's directory: they stay coherent for
+    /// live files, but a wiped dataset must not serve ghost entries.
     pub fn invalidate_preload(&mut self, ds: &Key) {
         self.preloaded.remove(&ds.canonical());
+        // trailing '/' so a sibling dataset whose directory name merely
+        // shares a prefix keeps its (still-coherent) cached blobs
+        let dir = format!("{}/", self.ds_dir(ds));
+        self.index_cache.retain(|(path, _), _| !path.starts_with(&dir));
+    }
+
+    /// Cached whole-blob load (index caching mode): one eager read per
+    /// (index file, blob offset), in-memory afterwards — how the real
+    /// FDB treats its loaded B-tree indexes.
+    async fn load_index_cached(&mut self, r: &IndexRef) -> Rc<Vec<index::IndexEntry>> {
+        let key = (r.index_path.clone(), r.offset);
+        if let Some(hit) = self.index_cache.get(&key) {
+            return hit.clone();
+        }
+        let entries = Rc::new(self.load_index_full(r).await);
+        // only cache blobs that parsed: an empty result may be a
+        // transient read failure rather than an empty index
+        if !entries.is_empty() {
+            self.index_cache.insert(key, entries.clone());
+        }
+        entries
     }
 
     /// Load one index blob from its file: 3 reads (prelude, header, page)
@@ -467,7 +534,9 @@ impl PosixCatalogue {
         vals.into_iter().collect()
     }
 
-    /// Catalogue retrieve(): newest matching index wins.
+    /// Catalogue retrieve(): newest matching index wins. In index-cache
+    /// mode the blob is loaded whole once and point lookups are served
+    /// from memory; otherwise each lookup pays the 3-read chain.
     pub async fn retrieve(
         &mut self,
         ds: &Key,
@@ -482,8 +551,14 @@ impl PosixCatalogue {
             .filter(|r| r.colloc == cc && r.axes.may_contain(elem))
             .cloned()
             .collect();
+        let ec = elem.canonical();
         for r in candidates {
-            if let Some((uri_id, off, len)) = self.load_index_lookup(&r, elem).await {
+            if self.index_cache_on {
+                let entries = self.load_index_cached(&r).await;
+                if let Some(e) = entries.iter().find(|e| e.elem == ec) {
+                    return Self::expand_uri(&r, e.uri_id, e.offset, e.length);
+                }
+            } else if let Some((uri_id, off, len)) = self.load_index_lookup(&r, elem).await {
                 return Self::expand_uri(&r, uri_id, off, len);
             }
         }
@@ -509,7 +584,12 @@ impl PosixCatalogue {
             if colloc_conflict {
                 continue;
             }
-            for e in self.load_index_full(&r).await {
+            let entries = if self.index_cache_on {
+                self.load_index_cached(&r).await
+            } else {
+                Rc::new(self.load_index_full(&r).await)
+            };
+            for e in entries.iter() {
                 let ek = Key::parse(&e.elem).unwrap_or_default();
                 let full = ds.merged(&ck).merged(&ek);
                 if !request.matches(&full) {
@@ -539,7 +619,7 @@ impl crate::fdb::backend::Catalogue for PosixCatalogue {
         elem: &'a Key,
         _id: &'a Key,
         loc: &'a FieldLocation,
-    ) -> crate::fdb::backend::LocalBoxFuture<'a, ()> {
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, Result<(), FdbError>> {
         Box::pin(PosixCatalogue::archive(self, ds, colloc, elem, loc))
     }
 

@@ -11,8 +11,9 @@ use crate::lustre::{Fd, FsError, LustreClient, StripeSpec};
 use crate::util::content::Bytes;
 
 /// Typed backend error for a failed filesystem operation (replaces the
-/// former `panic!`/`expect` sites on the archive path).
-fn fs_err(op: &str, path: &str, e: FsError) -> FdbError {
+/// former `panic!`/`expect` sites on the archive path). Shared with the
+/// POSIX Catalogue, whose archive path has the same error surface.
+pub(crate) fn fs_err(op: &str, path: &str, e: FsError) -> FdbError {
     FdbError::Backend {
         backend: "posix",
         detail: format!("{op} {path}: {e}"),
@@ -200,6 +201,13 @@ impl crate::fdb::backend::Store for PosixStore {
 
     fn take_lock_time(&self) -> crate::sim::time::SimTime {
         PosixStore::take_lock_time(self)
+    }
+
+    fn session(&mut self) -> Option<Box<dyn crate::fdb::backend::StoreSession>> {
+        // a session is a full store over a forked client: its own client
+        // id (unique data-file names), page cache, and DLM identity —
+        // like one more rank of the same writer job
+        Some(Box::new(PosixStore::new(self.client.fork(), &self.root)))
     }
 }
 

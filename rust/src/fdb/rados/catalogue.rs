@@ -301,8 +301,13 @@ impl crate::fdb::backend::Catalogue for RadosCatalogue {
         elem: &'a Key,
         _id: &'a Key,
         loc: &'a FieldLocation,
-    ) -> crate::fdb::backend::LocalBoxFuture<'a, ()> {
-        Box::pin(RadosCatalogue::archive(self, ds, colloc, elem, loc))
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, Result<(), crate::fdb::FdbError>> {
+        // omap insertions into always-creatable objects — no fallible
+        // surface on this path
+        Box::pin(async move {
+            RadosCatalogue::archive(self, ds, colloc, elem, loc).await;
+            Ok(())
+        })
     }
 
     fn retrieve<'a>(

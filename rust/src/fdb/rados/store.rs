@@ -96,21 +96,30 @@ impl RadosStore {
         self
     }
 
-    /// (pool, namespace) a dataset's data lives in.
+    /// (pool, namespace) a dataset's data lives in. Pool-per-dataset
+    /// creation is reuse-if-present against the cluster's pool map, so
+    /// concurrent client sessions of one store agree on the dataset pool
+    /// instead of each minting a same-named twin.
     pub(crate) fn placement(&mut self, ds: &Key) -> (Rc<CephPool>, String) {
         let label = ds.canonical();
         if self.config.pool_per_dataset {
-            let pool = self
-                .ds_pools
-                .entry(label.clone())
-                .or_insert_with(|| {
-                    self.sys.create_pool(
-                        &format!("fdb-{label}"),
-                        self.config.pg_per_pool,
-                        self.config.redundancy,
-                    )
-                })
-                .clone();
+            let cached = self.ds_pools.get(&label).cloned();
+            let pool = match cached {
+                Some(p) => p,
+                None => {
+                    let name = format!("fdb-{label}");
+                    let existing = self.sys.pools.borrow().get(&name).cloned();
+                    let pool = existing.unwrap_or_else(|| {
+                        self.sys.create_pool(
+                            &name,
+                            self.config.pg_per_pool,
+                            self.config.redundancy,
+                        )
+                    });
+                    self.ds_pools.insert(label, pool.clone());
+                    pool
+                }
+            };
             (pool, String::new())
         } else {
             (self.base_pool.clone(), label)
@@ -322,5 +331,14 @@ impl crate::fdb::backend::Store for RadosStore {
         ds: &'a Key,
     ) -> crate::fdb::backend::LocalBoxFuture<'a, bool> {
         Box::pin(async move { RadosStore::wipe_dataset(self, ds).await > 0 })
+    }
+
+    fn session(&mut self) -> Option<Box<dyn crate::fdb::backend::StoreSession>> {
+        // own client instance id (collision-free object names, own aio
+        // queue); span state is per session, like per process
+        Some(Box::new(
+            RadosStore::new(&self.sys, self.client.fork(), &self.base_pool)
+                .with_config(self.config.clone()),
+        ))
     }
 }

@@ -32,6 +32,9 @@ pub struct S3Store {
     /// fewer S3 objects, visibility deferred to flush)
     pub multipart: bool,
     uploads: std::collections::HashMap<(String, String), (String, u64, u32, u64)>,
+    /// sessions minted off this store (suffixes their client tags so
+    /// object keys stay collision-free)
+    session_counter: u64,
 }
 
 impl S3Store {
@@ -43,6 +46,7 @@ impl S3Store {
             client_tag: client_tag.to_string(),
             multipart: false,
             uploads: std::collections::HashMap::new(),
+            session_counter: 0,
         }
     }
 
@@ -219,6 +223,19 @@ impl crate::fdb::backend::Store for S3Store {
                 }),
             }
         })
+    }
+
+    fn session(&mut self) -> Option<Box<dyn crate::fdb::backend::StoreSession>> {
+        // an independent HTTP client: a derived tag keeps its object
+        // keys (`{tag}-{counter}`) disjoint from the parent's and from
+        // other sessions'
+        self.session_counter += 1;
+        let mut s = S3Store::new(
+            &self.s3,
+            &format!("{}~s{}", self.client_tag, self.session_counter),
+        );
+        s.multipart = self.multipart;
+        Some(Box::new(s))
     }
 }
 

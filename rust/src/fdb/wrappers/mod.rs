@@ -8,10 +8,11 @@
 //!   writes them through on `flush()` (the burst-buffer pattern of
 //!   arXiv:2404.03107). Reads are served from whichever tier minted the
 //!   handle.
-//! * [`ReplicatedStore`] — fan-out writes to N replica Stores, read
-//!   from the first healthy replica, with a typed
-//!   [`FdbError::AllReplicasFailed`](crate::fdb::FdbError) when every
-//!   replica rejects the handle.
+//! * [`ReplicatedStore`] — fan-out writes to N replica Stores, reads
+//!   balanced over healthy replicas by a [`ReadPolicy`] (round-robin by
+//!   default; `FirstHealthy` keeps the old primary-only behaviour), with
+//!   a typed [`FdbError::AllReplicasFailed`](crate::fdb::FdbError) when
+//!   every replica rejects the handle.
 //! * [`ShardedCatalogue`] — hash-partitions the index network across N
 //!   inner Catalogues keyed on the collocation key (the distributed
 //!   index-KV design DAOS demonstrated over Lustre, arXiv:2208.06752);
@@ -29,6 +30,6 @@ pub mod replicated;
 pub mod sharded;
 pub mod tiered;
 
-pub use replicated::ReplicatedStore;
+pub use replicated::{ReadPolicy, ReplicatedStore};
 pub use sharded::ShardedCatalogue;
 pub use tiered::TieredStore;

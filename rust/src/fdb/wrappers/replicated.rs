@@ -1,7 +1,7 @@
-//! [`ReplicatedStore`]: fan-out writes to N replica Stores, reads from
-//! the first healthy replica.
+//! [`ReplicatedStore`]: fan-out writes to N replica Stores, reads
+//! balanced across healthy replicas by a [`ReadPolicy`].
 
-use crate::fdb::backend::{LocalBoxFuture, Store};
+use crate::fdb::backend::{LocalBoxFuture, Store, StoreSession};
 use crate::fdb::datahandle::DataHandle;
 use crate::fdb::key::Key;
 use crate::fdb::location::FieldLocation;
@@ -9,16 +9,33 @@ use crate::fdb::FdbError;
 use crate::sim::time::SimTime;
 use crate::util::content::Bytes;
 
+/// Where a replicated read starts probing.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ReadPolicy {
+    /// Always probe replica 0 first — the original behaviour; keeps all
+    /// read load on the primary.
+    FirstHealthy,
+    /// Rotate the starting replica per read, spreading read load evenly
+    /// across healthy replicas (the default). Unhealthy replicas are
+    /// skipped by falling through the rotation, so availability matches
+    /// `FirstHealthy`.
+    #[default]
+    RoundRobin,
+}
+
 /// A replicating Store. `archive()` writes the field to every replica
 /// and returns the primary's (replica 0's) location — that is what the
-/// Catalogue indexes. `read()` offers the handle to each replica in
-/// order and returns the first healthy answer; replicas whose client
-/// cannot resolve the handle report [`FdbError::BackendMismatch`] and
-/// are skipped. If every replica fails, the typed
-/// [`FdbError::AllReplicasFailed`] carries the replica count and the
-/// last underlying error.
+/// Catalogue indexes. `read()` probes replicas starting at the
+/// [`ReadPolicy`]'s pick and returns the first healthy answer; replicas
+/// whose client cannot resolve the handle report
+/// [`FdbError::BackendMismatch`] and are skipped. If every replica
+/// fails, the typed [`FdbError::AllReplicasFailed`] carries the replica
+/// count and the last underlying error.
 pub struct ReplicatedStore {
     replicas: Vec<Box<dyn Store>>,
+    policy: ReadPolicy,
+    /// rotation cursor for [`ReadPolicy::RoundRobin`]
+    next_read: usize,
 }
 
 impl ReplicatedStore {
@@ -26,11 +43,36 @@ impl ReplicatedStore {
     /// before constructing one.
     pub fn new(replicas: Vec<Box<dyn Store>>) -> ReplicatedStore {
         assert!(!replicas.is_empty(), "ReplicatedStore needs >= 1 replica");
-        ReplicatedStore { replicas }
+        ReplicatedStore {
+            replicas,
+            policy: ReadPolicy::default(),
+            next_read: 0,
+        }
+    }
+
+    pub fn with_read_policy(mut self, policy: ReadPolicy) -> ReplicatedStore {
+        self.policy = policy;
+        self
+    }
+
+    pub fn read_policy(&self) -> ReadPolicy {
+        self.policy
     }
 
     pub fn copies(&self) -> usize {
         self.replicas.len()
+    }
+
+    /// The replica a read should probe first under the active policy.
+    fn read_start(&mut self) -> usize {
+        match self.policy {
+            ReadPolicy::FirstHealthy => 0,
+            ReadPolicy::RoundRobin => {
+                let start = self.next_read % self.replicas.len();
+                self.next_read = self.next_read.wrapping_add(1);
+                start
+            }
+        }
     }
 }
 
@@ -73,9 +115,11 @@ impl Store for ReplicatedStore {
     ) -> LocalBoxFuture<'a, Result<Bytes, FdbError>> {
         Box::pin(async move {
             let copies = self.replicas.len();
+            let start = self.read_start();
             let mut last = None;
-            for replica in &mut self.replicas {
-                match replica.read(handle).await {
+            for k in 0..copies {
+                let idx = (start + k) % copies;
+                match self.replicas[idx].read(handle).await {
                     Ok(bytes) => return Ok(bytes),
                     Err(e) => last = Some(e),
                 }
@@ -130,12 +174,124 @@ impl Store for ReplicatedStore {
             .map(|r| r.take_lock_time())
             .fold(SimTime::ZERO, |a, b| a + b)
     }
+
+    fn session(&mut self) -> Option<Box<dyn StoreSession>> {
+        // fan a session out of every replica: the session's writes still
+        // hit all N copies, and its reads rotate independently
+        let mut replicas = Vec::with_capacity(self.replicas.len());
+        for replica in &mut self.replicas {
+            replicas.push(replica.session()?.into_store());
+        }
+        Some(Box::new(
+            ReplicatedStore::new(replicas).with_read_policy(self.policy),
+        ))
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::fdb::backend::{block_on_ready as block_on, NullStore};
+    use std::cell::Cell;
+    use std::rc::Rc;
+
+    /// A Null-semantics store that counts the reads it serves — lets the
+    /// rotation tests observe which replica a read landed on.
+    struct CountingStore {
+        reads: Rc<Cell<usize>>,
+    }
+
+    impl Store for CountingStore {
+        fn name(&self) -> &'static str {
+            "null"
+        }
+
+        fn archive<'a>(
+            &'a mut self,
+            _ds: &'a Key,
+            _colloc: &'a Key,
+            _id: &'a Key,
+            data: Bytes,
+        ) -> LocalBoxFuture<'a, Result<FieldLocation, FdbError>> {
+            crate::fdb::backend::ready(Ok(FieldLocation::Null { length: data.len() }))
+        }
+
+        fn read<'a>(
+            &'a mut self,
+            handle: &'a DataHandle,
+        ) -> LocalBoxFuture<'a, Result<Bytes, FdbError>> {
+            crate::fdb::backend::ready(match handle {
+                DataHandle::Null { length } => {
+                    self.reads.set(self.reads.get() + 1);
+                    Ok(Bytes::virt(*length, 0))
+                }
+                other => Err(FdbError::BackendMismatch {
+                    store: "null",
+                    handle: other.backend_name(),
+                }),
+            })
+        }
+    }
+
+    fn counting_pair() -> (ReplicatedStore, Rc<Cell<usize>>, Rc<Cell<usize>>) {
+        let (c0, c1) = (Rc::new(Cell::new(0)), Rc::new(Cell::new(0)));
+        let rep = ReplicatedStore::new(vec![
+            Box::new(CountingStore { reads: c0.clone() }),
+            Box::new(CountingStore { reads: c1.clone() }),
+        ]);
+        (rep, c0, c1)
+    }
+
+    #[test]
+    fn round_robin_rotates_reads_across_replicas() {
+        let (mut rep, c0, c1) = counting_pair();
+        assert_eq!(rep.read_policy(), ReadPolicy::RoundRobin);
+        let h = DataHandle::Null { length: 8 };
+        for _ in 0..4 {
+            block_on(rep.read(&h)).unwrap();
+        }
+        // rotation: 4 reads over 2 replicas -> 2 each (not 4 on primary)
+        assert_eq!((c0.get(), c1.get()), (2, 2));
+    }
+
+    #[test]
+    fn first_healthy_keeps_reads_on_primary() {
+        let (rep, c0, c1) = counting_pair();
+        let mut rep = rep.with_read_policy(ReadPolicy::FirstHealthy);
+        let h = DataHandle::Null { length: 8 };
+        for _ in 0..4 {
+            block_on(rep.read(&h)).unwrap();
+        }
+        assert_eq!((c0.get(), c1.get()), (4, 0));
+    }
+
+    #[test]
+    fn round_robin_falls_through_unhealthy_replica() {
+        // replica 1 is a posix-handle-only mismatch for Null handles:
+        // rotation starting there must fall through to replica 0
+        let reads = Rc::new(Cell::new(0));
+        let mut rep = ReplicatedStore::new(vec![
+            Box::new(CountingStore { reads: reads.clone() }),
+            Box::new(NullStore),
+        ]);
+        let posix = DataHandle::Posix {
+            path: "/f".into(),
+            ranges: vec![(0, 4)],
+        };
+        // NullStore also mismatches posix handles -> AllReplicasFailed,
+        // regardless of which replica the rotation starts at
+        for _ in 0..2 {
+            let err = block_on(rep.read(&posix)).unwrap_err();
+            assert!(matches!(err, FdbError::AllReplicasFailed { .. }));
+        }
+        // a Null handle always finds a healthy replica
+        let h = DataHandle::Null { length: 4 };
+        for _ in 0..4 {
+            block_on(rep.read(&h)).unwrap();
+        }
+        // the counting replica saw only its rotation share
+        assert_eq!(reads.get(), 2);
+    }
 
     #[test]
     fn primary_location_returned_and_reads_serve() {

@@ -8,6 +8,7 @@ use crate::fdb::backend::{Catalogue, LocalBoxFuture};
 use crate::fdb::key::Key;
 use crate::fdb::location::FieldLocation;
 use crate::fdb::request::Request;
+use crate::fdb::FdbError;
 use crate::sim::time::SimTime;
 
 /// A hash-partitioned Catalogue. `archive()`/`retrieve()` route to the
@@ -51,7 +52,7 @@ impl Catalogue for ShardedCatalogue {
         elem: &'a Key,
         id: &'a Key,
         loc: &'a FieldLocation,
-    ) -> LocalBoxFuture<'a, ()> {
+    ) -> LocalBoxFuture<'a, Result<(), FdbError>> {
         let shard = self.shard_of(colloc);
         self.shards[shard].archive(ds, colloc, elem, id, loc)
     }
@@ -165,7 +166,7 @@ mod tests {
         for step in 1..=12u32 {
             let colloc = Key::of(&[("class", "od"), ("step", &step.to_string())]);
             let id = colloc.clone().with("param", "p0");
-            block_on(cat.archive(&ds, &colloc, &id, &id, &loc(step as u64)));
+            block_on(cat.archive(&ds, &colloc, &id, &id, &loc(step as u64))).unwrap();
             ids.push((colloc, id));
         }
         for (colloc, id) in &ids {
@@ -190,7 +191,7 @@ mod tests {
         for step in 1..=6u32 {
             let colloc = Key::of(&[("class", "od"), ("step", &step.to_string())]);
             let id = colloc.clone().with("param", "p0");
-            block_on(cat.archive(&ds, &colloc, &id, &id, &loc(1)));
+            block_on(cat.archive(&ds, &colloc, &id, &id, &loc(1))).unwrap();
         }
         block_on(cat.deregister_dataset(&ds));
         let listed = block_on(cat.list(&ds, &Request::parse("").unwrap()));

@@ -1,7 +1,7 @@
 //! [`TieredStore`]: a fast front Store absorbing writes ahead of a
 //! backing object Store (SCM/NVMe burst-buffer pattern, arXiv:2404.03107).
 
-use crate::fdb::backend::{LocalBoxFuture, Store};
+use crate::fdb::backend::{LocalBoxFuture, Store, StoreSession};
 use crate::fdb::datahandle::DataHandle;
 use crate::fdb::key::Key;
 use crate::fdb::location::FieldLocation;
@@ -128,6 +128,15 @@ impl Store for TieredStore {
 
     fn take_lock_time(&self) -> SimTime {
         self.front.take_lock_time() + self.back.take_lock_time()
+    }
+
+    fn session(&mut self) -> Option<Box<dyn crate::fdb::backend::StoreSession>> {
+        // a tiered session pairs sessions of both tiers; its absorbed
+        // fields spill through its own back session on (Fdb-driven)
+        // session flush
+        let front = self.front.session()?.into_store();
+        let back = self.back.session()?.into_store();
+        Some(Box::new(TieredStore::new(front, back)))
     }
 }
 

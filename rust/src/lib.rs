@@ -21,7 +21,11 @@
 //!   (Chapters 2–3), declarative construction via [`fdb::FdbBuilder`] /
 //!   [`fdb::BackendConfig`], and the batched `archive_many` /
 //!   `retrieve_many` paths that pipeline catalogue lookups with store
-//!   reads.
+//!   reads. An [`fdb::IoProfile`] (builder `io_depth`, CLI
+//!   `--io-depth`) turns the batched paths into a queue-depth engine:
+//!   per-request client sessions ([`fdb::StoreSession`]) keep up to N
+//!   store reads/writes in flight behind a sim-native semaphore, with
+//!   results re-ordered to input order — byte-identical at every depth.
 //! * [`bench`] — IOR-like, Field I/O, and fdb-hammer workload generators
 //!   plus the scenario registry that regenerates every evaluation figure.
 //! * [`workflow`] — the operational NWP I/O pattern: I/O servers, flush

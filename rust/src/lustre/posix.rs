@@ -66,6 +66,14 @@ impl LustreClient {
         }
     }
 
+    /// A fresh client on the same mount and node: new client id, own
+    /// page cache and DLM identity. Backs the FDB per-request I/O
+    /// sessions (`fdb::backend::Store::session`) — concurrent sessions
+    /// behave like additional processes of the same job.
+    pub fn fork(&self) -> LustreClient {
+        self.fs.client(&self.node)
+    }
+
     /// Drain the accumulated DLM lock time (profiling helper).
     pub fn take_lock_time(&self) -> crate::sim::time::SimTime {
         let t = self.lock_time.get();

@@ -1,0 +1,388 @@
+//! I/O-depth engine equivalence and bound tests.
+//!
+//! Property: for any `io_depth >= 1`, the batched `archive_many` /
+//! `retrieve_many` paths return **byte- and order-identical** results to
+//! `io_depth = 1` — over the Null pair, bare POSIX/Lustre, and wrapped
+//! stacks (tiered / replicated / sharded) — only virtual time may
+//! differ. Plus: the engine's semaphore bound (in-flight sessions never
+//! exceed the configured depth), `IoProfile` validation, and the
+//! catalogue-side mkdir-panic regression (fallible `Catalogue::archive`).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use fdbr::bench::scenario::{deploy, RedundancyOpt, SystemKind, SystemUnderTest, WrapperOpt};
+use fdbr::fdb::{
+    BackendConfig, Catalogue, Fdb, FdbBuilder, FdbError, FieldLocation, IoProfile, Key,
+    Request,
+};
+use fdbr::hw::profiles::Testbed;
+use fdbr::lustre::StripeSpec;
+use fdbr::sim::exec::Sim;
+use fdbr::util::content::Bytes;
+use fdbr::util::prop;
+use fdbr::util::rng::Rng;
+
+/// One randomized batched workload: fields addressed by (step, param)
+/// with per-field payload sizes. Repeated (step, param) pairs re-archive
+/// the field within the same batch (input-order-last must win).
+#[derive(Clone, Debug)]
+struct Workload {
+    fields: Vec<(u32, u32, u64)>,
+}
+
+fn gen_workload(rng: &mut Rng) -> Workload {
+    let n = 1 + rng.below(14) as usize;
+    let fields = (0..n)
+        .map(|_| {
+            (
+                1 + rng.below(4) as u32,
+                rng.below(3) as u32,
+                64 + rng.below(4096),
+            )
+        })
+        .collect();
+    Workload { fields }
+}
+
+fn field_id(step: u32, param: u32) -> Key {
+    fdbr::bench::hammer::field_id(0, step, param, 0)
+}
+
+fn payload(step: u32, param: u32, size: u64) -> Bytes {
+    Bytes::virt(size, (u64::from(step) << 32) | (u64::from(param) << 8) | (size & 0xff))
+}
+
+/// FNV-1a over materialized bytes (payloads here are tiny).
+fn digest(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Everything observable after the batched workload, **in order**:
+/// `retrieve_many` results as an ordered (identifier, len, digest) list
+/// plus the sorted listing of the dataset.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+struct Fingerprint {
+    fetched: Vec<(String, u64, u64)>,
+    listed: Vec<String>,
+    inflight_peak_ok: bool,
+}
+
+/// Archive the whole workload as ONE `archive_many` batch through `w`
+/// (flush + close), then fetch every unique identifier in one
+/// `retrieve_many` through `r` (or `w` itself for process-local
+/// catalogues). Returns the ordered fingerprint.
+fn run_batched(sim: &Sim, w: Fdb, r: Option<Fdb>, wl: &Workload) -> Fingerprint {
+    let out = Rc::new(RefCell::new(Fingerprint::default()));
+    let out2 = out.clone();
+    let wl = wl.clone();
+    let mut w = w;
+    sim.spawn(async move {
+        let mut batch: Vec<(Key, Bytes)> = Vec::new();
+        let mut ids: Vec<Key> = Vec::new();
+        let mut seen = std::collections::BTreeSet::new();
+        for &(step, param, size) in &wl.fields {
+            let id = field_id(step, param);
+            batch.push((id.clone(), payload(step, param, size)));
+            if seen.insert(id.canonical()) {
+                ids.push(id);
+            }
+        }
+        let depth = w.io_profile().depth;
+        w.archive_many(batch).await.unwrap();
+        w.flush().await.unwrap();
+        w.close().await;
+        let w_peak_ok = w.io_inflight_peak() <= depth.max(1);
+        let mut r = r.unwrap_or(w);
+        let fetched = r.retrieve_many(&ids).await.unwrap();
+        let mut fp = Fingerprint {
+            inflight_peak_ok: w_peak_ok && r.io_inflight_peak() <= depth.max(1),
+            ..Fingerprint::default()
+        };
+        for (id, bytes) in &fetched {
+            let v = bytes.to_vec();
+            fp.fetched.push((id.canonical(), v.len() as u64, digest(&v)));
+        }
+        let ds = ids[0].project(&r.schema.dataset.clone()).unwrap();
+        let mut listed: Vec<String> = r
+            .list(&ds, &Request::parse("").unwrap())
+            .await
+            .iter()
+            .map(|(k, _)| k.canonical())
+            .collect();
+        listed.sort();
+        fp.listed = listed;
+        *out2.borrow_mut() = fp;
+    });
+    sim.run();
+    let fp = out.borrow().clone();
+    fp
+}
+
+/// Fingerprint the Null pair at a given depth on a fresh Sim.
+fn null_fingerprint(depth: usize, wl: &Workload) -> Fingerprint {
+    let sim = Sim::new();
+    let w = FdbBuilder::new(&sim)
+        .backend(BackendConfig::Null)
+        .io_depth(depth)
+        .build()
+        .unwrap();
+    run_batched(&sim, w, None, wl)
+}
+
+#[test]
+fn any_depth_equals_depth_one_over_null() {
+    prop::check_no_shrink(0xD0E, 8, gen_workload, |wl| {
+        let base = null_fingerprint(1, wl);
+        assert!(!base.fetched.is_empty(), "workload must fetch fields");
+        [2usize, 3, 8, 16]
+            .into_iter()
+            .all(|d| null_fingerprint(d, wl) == base)
+    });
+}
+
+#[test]
+fn any_depth_equals_depth_one_over_posix_and_wrapped_stacks() {
+    // cross-process: writer on node 0, reader on node 1, the full
+    // archive_many -> flush -> close -> retrieve_many cycle
+    let mut rng = Rng::new(0x10D3);
+    let cases: Vec<Workload> = (0..3).map(|_| gen_workload(&mut rng)).collect();
+    let stacks = [
+        WrapperOpt::Bare,
+        WrapperOpt::Tiered,
+        WrapperOpt::Replicated(2),
+        WrapperOpt::Sharded(3),
+    ];
+    for wrapper in stacks {
+        let fingerprints = |depth: usize| -> Vec<Fingerprint> {
+            let dep = deploy(Testbed::Gcp, SystemKind::Lustre, 2, 2, RedundancyOpt::None)
+                .with_wrapper(wrapper)
+                .with_io_depth(depth);
+            let nodes = dep.client_nodes();
+            cases
+                .iter()
+                .map(|wl| {
+                    let w = dep.fdb(&nodes[0]);
+                    let r = dep.fdb(&nodes[1]);
+                    run_batched(&dep.sim, w, Some(r), wl)
+                })
+                .collect()
+        };
+        let base = fingerprints(1);
+        assert!(base.iter().all(|fp| !fp.fetched.is_empty()));
+        for depth in [2usize, 4, 8] {
+            assert_eq!(
+                fingerprints(depth),
+                base,
+                "{wrapper:?} at depth {depth} must be byte- and order-identical to depth 1"
+            );
+        }
+    }
+}
+
+#[test]
+fn direct_retrieve_fanout_equals_serial_on_hashed_daos() {
+    // the hash-OID fast path has its own fan-out (lookup+read per
+    // session); it must match the serial direct path exactly.
+    // Identifiers are deduplicated (input-order-last wins) before the
+    // batch: hash-OID placement maps a repeated identifier to the SAME
+    // array, and concurrent rewrites of one object are last-writer-wins
+    // in any real object store — not an ordering the engine defines.
+    let mut rng = Rng::new(0xDA05);
+    let cases: Vec<Workload> = (0..3)
+        .map(|_| {
+            let wl = gen_workload(&mut rng);
+            let mut last: std::collections::BTreeMap<(u32, u32), (u32, u32, u64)> =
+                std::collections::BTreeMap::new();
+            for f in &wl.fields {
+                last.insert((f.0, f.1), *f);
+            }
+            Workload {
+                fields: last.into_values().collect(),
+            }
+        })
+        .collect();
+    let fingerprints = |depth: usize| -> Vec<Fingerprint> {
+        let dep = deploy(Testbed::Gcp, SystemKind::Daos, 2, 2, RedundancyOpt::None);
+        let SystemUnderTest::Daos(d) = &dep.system else {
+            unreachable!()
+        };
+        let nodes = dep.client_nodes();
+        let mk = |node| {
+            FdbBuilder::new(&dep.sim)
+                .node(node)
+                .backend(BackendConfig::Daos {
+                    daos: d.clone(),
+                    pool: "fdb".to_string(),
+                    hash_oids: true,
+                })
+                .io_depth(depth)
+                .build()
+                .unwrap()
+        };
+        cases
+            .iter()
+            .map(|wl| {
+                let w = mk(&nodes[0]);
+                let r = mk(&nodes[1]);
+                run_batched(&dep.sim, w, Some(r), wl)
+            })
+            .collect()
+    };
+    let base = fingerprints(1);
+    // listing goes through the catalogue; the hashed store still indexes
+    // it, so listings stay comparable too
+    assert!(base.iter().all(|fp| !fp.fetched.is_empty()));
+    for depth in [3usize, 8] {
+        assert_eq!(fingerprints(depth), base, "hashed DAOS at depth {depth}");
+    }
+}
+
+#[test]
+fn inflight_sessions_never_exceed_configured_depth() {
+    // instrumented-counter bound: the semaphore admits at most `depth`
+    // concurrent session ops, and on a real (latency-bearing) backend
+    // the engine genuinely reaches more than one in flight
+    let dep = deploy(Testbed::Gcp, SystemKind::Lustre, 2, 2, RedundancyOpt::None)
+        .with_io(IoProfile::depth(4).with_preload_indexes(true));
+    let nodes = dep.client_nodes();
+    let mut w = dep.fdb(&nodes[0]);
+    let mut r = dep.fdb(&nodes[1]);
+    let peaks = Rc::new(RefCell::new((0usize, 0usize, 0usize)));
+    let peaks2 = peaks.clone();
+    dep.sim.spawn(async move {
+        let batch: Vec<(Key, Bytes)> = (0..32u32)
+            .map(|i| {
+                let id = field_id(1 + i / 8, i % 8);
+                (id, Bytes::virt(32 << 10, u64::from(i)))
+            })
+            .collect();
+        let ids: Vec<Key> = batch.iter().map(|(id, _)| id.clone()).collect();
+        w.archive_many(batch).await.unwrap();
+        w.flush().await.unwrap();
+        w.close().await;
+        let fetched = r.retrieve_many(&ids).await.unwrap();
+        assert_eq!(fetched.len(), ids.len());
+        *peaks2.borrow_mut() = (w.io_inflight_peak(), r.io_inflight_peak(), r.io_sessions());
+    });
+    dep.sim.run();
+    let (w_peak, r_peak, r_sessions) = *peaks.borrow();
+    assert!(w_peak <= 4, "writer in-flight peak {w_peak} exceeds depth 4");
+    assert!(r_peak <= 4, "reader in-flight peak {r_peak} exceeds depth 4");
+    assert_eq!(r_sessions, 4, "reader should hold a full session pool");
+    // the bound is tight in practice: concurrency actually happened
+    assert!(w_peak >= 2, "writer never overlapped ops (peak {w_peak})");
+    assert!(r_peak >= 2, "reader never overlapped ops (peak {r_peak})");
+}
+
+#[test]
+fn io_profile_validation() {
+    for depth in [0usize, 65] {
+        let sim = Sim::new();
+        let err = FdbBuilder::new(&sim)
+            .backend(BackendConfig::Null)
+            .io_depth(depth)
+            .build()
+            .unwrap_err();
+        assert!(
+            matches!(err, FdbError::InvalidConfig(_)),
+            "depth {depth} must be rejected, got {err}"
+        );
+    }
+    // depth 1 and 64 are the inclusive bounds
+    for depth in [1usize, 64] {
+        let sim = Sim::new();
+        assert!(FdbBuilder::new(&sim)
+            .backend(BackendConfig::Null)
+            .io_depth(depth)
+            .build()
+            .is_ok());
+    }
+}
+
+#[test]
+fn posix_catalogue_mkdir_failure_is_typed_error() {
+    // regression for the last archive-path panic (ROADMAP item): the
+    // catalogue root colliding with a regular file must surface as
+    // FdbError::Backend through the now-fallible Catalogue::archive
+    let dep = deploy(Testbed::Gcp, SystemKind::Lustre, 2, 2, RedundancyOpt::None);
+    let SystemUnderTest::Lustre(fs) = &dep.system else {
+        unreachable!()
+    };
+    let node = dep.client_nodes()[0].clone();
+    let mut saboteur = fs.client(&node);
+    let mut cat: Box<dyn Catalogue> = Box::new(fdbr::fdb::posix::catalogue::PosixCatalogue::new(
+        fs.client(&node),
+        "/idxroot",
+        fdbr::fdb::Schema::default_posix(),
+    ));
+    let outcome = Rc::new(RefCell::new(None));
+    let outcome2 = outcome.clone();
+    dep.sim.spawn(async move {
+        // a regular file squats on the catalogue root
+        saboteur
+            .create("/idxroot", StripeSpec::default_layout())
+            .await
+            .unwrap();
+        let id = field_id(1, 0);
+        let ds = id.project(&fdbr::fdb::Schema::default_posix().dataset).unwrap();
+        let loc = FieldLocation::Null { length: 7 };
+        let r = cat.archive(&ds, &ds, &id, &id, &loc).await;
+        *outcome2.borrow_mut() = Some(r);
+    });
+    dep.sim.run();
+    let got = outcome.borrow_mut().take().expect("archive ran");
+    match got {
+        Err(FdbError::Backend { backend, detail }) => {
+            assert_eq!(backend, "posix");
+            assert!(detail.contains("mkdir"), "detail should name mkdir: {detail}");
+        }
+        other => panic!("expected typed posix backend error, got {other:?}"),
+    }
+}
+
+#[test]
+fn catalogue_error_propagates_through_fdb_archive() {
+    // end-to-end ripple: a healthy store + a sabotaged catalogue root —
+    // Fdb::archive must return the catalogue's typed error, and the
+    // field stays invisible (un-indexed)
+    let dep = deploy(Testbed::Gcp, SystemKind::Lustre, 2, 2, RedundancyOpt::None);
+    let SystemUnderTest::Lustre(fs) = &dep.system else {
+        unreachable!()
+    };
+    let node = dep.client_nodes()[0].clone();
+    let mut saboteur = fs.client(&node);
+    let schema = fdbr::fdb::Schema::default_posix();
+    let store = Box::new(fdbr::fdb::posix::store::PosixStore::new(
+        fs.client(&node),
+        "/data",
+    ));
+    let catalogue = Box::new(fdbr::fdb::posix::catalogue::PosixCatalogue::new(
+        fs.client(&node),
+        "/idx",
+        schema.clone(),
+    ));
+    let mut fdb = Fdb::new(&dep.sim, schema, store, catalogue);
+    let outcome = Rc::new(RefCell::new(None));
+    let outcome2 = outcome.clone();
+    dep.sim.spawn(async move {
+        saboteur
+            .create("/idx", StripeSpec::default_layout())
+            .await
+            .unwrap();
+        let id = field_id(1, 0);
+        let r = fdb.archive(&id, b"payload".as_slice()).await;
+        *outcome2.borrow_mut() = Some(r);
+    });
+    dep.sim.run();
+    let got = outcome.borrow_mut().take().expect("archive ran");
+    assert!(
+        matches!(got, Err(FdbError::Backend { backend: "posix", .. })),
+        "expected posix backend error, got {got:?}"
+    );
+}
