@@ -42,6 +42,25 @@ impl SystemKind {
     pub fn extra_md_node(self) -> bool {
         matches!(self, SystemKind::Lustre | SystemKind::Ceph)
     }
+
+    /// The queue depth `--io-depth auto` derives from the backend's
+    /// device-parallelism profile: enough in-flight ops per client to
+    /// cover the distinct server-side pipes one client can drive at
+    /// once, without over-committing the session pool.
+    pub fn auto_io_depth(self) -> usize {
+        match self {
+            // FDB data files stripe 8×8 MiB: one read per OST pipe
+            SystemKind::Lustre => 8,
+            // DAOS event queues are the deep end of the interface
+            // papers' sweeps; network round trips, not devices, bind
+            SystemKind::Daos => 16,
+            // ~100 PGs/OSD sweet spot, but one client saturates its
+            // TCP NIC well before that many outstanding ops
+            SystemKind::Ceph => 8,
+            // no device behind the sink: just overlap client overhead
+            SystemKind::Null => 4,
+        }
+    }
 }
 
 /// A deployed system under test.

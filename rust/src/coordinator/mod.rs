@@ -82,8 +82,20 @@ fn size(args: &Args, name: &str, default: u64) -> Result<u64> {
     args.bytes_of(name, default).map_err(|e| anyhow::anyhow!(e))
 }
 
+/// `--io-depth N` or `--io-depth auto` (auto = the system's
+/// device-parallelism profile, [`SystemKind::auto_io_depth`]).
+fn parse_io_depth(args: &Args, kind: SystemKind) -> Result<usize> {
+    let raw = opt(args, "io-depth", "1")?;
+    if raw == "auto" {
+        return Ok(kind.auto_io_depth());
+    }
+    raw.parse::<usize>()
+        .map_err(|_| anyhow::anyhow!("--io-depth must be a number or `auto` (got `{raw}`)"))
+}
+
 /// `fdbctl hammer --system daos --testbed gcp --servers 4 --clients 8
-/// [--io-depth n] [--index-cache]
+/// [--io-depth n|auto] [--index-cache]
+/// [--coalesce-gap sz] [--coalesce-max sz]
 /// [--wrapper tiered|replicated[:n]|sharded[:n]] ...`
 pub fn cmd_hammer(args: &Args) -> Result<()> {
     let testbed = parse_testbed(opt(args, "testbed", "gcp")?)?;
@@ -91,9 +103,15 @@ pub fn cmd_hammer(args: &Args) -> Result<()> {
     let wrapper = parse_wrapper(opt(args, "wrapper", "none")?)?;
     let servers = num(args, "servers", 4usize)?;
     let clients = num(args, "clients", 8usize)?;
-    let io = crate::fdb::IoProfile::depth(num(args, "io-depth", 1usize)?)
-        .with_preload_indexes(args.flag("index-cache"));
-    io.validate().map_err(|e| anyhow::anyhow!("--io-depth: {e}"))?;
+    let io = crate::fdb::IoProfile::depth(parse_io_depth(args, kind)?)
+        .with_preload_indexes(args.flag("index-cache"))
+        .with_coalesce_gap(size(args, "coalesce-gap", 0)?)
+        .with_coalesce_max(size(
+            args,
+            "coalesce-max",
+            crate::fdb::IoProfile::DEFAULT_COALESCE_MAX,
+        )?);
+    io.validate().map_err(|e| anyhow::anyhow!("--io-depth/--coalesce-*: {e}"))?;
     let dep = deploy(testbed, kind, servers, clients, RedundancyOpt::None)
         .with_wrapper(wrapper)
         .with_io(io);
@@ -108,7 +126,7 @@ pub fn cmd_hammer(args: &Args) -> Result<()> {
     };
     let (r, trace) = hammer::run(&dep, cfg);
     println!(
-        "fdb-hammer {} [{}] on {} ({} srv / {} cli × {} procs, {} fields/proc of {}, io-depth {})",
+        "fdb-hammer {} [{}] on {} ({} srv / {} cli × {} procs, {} fields/proc of {}, io-depth {}{})",
         kind.label(),
         dep.backend_config().describe(),
         testbed.name(),
@@ -118,6 +136,15 @@ pub fn cmd_hammer(args: &Args) -> Result<()> {
         cfg.fields_per_proc(),
         crate::util::humansize::fmt_bytes(cfg.field_size),
         dep.io.depth,
+        if dep.io.coalesce_enabled() {
+            format!(
+                ", coalesce gap {} / max {}",
+                crate::util::humansize::fmt_bytes(dep.io.coalesce_gap),
+                crate::util::humansize::fmt_bytes(dep.io.coalesce_max)
+            )
+        } else {
+            String::new()
+        },
     );
     println!("  write: {:8.2} GiB/s   ({})", r.gibs_w(), r.write_time);
     println!("  read:  {:8.2} GiB/s   ({})", r.gibs_r(), r.read_time);
@@ -240,10 +267,18 @@ pub fn cmd_figures(args: &Args) -> Result<()> {
 pub fn cmd_opsrun(args: &Args) -> Result<()> {
     let testbed = parse_testbed(opt(args, "testbed", "gcp")?)?;
     let kind = parse_system(opt(args, "system", "daos")?)?;
-    // the queue depth reaches the I/O servers through the deployment:
-    // every `dep.fdb_traced` instance (writers and PGEN readers) gets it
-    let io = crate::fdb::IoProfile::depth(num(args, "io-depth", 1usize)?);
-    io.validate().map_err(|e| anyhow::anyhow!("--io-depth: {e}"))?;
+    // the I/O profile reaches the I/O servers through the deployment:
+    // every `dep.fdb_traced` instance (writers and PGEN readers) gets
+    // the queue depth AND the read-plan coalescing knobs
+    let io = crate::fdb::IoProfile::depth(parse_io_depth(args, kind)?)
+        .with_coalesce_gap(size(args, "coalesce-gap", 0)?)
+        .with_coalesce_max(size(
+            args,
+            "coalesce-max",
+            crate::fdb::IoProfile::DEFAULT_COALESCE_MAX,
+        )?);
+    io.validate()
+        .map_err(|e| anyhow::anyhow!("--io-depth/--coalesce-*: {e}"))?;
     let dep = deploy(
         testbed,
         kind,
@@ -348,13 +383,14 @@ pub fn usage() -> &'static str {
        hammer    fdb-hammer                 [--system s] [--testbed t] [--servers n]\n\
                  [--clients n] [--procs n] [--steps n] [--params n] [--levels n]\n\
                  [--field-size sz] [--contention] [--check]\n\
-                 [--io-depth n] [--index-cache]\n\
+                 [--io-depth n|auto] [--index-cache]\n\
+                 [--coalesce-gap sz] [--coalesce-max sz]\n\
                  [--wrapper none|tiered|replicated[:n]|sharded[:n]]\n\
        ior       IOR-like generic benchmark [--system s] [--nops n] [--xfer sz] [--dfs]\n\
        fieldio   Field I/O PoC              [--system s] [--nfields n] [--dummy]\n\
        opsrun    end-to-end operational NWP run with PJRT PGEN compute\n\
                  [--system s] [--members n] [--steps n] [--grid 32|64] [--no-compute]\n\
-                 [--io-depth n]\n\
+                 [--io-depth n|auto] [--coalesce-gap sz] [--coalesce-max sz]\n\
        admin     dataset stats + wipe demo   [--system s] [--nfields n]\n\
      \n\
      systems: lustre | daos | ceph | null      testbeds: nextgenio | gcp"
@@ -412,6 +448,40 @@ mod tests {
                 .map(String::from),
         );
         cmd_hammer(&args).unwrap();
+    }
+
+    #[test]
+    fn hammer_coalesce_smoke() {
+        // the CI coalesce smoke shape: planner + depth engine together
+        let args = Args::parse(
+            "--system lustre --coalesce-gap 65536 --io-depth 8 --index-cache --servers 2 --clients 2 --procs 1 --steps 2 --params 2 --levels 2 --field-size 65536 --check"
+                .split_whitespace()
+                .map(String::from),
+        );
+        cmd_hammer(&args).unwrap();
+    }
+
+    #[test]
+    fn io_depth_auto_resolves_per_system() {
+        let args = Args::parse(["--io-depth".to_string(), "auto".to_string()]);
+        assert_eq!(parse_io_depth(&args, SystemKind::Lustre).unwrap(), 8);
+        assert_eq!(parse_io_depth(&args, SystemKind::Daos).unwrap(), 16);
+        assert_eq!(parse_io_depth(&args, SystemKind::Null).unwrap(), 4);
+        let args = Args::parse(["--io-depth".to_string(), "6".to_string()]);
+        assert_eq!(parse_io_depth(&args, SystemKind::Lustre).unwrap(), 6);
+        let args = Args::parse(["--io-depth".to_string(), "many".to_string()]);
+        assert!(parse_io_depth(&args, SystemKind::Lustre).is_err());
+    }
+
+    #[test]
+    fn coalesce_gap_at_or_above_max_is_usage_error() {
+        let args = Args::parse(
+            "--system null --coalesce-gap 65536 --coalesce-max 4096"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let err = cmd_hammer(&args).unwrap_err();
+        assert!(err.to_string().contains("coalesce"), "{err}");
     }
 
     #[test]

@@ -92,6 +92,26 @@ pub trait Store {
         handle: &'a DataHandle,
     ) -> LocalBoxFuture<'a, Result<Bytes, FdbError>>;
 
+    /// Vectored read: a batch of (possibly merged) ranged handles in one
+    /// backend call, returning one `Bytes` per handle in input order —
+    /// how the read planner ([`crate::fdb::plan`]) issues its coalesced
+    /// ranges. The default is a loop of [`Store::read`], so backends
+    /// without a vectored path (Null, S3, third-party impls) keep
+    /// working; POSIX/Lustre and RADOS override it to resolve each
+    /// container (file descriptor, pool handle) once per batch.
+    fn read_ranges<'a>(
+        &'a mut self,
+        handles: &'a [DataHandle],
+    ) -> LocalBoxFuture<'a, Result<Vec<Bytes>, FdbError>> {
+        Box::pin(async move {
+            let mut out = Vec::with_capacity(handles.len());
+            for handle in handles {
+                out.push(self.read(handle).await?);
+            }
+            Ok(out)
+        })
+    }
+
     /// Whether this Store can resolve fully-specified identifiers
     /// without the Catalogue (the DAOS hash-OID fast path, §3.1.2).
     fn direct_retrieve_enabled(&self) -> bool {

@@ -54,6 +54,15 @@ pub struct IoProfile {
     /// calibrated lookup costs; the queue-depth sweeps enable it so the
     /// serial index client does not mask store-side parallelism.
     pub preload_indexes: bool,
+    /// Read-plan coalescing ([`crate::fdb::plan`]): on the batched
+    /// retrieve paths, merge catalogue-resolved field reads that sit in
+    /// the same physical container with holes of at most this many
+    /// bytes into one ranged I/O. 0 (the default) disables the planner
+    /// — the exact legacy per-field read behaviour.
+    pub coalesce_gap: u64,
+    /// Cap on one merged read's size; the planner splits runs at this
+    /// bound (a single field larger than the cap still reads whole).
+    pub coalesce_max: u64,
 }
 
 impl Default for IoProfile {
@@ -61,11 +70,16 @@ impl Default for IoProfile {
         IoProfile {
             depth: 1,
             preload_indexes: false,
+            coalesce_gap: 0,
+            coalesce_max: IoProfile::DEFAULT_COALESCE_MAX,
         }
     }
 }
 
 impl IoProfile {
+    /// Default cap on a merged read: 8 MiB, one full Lustre stripe.
+    pub const DEFAULT_COALESCE_MAX: u64 = 8 << 20;
+
     /// Shorthand for a depth-N profile with default caching.
     pub fn depth(depth: usize) -> IoProfile {
         IoProfile {
@@ -79,12 +93,37 @@ impl IoProfile {
         self
     }
 
+    /// Enable read-plan coalescing with the given hole budget.
+    pub fn with_coalesce_gap(mut self, gap: u64) -> IoProfile {
+        self.coalesce_gap = gap;
+        self
+    }
+
+    /// Cap one merged read's size (0 = unbounded).
+    pub fn with_coalesce_max(mut self, max: u64) -> IoProfile {
+        self.coalesce_max = max;
+        self
+    }
+
+    /// Whether the read planner runs on the batched retrieve paths.
+    pub fn coalesce_enabled(&self) -> bool {
+        self.coalesce_gap > 0
+    }
+
     /// Bounds check (shared by the builder and the CLI front-ends).
     pub fn validate(&self) -> Result<(), FdbError> {
         if self.depth == 0 || self.depth > 64 {
             return Err(FdbError::InvalidConfig(format!(
                 "io depth must be in 1..=64 (got {})",
                 self.depth
+            )));
+        }
+        if self.coalesce_gap > 0 && self.coalesce_max > 0 && self.coalesce_gap >= self.coalesce_max
+        {
+            return Err(FdbError::InvalidConfig(format!(
+                "coalesce gap ({}) must be smaller than coalesce max ({}) — \
+                 a hole budget at or above the read cap would merge nothing but holes",
+                self.coalesce_gap, self.coalesce_max
             )));
         }
         Ok(())
@@ -251,7 +290,13 @@ impl BackendConfig {
     /// Build this config's Store side (recursing through wrappers).
     /// Callers validate first; a missing node on a node-requiring
     /// backend still surfaces as `InvalidConfig` rather than a panic.
-    fn build_store(&self, node: Option<&Rc<Node>>) -> Result<Box<dyn Store>, FdbError> {
+    /// `sim` is the virtual clock wrapper stores observe latencies with
+    /// (the replicated store's `ReadPolicy::Fastest` EWMA).
+    fn build_store(
+        &self,
+        node: Option<&Rc<Node>>,
+        sim: &Sim,
+    ) -> Result<Box<dyn Store>, FdbError> {
         let need_node = || {
             FdbError::InvalidConfig(format!("{} backend needs a client node", self.label()))
         };
@@ -292,17 +337,17 @@ impl BackendConfig {
             }
             BackendConfig::Null | BackendConfig::SharedNull(_) => Box::new(NullStore),
             BackendConfig::Tiered { front, back } => Box::new(TieredStore::new(
-                front.build_store(node)?,
-                back.build_store(node)?,
+                front.build_store(node, sim)?,
+                back.build_store(node, sim)?,
             )),
             BackendConfig::Replicated { inner, copies } => {
                 let mut replicas = Vec::with_capacity(*copies);
                 for _ in 0..*copies {
-                    replicas.push(inner.build_store(node)?);
+                    replicas.push(inner.build_store(node, sim)?);
                 }
-                Box::new(ReplicatedStore::new(replicas))
+                Box::new(ReplicatedStore::new(replicas).with_clock(sim))
             }
-            BackendConfig::Sharded { inner, .. } => inner.build_store(node)?,
+            BackendConfig::Sharded { inner, .. } => inner.build_store(node, sim)?,
         })
     }
 
@@ -439,7 +484,7 @@ impl FdbBuilder {
         let schema = self
             .schema
             .unwrap_or_else(|| config.default_schema());
-        let store = config.build_store(self.node.as_ref())?;
+        let store = config.build_store(self.node.as_ref(), &self.sim)?;
         let catalogue = config.build_catalogue(self.node.as_ref(), &schema, &self.io)?;
         let mut fdb = Fdb::new(&self.sim, schema, store, catalogue).with_io(self.io);
         if let Some(trace) = self.trace {

@@ -26,6 +26,7 @@ use std::task::Waker;
 use crate::fdb::backend::{Catalogue, Store, StoreSession};
 use crate::fdb::builder::IoProfile;
 use crate::fdb::datahandle::DataHandle;
+use crate::fdb::plan::{PlanStats, ReadPlan};
 use crate::fdb::key::Key;
 use crate::fdb::location::FieldLocation;
 use crate::fdb::request::Request;
@@ -56,6 +57,9 @@ pub struct Fdb {
     sessions: Vec<Box<dyn StoreSession>>,
     io_inflight: Cell<usize>,
     io_inflight_peak: Cell<usize>,
+    /// cumulative read-plan counters (zero until a coalesced retrieve
+    /// runs; see [`IoProfile::coalesce_gap`])
+    plan_stats: Cell<PlanStats>,
 }
 
 impl Fdb {
@@ -78,6 +82,7 @@ impl Fdb {
             sessions: Vec::new(),
             io_inflight: Cell::new(0),
             io_inflight_peak: Cell::new(0),
+            plan_stats: Cell::new(PlanStats::default()),
         }
     }
 
@@ -110,6 +115,13 @@ impl Fdb {
     /// asserted by the integration tests).
     pub fn io_inflight_peak(&self) -> usize {
         self.io_inflight_peak.get()
+    }
+
+    /// Cumulative read-plan counters across this instance's coalesced
+    /// retrieves: requested vs issued ops, merges, hole bytes read
+    /// through. All-zero until [`IoProfile::coalesce_gap`] > 0.
+    pub fn plan_stats(&self) -> PlanStats {
+        self.plan_stats.get()
     }
 
     /// Backend tags of the wired (store, catalogue) pair.
@@ -360,6 +372,10 @@ impl Fdb {
     /// sessions: up to `depth` data reads in flight behind the pipelined
     /// lookups, results re-ordered to input order — the intra-store read
     /// parallelism the serial pipe cannot express.
+    ///
+    /// With [`IoProfile::coalesce_gap`] > 0 the read planner takes over
+    /// instead (`retrieve_coalesced`): adjacent fields merge into large
+    /// ranged I/Os, byte- and order-identical output, fewer ops.
     pub async fn retrieve_many(
         &mut self,
         ids: &[Key],
@@ -389,6 +405,9 @@ impl Fdb {
                 }
             }
             return Ok(out);
+        }
+        if self.io.coalesce_enabled() {
+            return self.retrieve_coalesced(ids, &split, fanout).await;
         }
         if fanout {
             return self.retrieve_fanout(ids, &split).await;
@@ -528,6 +547,148 @@ impl Fdb {
             return Err(e);
         }
         Ok(out.into_inner().into_iter().flatten().collect())
+    }
+
+    /// [`Fdb::retrieve_many`] with the read planner on
+    /// ([`IoProfile::coalesce_gap`] > 0): resolve every location first
+    /// (the planner needs the full set — the lookup/read overlap the
+    /// pipe buys is traded for op-count reduction), build a
+    /// [`ReadPlan`] merging adjacent fields into ranged I/Os, execute
+    /// the plan, and slice the merged buffers back into per-field bytes
+    /// in input order. At depth > 1 the plan fans out over client
+    /// sessions with **merged ranges as the unit of in-flight
+    /// admission** (one [`Store::read_ranges`] call per range); at
+    /// depth 1 the whole plan issues as a single vectored
+    /// [`Store::read_ranges`] batch — a bare POSIX/RADOS store then
+    /// resolves each container (file descriptor, pool handle) once for
+    /// the batch, while wrappers route range by range by design (tiered
+    /// per minting tier, replicated per read policy). Byte- and
+    /// order-identical to the uncoalesced paths; only the op count (and
+    /// so the virtual time) changes.
+    async fn retrieve_coalesced(
+        &mut self,
+        ids: &[Key],
+        split: &[(Key, Key, Key)],
+        fanout: bool,
+    ) -> Result<Vec<(Key, Bytes)>, super::FdbError> {
+        let n = ids.len();
+        // catalogue phase: serial lookups on the one index client,
+        // accounted per op like the legacy paths
+        let mut located: Vec<(usize, FieldLocation)> = Vec::new();
+        for (i, (id, (ds, colloc, elem))) in ids.iter().zip(split).enumerate() {
+            let t0 = self.sim.now();
+            let loc = self.catalogue.retrieve(ds, colloc, elem, id).await;
+            self.account(OpClass::IndexRead, t0);
+            if let Some(loc) = loc {
+                located.push((i, loc));
+            }
+        }
+        let plan = ReadPlan::build(&located, self.io.coalesce_gap, self.io.coalesce_max);
+        let mut stats = self.plan_stats.get();
+        stats.absorb(plan.stats);
+        self.plan_stats.set(stats);
+        let out = if fanout {
+            self.execute_plan_fanout(&plan, n).await?
+        } else {
+            // the whole plan as ONE vectored batch: a bare backend
+            // resolves each container (fd, ioctx) once across every
+            // merged range (wrappers route per range by design)
+            let mut out: Vec<Option<Bytes>> = (0..n).map(|_| None).collect();
+            if !plan.reads.is_empty() {
+                let handles: Vec<DataHandle> =
+                    plan.reads.iter().map(|pr| pr.handle.clone()).collect();
+                let t0 = self.sim.now();
+                let r = self.store.read_ranges(&handles).await;
+                self.account(OpClass::DataRead, t0);
+                for (pr, buf) in plan.reads.iter().zip(r?) {
+                    for &(idx, rel, len) in &pr.fields {
+                        out[idx] = Some(buf.slice(rel, len));
+                    }
+                }
+            }
+            out
+        };
+        Ok(ids
+            .iter()
+            .zip(out)
+            .filter_map(|(id, b)| b.map(|b| (id.clone(), b)))
+            .collect())
+    }
+
+    /// Execute a [`ReadPlan`] at depth > 1: one task per merged range,
+    /// admitted by the `depth`-server semaphore; each admitted task
+    /// checks a client session out of the pool, issues the ranged read
+    /// through [`Store::read_ranges`], and slices its fields into the
+    /// input-order table. Merged ranges — not raw fields — are the unit
+    /// of in-flight admission, so a plan that halves the op count also
+    /// halves the semaphore traffic.
+    async fn execute_plan_fanout(
+        &mut self,
+        plan: &ReadPlan,
+        n: usize,
+    ) -> Result<Vec<Option<Bytes>>, super::FdbError> {
+        let sem = Resource::new("fdb/io-depth", self.sessions.len().max(1));
+        let pool: RefCell<Vec<Box<dyn StoreSession>>> =
+            RefCell::new(std::mem::take(&mut self.sessions));
+        let out: RefCell<Vec<Option<Bytes>>> =
+            RefCell::new((0..n).map(|_| None).collect());
+        let failed: RefCell<Option<(usize, super::FdbError)>> = RefCell::new(None);
+        let lock_total: Cell<SimTime> = Cell::new(SimTime::ZERO);
+        let sim = self.sim.clone();
+        let trace = self.trace.clone();
+        {
+            let (pool, out, failed) = (&pool, &out, &failed);
+            let (sem, sim, trace, lock_total) = (&sem, &sim, &trace, &lock_total);
+            let inflight = &self.io_inflight;
+            let peak = &self.io_inflight_peak;
+            let tasks: Vec<_> = plan
+                .reads
+                .iter()
+                .enumerate()
+                .map(|(ri, pr)| {
+                    boxed(async move {
+                        sem.acquire().await;
+                        let mut session =
+                            pool.borrow_mut().pop().expect("session free under semaphore");
+                        inflight.set(inflight.get() + 1);
+                        peak.set(peak.get().max(inflight.get()));
+                        let t0 = sim.now();
+                        let r = session.read_ranges(std::slice::from_ref(&pr.handle)).await;
+                        let lock = session.take_lock_time();
+                        lock_total.set(lock_total.get() + lock);
+                        inflight.set(inflight.get() - 1);
+                        pool.borrow_mut().push(session);
+                        sem.release();
+                        match r {
+                            Ok(mut bufs) => {
+                                trace.record(OpClass::DataRead, sim.now() - t0 - lock);
+                                let buf = bufs.pop().expect("one buffer per handle");
+                                let mut out = out.borrow_mut();
+                                for &(idx, rel, len) in &pr.fields {
+                                    out[idx] = Some(buf.slice(rel, len));
+                                }
+                            }
+                            Err(e) => {
+                                let mut f = failed.borrow_mut();
+                                if f.as_ref().map(|(j, _)| ri < *j).unwrap_or(true) {
+                                    *f = Some((ri, e));
+                                }
+                            }
+                        }
+                    })
+                })
+                .collect();
+            join_all(tasks).await;
+        }
+        self.sessions = pool.into_inner();
+        let lock = lock_total.get();
+        if lock > SimTime::ZERO {
+            self.trace.record(OpClass::Lock, lock);
+        }
+        if let Some((_, e)) = failed.into_inner() {
+            return Err(e);
+        }
+        Ok(out.into_inner())
     }
 
     /// The direct-retrieve (hash-OID) variant of the fan-out: lookups

@@ -33,6 +33,14 @@
 //! reads/writes, with results re-ordered to input order. Depth 1 is
 //! bit-for-bit the legacy serial behaviour; any depth returns identical
 //! bytes — only virtual time changes (see the `abl_iodepth` ablation).
+//!
+//! Orthogonal to queue depth, the **vectored read planner** ([`plan`])
+//! attacks the op count itself: with [`IoProfile::coalesce_gap`] > 0,
+//! `retrieve_many` groups catalogue-resolved locations by physical
+//! container, merges adjacent fields into large ranged I/Os (issued via
+//! [`Store::read_ranges`](backend::Store::read_ranges)), and slices the
+//! merged buffers back per field — fewer, bigger ops on the same bytes
+//! (the `abl_coalesce` ablation records the win).
 
 pub mod admin;
 pub mod backend;
@@ -41,6 +49,7 @@ pub mod datahandle;
 pub mod fdb;
 pub mod key;
 pub mod location;
+pub mod plan;
 pub mod request;
 pub mod schema;
 pub mod wire;
@@ -76,6 +85,7 @@ pub use datahandle::DataHandle;
 pub use fdb::Fdb;
 pub use key::Key;
 pub use location::FieldLocation;
+pub use plan::{PlanStats, ReadPlan};
 pub use request::Request;
 pub use schema::Schema;
 

@@ -113,19 +113,33 @@ impl PosixStore {
         Ok(())
     }
 
-    /// Read the byte ranges of a (merged) POSIX handle.
-    pub async fn read_ranges(&mut self, path: &str, ranges: &[(u64, u64)]) -> Bytes {
-        let fd = self
-            .client
+    /// Open a data file for reading; a missing file or a failed open is
+    /// a typed backend error (it used to panic).
+    async fn open_data(&mut self, path: &str) -> Result<Fd, FdbError> {
+        self.client
             .open(path)
             .await
-            .expect("open")
-            .expect("data file must exist");
+            .map_err(|e| fs_err("open", path, e))?
+            .ok_or_else(|| fs_err("open", path, FsError::NotFound))
+    }
+
+    /// Read the byte ranges of a (merged) POSIX handle.
+    pub async fn read_ranges(
+        &mut self,
+        path: &str,
+        ranges: &[(u64, u64)],
+    ) -> Result<Bytes, FdbError> {
+        let fd = self.open_data(path).await?;
         let mut out = Bytes::new();
         for &(off, len) in ranges {
-            out.append(self.client.read(&fd, off, len).await.expect("read"));
+            out.append(
+                self.client
+                    .read(&fd, off, len)
+                    .await
+                    .map_err(|e| fs_err("read", path, e))?,
+            );
         }
-        out
+        Ok(out)
     }
 
     /// Profiling helper: drain DLM lock time accumulated by this client.
@@ -178,13 +192,53 @@ impl crate::fdb::backend::Store for PosixStore {
         Box::pin(async move {
             match handle {
                 crate::fdb::DataHandle::Posix { path, ranges } => {
-                    Ok(self.read_ranges(path, ranges).await)
+                    self.read_ranges(path, ranges).await
                 }
                 other => Err(crate::fdb::FdbError::BackendMismatch {
                     store: "posix",
                     handle: other.backend_name(),
                 }),
             }
+        })
+    }
+
+    /// The vectored read path: one open per distinct data file for the
+    /// whole batch (the read planner's merged ranges usually share a
+    /// file), then ranged reads against the cached descriptors.
+    fn read_ranges<'a>(
+        &'a mut self,
+        handles: &'a [crate::fdb::DataHandle],
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, Result<Vec<Bytes>, crate::fdb::FdbError>> {
+        Box::pin(async move {
+            let mut fds: HashMap<&str, Fd> = HashMap::new();
+            let mut out = Vec::with_capacity(handles.len());
+            for handle in handles {
+                let crate::fdb::DataHandle::Posix { path, ranges } = handle else {
+                    return Err(crate::fdb::FdbError::BackendMismatch {
+                        store: "posix",
+                        handle: handle.backend_name(),
+                    });
+                };
+                let fd = match fds.get(path.as_str()) {
+                    Some(fd) => fd.clone(),
+                    None => {
+                        let fd = self.open_data(path).await?;
+                        fds.insert(path.as_str(), fd.clone());
+                        fd
+                    }
+                };
+                let mut bytes = Bytes::new();
+                for &(off, len) in ranges {
+                    bytes.append(
+                        self.client
+                            .read(&fd, off, len)
+                            .await
+                            .map_err(|e| fs_err("read", path, e))?,
+                    );
+                }
+                out.push(bytes);
+            }
+            Ok(out)
         })
     }
 

@@ -247,6 +247,22 @@ impl RadosStore {
         n
     }
 
+    /// The pool handle (ioctx) a handle's pool name resolves to: the
+    /// base pool, this client's dataset-pool cache, then the cluster's
+    /// pool map (a pure reader in pool-per-dataset mode never ran
+    /// placement, so its cache is cold).
+    fn resolve_pool(&self, pool_name: &str) -> Rc<CephPool> {
+        if pool_name == self.base_pool.name {
+            return self.base_pool.clone();
+        }
+        self.ds_pools
+            .values()
+            .find(|p| p.name == pool_name)
+            .cloned()
+            .or_else(|| self.sys.pools.borrow().get(pool_name).cloned())
+            .unwrap_or_else(|| self.base_pool.clone())
+    }
+
     /// Read the parts of a RADOS handle.
     pub async fn read_parts(
         &mut self,
@@ -254,15 +270,7 @@ impl RadosStore {
         ns: &str,
         parts: &[(String, u64, u64)],
     ) -> Bytes {
-        let pool = if pool_name == self.base_pool.name {
-            self.base_pool.clone()
-        } else {
-            self.ds_pools
-                .values()
-                .find(|p| p.name == pool_name)
-                .cloned()
-                .unwrap_or_else(|| self.base_pool.clone())
-        };
+        let pool = self.resolve_pool(pool_name);
         let mut out = Bytes::new();
         for (name, off, len) in parts {
             if let Ok(Some(bytes)) = self.client.read(&pool, ns, name, *off, *len).await {
@@ -319,6 +327,62 @@ impl crate::fdb::backend::Store for RadosStore {
                     handle: other.backend_name(),
                 }),
             }
+        })
+    }
+
+    /// The vectored read path: each distinct pool resolves to its ioctx
+    /// once for the whole batch; merged spans within one object read as
+    /// single ranged ops (the planner's coalesced RADOS ranges). Unlike
+    /// the legacy per-field `read` (which tolerates a missing object as
+    /// one empty field), a failed or absent part here is a typed error:
+    /// a short merged buffer would silently misalign every field sliced
+    /// from it.
+    fn read_ranges<'a>(
+        &'a mut self,
+        handles: &'a [crate::fdb::DataHandle],
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, Result<Vec<Bytes>, crate::fdb::FdbError>> {
+        Box::pin(async move {
+            let mut ioctx: HashMap<&str, Rc<CephPool>> = HashMap::new();
+            let mut out = Vec::with_capacity(handles.len());
+            for handle in handles {
+                let crate::fdb::DataHandle::Rados { pool, ns, parts } = handle else {
+                    return Err(crate::fdb::FdbError::BackendMismatch {
+                        store: "rados",
+                        handle: handle.backend_name(),
+                    });
+                };
+                let pool = match ioctx.get(pool.as_str()) {
+                    Some(p) => p.clone(),
+                    None => {
+                        let p = self.resolve_pool(pool);
+                        ioctx.insert(pool.as_str(), p.clone());
+                        p
+                    }
+                };
+                let mut bytes = Bytes::new();
+                for (name, off, len) in parts {
+                    match self.client.read(&pool, ns, name, *off, *len).await {
+                        Ok(Some(b)) => bytes.append(b),
+                        Ok(None) => {
+                            return Err(crate::fdb::FdbError::Backend {
+                                backend: "rados",
+                                detail: format!(
+                                    "read {}/{ns}/{name}: object missing",
+                                    pool.name
+                                ),
+                            })
+                        }
+                        Err(e) => {
+                            return Err(crate::fdb::FdbError::Backend {
+                                backend: "rados",
+                                detail: format!("read {}/{ns}/{name}: {e:?}", pool.name),
+                            })
+                        }
+                    }
+                }
+                out.push(bytes);
+            }
+            Ok(out)
         })
     }
 

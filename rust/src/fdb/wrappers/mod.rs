@@ -10,9 +10,16 @@
 //!   handle.
 //! * [`ReplicatedStore`] — fan-out writes to N replica Stores, reads
 //!   balanced over healthy replicas by a [`ReadPolicy`] (round-robin by
-//!   default; `FirstHealthy` keeps the old primary-only behaviour), with
-//!   a typed [`FdbError::AllReplicasFailed`](crate::fdb::FdbError) when
-//!   every replica rejects the handle.
+//!   default; `FirstHealthy` keeps the old primary-only behaviour;
+//!   `Fastest` routes by a per-replica EWMA of observed read latency),
+//!   with a typed [`FdbError::AllReplicasFailed`](crate::fdb::FdbError)
+//!   when every replica rejects the handle.
+//!
+//! All three compose with the vectored read planner
+//! ([`crate::fdb::plan`]): tiered stores route each merged range to the
+//! tier that minted it, replicated stores apply their [`ReadPolicy`]
+//! per merged range, and the sharded catalogue is pass-through on the
+//! store side.
 //! * [`ShardedCatalogue`] — hash-partitions the index network across N
 //!   inner Catalogues keyed on the collocation key (the distributed
 //!   index-KV design DAOS demonstrated over Lustre, arXiv:2208.06752);

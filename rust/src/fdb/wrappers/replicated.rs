@@ -6,6 +6,7 @@ use crate::fdb::datahandle::DataHandle;
 use crate::fdb::key::Key;
 use crate::fdb::location::FieldLocation;
 use crate::fdb::FdbError;
+use crate::sim::exec::Sim;
 use crate::sim::time::SimTime;
 use crate::util::content::Bytes;
 
@@ -21,7 +22,34 @@ pub enum ReadPolicy {
     /// `FirstHealthy`.
     #[default]
     RoundRobin,
+    /// Probe the replica with the lowest exponentially-weighted moving
+    /// average of observed **per-byte** read latency (normalized so a
+    /// replica that happened to serve a large coalesced range is not
+    /// mistaken for a slow one; each replica is probed once to seed its
+    /// estimate). Needs the store's virtual clock
+    /// ([`ReplicatedStore::with_clock`], wired by the builder) to
+    /// observe latencies; without one the policy degrades to probing
+    /// replica 0 first. Failures fall through the ring like the other
+    /// policies.
+    Fastest,
 }
+
+/// EWMA smoothing for [`ReadPolicy::Fastest`] latency estimates: new
+/// samples get a quarter of the weight, so a transiently slow replica
+/// is not written off on one observation.
+const EWMA_ALPHA: f64 = 0.25;
+
+/// Floor of the per-byte latency sample charged to a replica whose
+/// probe FAILED (seconds/byte — orders of magnitude above any healthy
+/// rate). Failures must poison the estimate — a fast error (e.g. an
+/// instant handle mismatch) would otherwise look like the lowest
+/// latency and a dead replica would be re-probed first on every read.
+/// The actual charge is `max(this, 4 × slowest SUCCESSFUL observation)`
+/// — never derived from penalized estimates, so it cannot compound —
+/// which keeps it above healthy reads of any size yet finite: a
+/// recovered replica decays back through the EWMA once fall-through
+/// probes reach it again.
+const FAILURE_PENALTY: f64 = 0.01;
 
 /// A replicating Store. `archive()` writes the field to every replica
 /// and returns the primary's (replica 0's) location — that is what the
@@ -36,6 +64,15 @@ pub struct ReplicatedStore {
     policy: ReadPolicy,
     /// rotation cursor for [`ReadPolicy::RoundRobin`]
     next_read: usize,
+    /// virtual clock for [`ReadPolicy::Fastest`] latency observation
+    clock: Option<Sim>,
+    /// per-replica per-byte latency EWMA (seconds/byte); `None` = not
+    /// yet measured
+    ewma: Vec<Option<f64>>,
+    /// slowest SUCCESSFUL sample seen (seconds/byte) — the base of
+    /// the failure penalty, kept separate from `ewma` so penalized
+    /// estimates never feed back into the penalty
+    slowest_healthy: f64,
 }
 
 impl ReplicatedStore {
@@ -43,15 +80,27 @@ impl ReplicatedStore {
     /// before constructing one.
     pub fn new(replicas: Vec<Box<dyn Store>>) -> ReplicatedStore {
         assert!(!replicas.is_empty(), "ReplicatedStore needs >= 1 replica");
+        let ewma = vec![None; replicas.len()];
         ReplicatedStore {
             replicas,
             policy: ReadPolicy::default(),
             next_read: 0,
+            clock: None,
+            ewma,
+            slowest_healthy: 0.0,
         }
     }
 
     pub fn with_read_policy(mut self, policy: ReadPolicy) -> ReplicatedStore {
         self.policy = policy;
+        self
+    }
+
+    /// Attach the virtual clock [`ReadPolicy::Fastest`] observes read
+    /// latencies with (the builder wires this for every replicated
+    /// config).
+    pub fn with_clock(mut self, sim: &Sim) -> ReplicatedStore {
+        self.clock = Some(sim.clone());
         self
     }
 
@@ -63,6 +112,12 @@ impl ReplicatedStore {
         self.replicas.len()
     }
 
+    /// The latency estimates [`ReadPolicy::Fastest`] routes by
+    /// (seconds/byte; `None` = replica not yet measured).
+    pub fn latency_estimates(&self) -> &[Option<f64>] {
+        &self.ewma
+    }
+
     /// The replica a read should probe first under the active policy.
     fn read_start(&mut self) -> usize {
         match self.policy {
@@ -72,7 +127,97 @@ impl ReplicatedStore {
                 self.next_read = self.next_read.wrapping_add(1);
                 start
             }
+            ReadPolicy::Fastest => {
+                // probe unmeasured replicas first (seeds every estimate),
+                // then the current lowest EWMA
+                self.ewma
+                    .iter()
+                    .position(|e| e.is_none())
+                    .unwrap_or_else(|| {
+                        self.ewma
+                            .iter()
+                            .enumerate()
+                            .min_by(|a, b| {
+                                a.1.unwrap_or(f64::MAX).total_cmp(&b.1.unwrap_or(f64::MAX))
+                            })
+                            .map(|(i, _)| i)
+                            .unwrap_or(0)
+                    })
+            }
         }
+    }
+
+    /// Fold one observed sample (seconds/byte) into a replica's EWMA.
+    fn observe(&mut self, idx: usize, sample: f64) {
+        self.ewma[idx] = Some(match self.ewma[idx] {
+            Some(prev) => (1.0 - EWMA_ALPHA) * prev + EWMA_ALPHA * sample,
+            None => sample,
+        });
+    }
+
+    /// One policy-routed read: probe replicas starting at the policy's
+    /// pick, first healthy answer wins; latency is observed for
+    /// [`ReadPolicy::Fastest`]. Shared by `read` (one raw handle, probed
+    /// via the inner `read`) and `read_ranges` (`vectored`: probed via
+    /// the inner `read_ranges`, so a strict vectored inner — the RADOS
+    /// short-buffer guard — reports a typed error and the wrapper fails
+    /// over to the next replica instead of passing corrupt bytes up).
+    /// The policy applies **per merged range**, so one plan's ranges
+    /// spread over replicas like individual reads would.
+    async fn read_one(&mut self, handle: &DataHandle, vectored: bool) -> Result<Bytes, FdbError> {
+        let copies = self.replicas.len();
+        let start = self.read_start();
+        // the estimates only steer `Fastest` — skip the bookkeeping
+        // (two clock samples + EWMA fold per read) for other policies
+        let observing = self.policy == ReadPolicy::Fastest && self.clock.is_some();
+        let mut last = None;
+        for k in 0..copies {
+            let idx = (start + k) % copies;
+            let t0 = if observing {
+                self.clock.as_ref().map(|s| s.now())
+            } else {
+                None
+            };
+            let r = if vectored {
+                self.replicas[idx]
+                    .read_ranges(std::slice::from_ref(handle))
+                    .await
+                    .map(|mut bufs| bufs.pop().expect("one buffer per handle"))
+            } else {
+                self.replicas[idx].read(handle).await
+            };
+            match r {
+                Ok(bytes) => {
+                    if let Some(t0) = t0 {
+                        let now = self.clock.as_ref().expect("observing implies clock").now();
+                        // per-byte normalization: a replica that served a
+                        // large coalesced range must not look slow next
+                        // to one that served a single small field
+                        let sample =
+                            (now - t0).as_secs_f64() / handle.total_len().max(1) as f64;
+                        self.slowest_healthy = self.slowest_healthy.max(sample);
+                        self.observe(idx, sample);
+                    }
+                    return Ok(bytes);
+                }
+                Err(e) => {
+                    // charge the failure so `Fastest` stops probing a
+                    // dead replica first on every read (an instant error
+                    // must not read as "lowest latency"); based on the
+                    // slowest SUCCESSFUL sample so it tops healthy reads
+                    // of any size without compounding on itself
+                    if observing {
+                        self.observe(idx, FAILURE_PENALTY.max(4.0 * self.slowest_healthy));
+                    }
+                    last = Some(e);
+                }
+            }
+        }
+        Err(FdbError::AllReplicasFailed {
+            op: "read",
+            copies,
+            last: Box::new(last.expect("at least one replica")),
+        })
     }
 }
 
@@ -113,22 +258,24 @@ impl Store for ReplicatedStore {
         &'a mut self,
         handle: &'a DataHandle,
     ) -> LocalBoxFuture<'a, Result<Bytes, FdbError>> {
+        Box::pin(self.read_one(handle, false))
+    }
+
+    /// Vectored reads apply the [`ReadPolicy`] per merged range: each
+    /// planned range is routed like an individual read (through the
+    /// inner `read_ranges`, keeping strict vectored error semantics),
+    /// so round-robin spreads a plan's ranges over replicas and
+    /// `Fastest` keeps its latency estimates warm.
+    fn read_ranges<'a>(
+        &'a mut self,
+        handles: &'a [DataHandle],
+    ) -> LocalBoxFuture<'a, Result<Vec<Bytes>, FdbError>> {
         Box::pin(async move {
-            let copies = self.replicas.len();
-            let start = self.read_start();
-            let mut last = None;
-            for k in 0..copies {
-                let idx = (start + k) % copies;
-                match self.replicas[idx].read(handle).await {
-                    Ok(bytes) => return Ok(bytes),
-                    Err(e) => last = Some(e),
-                }
+            let mut out = Vec::with_capacity(handles.len());
+            for handle in handles {
+                out.push(self.read_one(handle, true).await?);
             }
-            Err(FdbError::AllReplicasFailed {
-                op: "read",
-                copies,
-                last: Box::new(last.expect("at least one replica")),
-            })
+            Ok(out)
         })
     }
 
@@ -177,14 +324,17 @@ impl Store for ReplicatedStore {
 
     fn session(&mut self) -> Option<Box<dyn StoreSession>> {
         // fan a session out of every replica: the session's writes still
-        // hit all N copies, and its reads rotate independently
+        // hit all N copies, and its reads rotate (or race by latency)
+        // independently — each session gathers its own EWMA estimates
         let mut replicas = Vec::with_capacity(self.replicas.len());
         for replica in &mut self.replicas {
             replicas.push(replica.session()?.into_store());
         }
-        Some(Box::new(
-            ReplicatedStore::new(replicas).with_read_policy(self.policy),
-        ))
+        let mut session = ReplicatedStore::new(replicas).with_read_policy(self.policy);
+        if let Some(sim) = &self.clock {
+            session = session.with_clock(sim);
+        }
+        Some(Box::new(session))
     }
 }
 
@@ -302,6 +452,199 @@ mod tests {
         let loc = block_on(rep.archive(&ds, &ds, &id, Bytes::virt(64, 3))).unwrap();
         let h = DataHandle::from_location(&loc);
         assert_eq!(block_on(rep.read(&h)).unwrap().len(), 64);
+    }
+
+    /// A Null-semantics store whose reads take a configurable virtual
+    /// duration — lets the Fastest tests shape per-replica latency.
+    struct DelayStore {
+        sim: Sim,
+        delay: Rc<Cell<SimTime>>,
+        reads: Rc<Cell<usize>>,
+    }
+
+    impl Store for DelayStore {
+        fn name(&self) -> &'static str {
+            "null"
+        }
+
+        fn archive<'a>(
+            &'a mut self,
+            _ds: &'a Key,
+            _colloc: &'a Key,
+            _id: &'a Key,
+            data: Bytes,
+        ) -> LocalBoxFuture<'a, Result<FieldLocation, FdbError>> {
+            crate::fdb::backend::ready(Ok(FieldLocation::Null { length: data.len() }))
+        }
+
+        fn read<'a>(
+            &'a mut self,
+            handle: &'a DataHandle,
+        ) -> LocalBoxFuture<'a, Result<Bytes, FdbError>> {
+            Box::pin(async move {
+                match handle {
+                    DataHandle::Null { length } => {
+                        self.sim.sleep(self.delay.get()).await;
+                        self.reads.set(self.reads.get() + 1);
+                        Ok(Bytes::virt(*length, 0))
+                    }
+                    other => Err(FdbError::BackendMismatch {
+                        store: "null",
+                        handle: other.backend_name(),
+                    }),
+                }
+            })
+        }
+    }
+
+    /// (tunable delay, reads served) of one probe replica.
+    type Probe = (Rc<Cell<SimTime>>, Rc<Cell<usize>>);
+
+    fn delayed_pair(sim: &Sim, d0: SimTime, d1: SimTime) -> (ReplicatedStore, Probe, Probe) {
+        let mk = |d: SimTime| {
+            let delay = Rc::new(Cell::new(d));
+            let reads = Rc::new(Cell::new(0));
+            let store = DelayStore {
+                sim: sim.clone(),
+                delay: delay.clone(),
+                reads: reads.clone(),
+            };
+            (store, delay, reads)
+        };
+        let (s0, delay0, reads0) = mk(d0);
+        let (s1, delay1, reads1) = mk(d1);
+        let rep = ReplicatedStore::new(vec![Box::new(s0), Box::new(s1)])
+            .with_read_policy(ReadPolicy::Fastest)
+            .with_clock(sim);
+        (rep, (delay0, reads0), (delay1, reads1))
+    }
+
+    #[test]
+    fn fastest_routes_to_lowest_latency_replica() {
+        let sim = Sim::new();
+        let (mut rep, (_, slow_reads), (_, fast_reads)) = delayed_pair(
+            &sim,
+            SimTime::micros(500), // replica 0: slow
+            SimTime::micros(50),  // replica 1: fast
+        );
+        sim.spawn(async move {
+            let h = DataHandle::Null { length: 8 };
+            for _ in 0..10 {
+                rep.read(&h).await.unwrap();
+            }
+            let est = rep.latency_estimates();
+            assert!(est.iter().all(|e| e.is_some()), "both replicas seeded");
+            assert!(est[1].unwrap() < est[0].unwrap());
+        });
+        sim.run();
+        // one seeding probe each, then every read lands on the fast one
+        assert_eq!(slow_reads.get(), 1);
+        assert_eq!(fast_reads.get(), 9);
+    }
+
+    #[test]
+    fn fastest_adapts_when_latencies_change() {
+        let sim = Sim::new();
+        let (mut rep, (_, other_reads), (fast_delay, fast_reads)) =
+            delayed_pair(&sim, SimTime::micros(200), SimTime::micros(50));
+        sim.spawn(async move {
+            let h = DataHandle::Null { length: 8 };
+            for _ in 0..6 {
+                rep.read(&h).await.unwrap();
+            }
+            // the fast replica degrades (e.g. a rebuilding OST behind it):
+            // its EWMA rises past the other's within a few observations
+            fast_delay.set(SimTime::micros(5000));
+            for _ in 0..6 {
+                rep.read(&h).await.unwrap();
+            }
+        });
+        sim.run();
+        // after the flip, traffic moves back to the now-faster replica
+        assert!(
+            other_reads.get() >= 4,
+            "routing never adapted: other={} fast={}",
+            other_reads.get(),
+            fast_reads.get()
+        );
+    }
+
+    /// An always-failing replica (e.g. a lost client connection) that
+    /// counts how often it is probed.
+    struct FailStore {
+        probes: Rc<Cell<usize>>,
+    }
+
+    impl Store for FailStore {
+        fn name(&self) -> &'static str {
+            "null"
+        }
+
+        fn archive<'a>(
+            &'a mut self,
+            _ds: &'a Key,
+            _colloc: &'a Key,
+            _id: &'a Key,
+            data: Bytes,
+        ) -> LocalBoxFuture<'a, Result<FieldLocation, FdbError>> {
+            crate::fdb::backend::ready(Ok(FieldLocation::Null { length: data.len() }))
+        }
+
+        fn read<'a>(
+            &'a mut self,
+            _handle: &'a DataHandle,
+        ) -> LocalBoxFuture<'a, Result<Bytes, FdbError>> {
+            self.probes.set(self.probes.get() + 1);
+            crate::fdb::backend::ready(Err(FdbError::Backend {
+                backend: "null",
+                detail: "replica down".to_string(),
+            }))
+        }
+    }
+
+    #[test]
+    fn fastest_stops_probing_a_dead_replica_first() {
+        // a dead replica fails instantly; without the failure penalty
+        // its EWMA would stay unseeded (or near zero) and every read
+        // would probe it first before falling through
+        let sim = Sim::new();
+        let healthy_reads = Rc::new(Cell::new(0));
+        let probes = Rc::new(Cell::new(0));
+        let healthy = DelayStore {
+            sim: sim.clone(),
+            delay: Rc::new(Cell::new(SimTime::micros(50))),
+            reads: healthy_reads.clone(),
+        };
+        let dead = FailStore {
+            probes: probes.clone(),
+        };
+        let mut rep = ReplicatedStore::new(vec![Box::new(healthy), Box::new(dead)])
+            .with_read_policy(ReadPolicy::Fastest)
+            .with_clock(&sim);
+        sim.spawn(async move {
+            let h = DataHandle::Null { length: 8 };
+            for _ in 0..10 {
+                rep.read(&h).await.unwrap();
+            }
+        });
+        sim.run();
+        // seeded once, then the penalty keeps it out of the rotation
+        assert_eq!(probes.get(), 1, "dead replica re-probed");
+        assert_eq!(healthy_reads.get(), 10);
+    }
+
+    #[test]
+    fn fastest_without_clock_still_serves_and_falls_through() {
+        // no clock: no latency observations, so the policy degrades to
+        // probing replica 0 first — availability semantics unchanged
+        let (mut rep, c0, c1) = counting_pair();
+        rep = rep.with_read_policy(ReadPolicy::Fastest);
+        let h = DataHandle::Null { length: 8 };
+        for _ in 0..4 {
+            block_on(rep.read(&h)).unwrap();
+        }
+        assert_eq!((c0.get(), c1.get()), (4, 0));
+        assert!(rep.latency_estimates().iter().all(|e| e.is_none()));
     }
 
     #[test]

@@ -2,8 +2,6 @@
 //! inner Catalogues keyed on the collocation key (arXiv:2208.06752's
 //! distributed index-KV design).
 
-use std::collections::{BTreeMap, BTreeSet};
-
 use crate::fdb::backend::{Catalogue, LocalBoxFuture};
 use crate::fdb::key::Key;
 use crate::fdb::location::FieldLocation;
@@ -91,11 +89,16 @@ impl Catalogue for ShardedCatalogue {
         dim: &'a str,
     ) -> LocalBoxFuture<'a, Vec<String>> {
         Box::pin(async move {
-            let mut vals = BTreeSet::new();
+            // collect every shard's values, then sort + dedup ONCE at
+            // the end (per-shard ordered-set maintenance re-sorted the
+            // accumulated result on every shard merge)
+            let mut vals = Vec::new();
             for shard in &mut self.shards {
                 vals.extend(shard.axis(ds, colloc, dim).await);
             }
-            vals.into_iter().collect()
+            vals.sort_unstable();
+            vals.dedup();
+            vals
         })
     }
 
@@ -105,15 +108,19 @@ impl Catalogue for ShardedCatalogue {
         request: &'a Request,
     ) -> LocalBoxFuture<'a, Vec<(Key, FieldLocation)>> {
         Box::pin(async move {
-            // dedup per identifier across shards (first shard wins), in
-            // deterministic key order
-            let mut merged: BTreeMap<Key, FieldLocation> = BTreeMap::new();
-            for shard in &mut self.shards {
+            // collect across shards, then one stable sort + dedup pass:
+            // per identifier the LOWEST shard wins, so inner catalogues
+            // that share a persistent namespace still produce exactly
+            // one entry per field, in deterministic key order
+            let mut all: Vec<(usize, Key, FieldLocation)> = Vec::new();
+            for (si, shard) in self.shards.iter_mut().enumerate() {
                 for (id, loc) in shard.list(ds, request).await {
-                    merged.entry(id).or_insert(loc);
+                    all.push((si, id, loc));
                 }
             }
-            merged.into_iter().collect()
+            all.sort_by(|a, b| a.1.cmp(&b.1).then(a.0.cmp(&b.0)));
+            all.dedup_by(|next, kept| next.1 == kept.1);
+            all.into_iter().map(|(_, id, loc)| (id, loc)).collect()
         })
     }
 
@@ -142,7 +149,8 @@ impl Catalogue for ShardedCatalogue {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fdb::backend::{block_on_ready as block_on, NullCatalogue};
+    use crate::fdb::backend::{block_on_ready as block_on, NullCatalogue, SharedNullCatalogue};
+    use std::collections::BTreeSet;
 
     fn sharded(n: usize) -> ShardedCatalogue {
         ShardedCatalogue::new(
@@ -182,6 +190,32 @@ mod tests {
         // least two shards must own entries
         let routes: BTreeSet<usize> = ids.iter().map(|(c, _)| cat.shard_of(c)).collect();
         assert!(routes.len() >= 2, "hash routing collapsed to one shard");
+    }
+
+    #[test]
+    fn duplicate_keys_across_shards_surface_exactly_once() {
+        // two shards backed by ONE shared namespace: every archived
+        // entry is reported by both shards, the worst case the dedup
+        // pass must collapse. Regression for the cross-shard merge.
+        let shared = SharedNullCatalogue::new();
+        let mut cat = ShardedCatalogue::new(vec![
+            Box::new(shared.clone()),
+            Box::new(shared.clone()),
+        ]);
+        let ds = Key::of(&[("class", "od")]);
+        for step in 1..=5u32 {
+            let colloc = Key::of(&[("class", "od"), ("step", &step.to_string())]);
+            let id = colloc.clone().with("param", "p0");
+            block_on(cat.archive(&ds, &colloc, &id, &id, &loc(step as u64))).unwrap();
+        }
+        let listed = block_on(cat.list(&ds, &Request::parse("").unwrap()));
+        assert_eq!(listed.len(), 5, "each duplicated key must appear once");
+        // deterministic key order, no adjacent duplicates
+        for w in listed.windows(2) {
+            assert!(w[0].0 < w[1].0, "listing must stay strictly sorted");
+        }
+        let axis = block_on(cat.axis(&ds, &Key::new(), "step"));
+        assert_eq!(axis, vec!["1", "2", "3", "4", "5"]);
     }
 
     #[test]

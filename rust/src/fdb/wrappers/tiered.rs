@@ -93,6 +93,29 @@ impl Store for TieredStore {
         })
     }
 
+    /// Vectored reads route each merged range to the tier that minted
+    /// its locations: the front is tried first and a
+    /// [`FdbError::BackendMismatch`] falls through to the back, range by
+    /// range, so one plan may span both tiers.
+    fn read_ranges<'a>(
+        &'a mut self,
+        handles: &'a [DataHandle],
+    ) -> LocalBoxFuture<'a, Result<Vec<Bytes>, FdbError>> {
+        Box::pin(async move {
+            let mut out = Vec::with_capacity(handles.len());
+            for handle in handles {
+                let one = std::slice::from_ref(handle);
+                match self.front.read_ranges(one).await {
+                    Err(FdbError::BackendMismatch { .. }) => {
+                        out.extend(self.back.read_ranges(one).await?)
+                    }
+                    other => out.extend(other?),
+                }
+            }
+            Ok(out)
+        })
+    }
+
     /// Direct (catalogue-bypassing) retrieval is forwarded from the
     /// FRONT tier only: every archived field lands there first, so a
     /// direct-capable front resolves unflushed fields too. A

@@ -1,0 +1,400 @@
+//! Read-plan coalescing equivalence and accounting tests.
+//!
+//! Property: for ANY `(coalesce_gap, coalesce_max, depth)` combination,
+//! the batched `retrieve_many` path returns **byte- and order-identical**
+//! results to the uncoalesced depth-1 legacy path — over the Null pair,
+//! bare POSIX/Lustre, spanned RADOS (the object shape that genuinely
+//! merges), and the recursive sharded(tiered(posix, replicated(posix)))
+//! stack — only the I/O op count (and so the virtual time) may change.
+//! Plus: merged ranges (not raw fields) are the unit the depth
+//! semaphore admits, and the planner's `ops_merged`/`ops_out` counters
+//! match the `DataRead` ops the trace actually saw.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use fdbr::bench::scenario::{deploy, RedundancyOpt, SystemKind, SystemUnderTest};
+use fdbr::fdb::rados::store::{RadosLayout, RadosStoreConfig};
+use fdbr::fdb::{BackendConfig, Fdb, FdbBuilder, FdbError, IoProfile, Key, PlanStats};
+use fdbr::hw::profiles::Testbed;
+use fdbr::sim::exec::Sim;
+use fdbr::sim::trace::{OpClass, Trace};
+use fdbr::util::content::Bytes;
+use fdbr::util::rng::Rng;
+
+/// One randomized dense-ish workload: fields addressed by (step, param)
+/// with per-field payload sizes (coalescible runs arise naturally since
+/// one process appends them in order).
+#[derive(Clone, Debug)]
+struct Workload {
+    fields: Vec<(u32, u32, u64)>,
+}
+
+fn gen_workload(rng: &mut Rng) -> Workload {
+    let n = 2 + rng.below(14) as usize;
+    let fields = (0..n)
+        .map(|_| {
+            (
+                1 + rng.below(4) as u32,
+                rng.below(4) as u32,
+                128 + rng.below(8192),
+            )
+        })
+        .collect();
+    Workload { fields }
+}
+
+/// The knob combinations a backend is swept over, against the
+/// `(gap 0, depth 1)` baseline: gap × cap × queue depth.
+fn combos() -> Vec<IoProfile> {
+    let mut out = Vec::new();
+    for gap in [1u64, 64 << 10, 1 << 20] {
+        for max in [0u64, 3000, 8 << 20] {
+            for depth in [1usize, 4] {
+                if max != 0 && gap >= max {
+                    continue; // rejected by validation
+                }
+                out.push(
+                    IoProfile::depth(depth)
+                        .with_coalesce_gap(gap)
+                        .with_coalesce_max(max),
+                );
+            }
+        }
+    }
+    out
+}
+
+fn field_id(step: u32, param: u32) -> Key {
+    fdbr::bench::hammer::field_id(0, step, param, 0)
+}
+
+fn payload(step: u32, param: u32, size: u64) -> Bytes {
+    Bytes::virt(
+        size,
+        (u64::from(step) << 32) | (u64::from(param) << 8) | (size & 0xff),
+    )
+}
+
+/// FNV-1a over materialized bytes (payloads here are tiny).
+fn digest(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Everything observable after the batched cycle, in order.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+struct Fingerprint {
+    fetched: Vec<(String, u64, u64)>,
+}
+
+/// Archive the workload through `w` (one `archive_many` batch + flush +
+/// close), then fetch every unique identifier in one `retrieve_many`
+/// through `r`. Returns the ordered fingerprint plus the reader's
+/// cumulative plan stats and in-flight peak.
+fn run_batched(sim: &Sim, w: Fdb, r: Fdb, wl: &Workload) -> (Fingerprint, PlanStats, usize) {
+    let out = Rc::new(RefCell::new((Fingerprint::default(), PlanStats::default(), 0)));
+    let out2 = out.clone();
+    let wl = wl.clone();
+    let mut w = w;
+    let mut r = r;
+    sim.spawn(async move {
+        let mut batch: Vec<(Key, Bytes)> = Vec::new();
+        let mut ids: Vec<Key> = Vec::new();
+        let mut seen = std::collections::BTreeSet::new();
+        for &(step, param, size) in &wl.fields {
+            let id = field_id(step, param);
+            batch.push((id.clone(), payload(step, param, size)));
+            if seen.insert(id.canonical()) {
+                ids.push(id);
+            }
+        }
+        let depth = r.io_profile().depth;
+        w.archive_many(batch).await.unwrap();
+        w.flush().await.unwrap();
+        w.close().await;
+        let fetched = r.retrieve_many(&ids).await.unwrap();
+        let mut fp = Fingerprint::default();
+        for (id, bytes) in &fetched {
+            let v = bytes.to_vec();
+            fp.fetched.push((id.canonical(), v.len() as u64, digest(&v)));
+        }
+        assert!(
+            r.io_inflight_peak() <= depth.max(1),
+            "in-flight peak {} exceeds depth {}",
+            r.io_inflight_peak(),
+            depth
+        );
+        *out2.borrow_mut() = (fp, r.plan_stats(), r.io_inflight_peak());
+    });
+    sim.run();
+    let got = out.borrow().clone();
+    got
+}
+
+fn assert_combo_equivalence<F>(cases: &[Workload], fingerprints: F, what: &str)
+where
+    F: Fn(IoProfile) -> Vec<(Fingerprint, PlanStats)>,
+{
+    let base = fingerprints(IoProfile::depth(1));
+    assert!(
+        base.iter().all(|(fp, _)| !fp.fetched.is_empty()),
+        "{what}: baseline must fetch fields"
+    );
+    assert_eq!(base.len(), cases.len());
+    for io in combos() {
+        let got = fingerprints(io);
+        for ((fp, stats), (base_fp, _)) in got.iter().zip(&base) {
+            assert_eq!(
+                fp, base_fp,
+                "{what} at gap={} max={} depth={} must be byte- and order-identical \
+                 to the uncoalesced depth-1 path",
+                io.coalesce_gap, io.coalesce_max, io.depth
+            );
+            // plan bookkeeping is self-consistent on every combo
+            assert_eq!(stats.ops_in, stats.ops_out + stats.ops_merged);
+        }
+    }
+}
+
+#[test]
+fn any_combo_equals_uncoalesced_depth_one_over_null() {
+    let mut rng = Rng::new(0xC0A1);
+    let cases: Vec<Workload> = (0..3).map(|_| gen_workload(&mut rng)).collect();
+    let fingerprints = |io: IoProfile| -> Vec<(Fingerprint, PlanStats)> {
+        cases
+            .iter()
+            .map(|wl| {
+                let sim = Sim::new();
+                let mk = || {
+                    FdbBuilder::new(&sim)
+                        .backend(BackendConfig::Null)
+                        .io(io)
+                        .build()
+                        .unwrap()
+                };
+                let w = mk();
+                // process-local Null catalogue: the writer reads back
+                let sim2 = sim.clone();
+                let (fp, stats, _) = run_batched_same(&sim2, w, wl);
+                (fp, stats)
+            })
+            .collect()
+    };
+    assert_combo_equivalence(&cases, fingerprints, "Null");
+}
+
+/// Null variant where the writer is also the reader (process-local
+/// catalogue).
+fn run_batched_same(sim: &Sim, w: Fdb, wl: &Workload) -> (Fingerprint, PlanStats, usize) {
+    let out = Rc::new(RefCell::new((Fingerprint::default(), PlanStats::default(), 0)));
+    let out2 = out.clone();
+    let wl = wl.clone();
+    let mut w = w;
+    sim.spawn(async move {
+        let mut batch: Vec<(Key, Bytes)> = Vec::new();
+        let mut ids: Vec<Key> = Vec::new();
+        let mut seen = std::collections::BTreeSet::new();
+        for &(step, param, size) in &wl.fields {
+            let id = field_id(step, param);
+            batch.push((id.clone(), payload(step, param, size)));
+            if seen.insert(id.canonical()) {
+                ids.push(id);
+            }
+        }
+        w.archive_many(batch).await.unwrap();
+        w.flush().await.unwrap();
+        w.close().await;
+        let fetched = w.retrieve_many(&ids).await.unwrap();
+        let mut fp = Fingerprint::default();
+        for (id, bytes) in &fetched {
+            let v = bytes.to_vec();
+            fp.fetched.push((id.canonical(), v.len() as u64, digest(&v)));
+        }
+        *out2.borrow_mut() = (fp, w.plan_stats(), w.io_inflight_peak());
+    });
+    sim.run();
+    let got = out.borrow().clone();
+    got
+}
+
+#[test]
+fn any_combo_equals_uncoalesced_depth_one_over_posix() {
+    let mut rng = Rng::new(0xC0A2);
+    let cases: Vec<Workload> = (0..3).map(|_| gen_workload(&mut rng)).collect();
+    let fingerprints = |io: IoProfile| -> Vec<(Fingerprint, PlanStats)> {
+        let dep = deploy(Testbed::Gcp, SystemKind::Lustre, 2, 2, RedundancyOpt::None)
+            .with_io(io);
+        let nodes = dep.client_nodes();
+        cases
+            .iter()
+            .map(|wl| {
+                let w = dep.fdb(&nodes[0]);
+                let r = dep.fdb(&nodes[1]);
+                let (fp, stats, _) = run_batched(&dep.sim, w, r, wl);
+                (fp, stats)
+            })
+            .collect()
+    };
+    assert_combo_equivalence(&cases, fingerprints, "POSIX/Lustre");
+}
+
+#[test]
+fn any_combo_equals_uncoalesced_depth_one_over_spanned_rados() {
+    let mut rng = Rng::new(0xC0A3);
+    let cases: Vec<Workload> = (0..2).map(|_| gen_workload(&mut rng)).collect();
+    let fingerprints = |io: IoProfile| -> Vec<(Fingerprint, PlanStats)> {
+        let dep = deploy(Testbed::Gcp, SystemKind::Ceph, 2, 2, RedundancyOpt::None);
+        let SystemUnderTest::Ceph(ceph, pool) = &dep.system else {
+            unreachable!()
+        };
+        let nodes = dep.client_nodes();
+        let mk = |node| {
+            FdbBuilder::new(&dep.sim)
+                .node(node)
+                .backend(BackendConfig::Rados {
+                    ceph: ceph.clone(),
+                    pool: pool.clone(),
+                    store: RadosStoreConfig {
+                        layout: RadosLayout::SpannedPerProcess,
+                        ..Default::default()
+                    },
+                })
+                .io(io)
+                .build()
+                .unwrap()
+        };
+        cases
+            .iter()
+            .map(|wl| {
+                let w = mk(&nodes[0]);
+                let r = mk(&nodes[1]);
+                let (fp, stats, _) = run_batched(&dep.sim, w, r, wl);
+                (fp, stats)
+            })
+            .collect()
+    };
+    assert_combo_equivalence(&cases, fingerprints, "spanned RADOS");
+}
+
+#[test]
+fn any_combo_equals_uncoalesced_depth_one_over_recursive_stack() {
+    // sharded(tiered(posix, replicated(posix))): coalesced ranges must
+    // compose through all three wrappers — tiered routes each range to
+    // the tier that minted it, replicated applies its read policy per
+    // merged range, the sharded catalogue is pass-through on the store
+    let mut rng = Rng::new(0xC0A4);
+    let cases: Vec<Workload> = (0..2).map(|_| gen_workload(&mut rng)).collect();
+    let fingerprints = |io: IoProfile| -> Vec<(Fingerprint, PlanStats)> {
+        let dep = deploy(Testbed::Gcp, SystemKind::Lustre, 2, 2, RedundancyOpt::None);
+        let SystemUnderTest::Lustre(fs) = &dep.system else {
+            unreachable!()
+        };
+        let posix = |root: &str| BackendConfig::Posix {
+            fs: fs.clone(),
+            root: root.to_string(),
+        };
+        let cfg = BackendConfig::Sharded {
+            inner: Box::new(BackendConfig::Tiered {
+                front: Box::new(posix("/scm")),
+                back: Box::new(BackendConfig::Replicated {
+                    inner: Box::new(posix("/fdb")),
+                    copies: 2,
+                }),
+            }),
+            shards: 3,
+        };
+        let nodes = dep.client_nodes();
+        let mk = |node| {
+            FdbBuilder::new(&dep.sim)
+                .node(node)
+                .backend(cfg.clone())
+                .io(io)
+                .build()
+                .unwrap()
+        };
+        cases
+            .iter()
+            .map(|wl| {
+                let w = mk(&nodes[0]);
+                let r = mk(&nodes[1]);
+                let (fp, stats, _) = run_batched(&dep.sim, w, r, wl);
+                (fp, stats)
+            })
+            .collect()
+    };
+    assert_combo_equivalence(&cases, fingerprints, "sharded(tiered(posix,replicated))");
+}
+
+#[test]
+fn merged_ranges_are_the_admission_unit_and_match_the_trace() {
+    // a dense batch: 32 fields back-to-back in one data file. With a
+    // 64 KiB gap budget the planner collapses them into a handful of
+    // ranged reads; on the DEPTH > 1 fan-out path the trace's DataRead
+    // count must equal the planner's ops_out (merged ranges — NOT raw
+    // fields — hit the semaphore), and the in-flight peak stays under
+    // the configured depth. (The depth-1 serial path instead records
+    // ONE DataRead span for the whole vectored batch; `plan_stats().
+    // ops_out` is the authoritative issued-op count at any depth.)
+    let dep = deploy(Testbed::Gcp, SystemKind::Lustre, 2, 2, RedundancyOpt::None).with_io(
+        IoProfile::depth(4)
+            .with_preload_indexes(true)
+            .with_coalesce_gap(64 << 10),
+    );
+    let nodes = dep.client_nodes();
+    let trace = Trace::new();
+    let mut w = dep.fdb(&nodes[0]);
+    let mut r = dep.fdb_traced(&nodes[1], &trace);
+    let out = Rc::new(RefCell::new((PlanStats::default(), 0usize)));
+    let out2 = out.clone();
+    dep.sim.spawn(async move {
+        let batch: Vec<(Key, Bytes)> = (0..32u32)
+            .map(|i| {
+                let id = field_id(1 + i / 8, i % 8);
+                (id, Bytes::virt(32 << 10, u64::from(i)))
+            })
+            .collect();
+        let ids: Vec<Key> = batch.iter().map(|(id, _)| id.clone()).collect();
+        w.archive_many(batch).await.unwrap();
+        w.flush().await.unwrap();
+        w.close().await;
+        let fetched = r.retrieve_many(&ids).await.unwrap();
+        assert_eq!(fetched.len(), ids.len());
+        *out2.borrow_mut() = (r.plan_stats(), r.io_inflight_peak());
+    });
+    dep.sim.run();
+    let (stats, peak) = *out.borrow();
+    assert_eq!(stats.ops_in, 32);
+    assert!(
+        stats.ops_merged > 0,
+        "dense fields must merge: {stats:?}"
+    );
+    assert_eq!(
+        trace.count(OpClass::DataRead),
+        stats.ops_out,
+        "DataRead ops must be the PLANNED ranges, not raw fields"
+    );
+    assert!(peak <= 4, "in-flight peak {peak} exceeds depth 4");
+}
+
+#[test]
+fn coalesce_profile_validation() {
+    // gap at or above the cap is rejected; gap below it passes
+    let sim = Sim::new();
+    let err = FdbBuilder::new(&sim)
+        .backend(BackendConfig::Null)
+        .io(IoProfile::depth(1).with_coalesce_gap(4096).with_coalesce_max(4096))
+        .build()
+        .unwrap_err();
+    assert!(matches!(err, FdbError::InvalidConfig(_)), "{err}");
+    let sim = Sim::new();
+    assert!(FdbBuilder::new(&sim)
+        .backend(BackendConfig::Null)
+        .io(IoProfile::depth(1).with_coalesce_gap(4096).with_coalesce_max(8192))
+        .build()
+        .is_ok());
+}
