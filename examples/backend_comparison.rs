@@ -18,7 +18,7 @@ fn exercise(mut w: Fdb, mut r: Fdb, sim: &Sim, label: &'static str) {
         let id = example_identifier();
         w.archive(&id, b"backend-comparison-payload").await.unwrap();
         w.flush().await.expect("flush");
-        w.close().await;
+        w.close().await.expect("close");
         let h = r.retrieve(&id).await.unwrap().expect("retrievable");
         let bytes = r.read(&h).await.unwrap().to_vec();
         assert_eq!(bytes, b"backend-comparison-payload");

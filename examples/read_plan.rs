@@ -60,7 +60,7 @@ fn main() {
                     .collect();
                 writer.archive_many(batch).await.unwrap();
                 writer.flush().await.unwrap();
-                writer.close().await;
+                writer.close().await.expect("close");
 
                 let t0 = sim.now();
                 let fetched = reader.retrieve_many(&ids()).await.unwrap();

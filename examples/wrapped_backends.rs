@@ -32,7 +32,7 @@ fn main() {
             let id = example_identifier();
             w.archive(&id, b"wrapped-payload").await.unwrap();
             w.flush().await.unwrap();
-            w.close().await;
+            w.close().await.expect("close");
             let h = r.retrieve(&id).await.unwrap().expect("retrievable");
             assert_eq!(r.read(&h).await.unwrap().to_vec(), b"wrapped-payload");
         });
@@ -80,7 +80,7 @@ fn main() {
         // flush writes the absorbed fields through to both replicas of
         // the back tier, then publishes the sharded index
         w.flush().await.unwrap();
-        w.close().await;
+        w.close().await.expect("close");
         for step in 1..=4u32 {
             let id = example_identifier().with("step", step.to_string());
             let h = r.retrieve(&id).await.unwrap().expect("retrievable");

@@ -141,6 +141,7 @@ fn main() {
             field_size: 1 << 20,
             check: false,
             contention: false,
+            faults_ok: false,
         },
     );
     let ops = 2 * 4 * 8 * 10 * 5 * 4; // write+read phases

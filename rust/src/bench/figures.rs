@@ -75,6 +75,12 @@ impl Figure {
             .map(|r| r.value)
     }
 
+    /// Version of the benchmark-record JSON schema emitted by
+    /// [`Figure::to_json`]. Bump when the shape of the emitted object
+    /// changes, so checked-in `BENCH_*.json` baselines can be compared
+    /// against fresh output without guessing their vintage.
+    pub const JSON_SCHEMA_VERSION: u64 = 1;
+
     /// Machine-readable form (benchmark records like `BENCH_iodepth.json`).
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
@@ -90,6 +96,7 @@ impl Figure {
             })
             .collect();
         Json::obj()
+            .set("schema_version", Figure::JSON_SCHEMA_VERSION)
             .set("id", self.id)
             .set("title", self.title)
             .set("expectation", self.expectation)
@@ -545,6 +552,7 @@ fn hammer_scaling(
                     field_size: 1 << 20,
                     check: false,
                     contention,
+                    faults_ok: false,
                 },
             );
             rows.push(FigRow {
@@ -592,6 +600,7 @@ fn profile_fig(id: &'static str, testbed: Testbed, kind: SystemKind, scale: f64)
                 field_size: 1 << 20,
                 check: false,
                 contention,
+                faults_ok: false,
             },
         );
         profiles.push((
@@ -850,6 +859,7 @@ fn fig4_26(scale: f64) -> Figure {
                 field_size: 1 << 10, // 1 KiB fields
                 check: false,
                 contention: false,
+                faults_ok: false,
             },
         );
         rows.push(FigRow {
@@ -915,6 +925,7 @@ fn redundancy_fig(
                             field_size: 1 << 20,
                             check: false,
                             contention: false,
+                            faults_ok: false,
                         },
                     );
                     r

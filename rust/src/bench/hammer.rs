@@ -27,6 +27,10 @@ pub struct HammerConfig {
     /// run writers and readers concurrently (write+read contention);
     /// readers hit the dataset pre-populated by a prior write phase
     pub contention: bool,
+    /// tolerate injected backend faults: ops that fail with a typed
+    /// error are skipped (and excluded from the bandwidth accounting)
+    /// instead of aborting the run — set when a fault plan is active
+    pub faults_ok: bool,
 }
 
 impl Default for HammerConfig {
@@ -39,6 +43,7 @@ impl Default for HammerConfig {
             field_size: 1 << 20,
             check: true,
             contention: false,
+            faults_ok: false,
         }
     }
 }
@@ -99,6 +104,7 @@ async fn writer(
     wg: Rc<WaitGroup>,
 ) {
     let t0 = sim.now();
+    let mut wrote = 0u64;
     // one archive_many batch per step — the batched small-object path
     for step in 1..=cfg.nsteps {
         let batch: Vec<(Key, Bytes)> = step_ids(member, proc, step, &cfg)
@@ -108,11 +114,19 @@ async fn writer(
                 (id, data)
             })
             .collect();
-        fdb.archive_many(batch).await.expect("archive_many");
-        fdb.flush().await.expect("flush");
+        let n = batch.len() as u64;
+        match fdb.archive_many(batch).await {
+            Ok(()) => wrote += n,
+            Err(e) => assert!(cfg.faults_ok, "archive_many: {e}"),
+        }
+        if let Err(e) = fdb.flush().await {
+            assert!(cfg.faults_ok, "flush: {e}");
+        }
     }
-    fdb.close().await;
-    let bytes = cfg.fields_per_proc() * cfg.field_size;
+    if let Err(e) = fdb.close().await {
+        assert!(cfg.faults_ok, "close: {e}");
+    }
+    let bytes = wrote * cfg.field_size;
     spans.borrow_mut().push((t0, sim.now(), bytes));
     wg.done();
 }
@@ -128,23 +142,35 @@ async fn reader(
 ) {
     let t0 = sim.now();
     let mut missing = 0u64;
+    let mut read = 0u64;
     // batched retrieve per step: catalogue lookups pipeline with reads
     for step in 1..=cfg.nsteps {
         let ids = step_ids(member, proc, step, &cfg);
-        let fetched = fdb.retrieve_many(&ids).await.expect("retrieve_many");
-        missing += (ids.len() - fetched.len()) as u64;
-        if cfg.check {
-            for (id, data) in &fetched {
-                let expect = Bytes::virt(cfg.field_size, field_seed(id));
-                assert!(
-                    data.content_eq(&expect),
-                    "consistency check failed for {id}"
-                );
+        match fdb.retrieve_many(&ids).await {
+            Ok(fetched) => {
+                missing += (ids.len() - fetched.len()) as u64;
+                read += fetched.len() as u64;
+                if cfg.check {
+                    for (id, data) in &fetched {
+                        let expect = Bytes::virt(cfg.field_size, field_seed(id));
+                        assert!(
+                            data.content_eq(&expect),
+                            "consistency check failed for {id}"
+                        );
+                    }
+                }
+            }
+            Err(e) => {
+                assert!(cfg.faults_ok, "retrieve_many: {e}");
+                missing += ids.len() as u64;
             }
         }
     }
-    assert_eq!(missing, 0, "reader found {missing} missing fields");
-    let bytes = cfg.fields_per_proc() * cfg.field_size;
+    assert!(
+        missing == 0 || cfg.faults_ok,
+        "reader found {missing} missing fields"
+    );
+    let bytes = read * cfg.field_size;
     spans.borrow_mut().push((t0, sim.now(), bytes));
     wg.done();
 }
@@ -284,6 +310,7 @@ mod tests {
             field_size: 256 << 10,
             check: true,
             contention: false,
+            faults_ok: false,
         }
     }
 
@@ -356,6 +383,7 @@ mod tests {
                 field_size: 1 << 20, // 300 MiB per proc > 256 MiB budget
                 check: false,
                 contention,
+                faults_ok: false,
             };
             run(&dep, cfg).0
         };

@@ -3,6 +3,7 @@
 //! regenerates every evaluation table and figure.
 
 pub mod ablations;
+pub mod crash;
 pub mod fieldio;
 pub mod figures;
 pub mod hammer;

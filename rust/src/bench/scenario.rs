@@ -6,7 +6,7 @@ use std::rc::Rc;
 
 use crate::ceph::{Ceph, CephConfig, CephPool, Redundancy};
 use crate::daos::{Daos, DaosConfig};
-use crate::fdb::{BackendConfig, Fdb, FdbBuilder, IoProfile, SharedNullCatalogue};
+use crate::fdb::{BackendConfig, FaultPlan, Fdb, FdbBuilder, IoProfile, SharedNullCatalogue};
 use crate::hw::cluster::Cluster;
 use crate::hw::node::Node;
 use crate::hw::profiles::{build_cluster, Testbed};
@@ -116,6 +116,10 @@ pub struct Deployment {
     /// I/O-depth profile applied to every FDB instance built from this
     /// deployment (queue depth + POSIX index caching)
     pub io: IoProfile,
+    /// Seeded fault plan wrapped around the BASE backend of every FDB
+    /// instance built from this deployment ([`crate::fdb::fault`]); None
+    /// = no fault injection
+    pub fault: Option<FaultPlan>,
 }
 
 /// Redundancy options for Figs 4.27/4.28 (mapped per system).
@@ -176,6 +180,7 @@ pub fn deploy(
         testbed,
         wrapper: WrapperOpt::Bare,
         io: IoProfile::default(),
+        fault: None,
     }
 }
 
@@ -201,6 +206,15 @@ impl Deployment {
     /// Convenience: just the queue depth.
     pub fn with_io_depth(mut self, depth: usize) -> Deployment {
         self.io.depth = depth;
+        self
+    }
+
+    /// Inject seeded faults into every FDB instance built from this
+    /// deployment. The plan wraps the BASE backend — *inside* any
+    /// wrapper — so a replicated deployment's replicas each draw an
+    /// independent fault stream (a dead replica, not a dead store).
+    pub fn with_fault(mut self, plan: FaultPlan) -> Deployment {
+        self.fault = Some(plan);
         self
     }
 
@@ -242,7 +256,13 @@ impl Deployment {
     /// the selected wrapper applied — the single place mapping a
     /// deployed system to FDB backends.
     pub fn backend_config(&self) -> BackendConfig {
-        let base = self.base_config();
+        let mut base = self.base_config();
+        if let Some(plan) = &self.fault {
+            base = BackendConfig::Fault {
+                inner: Box::new(base),
+                plan: plan.clone(),
+            };
+        }
         match self.wrapper {
             WrapperOpt::Bare => base,
             WrapperOpt::Tiered => BackendConfig::Tiered {

@@ -96,7 +96,8 @@ fn parse_io_depth(args: &Args, kind: SystemKind) -> Result<usize> {
 /// `fdbctl hammer --system daos --testbed gcp --servers 4 --clients 8
 /// [--io-depth n|auto] [--index-cache]
 /// [--coalesce-gap sz] [--coalesce-max sz]
-/// [--wrapper tiered|replicated[:n]|sharded[:n]] ...`
+/// [--wrapper tiered|replicated[:n]|sharded[:n]]
+/// [--durable] [--fault spec] ...`
 pub fn cmd_hammer(args: &Args) -> Result<()> {
     let testbed = parse_testbed(opt(args, "testbed", "gcp")?)?;
     let kind = parse_system(opt(args, "system", "daos")?)?;
@@ -110,11 +111,24 @@ pub fn cmd_hammer(args: &Args) -> Result<()> {
             args,
             "coalesce-max",
             crate::fdb::IoProfile::DEFAULT_COALESCE_MAX,
-        )?);
+        )?)
+        .with_durable(args.flag("durable"));
     io.validate().map_err(|e| anyhow::anyhow!("--io-depth/--coalesce-*: {e}"))?;
-    let dep = deploy(testbed, kind, servers, clients, RedundancyOpt::None)
+    // seeded fault injection: the plan wraps the base backend, inside
+    // any composable wrapper, so replica/shard/tier failure paths run
+    let fault = args
+        .value_of("fault")
+        .map_err(|e| anyhow::anyhow!(e))?
+        .map(crate::fdb::FaultPlan::parse)
+        .transpose()
+        .map_err(|e| anyhow::anyhow!("--fault: {e}"))?;
+    let mut dep = deploy(testbed, kind, servers, clients, RedundancyOpt::None)
         .with_wrapper(wrapper)
         .with_io(io);
+    let faults_ok = fault.is_some();
+    if let Some(plan) = fault {
+        dep = dep.with_fault(plan);
+    }
     let cfg = hammer::HammerConfig {
         procs_per_node: num(args, "procs", 8usize)?,
         nsteps: num(args, "steps", 10u32)?,
@@ -123,6 +137,7 @@ pub fn cmd_hammer(args: &Args) -> Result<()> {
         field_size: size(args, "field-size", 1 << 20)?,
         check: args.flag("check"),
         contention: args.flag("contention"),
+        faults_ok,
     };
     let (r, trace) = hammer::run(&dep, cfg);
     println!(
@@ -136,22 +151,69 @@ pub fn cmd_hammer(args: &Args) -> Result<()> {
         cfg.fields_per_proc(),
         crate::util::humansize::fmt_bytes(cfg.field_size),
         dep.io.depth,
-        if dep.io.coalesce_enabled() {
-            format!(
-                ", coalesce gap {} / max {}",
+        match (dep.io.coalesce_enabled(), dep.io.durable) {
+            (true, durable) => format!(
+                ", coalesce gap {} / max {}{}",
                 crate::util::humansize::fmt_bytes(dep.io.coalesce_gap),
-                crate::util::humansize::fmt_bytes(dep.io.coalesce_max)
-            )
-        } else {
-            String::new()
+                crate::util::humansize::fmt_bytes(dep.io.coalesce_max),
+                if durable { ", durable" } else { "" }
+            ),
+            (false, true) => ", durable".to_string(),
+            (false, false) => String::new(),
         },
     );
     println!("  write: {:8.2} GiB/s   ({})", r.gibs_w(), r.write_time);
     println!("  read:  {:8.2} GiB/s   ({})", r.gibs_r(), r.read_time);
     println!("  profile: {}", trace.render());
     if cfg.check {
-        println!("  consistency check: PASSED (all fields found, bytes verified)");
+        if cfg.faults_ok {
+            println!("  consistency check: PASSED (retrieved fields byte-verified under faults)");
+        } else {
+            println!("  consistency check: PASSED (all fields found, bytes verified)");
+        }
     }
+    Ok(())
+}
+
+/// `fdbctl crash --seed 42 --kill 9 --nfields 24 [--wrapper replicated:2]
+/// [--field-size sz]`: one seeded crash-recovery run on the WAL'd POSIX
+/// catalogue — a durable writer is fail-stopped after `--kill` store
+/// writes, a fresh instance replays the WAL, and every recovered field
+/// is byte-verified (the CI durability smoke).
+pub fn cmd_crash(args: &Args) -> Result<()> {
+    let kind = parse_system(opt(args, "system", "lustre")?)?;
+    if kind != SystemKind::Lustre {
+        bail!("crash recovery exercises the WAL'd POSIX catalogue (--system lustre)");
+    }
+    let wrapper_spec = opt(args, "wrapper", "none")?;
+    let wrapper = parse_wrapper(wrapper_spec)?;
+    let seed = num(args, "seed", 42u64)?;
+    let nfields = num(args, "nfields", 24usize)?;
+    let kill = num(args, "kill", (nfields / 2) as u64)?;
+    let field_size = size(args, "field-size", 64 << 10)?;
+    let r = crate::bench::crash::crash_archive(kind, wrapper, seed, kill, nfields, field_size);
+    println!(
+        "crash-recovery {} [{}] seed {seed} kill@{kill}: archived {}/{} fields before the fault",
+        kind.label(),
+        wrapper_spec,
+        r.archived,
+        r.attempted,
+    );
+    println!(
+        "  WAL replay: {} intents replayed, {} committed, {} data-missing, {} torn bytes",
+        r.stats.replayed, r.stats.committed, r.stats.data_missing, r.stats.torn_bytes
+    );
+    println!("  recovery time: {:.3} ms (virtual)", r.recovery_ms);
+    println!("  verified: {} byte-identical, ghosts: {}", r.verified, r.ghosts);
+    if r.verified != r.archived || r.ghosts != 0 {
+        bail!(
+            "recovery check FAILED: {}/{} fields verified, {} ghost entries",
+            r.verified,
+            r.archived,
+            r.ghosts
+        );
+    }
+    println!("  recovery check: PASSED (index and data agree at the kill point)");
     Ok(())
 }
 
@@ -349,7 +411,7 @@ pub fn cmd_admin(args: &Args) -> Result<()> {
                 .unwrap();
         }
         fdb.flush().await.expect("flush");
-        fdb.close().await;
+        fdb.close().await.expect("close");
         let ds = example_identifier()
             .project(&fdb.schema.dataset.clone())
             .unwrap();
@@ -386,6 +448,12 @@ pub fn usage() -> &'static str {
                  [--io-depth n|auto] [--index-cache]\n\
                  [--coalesce-gap sz] [--coalesce-max sz]\n\
                  [--wrapper none|tiered|replicated[:n]|sharded[:n]]\n\
+                 [--durable] [--fault seed=n,failstop:<class>:<n>,torn:write:<n>,\n\
+                  err:<class>:p<f>,slow:<class>:<us>]  classes: write|read|flush|\n\
+                  index|index-flush\n\
+       crash     seeded crash-recovery smoke on the WAL'd POSIX catalogue\n\
+                 [--seed n] [--kill n] [--nfields n] [--field-size sz]\n\
+                 [--wrapper none|replicated[:n]|sharded[:n]|tiered]\n\
        ior       IOR-like generic benchmark [--system s] [--nops n] [--xfer sz] [--dfs]\n\
        fieldio   Field I/O PoC              [--system s] [--nfields n] [--dummy]\n\
        opsrun    end-to-end operational NWP run with PJRT PGEN compute\n\
@@ -492,6 +560,52 @@ mod tests {
                 .map(String::from),
         );
         cmd_hammer(&args).unwrap();
+    }
+
+    #[test]
+    fn hammer_fault_smoke() {
+        // a seeded fault plan through the CLI: slow writes + a read
+        // error rate; the run tolerates the injected typed errors
+        let args = Args::parse(
+            "--system lustre --durable --fault seed=5,slow:write:50,err:read:p0.1 --servers 2 --clients 2 --procs 1 --steps 2 --params 2 --levels 1 --field-size 65536 --check"
+                .split_whitespace()
+                .map(String::from),
+        );
+        cmd_hammer(&args).unwrap();
+    }
+
+    #[test]
+    fn hammer_bad_fault_spec_is_usage_error() {
+        let args = Args::parse(
+            "--system null --fault bogus:write:1"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let err = cmd_hammer(&args).unwrap_err();
+        assert!(err.to_string().contains("--fault"), "{err}");
+    }
+
+    #[test]
+    fn crash_command_smoke() {
+        // the CI durability smoke shape: seeded kill, WAL replay, verify
+        let args = Args::parse(
+            "--seed 11 --kill 5 --nfields 12 --field-size 4096"
+                .split_whitespace()
+                .map(String::from),
+        );
+        cmd_crash(&args).unwrap();
+        let args = Args::parse(
+            "--wrapper replicated:2 --seed 11 --kill 5 --nfields 12 --field-size 4096"
+                .split_whitespace()
+                .map(String::from),
+        );
+        cmd_crash(&args).unwrap();
+    }
+
+    #[test]
+    fn crash_rejects_non_posix_backends() {
+        let args = Args::parse(["--system".to_string(), "daos".to_string()]);
+        assert!(cmd_crash(&args).is_err());
     }
 
     #[test]

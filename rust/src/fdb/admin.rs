@@ -59,7 +59,7 @@ mod tests {
                     fdb.archive(&id, vec![7u8; 2048]).await.unwrap();
                 }
                 fdb.flush().await.expect("flush");
-                fdb.close().await;
+                fdb.close().await.expect("close");
                 let ds = example_identifier()
                     .project(&fdb.schema.dataset.clone())
                     .unwrap();

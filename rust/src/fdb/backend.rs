@@ -23,6 +23,7 @@ use std::future::Future;
 use std::pin::Pin;
 
 use super::datahandle::DataHandle;
+use super::fault::wal::RecoveryStats;
 use super::key::Key;
 use super::location::FieldLocation;
 use super::request::Request;
@@ -200,15 +201,30 @@ pub trait Catalogue {
     ) -> LocalBoxFuture<'a, Result<(), FdbError>>;
 
     /// Persist partial indexes (POSIX); no-op on immediately-persistent
-    /// backends.
-    fn flush<'a>(&'a mut self) -> LocalBoxFuture<'a, ()> {
-        ready(())
+    /// backends. Fallible: the POSIX index/sub-TOC appends hit the
+    /// filesystem and surface as [`FdbError::Backend`] — an index flush
+    /// that silently swallowed a write failure would publish entries
+    /// that never became durable.
+    fn flush<'a>(&'a mut self) -> LocalBoxFuture<'a, Result<(), FdbError>> {
+        ready(Ok(()))
     }
 
     /// End-of-producer-lifetime persistence (POSIX full indexes +
-    /// masking); no-op elsewhere.
-    fn close<'a>(&'a mut self) -> LocalBoxFuture<'a, ()> {
-        ready(())
+    /// masking); no-op elsewhere. Fallible like [`Catalogue::flush`].
+    fn close<'a>(&'a mut self) -> LocalBoxFuture<'a, Result<(), FdbError>> {
+        ready(Ok(()))
+    }
+
+    /// Crash recovery: replay any write-ahead log a died producer left
+    /// for the dataset, re-applying its lost (unflushed) index entries
+    /// to this catalogue's live state. The caller flushes afterwards to
+    /// persist them. Default: nothing to recover (backends whose archive
+    /// is immediately persistent have no WAL).
+    fn recover_dataset<'a>(
+        &'a mut self,
+        _ds: &'a Key,
+    ) -> LocalBoxFuture<'a, Result<RecoveryStats, FdbError>> {
+        ready(Ok(RecoveryStats::default()))
     }
 
     /// Look up one fully-specified identifier.

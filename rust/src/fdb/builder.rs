@@ -14,6 +14,7 @@ use std::rc::Rc;
 
 use super::backend::{Catalogue, NullCatalogue, NullStore, SharedNullCatalogue, Store};
 use super::daos::catalogue::DaosCatalogue;
+use super::fault::{FaultCatalogue, FaultPlan, FaultStore};
 use super::daos::store::DaosStore;
 use super::fdb::Fdb;
 use super::posix::catalogue::PosixCatalogue;
@@ -63,6 +64,12 @@ pub struct IoProfile {
     /// Cap on one merged read's size; the planner splits runs at this
     /// bound (a single field larger than the cap still reads whole).
     pub coalesce_max: u64,
+    /// Durable (WAL'd) catalogue writes ([`crate::fdb::fault::wal`]):
+    /// the POSIX catalogue logs an fdatasync'd intent record per archive
+    /// before mutating its in-memory index, making unflushed entries
+    /// recoverable after a producer crash via [`super::fdb::Fdb::recover`].
+    /// Off by default — the exact legacy (non-logging) write path.
+    pub durable: bool,
 }
 
 impl Default for IoProfile {
@@ -72,6 +79,7 @@ impl Default for IoProfile {
             preload_indexes: false,
             coalesce_gap: 0,
             coalesce_max: IoProfile::DEFAULT_COALESCE_MAX,
+            durable: false,
         }
     }
 }
@@ -102,6 +110,12 @@ impl IoProfile {
     /// Cap one merged read's size (0 = unbounded).
     pub fn with_coalesce_max(mut self, max: u64) -> IoProfile {
         self.coalesce_max = max;
+        self
+    }
+
+    /// Enable WAL'd (crash-recoverable) catalogue writes.
+    pub fn with_durable(mut self, on: bool) -> IoProfile {
+        self.durable = on;
         self
     }
 
@@ -188,6 +202,15 @@ pub enum BackendConfig {
         inner: Box<BackendConfig>,
         shards: usize,
     },
+    /// [`FaultStore`]/[`FaultCatalogue`]: wrap `inner` with seeded,
+    /// deterministic fault injection (see [`crate::fdb::fault`] for the
+    /// plan grammar). Each *built* instance — every replica of a
+    /// replicated inner, every FDB built from a config clone — draws an
+    /// independent RNG stream from the plan's seed.
+    Fault {
+        inner: Box<BackendConfig>,
+        plan: FaultPlan,
+    },
 }
 
 impl BackendConfig {
@@ -202,6 +225,7 @@ impl BackendConfig {
             BackendConfig::Tiered { .. } => "tiered",
             BackendConfig::Replicated { .. } => "replicated",
             BackendConfig::Sharded { .. } => "sharded",
+            BackendConfig::Fault { .. } => "fault",
         }
     }
 
@@ -218,6 +242,9 @@ impl BackendConfig {
             BackendConfig::Sharded { inner, shards } => {
                 format!("sharded{}({})", shards, inner.describe())
             }
+            BackendConfig::Fault { inner, plan } => {
+                format!("fault[{}]({})", plan.describe(), inner.describe())
+            }
             other => other.label().to_string(),
         }
     }
@@ -229,7 +256,8 @@ impl BackendConfig {
             BackendConfig::Posix { .. } => Schema::default_posix(),
             BackendConfig::Tiered { back, .. } => back.default_schema(),
             BackendConfig::Replicated { inner, .. }
-            | BackendConfig::Sharded { inner, .. } => inner.default_schema(),
+            | BackendConfig::Sharded { inner, .. }
+            | BackendConfig::Fault { inner, .. } => inner.default_schema(),
             _ => Schema::daos_variant(),
         }
     }
@@ -283,6 +311,7 @@ impl BackendConfig {
                 }
                 inner.validate(node)?;
             }
+            BackendConfig::Fault { inner, .. } => inner.validate(node)?,
         }
         Ok(())
     }
@@ -348,15 +377,21 @@ impl BackendConfig {
                 Box::new(ReplicatedStore::new(replicas).with_clock(sim))
             }
             BackendConfig::Sharded { inner, .. } => inner.build_store(node, sim)?,
+            BackendConfig::Fault { inner, plan } => Box::new(FaultStore::new(
+                inner.build_store(node, sim)?,
+                plan.build_state(Some(sim)),
+            )),
         })
     }
 
     /// Build this config's Catalogue side (recursing through wrappers).
+    /// `sim` drives fault-wrapper slow-replica delays.
     fn build_catalogue(
         &self,
         node: Option<&Rc<Node>>,
         schema: &Schema,
         io: &IoProfile,
+        sim: &Sim,
     ) -> Result<Box<dyn Catalogue>, FdbError> {
         let need_node = || {
             FdbError::InvalidConfig(format!("{} backend needs a client node", self.label()))
@@ -366,7 +401,8 @@ impl BackendConfig {
                 let node = node.ok_or_else(need_node)?;
                 Box::new(
                     PosixCatalogue::new(fs.client(node), root, schema.clone())
-                        .with_index_cache(io.preload_indexes),
+                        .with_index_cache(io.preload_indexes)
+                        .with_durable(io.durable),
                 )
             }
             BackendConfig::Daos { daos, pool, .. } => {
@@ -400,17 +436,21 @@ impl BackendConfig {
             BackendConfig::S3 { .. } | BackendConfig::Null => Box::new(NullCatalogue::new()),
             BackendConfig::SharedNull(cat) => Box::new(cat.clone()),
             // the durable back tier owns the index
-            BackendConfig::Tiered { back, .. } => back.build_catalogue(node, schema, io)?,
+            BackendConfig::Tiered { back, .. } => back.build_catalogue(node, schema, io, sim)?,
             BackendConfig::Replicated { inner, .. } => {
-                inner.build_catalogue(node, schema, io)?
+                inner.build_catalogue(node, schema, io, sim)?
             }
             BackendConfig::Sharded { inner, shards } => {
                 let mut parts = Vec::with_capacity(*shards);
                 for _ in 0..*shards {
-                    parts.push(inner.build_catalogue(node, schema, io)?);
+                    parts.push(inner.build_catalogue(node, schema, io, sim)?);
                 }
                 Box::new(ShardedCatalogue::new(parts))
             }
+            BackendConfig::Fault { inner, plan } => Box::new(FaultCatalogue::new(
+                inner.build_catalogue(node, schema, io, sim)?,
+                plan.build_state(Some(sim)),
+            )),
         })
     }
 }
@@ -485,7 +525,8 @@ impl FdbBuilder {
             .schema
             .unwrap_or_else(|| config.default_schema());
         let store = config.build_store(self.node.as_ref(), &self.sim)?;
-        let catalogue = config.build_catalogue(self.node.as_ref(), &schema, &self.io)?;
+        let catalogue =
+            config.build_catalogue(self.node.as_ref(), &schema, &self.io, &self.sim)?;
         let mut fdb = Fdb::new(&self.sim, schema, store, catalogue).with_io(self.io);
         if let Some(trace) = self.trace {
             fdb = fdb.with_trace(trace);

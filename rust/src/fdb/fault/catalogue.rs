@@ -1,0 +1,186 @@
+//! [`FaultCatalogue`]: the metadata-plane half of the fault harness —
+//! injects seeded faults into an inner [`Catalogue`]'s archive (`index`
+//! class) and flush/close (`index-flush` class) paths. The interesting
+//! kill window for crash recovery sits exactly here: a store-side write
+//! that succeeded whose index mutation or index flush then dies.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::fdb::backend::{Catalogue, LocalBoxFuture};
+use crate::fdb::key::Key;
+use crate::fdb::location::FieldLocation;
+use crate::fdb::request::Request;
+use crate::fdb::FdbError;
+use crate::sim::time::SimTime;
+
+use super::plan::{FaultClass, FaultDecision, FaultState};
+use super::wal::RecoveryStats;
+
+pub struct FaultCatalogue {
+    inner: Box<dyn Catalogue>,
+    state: Rc<RefCell<FaultState>>,
+}
+
+impl FaultCatalogue {
+    pub fn new(inner: Box<dyn Catalogue>, state: Rc<RefCell<FaultState>>) -> FaultCatalogue {
+        FaultCatalogue { inner, state }
+    }
+
+    async fn gate(&self, class: FaultClass) -> Result<(), FdbError> {
+        let decision = self.state.borrow_mut().on_op(class, 0);
+        match decision {
+            FaultDecision::Proceed { delay } => {
+                if let (Some(d), Some(sim)) = (delay, self.state.borrow().sim()) {
+                    sim.sleep(d).await;
+                }
+                Ok(())
+            }
+            FaultDecision::Fail(e) => Err(e),
+            // torn writes are a data-plane concept; treat as plain failure
+            FaultDecision::TornWrite { .. } => Err(FdbError::Backend {
+                backend: "fault",
+                detail: "torn fault on a catalogue op".into(),
+            }),
+        }
+    }
+}
+
+impl Catalogue for FaultCatalogue {
+    fn name(&self) -> &'static str {
+        "fault"
+    }
+
+    fn archive<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        colloc: &'a Key,
+        elem: &'a Key,
+        id: &'a Key,
+        loc: &'a FieldLocation,
+    ) -> LocalBoxFuture<'a, Result<(), FdbError>> {
+        Box::pin(async move {
+            self.gate(FaultClass::Index).await?;
+            self.inner.archive(ds, colloc, elem, id, loc).await
+        })
+    }
+
+    fn flush<'a>(&'a mut self) -> LocalBoxFuture<'a, Result<(), FdbError>> {
+        Box::pin(async move {
+            self.gate(FaultClass::IndexFlush).await?;
+            self.inner.flush().await
+        })
+    }
+
+    fn close<'a>(&'a mut self) -> LocalBoxFuture<'a, Result<(), FdbError>> {
+        Box::pin(async move {
+            self.gate(FaultClass::IndexFlush).await?;
+            self.inner.close().await
+        })
+    }
+
+    fn recover_dataset<'a>(
+        &'a mut self,
+        ds: &'a Key,
+    ) -> LocalBoxFuture<'a, Result<RecoveryStats, FdbError>> {
+        // recovery itself is not fault-gated: the recovering process is
+        // a fresh one, not the crashed instance this plan modelled
+        self.inner.recover_dataset(ds)
+    }
+
+    fn retrieve<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        colloc: &'a Key,
+        elem: &'a Key,
+        id: &'a Key,
+    ) -> LocalBoxFuture<'a, Option<FieldLocation>> {
+        self.inner.retrieve(ds, colloc, elem, id)
+    }
+
+    fn axis<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        colloc: &'a Key,
+        dim: &'a str,
+    ) -> LocalBoxFuture<'a, Vec<String>> {
+        self.inner.axis(ds, colloc, dim)
+    }
+
+    fn list<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        request: &'a Request,
+    ) -> LocalBoxFuture<'a, Vec<(Key, FieldLocation)>> {
+        self.inner.list(ds, request)
+    }
+
+    fn invalidate_preload(&mut self, ds: &Key) {
+        self.inner.invalidate_preload(ds);
+    }
+
+    fn deregister_dataset<'a>(&'a mut self, ds: &'a Key) -> LocalBoxFuture<'a, ()> {
+        self.inner.deregister_dataset(ds)
+    }
+
+    fn take_lock_time(&self) -> SimTime {
+        self.inner.take_lock_time()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fdb::backend::{block_on_ready as block_on, NullCatalogue};
+    use crate::fdb::fault::plan::{FaultAction, FaultPlan};
+
+    fn fault_cat(plan: FaultPlan) -> FaultCatalogue {
+        FaultCatalogue::new(Box::new(NullCatalogue::new()), plan.build_state(None))
+    }
+
+    fn loc() -> FieldLocation {
+        FieldLocation::Null { length: 8 }
+    }
+
+    #[test]
+    fn index_failstop_makes_archive_a_typed_error() {
+        let plan =
+            FaultPlan::new(5).with_rule(FaultClass::Index, FaultAction::FailStop { after: 2 });
+        let mut cat = fault_cat(plan);
+        let ds = Key::new();
+        for step in 1..=2u32 {
+            let id = Key::of(&[("step", &step.to_string())]);
+            block_on(cat.archive(&ds, &ds, &id, &id, &loc())).unwrap();
+        }
+        let id = Key::of(&[("step", "3")]);
+        let err = block_on(cat.archive(&ds, &ds, &id, &id, &loc())).unwrap_err();
+        assert!(matches!(err, FdbError::Backend { backend: "fault", .. }));
+        // fail-stop is global: the index flush dies too
+        assert!(block_on(cat.flush()).is_err());
+    }
+
+    #[test]
+    fn index_flush_fault_leaves_archive_alive() {
+        // the crash-recovery kill window: archives succeed, flush dies
+        let plan =
+            FaultPlan::new(5).with_rule(FaultClass::IndexFlush, FaultAction::FailStop { after: 0 });
+        let mut cat = fault_cat(plan);
+        let ds = Key::new();
+        let id = Key::of(&[("step", "1")]);
+        block_on(cat.archive(&ds, &ds, &id, &id, &loc())).unwrap();
+        assert!(block_on(cat.flush()).is_err());
+    }
+
+    #[test]
+    fn reads_pass_through_untouched() {
+        let plan =
+            FaultPlan::new(5).with_rule(FaultClass::Index, FaultAction::FailStop { after: 0 });
+        let mut cat = fault_cat(plan);
+        let ds = Key::new();
+        let id = Key::of(&[("step", "1")]);
+        // archive dies, but lookups against the (empty) inner work
+        assert!(block_on(cat.archive(&ds, &ds, &id, &id, &loc())).is_err());
+        assert!(block_on(cat.retrieve(&ds, &ds, &id, &id)).is_none());
+        assert!(block_on(cat.list(&ds, &Request::parse("").unwrap())).is_empty());
+    }
+}

@@ -1,0 +1,43 @@
+//! The durability subsystem: deterministic fault injection + the
+//! WAL-backed crash-recovery machinery.
+//!
+//! Three cooperating layers:
+//!
+//! * [`wal`] — the write-ahead log format the POSIX catalogue appends in
+//!   durable mode (`IoProfile::durable`), with checksummed records,
+//!   commit watermarks, torn-tail truncation, and idempotent replay.
+//! * [`FaultStore`] / [`FaultCatalogue`] — wrappers in the style of
+//!   [`crate::fdb::wrappers`] that inject *seeded, deterministic* faults
+//!   into any inner backend: fail-stop after N operations, torn writes
+//!   that persist a prefix, probabilistic read errors, slow replicas via
+//!   the sim clock. Composable through [`crate::fdb::BackendConfig::Fault`]
+//!   and surfaced as `fdbctl hammer --fault <spec>`, so the replicated/
+//!   tiered/sharded failure paths (`AllReplicasFailed`, `ReadPolicy`
+//!   dead-replica rotation) finally get end-to-end coverage.
+//! * The crash-recovery scenario (`crate::bench::crash`) kills a durable
+//!   writer at seeded fault points mid-archive, reopens, replays the
+//!   WAL, and verifies index/data agreement (`abl_recovery`).
+//!
+//! Fault spec grammar (comma-separated clauses):
+//!
+//! ```text
+//! seed=<u64>                 RNG seed (default 0)
+//! failstop:<class>:<n>      after n ops of <class>, EVERY op fails
+//! torn:write:<n>            the n-th write persists a prefix, then errors
+//! err:<class>:p<prob>       each op of <class> fails with probability p
+//! slow:<class>:<micros>     delay each op of <class> by <micros> µs
+//! ```
+//!
+//! `<class>` is one of `write`, `read`, `flush` (store side), `index`,
+//! `index-flush` (catalogue side). Example:
+//! `seed=7,err:read:p0.2,slow:write:250`.
+
+pub mod catalogue;
+pub mod plan;
+pub mod store;
+pub mod wal;
+
+pub use catalogue::FaultCatalogue;
+pub use plan::{FaultAction, FaultClass, FaultPlan, FaultState};
+pub use store::FaultStore;
+pub use wal::{RecoveryStats, WalRecord};

@@ -1,0 +1,380 @@
+//! Fault plans: which operations fail, when, and how — parsed from the
+//! `--fault` spec string, executed deterministically from a seeded RNG.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::fdb::FdbError;
+use crate::sim::exec::Sim;
+use crate::sim::time::SimTime;
+use crate::util::rng::Rng;
+
+/// The operation classes faults can target. Store-side classes map to
+/// [`crate::fdb::backend::Store`] methods, catalogue-side ones to
+/// [`crate::fdb::backend::Catalogue`] methods.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultClass {
+    /// store archive (data write)
+    Write,
+    /// store read / read_ranges (per handle)
+    Read,
+    /// store flush
+    Flush,
+    /// catalogue archive (index mutation)
+    Index,
+    /// catalogue flush/close (index persistence)
+    IndexFlush,
+}
+
+impl FaultClass {
+    fn parse(s: &str) -> Option<FaultClass> {
+        Some(match s {
+            "write" => FaultClass::Write,
+            "read" => FaultClass::Read,
+            "flush" => FaultClass::Flush,
+            "index" => FaultClass::Index,
+            "index-flush" => FaultClass::IndexFlush,
+            _ => return None,
+        })
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            FaultClass::Write => 0,
+            FaultClass::Read => 1,
+            FaultClass::Flush => 2,
+            FaultClass::Index => 3,
+            FaultClass::IndexFlush => 4,
+        }
+    }
+}
+
+const NCLASSES: usize = 5;
+
+/// One fault rule of a plan.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultAction {
+    /// After `after` operations of the class, the whole instance is dead:
+    /// every subsequent operation (of ANY class) fails — a crashed node.
+    FailStop { after: u64 },
+    /// The `nth` write (0-based) persists only a prefix of its bytes and
+    /// then reports failure — a torn write.
+    Torn { nth: u64 },
+    /// Each operation of the class fails with probability `prob`.
+    Err { prob: f64 },
+    /// Each operation of the class is delayed by `micros` of sim time —
+    /// a slow replica/device.
+    Slow { micros: u64 },
+}
+
+/// A parsed, cloneable fault plan. Cloning shares the build counter, so
+/// every Store/Catalogue built from clones of one plan gets its own
+/// deterministic RNG stream (replica 0 and replica 1 of a replicated
+/// store see *different* fault sequences — dead-replica rotation is
+/// exercisable end-to-end).
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub rules: Vec<(FaultClass, FaultAction)>,
+    /// distinct stream per built instance, shared across config clones
+    builds: Rc<std::cell::Cell<u64>>,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            rules: Vec::new(),
+            builds: Rc::new(std::cell::Cell::new(0)),
+        }
+    }
+
+    pub fn with_rule(mut self, class: FaultClass, action: FaultAction) -> FaultPlan {
+        self.rules.push((class, action));
+        self
+    }
+
+    /// Parse the `--fault` spec grammar (see the module docs).
+    pub fn parse(spec: &str) -> Result<FaultPlan, FdbError> {
+        let invalid =
+            |msg: String| FdbError::InvalidConfig(format!("fault spec `{spec}`: {msg}"));
+        let mut plan = FaultPlan::new(0);
+        for clause in spec.split(',').filter(|c| !c.is_empty()) {
+            if let Some(seed) = clause.strip_prefix("seed=") {
+                plan.seed = seed
+                    .parse()
+                    .map_err(|_| invalid(format!("bad seed `{seed}`")))?;
+                continue;
+            }
+            let parts: Vec<&str> = clause.split(':').collect();
+            let [action, class, arg] = parts[..] else {
+                return Err(invalid(format!(
+                    "clause `{clause}` is not action:class:arg"
+                )));
+            };
+            let class = FaultClass::parse(class)
+                .ok_or_else(|| invalid(format!("unknown op class `{class}`")))?;
+            let action = match action {
+                "failstop" => FaultAction::FailStop {
+                    after: arg
+                        .parse()
+                        .map_err(|_| invalid(format!("bad count `{arg}`")))?,
+                },
+                "torn" => {
+                    if class != FaultClass::Write {
+                        return Err(invalid("torn faults only apply to write".into()));
+                    }
+                    FaultAction::Torn {
+                        nth: arg
+                            .parse()
+                            .map_err(|_| invalid(format!("bad count `{arg}`")))?,
+                    }
+                }
+                "err" => {
+                    let p = arg
+                        .strip_prefix('p')
+                        .and_then(|p| p.parse::<f64>().ok())
+                        .ok_or_else(|| invalid(format!("bad probability `{arg}` (want pN.N)")))?;
+                    if !(0.0..=1.0).contains(&p) {
+                        return Err(invalid(format!("probability {p} outside [0,1]")));
+                    }
+                    FaultAction::Err { prob: p }
+                }
+                "slow" => FaultAction::Slow {
+                    micros: arg
+                        .parse()
+                        .map_err(|_| invalid(format!("bad delay `{arg}`")))?,
+                },
+                other => return Err(invalid(format!("unknown action `{other}`"))),
+            };
+            plan.rules.push((class, action));
+        }
+        Ok(plan)
+    }
+
+    /// Human-readable shape for `BackendConfig::describe()`.
+    pub fn describe(&self) -> String {
+        if self.rules.is_empty() {
+            return "none".to_string();
+        }
+        let parts: Vec<String> = self
+            .rules
+            .iter()
+            .map(|(c, a)| {
+                let class = match c {
+                    FaultClass::Write => "write",
+                    FaultClass::Read => "read",
+                    FaultClass::Flush => "flush",
+                    FaultClass::Index => "index",
+                    FaultClass::IndexFlush => "index-flush",
+                };
+                match a {
+                    FaultAction::FailStop { after } => format!("failstop:{class}:{after}"),
+                    FaultAction::Torn { nth } => format!("torn:{class}:{nth}"),
+                    FaultAction::Err { prob } => format!("err:{class}:p{prob}"),
+                    FaultAction::Slow { micros } => format!("slow:{class}:{micros}"),
+                }
+            })
+            .collect();
+        parts.join(",")
+    }
+
+    /// Mint the shared mutable state for one built wrapper instance.
+    /// Each call advances the build counter so successive instances
+    /// (e.g. the replicas of a replicated store) draw independent
+    /// deterministic RNG streams.
+    pub fn build_state(&self, sim: Option<&Sim>) -> Rc<RefCell<FaultState>> {
+        let instance = self.builds.get();
+        self.builds.set(instance + 1);
+        Rc::new(RefCell::new(FaultState::new(self, instance, sim)))
+    }
+}
+
+/// Shared mutable fault state: per-class op counters plus the seeded RNG.
+/// One `Rc<RefCell<_>>` is shared by a wrapper and every session it
+/// mints, so fail-stop counts total instance operations — a dead node
+/// takes its sessions down with it.
+pub struct FaultState {
+    rules: Vec<(FaultClass, FaultAction)>,
+    counts: [u64; NCLASSES],
+    rng: Rng,
+    dead: bool,
+    sim: Option<Sim>,
+}
+
+/// What the wrapper must do for one operation.
+pub enum FaultDecision {
+    /// run the inner op (after `delay`, if any)
+    Proceed { delay: Option<SimTime> },
+    /// fail with the given injected error
+    Fail(FdbError),
+    /// write class only: persist `keep` of the payload's bytes through
+    /// the inner store, then fail
+    TornWrite { keep: u64 },
+}
+
+fn injected(detail: String) -> FdbError {
+    FdbError::Backend {
+        backend: "fault",
+        detail,
+    }
+}
+
+impl FaultState {
+    fn new(plan: &FaultPlan, instance: u64, sim: Option<&Sim>) -> FaultState {
+        let mut root = Rng::new(plan.seed);
+        FaultState {
+            rules: plan.rules.clone(),
+            counts: [0; NCLASSES],
+            rng: root.fork(instance),
+            dead: false,
+            sim: sim.cloned(),
+        }
+    }
+
+    /// Account one operation of `class` and decide its fate. `len` is
+    /// the payload size for write ops (torn-write prefix computation).
+    pub fn on_op(&mut self, class: FaultClass, len: u64) -> FaultDecision {
+        if self.dead {
+            return FaultDecision::Fail(injected("instance is fail-stopped".into()));
+        }
+        let n = self.counts[class.idx()];
+        self.counts[class.idx()] += 1;
+        let mut delay: Option<SimTime> = None;
+        for (c, action) in &self.rules {
+            if *c != class {
+                continue;
+            }
+            match action {
+                FaultAction::FailStop { after } => {
+                    if n >= *after {
+                        self.dead = true;
+                        return FaultDecision::Fail(injected(format!(
+                            "fail-stop after {after} {class:?} ops"
+                        )));
+                    }
+                }
+                FaultAction::Torn { nth } => {
+                    if n == *nth {
+                        return FaultDecision::TornWrite { keep: len / 2 };
+                    }
+                }
+                FaultAction::Err { prob } => {
+                    if self.rng.f64() < *prob {
+                        return FaultDecision::Fail(injected(format!(
+                            "injected {class:?} error (op {n})"
+                        )));
+                    }
+                }
+                FaultAction::Slow { micros } => {
+                    delay = Some(SimTime::micros(*micros));
+                }
+            }
+        }
+        FaultDecision::Proceed { delay }
+    }
+
+    pub fn sim(&self) -> Option<Sim> {
+        self.sim.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_grammar() {
+        let plan =
+            FaultPlan::parse("seed=7,failstop:write:5,torn:write:3,err:read:p0.25,slow:flush:100")
+                .unwrap();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.rules.len(), 4);
+        assert_eq!(
+            plan.rules[0],
+            (FaultClass::Write, FaultAction::FailStop { after: 5 })
+        );
+        assert_eq!(plan.rules[1], (FaultClass::Write, FaultAction::Torn { nth: 3 }));
+        assert_eq!(plan.rules[2], (FaultClass::Read, FaultAction::Err { prob: 0.25 }));
+        assert_eq!(
+            plan.rules[3],
+            (FaultClass::Flush, FaultAction::Slow { micros: 100 })
+        );
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        for bad in [
+            "flip:write:1",
+            "failstop:disk:1",
+            "err:read:0.5",
+            "err:read:p1.5",
+            "torn:read:1",
+            "seed=x",
+            "failstop:write",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+    }
+
+    #[test]
+    fn empty_spec_is_no_faults() {
+        let plan = FaultPlan::parse("").unwrap();
+        assert!(plan.rules.is_empty());
+        assert_eq!(plan.describe(), "none");
+    }
+
+    #[test]
+    fn failstop_kills_every_class() {
+        let plan =
+            FaultPlan::new(1).with_rule(FaultClass::Write, FaultAction::FailStop { after: 2 });
+        let state = plan.build_state(None);
+        let mut s = state.borrow_mut();
+        assert!(matches!(s.on_op(FaultClass::Write, 10), FaultDecision::Proceed { .. }));
+        assert!(matches!(s.on_op(FaultClass::Write, 10), FaultDecision::Proceed { .. }));
+        assert!(matches!(s.on_op(FaultClass::Write, 10), FaultDecision::Fail(_)));
+        // dead: reads fail too
+        assert!(matches!(s.on_op(FaultClass::Read, 0), FaultDecision::Fail(_)));
+    }
+
+    #[test]
+    fn torn_write_hits_exactly_the_nth() {
+        let plan = FaultPlan::new(1).with_rule(FaultClass::Write, FaultAction::Torn { nth: 1 });
+        let state = plan.build_state(None);
+        let mut s = state.borrow_mut();
+        assert!(matches!(s.on_op(FaultClass::Write, 100), FaultDecision::Proceed { .. }));
+        assert!(
+            matches!(s.on_op(FaultClass::Write, 100), FaultDecision::TornWrite { keep: 50 })
+        );
+        assert!(matches!(s.on_op(FaultClass::Write, 100), FaultDecision::Proceed { .. }));
+    }
+
+    #[test]
+    fn err_probability_is_deterministic_per_seed() {
+        let run = |seed| {
+            let plan =
+                FaultPlan::new(seed).with_rule(FaultClass::Read, FaultAction::Err { prob: 0.5 });
+            let state = plan.build_state(None);
+            let mut s = state.borrow_mut();
+            (0..64)
+                .map(|_| matches!(s.on_op(FaultClass::Read, 0), FaultDecision::Fail(_)))
+                .collect::<Vec<bool>>()
+        };
+        assert_eq!(run(42), run(42), "same seed, same fault sequence");
+        assert_ne!(run(42), run(43), "different seed, different sequence");
+    }
+
+    #[test]
+    fn instances_draw_independent_streams() {
+        let plan = FaultPlan::new(9).with_rule(FaultClass::Read, FaultAction::Err { prob: 0.5 });
+        let a = plan.build_state(None);
+        let b = plan.build_state(None); // e.g. replica 1 of the same config
+        let seq = |state: &Rc<RefCell<FaultState>>| {
+            let mut s = state.borrow_mut();
+            (0..64)
+                .map(|_| matches!(s.on_op(FaultClass::Read, 0), FaultDecision::Fail(_)))
+                .collect::<Vec<bool>>()
+        };
+        assert_ne!(seq(&a), seq(&b), "replicas must not fail in lockstep");
+    }
+}

@@ -1,0 +1,226 @@
+//! [`FaultStore`]: a [`Store`] wrapper that injects seeded, deterministic
+//! faults into its inner store — the data-plane half of the fault
+//! harness (see the [`super`] module docs for the spec grammar).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::fdb::backend::{LocalBoxFuture, Store, StoreSession};
+use crate::fdb::datahandle::DataHandle;
+use crate::fdb::key::Key;
+use crate::fdb::location::FieldLocation;
+use crate::fdb::FdbError;
+use crate::sim::time::SimTime;
+use crate::util::content::Bytes;
+
+use super::plan::{FaultClass, FaultDecision, FaultState};
+
+/// A fault-injecting Store wrapper. All state (op counters, RNG, the
+/// fail-stop flag) lives in the shared [`FaultState`], so sessions
+/// minted from this store inherit their parent's fate: a fail-stopped
+/// instance takes every session down with it, like a crashed node.
+pub struct FaultStore {
+    inner: Box<dyn Store>,
+    state: Rc<RefCell<FaultState>>,
+}
+
+impl FaultStore {
+    pub fn new(inner: Box<dyn Store>, state: Rc<RefCell<FaultState>>) -> FaultStore {
+        FaultStore { inner, state }
+    }
+
+    async fn gate(&self, class: FaultClass, len: u64) -> Result<Option<u64>, FdbError> {
+        let decision = self.state.borrow_mut().on_op(class, len);
+        match decision {
+            FaultDecision::Proceed { delay } => {
+                if let (Some(d), Some(sim)) = (delay, self.state.borrow().sim()) {
+                    sim.sleep(d).await;
+                }
+                Ok(None)
+            }
+            FaultDecision::Fail(e) => Err(e),
+            FaultDecision::TornWrite { keep } => Ok(Some(keep)),
+        }
+    }
+}
+
+impl Store for FaultStore {
+    fn name(&self) -> &'static str {
+        "fault"
+    }
+
+    fn archive<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        colloc: &'a Key,
+        id: &'a Key,
+        data: Bytes,
+    ) -> LocalBoxFuture<'a, Result<FieldLocation, FdbError>> {
+        Box::pin(async move {
+            match self.gate(FaultClass::Write, data.len()).await? {
+                None => self.inner.archive(ds, colloc, id, data).await,
+                Some(keep) => {
+                    // torn write: a prefix of the payload reaches the
+                    // inner store, then the operation reports failure —
+                    // the caller must treat the field as not archived
+                    let prefix = data.slice(0, keep);
+                    let _ = self.inner.archive(ds, colloc, id, prefix).await;
+                    Err(FdbError::Backend {
+                        backend: "fault",
+                        detail: format!("torn write: {keep}/{} bytes persisted", data.len()),
+                    })
+                }
+            }
+        })
+    }
+
+    fn flush<'a>(&'a mut self) -> LocalBoxFuture<'a, Result<(), FdbError>> {
+        Box::pin(async move {
+            self.gate(FaultClass::Flush, 0).await?;
+            self.inner.flush().await
+        })
+    }
+
+    fn read<'a>(
+        &'a mut self,
+        handle: &'a DataHandle,
+    ) -> LocalBoxFuture<'a, Result<Bytes, FdbError>> {
+        Box::pin(async move {
+            self.gate(FaultClass::Read, 0).await?;
+            self.inner.read(handle).await
+        })
+    }
+
+    fn read_ranges<'a>(
+        &'a mut self,
+        handles: &'a [DataHandle],
+    ) -> LocalBoxFuture<'a, Result<Vec<Bytes>, FdbError>> {
+        Box::pin(async move {
+            // one fault-accounted op per handle, matching the inner
+            // store's default loop — a mid-batch fault surfaces exactly
+            // at the affected range
+            let mut out = Vec::with_capacity(handles.len());
+            for handle in handles {
+                self.gate(FaultClass::Read, 0).await?;
+                out.push(self.inner.read(handle).await?);
+            }
+            Ok(out)
+        })
+    }
+
+    fn direct_retrieve_enabled(&self) -> bool {
+        self.inner.direct_retrieve_enabled()
+    }
+
+    fn retrieve_direct<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        id: &'a Key,
+    ) -> LocalBoxFuture<'a, Option<FieldLocation>> {
+        self.inner.retrieve_direct(ds, id)
+    }
+
+    fn supports_wipe(&self) -> bool {
+        self.inner.supports_wipe()
+    }
+
+    fn wipe_dataset<'a>(&'a mut self, ds: &'a Key) -> LocalBoxFuture<'a, bool> {
+        self.inner.wipe_dataset(ds)
+    }
+
+    fn take_lock_time(&self) -> SimTime {
+        self.inner.take_lock_time()
+    }
+
+    fn session(&mut self) -> Option<Box<dyn StoreSession>> {
+        let inner = self.inner.session()?;
+        Some(Box::new(FaultStore {
+            inner: inner.into_store(),
+            state: self.state.clone(),
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fdb::backend::{block_on_ready as block_on, NullStore};
+    use crate::fdb::fault::plan::{FaultAction, FaultPlan};
+
+    fn fault_store(plan: FaultPlan) -> FaultStore {
+        let state = plan.build_state(None);
+        FaultStore::new(Box::new(NullStore), state)
+    }
+
+    fn archive_one(s: &mut FaultStore, n: u64) -> Result<FieldLocation, FdbError> {
+        let ds = Key::new();
+        let id = Key::of(&[("step", "1")]);
+        block_on(s.archive(&ds, &ds, &id, Bytes::virt(n, 1)))
+    }
+
+    #[test]
+    fn failstop_after_n_writes_then_everything_fails() {
+        let plan =
+            FaultPlan::new(3).with_rule(FaultClass::Write, FaultAction::FailStop { after: 2 });
+        let mut s = fault_store(plan);
+        assert!(archive_one(&mut s, 8).is_ok());
+        assert!(archive_one(&mut s, 8).is_ok());
+        let err = archive_one(&mut s, 8).unwrap_err();
+        assert!(matches!(err, FdbError::Backend { backend: "fault", .. }));
+        // dead instance: reads fail too
+        let h = DataHandle::Null { length: 8 };
+        assert!(block_on(s.read(&h)).is_err());
+    }
+
+    #[test]
+    fn torn_write_persists_prefix_and_errors() {
+        let plan = FaultPlan::new(3).with_rule(FaultClass::Write, FaultAction::Torn { nth: 0 });
+        let mut s = fault_store(plan);
+        let err = archive_one(&mut s, 100).unwrap_err();
+        let FdbError::Backend { detail, .. } = err else {
+            panic!("expected backend error")
+        };
+        assert!(detail.contains("torn write: 50/100"), "{detail}");
+        // the next write is clean
+        assert!(archive_one(&mut s, 100).is_ok());
+    }
+
+    #[test]
+    fn sessions_share_the_fate_of_their_parent() {
+        let plan =
+            FaultPlan::new(3).with_rule(FaultClass::Write, FaultAction::FailStop { after: 1 });
+        let mut s = fault_store(plan);
+        let mut session = s.session().expect("null store has sessions");
+        assert!(archive_one(&mut s, 8).is_ok());
+        // the parent's counter tripped the fail-stop: the session dies too
+        let ds = Key::new();
+        let id = Key::of(&[("step", "2")]);
+        assert!(archive_one(&mut s, 8).is_err());
+        assert!(block_on(session.archive(&ds, &ds, &id, Bytes::virt(8, 1))).is_err());
+    }
+
+    #[test]
+    fn read_faults_surface_per_ranged_handle() {
+        let plan =
+            FaultPlan::new(3).with_rule(FaultClass::Read, FaultAction::FailStop { after: 1 });
+        let mut s = fault_store(plan);
+        let handles = vec![
+            DataHandle::Null { length: 4 },
+            DataHandle::Null { length: 4 },
+        ];
+        // first handle reads, second hits the fail-stop → typed error for
+        // the whole batch, never a short result
+        let err = block_on(s.read_ranges(&handles)).unwrap_err();
+        assert!(matches!(err, FdbError::Backend { backend: "fault", .. }));
+    }
+
+    #[test]
+    fn no_rules_is_a_transparent_wrapper() {
+        let mut s = fault_store(FaultPlan::new(0));
+        for _ in 0..32 {
+            assert!(archive_one(&mut s, 16).is_ok());
+        }
+        let h = DataHandle::Null { length: 16 };
+        assert_eq!(block_on(s.read(&h)).unwrap().len(), 16);
+    }
+}

@@ -331,17 +331,34 @@ impl Fdb {
             }
         }
         if flushed.is_ok() {
-            self.catalogue.flush().await;
+            flushed = self.catalogue.flush().await;
         }
         self.account(OpClass::Flush, t0);
         flushed
     }
 
-    /// Catalogue close() at end of producer lifetime (§2.7.2).
-    pub async fn close(&mut self) {
+    /// Catalogue close() at end of producer lifetime (§2.7.2). Fallible:
+    /// the POSIX catalogue persists full indexes and TOC masks here.
+    pub async fn close(&mut self) -> Result<(), super::FdbError> {
         let t0 = self.sim.now();
-        self.catalogue.close().await;
+        let closed = self.catalogue.close().await;
         self.account(OpClass::Flush, t0);
+        closed
+    }
+
+    /// Crash recovery (durable mode): replay write-ahead logs left in
+    /// the dataset by crashed producers, re-indexing their unflushed
+    /// entries. Call [`Fdb::flush`] (or [`Fdb::close`]) afterwards to
+    /// publish the recovered entries to readers. No-op on catalogues
+    /// without WAL support.
+    pub async fn recover(
+        &mut self,
+        ds: &Key,
+    ) -> Result<super::fault::RecoveryStats, super::FdbError> {
+        let t0 = self.sim.now();
+        let stats = self.catalogue.recover_dataset(ds).await;
+        self.account(OpClass::IndexRead, t0);
+        stats
     }
 
     /// FDB retrieve() for one fully-specified identifier.

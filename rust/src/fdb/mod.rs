@@ -46,6 +46,7 @@ pub mod admin;
 pub mod backend;
 pub mod builder;
 pub mod datahandle;
+pub mod fault;
 pub mod fdb;
 pub mod key;
 pub mod location;
@@ -81,6 +82,7 @@ pub use backend::{
     Catalogue, NullCatalogue, NullStore, SharedNullCatalogue, Store, StoreSession,
 };
 pub use builder::{BackendConfig, FdbBuilder, IoProfile};
+pub use fault::{FaultCatalogue, FaultPlan, FaultStore, RecoveryStats};
 pub use datahandle::DataHandle;
 pub use fdb::Fdb;
 pub use key::Key;
@@ -181,7 +183,7 @@ mod tests {
             w.archive(id, field_bytes(id)).await.unwrap();
         }
         w.flush().await.expect("flush");
-        w.close().await;
+        w.close().await.expect("close");
         // reader sees every field with exact bytes
         for id in &ids {
             let h = r
@@ -472,7 +474,7 @@ mod tests {
                 ids.push(id);
             }
             w.flush().await.expect("flush");
-            w.close().await;
+            w.close().await.expect("close");
             let mut r = FdbBuilder::new(&sim2)
                 .node(&rnode)
                 .backend(posix_config(&fs2))

@@ -9,6 +9,7 @@ use std::rc::Rc;
 use super::index;
 use super::store::{fs_err, sanitize};
 use super::toc::{Axes, IndexRef, TocRecord};
+use crate::fdb::fault::wal::{self, RecoveryStats, WalRecord};
 use crate::fdb::key::Key;
 use crate::fdb::location::FieldLocation;
 use crate::fdb::request::Request;
@@ -37,6 +38,11 @@ struct DatasetState {
     collocs: BTreeMap<String, CollocState>,
     subtoc_fd: Option<Fd>,
     toc_fd: Option<Fd>,
+    /// durable mode: this process' write-ahead log (created on the
+    /// first durable archive, committed at flush, unlinked at close)
+    wal_fd: Option<Fd>,
+    /// next WAL sequence number
+    wal_seq: u64,
 }
 
 /// Reader-side pre-loaded state for one dataset (thesis "TOC pre-loading").
@@ -58,6 +64,10 @@ pub struct PosixCatalogue {
     /// (index file, blob offset) are always coherent
     index_cache_on: bool,
     index_cache: HashMap<(String, u64), Rc<Vec<index::IndexEntry>>>,
+    /// durable mode ([`crate::fdb::IoProfile::durable`]): archive
+    /// appends an fdatasync'd WAL intent before mutating the in-memory
+    /// index, so a crashed producer's unflushed entries are recoverable
+    durable: bool,
 }
 
 impl PosixCatalogue {
@@ -70,6 +80,7 @@ impl PosixCatalogue {
             preloaded: HashMap::new(),
             index_cache_on: false,
             index_cache: HashMap::new(),
+            durable: false,
         }
     }
 
@@ -78,6 +89,14 @@ impl PosixCatalogue {
     /// the thesis' uncached cost).
     pub fn with_index_cache(mut self, on: bool) -> PosixCatalogue {
         self.index_cache_on = on;
+        self
+    }
+
+    /// Enable write-ahead logging (default off = exact legacy
+    /// behaviour). See [`crate::fdb::fault::wal`] for the format and
+    /// recovery semantics.
+    pub fn with_durable(mut self, on: bool) -> PosixCatalogue {
+        self.durable = on;
         self
     }
 
@@ -150,6 +169,8 @@ impl PosixCatalogue {
                     collocs: BTreeMap::new(),
                     subtoc_fd: None,
                     toc_fd: Some(toc_fd),
+                    wal_fd: None,
+                    wal_seq: 0,
                 },
             );
         }
@@ -200,8 +221,6 @@ impl PosixCatalogue {
                 },
             );
         }
-        let state = self.write_state.get_mut(&ds.canonical()).unwrap();
-        let cs = state.collocs.get_mut(&cc).unwrap();
         // URI store: split the location into a file root + (offset, len)
         let (uri_root, off, len) = match loc {
             FieldLocation::PosixFile {
@@ -211,12 +230,37 @@ impl PosixCatalogue {
             } => (format!("posix://{path}"), *offset, *length),
             other => (other.to_uri(), 0, other.length()),
         };
+        let ec = elem.canonical();
+        // durable mode: log the intent (fdatasync'd) BEFORE any in-memory
+        // mutation, so an entry is either recoverable from the WAL or was
+        // never indexed — a crash can't leave an unlogged index entry
+        if self.durable {
+            let (wal_fd, seq) = self.ensure_wal(&ds.canonical()).await?;
+            let rec = WalRecord::Intent {
+                seq,
+                colloc: cc.clone(),
+                elem: ec.clone(),
+                uri: uri_root.clone(),
+                offset: off,
+                length: len,
+            }
+            .encode();
+            self.client
+                .write(&wal_fd, &rec)
+                .await
+                .map_err(|e| fs_err("write", wal_fd.path(), e))?;
+            self.client
+                .fdatasync(&wal_fd)
+                .await
+                .map_err(|e| fs_err("fdatasync", wal_fd.path(), e))?;
+        }
+        let state = self.write_state.get_mut(&ds.canonical()).unwrap();
+        let cs = state.collocs.get_mut(&cc).unwrap();
         let next_id = cs.uris.len() as u32;
         let uri_id = *cs.uri_ids.entry(uri_root.clone()).or_insert_with(|| {
             cs.uris.push(uri_root);
             next_id
         });
-        let ec = elem.canonical();
         cs.partial.insert(ec.clone(), (uri_id, off, len));
         cs.full.insert(ec, (uri_id, off, len));
         cs.axes_partial.insert_key(elem);
@@ -224,9 +268,41 @@ impl PosixCatalogue {
         Ok(())
     }
 
+    /// Durable mode: lazily create this process' per-dataset WAL file
+    /// and hand out the next intent sequence number.
+    async fn ensure_wal(&mut self, dsc: &str) -> Result<(Fd, u64), FdbError> {
+        let needs_wal = {
+            let state = self.write_state.get(dsc).unwrap();
+            state.wal_fd.is_none()
+        };
+        if needs_wal {
+            let dir = self.write_state.get(dsc).unwrap().dir.clone();
+            let path = format!("{dir}/p{}.wal", self.client.id);
+            let fd = match self.client.create(&path, StripeSpec::default_layout()).await {
+                Ok(fd) => fd,
+                // a same-id predecessor left a WAL behind: append to it
+                Err(FsError::AlreadyExists) => self
+                    .client
+                    .open_append(&path)
+                    .await
+                    .map_err(|e| fs_err("open", &path, e))?
+                    .ok_or_else(|| fs_err("open", &path, FsError::NotFound))?,
+                Err(e) => return Err(fs_err("create", &path, e)),
+            };
+            self.write_state.get_mut(dsc).unwrap().wal_fd = Some(fd);
+        }
+        let state = self.write_state.get_mut(dsc).unwrap();
+        let seq = state.wal_seq;
+        state.wal_seq += 1;
+        Ok((state.wal_fd.clone().unwrap(), seq))
+    }
+
     /// Catalogue flush(): persist partial indexes, then sub-TOC entries
-    /// (creating the sub-TOC and its TOC pointer on first flush).
-    pub async fn flush(&mut self) {
+    /// (creating the sub-TOC and its TOC pointer on first flush). In
+    /// durable mode a successful flush appends a WAL commit watermark:
+    /// everything logged so far is now reachable through the sub-TOC, so
+    /// recovery need not replay it.
+    pub async fn flush(&mut self) -> Result<(), FdbError> {
         let client_id = self.client.id;
         let datasets: Vec<String> = self.write_state.keys().cloned().collect();
         for dsc in datasets {
@@ -254,15 +330,21 @@ impl PosixCatalogue {
                     .client
                     .create(&path, StripeSpec::default_layout())
                     .await
-                    .expect("unique subtoc");
+                    .map_err(|e| fs_err("create", &path, e))?;
                 // contend to append the pointer to the shared TOC
                 let toc_fd = {
                     let state = self.write_state.get(&dsc).unwrap();
                     state.toc_fd.clone().unwrap()
                 };
                 let rec = TocRecord::SubToc { path: path.clone() }.encode();
-                self.client.write(&toc_fd, &rec).await.unwrap();
-                self.client.fdatasync(&toc_fd).await.unwrap();
+                self.client
+                    .write(&toc_fd, &rec)
+                    .await
+                    .map_err(|e| fs_err("write", toc_fd.path(), e))?;
+                self.client
+                    .fdatasync(&toc_fd)
+                    .await
+                    .map_err(|e| fs_err("fdatasync", toc_fd.path(), e))?;
                 self.write_state.get_mut(&dsc).unwrap().subtoc_fd = Some(fd);
             }
             for cc in dirty {
@@ -299,17 +381,48 @@ impl PosixCatalogue {
                         state.subtoc_fd.clone().unwrap(),
                     )
                 };
-                self.client.write(&partial_fd, &blob).await.unwrap();
-                self.client.fdatasync(&partial_fd).await.unwrap();
-                self.client.write(&subtoc_fd, &subtoc_rec).await.unwrap();
-                self.client.fdatasync(&subtoc_fd).await.unwrap();
+                self.client
+                    .write(&partial_fd, &blob)
+                    .await
+                    .map_err(|e| fs_err("write", partial_fd.path(), e))?;
+                self.client
+                    .fdatasync(&partial_fd)
+                    .await
+                    .map_err(|e| fs_err("fdatasync", partial_fd.path(), e))?;
+                self.client
+                    .write(&subtoc_fd, &subtoc_rec)
+                    .await
+                    .map_err(|e| fs_err("write", subtoc_fd.path(), e))?;
+                self.client
+                    .fdatasync(&subtoc_fd)
+                    .await
+                    .map_err(|e| fs_err("fdatasync", subtoc_fd.path(), e))?;
+            }
+            // durable mode: everything logged below this watermark is now
+            // persisted in the sub-TOC chain — mark it committed
+            let wal = {
+                let state = self.write_state.get(&dsc).unwrap();
+                state.wal_fd.clone().map(|fd| (fd, state.wal_seq))
+            };
+            if let Some((wal_fd, watermark)) = wal {
+                let rec = WalRecord::Commit { seq: watermark }.encode();
+                self.client
+                    .write(&wal_fd, &rec)
+                    .await
+                    .map_err(|e| fs_err("write", wal_fd.path(), e))?;
+                self.client
+                    .fdatasync(&wal_fd)
+                    .await
+                    .map_err(|e| fs_err("fdatasync", wal_fd.path(), e))?;
             }
         }
+        Ok(())
     }
 
     /// Catalogue close(): persist full indexes, append their TOC entries,
-    /// and mask the now-superseded sub-TOCs.
-    pub async fn close(&mut self) {
+    /// and mask the now-superseded sub-TOCs. In durable mode the WAL is
+    /// unlinked at the end: the full index supersedes every logged intent.
+    pub async fn close(&mut self) -> Result<(), FdbError> {
         let datasets: Vec<String> = self.write_state.keys().cloned().collect();
         for dsc in datasets {
             let collocs: Vec<String> = {
@@ -351,10 +464,22 @@ impl PosixCatalogue {
                         state.toc_fd.clone().unwrap(),
                     )
                 };
-                self.client.write(&full_fd, &blob).await.unwrap();
-                self.client.fdatasync(&full_fd).await.unwrap();
-                self.client.write(&toc_fd, &toc_rec).await.unwrap();
-                self.client.fdatasync(&toc_fd).await.unwrap();
+                self.client
+                    .write(&full_fd, &blob)
+                    .await
+                    .map_err(|e| fs_err("write", full_fd.path(), e))?;
+                self.client
+                    .fdatasync(&full_fd)
+                    .await
+                    .map_err(|e| fs_err("fdatasync", full_fd.path(), e))?;
+                self.client
+                    .write(&toc_fd, &toc_rec)
+                    .await
+                    .map_err(|e| fs_err("write", toc_fd.path(), e))?;
+                self.client
+                    .fdatasync(&toc_fd)
+                    .await
+                    .map_err(|e| fs_err("fdatasync", toc_fd.path(), e))?;
             }
             // mask this process' sub-TOC
             let (subtoc_path, toc_fd) = {
@@ -366,10 +491,120 @@ impl PosixCatalogue {
             };
             if let (Some(path), Some(toc_fd)) = (subtoc_path, toc_fd) {
                 let rec = TocRecord::Mask { path }.encode();
-                self.client.write(&toc_fd, &rec).await.unwrap();
-                self.client.fdatasync(&toc_fd).await.unwrap();
+                self.client
+                    .write(&toc_fd, &rec)
+                    .await
+                    .map_err(|e| fs_err("write", toc_fd.path(), e))?;
+                self.client
+                    .fdatasync(&toc_fd)
+                    .await
+                    .map_err(|e| fs_err("fdatasync", toc_fd.path(), e))?;
+            }
+            // durable mode: the full index above covers every logged
+            // intent — retire this process' WAL (best-effort: a leftover
+            // WAL only costs a no-op replay on recovery)
+            let wal_path = {
+                let state = self.write_state.get_mut(&dsc).unwrap();
+                state.wal_fd.take().map(|fd| fd.path().to_string())
+            };
+            if let Some(path) = wal_path {
+                let _ = self.client.unlink(&path).await;
             }
         }
+        Ok(())
+    }
+
+    /// WAL recovery: scan the dataset directory for write-ahead logs
+    /// left by crashed producers, replay every uncommitted intent through
+    /// the regular archive path, and retire the dead logs.
+    ///
+    /// Replay goes through [`Self::archive`], so in durable mode each
+    /// recovered entry is re-logged under *this* process' WAL first —
+    /// recovery is itself crash-safe. Replay is idempotent: entries key
+    /// on the element's canonical form, and a processed WAL is unlinked
+    /// (durable mode) or re-replayed to the same state. Intents whose
+    /// data file does not cover the logged range (the producer died
+    /// between the WAL append and the data landing) are skipped and
+    /// counted as `data_missing`.
+    pub async fn recover(&mut self, ds: &Key) -> Result<RecoveryStats, FdbError> {
+        let mut stats = RecoveryStats::default();
+        let dir = self.ds_dir(ds);
+        let own_wal = format!("p{}.wal", self.client.id);
+        let children = match self.client.readdir(&dir).await {
+            Ok(c) => c,
+            // dataset never created: nothing to recover
+            Err(FsError::NotFound) => return Ok(stats),
+            Err(e) => return Err(fs_err("readdir", &dir, e)),
+        };
+        for child in children {
+            if !child.ends_with(".wal") || child == own_wal {
+                continue;
+            }
+            let path = format!("{dir}/{child}");
+            let Ok(bytes) = self.client.read_all(&path).await else {
+                continue; // raced with another recoverer — fine
+            };
+            let (records, torn) = wal::parse_stream(&bytes.to_vec());
+            stats.wal_files += 1;
+            stats.torn_bytes += torn;
+            let intents = records
+                .iter()
+                .filter(|r| matches!(r, WalRecord::Intent { .. }))
+                .count();
+            let replay: Vec<WalRecord> =
+                wal::uncommitted(&records).into_iter().cloned().collect();
+            stats.committed += intents - replay.len();
+            for rec in replay {
+                let WalRecord::Intent {
+                    colloc,
+                    elem,
+                    uri,
+                    offset,
+                    length,
+                    ..
+                } = rec
+                else {
+                    continue;
+                };
+                // durability gate: only replay entries whose data the
+                // store actually persisted before the crash
+                let loc = if let Some(p) = uri.strip_prefix("posix://") {
+                    match self.client.stat(p).await {
+                        Some(size) if offset + length <= size => FieldLocation::PosixFile {
+                            path: p.to_string(),
+                            offset,
+                            length,
+                        },
+                        _ => {
+                            stats.data_missing += 1;
+                            continue;
+                        }
+                    }
+                } else {
+                    match FieldLocation::parse_uri(&uri) {
+                        Some(l) => l,
+                        None => {
+                            stats.data_missing += 1;
+                            continue;
+                        }
+                    }
+                };
+                let ck = Key::parse(&colloc).unwrap_or_default();
+                let ek = Key::parse(&elem).unwrap_or_default();
+                self.archive(ds, &ck, &ek, &loc).await?;
+                stats.replayed += 1;
+            }
+            // durable mode re-logged every replayed intent above, so the
+            // dead producer's WAL can go; without the WAL safety net the
+            // old log must survive until our own flush
+            if self.durable {
+                let _ = self.client.unlink(&path).await;
+            }
+        }
+        // recovered entries become visible at the next flush; drop any
+        // stale pre-loaded TOC view so readers re-scan afterwards
+        self.invalidate_preload(ds);
+        Ok(stats)
     }
 
     /// TOC pre-loading (thesis): read the TOC + all unmasked sub-TOCs,
@@ -623,12 +858,19 @@ impl crate::fdb::backend::Catalogue for PosixCatalogue {
         Box::pin(PosixCatalogue::archive(self, ds, colloc, elem, loc))
     }
 
-    fn flush<'a>(&'a mut self) -> crate::fdb::backend::LocalBoxFuture<'a, ()> {
+    fn flush<'a>(&'a mut self) -> crate::fdb::backend::LocalBoxFuture<'a, Result<(), FdbError>> {
         Box::pin(PosixCatalogue::flush(self))
     }
 
-    fn close<'a>(&'a mut self) -> crate::fdb::backend::LocalBoxFuture<'a, ()> {
+    fn close<'a>(&'a mut self) -> crate::fdb::backend::LocalBoxFuture<'a, Result<(), FdbError>> {
         Box::pin(PosixCatalogue::close(self))
+    }
+
+    fn recover_dataset<'a>(
+        &'a mut self,
+        ds: &'a Key,
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, Result<RecoveryStats, FdbError>> {
+        Box::pin(PosixCatalogue::recover(self, ds))
     }
 
     fn retrieve<'a>(

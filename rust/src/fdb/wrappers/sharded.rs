@@ -55,19 +55,35 @@ impl Catalogue for ShardedCatalogue {
         self.shards[shard].archive(ds, colloc, elem, id, loc)
     }
 
-    fn flush<'a>(&'a mut self) -> LocalBoxFuture<'a, ()> {
+    fn flush<'a>(&'a mut self) -> LocalBoxFuture<'a, Result<(), FdbError>> {
         Box::pin(async move {
             for shard in &mut self.shards {
-                shard.flush().await;
+                shard.flush().await?;
             }
+            Ok(())
         })
     }
 
-    fn close<'a>(&'a mut self) -> LocalBoxFuture<'a, ()> {
+    fn close<'a>(&'a mut self) -> LocalBoxFuture<'a, Result<(), FdbError>> {
         Box::pin(async move {
             for shard in &mut self.shards {
-                shard.close().await;
+                shard.close().await?;
             }
+            Ok(())
+        })
+    }
+
+    fn recover_dataset<'a>(
+        &'a mut self,
+        ds: &'a Key,
+    ) -> LocalBoxFuture<'a, Result<crate::fdb::fault::RecoveryStats, FdbError>> {
+        Box::pin(async move {
+            // every shard may hold WALs for its slice of the collocations
+            let mut stats = crate::fdb::fault::RecoveryStats::default();
+            for shard in &mut self.shards {
+                stats.merge(&shard.recover_dataset(ds).await?);
+            }
+            Ok(stats)
         })
     }
 

@@ -15,6 +15,7 @@ fn main() {
     let result = match cmd.as_str() {
         "figures" => coordinator::cmd_figures(&args),
         "hammer" => coordinator::cmd_hammer(&args),
+        "crash" => coordinator::cmd_crash(&args),
         "ior" => coordinator::cmd_ior(&args),
         "fieldio" => coordinator::cmd_fieldio(&args),
         "opsrun" => coordinator::cmd_opsrun(&args),

@@ -76,6 +76,6 @@ pub async fn run(
         fdb.flush().await.expect("flush");
         barrier.arrive(step).await;
     }
-    fdb.close().await;
+    fdb.close().await.expect("close");
     let _ = sim;
 }

@@ -88,7 +88,7 @@ fn every_deployed_backend_constructible_and_roundtrips() {
                     .unwrap();
             }
             w.flush().await.expect("flush");
-            w.close().await;
+            w.close().await.expect("close");
             for step in 1..=3u32 {
                 let id = id_step(step);
                 let h = r.retrieve(&id).await.unwrap().expect("present");
@@ -178,7 +178,7 @@ fn archive_many_equivalent_to_loop() {
             .collect();
         batch_writer.archive_many(batch).await.unwrap();
         batch_writer.flush().await.expect("flush");
-        batch_writer.close().await;
+        batch_writer.close().await.expect("close");
         for s in 11..=18u32 {
             let id = id_step(s);
             loop_writer
@@ -187,7 +187,7 @@ fn archive_many_equivalent_to_loop() {
                 .unwrap();
         }
         loop_writer.flush().await.expect("flush");
-        loop_writer.close().await;
+        loop_writer.close().await.expect("close");
         // every field from both paths retrievable with identical bytes
         for s in (1..=8u32).chain(11..=18u32) {
             let id = id_step(s);
@@ -221,7 +221,7 @@ fn retrieve_many_equivalent_to_retrieve_loop() {
                     .unwrap();
             }
             w.flush().await.expect("flush");
-            w.close().await;
+            w.close().await.expect("close");
             // one absent id mixed in: both paths must skip it silently
             let mut ask = ids.clone();
             ask.push(id_step(999));

@@ -57,7 +57,7 @@ fn parallel_writers_then_readers_all_backends() {
                     }
                     fdb.flush().await.expect("flush");
                 }
-                fdb.close().await;
+                fdb.close().await.expect("close");
                 wg.done();
             });
         }
@@ -157,7 +157,7 @@ fn rearchive_replaces_and_list_deduplicates() {
             w.flush().await.expect("flush");
             w.archive(&id, b"version-two!").await.unwrap();
             w.flush().await.expect("flush");
-            w.close().await;
+            w.close().await.expect("close");
         });
         dep.sim.run();
         let mut r = make_fdb(&dep, 1);
@@ -220,7 +220,7 @@ fn posix_flush_visibility_and_masking() {
             .build()
             .unwrap();
         assert!(r2.retrieve(&id).await.unwrap().is_some());
-        w.close().await;
+        w.close().await.expect("close");
         // after close (full index + mask): still exactly one result
         let mut r3 = FdbBuilder::new(&dep_sim)
             .node(&node1)

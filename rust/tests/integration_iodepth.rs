@@ -96,7 +96,7 @@ fn run_batched(sim: &Sim, w: Fdb, r: Option<Fdb>, wl: &Workload) -> Fingerprint 
         let depth = w.io_profile().depth;
         w.archive_many(batch).await.unwrap();
         w.flush().await.unwrap();
-        w.close().await;
+        w.close().await.expect("close");
         let w_peak_ok = w.io_inflight_peak() <= depth.max(1);
         let mut r = r.unwrap_or(w);
         let fetched = r.retrieve_many(&ids).await.unwrap();
@@ -265,7 +265,7 @@ fn inflight_sessions_never_exceed_configured_depth() {
         let ids: Vec<Key> = batch.iter().map(|(id, _)| id.clone()).collect();
         w.archive_many(batch).await.unwrap();
         w.flush().await.unwrap();
-        w.close().await;
+        w.close().await.expect("close");
         let fetched = r.retrieve_many(&ids).await.unwrap();
         assert_eq!(fetched.len(), ids.len());
         *peaks2.borrow_mut() = (w.io_inflight_peak(), r.io_inflight_peak(), r.io_sessions());

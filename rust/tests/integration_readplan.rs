@@ -116,7 +116,7 @@ fn run_batched(sim: &Sim, w: Fdb, r: Fdb, wl: &Workload) -> (Fingerprint, PlanSt
         let depth = r.io_profile().depth;
         w.archive_many(batch).await.unwrap();
         w.flush().await.unwrap();
-        w.close().await;
+        w.close().await.expect("close");
         let fetched = r.retrieve_many(&ids).await.unwrap();
         let mut fp = Fingerprint::default();
         for (id, bytes) in &fetched {
@@ -208,7 +208,7 @@ fn run_batched_same(sim: &Sim, w: Fdb, wl: &Workload) -> (Fingerprint, PlanStats
         }
         w.archive_many(batch).await.unwrap();
         w.flush().await.unwrap();
-        w.close().await;
+        w.close().await.expect("close");
         let fetched = w.retrieve_many(&ids).await.unwrap();
         let mut fp = Fingerprint::default();
         for (id, bytes) in &fetched {
@@ -361,7 +361,7 @@ fn merged_ranges_are_the_admission_unit_and_match_the_trace() {
         let ids: Vec<Key> = batch.iter().map(|(id, _)| id.clone()).collect();
         w.archive_many(batch).await.unwrap();
         w.flush().await.unwrap();
-        w.close().await;
+        w.close().await.expect("close");
         let fetched = r.retrieve_many(&ids).await.unwrap();
         assert_eq!(fetched.len(), ids.len());
         *out2.borrow_mut() = (r.plan_stats(), r.io_inflight_peak());

@@ -81,7 +81,7 @@ fn run_workload(sim: &Sim, w: Fdb, r: Option<Fdb>, wl: &Workload) -> Fingerprint
             ids.push(id);
         }
         w.flush().await.unwrap();
-        w.close().await;
+        w.close().await.expect("close");
         let mut r = r.unwrap_or(w);
         let mut fp = Fingerprint::default();
         let mut seen = std::collections::BTreeSet::new();
