@@ -33,6 +33,7 @@ pub fn ablation_ids() -> Vec<&'static str> {
         "abl_iodepth",
         "abl_coalesce",
         "abl_recovery",
+        "abl_engine",
     ]
 }
 
@@ -46,6 +47,7 @@ pub fn run_ablation(id: &str, scale: f64) -> Option<Figure> {
         "abl_iodepth" => abl_iodepth(scale),
         "abl_coalesce" => abl_coalesce(scale),
         "abl_recovery" => abl_recovery(scale),
+        "abl_engine" => abl_engine(scale),
         _ => return None,
     })
 }
@@ -566,6 +568,159 @@ fn abl_recovery(scale: f64) -> Figure {
     }
 }
 
+/// Cross-scenario I/O-engine sweep (`BENCH_engine.json`): the same
+/// `--io-depth` knob driven through THREE scenarios — the fdb-hammer
+/// batched archive/retrieve, the dense coalesced retrieve (streaming
+/// plan execution at depth > 1), and the durable crash-recovery
+/// scenario (group-commit WAL, engine-batched verify reads) — all on
+/// Lustre. One engine, one semaphore, three workloads: the figure shows
+/// queue depth paying (or not) on each, with byte verification and the
+/// `inflight <= depth` bound asserted inside every leg.
+fn abl_engine(scale: f64) -> Figure {
+    use super::crash::crash_archive_with_io;
+    use super::hammer::{self, HammerConfig};
+    use super::scenario::WrapperOpt;
+    use crate::fdb::{IoProfile, Key};
+    use crate::util::content::Bytes;
+    use std::cell::Cell;
+
+    let field: u64 = 64 << 10;
+    let mut rows = Vec::new();
+    for depth in [1usize, 4, 8] {
+        let x = format!("depth {depth}");
+
+        // leg 1: fdb-hammer — the uncoalesced engine paths (archive
+        // fan-out + catalogue-session lookups + per-field reads)
+        let dep = deploy(Testbed::Gcp, SystemKind::Lustre, 2, 2, RedundancyOpt::None)
+            .with_io(IoProfile::depth(depth).with_preload_indexes(true));
+        let cfg = HammerConfig {
+            procs_per_node: 1,
+            nsteps: ((160.0 * scale).round() as u32).clamp(2, 16),
+            nparams: 4,
+            nlevels: 4,
+            field_size: field,
+            check: true,
+            contention: false,
+            faults_ok: false,
+        };
+        let (r, _) = hammer::run(&dep, cfg);
+        rows.push(FigRow {
+            x: x.clone(),
+            series: "hammer read time".into(),
+            value: r.read_time.as_secs_f64() * 1e3,
+            unit: "ms",
+        });
+        rows.push(FigRow {
+            x: x.clone(),
+            series: "hammer write".into(),
+            value: r.gibs_w(),
+            unit: "GiB/s",
+        });
+
+        // leg 2: dense coalesced retrieve — streaming plan execution
+        // (resolve overlaps execute) at depth > 1
+        let dep = deploy(Testbed::Gcp, SystemKind::Lustre, 2, 2, RedundancyOpt::None);
+        let io = IoProfile::depth(depth)
+            .with_preload_indexes(true)
+            .with_coalesce_gap(64 << 10);
+        let mk = |node: &Rc<crate::hw::node::Node>| -> Fdb {
+            FdbBuilder::new(&dep.sim)
+                .node(node)
+                .backend(dep.backend_config())
+                .io(io)
+                .build()
+                .unwrap()
+        };
+        let n = nops(scale, 2000);
+        let ids: Vec<Key> = (0..n)
+            .map(|i| super::hammer::field_id(0, 1 + (i / 16) as u32, (i % 16) as u32, 0))
+            .collect();
+        let nodes = dep.client_nodes();
+        let mut w = mk(&nodes[0]);
+        let batch: Vec<(Key, Bytes)> = ids
+            .iter()
+            .map(|id| (id.clone(), Bytes::virt(field, super::hammer::field_seed(id))))
+            .collect();
+        dep.sim.spawn(async move {
+            w.archive_many(batch).await.unwrap();
+            w.flush().await.unwrap();
+            w.close().await.expect("close");
+        });
+        dep.sim.run();
+        let mut rd = mk(&nodes[1]);
+        let ids2 = ids.clone();
+        let merged = Rc::new(Cell::new(0u64));
+        let peak = Rc::new(Cell::new(0usize));
+        let (merged2, peak2) = (merged.clone(), peak.clone());
+        let t0 = dep.sim.now();
+        dep.sim.spawn(async move {
+            let fetched = rd.retrieve_many(&ids2).await.unwrap();
+            assert_eq!(fetched.len(), ids2.len(), "every field found");
+            for (id, data) in &fetched {
+                let expect = Bytes::virt(field, super::hammer::field_seed(id));
+                assert!(data.content_eq(&expect), "bytes must match at any depth");
+            }
+            merged2.set(rd.plan_stats().ops_merged);
+            peak2.set(rd.io_inflight_peak());
+        });
+        let end = dep.sim.run();
+        assert!(peak.get() <= depth, "in-flight bound: {} > {depth}", peak.get());
+        rows.push(FigRow {
+            x: x.clone(),
+            series: "coalesced retrieve time".into(),
+            value: (end - t0).as_secs_f64() * 1e3,
+            unit: "ms",
+        });
+        rows.push(FigRow {
+            x: x.clone(),
+            series: "coalesced ops merged".into(),
+            value: merged.get() as f64,
+            unit: "ops",
+        });
+
+        // leg 3: crash recovery — durable group-commit WAL under the
+        // same depth, verify reads through the engine's batched path
+        let nfields = nops(scale, 480).min(64);
+        let kill = (nfields / 2) as u64;
+        let cr = crash_archive_with_io(
+            SystemKind::Lustre,
+            WrapperOpt::Bare,
+            42,
+            kill,
+            nfields,
+            field,
+            IoProfile::depth(depth),
+        );
+        assert_eq!(
+            cr.verified, cr.archived,
+            "depth {depth}: recovery must restore every archived field"
+        );
+        assert_eq!(cr.ghosts, 0, "depth {depth}: torn index entry surfaced");
+        rows.push(FigRow {
+            x: x.clone(),
+            series: "crash verified".into(),
+            value: cr.verified as f64,
+            unit: "fields",
+        });
+        rows.push(FigRow {
+            x,
+            series: "crash recovery time".into(),
+            value: cr.recovery_ms,
+            unit: "ms",
+        });
+    }
+    Figure {
+        id: "abl_engine",
+        title: "Unified I/O engine: one depth knob across hammer, coalesced \
+                retrieve, and crash recovery",
+        expectation: "depth 8 beats depth 1 on the hammer and coalesced legs \
+                      (streaming plan execution overlaps resolve with reads); \
+                      crash recovery stays byte-exact at every depth",
+        rows,
+        profiles: vec![],
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -681,6 +836,34 @@ mod tests {
         // gap 0 is the planner-off baseline everywhere
         for s in ["Lustre ops merged", "Ceph ops merged", "DAOS ops merged"] {
             assert_eq!(f.value("gap 0", s).unwrap(), 0.0, "{s}");
+        }
+    }
+
+    #[test]
+    fn engine_sweep_pays_at_depth_and_recovers_exactly() {
+        // one engine, three scenarios: depth 8 must not lose to depth 1
+        // on either read leg, and the crash leg's internal assertions
+        // (byte-exact recovery, zero ghosts, inflight <= depth) ran at
+        // every depth just by the figure completing
+        let f = run_ablation("abl_engine", 0.05).unwrap();
+        let h1 = f.value("depth 1", "hammer read time").unwrap();
+        let h8 = f.value("depth 8", "hammer read time").unwrap();
+        assert!(
+            h8 <= h1,
+            "depth-8 hammer read ({h8:.2} ms) regressed past depth-1 ({h1:.2} ms)"
+        );
+        let c1 = f.value("depth 1", "coalesced retrieve time").unwrap();
+        let c8 = f.value("depth 8", "coalesced retrieve time").unwrap();
+        assert!(
+            c8 <= c1,
+            "depth-8 coalesced retrieve ({c8:.2} ms) regressed past depth-1 ({c1:.2} ms)"
+        );
+        // the streaming planner merged at every depth on the dense layout
+        for depth in [1, 4, 8] {
+            let x = format!("depth {depth}");
+            assert!(f.value(&x, "coalesced ops merged").unwrap() > 0.0, "{x}");
+            // 0.05 scale → 24 crash fields, kill at 12
+            assert_eq!(f.value(&x, "crash verified").unwrap(), 12.0, "{x}");
         }
     }
 

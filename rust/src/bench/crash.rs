@@ -46,11 +46,37 @@ pub fn crash_archive(
     nfields: usize,
     field_size: u64,
 ) -> CrashReport {
+    crash_archive_with_io(
+        kind,
+        wrapper,
+        seed,
+        kill_after,
+        nfields,
+        field_size,
+        IoProfile::default().with_durable(true),
+    )
+}
+
+/// [`crash_archive`] under an explicit [`IoProfile`] (durability is
+/// forced on — a non-durable crash scenario has nothing to recover).
+/// The doomed writer uses single-field `archive` so the seeded
+/// kill point stays op-exact at any depth, but the verify phase reads
+/// through `retrieve_many` — the engine's batched path — so crash
+/// recovery is exercised at depth (the `abl_engine` crash leg).
+pub fn crash_archive_with_io(
+    kind: SystemKind,
+    wrapper: WrapperOpt,
+    seed: u64,
+    kill_after: u64,
+    nfields: usize,
+    field_size: u64,
+    io: IoProfile,
+) -> CrashReport {
     let plan = FaultPlan::new(seed).with_rule(
         FaultClass::Write,
         FaultAction::FailStop { after: kill_after },
     );
-    let io = IoProfile::default().with_durable(true);
+    let io = io.with_durable(true);
     let mut dep = deploy(Testbed::Gcp, kind, 2, 2, RedundancyOpt::None)
         .with_wrapper(wrapper)
         .with_io(io)
@@ -106,23 +132,30 @@ pub fn crash_archive(
             recoverer.close().await.expect("close recovered index");
             let recovery_ms = (sim.now() - t0).as_secs_f64() * 1e3;
             // phase 3: verify — reuse the recoverer's client read-side
-            // (its preload was invalidated by recover + flush)
+            // (its preload was invalidated by recover + flush). The
+            // batched retrieve runs at the profile's configured depth, so
+            // recovered indexes are read back through the engine paths.
             recoverer.invalidate_preload(&ds);
             let mut verified = 0usize;
             let mut ghosts = 0usize;
-            for (i, id) in ids.iter().enumerate() {
-                let found = recoverer.retrieve(id).await.expect("retrieve");
-                match found {
-                    Some(h) if i < archived => {
-                        let data = recoverer.read(&h).await.expect("read recovered field");
-                        let expect = Bytes::virt(field_size, super::hammer::field_seed(id));
-                        if data.content_eq(&expect) {
-                            verified += 1;
-                        }
-                    }
-                    Some(_) => ghosts += 1,
-                    None => {}
+            let found = recoverer.retrieve_many(&ids).await.expect("retrieve_many");
+            // found pairs come back in input order with absent fields
+            // skipped: walk ids with a cursor to recover each pair's
+            // input index
+            let mut cursor = 0usize;
+            for (id, data) in found {
+                while ids[cursor] != id {
+                    cursor += 1;
                 }
+                if cursor < archived {
+                    let expect = Bytes::virt(field_size, super::hammer::field_seed(&id));
+                    if data.content_eq(&expect) {
+                        verified += 1;
+                    }
+                } else {
+                    ghosts += 1;
+                }
+                cursor += 1;
             }
             let mut r = report.borrow_mut();
             r.stats = stats;

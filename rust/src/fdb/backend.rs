@@ -18,9 +18,11 @@
 //! The simulator is single-threaded, so the async methods return
 //! [`LocalBoxFuture`]s with no `Send` bound.
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::future::Future;
 use std::pin::Pin;
+use std::rc::Rc;
 
 use super::datahandle::DataHandle;
 use super::fault::wal::RecoveryStats;
@@ -264,6 +266,52 @@ pub trait Catalogue {
     fn take_lock_time(&self) -> SimTime {
         SimTime::ZERO
     }
+
+    /// Mint an independent per-request client session — the catalogue
+    /// twin of [`Store::session`]. A session is a read-side view over
+    /// the *same* deployed index (same published TOCs / KV namespace /
+    /// shared map) with its own client handle, so batched lookups can
+    /// run at I/O depth instead of serializing on the one `&mut`
+    /// Catalogue. `None` (the default) keeps callers on the serial
+    /// lookup path. Sessions only need the read surface (`retrieve`);
+    /// mutations stay on the parent.
+    fn session(&mut self) -> Option<Box<dyn CatalogueSession>> {
+        None
+    }
+
+    /// Begin a write group: until [`Catalogue::end_archive_group`],
+    /// per-archive durability barriers (WAL fdatasyncs) may be deferred
+    /// and batched — group commit. Archives inside a group are NOT
+    /// individually durable; callers must `end_archive_group` before
+    /// reporting the batch archived. Default: no-op (backends without a
+    /// WAL have nothing to defer).
+    fn begin_archive_group(&mut self) {}
+
+    /// End a write group: flush every durability barrier deferred since
+    /// [`Catalogue::begin_archive_group`] (one fdatasync per dirty WAL
+    /// instead of one per intent). Must be awaited on every exit path
+    /// of the batch, including error returns.
+    fn end_archive_group<'a>(&'a mut self) -> LocalBoxFuture<'a, Result<(), FdbError>> {
+        ready(Ok(()))
+    }
+}
+
+/// A per-request client session minted by [`Catalogue::session`].
+/// Sessions are full [`Catalogue`]s (the engine only calls the read
+/// surface), plus [`CatalogueSession::into_catalogue`] so wrapper
+/// backends can assemble sessions of their inner catalogues into a
+/// wrapper-of-sessions. The blanket impl makes every `'static`
+/// Catalogue a session; backends only decide *how to construct* one.
+pub trait CatalogueSession: Catalogue {
+    /// Recover the plain `Catalogue` view (wrappers hold inner sessions
+    /// as `Box<dyn Catalogue>` fields).
+    fn into_catalogue(self: Box<Self>) -> Box<dyn Catalogue>;
+}
+
+impl<C: Catalogue + 'static> CatalogueSession for C {
+    fn into_catalogue(self: Box<Self>) -> Box<dyn Catalogue> {
+        self
+    }
 }
 
 /// Zero-cost data sink — client-overhead experiments (Fig 4.30).
@@ -307,10 +355,13 @@ impl Store for NullStore {
 /// In-memory catalogue (no persistence, process-local visibility) —
 /// pairs with the S3 and Null stores. Keys are stored as [`Key`] values,
 /// not canonical strings, so `list()` cannot lose entries to lossy
-/// canonical→parse round-trips.
-#[derive(Default)]
+/// canonical→parse round-trips. The map sits behind an `Rc<RefCell<…>>`
+/// so [`Catalogue::session`] clones share the live index (a session
+/// over a private copy would answer lookups from an empty map); safe on
+/// the single-threaded DES executor because no borrow spans an await.
+#[derive(Clone, Default)]
 pub struct NullCatalogue {
-    map: BTreeMap<Key, FieldLocation>,
+    map: Rc<RefCell<BTreeMap<Key, FieldLocation>>>,
 }
 
 impl NullCatalogue {
@@ -319,11 +370,11 @@ impl NullCatalogue {
     }
 
     pub fn len(&self) -> usize {
-        self.map.len()
+        self.map.borrow().len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
+        self.map.borrow().is_empty()
     }
 
     // Synchronous core ops, shared by the `Catalogue` impls of both
@@ -331,16 +382,17 @@ impl NullCatalogue {
     // hold its interior borrow across an await).
 
     fn insert(&mut self, id: &Key, loc: &FieldLocation) {
-        self.map.insert(id.clone(), loc.clone());
+        self.map.borrow_mut().insert(id.clone(), loc.clone());
     }
 
     fn lookup(&self, id: &Key) -> Option<FieldLocation> {
-        self.map.get(id).cloned()
+        self.map.borrow().get(id).cloned()
     }
 
     fn axis_values(&self, ds: &Key, colloc: &Key, dim: &str) -> Vec<String> {
         let vals: std::collections::BTreeSet<String> = self
             .map
+            .borrow()
             .keys()
             .filter(|k| ds.matches(k) && colloc.matches(k))
             .filter_map(|k| k.get(dim).map(String::from))
@@ -350,6 +402,7 @@ impl NullCatalogue {
 
     fn entries(&self, ds: &Key, request: &Request) -> Vec<(Key, FieldLocation)> {
         self.map
+            .borrow()
             .iter()
             .filter(|(k, _)| ds.matches(k) && request.matches(k))
             .map(|(k, v)| (k.clone(), v.clone()))
@@ -357,7 +410,7 @@ impl NullCatalogue {
     }
 
     fn remove_dataset(&mut self, ds: &Key) {
-        self.map.retain(|k, _| !ds.matches(k));
+        self.map.borrow_mut().retain(|k, _| !ds.matches(k));
     }
 }
 
@@ -408,6 +461,11 @@ impl Catalogue for NullCatalogue {
     fn deregister_dataset<'a>(&'a mut self, ds: &'a Key) -> LocalBoxFuture<'a, ()> {
         self.remove_dataset(ds);
         ready(())
+    }
+
+    fn session(&mut self) -> Option<Box<dyn CatalogueSession>> {
+        // clones share the live map: session lookups see every insert
+        Some(Box::new(self.clone()))
     }
 }
 
@@ -484,6 +542,10 @@ impl Catalogue for SharedNullCatalogue {
         self.inner.borrow_mut().remove_dataset(ds);
         ready(())
     }
+
+    fn session(&mut self) -> Option<Box<dyn CatalogueSession>> {
+        Some(Box::new(self.clone()))
+    }
 }
 
 #[cfg(test)]
@@ -559,6 +621,22 @@ mod tests {
         let h = DataHandle::from_location(&l);
         let bytes = block_on(store.read(&h)).unwrap();
         assert_eq!(bytes.len(), 64);
+    }
+
+    #[test]
+    fn null_catalogue_session_shares_the_live_index() {
+        // a session minted BEFORE an insert must still see it: sessions
+        // are views over the same map, not snapshots
+        let mut cat = NullCatalogue::new();
+        let mut session = cat.session().expect("null catalogue sessions");
+        let ds = Key::new();
+        let id = Key::of(&[("step", "1")]);
+        block_on(cat.archive(&ds, &ds, &id, &id, &loc(9))).unwrap();
+        let got = block_on(session.retrieve(&ds, &ds, &id, &id));
+        assert_eq!(got, Some(loc(9)));
+        // group hooks default to no-ops on WAL-less catalogues
+        cat.begin_archive_group();
+        block_on(cat.end_archive_group()).unwrap();
     }
 
     #[test]

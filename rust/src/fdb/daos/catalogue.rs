@@ -331,6 +331,18 @@ impl crate::fdb::backend::Catalogue for DaosCatalogue {
         })
     }
 
+    fn session(&mut self) -> Option<Box<dyn crate::fdb::backend::CatalogueSession>> {
+        // index KVs live server-side and puts are immediately visible, so
+        // a forked client reading the same pool/containers is
+        // read-equivalent; it re-resolves pool + KV handles lazily
+        Some(Box::new(DaosCatalogue::new(
+            self.client.fork(),
+            &self.pool_label,
+            &self.root_cont_label,
+            self.schema.clone(),
+        )))
+    }
+
     fn retrieve<'a>(
         &'a mut self,
         ds: &'a Key,

@@ -1,0 +1,836 @@
+//! The unified I/O engine: ONE bounded-concurrency scheduler behind
+//! every batched FDB path (thesis §2.7's batched archive/retrieve, the
+//! DAOS papers' queue-depth asynchrony).
+//!
+//! Before this module, `fdb.rs` hand-rolled four near-identical fan-outs
+//! (batched archive, batched retrieve, direct retrieve, plan execution),
+//! each with its own semaphore construction, session pool, `pop()`
+//! panic site, in-flight accounting, and trace plumbing — accounting
+//! that could silently diverge. [`IoEngine`] owns all of it exactly
+//! once:
+//!
+//! - the **depth semaphore** ([`IoEngine::semaphore`] is the single
+//!   `Resource::new("fdb/io-depth", …)` site; capacity = minted store
+//!   sessions, `sessions.len().max(1)`),
+//! - the **session pools** — store sessions ([`StoreSession`]) and
+//!   catalogue sessions ([`CatalogueSession`]), checked out through an
+//!   RAII [`Checkout`] guard that returns the session on drop and
+//!   surfaces pool exhaustion as a typed [`FdbError::Backend`] instead
+//!   of a panic,
+//! - **in-flight instrumentation** (count + peak, admitted ops of any
+//!   class — index lookups and data I/O share the one semaphore, so
+//!   `inflight_peak() <= depth` covers both),
+//! - **per-op-class trace/lock accounting** (span totals minus drained
+//!   lock time, raw span windows via
+//!   [`Trace::observe_span`](crate::sim::trace::Trace) so cross-class
+//!   overlap stays observable).
+//!
+//! Every batched path is a thin *resolve → plan → execute* submission:
+//! resolve locations (catalogue sessions run lookups at depth),
+//! optionally plan (the streaming
+//! [`StreamPlanner`](crate::fdb::plan::StreamPlanner) seals coalesced
+//! ranges incrementally), execute over the pooled sessions. Streaming
+//! plan execution means the first merged range can be *in flight while
+//! later lookups are still resolving* — the whole-request pipelining
+//! the contention paper credits for DAOS's edge.
+
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
+use std::ops::{Deref, DerefMut};
+use std::rc::Rc;
+use std::task::Waker;
+
+use crate::fdb::backend::{Catalogue, CatalogueSession, Store, StoreSession};
+use crate::fdb::datahandle::DataHandle;
+use crate::fdb::key::Key;
+use crate::fdb::location::FieldLocation;
+use crate::fdb::plan::{PlanStats, StreamPlanner};
+use crate::fdb::FdbError;
+use crate::sim::exec::Sim;
+use crate::sim::futures::{boxed, join_all};
+use crate::sim::resource::Resource;
+use crate::sim::time::SimTime;
+use crate::sim::trace::{OpClass, Trace};
+use crate::util::content::Bytes;
+
+/// RAII session checkout: holds one pooled session, pushes it back on
+/// drop. Minted only under the depth semaphore, so the pool can never
+/// be empty at checkout time — but if that invariant ever breaks the
+/// caller gets a typed error, not a process abort.
+pub(crate) struct Checkout<'a, T: ?Sized> {
+    pool: &'a RefCell<Vec<Box<T>>>,
+    item: Option<Box<T>>,
+}
+
+impl<'a, T: ?Sized> Checkout<'a, T> {
+    fn new(pool: &'a RefCell<Vec<Box<T>>>, what: &str) -> Result<Checkout<'a, T>, FdbError> {
+        match pool.borrow_mut().pop() {
+            Some(item) => Ok(Checkout {
+                pool,
+                item: Some(item),
+            }),
+            None => Err(FdbError::Backend {
+                backend: "io-engine",
+                detail: format!("{what} session pool exhausted under the depth semaphore"),
+            }),
+        }
+    }
+}
+
+impl<T: ?Sized> Deref for Checkout<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.item.as_deref().expect("session held until drop")
+    }
+}
+
+impl<T: ?Sized> DerefMut for Checkout<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.item.as_deref_mut().expect("session held until drop")
+    }
+}
+
+impl<T: ?Sized> Drop for Checkout<'_, T> {
+    fn drop(&mut self) {
+        if let Some(item) = self.item.take() {
+            self.pool.borrow_mut().push(item);
+        }
+    }
+}
+
+/// RAII admission: created after the semaphore grant, releases the slot
+/// and decrements the in-flight count on drop — every exit path of an
+/// admitted op (success, typed error, checkout failure) restores the
+/// engine's invariants the same way.
+struct Admitted<'a> {
+    engine: &'a IoEngine,
+    sem: &'a Rc<Resource>,
+}
+
+impl Drop for Admitted<'_> {
+    fn drop(&mut self) {
+        let inflight = &self.engine.inflight;
+        inflight.set(inflight.get() - 1);
+        self.sem.release();
+    }
+}
+
+/// Record the first error by *input index* — batches report the error
+/// the serial path would have hit first, regardless of completion order.
+fn note_failure(failed: &RefCell<Option<(usize, FdbError)>>, i: usize, e: FdbError) {
+    let mut f = failed.borrow_mut();
+    if f.as_ref().map(|(j, _)| i < *j).unwrap_or(true) {
+        *f = Some((i, e));
+    }
+}
+
+/// The shared bounded-concurrency scheduler. One per [`crate::fdb::Fdb`]
+/// instance; interior-mutable so the executors borrow `&self` while the
+/// caller keeps `&mut` access to its Store/Catalogue for the serial
+/// halves.
+pub(crate) struct IoEngine {
+    depth: usize,
+    store_pool: RefCell<Vec<Box<dyn StoreSession>>>,
+    cat_pool: RefCell<Vec<Box<dyn CatalogueSession>>>,
+    inflight: Cell<usize>,
+    peak: Cell<usize>,
+    sim: Sim,
+    trace: Trace,
+}
+
+impl IoEngine {
+    pub(crate) fn new(sim: &Sim) -> IoEngine {
+        IoEngine {
+            depth: 1,
+            store_pool: RefCell::new(Vec::new()),
+            cat_pool: RefCell::new(Vec::new()),
+            inflight: Cell::new(0),
+            peak: Cell::new(0),
+            sim: sim.clone(),
+            trace: Trace::new(),
+        }
+    }
+
+    pub(crate) fn set_depth(&mut self, depth: usize) {
+        self.depth = depth;
+    }
+
+    pub(crate) fn set_trace(&mut self, trace: Trace) {
+        self.trace = trace;
+    }
+
+    /// Store sessions minted so far (0 until a batched op runs at
+    /// depth > 1).
+    pub(crate) fn store_sessions(&self) -> usize {
+        self.store_pool.borrow().len()
+    }
+
+    /// High-water mark of concurrently admitted operations — catalogue
+    /// lookups and store I/O share the one semaphore, so this never
+    /// exceeds the configured depth.
+    pub(crate) fn inflight_peak(&self) -> usize {
+        self.peak.get()
+    }
+
+    /// Fill the store-session pool up to the configured depth. Returns
+    /// whether the engine's fan-out paths can run; `false` (depth 1, or
+    /// a backend without session support) keeps callers on the serial
+    /// paths.
+    pub(crate) fn ensure_store_sessions(&self, store: &mut dyn Store) -> bool {
+        if self.depth <= 1 {
+            return false;
+        }
+        let mut pool = self.store_pool.borrow_mut();
+        while pool.len() < self.depth {
+            match store.session() {
+                Some(s) => pool.push(s),
+                None => {
+                    pool.clear();
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Fill the catalogue-session pool up to the configured depth, so
+    /// batched index lookups run at depth too. Returns whether lookups
+    /// can fan out; `false` keeps them on the one serial index client
+    /// (still pipelined against the data reads).
+    pub(crate) fn ensure_cat_sessions(&self, catalogue: &mut dyn Catalogue) -> bool {
+        if self.depth <= 1 {
+            return false;
+        }
+        let mut pool = self.cat_pool.borrow_mut();
+        while pool.len() < self.depth {
+            match catalogue.session() {
+                Some(s) => pool.push(s),
+                None => {
+                    pool.clear();
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Drop the catalogue sessions (their reader-side caches with them);
+    /// they are re-minted fresh on the next batched lookup.
+    pub(crate) fn clear_catalogue_sessions(&self) {
+        self.cat_pool.borrow_mut().clear();
+    }
+
+    /// Drain distributed-lock time accumulated by idle pooled sessions
+    /// (serial-path ops share clients with prior fan-outs).
+    pub(crate) fn take_pooled_lock_time(&self) -> SimTime {
+        let mut lock = SimTime::ZERO;
+        for s in self.store_pool.borrow().iter() {
+            lock = lock + s.take_lock_time();
+        }
+        for c in self.cat_pool.borrow().iter() {
+            lock = lock + c.take_lock_time();
+        }
+        lock
+    }
+
+    /// Flush every pooled store session's buffered writes (part of
+    /// `Fdb::flush` — session buffers must be durable too).
+    pub(crate) async fn flush_store_sessions(&self) -> Result<(), FdbError> {
+        let mut pool = self.store_pool.take();
+        let mut r = Ok(());
+        for s in &mut pool {
+            r = s.flush().await;
+            if r.is_err() {
+                break;
+            }
+        }
+        self.store_pool.replace(pool);
+        r
+    }
+
+    /// Wipe `ds` through every pooled store session: purges their
+    /// per-dataset client state (open data files, absorbed tiered
+    /// fields) while state for other datasets survives.
+    pub(crate) async fn wipe_store_sessions(&self, ds: &Key) {
+        let mut pool = self.store_pool.take();
+        for s in &mut pool {
+            s.wipe_dataset(ds).await;
+        }
+        self.store_pool.replace(pool);
+    }
+
+    /// THE semaphore: the one place the depth semaphore's name and
+    /// capacity policy live. Capacity = minted store sessions (at least
+    /// one server — `Resource` rejects zero).
+    fn semaphore(&self) -> Rc<Resource> {
+        Resource::new("fdb/io-depth", self.store_pool.borrow().len().max(1))
+    }
+
+    /// Count an admitted op in (call after the semaphore grant); the
+    /// returned guard counts it out and releases the slot on drop.
+    fn admit<'a>(&'a self, sem: &'a Rc<Resource>) -> Admitted<'a> {
+        self.inflight.set(self.inflight.get() + 1);
+        self.peak.set(self.peak.get().max(self.inflight.get()));
+        Admitted { engine: self, sem }
+    }
+
+    /// Record a finished op: span total (lock-subtracted) under `class`,
+    /// raw window into the timeline.
+    fn span(&self, class: OpClass, t0: SimTime, lock: SimTime) {
+        let now = self.sim.now();
+        self.trace.record(class, now - t0 - lock);
+        self.trace.observe_span(class, t0, now);
+    }
+
+    /// Record the batch's accumulated lock time once under
+    /// [`OpClass::Lock`].
+    fn record_lock(&self, lock: SimTime) {
+        if lock > SimTime::ZERO {
+            self.trace.record(OpClass::Lock, lock);
+        }
+    }
+
+    /// Batched archive execution: one task per field, admitted by the
+    /// depth semaphore, each writing through a checked-out store
+    /// session. Locations return in input order; on errors the batch
+    /// reports the first (by input index) error.
+    pub(crate) async fn archive_batch(
+        &self,
+        ids: &[Key],
+        datas: Vec<Bytes>,
+        split: &[(Key, Key, Key)],
+    ) -> Result<Vec<FieldLocation>, FdbError> {
+        let n = ids.len();
+        let sem = self.semaphore();
+        let locs: RefCell<Vec<Option<FieldLocation>>> =
+            RefCell::new((0..n).map(|_| None).collect());
+        let failed: RefCell<Option<(usize, FdbError)>> = RefCell::new(None);
+        let lock_total: Cell<SimTime> = Cell::new(SimTime::ZERO);
+        {
+            let (locs, failed) = (&locs, &failed);
+            let (sem, lock_total) = (&sem, &lock_total);
+            let tasks: Vec<_> = datas
+                .into_iter()
+                .enumerate()
+                .map(|(i, data)| {
+                    let id = &ids[i];
+                    let (ds, colloc, _elem) = &split[i];
+                    boxed(async move {
+                        sem.acquire().await;
+                        let _adm = self.admit(sem);
+                        let mut session = match Checkout::new(&self.store_pool, "store") {
+                            Ok(s) => s,
+                            Err(e) => return note_failure(failed, i, e),
+                        };
+                        let t0 = self.sim.now();
+                        let r = session.archive(ds, colloc, id, data).await;
+                        let lock = session.take_lock_time();
+                        lock_total.set(lock_total.get() + lock);
+                        match r {
+                            Ok(loc) => {
+                                self.span(OpClass::DataWrite, t0, lock);
+                                locs.borrow_mut()[i] = Some(loc);
+                            }
+                            Err(e) => note_failure(failed, i, e),
+                        }
+                    })
+                })
+                .collect();
+            join_all(tasks).await;
+        }
+        self.record_lock(lock_total.get());
+        if let Some((_, e)) = failed.into_inner() {
+            return Err(e);
+        }
+        Ok(locs
+            .into_inner()
+            .into_iter()
+            .map(|l| l.expect("no failure => every field has a location"))
+            .collect())
+    }
+
+    /// Batched retrieve execution (uncoalesced): resolve each field's
+    /// location — at depth through catalogue sessions when the backend
+    /// mints them, else on the one serial index client — hand every
+    /// resolved handle to a per-field read task via a one-shot slot,
+    /// and read at depth through store sessions. Found `(id, bytes)`
+    /// pairs return in input order; absent fields are skipped (cache
+    /// semantics).
+    pub(crate) async fn retrieve_batch(
+        &self,
+        catalogue: &mut dyn Catalogue,
+        ids: &[Key],
+        split: &[(Key, Key, Key)],
+    ) -> Result<Vec<(Key, Bytes)>, FdbError> {
+        let n = ids.len();
+        let sem = self.semaphore();
+        let slots: Vec<Slot<Option<DataHandle>>> = (0..n).map(|_| Slot::new()).collect();
+        let out: RefCell<Vec<Option<(Key, Bytes)>>> =
+            RefCell::new((0..n).map(|_| None).collect());
+        let failed: RefCell<Option<(usize, FdbError)>> = RefCell::new(None);
+        let lock_total: Cell<SimTime> = Cell::new(SimTime::ZERO);
+        let cat_depth = !self.cat_pool.borrow().is_empty();
+        {
+            let (slots, out, failed) = (&slots, &out, &failed);
+            let (sem, lock_total) = (&sem, &lock_total);
+            let mut tasks = Vec::new();
+            if cat_depth {
+                for (i, (id, (ds, colloc, elem))) in ids.iter().zip(split).enumerate() {
+                    tasks.push(boxed(async move {
+                        sem.acquire().await;
+                        let _adm = self.admit(sem);
+                        let mut cs = match Checkout::new(&self.cat_pool, "catalogue") {
+                            Ok(s) => s,
+                            Err(e) => {
+                                note_failure(failed, i, e);
+                                slots[i].put(None); // never strand the read task
+                                return;
+                            }
+                        };
+                        let t0 = self.sim.now();
+                        let loc = cs.retrieve(ds, colloc, elem, id).await;
+                        let lock = cs.take_lock_time();
+                        lock_total.set(lock_total.get() + lock);
+                        self.span(OpClass::IndexRead, t0, lock);
+                        slots[i].put(loc.map(|l| DataHandle::from_location(&l)));
+                    }));
+                }
+            } else {
+                tasks.push(boxed(async move {
+                    for (i, (id, (ds, colloc, elem))) in ids.iter().zip(split).enumerate() {
+                        let t0 = self.sim.now();
+                        let loc = catalogue.retrieve(ds, colloc, elem, id).await;
+                        let lock = catalogue.take_lock_time();
+                        lock_total.set(lock_total.get() + lock);
+                        self.span(OpClass::IndexRead, t0, lock);
+                        slots[i].put(loc.map(|l| DataHandle::from_location(&l)));
+                    }
+                }));
+            }
+            for (i, id) in ids.iter().enumerate() {
+                tasks.push(boxed(async move {
+                    let Some(handle) = slots[i].take().await else {
+                        return; // absent field: cache semantics
+                    };
+                    sem.acquire().await;
+                    let _adm = self.admit(sem);
+                    let mut session = match Checkout::new(&self.store_pool, "store") {
+                        Ok(s) => s,
+                        Err(e) => return note_failure(failed, i, e),
+                    };
+                    let t0 = self.sim.now();
+                    let r = session.read(&handle).await;
+                    let lock = session.take_lock_time();
+                    lock_total.set(lock_total.get() + lock);
+                    match r {
+                        Ok(bytes) => {
+                            self.span(OpClass::DataRead, t0, lock);
+                            out.borrow_mut()[i] = Some((id.clone(), bytes));
+                        }
+                        Err(e) => note_failure(failed, i, e),
+                    }
+                }));
+            }
+            join_all(tasks).await;
+        }
+        self.record_lock(lock_total.get());
+        if let Some((_, e)) = failed.into_inner() {
+            return Err(e);
+        }
+        Ok(out.into_inner().into_iter().flatten().collect())
+    }
+
+    /// Streaming coalesced retrieve execution: resolve → plan → execute
+    /// as one overlapped pipeline. Lookups resolve (at depth through
+    /// catalogue sessions when available); a planner task feeds each
+    /// resolved location — in input order — into a
+    /// [`StreamPlanner`], which seals a merged range the moment it can
+    /// no longer grow; sealed ranges stream through a pipe to `depth`
+    /// range workers that issue them via
+    /// [`Store::read_ranges`] — so the first data read is in flight
+    /// while later index lookups are still resolving, instead of the
+    /// planner waiting for the full location set. Merged ranges (not
+    /// raw fields) are the unit of semaphore admission. Returns the
+    /// per-input bytes (`None` = absent field) and the plan counters.
+    pub(crate) async fn retrieve_streaming(
+        &self,
+        catalogue: &mut dyn Catalogue,
+        ids: &[Key],
+        split: &[(Key, Key, Key)],
+        gap: u64,
+        max_read: u64,
+    ) -> Result<(Vec<Option<Bytes>>, PlanStats), FdbError> {
+        let n = ids.len();
+        let sem = self.semaphore();
+        let slots: Vec<Slot<Option<FieldLocation>>> = (0..n).map(|_| Slot::new()).collect();
+        let ranges: Pipe<crate::fdb::plan::PlannedRead> = Pipe::new();
+        let out: RefCell<Vec<Option<Bytes>>> = RefCell::new((0..n).map(|_| None).collect());
+        let failed: RefCell<Option<(usize, FdbError)>> = RefCell::new(None);
+        let stats: Cell<PlanStats> = Cell::new(PlanStats::default());
+        let lock_total: Cell<SimTime> = Cell::new(SimTime::ZERO);
+        let workers = self.store_pool.borrow().len().max(1);
+        let cat_depth = !self.cat_pool.borrow().is_empty();
+        {
+            let (slots, out, failed) = (&slots, &out, &failed);
+            let (sem, lock_total, ranges, stats) = (&sem, &lock_total, &ranges, &stats);
+            let mut tasks = Vec::new();
+            if cat_depth {
+                for (i, (id, (ds, colloc, elem))) in ids.iter().zip(split).enumerate() {
+                    tasks.push(boxed(async move {
+                        sem.acquire().await;
+                        let _adm = self.admit(sem);
+                        let mut cs = match Checkout::new(&self.cat_pool, "catalogue") {
+                            Ok(s) => s,
+                            Err(e) => {
+                                note_failure(failed, i, e);
+                                slots[i].put(None);
+                                return;
+                            }
+                        };
+                        let t0 = self.sim.now();
+                        let loc = cs.retrieve(ds, colloc, elem, id).await;
+                        let lock = cs.take_lock_time();
+                        lock_total.set(lock_total.get() + lock);
+                        self.span(OpClass::IndexRead, t0, lock);
+                        slots[i].put(loc);
+                    }));
+                }
+            } else {
+                tasks.push(boxed(async move {
+                    for (i, (id, (ds, colloc, elem))) in ids.iter().zip(split).enumerate() {
+                        let t0 = self.sim.now();
+                        let loc = catalogue.retrieve(ds, colloc, elem, id).await;
+                        let lock = catalogue.take_lock_time();
+                        lock_total.set(lock_total.get() + lock);
+                        self.span(OpClass::IndexRead, t0, lock);
+                        slots[i].put(loc);
+                    }
+                }));
+            }
+            // the planner: consumes resolved locations in input order so
+            // the emitted plan is deterministic, streams sealed ranges
+            tasks.push(boxed(async move {
+                let mut planner = StreamPlanner::new(gap, max_read);
+                for (i, slot) in slots.iter().enumerate() {
+                    if let Some(loc) = slot.take().await {
+                        if let Some(sealed) = planner.push(i, &loc) {
+                            ranges.push(sealed);
+                        }
+                    }
+                }
+                for sealed in planner.finish() {
+                    ranges.push(sealed);
+                }
+                stats.set(planner.stats());
+                ranges.close();
+            }));
+            // range workers: one per pooled session; merged ranges — not
+            // raw fields — are the unit of semaphore admission
+            for _ in 0..workers {
+                tasks.push(boxed(async move {
+                    while let Some(pr) = ranges.pop().await {
+                        sem.acquire().await;
+                        let _adm = self.admit(sem);
+                        // error ordering key: the range's first input pos
+                        let fi = pr.fields.first().map(|f| f.0).unwrap_or(usize::MAX);
+                        let mut session = match Checkout::new(&self.store_pool, "store") {
+                            Ok(s) => s,
+                            Err(e) => {
+                                note_failure(failed, fi, e);
+                                continue;
+                            }
+                        };
+                        let t0 = self.sim.now();
+                        let r = session.read_ranges(std::slice::from_ref(&pr.handle)).await;
+                        let lock = session.take_lock_time();
+                        lock_total.set(lock_total.get() + lock);
+                        match r {
+                            Ok(mut bufs) => {
+                                self.span(OpClass::DataRead, t0, lock);
+                                let buf = bufs.pop().expect("one buffer per handle");
+                                let mut out = out.borrow_mut();
+                                for &(idx, rel, len) in &pr.fields {
+                                    out[idx] = Some(buf.slice(rel, len));
+                                }
+                            }
+                            Err(e) => note_failure(failed, fi, e),
+                        }
+                    }
+                }));
+            }
+            join_all(tasks).await;
+        }
+        self.record_lock(lock_total.get());
+        if let Some((_, e)) = failed.into_inner() {
+            return Err(e);
+        }
+        Ok((out.into_inner(), stats.get()))
+    }
+
+    /// Batched direct-retrieve execution (the hash-OID fast path): the
+    /// Store serves lookups too, so each admitted task resolves *and*
+    /// reads through its own checked-out session — `depth` whole fields
+    /// in flight, no lookup/read client contention.
+    pub(crate) async fn direct_batch(
+        &self,
+        ids: &[Key],
+        split: &[(Key, Key, Key)],
+    ) -> Result<Vec<(Key, Bytes)>, FdbError> {
+        let n = ids.len();
+        let sem = self.semaphore();
+        let out: RefCell<Vec<Option<(Key, Bytes)>>> =
+            RefCell::new((0..n).map(|_| None).collect());
+        let failed: RefCell<Option<(usize, FdbError)>> = RefCell::new(None);
+        let lock_total: Cell<SimTime> = Cell::new(SimTime::ZERO);
+        {
+            let (out, failed) = (&out, &failed);
+            let (sem, lock_total) = (&sem, &lock_total);
+            let tasks: Vec<_> = ids
+                .iter()
+                .enumerate()
+                .map(|(i, id)| {
+                    let (ds, _, _) = &split[i];
+                    boxed(async move {
+                        sem.acquire().await;
+                        let _adm = self.admit(sem);
+                        let mut session = match Checkout::new(&self.store_pool, "store") {
+                            Ok(s) => s,
+                            Err(e) => return note_failure(failed, i, e),
+                        };
+                        let t0 = self.sim.now();
+                        let loc = session.retrieve_direct(ds, id).await;
+                        let lock = session.take_lock_time();
+                        lock_total.set(lock_total.get() + lock);
+                        self.span(OpClass::IndexRead, t0, lock);
+                        let Some(loc) = loc else {
+                            return; // absent field: cache semantics
+                        };
+                        let h = DataHandle::from_location(&loc);
+                        let t1 = self.sim.now();
+                        let r = session.read(&h).await;
+                        let lock = session.take_lock_time();
+                        lock_total.set(lock_total.get() + lock);
+                        match r {
+                            Ok(bytes) => {
+                                self.span(OpClass::DataRead, t1, lock);
+                                out.borrow_mut()[i] = Some((id.clone(), bytes));
+                            }
+                            Err(e) => note_failure(failed, i, e),
+                        }
+                    })
+                })
+                .collect();
+            join_all(tasks).await;
+        }
+        self.record_lock(lock_total.get());
+        if let Some((_, e)) = failed.into_inner() {
+            return Err(e);
+        }
+        Ok(out.into_inner().into_iter().flatten().collect())
+    }
+}
+
+/// A single-producer in-process queue connecting pipeline stages. Waker
+/// lists are woken wholesale, so it supports one producer and *many*
+/// consumers (the engine's range workers all pop from one pipe; the
+/// serial retrieve pipeline uses it single-consumer).
+pub(crate) struct Pipe<T> {
+    queue: RefCell<VecDeque<T>>,
+    closed: Cell<bool>,
+    wakers: RefCell<Vec<Waker>>,
+}
+
+impl<T> Pipe<T> {
+    pub(crate) fn new() -> Pipe<T> {
+        Pipe {
+            queue: RefCell::new(VecDeque::new()),
+            closed: Cell::new(false),
+            wakers: RefCell::new(Vec::new()),
+        }
+    }
+
+    pub(crate) fn push(&self, item: T) {
+        self.queue.borrow_mut().push_back(item);
+        for w in self.wakers.borrow_mut().drain(..) {
+            w.wake();
+        }
+    }
+
+    pub(crate) fn close(&self) {
+        self.closed.set(true);
+        for w in self.wakers.borrow_mut().drain(..) {
+            w.wake();
+        }
+    }
+
+    pub(crate) fn pop(&self) -> Pop<'_, T> {
+        Pop { pipe: self }
+    }
+}
+
+pub(crate) struct Pop<'a, T> {
+    pipe: &'a Pipe<T>,
+}
+
+impl<'a, T> std::future::Future for Pop<'a, T> {
+    type Output = Option<T>;
+
+    fn poll(
+        self: std::pin::Pin<&mut Self>,
+        cx: &mut std::task::Context<'_>,
+    ) -> std::task::Poll<Option<T>> {
+        if let Some(item) = self.pipe.queue.borrow_mut().pop_front() {
+            return std::task::Poll::Ready(Some(item));
+        }
+        if self.pipe.closed.get() {
+            return std::task::Poll::Ready(None);
+        }
+        self.pipe.wakers.borrow_mut().push(cx.waker().clone());
+        std::task::Poll::Pending
+    }
+}
+
+/// A one-shot value slot connecting a lookup to its downstream task:
+/// the producer `put`s exactly once, the single consumer
+/// `take().await`s it. Waker-based so the consumer suspends cleanly
+/// while earlier lookups are still resolving.
+pub(crate) struct Slot<T> {
+    value: RefCell<Option<T>>,
+    waker: RefCell<Option<Waker>>,
+}
+
+impl<T> Slot<T> {
+    pub(crate) fn new() -> Slot<T> {
+        Slot {
+            value: RefCell::new(None),
+            waker: RefCell::new(None),
+        }
+    }
+
+    pub(crate) fn put(&self, value: T) {
+        *self.value.borrow_mut() = Some(value);
+        if let Some(w) = self.waker.borrow_mut().take() {
+            w.wake();
+        }
+    }
+
+    pub(crate) fn take(&self) -> TakeSlot<'_, T> {
+        TakeSlot { slot: self }
+    }
+}
+
+pub(crate) struct TakeSlot<'a, T> {
+    slot: &'a Slot<T>,
+}
+
+impl<'a, T> std::future::Future for TakeSlot<'a, T> {
+    type Output = T;
+
+    fn poll(
+        self: std::pin::Pin<&mut Self>,
+        cx: &mut std::task::Context<'_>,
+    ) -> std::task::Poll<T> {
+        if let Some(value) = self.slot.value.borrow_mut().take() {
+            return std::task::Poll::Ready(value);
+        }
+        *self.slot.waker.borrow_mut() = Some(cx.waker().clone());
+        std::task::Poll::Pending
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fdb::backend::NullStore;
+
+    #[test]
+    fn checkout_on_empty_pool_is_a_typed_error_not_a_panic() {
+        // the four pre-engine fan-outs all carried a
+        // `pop().expect("session free under semaphore")` abort site;
+        // the engine's invariant makes exhaustion unreachable, but if
+        // it ever breaks the caller must get FdbError::Backend
+        let pool: RefCell<Vec<Box<dyn StoreSession>>> = RefCell::new(Vec::new());
+        let err = Checkout::new(&pool, "store").map(|_| ()).unwrap_err();
+        match err {
+            FdbError::Backend { backend, detail } => {
+                assert_eq!(backend, "io-engine");
+                assert!(detail.contains("exhausted"), "detail: {detail}");
+            }
+            other => panic!("expected Backend error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn checkout_returns_the_session_on_drop() {
+        let pool: RefCell<Vec<Box<dyn StoreSession>>> =
+            RefCell::new(vec![Box::new(NullStore), Box::new(NullStore)]);
+        {
+            let _one = Checkout::new(&pool, "store").unwrap();
+            let _two = Checkout::new(&pool, "store").unwrap();
+            assert_eq!(pool.borrow().len(), 0);
+            assert!(Checkout::new(&pool, "store").is_err());
+        }
+        assert_eq!(pool.borrow().len(), 2, "drop must return both sessions");
+    }
+
+    #[test]
+    fn admission_guard_restores_inflight_and_slot_on_drop() {
+        use crate::fdb::backend::block_on_ready;
+        let sim = Sim::new();
+        let mut engine = IoEngine::new(&sim);
+        engine.set_depth(2);
+        engine.store_pool.borrow_mut().push(Box::new(NullStore));
+        engine.store_pool.borrow_mut().push(Box::new(NullStore));
+        let sem = engine.semaphore();
+        assert_eq!(sem.servers(), 2, "capacity = minted sessions");
+        block_on_ready(Box::pin(sem.acquire()));
+        let adm = engine.admit(&sem);
+        assert_eq!(engine.inflight.get(), 1);
+        assert_eq!(engine.inflight_peak(), 1);
+        drop(adm);
+        assert_eq!(engine.inflight.get(), 0, "guard must count the op out");
+        // the slot came back too: both servers acquire without queueing
+        block_on_ready(Box::pin(sem.acquire()));
+        block_on_ready(Box::pin(sem.acquire()));
+    }
+
+    #[test]
+    fn multi_consumer_pipe_hands_each_item_to_exactly_one_worker() {
+        // two workers draining one pipe: every pushed item pops exactly
+        // once, and close() releases both (a single-waker pipe would
+        // strand one worker forever and hang the sim)
+        let sim = Sim::new();
+        let done = std::rc::Rc::new(RefCell::new(Vec::new()));
+        {
+            let done = done.clone();
+            sim.spawn(async move {
+                let pipe: Pipe<u32> = Pipe::new();
+                let got: RefCell<Vec<u32>> = RefCell::new(Vec::new());
+                {
+                    let (pipe, got) = (&pipe, &got);
+                    let producer = boxed(async move {
+                        for i in 0..5u32 {
+                            pipe.push(i);
+                        }
+                        pipe.close();
+                    });
+                    let workers = (0..2).map(|_| {
+                        boxed(async move {
+                            while let Some(v) = pipe.pop().await {
+                                got.borrow_mut().push(v);
+                            }
+                        })
+                    });
+                    let mut tasks = vec![producer];
+                    tasks.extend(workers);
+                    join_all(tasks).await;
+                }
+                let mut items = got.into_inner();
+                items.sort_unstable();
+                *done.borrow_mut() = items;
+            });
+        }
+        sim.run();
+        assert_eq!(*done.borrow(), vec![0, 1, 2, 3, 4]);
+    }
+}

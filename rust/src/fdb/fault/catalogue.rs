@@ -72,6 +72,26 @@ impl Catalogue for FaultCatalogue {
         })
     }
 
+    fn session(&mut self) -> Option<Box<dyn crate::fdb::backend::CatalogueSession>> {
+        // fate-sharing: the session wraps the inner's session with the
+        // SAME shared fault state — a fail-stopped instance stays dead
+        // through every client it minted (reads are ungated today, but a
+        // session must never outlive its parent's fault schedule)
+        let inner = self.inner.session()?.into_catalogue();
+        Some(Box::new(FaultCatalogue::new(inner, self.state.clone())))
+    }
+
+    fn begin_archive_group(&mut self) {
+        // group hooks pass through ungated: the gate sits on the archive
+        // ops themselves, and adding a hidden gated op here would shift
+        // every seeded fault schedule by one op per batch
+        self.inner.begin_archive_group();
+    }
+
+    fn end_archive_group<'a>(&'a mut self) -> LocalBoxFuture<'a, Result<(), FdbError>> {
+        self.inner.end_archive_group()
+    }
+
     fn close<'a>(&'a mut self) -> LocalBoxFuture<'a, Result<(), FdbError>> {
         Box::pin(async move {
             self.gate(FaultClass::IndexFlush).await?;

@@ -9,31 +9,29 @@
 //! wrapper ([`Fdb::account`]). Construction goes through
 //! [`crate::fdb::builder::FdbBuilder`].
 //!
-//! The **I/O-depth engine**: with [`IoProfile::depth`] > 1 the batched
-//! paths stop serializing on the single Store client and instead drive
-//! up to `depth` concurrent operations over per-request
-//! [`StoreSession`]s, admitted by a sim-native semaphore (a FIFO
-//! [`Resource`] with `depth` servers). Results are re-ordered to input
-//! order and per-op-class trace/lock accounting is preserved, so any
+//! The **I/O engine**: with [`IoProfile::depth`] > 1 every batched path
+//! is a thin *resolve → plan → execute* submission to the shared
+//! [`IoEngine`] (see [`crate::fdb::engine`]), which owns the depth
+//! semaphore, the store/catalogue session pools, in-flight
+//! instrumentation, and per-op-class trace/lock accounting in exactly
+//! one place. Results are re-ordered to input order, so any
 //! `depth >= 1` is byte- and order-identical to `depth = 1` — only the
 //! virtual time changes. This is the queue-depth client asynchrony of
 //! the DAOS interface papers (event queues with N outstanding ops).
 
 use std::cell::{Cell, RefCell};
-use std::collections::VecDeque;
-use std::task::Waker;
 
-use crate::fdb::backend::{Catalogue, Store, StoreSession};
+use crate::fdb::backend::{Catalogue, Store};
 use crate::fdb::builder::IoProfile;
 use crate::fdb::datahandle::DataHandle;
-use crate::fdb::plan::{PlanStats, ReadPlan};
+use crate::fdb::engine::{IoEngine, Pipe};
 use crate::fdb::key::Key;
 use crate::fdb::location::FieldLocation;
+use crate::fdb::plan::{PlanStats, ReadPlan};
 use crate::fdb::request::Request;
 use crate::fdb::schema::Schema;
 use crate::sim::exec::Sim;
 use crate::sim::futures::{boxed, join_all};
-use crate::sim::resource::Resource;
 use crate::sim::time::SimTime;
 use crate::sim::trace::{OpClass, Trace};
 use crate::util::content::Bytes;
@@ -51,12 +49,11 @@ pub struct Fdb {
     sim: Sim,
     /// queue-depth configuration (depth 1 = the serial legacy paths)
     io: IoProfile,
-    /// lazily-minted client sessions, one per admitted in-flight op;
-    /// reused across batches so session client state (open files, page
-    /// caches) persists like a real client's
-    sessions: Vec<Box<dyn StoreSession>>,
-    io_inflight: Cell<usize>,
-    io_inflight_peak: Cell<usize>,
+    /// the shared scheduler behind every batched path: depth semaphore,
+    /// store/catalogue session pools (lazily minted, reused across
+    /// batches so session client state persists like a real client's),
+    /// in-flight instrumentation, per-op trace/lock accounting
+    engine: IoEngine,
     /// cumulative read-plan counters (zero until a coalesced retrieve
     /// runs; see [`IoProfile::coalesce_gap`])
     plan_stats: Cell<PlanStats>,
@@ -79,16 +76,15 @@ impl Fdb {
             trace: Trace::new(),
             sim: sim.clone(),
             io: IoProfile::default(),
-            sessions: Vec::new(),
-            io_inflight: Cell::new(0),
-            io_inflight_peak: Cell::new(0),
+            engine: IoEngine::new(sim),
             plan_stats: Cell::new(PlanStats::default()),
         }
     }
 
     /// Attach a shared trace collector (benchmark profiling).
     pub fn with_trace(mut self, trace: Trace) -> Fdb {
-        self.trace = trace;
+        self.trace = trace.clone();
+        self.engine.set_trace(trace);
         self
     }
 
@@ -96,6 +92,7 @@ impl Fdb {
     /// [`crate::fdb::builder::FdbBuilder::io`], which validates it).
     pub fn with_io(mut self, io: IoProfile) -> Fdb {
         self.io = io;
+        self.engine.set_depth(io.depth);
         self
     }
 
@@ -107,14 +104,15 @@ impl Fdb {
     /// Client sessions minted so far (0 until a batched op runs at
     /// depth > 1).
     pub fn io_sessions(&self) -> usize {
-        self.sessions.len()
+        self.engine.store_sessions()
     }
 
-    /// High-water mark of concurrently in-flight session operations —
+    /// High-water mark of concurrently in-flight admitted operations —
     /// never exceeds [`IoProfile::depth`] (the engine's semaphore bound;
-    /// asserted by the integration tests).
+    /// asserted by the integration tests). Catalogue-session lookups
+    /// and store I/O share the one semaphore, so the bound covers both.
     pub fn io_inflight_peak(&self) -> usize {
-        self.io_inflight_peak.get()
+        self.engine.inflight_peak()
     }
 
     /// Cumulative read-plan counters across this instance's coalesced
@@ -129,33 +127,21 @@ impl Fdb {
         (self.store.name(), self.catalogue.name())
     }
 
-    /// Fill the session pool up to the configured depth. Returns whether
-    /// the fan-out engine can run; `false` (depth 1, or a backend
-    /// without session support) keeps callers on the serial paths.
+    /// Fill the engine's store-session pool up to the configured depth.
+    /// Returns whether the engine's fan-out paths can run; `false`
+    /// (depth 1, or a backend without session support) keeps callers on
+    /// the serial paths.
     fn ensure_sessions(&mut self) -> bool {
-        if self.io.depth <= 1 {
-            return false;
-        }
-        while self.sessions.len() < self.io.depth {
-            match self.store.session() {
-                Some(s) => self.sessions.push(s),
-                None => {
-                    self.sessions.clear();
-                    return false;
-                }
-            }
-        }
-        true
+        self.engine.ensure_store_sessions(self.store.as_mut())
     }
 
     /// The shared trace/lock wrapper: record the span since `t0` under
     /// `class`, with any distributed-lock time drained from the backends
-    /// (and any idle sessions) split out into [`OpClass::Lock`].
+    /// (and any idle pooled sessions) split out into [`OpClass::Lock`].
     fn account(&mut self, class: OpClass, t0: SimTime) {
-        let mut lock = self.store.take_lock_time() + self.catalogue.take_lock_time();
-        for s in &self.sessions {
-            lock = lock + s.take_lock_time();
-        }
+        let lock = self.store.take_lock_time()
+            + self.catalogue.take_lock_time()
+            + self.engine.take_pooled_lock_time();
         self.trace.record(class, self.sim.now() - t0 - lock);
         if lock > SimTime::ZERO {
             self.trace.record(OpClass::Lock, lock);
@@ -189,9 +175,16 @@ impl Fdb {
     /// Catalogue pass: the already-written fields stay un-indexed and
     /// therefore invisible, like a crashed writer's unflushed step.
     ///
-    /// At [`IoProfile::depth`] > 1 the Store pass fans out over client
-    /// sessions with up to `depth` writes in flight; the Catalogue pass
-    /// stays in input order either way, so the index is identical.
+    /// At [`IoProfile::depth`] > 1 the Store pass submits to the
+    /// [`IoEngine`] with up to `depth` writes in flight; the Catalogue
+    /// pass stays in input order either way, so the index is identical.
+    /// The Catalogue pass runs as one **write group**
+    /// ([`Catalogue::begin_archive_group`]): a durable (WAL'd) catalogue
+    /// defers its per-intent fdatasync and issues ONE barrier per dirty
+    /// WAL at group end — group commit — so a durable N-field batch
+    /// costs one fsync instead of N. The group barrier completes before
+    /// this returns, on every path including errors: nothing is
+    /// reported archived whose intent is not yet on disk.
     pub async fn archive_many(
         &mut self,
         items: Vec<(Key, Bytes)>,
@@ -201,10 +194,16 @@ impl Fdb {
             split.push(self.schema.split(id)?);
         }
         let indexed = if self.ensure_sessions() {
-            self.archive_fanout(items, split).await?
+            let (ids, datas): (Vec<Key>, Vec<Bytes>) = items.into_iter().unzip();
+            let locs = self.engine.archive_batch(&ids, datas, &split).await?;
+            ids.into_iter()
+                .zip(split)
+                .zip(locs)
+                .map(|((id, (ds, colloc, elem)), loc)| (id, ds, colloc, elem, loc))
+                .collect()
         } else {
             let t0 = self.sim.now();
-            let mut indexed = Vec::with_capacity(items.len());
+            let mut indexed: Vec<Indexed> = Vec::with_capacity(items.len());
             let mut failed = None;
             for ((id, data), (ds, colloc, elem)) in items.into_iter().zip(split) {
                 match self.store.archive(&ds, &colloc, &id, data).await {
@@ -222,95 +221,22 @@ impl Fdb {
             indexed
         };
         let t1 = self.sim.now();
+        self.catalogue.begin_archive_group();
+        let mut inserted = Ok(());
         for (id, ds, colloc, elem, loc) in &indexed {
-            let r = self.catalogue.archive(ds, colloc, elem, id, loc).await;
-            if let Err(e) = r {
+            if let Err(e) = self.catalogue.archive(ds, colloc, elem, id, loc).await {
                 // later fields of the batch stay un-indexed — invisible,
                 // like the store-error story above
-                self.account(OpClass::IndexWrite, t1);
-                return Err(e);
+                inserted = Err(e);
+                break;
             }
         }
+        // the group barrier runs on the error path too: intents appended
+        // BEFORE the failing insert must still reach disk
+        let ended = self.catalogue.end_archive_group().await;
         self.account(OpClass::IndexWrite, t1);
-        Ok(())
-    }
-
-    /// The Store half of [`Fdb::archive_many`] at depth > 1: one task
-    /// per field, admitted by a `depth`-server semaphore; each admitted
-    /// task checks a client session out of the pool, writes through it,
-    /// and returns it. Locations come back in input order. On errors the
-    /// whole batch reports the first (by input index) error and nothing
-    /// is indexed.
-    async fn archive_fanout(
-        &mut self,
-        items: Vec<(Key, Bytes)>,
-        split: Vec<(Key, Key, Key)>,
-    ) -> Result<Vec<Indexed>, super::FdbError> {
-        let n = items.len();
-        let (ids, datas): (Vec<Key>, Vec<Bytes>) = items.into_iter().unzip();
-        let sem = Resource::new("fdb/io-depth", self.sessions.len().max(1));
-        let pool: RefCell<Vec<Box<dyn StoreSession>>> =
-            RefCell::new(std::mem::take(&mut self.sessions));
-        let locs: RefCell<Vec<Option<FieldLocation>>> =
-            RefCell::new((0..n).map(|_| None).collect());
-        let failed: RefCell<Option<(usize, super::FdbError)>> = RefCell::new(None);
-        let sim = self.sim.clone();
-        let trace = self.trace.clone();
-        {
-            let (pool, locs, failed) = (&pool, &locs, &failed);
-            let (sem, sim, trace) = (&sem, &sim, &trace);
-            let inflight = &self.io_inflight;
-            let peak = &self.io_inflight_peak;
-            let tasks: Vec<_> = datas
-                .into_iter()
-                .enumerate()
-                .map(|(i, data)| {
-                    let id = &ids[i];
-                    let (ds, colloc, _elem) = &split[i];
-                    boxed(async move {
-                        sem.acquire().await;
-                        let mut session =
-                            pool.borrow_mut().pop().expect("session free under semaphore");
-                        inflight.set(inflight.get() + 1);
-                        peak.set(peak.get().max(inflight.get()));
-                        let t0 = sim.now();
-                        let r = session.archive(ds, colloc, id, data).await;
-                        let lock = session.take_lock_time();
-                        inflight.set(inflight.get() - 1);
-                        pool.borrow_mut().push(session);
-                        sem.release();
-                        match r {
-                            Ok(loc) => {
-                                trace.record(OpClass::DataWrite, sim.now() - t0 - lock);
-                                if lock > SimTime::ZERO {
-                                    trace.record(OpClass::Lock, lock);
-                                }
-                                locs.borrow_mut()[i] = Some(loc);
-                            }
-                            Err(e) => {
-                                let mut f = failed.borrow_mut();
-                                if f.as_ref().map(|(j, _)| i < *j).unwrap_or(true) {
-                                    *f = Some((i, e));
-                                }
-                            }
-                        }
-                    })
-                })
-                .collect();
-            join_all(tasks).await;
-        }
-        self.sessions = pool.into_inner();
-        if let Some((_, e)) = failed.into_inner() {
-            return Err(e);
-        }
-        let mut indexed = Vec::with_capacity(n);
-        for ((id, (ds, colloc, elem)), loc) in
-            ids.into_iter().zip(split).zip(locs.into_inner())
-        {
-            let loc = loc.expect("no failure => every field has a location");
-            indexed.push((id, ds, colloc, elem, loc));
-        }
-        Ok(indexed)
+        inserted?;
+        ended
     }
 
     /// FDB flush(): Store flush (including every minted client session —
@@ -323,12 +249,7 @@ impl Fdb {
         let t0 = self.sim.now();
         let mut flushed = self.store.flush().await;
         if flushed.is_ok() {
-            for s in &mut self.sessions {
-                flushed = s.flush().await;
-                if flushed.is_err() {
-                    break;
-                }
-            }
+            flushed = self.engine.flush_store_sessions().await;
         }
         if flushed.is_ok() {
             flushed = self.catalogue.flush().await;
@@ -404,7 +325,7 @@ impl Fdb {
         let fanout = self.ensure_sessions();
         if self.store.direct_retrieve_enabled() {
             if fanout {
-                return self.retrieve_direct_fanout(ids, &split).await;
+                return self.engine.direct_batch(ids, &split).await;
             }
             // direct mode: the Store serves the lookups too, so lookup
             // and read contend for the same client — run sequentially
@@ -427,7 +348,15 @@ impl Fdb {
             return self.retrieve_coalesced(ids, &split, fanout).await;
         }
         if fanout {
-            return self.retrieve_fanout(ids, &split).await;
+            // catalogue sessions (where the backend supports them) let
+            // the lookups themselves run at depth; without them the
+            // engine falls back to one serial lookup client like the
+            // pipe path
+            self.engine.ensure_cat_sessions(self.catalogue.as_mut());
+            return self
+                .engine
+                .retrieve_batch(self.catalogue.as_mut(), ids, &split)
+                .await;
         }
         let pipe: Pipe<(Key, DataHandle)> = Pipe::new();
         let out: RefCell<Vec<(Key, Bytes)>> = RefCell::new(Vec::new());
@@ -482,106 +411,26 @@ impl Fdb {
         Ok(out.into_inner())
     }
 
-    /// [`Fdb::retrieve_many`] at depth > 1: the Catalogue client still
-    /// runs its lookups serially (one index client, like the pipe path),
-    /// but each resolved handle is handed to a per-field read task via a
-    /// one-shot slot. Read tasks are admitted by a `depth`-server
-    /// semaphore and check client sessions out of the pool, so up to
-    /// `depth` store reads are in flight at once. Results land in an
-    /// input-order table; absent fields are skipped.
-    async fn retrieve_fanout(
-        &mut self,
-        ids: &[Key],
-        split: &[(Key, Key, Key)],
-    ) -> Result<Vec<(Key, Bytes)>, super::FdbError> {
-        let n = ids.len();
-        let sem = Resource::new("fdb/io-depth", self.sessions.len().max(1));
-        let pool: RefCell<Vec<Box<dyn StoreSession>>> =
-            RefCell::new(std::mem::take(&mut self.sessions));
-        let slots: Vec<Slot<Option<DataHandle>>> = (0..n).map(|_| Slot::new()).collect();
-        let out: RefCell<Vec<Option<(Key, Bytes)>>> =
-            RefCell::new((0..n).map(|_| None).collect());
-        let failed: RefCell<Option<(usize, super::FdbError)>> = RefCell::new(None);
-        let lock_total: Cell<SimTime> = Cell::new(SimTime::ZERO);
-        let sim = self.sim.clone();
-        let trace = self.trace.clone();
-        {
-            let (pool, slots, out, failed) = (&pool, &slots, &out, &failed);
-            let (sem, sim, trace, lock_total) = (&sem, &sim, &trace, &lock_total);
-            let inflight = &self.io_inflight;
-            let peak = &self.io_inflight_peak;
-            let catalogue = &mut self.catalogue;
-            let lookups = boxed(async move {
-                for (i, (id, (ds, colloc, elem))) in ids.iter().zip(split).enumerate() {
-                    let t0 = sim.now();
-                    let loc = catalogue.retrieve(ds, colloc, elem, id).await;
-                    let lock = catalogue.take_lock_time();
-                    lock_total.set(lock_total.get() + lock);
-                    trace.record(OpClass::IndexRead, sim.now() - t0 - lock);
-                    slots[i].put(loc.map(|l| DataHandle::from_location(&l)));
-                }
-            });
-            let mut tasks = vec![lookups];
-            for (i, id) in ids.iter().enumerate() {
-                tasks.push(boxed(async move {
-                    let Some(handle) = slots[i].take().await else {
-                        return; // absent field: cache semantics
-                    };
-                    sem.acquire().await;
-                    let mut session =
-                        pool.borrow_mut().pop().expect("session free under semaphore");
-                    inflight.set(inflight.get() + 1);
-                    peak.set(peak.get().max(inflight.get()));
-                    let t0 = sim.now();
-                    let r = session.read(&handle).await;
-                    let lock = session.take_lock_time();
-                    lock_total.set(lock_total.get() + lock);
-                    inflight.set(inflight.get() - 1);
-                    pool.borrow_mut().push(session);
-                    sem.release();
-                    match r {
-                        Ok(bytes) => {
-                            trace.record(OpClass::DataRead, sim.now() - t0 - lock);
-                            out.borrow_mut()[i] = Some((id.clone(), bytes));
-                        }
-                        Err(e) => {
-                            let mut f = failed.borrow_mut();
-                            if f.as_ref().map(|(j, _)| i < *j).unwrap_or(true) {
-                                *f = Some((i, e));
-                            }
-                        }
-                    }
-                }));
-            }
-            join_all(tasks).await;
-        }
-        self.sessions = pool.into_inner();
-        let lock = lock_total.get();
-        if lock > SimTime::ZERO {
-            self.trace.record(OpClass::Lock, lock);
-        }
-        if let Some((_, e)) = failed.into_inner() {
-            return Err(e);
-        }
-        Ok(out.into_inner().into_iter().flatten().collect())
-    }
-
     /// [`Fdb::retrieve_many`] with the read planner on
-    /// ([`IoProfile::coalesce_gap`] > 0): resolve every location first
-    /// (the planner needs the full set — the lookup/read overlap the
-    /// pipe buys is traded for op-count reduction), build a
-    /// [`ReadPlan`] merging adjacent fields into ranged I/Os, execute
-    /// the plan, and slice the merged buffers back into per-field bytes
-    /// in input order. At depth > 1 the plan fans out over client
-    /// sessions with **merged ranges as the unit of in-flight
-    /// admission** (one [`Store::read_ranges`] call per range); at
-    /// depth 1 the whole plan issues as a single vectored
+    /// ([`IoProfile::coalesce_gap`] > 0): merge adjacent fields into
+    /// large ranged I/Os, byte- and order-identical to the uncoalesced
+    /// paths — only the op count (and so the virtual time) changes.
+    ///
+    /// At depth 1: resolve every location first, build a [`ReadPlan`],
+    /// and issue the whole plan as a single vectored
     /// [`Store::read_ranges`] batch — a bare POSIX/RADOS store then
     /// resolves each container (file descriptor, pool handle) once for
     /// the batch, while wrappers route range by range by design (tiered
-    /// per minting tier, replicated per read policy). Byte- and
-    /// order-identical to the uncoalesced paths; only the op count (and
-    /// so the virtual time) changes.
+    /// per minting tier, replicated per read policy).
+    ///
+    /// At depth > 1 the engine runs **streaming plan execution**
+    /// ([`IoEngine::retrieve_streaming`]): catalogue resolution (at
+    /// depth when the backend supports catalogue sessions), an
+    /// incremental planner that seals merged ranges as soon as each
+    /// container's location run closes, and range workers that start
+    /// issuing sealed ranges while later lookups are still in flight —
+    /// resolve overlaps execute instead of forming a barrier. Merged
+    /// ranges — not raw fields — stay the unit of in-flight admission.
     async fn retrieve_coalesced(
         &mut self,
         ids: &[Key],
@@ -589,24 +438,38 @@ impl Fdb {
         fanout: bool,
     ) -> Result<Vec<(Key, Bytes)>, super::FdbError> {
         let n = ids.len();
-        // catalogue phase: serial lookups on the one index client,
-        // accounted per op like the legacy paths
-        let mut located: Vec<(usize, FieldLocation)> = Vec::new();
-        for (i, (id, (ds, colloc, elem))) in ids.iter().zip(split).enumerate() {
-            let t0 = self.sim.now();
-            let loc = self.catalogue.retrieve(ds, colloc, elem, id).await;
-            self.account(OpClass::IndexRead, t0);
-            if let Some(loc) = loc {
-                located.push((i, loc));
-            }
-        }
-        let plan = ReadPlan::build(&located, self.io.coalesce_gap, self.io.coalesce_max);
-        let mut stats = self.plan_stats.get();
-        stats.absorb(plan.stats);
-        self.plan_stats.set(stats);
         let out = if fanout {
-            self.execute_plan_fanout(&plan, n).await?
+            self.engine.ensure_cat_sessions(self.catalogue.as_mut());
+            let (out, stats) = self
+                .engine
+                .retrieve_streaming(
+                    self.catalogue.as_mut(),
+                    ids,
+                    split,
+                    self.io.coalesce_gap,
+                    self.io.coalesce_max,
+                )
+                .await?;
+            let mut acc = self.plan_stats.get();
+            acc.absorb(stats);
+            self.plan_stats.set(acc);
+            out
         } else {
+            // catalogue phase: serial lookups on the one index client,
+            // accounted per op like the legacy paths
+            let mut located: Vec<(usize, FieldLocation)> = Vec::new();
+            for (i, (id, (ds, colloc, elem))) in ids.iter().zip(split).enumerate() {
+                let t0 = self.sim.now();
+                let loc = self.catalogue.retrieve(ds, colloc, elem, id).await;
+                self.account(OpClass::IndexRead, t0);
+                if let Some(loc) = loc {
+                    located.push((i, loc));
+                }
+            }
+            let plan = ReadPlan::build(&located, self.io.coalesce_gap, self.io.coalesce_max);
+            let mut stats = self.plan_stats.get();
+            stats.absorb(plan.stats);
+            self.plan_stats.set(stats);
             // the whole plan as ONE vectored batch: a bare backend
             // resolves each container (fd, ioctx) once across every
             // merged range (wrappers route per range by design)
@@ -630,166 +493,6 @@ impl Fdb {
             .zip(out)
             .filter_map(|(id, b)| b.map(|b| (id.clone(), b)))
             .collect())
-    }
-
-    /// Execute a [`ReadPlan`] at depth > 1: one task per merged range,
-    /// admitted by the `depth`-server semaphore; each admitted task
-    /// checks a client session out of the pool, issues the ranged read
-    /// through [`Store::read_ranges`], and slices its fields into the
-    /// input-order table. Merged ranges — not raw fields — are the unit
-    /// of in-flight admission, so a plan that halves the op count also
-    /// halves the semaphore traffic.
-    async fn execute_plan_fanout(
-        &mut self,
-        plan: &ReadPlan,
-        n: usize,
-    ) -> Result<Vec<Option<Bytes>>, super::FdbError> {
-        let sem = Resource::new("fdb/io-depth", self.sessions.len().max(1));
-        let pool: RefCell<Vec<Box<dyn StoreSession>>> =
-            RefCell::new(std::mem::take(&mut self.sessions));
-        let out: RefCell<Vec<Option<Bytes>>> =
-            RefCell::new((0..n).map(|_| None).collect());
-        let failed: RefCell<Option<(usize, super::FdbError)>> = RefCell::new(None);
-        let lock_total: Cell<SimTime> = Cell::new(SimTime::ZERO);
-        let sim = self.sim.clone();
-        let trace = self.trace.clone();
-        {
-            let (pool, out, failed) = (&pool, &out, &failed);
-            let (sem, sim, trace, lock_total) = (&sem, &sim, &trace, &lock_total);
-            let inflight = &self.io_inflight;
-            let peak = &self.io_inflight_peak;
-            let tasks: Vec<_> = plan
-                .reads
-                .iter()
-                .enumerate()
-                .map(|(ri, pr)| {
-                    boxed(async move {
-                        sem.acquire().await;
-                        let mut session =
-                            pool.borrow_mut().pop().expect("session free under semaphore");
-                        inflight.set(inflight.get() + 1);
-                        peak.set(peak.get().max(inflight.get()));
-                        let t0 = sim.now();
-                        let r = session.read_ranges(std::slice::from_ref(&pr.handle)).await;
-                        let lock = session.take_lock_time();
-                        lock_total.set(lock_total.get() + lock);
-                        inflight.set(inflight.get() - 1);
-                        pool.borrow_mut().push(session);
-                        sem.release();
-                        match r {
-                            Ok(mut bufs) => {
-                                trace.record(OpClass::DataRead, sim.now() - t0 - lock);
-                                let buf = bufs.pop().expect("one buffer per handle");
-                                let mut out = out.borrow_mut();
-                                for &(idx, rel, len) in &pr.fields {
-                                    out[idx] = Some(buf.slice(rel, len));
-                                }
-                            }
-                            Err(e) => {
-                                let mut f = failed.borrow_mut();
-                                if f.as_ref().map(|(j, _)| ri < *j).unwrap_or(true) {
-                                    *f = Some((ri, e));
-                                }
-                            }
-                        }
-                    })
-                })
-                .collect();
-            join_all(tasks).await;
-        }
-        self.sessions = pool.into_inner();
-        let lock = lock_total.get();
-        if lock > SimTime::ZERO {
-            self.trace.record(OpClass::Lock, lock);
-        }
-        if let Some((_, e)) = failed.into_inner() {
-            return Err(e);
-        }
-        Ok(out.into_inner())
-    }
-
-    /// The direct-retrieve (hash-OID) variant of the fan-out: lookups
-    /// would contend with reads on the single Store client, which is why
-    /// the serial path runs them back-to-back — but sessions remove that
-    /// contention entirely: each task resolves *and* reads through its
-    /// own client, `depth` fields in flight.
-    async fn retrieve_direct_fanout(
-        &mut self,
-        ids: &[Key],
-        split: &[(Key, Key, Key)],
-    ) -> Result<Vec<(Key, Bytes)>, super::FdbError> {
-        let n = ids.len();
-        let sem = Resource::new("fdb/io-depth", self.sessions.len().max(1));
-        let pool: RefCell<Vec<Box<dyn StoreSession>>> =
-            RefCell::new(std::mem::take(&mut self.sessions));
-        let out: RefCell<Vec<Option<(Key, Bytes)>>> =
-            RefCell::new((0..n).map(|_| None).collect());
-        let failed: RefCell<Option<(usize, super::FdbError)>> = RefCell::new(None);
-        let lock_total: Cell<SimTime> = Cell::new(SimTime::ZERO);
-        let sim = self.sim.clone();
-        let trace = self.trace.clone();
-        {
-            let (pool, out, failed) = (&pool, &out, &failed);
-            let (sem, sim, trace, lock_total) = (&sem, &sim, &trace, &lock_total);
-            let inflight = &self.io_inflight;
-            let peak = &self.io_inflight_peak;
-            let tasks: Vec<_> = ids
-                .iter()
-                .enumerate()
-                .map(|(i, id)| {
-                    let (ds, _, _) = &split[i];
-                    boxed(async move {
-                        sem.acquire().await;
-                        let mut session =
-                            pool.borrow_mut().pop().expect("session free under semaphore");
-                        inflight.set(inflight.get() + 1);
-                        peak.set(peak.get().max(inflight.get()));
-                        let t0 = sim.now();
-                        let loc = session.retrieve_direct(ds, id).await;
-                        let lock = session.take_lock_time();
-                        lock_total.set(lock_total.get() + lock);
-                        trace.record(OpClass::IndexRead, sim.now() - t0 - lock);
-                        let mut result = Ok(None);
-                        if let Some(loc) = loc {
-                            let h = DataHandle::from_location(&loc);
-                            let t1 = sim.now();
-                            let r = session.read(&h).await;
-                            let lock = session.take_lock_time();
-                            lock_total.set(lock_total.get() + lock);
-                            result = r.map(Some);
-                            if result.is_ok() {
-                                trace.record(OpClass::DataRead, sim.now() - t1 - lock);
-                            }
-                        }
-                        inflight.set(inflight.get() - 1);
-                        pool.borrow_mut().push(session);
-                        sem.release();
-                        match result {
-                            Ok(Some(bytes)) => {
-                                out.borrow_mut()[i] = Some((id.clone(), bytes));
-                            }
-                            Ok(None) => {}
-                            Err(e) => {
-                                let mut f = failed.borrow_mut();
-                                if f.as_ref().map(|(j, _)| i < *j).unwrap_or(true) {
-                                    *f = Some((i, e));
-                                }
-                            }
-                        }
-                    })
-                })
-                .collect();
-            join_all(tasks).await;
-        }
-        self.sessions = pool.into_inner();
-        let lock = lock_total.get();
-        if lock > SimTime::ZERO {
-            self.trace.record(OpClass::Lock, lock);
-        }
-        if let Some((_, e)) = failed.into_inner() {
-            return Err(e);
-        }
-        Ok(out.into_inner().into_iter().flatten().collect())
     }
 
     /// Expand a request's wildcard dimensions from the axes.
@@ -861,9 +564,13 @@ impl Fdb {
         out
     }
 
-    /// Drop reader-side caches so later flushes become visible.
+    /// Drop reader-side caches so later flushes become visible. Pooled
+    /// catalogue sessions are dropped too — their caches are as stale as
+    /// the main client's — and re-minted from the (now invalidated)
+    /// catalogue on the next batched retrieve.
     pub fn invalidate_preload(&mut self, ds: &Key) {
         self.catalogue.invalidate_preload(ds);
+        self.engine.clear_catalogue_sessions();
     }
 
     /// Read a handle's bytes through the Store. A handle minted by a
@@ -892,118 +599,9 @@ impl Fdb {
         // `ds` only — state for OTHER datasets must survive exactly as
         // it does at depth 1. The main store already unlinked the files,
         // so session wipes find nothing on disk.
-        for s in &mut self.sessions {
-            s.wipe_dataset(ds).await;
-        }
+        self.engine.wipe_store_sessions(ds).await;
         self.catalogue.deregister_dataset(ds).await;
         removed
     }
 }
 
-/// A single-producer single-consumer in-process queue connecting the
-/// two halves of the retrieve pipeline. Waker-based so the consumer
-/// suspends cleanly while the producer awaits backend I/O.
-struct Pipe<T> {
-    queue: RefCell<VecDeque<T>>,
-    closed: Cell<bool>,
-    waker: RefCell<Option<Waker>>,
-}
-
-impl<T> Pipe<T> {
-    fn new() -> Pipe<T> {
-        Pipe {
-            queue: RefCell::new(VecDeque::new()),
-            closed: Cell::new(false),
-            waker: RefCell::new(None),
-        }
-    }
-
-    fn push(&self, item: T) {
-        self.queue.borrow_mut().push_back(item);
-        if let Some(w) = self.waker.borrow_mut().take() {
-            w.wake();
-        }
-    }
-
-    fn close(&self) {
-        self.closed.set(true);
-        if let Some(w) = self.waker.borrow_mut().take() {
-            w.wake();
-        }
-    }
-
-    fn pop(&self) -> Pop<'_, T> {
-        Pop { pipe: self }
-    }
-}
-
-struct Pop<'a, T> {
-    pipe: &'a Pipe<T>,
-}
-
-impl<'a, T> std::future::Future for Pop<'a, T> {
-    type Output = Option<T>;
-
-    fn poll(
-        self: std::pin::Pin<&mut Self>,
-        cx: &mut std::task::Context<'_>,
-    ) -> std::task::Poll<Option<T>> {
-        if let Some(item) = self.pipe.queue.borrow_mut().pop_front() {
-            return std::task::Poll::Ready(Some(item));
-        }
-        if self.pipe.closed.get() {
-            return std::task::Poll::Ready(None);
-        }
-        *self.pipe.waker.borrow_mut() = Some(cx.waker().clone());
-        std::task::Poll::Pending
-    }
-}
-
-/// A one-shot value slot connecting the lookup task to a per-field read
-/// task in the fan-out engine: the producer `put`s exactly once, the
-/// single consumer `take().await`s it. Waker-based so the consumer
-/// suspends cleanly while the catalogue client is still looking up
-/// earlier identifiers.
-struct Slot<T> {
-    value: RefCell<Option<T>>,
-    waker: RefCell<Option<Waker>>,
-}
-
-impl<T> Slot<T> {
-    fn new() -> Slot<T> {
-        Slot {
-            value: RefCell::new(None),
-            waker: RefCell::new(None),
-        }
-    }
-
-    fn put(&self, value: T) {
-        *self.value.borrow_mut() = Some(value);
-        if let Some(w) = self.waker.borrow_mut().take() {
-            w.wake();
-        }
-    }
-
-    fn take(&self) -> TakeSlot<'_, T> {
-        TakeSlot { slot: self }
-    }
-}
-
-struct TakeSlot<'a, T> {
-    slot: &'a Slot<T>,
-}
-
-impl<'a, T> std::future::Future for TakeSlot<'a, T> {
-    type Output = T;
-
-    fn poll(
-        self: std::pin::Pin<&mut Self>,
-        cx: &mut std::task::Context<'_>,
-    ) -> std::task::Poll<T> {
-        if let Some(value) = self.slot.value.borrow_mut().take() {
-            return std::task::Poll::Ready(value);
-        }
-        *self.slot.waker.borrow_mut() = Some(cx.waker().clone());
-        std::task::Poll::Pending
-    }
-}

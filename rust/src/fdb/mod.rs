@@ -46,6 +46,7 @@ pub mod admin;
 pub mod backend;
 pub mod builder;
 pub mod datahandle;
+pub(crate) mod engine;
 pub mod fault;
 pub mod fdb;
 pub mod key;
@@ -79,7 +80,8 @@ pub mod s3 {
 pub mod wrappers;
 
 pub use backend::{
-    Catalogue, NullCatalogue, NullStore, SharedNullCatalogue, Store, StoreSession,
+    Catalogue, CatalogueSession, NullCatalogue, NullStore, SharedNullCatalogue, Store,
+    StoreSession,
 };
 pub use builder::{BackendConfig, FdbBuilder, IoProfile};
 pub use fault::{FaultCatalogue, FaultPlan, FaultStore, RecoveryStats};

@@ -251,6 +251,126 @@ impl ReadPlan {
     }
 }
 
+/// One container's open (still-growing) run inside a [`StreamPlanner`].
+struct OpenRun {
+    proto: FieldLocation,
+    start: u64,
+    end: u64,
+    fields: Vec<(usize, u64, u64)>,
+    /// first-seen order, so [`StreamPlanner::finish`] drains
+    /// deterministically
+    seq: u64,
+}
+
+/// The incremental twin of [`ReadPlan::build`]: locations are pushed
+/// one at a time as the catalogue resolves them, and a merged range is
+/// emitted the moment its run can no longer grow — so the engine can
+/// have the range *in flight* while later lookups are still resolving
+/// (streaming plan execution), instead of waiting for the full location
+/// set.
+///
+/// One run stays open **per container** (an I/O-depth writer round-
+/// robins a batch across its session data files, so consecutive
+/// arrivals alternate containers; a single global run would flush on
+/// every switch and plan nothing but singletons). Merging uses the same
+/// `gap`/`max_read` rules as the batch planner; when per-container
+/// arrivals are offset-ascending — the common case, batches retrieve in
+/// archive order — the emitted ranges are identical to the batch plan's.
+/// Out-of-order arrivals only cost extra ops (the run flushes and
+/// reopens), never wrong bytes.
+pub struct StreamPlanner {
+    gap: u64,
+    max_read: u64,
+    open: HashMap<Container, OpenRun>,
+    next_seq: u64,
+    ops_in: u64,
+    ops_out: u64,
+    read_through: u64,
+}
+
+impl StreamPlanner {
+    pub fn new(gap: u64, max_read: u64) -> StreamPlanner {
+        StreamPlanner {
+            gap,
+            max_read,
+            open: HashMap::new(),
+            next_seq: 0,
+            ops_in: 0,
+            ops_out: 0,
+            read_through: 0,
+        }
+    }
+
+    fn close(&mut self, run: OpenRun) -> PlannedRead {
+        self.ops_out += 1;
+        PlannedRead {
+            handle: ranged_handle(&run.proto, run.start, run.end - run.start),
+            fields: run.fields,
+        }
+    }
+
+    /// Feed the next resolved `(input position, location)`. Returns a
+    /// ranged read ready to issue if this arrival sealed a run (its
+    /// container's run could not absorb it), `None` if it merged or
+    /// opened a new run.
+    pub fn push(&mut self, pos: usize, loc: &FieldLocation) -> Option<PlannedRead> {
+        self.ops_in += 1;
+        let (key, off, len) = classify(pos, loc);
+        let fresh = |seq: u64| OpenRun {
+            proto: loc.clone(),
+            start: off,
+            end: off + len,
+            fields: vec![(pos, 0, len)],
+            seq,
+        };
+        let sealed = match self.open.entry(key) {
+            std::collections::hash_map::Entry::Vacant(v) => {
+                v.insert(fresh(self.next_seq));
+                self.next_seq += 1;
+                None
+            }
+            std::collections::hash_map::Entry::Occupied(mut o) => {
+                let run = o.get_mut();
+                let new_end = run.end.max(off + len);
+                let mergeable = off >= run.start
+                    && off <= run.end.saturating_add(self.gap)
+                    && (self.max_read == 0 || new_end - run.start <= self.max_read);
+                if mergeable {
+                    self.read_through += off.saturating_sub(run.end);
+                    run.fields.push((pos, off - run.start, len));
+                    run.end = new_end;
+                    None
+                } else {
+                    // seal the run, reopen the container at this member
+                    let seq = run.seq;
+                    Some(std::mem::replace(run, fresh(seq)))
+                }
+            }
+        };
+        sealed.map(|r| self.close(r))
+    }
+
+    /// Seal and return every still-open run, in container first-seen
+    /// order. After this the planner is drained; [`StreamPlanner::stats`]
+    /// is complete.
+    pub fn finish(&mut self) -> Vec<PlannedRead> {
+        let mut runs: Vec<OpenRun> = self.open.drain().map(|(_, r)| r).collect();
+        runs.sort_by_key(|r| r.seq);
+        runs.into_iter().map(|r| self.close(r)).collect()
+    }
+
+    /// Plan counters. The `ops_in == ops_out + ops_merged` invariant
+    /// holds once [`StreamPlanner::finish`] has drained the open runs.
+    pub fn stats(&self) -> PlanStats {
+        PlanStats {
+            ops_in: self.ops_in,
+            ops_out: self.ops_out,
+            ops_merged: self.ops_in - self.ops_out - self.open.len() as u64,
+            bytes_read_through: self.read_through,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -372,5 +492,91 @@ mod tests {
         assert_eq!(p.reads.len(), 1);
         assert_eq!(p.reads[0].handle.total_len(), 100);
         assert_eq!(p.stats.bytes_read_through, 0);
+    }
+
+    /// Run a location list through the streaming planner, collecting
+    /// every emitted range (push-time and finish-time).
+    fn stream(locs: &[FieldLocation], gap: u64, max: u64) -> (Vec<PlannedRead>, PlanStats) {
+        let mut sp = StreamPlanner::new(gap, max);
+        let mut out = Vec::new();
+        for (pos, loc) in locs.iter().enumerate() {
+            out.extend(sp.push(pos, loc));
+        }
+        out.extend(sp.finish());
+        (out, sp.stats())
+    }
+
+    #[test]
+    fn stream_matches_batch_plan_on_ascending_arrivals() {
+        // interleaved containers, each offset-ascending — exactly what a
+        // depth-N writer's round-robin layout hands the resolve phase.
+        // The streaming plan must equal the batch plan range for range.
+        let locs = vec![
+            posix("/a", 0, 100),
+            posix("/b", 0, 100),
+            posix("/a", 100, 50),
+            posix("/b", 132, 32), // 32-byte hole on /b
+            posix("/a", 150, 25),
+        ];
+        let fields: Vec<(usize, FieldLocation)> = locs.iter().cloned().enumerate().collect();
+        let batch = ReadPlan::build(&fields, 64, 0);
+        let (reads, stats) = stream(&locs, 64, 0);
+        assert_eq!(reads.len(), batch.reads.len());
+        for (s, b) in reads.iter().zip(&batch.reads) {
+            assert_eq!(s.handle, b.handle);
+            assert_eq!(s.fields, b.fields);
+        }
+        assert_eq!(stats, batch.stats);
+        assert_eq!(stats.ops_in, stats.ops_out + stats.ops_merged);
+        assert_eq!(stats.bytes_read_through, 32);
+    }
+
+    #[test]
+    fn stream_emits_runs_early_on_gap_and_cap_breaks() {
+        // gap break mid-stream: the sealed run surfaces from push(), not
+        // finish() — that early emission is what execution overlaps with
+        let mut sp = StreamPlanner::new(16, 0);
+        assert!(sp.push(0, &posix("/f", 0, 100)).is_none());
+        let sealed = sp.push(1, &posix("/f", 200, 10)).expect("hole 100 > gap 16 seals");
+        assert_eq!(sealed.fields, vec![(0, 0, 100)]);
+        // cap break: run would exceed max_read
+        let mut sp = StreamPlanner::new(0, 150);
+        assert!(sp.push(0, &posix("/f", 0, 100)).is_none());
+        let sealed = sp.push(1, &posix("/f", 100, 100)).expect("cap 150 seals");
+        assert_eq!(sealed.handle.total_len(), 100);
+        let rest = sp.finish();
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].fields, vec![(1, 0, 100)]);
+        assert_eq!(sp.stats().ops_out, 2);
+        assert_eq!(sp.stats().ops_merged, 0);
+    }
+
+    #[test]
+    fn stream_out_of_order_arrival_costs_ops_not_bytes() {
+        // off < run.start reopens the run: more ops than the batch plan,
+        // but every field still covered exactly once
+        let locs = vec![posix("/f", 100, 50), posix("/f", 0, 50)];
+        let (reads, stats) = stream(&locs, 1 << 20, 0);
+        assert_eq!(reads.len(), 2);
+        assert_eq!(reads[0].fields, vec![(0, 0, 50)]);
+        assert_eq!(reads[1].fields, vec![(1, 0, 50)]);
+        assert_eq!(stats.ops_in, stats.ops_out + stats.ops_merged);
+        let covered: u64 = reads.iter().map(|r| r.handle.total_len()).sum();
+        assert_eq!(covered, 100);
+    }
+
+    #[test]
+    fn stream_finish_drains_in_container_first_seen_order() {
+        let locs = vec![
+            posix("/c", 0, 10),
+            posix("/a", 0, 10),
+            posix("/b", 0, 10),
+        ];
+        let (reads, stats) = stream(&locs, 0, 0);
+        assert_eq!(reads.len(), 3);
+        assert_eq!(reads[0].fields, vec![(0, 0, 10)]);
+        assert_eq!(reads[1].fields, vec![(1, 0, 10)]);
+        assert_eq!(reads[2].fields, vec![(2, 0, 10)]);
+        assert_eq!(stats.ops_merged, 0);
     }
 }

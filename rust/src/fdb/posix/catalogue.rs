@@ -68,6 +68,19 @@ pub struct PosixCatalogue {
     /// appends an fdatasync'd WAL intent before mutating the in-memory
     /// index, so a crashed producer's unflushed entries are recoverable
     durable: bool,
+    /// inside an archive group ([`crate::fdb::backend::Catalogue::begin_archive_group`]):
+    /// durable intents append WITHOUT their per-op fdatasync and the
+    /// dataset is marked dirty; `end_archive_group` issues ONE barrier
+    /// per dirty WAL — group commit. Crash semantics are unchanged: the
+    /// batch is only reported archived after the group barrier, and an
+    /// intent is never fdatasync'd after its index mutation *becomes
+    /// observable* (nothing is observable until `archive_many` returns).
+    in_group: bool,
+    /// datasets whose WAL took un-synced intents in the current group
+    group_dirty: std::collections::HashSet<String>,
+    /// WAL fdatasync barriers issued so far (per-intent + group + commit
+    /// watermarks) — observability for the group-commit tests
+    wal_syncs: u64,
 }
 
 impl PosixCatalogue {
@@ -81,7 +94,17 @@ impl PosixCatalogue {
             index_cache_on: false,
             index_cache: HashMap::new(),
             durable: false,
+            in_group: false,
+            group_dirty: std::collections::HashSet::new(),
+            wal_syncs: 0,
         }
+    }
+
+    /// WAL fdatasync barriers issued so far. A durable N-field
+    /// `archive_many` batch costs 1 (group commit); N single-field
+    /// `archive` calls cost N.
+    pub fn wal_sync_count(&self) -> u64 {
+        self.wal_syncs
     }
 
     /// Enable reader-side index-blob caching (the real FDB loads indexes
@@ -233,9 +256,12 @@ impl PosixCatalogue {
         let ec = elem.canonical();
         // durable mode: log the intent (fdatasync'd) BEFORE any in-memory
         // mutation, so an entry is either recoverable from the WAL or was
-        // never indexed — a crash can't leave an unlogged index entry
+        // never indexed — a crash can't leave an unlogged index entry.
+        // Inside an archive group the per-intent barrier is deferred to
+        // `end_archive_group` (one fdatasync per batch, not per field).
         if self.durable {
-            let (wal_fd, seq) = self.ensure_wal(&ds.canonical()).await?;
+            let dsc = ds.canonical();
+            let (wal_fd, seq) = self.ensure_wal(&dsc).await?;
             let rec = WalRecord::Intent {
                 seq,
                 colloc: cc.clone(),
@@ -249,10 +275,15 @@ impl PosixCatalogue {
                 .write(&wal_fd, &rec)
                 .await
                 .map_err(|e| fs_err("write", wal_fd.path(), e))?;
-            self.client
-                .fdatasync(&wal_fd)
-                .await
-                .map_err(|e| fs_err("fdatasync", wal_fd.path(), e))?;
+            if self.in_group {
+                self.group_dirty.insert(dsc);
+            } else {
+                self.client
+                    .fdatasync(&wal_fd)
+                    .await
+                    .map_err(|e| fs_err("fdatasync", wal_fd.path(), e))?;
+                self.wal_syncs += 1;
+            }
         }
         let state = self.write_state.get_mut(&ds.canonical()).unwrap();
         let cs = state.collocs.get_mut(&cc).unwrap();
@@ -295,6 +326,34 @@ impl PosixCatalogue {
         let seq = state.wal_seq;
         state.wal_seq += 1;
         Ok((state.wal_fd.clone().unwrap(), seq))
+    }
+
+    /// Enter group-commit mode: durable intents appended until
+    /// [`Self::end_archive_group`] skip their per-op fdatasync.
+    pub fn begin_archive_group(&mut self) {
+        self.in_group = true;
+    }
+
+    /// Leave group-commit mode, issuing ONE fdatasync barrier per WAL
+    /// that took intents during the group. Nothing archived in the group
+    /// may be reported durable until this returns.
+    pub async fn end_archive_group(&mut self) -> Result<(), FdbError> {
+        self.in_group = false;
+        let dirty: Vec<String> = self.group_dirty.drain().collect();
+        for dsc in dirty {
+            let wal_fd = self
+                .write_state
+                .get(&dsc)
+                .and_then(|state| state.wal_fd.clone());
+            if let Some(wal_fd) = wal_fd {
+                self.client
+                    .fdatasync(&wal_fd)
+                    .await
+                    .map_err(|e| fs_err("fdatasync", wal_fd.path(), e))?;
+                self.wal_syncs += 1;
+            }
+        }
+        Ok(())
     }
 
     /// Catalogue flush(): persist partial indexes, then sub-TOC entries
@@ -414,6 +473,7 @@ impl PosixCatalogue {
                     .fdatasync(&wal_fd)
                     .await
                     .map_err(|e| fs_err("fdatasync", wal_fd.path(), e))?;
+                self.wal_syncs += 1;
             }
         }
         Ok(())
@@ -860,6 +920,28 @@ impl crate::fdb::backend::Catalogue for PosixCatalogue {
 
     fn flush<'a>(&'a mut self) -> crate::fdb::backend::LocalBoxFuture<'a, Result<(), FdbError>> {
         Box::pin(PosixCatalogue::flush(self))
+    }
+
+    fn session(&mut self) -> Option<Box<dyn crate::fdb::backend::CatalogueSession>> {
+        // a forked client is a new reader process: lookups go through the
+        // published TOC chain (`preloaded`), which is exactly what the
+        // main client's reads consult too — read-equivalent by
+        // construction, with its own client for concurrent lookups
+        Some(Box::new(
+            PosixCatalogue::new(self.client.fork(), &self.root, self.schema.clone())
+                .with_index_cache(self.index_cache_on)
+                .with_durable(self.durable),
+        ))
+    }
+
+    fn begin_archive_group(&mut self) {
+        PosixCatalogue::begin_archive_group(self);
+    }
+
+    fn end_archive_group<'a>(
+        &'a mut self,
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, Result<(), FdbError>> {
+        Box::pin(PosixCatalogue::end_archive_group(self))
     }
 
     fn close<'a>(&'a mut self) -> crate::fdb::backend::LocalBoxFuture<'a, Result<(), FdbError>> {

@@ -310,6 +310,18 @@ impl crate::fdb::backend::Catalogue for RadosCatalogue {
         })
     }
 
+    fn session(&mut self) -> Option<Box<dyn crate::fdb::backend::CatalogueSession>> {
+        // index omaps live in the shared pool and inserts are immediately
+        // visible; a forked client over the same `Rc<CephPool>` is
+        // read-equivalent (its axis caches start cold, which only costs
+        // time, never answers)
+        Some(Box::new(RadosCatalogue::new(
+            self.client.fork(),
+            &self.pool,
+            self.schema.clone(),
+        )))
+    }
+
     fn retrieve<'a>(
         &'a mut self,
         ds: &'a Key,

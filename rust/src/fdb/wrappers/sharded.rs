@@ -64,6 +64,40 @@ impl Catalogue for ShardedCatalogue {
         })
     }
 
+    fn session(&mut self) -> Option<Box<dyn crate::fdb::backend::CatalogueSession>> {
+        // a session is a sharded catalogue of every shard's session —
+        // routing is pure hashing, so the composed session resolves each
+        // lookup on the same shard the main client would. All-or-nothing:
+        // one session-less shard would silently re-route its slice to a
+        // mismatched client, so we decline instead.
+        let mut shards = Vec::with_capacity(self.shards.len());
+        for shard in &mut self.shards {
+            shards.push(shard.session()?.into_catalogue());
+        }
+        Some(Box::new(ShardedCatalogue::new(shards)))
+    }
+
+    fn begin_archive_group(&mut self) {
+        for shard in &mut self.shards {
+            shard.begin_archive_group();
+        }
+    }
+
+    fn end_archive_group<'a>(&'a mut self) -> LocalBoxFuture<'a, Result<(), FdbError>> {
+        Box::pin(async move {
+            // barrier every shard even if an earlier one fails: each
+            // holds un-synced intents for its own slice of the batch
+            let mut first_err = Ok(());
+            for shard in &mut self.shards {
+                let r = shard.end_archive_group().await;
+                if first_err.is_ok() {
+                    first_err = r;
+                }
+            }
+            first_err
+        })
+    }
+
     fn close<'a>(&'a mut self) -> LocalBoxFuture<'a, Result<(), FdbError>> {
         Box::pin(async move {
             for shard in &mut self.shards {

@@ -70,6 +70,7 @@ impl OpClass {
 #[derive(Default)]
 struct TraceInner {
     spans: BTreeMap<OpClass, (SimTime, u64)>, // (total time, count)
+    timeline: BTreeMap<OpClass, (SimTime, SimTime)>, // (earliest start, latest end)
 }
 
 /// Shared trace collector. Clone-cheap; one per benchmark run.
@@ -89,6 +90,25 @@ impl Trace {
         let e = inner.spans.entry(class).or_insert((SimTime::ZERO, 0));
         e.0 += dur;
         e.1 += 1;
+    }
+
+    /// Observe the absolute window `[start, end]` of one span under
+    /// `class`. Timeline-only: per-class totals/counts come from
+    /// [`Trace::record`], which subtracts attributed sub-costs (lock
+    /// time) — the timeline keeps the raw wall-clock endpoints so
+    /// overlap between classes (did the first data read start before
+    /// the last index lookup ended?) stays observable.
+    pub fn observe_span(&self, class: OpClass, start: SimTime, end: SimTime) {
+        let mut inner = self.inner.borrow_mut();
+        let e = inner.timeline.entry(class).or_insert((start, end));
+        e.0 = e.0.min(start);
+        e.1 = e.1.max(end);
+    }
+
+    /// The observed `(earliest start, latest end)` window of `class`,
+    /// or `None` if no span of that class was ever observed.
+    pub fn span_window(&self, class: OpClass) -> Option<(SimTime, SimTime)> {
+        self.inner.borrow().timeline.get(&class).copied()
     }
 
     pub fn total(&self, class: OpClass) -> SimTime {
@@ -182,6 +202,22 @@ mod tests {
         let t = Trace::new();
         assert!(t.breakdown().is_empty());
         assert_eq!(t.grand_total(), SimTime::ZERO);
+    }
+
+    #[test]
+    fn span_window_tracks_extremes_without_touching_totals() {
+        let t = Trace::new();
+        assert_eq!(t.span_window(OpClass::DataRead), None);
+        t.observe_span(OpClass::DataRead, SimTime::micros(10), SimTime::micros(20));
+        t.observe_span(OpClass::DataRead, SimTime::micros(5), SimTime::micros(12));
+        t.observe_span(OpClass::DataRead, SimTime::micros(15), SimTime::micros(40));
+        assert_eq!(
+            t.span_window(OpClass::DataRead),
+            Some((SimTime::micros(5), SimTime::micros(40)))
+        );
+        // timeline observation is not a `record`: totals stay empty
+        assert_eq!(t.total(OpClass::DataRead), SimTime::ZERO);
+        assert_eq!(t.count(OpClass::DataRead), 0);
     }
 
     #[test]

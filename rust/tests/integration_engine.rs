@@ -1,0 +1,384 @@
+//! Unified I/O-engine integration tests.
+//!
+//! Property: every engine path — batched archive, batched retrieve
+//! (uncoalesced and streaming-coalesced), with and without catalogue
+//! sessions — returns **byte- and order-identical** results to the
+//! serial depth-1/gap-0 paths across a (depth × coalesce_gap ×
+//! wrapper-stack) grid, with `io_inflight_peak() <= depth` covering the
+//! catalogue-session lookups too. Plus the two trace-level acceptance
+//! checks: catalogue lookups genuinely run at depth (the IndexRead wall
+//! window is narrower than its summed busy time), and streaming plan
+//! execution genuinely overlaps resolution with range issue (the first
+//! DataRead span begins before the last index lookup completes). And
+//! the group-commit WAL property: a durable N-field `archive_many`
+//! costs ONE fdatasync barrier instead of N, yet stays exactly as
+//! recoverable after a crash.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use fdbr::bench::scenario::{deploy, RedundancyOpt, SystemKind, SystemUnderTest, WrapperOpt};
+use fdbr::fdb::{Fdb, IoProfile, Key, Request};
+use fdbr::hw::profiles::Testbed;
+use fdbr::sim::exec::Sim;
+use fdbr::sim::trace::{OpClass, Trace};
+use fdbr::util::content::Bytes;
+use fdbr::util::rng::Rng;
+
+/// One randomized batched workload: fields addressed by (step, param)
+/// with per-field payload sizes (duplicates re-archive in input order).
+#[derive(Clone, Debug)]
+struct Workload {
+    fields: Vec<(u32, u32, u64)>,
+}
+
+fn gen_workload(rng: &mut Rng) -> Workload {
+    let n = 4 + rng.below(12) as usize;
+    let fields = (0..n)
+        .map(|_| {
+            (
+                1 + rng.below(4) as u32,
+                rng.below(4) as u32,
+                64 + rng.below(6000),
+            )
+        })
+        .collect();
+    Workload { fields }
+}
+
+fn field_id(step: u32, param: u32) -> Key {
+    fdbr::bench::hammer::field_id(0, step, param, 0)
+}
+
+fn payload(step: u32, param: u32, size: u64) -> Bytes {
+    Bytes::virt(size, (u64::from(step) << 32) | (u64::from(param) << 8) | (size & 0xff))
+}
+
+/// FNV-1a over materialized bytes (payloads here are tiny).
+fn digest(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Everything observable after the batched cycle, **in order**.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+struct Fingerprint {
+    fetched: Vec<(String, u64, u64)>,
+    listed: Vec<String>,
+    inflight_peak_ok: bool,
+    plan_invariant_ok: bool,
+}
+
+/// Archive the workload as ONE `archive_many` through `w` (flush +
+/// close), then fetch every unique identifier in one `retrieve_many`
+/// through `r`. Returns the ordered fingerprint.
+fn run_batched(sim: &Sim, w: Fdb, r: Fdb, wl: &Workload) -> Fingerprint {
+    let out = Rc::new(RefCell::new(Fingerprint::default()));
+    let out2 = out.clone();
+    let wl = wl.clone();
+    let mut w = w;
+    let mut r = r;
+    sim.spawn(async move {
+        let mut batch: Vec<(Key, Bytes)> = Vec::new();
+        let mut ids: Vec<Key> = Vec::new();
+        let mut seen = std::collections::BTreeSet::new();
+        for &(step, param, size) in &wl.fields {
+            let id = field_id(step, param);
+            batch.push((id.clone(), payload(step, param, size)));
+            if seen.insert(id.canonical()) {
+                ids.push(id);
+            }
+        }
+        let depth = w.io_profile().depth;
+        w.archive_many(batch).await.unwrap();
+        w.flush().await.unwrap();
+        w.close().await.expect("close");
+        let w_peak_ok = w.io_inflight_peak() <= depth.max(1);
+        let fetched = r.retrieve_many(&ids).await.unwrap();
+        let ps = r.plan_stats();
+        let mut fp = Fingerprint {
+            inflight_peak_ok: w_peak_ok && r.io_inflight_peak() <= depth.max(1),
+            plan_invariant_ok: ps.ops_in == ps.ops_out + ps.ops_merged,
+            ..Fingerprint::default()
+        };
+        for (id, bytes) in &fetched {
+            let v = bytes.to_vec();
+            fp.fetched.push((id.canonical(), v.len() as u64, digest(&v)));
+        }
+        let ds = ids[0].project(&r.schema.dataset.clone()).unwrap();
+        let mut listed: Vec<String> = r
+            .list(&ds, &Request::parse("").unwrap())
+            .await
+            .iter()
+            .map(|(k, _)| k.canonical())
+            .collect();
+        listed.sort();
+        fp.listed = listed;
+        *out2.borrow_mut() = fp;
+    });
+    sim.run();
+    let fp = out.borrow().clone();
+    fp
+}
+
+#[test]
+fn engine_grid_equals_the_serial_baseline() {
+    // the satellite property: (depth × coalesce_gap × wrapper) grid —
+    // every engine path must be byte- and order-identical to the
+    // depth-1/gap-0 serial baseline of the same stack, with the
+    // in-flight peak (catalogue-session lookups included, they share
+    // the one semaphore) bounded by the configured depth throughout
+    let mut rng = Rng::new(0xE2612E);
+    let cases: Vec<Workload> = (0..2).map(|_| gen_workload(&mut rng)).collect();
+    let stacks = [
+        WrapperOpt::Bare,
+        WrapperOpt::Replicated(2),
+        WrapperOpt::Sharded(3),
+    ];
+    for wrapper in stacks {
+        let fingerprints = |depth: usize, gap: u64| -> Vec<Fingerprint> {
+            let io = IoProfile::depth(depth).with_coalesce_gap(gap);
+            let dep = deploy(Testbed::Gcp, SystemKind::Lustre, 2, 2, RedundancyOpt::None)
+                .with_wrapper(wrapper)
+                .with_io(io);
+            let nodes = dep.client_nodes();
+            cases
+                .iter()
+                .map(|wl| {
+                    let w = dep.fdb(&nodes[0]);
+                    let r = dep.fdb(&nodes[1]);
+                    run_batched(&dep.sim, w, r, wl)
+                })
+                .collect()
+        };
+        let base = fingerprints(1, 0);
+        assert!(base.iter().all(|fp| !fp.fetched.is_empty()));
+        for depth in [1usize, 2, 4] {
+            for gap in [0u64, 64 << 10] {
+                if depth == 1 && gap == 0 {
+                    continue;
+                }
+                assert_eq!(
+                    fingerprints(depth, gap),
+                    base,
+                    "{wrapper:?} depth {depth} gap {gap} must match the serial baseline"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn catalogue_lookups_run_at_the_configured_depth() {
+    // acceptance criterion: at depth > 1 with catalogue sessions, the
+    // batched lookups themselves fan out. Trace evidence: the IndexRead
+    // wall window (earliest start to latest end, raw) is strictly
+    // narrower than the summed IndexRead busy time — impossible for any
+    // serial lookup schedule, which always has window >= total.
+    let dep = deploy(Testbed::Gcp, SystemKind::Lustre, 2, 2, RedundancyOpt::None)
+        .with_io(IoProfile::depth(4));
+    let nodes = dep.client_nodes();
+    let mut w = dep.fdb(&nodes[0]);
+    let trace = Trace::new();
+    let mut r = dep.fdb_traced(&nodes[1], &trace);
+    let checked = Rc::new(RefCell::new(false));
+    let checked2 = checked.clone();
+    dep.sim.spawn(async move {
+        let batch: Vec<(Key, Bytes)> = (0..24u32)
+            .map(|i| (field_id(1 + i / 8, i % 8), Bytes::virt(16 << 10, u64::from(i))))
+            .collect();
+        let ids: Vec<Key> = batch.iter().map(|(id, _)| id.clone()).collect();
+        w.archive_many(batch).await.unwrap();
+        w.flush().await.unwrap();
+        w.close().await.expect("close");
+        let fetched = r.retrieve_many(&ids).await.unwrap();
+        assert_eq!(fetched.len(), ids.len());
+        assert_eq!(r.io_sessions(), 4, "full store-session pool");
+        assert!(r.io_inflight_peak() <= 4, "peak {}", r.io_inflight_peak());
+        *checked2.borrow_mut() = true;
+    });
+    dep.sim.run();
+    assert!(*checked.borrow(), "scenario ran");
+    assert_eq!(trace.count(OpClass::IndexRead), 24, "one lookup per field");
+    let (start, end) = trace
+        .span_window(OpClass::IndexRead)
+        .expect("engine lookups record raw windows");
+    let window = end - start;
+    let total = trace.total(OpClass::IndexRead);
+    assert!(
+        window < total,
+        "lookups never overlapped: window {:?} >= busy total {:?}",
+        window,
+        total
+    );
+}
+
+#[test]
+fn streaming_issues_ranges_while_lookups_still_resolve() {
+    // acceptance criterion for streaming plan execution: the first
+    // DataRead span begins BEFORE the last index lookup completes at
+    // depth > 1 — resolve overlaps execute instead of forming a
+    // barrier. coalesce_max is set just above the field size so every
+    // run seals (and becomes issuable) the moment its successor
+    // resolves, not at end-of-batch.
+    let field = 64u64 << 10;
+    let dep = deploy(Testbed::Gcp, SystemKind::Lustre, 2, 2, RedundancyOpt::None).with_io(
+        IoProfile::depth(4)
+            .with_coalesce_gap(4096)
+            .with_coalesce_max(field + (32 << 10)),
+    );
+    let nodes = dep.client_nodes();
+    let mut w = dep.fdb(&nodes[0]);
+    let trace = Trace::new();
+    let mut r = dep.fdb_traced(&nodes[1], &trace);
+    let checked = Rc::new(RefCell::new(false));
+    let checked2 = checked.clone();
+    dep.sim.spawn(async move {
+        let batch: Vec<(Key, Bytes)> = (0..24u32)
+            .map(|i| (field_id(1 + i / 8, i % 8), Bytes::virt(field, u64::from(i))))
+            .collect();
+        let ids: Vec<Key> = batch.iter().map(|(id, _)| id.clone()).collect();
+        w.archive_many(batch).await.unwrap();
+        w.flush().await.unwrap();
+        w.close().await.expect("close");
+        let fetched = r.retrieve_many(&ids).await.unwrap();
+        assert_eq!(fetched.len(), ids.len());
+        for (i, (id, bytes)) in fetched.iter().enumerate() {
+            assert_eq!(id, &ids[i], "input order preserved");
+            assert!(
+                bytes.content_eq(&Bytes::virt(field, i as u64)),
+                "byte-identical payload for {id}"
+            );
+        }
+        let ps = r.plan_stats();
+        assert_eq!(ps.ops_in, 24, "every field entered the planner");
+        assert_eq!(
+            ps.ops_in,
+            ps.ops_out + ps.ops_merged,
+            "plan counters must balance"
+        );
+        assert!(r.io_inflight_peak() <= 4, "peak {}", r.io_inflight_peak());
+        *checked2.borrow_mut() = true;
+    });
+    dep.sim.run();
+    assert!(*checked.borrow(), "scenario ran");
+    let (first_read, _) = trace
+        .span_window(OpClass::DataRead)
+        .expect("streaming workers record raw windows");
+    let (_, last_lookup) = trace
+        .span_window(OpClass::IndexRead)
+        .expect("engine lookups record raw windows");
+    assert!(
+        first_read < last_lookup,
+        "no resolve/execute overlap: first data read at {:?}, lookups done at {:?}",
+        first_read,
+        last_lookup
+    );
+}
+
+#[test]
+fn group_commit_syncs_each_wal_once_per_batch() {
+    // satellite: a durable N-field batch inside an archive group costs
+    // ONE fdatasync barrier on the dataset's WAL; the same N fields as
+    // bare archives cost N. Counted directly on the POSIX catalogue.
+    let dep = deploy(Testbed::Gcp, SystemKind::Lustre, 2, 2, RedundancyOpt::None);
+    let SystemUnderTest::Lustre(fs) = &dep.system else {
+        unreachable!()
+    };
+    let node = dep.client_nodes()[0].clone();
+    let schema = fdbr::fdb::Schema::default_posix();
+    let mut grouped = fdbr::fdb::posix::catalogue::PosixCatalogue::new(
+        fs.client(&node),
+        "/idx-grouped",
+        schema.clone(),
+    )
+    .with_durable(true);
+    let mut bare = fdbr::fdb::posix::catalogue::PosixCatalogue::new(
+        fs.client(&node),
+        "/idx-bare",
+        schema.clone(),
+    )
+    .with_durable(true);
+    let counts = Rc::new(RefCell::new((0u64, 0u64)));
+    let counts2 = counts.clone();
+    let schema2 = schema.clone();
+    dep.sim.spawn(async move {
+        let n = 6u32;
+        let ids: Vec<Key> = (0..n).map(|i| field_id(1 + i / 4, i % 4)).collect();
+        let loc = fdbr::fdb::FieldLocation::Null { length: 512 };
+        grouped.begin_archive_group();
+        for id in &ids {
+            let (ds, colloc, elem) = schema2.split(id).unwrap();
+            grouped.archive(&ds, &colloc, &elem, &loc).await.unwrap();
+        }
+        grouped.end_archive_group().await.unwrap();
+        for id in &ids {
+            let (ds, colloc, elem) = schema2.split(id).unwrap();
+            bare.archive(&ds, &colloc, &elem, &loc).await.unwrap();
+        }
+        *counts2.borrow_mut() = (grouped.wal_sync_count(), bare.wal_sync_count());
+    });
+    dep.sim.run();
+    let (grouped_syncs, bare_syncs) = *counts.borrow();
+    assert_eq!(grouped_syncs, 1, "group commit: one barrier per batch");
+    assert_eq!(bare_syncs, 6, "bare durable archives: one barrier each");
+}
+
+#[test]
+fn group_committed_batch_recovers_after_a_crash() {
+    // end-to-end: a durable writer archives one engine batch at depth 4
+    // (store pass fanned out, catalogue pass group-committed) and dies
+    // without flush or close. The group barrier ran inside
+    // `archive_many`, so every intent is on disk: recovery must replay
+    // all of them and every field must read back byte-identical.
+    let field = 8u64 << 10;
+    let n = 12usize;
+    let dep = deploy(Testbed::Gcp, SystemKind::Lustre, 2, 2, RedundancyOpt::None)
+        .with_io(IoProfile::depth(4).with_durable(true));
+    let nodes = dep.client_nodes();
+    let ids: Vec<Key> = (0..n as u32).map(|i| field_id(1 + i / 4, i % 4)).collect();
+    let mut w = dep.fdb(&nodes[0]);
+    {
+        let ids = ids.clone();
+        dep.sim.spawn(async move {
+            let batch: Vec<(Key, Bytes)> = ids
+                .iter()
+                .enumerate()
+                .map(|(i, id)| (id.clone(), Bytes::virt(field, i as u64)))
+                .collect();
+            w.archive_many(batch).await.unwrap();
+            drop(w); // crash: no flush, no close — only the WAL survives
+        });
+        dep.sim.run();
+    }
+    let mut rec = dep.fdb(&nodes[1]);
+    let ds = ids[0].project(&rec.schema.dataset.clone()).unwrap();
+    let outcome = Rc::new(RefCell::new((0usize, 0usize)));
+    let outcome2 = outcome.clone();
+    {
+        let ids = ids.clone();
+        dep.sim.spawn(async move {
+            let stats = rec.recover(&ds).await.expect("recover");
+            rec.flush().await.expect("publish recovered index");
+            rec.close().await.expect("close");
+            rec.invalidate_preload(&ds);
+            let found = rec.retrieve_many(&ids).await.expect("retrieve_many");
+            let mut verified = 0usize;
+            for (i, (id, bytes)) in found.iter().enumerate() {
+                assert_eq!(id, &ids[i]);
+                if bytes.content_eq(&Bytes::virt(field, i as u64)) {
+                    verified += 1;
+                }
+            }
+            *outcome2.borrow_mut() = (stats.replayed, verified);
+        });
+        dep.sim.run();
+    }
+    let (replayed, verified) = *outcome.borrow();
+    assert_eq!(replayed, n, "every group-committed intent replays");
+    assert_eq!(verified, n, "every recovered field reads back byte-identical");
+}
