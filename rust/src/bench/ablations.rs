@@ -34,6 +34,7 @@ pub fn ablation_ids() -> Vec<&'static str> {
         "abl_coalesce",
         "abl_recovery",
         "abl_engine",
+        "abl_observe",
     ]
 }
 
@@ -48,6 +49,7 @@ pub fn run_ablation(id: &str, scale: f64) -> Option<Figure> {
         "abl_coalesce" => abl_coalesce(scale),
         "abl_recovery" => abl_recovery(scale),
         "abl_engine" => abl_engine(scale),
+        "abl_observe" => abl_observe(scale),
         _ => return None,
     })
 }
@@ -721,9 +723,195 @@ fn abl_engine(scale: f64) -> Figure {
     }
 }
 
+/// One observed run for `abl_observe`: archive + batched retrieve of a
+/// dense collocation on Lustre with the telemetry registry attached.
+/// `replicated` layers the 2-way replicated store with
+/// [`crate::fdb::wrappers::ReadPolicy::Fastest`] (the policy the
+/// per-replica read histograms feed); `fault` is an optional `--fault`
+/// spec wrapped around the base backend. Returns the run's registry.
+fn observe_run(
+    scale: f64,
+    depth: usize,
+    replicated: bool,
+    fault: Option<&str>,
+) -> crate::fdb::MetricsRegistry {
+    use super::scenario::WrapperOpt;
+    use crate::fdb::wrappers::ReadPolicy;
+    use crate::fdb::{FaultPlan, IoProfile, Key, MetricsRegistry};
+
+    let field: u64 = 64 << 10;
+    let reg = MetricsRegistry::new();
+    let mut dep = deploy(Testbed::Gcp, SystemKind::Lustre, 2, 2, RedundancyOpt::None)
+        .with_io(IoProfile::depth(depth).with_preload_indexes(true))
+        .with_metrics(&reg);
+    if replicated {
+        dep = dep
+            .with_wrapper(WrapperOpt::Replicated(2))
+            .with_read_policy(ReadPolicy::Fastest);
+    }
+    if let Some(spec) = fault {
+        dep = dep.with_fault(FaultPlan::parse(spec).expect("fault spec"));
+    }
+    let n = nops(scale, 2000);
+    let ids: Vec<Key> = (0..n)
+        .map(|i| super::hammer::field_id(0, 1 + (i / 16) as u32, (i % 16) as u32, 0))
+        .collect();
+    let nodes = dep.client_nodes();
+    let mut w = dep.fdb(&nodes[0]);
+    let batch: Vec<(Key, Bytes)> = ids
+        .iter()
+        .map(|id| (id.clone(), Bytes::virt(field, super::hammer::field_seed(id))))
+        .collect();
+    dep.sim.spawn(async move {
+        w.archive_many(batch).await.unwrap();
+        w.flush().await.unwrap();
+        w.close().await.expect("close");
+    });
+    dep.sim.run();
+    let mut r = dep.fdb(&nodes[1]);
+    let ids2 = ids.clone();
+    dep.sim.spawn(async move {
+        let fetched = r.retrieve_many(&ids2).await.unwrap();
+        assert_eq!(fetched.len(), ids2.len(), "every field found");
+        for (id, data) in &fetched {
+            let expect = Bytes::virt(field, super::hammer::field_seed(id));
+            assert!(data.content_eq(&expect), "bytes must match when observed");
+        }
+    });
+    dep.sim.run();
+    reg
+}
+
+/// Telemetry ablation (`BENCH_observe.json`): per-layer attribution vs
+/// blended aggregates, and the admission-wait/service split.
+///
+/// Leg 1 injects a `slow:read` fault into ONE replica of a 2-way
+/// replicated Lustre store read under `ReadPolicy::Fastest`. The fault
+/// plan's `only=4` clause targets the reader's replica-1 store: fault
+/// wrapper instances are numbered in build order and the run builds two
+/// FDB instances (writer: store r0 = 0, store r1 = 1, catalogue = 2;
+/// reader: 3, 4, 5). Per-replica histograms (`store.r1.posix.read` vs
+/// `store.r0.posix.read`) isolate the degraded replica while the
+/// top-level blended mean barely moves — EWMA routing sends reads to
+/// the healthy replica after the seed probes, which is exactly what
+/// aggregate stats hide.
+///
+/// Leg 2 sweeps `--io-depth` on the bare backend: the admission-wait
+/// histogram (`engine.wait.data-read`) shows semaphore queueing — p99
+/// wait is largest when the batch saturates the smallest depth — while
+/// the service histogram's tail grows with depth as concurrent reads
+/// contend for the NIC/OST pipes.
+fn abl_observe(scale: f64) -> Figure {
+    let p99_us = |reg: &crate::fdb::MetricsRegistry, name: &str| -> f64 {
+        reg.hist(name)
+            .map(|s| s.percentile(99.0) as f64 / 1e3)
+            .unwrap_or(0.0)
+    };
+    let mean_us = |reg: &crate::fdb::MetricsRegistry, name: &str| -> f64 {
+        reg.hist(name).map(|s| s.mean() / 1e3).unwrap_or(0.0)
+    };
+    let mut rows = Vec::new();
+
+    // leg 1: per-layer isolation of a degraded replica
+    for (x, fault) in [
+        ("healthy", None),
+        ("degraded-r1", Some("seed=42,slow:read:3000,only=4")),
+    ] {
+        let reg = observe_run(scale, 2, true, fault);
+        for (series, name) in [
+            ("r0 read p99", "store.r0.posix.read"),
+            ("r1 read p99", "store.r1.posix.read"),
+        ] {
+            rows.push(FigRow {
+                x: x.to_string(),
+                series: series.into(),
+                value: p99_us(&reg, name),
+                unit: "us",
+            });
+        }
+        rows.push(FigRow {
+            x: x.to_string(),
+            series: "blended read mean".into(),
+            value: mean_us(&reg, "engine.service.data-read"),
+            unit: "us",
+        });
+    }
+
+    // leg 2: admission wait vs service across queue depths
+    for depth in [2usize, 4, 16] {
+        let reg = observe_run(scale, depth, false, None);
+        let x = format!("depth {depth}");
+        rows.push(FigRow {
+            x: x.clone(),
+            series: "wait p99".into(),
+            value: p99_us(&reg, "engine.wait.data-read"),
+            unit: "us",
+        });
+        rows.push(FigRow {
+            x: x.clone(),
+            series: "service p99".into(),
+            value: p99_us(&reg, "engine.service.data-read"),
+            unit: "us",
+        });
+        rows.push(FigRow {
+            x,
+            series: "inflight peak".into(),
+            value: reg.gauge_value("engine.inflight_peak") as f64,
+            unit: "ops",
+        });
+    }
+    Figure {
+        id: "abl_observe",
+        title: "Telemetry: per-layer histograms vs blended aggregates; \
+                admission wait vs service",
+        expectation: "the slow replica's per-layer read p99 is >= 4x the healthy \
+                      replica's while the blended top-level mean moves < 2x; wait \
+                      p99 is largest where the batch saturates the smallest depth, \
+                      and the service tail grows with depth",
+        rows,
+        profiles: vec![],
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn observe_isolates_the_slow_replica_and_splits_wait_from_service() {
+        // the PR's acceptance bar: per-layer histograms find what the
+        // blended aggregate hides, and admission wait is measured apart
+        // from service time
+        let f = run_ablation("abl_observe", 0.05).unwrap();
+        let r0 = f.value("degraded-r1", "r0 read p99").unwrap();
+        let r1 = f.value("degraded-r1", "r1 read p99").unwrap();
+        assert!(
+            r1 >= 4.0 * r0,
+            "slow replica p99 ({r1:.0} us) must be >= 4x the healthy replica's ({r0:.0} us)"
+        );
+        let healthy = f.value("healthy", "blended read mean").unwrap();
+        let degraded = f.value("degraded-r1", "blended read mean").unwrap();
+        assert!(
+            degraded < 2.0 * healthy,
+            "blended mean must hide the slow replica: {degraded:.0} us vs healthy {healthy:.0} us"
+        );
+        // semaphore queueing is visible in the wait histogram: largest
+        // where the batch saturates the smallest depth
+        let w2 = f.value("depth 2", "wait p99").unwrap();
+        let w16 = f.value("depth 16", "wait p99").unwrap();
+        assert!(
+            w2 > w16,
+            "wait p99 at depth 2 ({w2:.0} us) must exceed depth 16 ({w16:.0} us)"
+        );
+        // while the service tail grows with depth (backend contention)
+        let s2 = f.value("depth 2", "service p99").unwrap();
+        let s16 = f.value("depth 16", "service p99").unwrap();
+        assert!(
+            s16 >= s2,
+            "service p99 must grow with depth: {s16:.0} us at 16 vs {s2:.0} us at 2"
+        );
+        assert!(f.value("depth 16", "inflight peak").unwrap() > f.value("depth 2", "inflight peak").unwrap());
+    }
 
     #[test]
     fn hash_oid_ablation_improves_latency() {

@@ -12,7 +12,7 @@ use std::rc::Rc;
 
 use super::scenario::{deploy, RedundancyOpt, SystemKind, WrapperOpt};
 use crate::fdb::fault::{FaultAction, FaultClass, FaultPlan, RecoveryStats};
-use crate::fdb::IoProfile;
+use crate::fdb::{IoProfile, MetricsRegistry};
 use crate::hw::profiles::Testbed;
 use crate::util::content::Bytes;
 
@@ -72,6 +72,25 @@ pub fn crash_archive_with_io(
     field_size: u64,
     io: IoProfile,
 ) -> CrashReport {
+    crash_archive_observed(kind, wrapper, seed, kill_after, nfields, field_size, io, None)
+}
+
+/// [`crash_archive_with_io`] with an optional telemetry registry
+/// attached to both the doomed writer and the recovering instance, so
+/// a run records the WAL-sync counters, the `recovery.*` replay
+/// counters, and the injected-fault outcome counts alongside the
+/// latency histograms (the `crash --metrics` path).
+#[allow(clippy::too_many_arguments)]
+pub fn crash_archive_observed(
+    kind: SystemKind,
+    wrapper: WrapperOpt,
+    seed: u64,
+    kill_after: u64,
+    nfields: usize,
+    field_size: u64,
+    io: IoProfile,
+    metrics: Option<&MetricsRegistry>,
+) -> CrashReport {
     let plan = FaultPlan::new(seed).with_rule(
         FaultClass::Write,
         FaultAction::FailStop { after: kill_after },
@@ -81,6 +100,9 @@ pub fn crash_archive_with_io(
         .with_wrapper(wrapper)
         .with_io(io)
         .with_fault(plan);
+    if let Some(reg) = metrics {
+        dep = dep.with_metrics(reg);
+    }
     let nodes = dep.client_nodes();
     let ids: Vec<_> = (0..nfields)
         .map(|i| super::hammer::field_id(0, 1 + (i / 16) as u32, (i % 16) as u32, 0))

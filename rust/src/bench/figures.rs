@@ -588,8 +588,12 @@ fn hammer_scaling(
 
 fn profile_fig(id: &'static str, testbed: Testbed, kind: SystemKind, scale: f64) -> Figure {
     let mut profiles = Vec::new();
+    let mut rows = Vec::new();
     for contention in [false, true] {
-        let dep = deploy(testbed, kind, 2, 4, RedundancyOpt::None);
+        // the telemetry registry rides along so the time breakdown gains
+        // tail-latency (p99/p999) columns next to the class totals
+        let reg = crate::fdb::MetricsRegistry::new();
+        let dep = deploy(testbed, kind, 2, 4, RedundancyOpt::None).with_metrics(&reg);
         let (_, trace): (_, Trace) = hammer::run(
             &dep,
             HammerConfig {
@@ -603,10 +607,23 @@ fn profile_fig(id: &'static str, testbed: Testbed, kind: SystemKind, scale: f64)
                 faults_ok: false,
             },
         );
-        profiles.push((
-            if contention { "contention" } else { "no-contention" }.to_string(),
-            trace.render(),
-        ));
+        let label = if contention { "contention" } else { "no-contention" };
+        profiles.push((label.to_string(), trace.render()));
+        for (cls, hist) in [
+            ("data-read", "engine.service.data-read"),
+            ("data-write", "engine.service.data-write"),
+        ] {
+            if let Some(snap) = reg.hist(hist) {
+                for (pname, p) in [("p99", 99.0), ("p999", 99.9)] {
+                    rows.push(FigRow {
+                        x: label.to_string(),
+                        series: format!("{cls} {pname}"),
+                        value: snap.percentile(p) as f64 / 1e3,
+                        unit: "us",
+                    });
+                }
+            }
+        }
     }
     Figure {
         id,
@@ -616,7 +633,7 @@ fn profile_fig(id: &'static str, testbed: Testbed, kind: SystemKind, scale: f64)
             SystemKind::Daos => "time is data-write/read dominated; no lock class",
             SystemKind::Ceph => "data ops dominate; higher per-op overhead than DAOS",
         },
-        rows: vec![],
+        rows,
         profiles,
     }
 }

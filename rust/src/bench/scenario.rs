@@ -6,7 +6,10 @@ use std::rc::Rc;
 
 use crate::ceph::{Ceph, CephConfig, CephPool, Redundancy};
 use crate::daos::{Daos, DaosConfig};
-use crate::fdb::{BackendConfig, FaultPlan, Fdb, FdbBuilder, IoProfile, SharedNullCatalogue};
+use crate::fdb::wrappers::ReadPolicy;
+use crate::fdb::{
+    BackendConfig, FaultPlan, Fdb, FdbBuilder, IoProfile, MetricsRegistry, SharedNullCatalogue,
+};
 use crate::hw::cluster::Cluster;
 use crate::hw::node::Node;
 use crate::hw::profiles::{build_cluster, Testbed};
@@ -120,6 +123,13 @@ pub struct Deployment {
     /// instance built from this deployment ([`crate::fdb::fault`]); None
     /// = no fault injection
     pub fault: Option<FaultPlan>,
+    /// Shared telemetry registry attached to every FDB instance built
+    /// from this deployment ([`crate::fdb::telemetry`]); None = metrics
+    /// off (the zero-overhead default)
+    pub metrics: Option<MetricsRegistry>,
+    /// Replica read routing applied to every replicated store built
+    /// from this deployment; None = the wrapper's default (round-robin)
+    pub read_policy: Option<ReadPolicy>,
 }
 
 /// Redundancy options for Figs 4.27/4.28 (mapped per system).
@@ -181,6 +191,8 @@ pub fn deploy(
         wrapper: WrapperOpt::Bare,
         io: IoProfile::default(),
         fault: None,
+        metrics: None,
+        read_policy: None,
     }
 }
 
@@ -215,6 +227,22 @@ impl Deployment {
     /// independent fault stream (a dead replica, not a dead store).
     pub fn with_fault(mut self, plan: FaultPlan) -> Deployment {
         self.fault = Some(plan);
+        self
+    }
+
+    /// Attach a shared [`MetricsRegistry`] to every FDB instance built
+    /// from this deployment: every client process reports into one
+    /// registry, so the dumped histograms aggregate the whole run.
+    pub fn with_metrics(mut self, reg: &MetricsRegistry) -> Deployment {
+        self.metrics = Some(reg.clone());
+        self
+    }
+
+    /// Route replica reads for every replicated store built from this
+    /// deployment (e.g. [`ReadPolicy::Fastest`] for EWMA-latency
+    /// routing, the policy the per-replica histograms feed).
+    pub fn with_read_policy(mut self, policy: ReadPolicy) -> Deployment {
+        self.read_policy = Some(policy);
         self
     }
 
@@ -280,23 +308,33 @@ impl Deployment {
         }
     }
 
-    /// One FDB instance (per simulated process) on `node`.
-    pub fn fdb(&self, node: &Rc<Node>) -> Fdb {
-        FdbBuilder::new(&self.sim)
+    /// Shared builder plumbing: backend + io + optional telemetry
+    /// registry and replica read policy.
+    fn builder(&self, node: &Rc<Node>) -> FdbBuilder {
+        let mut b = FdbBuilder::new(&self.sim)
             .node(node)
             .backend(self.backend_config())
-            .io(self.io)
+            .io(self.io);
+        if let Some(reg) = &self.metrics {
+            b = b.metrics(reg);
+        }
+        if let Some(policy) = self.read_policy {
+            b = b.read_policy(policy);
+        }
+        b
+    }
+
+    /// One FDB instance (per simulated process) on `node`.
+    pub fn fdb(&self, node: &Rc<Node>) -> Fdb {
+        self.builder(node)
             .build()
             .expect("deployment backend config is valid")
     }
 
     /// Like [`Deployment::fdb`] with a shared trace collector attached.
     pub fn fdb_traced(&self, node: &Rc<Node>, trace: &Trace) -> Fdb {
-        FdbBuilder::new(&self.sim)
-            .node(node)
+        self.builder(node)
             .trace(trace)
-            .backend(self.backend_config())
-            .io(self.io)
             .build()
             .expect("deployment backend config is valid")
     }

@@ -5,8 +5,10 @@ use std::rc::Rc;
 
 use anyhow::{bail, Result};
 
-use crate::bench::scenario::{deploy, RedundancyOpt, SystemKind, WrapperOpt};
+use crate::bench::scenario::{deploy, Deployment, RedundancyOpt, SystemKind, WrapperOpt};
 use crate::bench::{fieldio, hammer, ior};
+use crate::fdb::wrappers::ReadPolicy;
+use crate::fdb::MetricsRegistry;
 use crate::hw::profiles::Testbed;
 use crate::runtime::{PgenPipeline, PjrtRuntime};
 use crate::util::cli::Args;
@@ -63,6 +65,16 @@ pub fn parse_wrapper(s: &str) -> Result<WrapperOpt> {
     })
 }
 
+/// `first|rr|fastest` → how a replicated store routes reads.
+pub fn parse_read_policy(s: &str) -> Result<ReadPolicy> {
+    Ok(match s {
+        "first" | "first-healthy" => ReadPolicy::FirstHealthy,
+        "rr" | "round-robin" => ReadPolicy::RoundRobin,
+        "fastest" => ReadPolicy::Fastest,
+        other => bail!("unknown read policy `{other}` (first|rr|fastest)"),
+    })
+}
+
 /// A value-taking CLI option with a default; a dangling `--name` (no
 /// value) is a usage error rather than a silent fallback.
 fn opt<'a>(args: &'a Args, name: &str, default: &'a str) -> Result<&'a str> {
@@ -93,12 +105,13 @@ fn parse_io_depth(args: &Args, kind: SystemKind) -> Result<usize> {
         .map_err(|_| anyhow::anyhow!("--io-depth must be a number or `auto` (got `{raw}`)"))
 }
 
-/// `fdbctl hammer --system daos --testbed gcp --servers 4 --clients 8
-/// [--io-depth n|auto] [--index-cache]
-/// [--coalesce-gap sz] [--coalesce-max sz]
-/// [--wrapper tiered|replicated[:n]|sharded[:n]]
-/// [--durable] [--fault spec] ...`
-pub fn cmd_hammer(args: &Args) -> Result<()> {
+/// Shared fdb-hammer workload setup for `hammer`, `trace`, and
+/// `metrics`: parse the deployment + workload options and attach the
+/// telemetry registry when one is given.
+fn hammer_workload(
+    args: &Args,
+    reg: Option<&MetricsRegistry>,
+) -> Result<(Deployment, hammer::HammerConfig)> {
     let testbed = parse_testbed(opt(args, "testbed", "gcp")?)?;
     let kind = parse_system(opt(args, "system", "daos")?)?;
     let wrapper = parse_wrapper(opt(args, "wrapper", "none")?)?;
@@ -112,7 +125,8 @@ pub fn cmd_hammer(args: &Args) -> Result<()> {
             "coalesce-max",
             crate::fdb::IoProfile::DEFAULT_COALESCE_MAX,
         )?)
-        .with_durable(args.flag("durable"));
+        .with_durable(args.flag("durable"))
+        .with_slow_op_us(num(args, "slow-op-us", 0u64)?);
     io.validate().map_err(|e| anyhow::anyhow!("--io-depth/--coalesce-*: {e}"))?;
     // seeded fault injection: the plan wraps the base backend, inside
     // any composable wrapper, so replica/shard/tier failure paths run
@@ -129,6 +143,12 @@ pub fn cmd_hammer(args: &Args) -> Result<()> {
     if let Some(plan) = fault {
         dep = dep.with_fault(plan);
     }
+    if let Some(policy) = args.value_of("read-policy").map_err(|e| anyhow::anyhow!(e))? {
+        dep = dep.with_read_policy(parse_read_policy(policy)?);
+    }
+    if let Some(reg) = reg {
+        dep = dep.with_metrics(reg);
+    }
     let cfg = hammer::HammerConfig {
         procs_per_node: num(args, "procs", 8usize)?,
         nsteps: num(args, "steps", 10u32)?,
@@ -139,6 +159,58 @@ pub fn cmd_hammer(args: &Args) -> Result<()> {
         contention: args.flag("contention"),
         faults_ok,
     };
+    Ok((dep, cfg))
+}
+
+/// Dump a registry as the machine-readable metrics record (`--metrics
+/// <path>` on `hammer`/`opsrun`/`crash`).
+fn write_metrics_json(reg: &MetricsRegistry, path: &str) -> Result<()> {
+    std::fs::write(path, format!("{}", reg.to_json()))
+        .map_err(|e| anyhow::anyhow!("write {path}: {e}"))?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+/// Print the slow-op log a run recorded (ops that exceeded
+/// `--slow-op-us`, newest beyond the ring capacity dropped).
+fn print_slow_ops(reg: &MetricsRegistry, slow_op_us: u64) {
+    let slow = reg.slow_ops();
+    println!(
+        "  slow ops (>= {slow_op_us} us): {} recorded, {} dropped at capacity",
+        slow.len(),
+        reg.slow_ops_dropped()
+    );
+    for op in slow.iter().take(8) {
+        println!(
+            "    {:>12} us  {:11}  {}",
+            op.duration.as_nanos() / 1_000,
+            op.class.label(),
+            op.backend
+        );
+    }
+    if slow.len() > 8 {
+        println!("    ... and {} more", slow.len() - 8);
+    }
+}
+
+/// `fdbctl hammer --system daos --testbed gcp --servers 4 --clients 8
+/// [--io-depth n|auto] [--index-cache]
+/// [--coalesce-gap sz] [--coalesce-max sz]
+/// [--wrapper tiered|replicated[:n]|sharded[:n]]
+/// [--read-policy first|rr|fastest] [--slow-op-us n] [--metrics path]
+/// [--durable] [--fault spec] ...`
+pub fn cmd_hammer(args: &Args) -> Result<()> {
+    let metrics_path = args
+        .value_of("metrics")
+        .map_err(|e| anyhow::anyhow!(e))?
+        .map(str::to_string);
+    let slow_op_us = num(args, "slow-op-us", 0u64)?;
+    // the registry is only attached when asked for: metrics off is the
+    // zero-overhead default
+    let reg = (metrics_path.is_some() || slow_op_us > 0).then(MetricsRegistry::new);
+    let (dep, cfg) = hammer_workload(args, reg.as_ref())?;
+    let (testbed, kind) = (dep.testbed, dep.kind);
+    let (servers, clients) = (num(args, "servers", 4usize)?, num(args, "clients", 8usize)?);
     let (r, trace) = hammer::run(&dep, cfg);
     println!(
         "fdb-hammer {} [{}] on {} ({} srv / {} cli × {} procs, {} fields/proc of {}, io-depth {}{})",
@@ -172,6 +244,57 @@ pub fn cmd_hammer(args: &Args) -> Result<()> {
             println!("  consistency check: PASSED (all fields found, bytes verified)");
         }
     }
+    if let Some(reg) = &reg {
+        if slow_op_us > 0 {
+            print_slow_ops(reg, slow_op_us);
+        }
+        if let Some(path) = &metrics_path {
+            write_metrics_json(reg, path)?;
+        }
+    }
+    Ok(())
+}
+
+/// `fdbctl trace --out trace.json [hammer options]`: run the fdb-hammer
+/// workload with the op-level event journal on and export it as Chrome
+/// trace-event JSON (load in `chrome://tracing` / Perfetto).
+pub fn cmd_trace(args: &Args) -> Result<()> {
+    let out = opt(args, "out", "trace.json")?.to_string();
+    let reg = MetricsRegistry::new();
+    if let Some(cap) = args.value_of("journal-cap").map_err(|e| anyhow::anyhow!(e))? {
+        let cap: usize = cap
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--journal-cap must be a number (got `{cap}`)"))?;
+        reg.set_journal_capacity(cap);
+    }
+    let (dep, cfg) = hammer_workload(args, Some(&reg))?;
+    let _ = hammer::run(&dep, cfg);
+    std::fs::write(&out, format!("{}", reg.chrome_trace()))
+        .map_err(|e| anyhow::anyhow!("write {out}: {e}"))?;
+    println!(
+        "wrote {} trace events to {out} ({} dropped at ring capacity)",
+        reg.journal_len(),
+        reg.journal_dropped()
+    );
+    Ok(())
+}
+
+/// `fdbctl metrics [--out file] [hammer options]`: run the fdb-hammer
+/// workload with the registry on and print (or write) the
+/// Prometheus-style text exposition of every counter, gauge, and
+/// histogram it collected.
+pub fn cmd_metrics(args: &Args) -> Result<()> {
+    let reg = MetricsRegistry::new();
+    let (dep, cfg) = hammer_workload(args, Some(&reg))?;
+    let _ = hammer::run(&dep, cfg);
+    let text = reg.render_prometheus();
+    match args.value_of("out").map_err(|e| anyhow::anyhow!(e))? {
+        Some(path) => {
+            std::fs::write(path, &text).map_err(|e| anyhow::anyhow!("write {path}: {e}"))?;
+            println!("wrote {path}");
+        }
+        None => print!("{text}"),
+    }
     Ok(())
 }
 
@@ -191,7 +314,21 @@ pub fn cmd_crash(args: &Args) -> Result<()> {
     let nfields = num(args, "nfields", 24usize)?;
     let kill = num(args, "kill", (nfields / 2) as u64)?;
     let field_size = size(args, "field-size", 64 << 10)?;
-    let r = crate::bench::crash::crash_archive(kind, wrapper, seed, kill, nfields, field_size);
+    let metrics_path = args
+        .value_of("metrics")
+        .map_err(|e| anyhow::anyhow!(e))?
+        .map(str::to_string);
+    let reg = metrics_path.as_ref().map(|_| MetricsRegistry::new());
+    let r = crate::bench::crash::crash_archive_observed(
+        kind,
+        wrapper,
+        seed,
+        kill,
+        nfields,
+        field_size,
+        crate::fdb::IoProfile::default().with_durable(true),
+        reg.as_ref(),
+    );
     println!(
         "crash-recovery {} [{}] seed {seed} kill@{kill}: archived {}/{} fields before the fault",
         kind.label(),
@@ -214,6 +351,9 @@ pub fn cmd_crash(args: &Args) -> Result<()> {
         );
     }
     println!("  recovery check: PASSED (index and data agree at the kill point)");
+    if let (Some(reg), Some(path)) = (&reg, &metrics_path) {
+        write_metrics_json(reg, path)?;
+    }
     Ok(())
 }
 
@@ -341,7 +481,12 @@ pub fn cmd_opsrun(args: &Args) -> Result<()> {
         )?);
     io.validate()
         .map_err(|e| anyhow::anyhow!("--io-depth/--coalesce-*: {e}"))?;
-    let dep = deploy(
+    let metrics_path = args
+        .value_of("metrics")
+        .map_err(|e| anyhow::anyhow!(e))?
+        .map(str::to_string);
+    let reg = metrics_path.as_ref().map(|_| MetricsRegistry::new());
+    let mut dep = deploy(
         testbed,
         kind,
         num(args, "servers", 2usize)?,
@@ -349,6 +494,9 @@ pub fn cmd_opsrun(args: &Args) -> Result<()> {
         RedundancyOpt::None,
     )
     .with_io(io);
+    if let Some(reg) = &reg {
+        dep = dep.with_metrics(reg);
+    }
     let grid = num(args, "grid", 64usize)?;
     let real_compute = !args.flag("no-compute");
     let compute: Compute = if real_compute {
@@ -386,6 +534,9 @@ pub fn cmd_opsrun(args: &Args) -> Result<()> {
     println!("  profile: {}", report.trace.render());
     assert_eq!(report.fields_read, report.fields_written);
     println!("  end-to-end check: PASSED (every archived field post-processed)");
+    if let (Some(reg), Some(path)) = (&reg, &metrics_path) {
+        write_metrics_json(reg, path)?;
+    }
     Ok(())
 }
 
@@ -448,17 +599,26 @@ pub fn usage() -> &'static str {
                  [--io-depth n|auto] [--index-cache]\n\
                  [--coalesce-gap sz] [--coalesce-max sz]\n\
                  [--wrapper none|tiered|replicated[:n]|sharded[:n]]\n\
+                 [--read-policy first|rr|fastest] [--metrics out.json]\n\
+                 [--slow-op-us n]  (log + report ops slower than n us)\n\
                  [--durable] [--fault seed=n,failstop:<class>:<n>,torn:write:<n>,\n\
-                  err:<class>:p<f>,slow:<class>:<us>]  classes: write|read|flush|\n\
-                  index|index-flush\n\
+                  err:<class>:p<f>,slow:<class>:<us>[,only=<i>]]  classes: write|\n\
+                  read|flush|index|index-flush\n\
+       trace     run the hammer workload, export the op journal as Chrome\n\
+                 trace-event JSON    [--out trace.json] [--journal-cap n]\n\
+                 [+ all hammer options]\n\
+       metrics   run the hammer workload, print the Prometheus-style text\n\
+                 exposition of the registry   [--out file] [+ hammer options]\n\
        crash     seeded crash-recovery smoke on the WAL'd POSIX catalogue\n\
                  [--seed n] [--kill n] [--nfields n] [--field-size sz]\n\
                  [--wrapper none|replicated[:n]|sharded[:n]|tiered]\n\
+                 [--metrics out.json]\n\
        ior       IOR-like generic benchmark [--system s] [--nops n] [--xfer sz] [--dfs]\n\
        fieldio   Field I/O PoC              [--system s] [--nfields n] [--dummy]\n\
        opsrun    end-to-end operational NWP run with PJRT PGEN compute\n\
                  [--system s] [--members n] [--steps n] [--grid 32|64] [--no-compute]\n\
                  [--io-depth n|auto] [--coalesce-gap sz] [--coalesce-max sz]\n\
+                 [--metrics out.json]\n\
        admin     dataset stats + wipe demo   [--system s] [--nfields n]\n\
      \n\
      systems: lustre | daos | ceph | null      testbeds: nextgenio | gcp"
@@ -583,6 +743,62 @@ mod tests {
         );
         let err = cmd_hammer(&args).unwrap_err();
         assert!(err.to_string().contains("--fault"), "{err}");
+    }
+
+    #[test]
+    fn hammer_metrics_dump_and_slow_op_log_smoke() {
+        // --metrics dumps the registry JSON; --slow-op-us 1 logs every
+        // op (threshold 1us) and surfaces the slow-op summary
+        let path = std::env::temp_dir().join("fdbr_test_hammer_metrics.json");
+        let spec = format!(
+            "--system lustre --servers 2 --clients 2 --procs 1 --steps 2 --params 2 --levels 1 --field-size 65536 --slow-op-us 1 --check --metrics {}",
+            path.display()
+        );
+        let args = Args::parse(spec.split_whitespace().map(String::from));
+        cmd_hammer(&args).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("engine.service.data-write"), "{text}");
+        assert!(text.contains("slow_ops"), "{text}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn trace_command_writes_chrome_trace_events() {
+        let path = std::env::temp_dir().join("fdbr_test_trace.json");
+        let spec = format!(
+            "--system null --servers 1 --clients 2 --procs 1 --steps 2 --params 2 --levels 1 --field-size 65536 --out {}",
+            path.display()
+        );
+        let args = Args::parse(spec.split_whitespace().map(String::from));
+        cmd_trace(&args).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        // Chrome trace-event essentials: complete events with ts/dur
+        assert!(text.contains("\"ph\""), "{text}");
+        assert!(text.contains("\"dur\""), "{text}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn metrics_command_renders_prometheus_exposition() {
+        let path = std::env::temp_dir().join("fdbr_test_metrics.prom");
+        let spec = format!(
+            "--system null --servers 1 --clients 2 --procs 1 --steps 2 --params 2 --levels 1 --field-size 65536 --out {}",
+            path.display()
+        );
+        let args = Args::parse(spec.split_whitespace().map(String::from));
+        cmd_metrics(&args).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("# TYPE"), "{text}");
+        assert!(text.contains("fdb_engine_service_data_write"), "{text}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn read_policy_parser() {
+        assert_eq!(parse_read_policy("first").unwrap(), ReadPolicy::FirstHealthy);
+        assert_eq!(parse_read_policy("rr").unwrap(), ReadPolicy::RoundRobin);
+        assert_eq!(parse_read_policy("fastest").unwrap(), ReadPolicy::Fastest);
+        assert!(parse_read_policy("slowest").is_err());
     }
 
     #[test]

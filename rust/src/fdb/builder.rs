@@ -23,7 +23,8 @@ use super::rados::catalogue::RadosCatalogue;
 use super::rados::store::{RadosStore, RadosStoreConfig};
 use super::s3::store::S3Store;
 use super::schema::Schema;
-use super::wrappers::{ReplicatedStore, ShardedCatalogue, TieredStore};
+use super::telemetry::{InstrumentCatalogue, InstrumentStore, MetricsRegistry};
+use super::wrappers::{ReadPolicy, ReplicatedStore, ShardedCatalogue, TieredStore};
 use super::FdbError;
 use crate::ceph::{Ceph, CephPool, Redundancy};
 use crate::daos::Daos;
@@ -70,6 +71,12 @@ pub struct IoProfile {
     /// recoverable after a producer crash via [`super::fdb::Fdb::recover`].
     /// Off by default — the exact legacy (non-logging) write path.
     pub durable: bool,
+    /// Slow-op threshold in microseconds ([`crate::fdb::telemetry`]):
+    /// when a metrics registry is attached, any operation whose raw
+    /// duration meets or exceeds this is recorded in the registry's
+    /// slow-op log with its class, backend, and duration. 0 (the
+    /// default) disables the log.
+    pub slow_op_us: u64,
 }
 
 impl Default for IoProfile {
@@ -80,6 +87,7 @@ impl Default for IoProfile {
             coalesce_gap: 0,
             coalesce_max: IoProfile::DEFAULT_COALESCE_MAX,
             durable: false,
+            slow_op_us: 0,
         }
     }
 }
@@ -116,6 +124,12 @@ impl IoProfile {
     /// Enable WAL'd (crash-recoverable) catalogue writes.
     pub fn with_durable(mut self, on: bool) -> IoProfile {
         self.durable = on;
+        self
+    }
+
+    /// Log ops at or above this many µs to the slow-op log (0 = off).
+    pub fn with_slow_op_us(mut self, micros: u64) -> IoProfile {
+        self.slow_op_us = micros;
         self
     }
 
@@ -211,6 +225,58 @@ pub enum BackendConfig {
         inner: Box<BackendConfig>,
         plan: FaultPlan,
     },
+}
+
+/// Per-layer instrumentation context threaded through the build
+/// recursion: the shared registry plus the dotted label prefix of the
+/// subtree being built — `""` at the root, `"front."`/`"back."` under a
+/// tiered store, `"r0."` under replica 0, `"s2."` under catalogue
+/// shard 2. A leaf built under `"front.r1."` reports as e.g.
+/// `store.front.r1.posix.read`.
+type Instr<'a> = Option<(&'a MetricsRegistry, String)>;
+
+/// Derive the context for a wrapper's child by appending one segment.
+fn child_instr<'a>(instr: &Instr<'a>, seg: &str) -> Instr<'a> {
+    instr
+        .as_ref()
+        .map(|(reg, path)| (*reg, format!("{path}{seg}.")))
+}
+
+/// Wrap a built Store in the per-layer instrumenting shim (no-op when
+/// no registry is attached).
+fn instrument_store(
+    store: Box<dyn Store>,
+    instr: &Instr<'_>,
+    leaf: &'static str,
+    sim: &Sim,
+) -> Box<dyn Store> {
+    match instr {
+        Some((reg, path)) => Box::new(InstrumentStore::new(
+            store,
+            reg,
+            &format!("{path}{leaf}"),
+            Some(sim),
+        )),
+        None => store,
+    }
+}
+
+/// Wrap a built Catalogue in the per-layer instrumenting shim.
+fn instrument_catalogue(
+    cat: Box<dyn Catalogue>,
+    instr: &Instr<'_>,
+    leaf: &'static str,
+    sim: &Sim,
+) -> Box<dyn Catalogue> {
+    match instr {
+        Some((reg, path)) => Box::new(InstrumentCatalogue::new(
+            cat,
+            reg,
+            &format!("{path}{leaf}"),
+            Some(sim),
+        )),
+        None => cat,
+    }
 }
 
 impl BackendConfig {
@@ -320,11 +386,18 @@ impl BackendConfig {
     /// Callers validate first; a missing node on a node-requiring
     /// backend still surfaces as `InvalidConfig` rather than a panic.
     /// `sim` is the virtual clock wrapper stores observe latencies with
-    /// (the replicated store's `ReadPolicy::Fastest` EWMA).
+    /// (the replicated store's `ReadPolicy::Fastest` EWMA). `instr`
+    /// threads the per-layer instrumentation context (see [`Instr`]);
+    /// `policy` overrides the read policy of every replicated store in
+    /// the tree. A `Fault` node absorbs the instrumentation point — the
+    /// shim wraps *outside* the fault injector so injected delays and
+    /// errors show up in that layer's histograms and fault counters.
     fn build_store(
         &self,
         node: Option<&Rc<Node>>,
         sim: &Sim,
+        instr: Instr<'_>,
+        policy: Option<ReadPolicy>,
     ) -> Result<Box<dyn Store>, FdbError> {
         let need_node = || {
             FdbError::InvalidConfig(format!("{} backend needs a client node", self.label()))
@@ -332,7 +405,12 @@ impl BackendConfig {
         Ok(match self {
             BackendConfig::Posix { fs, root } => {
                 let node = node.ok_or_else(need_node)?;
-                Box::new(PosixStore::new(fs.client(node), root))
+                instrument_store(
+                    Box::new(PosixStore::new(fs.client(node), root)),
+                    &instr,
+                    "posix",
+                    sim,
+                )
             }
             BackendConfig::Daos {
                 daos,
@@ -342,7 +420,7 @@ impl BackendConfig {
                 let node = node.ok_or_else(need_node)?;
                 let mut store = DaosStore::new(daos.client(node), pool);
                 store.hash_oids = *hash_oids;
-                Box::new(store)
+                instrument_store(Box::new(store), &instr, "daos", sim)
             }
             BackendConfig::Rados {
                 ceph,
@@ -350,9 +428,14 @@ impl BackendConfig {
                 store: store_cfg,
             } => {
                 let node = node.ok_or_else(need_node)?;
-                Box::new(
-                    RadosStore::new(ceph, ceph.client(node), pool)
-                        .with_config(store_cfg.clone()),
+                instrument_store(
+                    Box::new(
+                        RadosStore::new(ceph, ceph.client(node), pool)
+                            .with_config(store_cfg.clone()),
+                    ),
+                    &instr,
+                    "rados",
+                    sim,
                 )
             }
             BackendConfig::S3 {
@@ -362,36 +445,55 @@ impl BackendConfig {
             } => {
                 let mut store = S3Store::new(s3, client_tag);
                 store.multipart = *multipart;
-                Box::new(store)
+                instrument_store(Box::new(store), &instr, "s3", sim)
             }
-            BackendConfig::Null | BackendConfig::SharedNull(_) => Box::new(NullStore),
+            BackendConfig::Null | BackendConfig::SharedNull(_) => {
+                instrument_store(Box::new(NullStore), &instr, "null", sim)
+            }
             BackendConfig::Tiered { front, back } => Box::new(TieredStore::new(
-                front.build_store(node, sim)?,
-                back.build_store(node, sim)?,
+                front.build_store(node, sim, child_instr(&instr, "front"), policy)?,
+                back.build_store(node, sim, child_instr(&instr, "back"), policy)?,
             )),
             BackendConfig::Replicated { inner, copies } => {
                 let mut replicas = Vec::with_capacity(*copies);
-                for _ in 0..*copies {
-                    replicas.push(inner.build_store(node, sim)?);
+                for i in 0..*copies {
+                    replicas.push(inner.build_store(
+                        node,
+                        sim,
+                        child_instr(&instr, &format!("r{i}")),
+                        policy,
+                    )?);
                 }
-                Box::new(ReplicatedStore::new(replicas).with_clock(sim))
+                let mut store = ReplicatedStore::new(replicas).with_clock(sim);
+                if let Some(p) = policy {
+                    store = store.with_read_policy(p);
+                }
+                Box::new(store)
             }
-            BackendConfig::Sharded { inner, .. } => inner.build_store(node, sim)?,
-            BackendConfig::Fault { inner, plan } => Box::new(FaultStore::new(
-                inner.build_store(node, sim)?,
-                plan.build_state(Some(sim)),
-            )),
+            BackendConfig::Sharded { inner, .. } => inner.build_store(node, sim, instr, policy)?,
+            BackendConfig::Fault { inner, plan } => instrument_store(
+                Box::new(FaultStore::new(
+                    inner.build_store(node, sim, None, policy)?,
+                    plan.build_state(Some(sim)),
+                )),
+                &instr,
+                inner.label(),
+                sim,
+            ),
         })
     }
 
     /// Build this config's Catalogue side (recursing through wrappers).
-    /// `sim` drives fault-wrapper slow-replica delays.
+    /// `sim` drives fault-wrapper slow-replica delays. Labels only gain
+    /// `s<i>.` segments (sharding is the catalogue-side wrapper); the
+    /// store-side `front.`/`r<i>.` structure does not apply here.
     fn build_catalogue(
         &self,
         node: Option<&Rc<Node>>,
         schema: &Schema,
         io: &IoProfile,
         sim: &Sim,
+        instr: Instr<'_>,
     ) -> Result<Box<dyn Catalogue>, FdbError> {
         let need_node = || {
             FdbError::InvalidConfig(format!("{} backend needs a client node", self.label()))
@@ -399,22 +501,30 @@ impl BackendConfig {
         Ok(match self {
             BackendConfig::Posix { fs, root } => {
                 let node = node.ok_or_else(need_node)?;
-                Box::new(
-                    PosixCatalogue::new(fs.client(node), root, schema.clone())
-                        .with_index_cache(io.preload_indexes)
-                        .with_durable(io.durable),
-                )
+                let mut cat = PosixCatalogue::new(fs.client(node), root, schema.clone())
+                    .with_index_cache(io.preload_indexes)
+                    .with_durable(io.durable);
+                if let Some((reg, path)) = &instr {
+                    // migrate the ad-hoc WAL-sync probe onto the registry
+                    cat = cat.with_wal_counter(reg.counter(&format!("cat.{path}posix.wal_syncs")));
+                }
+                instrument_catalogue(Box::new(cat), &instr, "posix", sim)
             }
             BackendConfig::Daos { daos, pool, .. } => {
                 let node = node.ok_or_else(need_node)?;
                 // root container label fixed by the administrator
                 // (thesis §3.1.2)
-                Box::new(DaosCatalogue::new(
-                    daos.client(node),
-                    pool,
-                    "fdb_root",
-                    schema.clone(),
-                ))
+                instrument_catalogue(
+                    Box::new(DaosCatalogue::new(
+                        daos.client(node),
+                        pool,
+                        "fdb_root",
+                        schema.clone(),
+                    )),
+                    &instr,
+                    "daos",
+                    sim,
+                )
             }
             BackendConfig::Rados { ceph, pool, .. } => {
                 let node = node.ok_or_else(need_node)?;
@@ -427,30 +537,52 @@ impl BackendConfig {
                 } else {
                     pool.clone()
                 };
-                Box::new(RadosCatalogue::new(
-                    ceph.client(node),
-                    &meta_pool,
-                    schema.clone(),
-                ))
+                instrument_catalogue(
+                    Box::new(RadosCatalogue::new(
+                        ceph.client(node),
+                        &meta_pool,
+                        schema.clone(),
+                    )),
+                    &instr,
+                    "rados",
+                    sim,
+                )
             }
-            BackendConfig::S3 { .. } | BackendConfig::Null => Box::new(NullCatalogue::new()),
-            BackendConfig::SharedNull(cat) => Box::new(cat.clone()),
+            BackendConfig::S3 { .. } | BackendConfig::Null => {
+                instrument_catalogue(Box::new(NullCatalogue::new()), &instr, "null", sim)
+            }
+            BackendConfig::SharedNull(cat) => {
+                instrument_catalogue(Box::new(cat.clone()), &instr, "null", sim)
+            }
             // the durable back tier owns the index
-            BackendConfig::Tiered { back, .. } => back.build_catalogue(node, schema, io, sim)?,
+            BackendConfig::Tiered { back, .. } => {
+                back.build_catalogue(node, schema, io, sim, instr)?
+            }
             BackendConfig::Replicated { inner, .. } => {
-                inner.build_catalogue(node, schema, io, sim)?
+                inner.build_catalogue(node, schema, io, sim, instr)?
             }
             BackendConfig::Sharded { inner, shards } => {
                 let mut parts = Vec::with_capacity(*shards);
-                for _ in 0..*shards {
-                    parts.push(inner.build_catalogue(node, schema, io, sim)?);
+                for i in 0..*shards {
+                    parts.push(inner.build_catalogue(
+                        node,
+                        schema,
+                        io,
+                        sim,
+                        child_instr(&instr, &format!("s{i}")),
+                    )?);
                 }
                 Box::new(ShardedCatalogue::new(parts))
             }
-            BackendConfig::Fault { inner, plan } => Box::new(FaultCatalogue::new(
-                inner.build_catalogue(node, schema, io, sim)?,
-                plan.build_state(Some(sim)),
-            )),
+            BackendConfig::Fault { inner, plan } => instrument_catalogue(
+                Box::new(FaultCatalogue::new(
+                    inner.build_catalogue(node, schema, io, sim, None)?,
+                    plan.build_state(Some(sim)),
+                )),
+                &instr,
+                inner.label(),
+                sim,
+            ),
         })
     }
 }
@@ -463,6 +595,8 @@ pub struct FdbBuilder {
     schema: Option<Schema>,
     config: Option<BackendConfig>,
     io: IoProfile,
+    metrics: Option<MetricsRegistry>,
+    read_policy: Option<ReadPolicy>,
 }
 
 impl FdbBuilder {
@@ -474,6 +608,8 @@ impl FdbBuilder {
             schema: None,
             config: None,
             io: IoProfile::default(),
+            metrics: None,
+            read_policy: None,
         }
     }
 
@@ -513,6 +649,27 @@ impl FdbBuilder {
         self
     }
 
+    /// Attach a shared [`MetricsRegistry`]: the I/O engine records
+    /// admission-wait and service histograms, byte counters, outcome
+    /// counters, and journal spans into it, and every layer of the
+    /// backend tree is wrapped in an instrumenting shim
+    /// ([`InstrumentStore`]/[`InstrumentCatalogue`]) reporting
+    /// per-layer latency histograms and hit/miss/fault counters under
+    /// dotted labels (`store.r1.posix.read`, `cat.s0.posix.lookup`).
+    /// Metrics never change behaviour: results and virtual time are
+    /// identical with and without a registry attached.
+    pub fn metrics(mut self, reg: &MetricsRegistry) -> FdbBuilder {
+        self.metrics = Some(reg.clone());
+        self
+    }
+
+    /// Override the [`ReadPolicy`] of every replicated store in the
+    /// config tree (default: the store's own round-robin).
+    pub fn read_policy(mut self, policy: ReadPolicy) -> FdbBuilder {
+        self.read_policy = Some(policy);
+        self
+    }
+
     /// Validate the config tree and wire the matching Store/Catalogue
     /// pair, recursing through wrapper configs.
     pub fn build(self) -> Result<Fdb, FdbError> {
@@ -524,12 +681,21 @@ impl FdbBuilder {
         let schema = self
             .schema
             .unwrap_or_else(|| config.default_schema());
-        let store = config.build_store(self.node.as_ref(), &self.sim)?;
+        let instr: Instr<'_> = self.metrics.as_ref().map(|reg| (reg, String::new()));
+        let store = config.build_store(
+            self.node.as_ref(),
+            &self.sim,
+            instr.clone(),
+            self.read_policy,
+        )?;
         let catalogue =
-            config.build_catalogue(self.node.as_ref(), &schema, &self.io, &self.sim)?;
+            config.build_catalogue(self.node.as_ref(), &schema, &self.io, &self.sim, instr)?;
         let mut fdb = Fdb::new(&self.sim, schema, store, catalogue).with_io(self.io);
         if let Some(trace) = self.trace {
             fdb = fdb.with_trace(trace);
+        }
+        if let Some(reg) = &self.metrics {
+            fdb = fdb.with_metrics(reg);
         }
         Ok(fdb)
     }

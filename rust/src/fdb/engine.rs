@@ -45,6 +45,7 @@ use crate::fdb::datahandle::DataHandle;
 use crate::fdb::key::Key;
 use crate::fdb::location::FieldLocation;
 use crate::fdb::plan::{PlanStats, StreamPlanner};
+use crate::fdb::telemetry::{is_injected_fault, EngineMetrics, MetricsRegistry};
 use crate::fdb::FdbError;
 use crate::sim::exec::Sim;
 use crate::sim::futures::{boxed, join_all};
@@ -136,6 +137,14 @@ pub(crate) struct IoEngine {
     peak: Cell<usize>,
     sim: Sim,
     trace: Trace,
+    /// Pre-bound per-op-class telemetry handles (`None` = metrics off,
+    /// the zero-overhead default).
+    metrics: Option<EngineMetrics>,
+    /// The registry behind `metrics` — journal spans and the slow-op
+    /// log go through it directly.
+    registry: Option<MetricsRegistry>,
+    /// Slow-op threshold (raw span duration, ns); 0 disables the log.
+    slow_op_ns: u64,
 }
 
 impl IoEngine {
@@ -148,6 +157,9 @@ impl IoEngine {
             peak: Cell::new(0),
             sim: sim.clone(),
             trace: Trace::new(),
+            metrics: None,
+            registry: None,
+            slow_op_ns: 0,
         }
     }
 
@@ -157,6 +169,19 @@ impl IoEngine {
 
     pub(crate) fn set_trace(&mut self, trace: Trace) {
         self.trace = trace;
+    }
+
+    /// Attach a metrics registry: every admitted op records its
+    /// admission wait and (lock-subtracted) service time into per-class
+    /// histograms, byte counters and ok/err/fault outcome counters, a
+    /// journal span, and — above `slow_op_us` — a slow-op log entry.
+    /// Service times are recorded at the same sites with the same
+    /// durations as [`Trace::record`], so registry histogram totals
+    /// agree exactly with the trace's per-class totals.
+    pub(crate) fn set_metrics(&mut self, reg: &MetricsRegistry, slow_op_us: u64) {
+        self.metrics = Some(EngineMetrics::bind(reg));
+        self.registry = Some(reg.clone());
+        self.slow_op_ns = slow_op_us.saturating_mul(1_000);
     }
 
     /// Store sessions minted so far (0 until a batched op runs at
@@ -271,15 +296,58 @@ impl IoEngine {
     fn admit<'a>(&'a self, sem: &'a Rc<Resource>) -> Admitted<'a> {
         self.inflight.set(self.inflight.get() + 1);
         self.peak.set(self.peak.get().max(self.inflight.get()));
+        if let Some(m) = &self.metrics {
+            m.inflight_peak.set_max(self.peak.get() as u64);
+        }
         Admitted { engine: self, sem }
     }
 
+    /// Acquire the depth semaphore and count the op in, recording the
+    /// admission wait — the queueing delay between asking for a slot
+    /// and the grant — into `class`'s wait histogram. This is the
+    /// "admission wait vs. service time" split: wait grows with
+    /// saturation at high `--io-depth`, service time does not.
+    async fn admit_waited<'a>(&'a self, sem: &'a Rc<Resource>, class: OpClass) -> Admitted<'a> {
+        let tq = self.sim.now();
+        sem.acquire().await;
+        if let Some(m) = &self.metrics {
+            m.probe(class).wait.observe_duration(self.sim.now() - tq);
+        }
+        self.admit(sem)
+    }
+
     /// Record a finished op: span total (lock-subtracted) under `class`,
-    /// raw window into the timeline.
-    fn span(&self, class: OpClass, t0: SimTime, lock: SimTime) {
+    /// raw window into the timeline; with metrics attached, the same
+    /// lock-subtracted duration into the class's service histogram (so
+    /// registry and trace totals agree exactly), an ok outcome, a
+    /// journal span, and a slow-op entry when the *raw* duration meets
+    /// the threshold.
+    fn span(&self, class: OpClass, t0: SimTime, lock: SimTime, backend: &'static str) {
         let now = self.sim.now();
         self.trace.record(class, now - t0 - lock);
         self.trace.observe_span(class, t0, now);
+        if let Some(m) = &self.metrics {
+            m.probe(class).service.observe_duration(now - t0 - lock);
+            m.probe(class).ok.inc();
+        }
+        if let Some(reg) = &self.registry {
+            reg.record_span(self.inflight.get() as u64, class.label(), t0, now);
+            if self.slow_op_ns > 0 && (now - t0).as_nanos() >= self.slow_op_ns {
+                reg.record_slow_op(class, backend, now - t0);
+            }
+        }
+    }
+
+    /// Count a failed op's outcome: injected faults separately from
+    /// organic errors.
+    fn op_err(&self, class: OpClass, e: &FdbError) {
+        if let Some(m) = &self.metrics {
+            if is_injected_fault(e) {
+                m.probe(class).fault.inc();
+            } else {
+                m.probe(class).err.inc();
+            }
+        }
     }
 
     /// Record the batch's accumulated lock time once under
@@ -287,6 +355,9 @@ impl IoEngine {
     fn record_lock(&self, lock: SimTime) {
         if lock > SimTime::ZERO {
             self.trace.record(OpClass::Lock, lock);
+            if let Some(m) = &self.metrics {
+                m.probe(OpClass::Lock).service.observe_duration(lock);
+            }
         }
     }
 
@@ -316,22 +387,29 @@ impl IoEngine {
                     let id = &ids[i];
                     let (ds, colloc, _elem) = &split[i];
                     boxed(async move {
-                        sem.acquire().await;
-                        let _adm = self.admit(sem);
+                        let _adm = self.admit_waited(sem, OpClass::DataWrite).await;
                         let mut session = match Checkout::new(&self.store_pool, "store") {
                             Ok(s) => s,
                             Err(e) => return note_failure(failed, i, e),
                         };
+                        let backend = session.name();
+                        let nbytes = data.len();
                         let t0 = self.sim.now();
                         let r = session.archive(ds, colloc, id, data).await;
                         let lock = session.take_lock_time();
                         lock_total.set(lock_total.get() + lock);
                         match r {
                             Ok(loc) => {
-                                self.span(OpClass::DataWrite, t0, lock);
+                                self.span(OpClass::DataWrite, t0, lock, backend);
+                                if let Some(m) = &self.metrics {
+                                    m.bytes_written.add(nbytes);
+                                }
                                 locs.borrow_mut()[i] = Some(loc);
                             }
-                            Err(e) => note_failure(failed, i, e),
+                            Err(e) => {
+                                self.op_err(OpClass::DataWrite, &e);
+                                note_failure(failed, i, e)
+                            }
                         }
                     })
                 })
@@ -377,8 +455,7 @@ impl IoEngine {
             if cat_depth {
                 for (i, (id, (ds, colloc, elem))) in ids.iter().zip(split).enumerate() {
                     tasks.push(boxed(async move {
-                        sem.acquire().await;
-                        let _adm = self.admit(sem);
+                        let _adm = self.admit_waited(sem, OpClass::IndexRead).await;
                         let mut cs = match Checkout::new(&self.cat_pool, "catalogue") {
                             Ok(s) => s,
                             Err(e) => {
@@ -387,22 +464,24 @@ impl IoEngine {
                                 return;
                             }
                         };
+                        let backend = cs.name();
                         let t0 = self.sim.now();
                         let loc = cs.retrieve(ds, colloc, elem, id).await;
                         let lock = cs.take_lock_time();
                         lock_total.set(lock_total.get() + lock);
-                        self.span(OpClass::IndexRead, t0, lock);
+                        self.span(OpClass::IndexRead, t0, lock, backend);
                         slots[i].put(loc.map(|l| DataHandle::from_location(&l)));
                     }));
                 }
             } else {
                 tasks.push(boxed(async move {
+                    let backend = catalogue.name();
                     for (i, (id, (ds, colloc, elem))) in ids.iter().zip(split).enumerate() {
                         let t0 = self.sim.now();
                         let loc = catalogue.retrieve(ds, colloc, elem, id).await;
                         let lock = catalogue.take_lock_time();
                         lock_total.set(lock_total.get() + lock);
-                        self.span(OpClass::IndexRead, t0, lock);
+                        self.span(OpClass::IndexRead, t0, lock, backend);
                         slots[i].put(loc.map(|l| DataHandle::from_location(&l)));
                     }
                 }));
@@ -412,22 +491,28 @@ impl IoEngine {
                     let Some(handle) = slots[i].take().await else {
                         return; // absent field: cache semantics
                     };
-                    sem.acquire().await;
-                    let _adm = self.admit(sem);
+                    let _adm = self.admit_waited(sem, OpClass::DataRead).await;
                     let mut session = match Checkout::new(&self.store_pool, "store") {
                         Ok(s) => s,
                         Err(e) => return note_failure(failed, i, e),
                     };
+                    let backend = session.name();
                     let t0 = self.sim.now();
                     let r = session.read(&handle).await;
                     let lock = session.take_lock_time();
                     lock_total.set(lock_total.get() + lock);
                     match r {
                         Ok(bytes) => {
-                            self.span(OpClass::DataRead, t0, lock);
+                            self.span(OpClass::DataRead, t0, lock, backend);
+                            if let Some(m) = &self.metrics {
+                                m.bytes_read.add(bytes.len());
+                            }
                             out.borrow_mut()[i] = Some((id.clone(), bytes));
                         }
-                        Err(e) => note_failure(failed, i, e),
+                        Err(e) => {
+                            self.op_err(OpClass::DataRead, &e);
+                            note_failure(failed, i, e)
+                        }
                     }
                 }));
             }
@@ -477,8 +562,7 @@ impl IoEngine {
             if cat_depth {
                 for (i, (id, (ds, colloc, elem))) in ids.iter().zip(split).enumerate() {
                     tasks.push(boxed(async move {
-                        sem.acquire().await;
-                        let _adm = self.admit(sem);
+                        let _adm = self.admit_waited(sem, OpClass::IndexRead).await;
                         let mut cs = match Checkout::new(&self.cat_pool, "catalogue") {
                             Ok(s) => s,
                             Err(e) => {
@@ -487,22 +571,24 @@ impl IoEngine {
                                 return;
                             }
                         };
+                        let backend = cs.name();
                         let t0 = self.sim.now();
                         let loc = cs.retrieve(ds, colloc, elem, id).await;
                         let lock = cs.take_lock_time();
                         lock_total.set(lock_total.get() + lock);
-                        self.span(OpClass::IndexRead, t0, lock);
+                        self.span(OpClass::IndexRead, t0, lock, backend);
                         slots[i].put(loc);
                     }));
                 }
             } else {
                 tasks.push(boxed(async move {
+                    let backend = catalogue.name();
                     for (i, (id, (ds, colloc, elem))) in ids.iter().zip(split).enumerate() {
                         let t0 = self.sim.now();
                         let loc = catalogue.retrieve(ds, colloc, elem, id).await;
                         let lock = catalogue.take_lock_time();
                         lock_total.set(lock_total.get() + lock);
-                        self.span(OpClass::IndexRead, t0, lock);
+                        self.span(OpClass::IndexRead, t0, lock, backend);
                         slots[i].put(loc);
                     }
                 }));
@@ -529,8 +615,7 @@ impl IoEngine {
             for _ in 0..workers {
                 tasks.push(boxed(async move {
                     while let Some(pr) = ranges.pop().await {
-                        sem.acquire().await;
-                        let _adm = self.admit(sem);
+                        let _adm = self.admit_waited(sem, OpClass::DataRead).await;
                         // error ordering key: the range's first input pos
                         let fi = pr.fields.first().map(|f| f.0).unwrap_or(usize::MAX);
                         let mut session = match Checkout::new(&self.store_pool, "store") {
@@ -540,20 +625,27 @@ impl IoEngine {
                                 continue;
                             }
                         };
+                        let backend = session.name();
                         let t0 = self.sim.now();
                         let r = session.read_ranges(std::slice::from_ref(&pr.handle)).await;
                         let lock = session.take_lock_time();
                         lock_total.set(lock_total.get() + lock);
                         match r {
                             Ok(mut bufs) => {
-                                self.span(OpClass::DataRead, t0, lock);
+                                self.span(OpClass::DataRead, t0, lock, backend);
                                 let buf = bufs.pop().expect("one buffer per handle");
+                                if let Some(m) = &self.metrics {
+                                    m.bytes_read.add(buf.len());
+                                }
                                 let mut out = out.borrow_mut();
                                 for &(idx, rel, len) in &pr.fields {
                                     out[idx] = Some(buf.slice(rel, len));
                                 }
                             }
-                            Err(e) => note_failure(failed, fi, e),
+                            Err(e) => {
+                                self.op_err(OpClass::DataRead, &e);
+                                note_failure(failed, fi, e)
+                            }
                         }
                     }
                 }));
@@ -591,17 +683,17 @@ impl IoEngine {
                 .map(|(i, id)| {
                     let (ds, _, _) = &split[i];
                     boxed(async move {
-                        sem.acquire().await;
-                        let _adm = self.admit(sem);
+                        let _adm = self.admit_waited(sem, OpClass::DataRead).await;
                         let mut session = match Checkout::new(&self.store_pool, "store") {
                             Ok(s) => s,
                             Err(e) => return note_failure(failed, i, e),
                         };
+                        let backend = session.name();
                         let t0 = self.sim.now();
                         let loc = session.retrieve_direct(ds, id).await;
                         let lock = session.take_lock_time();
                         lock_total.set(lock_total.get() + lock);
-                        self.span(OpClass::IndexRead, t0, lock);
+                        self.span(OpClass::IndexRead, t0, lock, backend);
                         let Some(loc) = loc else {
                             return; // absent field: cache semantics
                         };
@@ -612,10 +704,16 @@ impl IoEngine {
                         lock_total.set(lock_total.get() + lock);
                         match r {
                             Ok(bytes) => {
-                                self.span(OpClass::DataRead, t1, lock);
+                                self.span(OpClass::DataRead, t1, lock, backend);
+                                if let Some(m) = &self.metrics {
+                                    m.bytes_read.add(bytes.len());
+                                }
                                 out.borrow_mut()[i] = Some((id.clone(), bytes));
                             }
-                            Err(e) => note_failure(failed, i, e),
+                            Err(e) => {
+                                self.op_err(OpClass::DataRead, &e);
+                                note_failure(failed, i, e)
+                            }
                         }
                     })
                 })

@@ -26,11 +26,16 @@
 //! torn:write:<n>            the n-th write persists a prefix, then errors
 //! err:<class>:p<prob>       each op of <class> fails with probability p
 //! slow:<class>:<micros>     delay each op of <class> by <micros> µs
+//! only=<n>                  scope ALL rules to the n-th built instance
 //! ```
 //!
 //! `<class>` is one of `write`, `read`, `flush` (store side), `index`,
 //! `index-flush` (catalogue side). Example:
-//! `seed=7,err:read:p0.2,slow:write:250`.
+//! `seed=7,err:read:p0.2,slow:write:250`. Instances are numbered in
+//! build order (replica 0 before replica 1, stores before catalogues),
+//! so `slow:read:2000,only=1` degrades exactly one replica of a
+//! `replicated:2` store — the telemetry ablation (`abl_observe`) uses
+//! this to show per-layer histograms isolating a slow replica.
 
 pub mod catalogue;
 pub mod plan;

@@ -76,6 +76,12 @@ pub enum FaultAction {
 pub struct FaultPlan {
     pub seed: u64,
     pub rules: Vec<(FaultClass, FaultAction)>,
+    /// `only=<n>` clause: rules apply only to the n-th built instance
+    /// (0-based build order); every other instance gets a transparent
+    /// wrapper. This is how a spec targets ONE replica of a replicated
+    /// store — e.g. `slow:read:2000,only=1` slows replica 1 and leaves
+    /// replica 0 healthy.
+    pub only_instance: Option<u64>,
     /// distinct stream per built instance, shared across config clones
     builds: Rc<std::cell::Cell<u64>>,
 }
@@ -85,12 +91,19 @@ impl FaultPlan {
         FaultPlan {
             seed,
             rules: Vec::new(),
+            only_instance: None,
             builds: Rc::new(std::cell::Cell::new(0)),
         }
     }
 
     pub fn with_rule(mut self, class: FaultClass, action: FaultAction) -> FaultPlan {
         self.rules.push((class, action));
+        self
+    }
+
+    /// Scope every rule to the n-th built instance (see `only_instance`).
+    pub fn with_only_instance(mut self, n: u64) -> FaultPlan {
+        self.only_instance = Some(n);
         self
     }
 
@@ -104,6 +117,13 @@ impl FaultPlan {
                 plan.seed = seed
                     .parse()
                     .map_err(|_| invalid(format!("bad seed `{seed}`")))?;
+                continue;
+            }
+            if let Some(n) = clause.strip_prefix("only=") {
+                plan.only_instance = Some(
+                    n.parse()
+                        .map_err(|_| invalid(format!("bad instance `{n}`")))?,
+                );
                 continue;
             }
             let parts: Vec<&str> = clause.split(':').collect();
@@ -176,7 +196,11 @@ impl FaultPlan {
                 }
             })
             .collect();
-        parts.join(",")
+        let mut out = parts.join(",");
+        if let Some(n) = self.only_instance {
+            out.push_str(&format!(",only={n}"));
+        }
+        out
     }
 
     /// Mint the shared mutable state for one built wrapper instance.
@@ -223,8 +247,15 @@ fn injected(detail: String) -> FdbError {
 impl FaultState {
     fn new(plan: &FaultPlan, instance: u64, sim: Option<&Sim>) -> FaultState {
         let mut root = Rng::new(plan.seed);
+        // an `only=` clause scoped to a different instance builds a
+        // transparent wrapper: no rules, nothing ever fires
+        let scoped_out = plan.only_instance.is_some_and(|k| k != instance);
         FaultState {
-            rules: plan.rules.clone(),
+            rules: if scoped_out {
+                Vec::new()
+            } else {
+                plan.rules.clone()
+            },
             counts: [0; NCLASSES],
             rng: root.fork(instance),
             dead: false,
@@ -362,6 +393,26 @@ mod tests {
         };
         assert_eq!(run(42), run(42), "same seed, same fault sequence");
         assert_ne!(run(42), run(43), "different seed, different sequence");
+    }
+
+    #[test]
+    fn only_clause_scopes_rules_to_one_instance() {
+        let plan = FaultPlan::parse("slow:read:2000,only=1").unwrap();
+        assert_eq!(plan.only_instance, Some(1));
+        assert!(plan.describe().ends_with(",only=1"));
+        // instance 0: transparent; instance 1: the slow rule fires
+        let healthy = plan.build_state(None);
+        let slow = plan.build_state(None);
+        assert!(matches!(
+            healthy.borrow_mut().on_op(FaultClass::Read, 0),
+            FaultDecision::Proceed { delay: None }
+        ));
+        assert!(matches!(
+            slow.borrow_mut().on_op(FaultClass::Read, 0),
+            FaultDecision::Proceed { delay: Some(d) } if d == SimTime::micros(2000)
+        ));
+        // bad instance number rejected
+        assert!(FaultPlan::parse("slow:read:10,only=x").is_err());
     }
 
     #[test]

@@ -30,6 +30,7 @@ use crate::fdb::location::FieldLocation;
 use crate::fdb::plan::{PlanStats, ReadPlan};
 use crate::fdb::request::Request;
 use crate::fdb::schema::Schema;
+use crate::fdb::telemetry::{is_injected_fault, EngineMetrics, MetricsRegistry};
 use crate::sim::exec::Sim;
 use crate::sim::futures::{boxed, join_all};
 use crate::sim::time::SimTime;
@@ -57,6 +58,14 @@ pub struct Fdb {
     /// cumulative read-plan counters (zero until a coalesced retrieve
     /// runs; see [`IoProfile::coalesce_gap`])
     plan_stats: Cell<PlanStats>,
+    /// pre-bound per-class telemetry handles for the serial paths
+    /// (`None` = metrics off, the zero-overhead default)
+    metrics: Option<EngineMetrics>,
+    /// the attached registry (journal spans, slow-op log, plan/recovery
+    /// counters)
+    registry: Option<MetricsRegistry>,
+    /// slow-op threshold in ns (from [`IoProfile::slow_op_us`]; 0 = off)
+    slow_op_ns: u64,
 }
 
 impl Fdb {
@@ -78,6 +87,9 @@ impl Fdb {
             io: IoProfile::default(),
             engine: IoEngine::new(sim),
             plan_stats: Cell::new(PlanStats::default()),
+            metrics: None,
+            registry: None,
+            slow_op_ns: 0,
         }
     }
 
@@ -96,6 +108,27 @@ impl Fdb {
         self
     }
 
+    /// Attach a metrics registry (after [`Fdb::with_io`] — the slow-op
+    /// threshold comes from the profile): serial-path ops mirror their
+    /// trace accounting into per-class service histograms *at the same
+    /// sites with the same lock-subtracted durations* as
+    /// [`Trace::record`], so registry histogram totals agree exactly
+    /// with the trace; the engine records the admission-wait vs.
+    /// service-time split on the fan-out paths. The builder wires this
+    /// for [`crate::fdb::builder::FdbBuilder::metrics`].
+    pub fn with_metrics(mut self, reg: &MetricsRegistry) -> Fdb {
+        self.metrics = Some(EngineMetrics::bind(reg));
+        self.registry = Some(reg.clone());
+        self.slow_op_ns = self.io.slow_op_us.saturating_mul(1_000);
+        self.engine.set_metrics(reg, self.io.slow_op_us);
+        self
+    }
+
+    /// The attached metrics registry, if any.
+    pub fn metrics(&self) -> Option<&MetricsRegistry> {
+        self.registry.as_ref()
+    }
+
     /// The active I/O profile.
     pub fn io_profile(&self) -> IoProfile {
         self.io
@@ -111,15 +144,34 @@ impl Fdb {
     /// never exceeds [`IoProfile::depth`] (the engine's semaphore bound;
     /// asserted by the integration tests). Catalogue-session lookups
     /// and store I/O share the one semaphore, so the bound covers both.
+    /// With a registry attached the same value is exported live as the
+    /// `engine.inflight_peak` gauge.
     pub fn io_inflight_peak(&self) -> usize {
         self.engine.inflight_peak()
     }
 
     /// Cumulative read-plan counters across this instance's coalesced
     /// retrieves: requested vs issued ops, merges, hole bytes read
-    /// through. All-zero until [`IoProfile::coalesce_gap`] > 0.
+    /// through. All-zero until [`IoProfile::coalesce_gap`] > 0. With a
+    /// registry attached the same counters are exported as `plan.*`.
     pub fn plan_stats(&self) -> PlanStats {
         self.plan_stats.get()
+    }
+
+    /// Accumulate one batch's plan counters — the `Cell` the
+    /// [`Fdb::plan_stats`] accessor reads, mirrored in lockstep onto
+    /// the registry's `plan.*` counters when metrics are attached.
+    fn absorb_plan_stats(&self, stats: PlanStats) {
+        let mut acc = self.plan_stats.get();
+        acc.absorb(stats);
+        self.plan_stats.set(acc);
+        if let Some(reg) = &self.registry {
+            reg.counter("plan.ops_in").add(stats.ops_in);
+            reg.counter("plan.ops_out").add(stats.ops_out);
+            reg.counter("plan.ops_merged").add(stats.ops_merged);
+            reg.counter("plan.bytes_read_through")
+                .add(stats.bytes_read_through);
+        }
     }
 
     /// Backend tags of the wired (store, catalogue) pair.
@@ -142,9 +194,26 @@ impl Fdb {
         let lock = self.store.take_lock_time()
             + self.catalogue.take_lock_time()
             + self.engine.take_pooled_lock_time();
-        self.trace.record(class, self.sim.now() - t0 - lock);
+        let now = self.sim.now();
+        self.trace.record(class, now - t0 - lock);
         if lock > SimTime::ZERO {
             self.trace.record(OpClass::Lock, lock);
+        }
+        if let Some(m) = &self.metrics {
+            m.probe(class).service.observe_duration(now - t0 - lock);
+            if lock > SimTime::ZERO {
+                m.probe(OpClass::Lock).service.observe_duration(lock);
+            }
+        }
+        if let Some(reg) = &self.registry {
+            reg.record_span(0, class.label(), t0, now);
+            if self.slow_op_ns > 0 && (now - t0).as_nanos() >= self.slow_op_ns {
+                let backend = match class {
+                    OpClass::DataRead | OpClass::DataWrite => self.store.name(),
+                    _ => self.catalogue.name(),
+                };
+                reg.record_slow_op(class, backend, now - t0);
+            }
         }
     }
 
@@ -279,6 +348,13 @@ impl Fdb {
         let t0 = self.sim.now();
         let stats = self.catalogue.recover_dataset(ds).await;
         self.account(OpClass::IndexRead, t0);
+        if let (Some(reg), Ok(s)) = (&self.registry, &stats) {
+            reg.counter("recovery.replayed").add(s.replayed as u64);
+            reg.counter("recovery.committed").add(s.committed as u64);
+            reg.counter("recovery.data_missing").add(s.data_missing as u64);
+            reg.counter("recovery.wal_files").add(s.wal_files as u64);
+            reg.counter("recovery.torn_bytes").add(s.torn_bytes as u64);
+        }
         stats
     }
 
@@ -368,8 +444,13 @@ impl Fdb {
         // serves reads — the two halves of the pipeline. Lock time is
         // drained per op (like `account`) so the IndexRead/DataRead
         // spans exclude it and it is recorded once under Lock.
+        let store_name = self.store.name();
+        let cat_name = self.catalogue.name();
+        let slow_op_ns = self.slow_op_ns;
         let store = &mut self.store;
         let catalogue = &mut self.catalogue;
+        let metrics = &self.metrics;
+        let registry = &self.registry;
         let lookups = async {
             for (id, (ds, colloc, elem)) in ids.iter().zip(&split) {
                 let t0 = sim.now();
@@ -377,6 +458,17 @@ impl Fdb {
                 let lock = catalogue.take_lock_time();
                 lock_total.set(lock_total.get() + lock);
                 trace.record(OpClass::IndexRead, sim.now() - t0 - lock);
+                if let Some(m) = metrics {
+                    m.probe(OpClass::IndexRead)
+                        .service
+                        .observe_duration(sim.now() - t0 - lock);
+                }
+                if let Some(reg) = registry {
+                    reg.record_span(0, OpClass::IndexRead.label(), t0, sim.now());
+                    if slow_op_ns > 0 && (sim.now() - t0).as_nanos() >= slow_op_ns {
+                        reg.record_slow_op(OpClass::IndexRead, cat_name, sim.now() - t0);
+                    }
+                }
                 if let Some(loc) = loc {
                     pipe.push((id.clone(), DataHandle::from_location(&loc)));
                 }
@@ -391,9 +483,29 @@ impl Fdb {
                         let lock = store.take_lock_time();
                         lock_total.set(lock_total.get() + lock);
                         trace.record(OpClass::DataRead, sim.now() - t0 - lock);
+                        if let Some(m) = metrics {
+                            m.probe(OpClass::DataRead)
+                                .service
+                                .observe_duration(sim.now() - t0 - lock);
+                            m.probe(OpClass::DataRead).ok.inc();
+                            m.bytes_read.add(bytes.len());
+                        }
+                        if let Some(reg) = registry {
+                            reg.record_span(1, OpClass::DataRead.label(), t0, sim.now());
+                            if slow_op_ns > 0 && (sim.now() - t0).as_nanos() >= slow_op_ns {
+                                reg.record_slow_op(OpClass::DataRead, store_name, sim.now() - t0);
+                            }
+                        }
                         out.borrow_mut().push((id, bytes));
                     }
                     Err(e) => {
+                        if let Some(m) = metrics {
+                            if is_injected_fault(&e) {
+                                m.probe(OpClass::DataRead).fault.inc();
+                            } else {
+                                m.probe(OpClass::DataRead).err.inc();
+                            }
+                        }
                         failed.set(Some(e));
                         break;
                     }
@@ -404,6 +516,9 @@ impl Fdb {
         let lock = lock_total.get();
         if lock > SimTime::ZERO {
             self.trace.record(OpClass::Lock, lock);
+            if let Some(m) = &self.metrics {
+                m.probe(OpClass::Lock).service.observe_duration(lock);
+            }
         }
         if let Some(e) = failed.take() {
             return Err(e);
@@ -450,9 +565,7 @@ impl Fdb {
                     self.io.coalesce_max,
                 )
                 .await?;
-            let mut acc = self.plan_stats.get();
-            acc.absorb(stats);
-            self.plan_stats.set(acc);
+            self.absorb_plan_stats(stats);
             out
         } else {
             // catalogue phase: serial lookups on the one index client,
@@ -467,9 +580,7 @@ impl Fdb {
                 }
             }
             let plan = ReadPlan::build(&located, self.io.coalesce_gap, self.io.coalesce_max);
-            let mut stats = self.plan_stats.get();
-            stats.absorb(plan.stats);
-            self.plan_stats.set(stats);
+            self.absorb_plan_stats(plan.stats);
             // the whole plan as ONE vectored batch: a bare backend
             // resolves each container (fd, ioctx) once across every
             // merged range (wrappers route per range by design)

@@ -54,6 +54,7 @@ pub mod location;
 pub mod plan;
 pub mod request;
 pub mod schema;
+pub mod telemetry;
 pub mod wire;
 
 pub mod posix {
@@ -92,6 +93,7 @@ pub use location::FieldLocation;
 pub use plan::{PlanStats, ReadPlan};
 pub use request::Request;
 pub use schema::Schema;
+pub use telemetry::{HistogramSnapshot, MetricsRegistry, SlowOp};
 
 /// FDB error surface.
 #[derive(Clone, Debug, PartialEq, Eq)]

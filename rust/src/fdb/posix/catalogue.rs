@@ -14,6 +14,7 @@ use crate::fdb::key::Key;
 use crate::fdb::location::FieldLocation;
 use crate::fdb::request::Request;
 use crate::fdb::schema::Schema;
+use crate::fdb::telemetry::Counter;
 use crate::fdb::FdbError;
 use crate::lustre::{Fd, FsError, LustreClient, StripeSpec};
 
@@ -79,8 +80,11 @@ pub struct PosixCatalogue {
     /// datasets whose WAL took un-synced intents in the current group
     group_dirty: std::collections::HashSet<String>,
     /// WAL fdatasync barriers issued so far (per-intent + group + commit
-    /// watermarks) — observability for the group-commit tests
-    wal_syncs: u64,
+    /// watermarks) — observability for the group-commit tests. A shared
+    /// telemetry [`Counter`] handle so the builder can serve the same
+    /// count from the metrics registry (`cat.<label>.wal_syncs`);
+    /// standalone (registry-less) by default.
+    wal_syncs: Counter,
 }
 
 impl PosixCatalogue {
@@ -96,15 +100,25 @@ impl PosixCatalogue {
             durable: false,
             in_group: false,
             group_dirty: std::collections::HashSet::new(),
-            wal_syncs: 0,
+            wal_syncs: Counter::new(),
         }
     }
 
     /// WAL fdatasync barriers issued so far. A durable N-field
     /// `archive_many` batch costs 1 (group commit); N single-field
-    /// `archive` calls cost N.
+    /// `archive` calls cost N. Thin shim over the shared counter
+    /// handle, which doubles as the registry's `cat.<label>.wal_syncs`.
     pub fn wal_sync_count(&self) -> u64 {
-        self.wal_syncs
+        self.wal_syncs.get()
+    }
+
+    /// Replace the WAL-sync counter with a registry-owned handle (the
+    /// builder wires `cat.<label>.wal_syncs` here when metrics are
+    /// attached), preserving any already-counted barriers.
+    pub fn with_wal_counter(mut self, counter: Counter) -> PosixCatalogue {
+        counter.add(self.wal_syncs.get());
+        self.wal_syncs = counter;
+        self
     }
 
     /// Enable reader-side index-blob caching (the real FDB loads indexes
@@ -282,7 +296,7 @@ impl PosixCatalogue {
                     .fdatasync(&wal_fd)
                     .await
                     .map_err(|e| fs_err("fdatasync", wal_fd.path(), e))?;
-                self.wal_syncs += 1;
+                self.wal_syncs.inc();
             }
         }
         let state = self.write_state.get_mut(&ds.canonical()).unwrap();
@@ -350,7 +364,7 @@ impl PosixCatalogue {
                     .fdatasync(&wal_fd)
                     .await
                     .map_err(|e| fs_err("fdatasync", wal_fd.path(), e))?;
-                self.wal_syncs += 1;
+                self.wal_syncs.inc();
             }
         }
         Ok(())
@@ -473,7 +487,7 @@ impl PosixCatalogue {
                     .fdatasync(&wal_fd)
                     .await
                     .map_err(|e| fs_err("fdatasync", wal_fd.path(), e))?;
-                self.wal_syncs += 1;
+                self.wal_syncs.inc();
             }
         }
         Ok(())
@@ -930,7 +944,9 @@ impl crate::fdb::backend::Catalogue for PosixCatalogue {
         Some(Box::new(
             PosixCatalogue::new(self.client.fork(), &self.root, self.schema.clone())
                 .with_index_cache(self.index_cache_on)
-                .with_durable(self.durable),
+                .with_durable(self.durable)
+                // sessions share the parent's WAL-sync counter handle
+                .with_wal_counter(self.wal_syncs.clone()),
         ))
     }
 

@@ -1,0 +1,507 @@
+//! [`InstrumentStore`] / [`InstrumentCatalogue`]: metrics-recording
+//! wrapper shims in the style of [`crate::fdb::fault::FaultStore`].
+//!
+//! Each shim carries a **layer label** (assigned by the builder while
+//! recursing the [`crate::fdb::BackendConfig`] tree: `posix`,
+//! `replicated.r0`, `tiered.front`, `sharded.s2.…`) and a set of
+//! handles pre-bound from the registry at construction, so a composed
+//! `sharded(tiered(posix, replicated(lustre)))` stack reports
+//! per-replica read latency, per-tier archive counts, and per-shard
+//! lookups instead of one blended number. Recording is a handle touch
+//! per op — no registry lookups on the hot path.
+//!
+//! Latency histograms need a clock: the shim records durations only
+//! when built with a [`Sim`] handle (counters and byte totals always
+//! record). All non-instrumented surface (direct-retrieve, wipe, lock
+//! time, group hooks, recovery) passes through untouched, so metrics
+//! on vs. off is behaviourally identical.
+
+use std::rc::Rc;
+
+use crate::fdb::backend::{
+    Catalogue, CatalogueSession, LocalBoxFuture, Store, StoreSession,
+};
+use crate::fdb::datahandle::DataHandle;
+use crate::fdb::fault::wal::RecoveryStats;
+use crate::fdb::key::Key;
+use crate::fdb::location::FieldLocation;
+use crate::fdb::request::Request;
+use crate::fdb::FdbError;
+use crate::sim::exec::Sim;
+use crate::sim::time::SimTime;
+use crate::util::content::Bytes;
+
+use super::is_injected_fault;
+use super::registry::{Counter, Hist, MetricsRegistry};
+
+/// Latency + outcome handles for one instrumented method.
+#[derive(Clone)]
+struct MethodProbe {
+    lat: Hist,
+    ok: Counter,
+    err: Counter,
+    fault: Counter,
+}
+
+impl MethodProbe {
+    fn bind(reg: &MetricsRegistry, name: &str) -> MethodProbe {
+        MethodProbe {
+            lat: reg.histogram(name),
+            ok: reg.counter(&format!("{name}.ok")),
+            err: reg.counter(&format!("{name}.err")),
+            fault: reg.counter(&format!("{name}.fault")),
+        }
+    }
+
+    fn observe<T>(&self, dur: Option<SimTime>, result: &Result<T, FdbError>) {
+        if let Some(d) = dur {
+            self.lat.observe(d.as_nanos());
+        }
+        match result {
+            Ok(_) => self.ok.inc(),
+            Err(e) if is_injected_fault(e) => self.fault.inc(),
+            Err(_) => self.err.inc(),
+        }
+    }
+}
+
+/// Shared timing context: duration is measurable only with a clock.
+#[derive(Clone)]
+struct Clock(Option<Sim>);
+
+impl Clock {
+    fn start(&self) -> Option<SimTime> {
+        self.0.as_ref().map(|s| s.now())
+    }
+
+    fn elapsed(&self, t0: Option<SimTime>) -> Option<SimTime> {
+        match (t0, self.0.as_ref()) {
+            (Some(t0), Some(sim)) => Some(sim.now().saturating_sub(t0)),
+            _ => None,
+        }
+    }
+}
+
+/// The pre-bound handle set of one store layer. Clone-cheap (shims and
+/// their sessions share one set, like [`FaultStore`]'s shared state).
+#[derive(Clone)]
+pub struct StoreProbes {
+    archive: MethodProbe,
+    read: MethodProbe,
+    flush: MethodProbe,
+    bytes_written: Counter,
+    bytes_read: Counter,
+}
+
+impl StoreProbes {
+    fn bind(reg: &MetricsRegistry, label: &str) -> StoreProbes {
+        StoreProbes {
+            archive: MethodProbe::bind(reg, &format!("store.{label}.archive")),
+            read: MethodProbe::bind(reg, &format!("store.{label}.read")),
+            flush: MethodProbe::bind(reg, &format!("store.{label}.flush")),
+            bytes_written: reg.counter(&format!("store.{label}.bytes_written")),
+            bytes_read: reg.counter(&format!("store.{label}.bytes_read")),
+        }
+    }
+}
+
+/// A metrics-recording [`Store`] wrapper for one labelled layer.
+pub struct InstrumentStore {
+    inner: Box<dyn Store>,
+    probes: Rc<StoreProbes>,
+    clock: Clock,
+}
+
+impl InstrumentStore {
+    pub fn new(
+        inner: Box<dyn Store>,
+        reg: &MetricsRegistry,
+        label: &str,
+        sim: Option<&Sim>,
+    ) -> InstrumentStore {
+        InstrumentStore {
+            inner,
+            probes: Rc::new(StoreProbes::bind(reg, label)),
+            clock: Clock(sim.cloned()),
+        }
+    }
+}
+
+impl Store for InstrumentStore {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn archive<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        colloc: &'a Key,
+        id: &'a Key,
+        data: Bytes,
+    ) -> LocalBoxFuture<'a, Result<FieldLocation, FdbError>> {
+        Box::pin(async move {
+            let len = data.len();
+            let t0 = self.clock.start();
+            let result = self.inner.archive(ds, colloc, id, data).await;
+            self.probes.archive.observe(self.clock.elapsed(t0), &result);
+            if result.is_ok() {
+                self.probes.bytes_written.add(len);
+            }
+            result
+        })
+    }
+
+    fn flush<'a>(&'a mut self) -> LocalBoxFuture<'a, Result<(), FdbError>> {
+        Box::pin(async move {
+            let t0 = self.clock.start();
+            let result = self.inner.flush().await;
+            self.probes.flush.observe(self.clock.elapsed(t0), &result);
+            result
+        })
+    }
+
+    fn read<'a>(
+        &'a mut self,
+        handle: &'a DataHandle,
+    ) -> LocalBoxFuture<'a, Result<Bytes, FdbError>> {
+        Box::pin(async move {
+            let t0 = self.clock.start();
+            let result = self.inner.read(handle).await;
+            self.probes.read.observe(self.clock.elapsed(t0), &result);
+            if let Ok(b) = &result {
+                self.probes.bytes_read.add(b.len());
+            }
+            result
+        })
+    }
+
+    fn read_ranges<'a>(
+        &'a mut self,
+        handles: &'a [DataHandle],
+    ) -> LocalBoxFuture<'a, Result<Vec<Bytes>, FdbError>> {
+        Box::pin(async move {
+            // delegate to the inner vectored path (a loop of `read`
+            // here would defeat per-batch container resolution); one
+            // latency sample per batch
+            let t0 = self.clock.start();
+            let result = self.inner.read_ranges(handles).await;
+            self.probes.read.observe(self.clock.elapsed(t0), &result);
+            if let Ok(bs) = &result {
+                self.probes
+                    .bytes_read
+                    .add(bs.iter().map(|b| b.len()).sum());
+            }
+            result
+        })
+    }
+
+    fn direct_retrieve_enabled(&self) -> bool {
+        self.inner.direct_retrieve_enabled()
+    }
+
+    fn retrieve_direct<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        id: &'a Key,
+    ) -> LocalBoxFuture<'a, Option<FieldLocation>> {
+        self.inner.retrieve_direct(ds, id)
+    }
+
+    fn supports_wipe(&self) -> bool {
+        self.inner.supports_wipe()
+    }
+
+    fn wipe_dataset<'a>(&'a mut self, ds: &'a Key) -> LocalBoxFuture<'a, bool> {
+        self.inner.wipe_dataset(ds)
+    }
+
+    fn take_lock_time(&self) -> SimTime {
+        self.inner.take_lock_time()
+    }
+
+    fn session(&mut self) -> Option<Box<dyn StoreSession>> {
+        // sessions record into the SAME layer handles as the parent:
+        // per-layer metrics aggregate over every client of the layer
+        let inner = self.inner.session()?;
+        Some(Box::new(InstrumentStore {
+            inner: inner.into_store(),
+            probes: self.probes.clone(),
+            clock: self.clock.clone(),
+        }))
+    }
+}
+
+/// The pre-bound handle set of one catalogue layer.
+#[derive(Clone)]
+pub struct CatalogueProbes {
+    archive: MethodProbe,
+    flush: MethodProbe,
+    lookup_lat: Hist,
+    lookup_hit: Counter,
+    lookup_miss: Counter,
+    list_ops: Counter,
+}
+
+impl CatalogueProbes {
+    fn bind(reg: &MetricsRegistry, label: &str) -> CatalogueProbes {
+        CatalogueProbes {
+            archive: MethodProbe::bind(reg, &format!("cat.{label}.archive")),
+            flush: MethodProbe::bind(reg, &format!("cat.{label}.flush")),
+            lookup_lat: reg.histogram(&format!("cat.{label}.lookup")),
+            lookup_hit: reg.counter(&format!("cat.{label}.lookup.hit")),
+            lookup_miss: reg.counter(&format!("cat.{label}.lookup.miss")),
+            list_ops: reg.counter(&format!("cat.{label}.list.ops")),
+        }
+    }
+}
+
+/// A metrics-recording [`Catalogue`] wrapper for one labelled layer.
+pub struct InstrumentCatalogue {
+    inner: Box<dyn Catalogue>,
+    probes: Rc<CatalogueProbes>,
+    clock: Clock,
+}
+
+impl InstrumentCatalogue {
+    pub fn new(
+        inner: Box<dyn Catalogue>,
+        reg: &MetricsRegistry,
+        label: &str,
+        sim: Option<&Sim>,
+    ) -> InstrumentCatalogue {
+        InstrumentCatalogue {
+            inner,
+            probes: Rc::new(CatalogueProbes::bind(reg, label)),
+            clock: Clock(sim.cloned()),
+        }
+    }
+}
+
+impl Catalogue for InstrumentCatalogue {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn archive<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        colloc: &'a Key,
+        elem: &'a Key,
+        id: &'a Key,
+        loc: &'a FieldLocation,
+    ) -> LocalBoxFuture<'a, Result<(), FdbError>> {
+        Box::pin(async move {
+            let t0 = self.clock.start();
+            let result = self.inner.archive(ds, colloc, elem, id, loc).await;
+            self.probes.archive.observe(self.clock.elapsed(t0), &result);
+            result
+        })
+    }
+
+    fn flush<'a>(&'a mut self) -> LocalBoxFuture<'a, Result<(), FdbError>> {
+        Box::pin(async move {
+            let t0 = self.clock.start();
+            let result = self.inner.flush().await;
+            self.probes.flush.observe(self.clock.elapsed(t0), &result);
+            result
+        })
+    }
+
+    fn close<'a>(&'a mut self) -> LocalBoxFuture<'a, Result<(), FdbError>> {
+        self.inner.close()
+    }
+
+    fn recover_dataset<'a>(
+        &'a mut self,
+        ds: &'a Key,
+    ) -> LocalBoxFuture<'a, Result<RecoveryStats, FdbError>> {
+        self.inner.recover_dataset(ds)
+    }
+
+    fn retrieve<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        colloc: &'a Key,
+        elem: &'a Key,
+        id: &'a Key,
+    ) -> LocalBoxFuture<'a, Option<FieldLocation>> {
+        Box::pin(async move {
+            let t0 = self.clock.start();
+            let result = self.inner.retrieve(ds, colloc, elem, id).await;
+            if let Some(d) = self.clock.elapsed(t0) {
+                self.probes.lookup_lat.observe(d.as_nanos());
+            }
+            match &result {
+                Some(_) => self.probes.lookup_hit.inc(),
+                None => self.probes.lookup_miss.inc(),
+            }
+            result
+        })
+    }
+
+    fn axis<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        colloc: &'a Key,
+        dim: &'a str,
+    ) -> LocalBoxFuture<'a, Vec<String>> {
+        self.inner.axis(ds, colloc, dim)
+    }
+
+    fn list<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        request: &'a Request,
+    ) -> LocalBoxFuture<'a, Vec<(Key, FieldLocation)>> {
+        self.probes.list_ops.inc();
+        self.inner.list(ds, request)
+    }
+
+    fn invalidate_preload(&mut self, ds: &Key) {
+        self.inner.invalidate_preload(ds);
+    }
+
+    fn deregister_dataset<'a>(&'a mut self, ds: &'a Key) -> LocalBoxFuture<'a, ()> {
+        self.inner.deregister_dataset(ds)
+    }
+
+    fn take_lock_time(&self) -> SimTime {
+        self.inner.take_lock_time()
+    }
+
+    fn session(&mut self) -> Option<Box<dyn CatalogueSession>> {
+        let inner = self.inner.session()?;
+        Some(Box::new(InstrumentCatalogue {
+            inner: inner.into_catalogue(),
+            probes: self.probes.clone(),
+            clock: self.clock.clone(),
+        }))
+    }
+
+    fn begin_archive_group(&mut self) {
+        self.inner.begin_archive_group();
+    }
+
+    fn end_archive_group<'a>(&'a mut self) -> LocalBoxFuture<'a, Result<(), FdbError>> {
+        self.inner.end_archive_group()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fdb::backend::{block_on_ready as block_on, NullCatalogue, NullStore};
+
+    fn reg_and_store() -> (MetricsRegistry, InstrumentStore) {
+        let reg = MetricsRegistry::new();
+        let s = InstrumentStore::new(Box::new(NullStore), &reg, "posix", None);
+        (reg, s)
+    }
+
+    #[test]
+    fn store_ops_count_and_accumulate_bytes() {
+        let (reg, mut s) = reg_and_store();
+        let ds = Key::new();
+        let id = Key::of(&[("step", "1")]);
+        let loc = block_on(s.archive(&ds, &ds, &id, Bytes::virt(64, 1))).unwrap();
+        let h = DataHandle::from_location(&loc);
+        block_on(s.read(&h)).unwrap();
+        block_on(s.flush()).unwrap();
+        assert_eq!(reg.counter_value("store.posix.archive.ok"), 1);
+        assert_eq!(reg.counter_value("store.posix.bytes_written"), 64);
+        assert_eq!(reg.counter_value("store.posix.read.ok"), 1);
+        assert_eq!(reg.counter_value("store.posix.bytes_read"), 64);
+        assert_eq!(reg.counter_value("store.posix.flush.ok"), 1);
+        // no clock: counters record, latency histograms stay empty
+        assert!(reg.hist("store.posix.read").is_none() || reg.hist("store.posix.read").unwrap().count() == 0);
+    }
+
+    #[test]
+    fn mismatched_read_counts_as_organic_error_not_fault() {
+        let (reg, mut s) = reg_and_store();
+        let h = DataHandle::Posix {
+            path: "/f".into(),
+            ranges: vec![(0, 4)],
+        };
+        assert!(block_on(s.read(&h)).is_err());
+        assert_eq!(reg.counter_value("store.posix.read.err"), 1);
+        assert_eq!(reg.counter_value("store.posix.read.fault"), 0);
+        assert_eq!(reg.counter_value("store.posix.bytes_read"), 0);
+    }
+
+    #[test]
+    fn injected_faults_count_separately() {
+        use crate::fdb::fault::plan::{FaultAction, FaultClass, FaultPlan};
+        use crate::fdb::fault::FaultStore;
+        let reg = MetricsRegistry::new();
+        let plan =
+            FaultPlan::new(3).with_rule(FaultClass::Read, FaultAction::FailStop { after: 0 });
+        let fault = FaultStore::new(Box::new(NullStore), plan.build_state(None));
+        let mut s = InstrumentStore::new(Box::new(fault), &reg, "r1", None);
+        let h = DataHandle::Null { length: 8 };
+        assert!(block_on(s.read(&h)).is_err());
+        assert_eq!(reg.counter_value("store.r1.read.fault"), 1);
+        assert_eq!(reg.counter_value("store.r1.read.err"), 0);
+    }
+
+    #[test]
+    fn sessions_record_into_the_parents_layer() {
+        let (reg, mut s) = reg_and_store();
+        let mut session = s.session().expect("null store has sessions");
+        let h = DataHandle::Null { length: 16 };
+        block_on(session.read(&h)).unwrap();
+        block_on(s.read(&h)).unwrap();
+        // one layer, two clients, one aggregate
+        assert_eq!(reg.counter_value("store.posix.read.ok"), 2);
+        assert_eq!(reg.counter_value("store.posix.bytes_read"), 32);
+    }
+
+    #[test]
+    fn catalogue_lookups_split_hit_and_miss() {
+        let reg = MetricsRegistry::new();
+        let mut c =
+            InstrumentCatalogue::new(Box::new(NullCatalogue::new()), &reg, "s0", None);
+        let ds = Key::new();
+        let id = Key::of(&[("step", "1")]);
+        let loc = FieldLocation::Null { length: 4 };
+        block_on(c.archive(&ds, &ds, &id, &id, &loc)).unwrap();
+        assert!(block_on(c.retrieve(&ds, &ds, &id, &id)).is_some());
+        let missing = Key::of(&[("step", "9")]);
+        assert!(block_on(c.retrieve(&ds, &ds, &missing, &missing)).is_none());
+        block_on(c.list(&ds, &Request::parse("").unwrap()));
+        assert_eq!(reg.counter_value("cat.s0.archive.ok"), 1);
+        assert_eq!(reg.counter_value("cat.s0.lookup.hit"), 1);
+        assert_eq!(reg.counter_value("cat.s0.lookup.miss"), 1);
+        assert_eq!(reg.counter_value("cat.s0.list.ops"), 1);
+    }
+
+    #[test]
+    fn latency_records_with_a_clock() {
+        use crate::sim::exec::Sim;
+        let sim = Sim::new();
+        let reg = MetricsRegistry::new();
+        // a store whose reads cost virtual time: FaultStore slow rule
+        use crate::fdb::fault::plan::{FaultAction, FaultClass, FaultPlan};
+        use crate::fdb::fault::FaultStore;
+        let plan =
+            FaultPlan::new(3).with_rule(FaultClass::Read, FaultAction::Slow { micros: 250 });
+        let fault = FaultStore::new(Box::new(NullStore), plan.build_state(Some(&sim)));
+        let store = std::rc::Rc::new(std::cell::RefCell::new(InstrumentStore::new(
+            Box::new(fault),
+            &reg,
+            "lustre",
+            Some(&sim),
+        )));
+        let sim2 = sim.clone();
+        let store2 = store.clone();
+        sim.spawn(async move {
+            let _ = &sim2;
+            let h = DataHandle::Null { length: 8 };
+            store2.borrow_mut().read(&h).await.unwrap();
+        });
+        sim.run();
+        let snap = reg.hist("store.lustre.read").unwrap();
+        assert_eq!(snap.count(), 1);
+        assert_eq!(snap.percentile(50.0), SimTime::micros(250).as_nanos());
+    }
+}

@@ -1,0 +1,85 @@
+//! The telemetry subsystem: one observability layer for the whole I/O
+//! stack, replacing the scattered one-off probes (`io_inflight_peak`,
+//! `plan_stats`, `wal_sync_count`, per-run `Trace` totals) with a
+//! single place to ask "where did this batch's time go, per backend
+//! layer, at p99".
+//!
+//! Three cooperating pieces:
+//!
+//! * [`MetricsRegistry`] — named counters, gauges, and latency/size
+//!   histograms. Histograms keep exact samples and report **log2
+//!   buckets** for exposition plus exact p50/p95/p99/p999 by the same
+//!   nearest-rank rule as [`crate::util::stats::Summary::percentile`],
+//!   so a bench p99 and a registry p99 over one sample agree to the
+//!   nanosecond. Hot paths pre-bind handles ([`Counter`], [`Gauge`],
+//!   [`Hist`]) at attach time — recording is one `Cell`/`Vec` touch,
+//!   no name lookup per op.
+//! * [`instrument::InstrumentStore`] / [`instrument::InstrumentCatalogue`]
+//!   — wrapper shims in the style of [`crate::fdb::fault::FaultStore`]
+//!   that label every layer of a composed backend stack: a
+//!   `sharded(tiered(posix, replicated(lustre)))` deployment reports
+//!   per-replica read latency, front-tier hit counts, and per-shard
+//!   lookups instead of one blended number. The builder wires them
+//!   automatically when [`crate::fdb::FdbBuilder::metrics`] attaches a
+//!   registry.
+//! * The op-level event [`journal`] — a bounded ring buffer of spans
+//!   (drop-oldest, overflow counted) exported as **Chrome trace-event
+//!   JSON** (`fdbctl trace --out`, load in `chrome://tracing` /
+//!   Perfetto), one track per in-flight engine lane.
+//!
+//! The engine ([`crate::fdb::engine`]) records **admission wait** (time
+//! queued on the depth semaphore) and **service time** (inner op)
+//! separately per [`crate::sim::trace::OpClass`], plus bytes and
+//! outcome (ok / typed error / injected fault). `fdbctl metrics` prints
+//! the registry as Prometheus-style text; `--metrics <path>` on
+//! `hammer`/`opsrun`/`crash` dumps it as JSON.
+
+pub mod instrument;
+pub mod journal;
+pub mod registry;
+
+pub use instrument::{InstrumentCatalogue, InstrumentStore};
+pub use journal::{Journal, SpanEvent};
+pub use registry::{
+    Counter, EngineMetrics, Gauge, Hist, HistogramSnapshot, MetricsRegistry, OpProbe, SlowOp,
+};
+
+use crate::fdb::FdbError;
+
+/// Whether an error is an *injected* fault (the seeded fault harness)
+/// rather than an organic backend failure — telemetry labels the two
+/// outcomes separately so a chaos run's error budget reads correctly.
+pub fn is_injected_fault(err: &FdbError) -> bool {
+    match err {
+        FdbError::Backend { backend, .. } => *backend == "fault",
+        FdbError::AllReplicasFailed { last, .. } => is_injected_fault(last),
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn injected_fault_detection() {
+        assert!(is_injected_fault(&FdbError::Backend {
+            backend: "fault",
+            detail: "injected".into(),
+        }));
+        assert!(!is_injected_fault(&FdbError::Backend {
+            backend: "posix",
+            detail: "enospc".into(),
+        }));
+        // the injected flavour survives replica-wrapper nesting
+        assert!(is_injected_fault(&FdbError::AllReplicasFailed {
+            op: "read",
+            copies: 2,
+            last: Box::new(FdbError::Backend {
+                backend: "fault",
+                detail: "injected".into(),
+            }),
+        }));
+        assert!(!is_injected_fault(&FdbError::UnderspecifiedRequest));
+    }
+}

@@ -1,0 +1,603 @@
+//! [`MetricsRegistry`]: named counters, gauges, and exact-sample
+//! histograms with log2-bucketed exposition, plus the slow-op log and
+//! the span journal. Clone-cheap (`Rc<RefCell<..>>`, same pattern as
+//! [`crate::sim::trace::Trace`]); handles minted once and recorded
+//! through directly on hot paths.
+
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use crate::sim::time::SimTime;
+use crate::sim::trace::OpClass;
+use crate::util::json::Json;
+use crate::util::stats::nearest_rank_index;
+
+use super::journal::Journal;
+
+/// A monotonically increasing counter handle. Clones share the value.
+#[derive(Clone, Default)]
+pub struct Counter(Rc<Cell<u64>>);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.set(self.0.get() + n);
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.get()
+    }
+}
+
+/// A last/peak-value gauge handle. Clones share the value.
+#[derive(Clone, Default)]
+pub struct Gauge(Rc<Cell<u64>>);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.set(v);
+    }
+
+    /// Keep the maximum ever set — peak instrumentation.
+    pub fn set_max(&self, v: u64) {
+        if v > self.0.get() {
+            self.0.set(v);
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.get()
+    }
+}
+
+/// A histogram handle over exact `u64` samples (latency nanoseconds or
+/// byte sizes). Observation is a `Vec` push; bucketing and percentiles
+/// are computed at readout, never on the hot path.
+#[derive(Clone, Default)]
+pub struct Hist(Rc<RefCell<HistInner>>);
+
+#[derive(Default)]
+struct HistInner {
+    samples: Vec<u64>,
+    sum: u64,
+}
+
+impl Hist {
+    pub fn observe(&self, v: u64) {
+        let mut inner = self.0.borrow_mut();
+        inner.samples.push(v);
+        inner.sum += v;
+    }
+
+    pub fn observe_duration(&self, d: SimTime) {
+        self.observe(d.as_nanos());
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.borrow().samples.len() as u64
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let inner = self.0.borrow();
+        let mut sorted = inner.samples.clone();
+        sorted.sort_unstable();
+        HistogramSnapshot {
+            sorted,
+            sum: inner.sum,
+        }
+    }
+}
+
+/// Point-in-time view of one histogram: exact nearest-rank percentiles
+/// plus log2 buckets for exposition.
+#[derive(Clone, Debug)]
+pub struct HistogramSnapshot {
+    sorted: Vec<u64>,
+    sum: u64,
+}
+
+impl HistogramSnapshot {
+    pub fn count(&self) -> u64 {
+        self.sorted.len() as u64
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    pub fn min(&self) -> u64 {
+        self.sorted.first().copied().unwrap_or(0)
+    }
+
+    pub fn max(&self) -> u64 {
+        self.sorted.last().copied().unwrap_or(0)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.sorted.is_empty() {
+            return 0.0;
+        }
+        self.sum as f64 / self.sorted.len() as f64
+    }
+
+    /// Exact nearest-rank percentile (`p` in [0,100]) — the SAME rule
+    /// as [`crate::util::stats::Summary::percentile`], so bench and
+    /// telemetry agree on one sample.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.sorted.is_empty() {
+            return 0;
+        }
+        self.sorted[nearest_rank_index(p, self.sorted.len())]
+    }
+
+    /// Occupied log2 buckets as `(inclusive upper bound, count)` pairs,
+    /// ascending. A sample `v` lands in the bucket whose bound is
+    /// `next_power_of_two(max(v, 1))`.
+    pub fn log2_buckets(&self) -> Vec<(u64, u64)> {
+        let mut buckets: BTreeMap<u64, u64> = BTreeMap::new();
+        for &v in &self.sorted {
+            let bound = v.max(1).next_power_of_two();
+            *buckets.entry(bound).or_insert(0) += 1;
+        }
+        buckets.into_iter().collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .log2_buckets()
+            .into_iter()
+            .map(|(le, n)| Json::Arr(vec![Json::from(le), Json::from(n)]))
+            .collect();
+        Json::obj()
+            .set("count", self.count())
+            .set("sum", self.sum())
+            .set("min", self.min())
+            .set("max", self.max())
+            .set("mean", self.mean())
+            .set("p50", self.percentile(50.0))
+            .set("p95", self.percentile(95.0))
+            .set("p99", self.percentile(99.0))
+            .set("p999", self.percentile(99.9))
+            .set("buckets", buckets)
+    }
+}
+
+/// One entry of the slow-op log: an operation that exceeded
+/// `IoProfile::slow_op_us`.
+#[derive(Clone, Debug)]
+pub struct SlowOp {
+    pub class: OpClass,
+    /// layer/backend label the op ran against
+    pub backend: String,
+    pub duration: SimTime,
+}
+
+/// Cap on retained slow-op entries (overflow counted, newest dropped —
+/// the first slow ops are the diagnostic ones).
+const SLOW_OP_CAP: usize = 256;
+
+#[derive(Default)]
+struct RegistryInner {
+    counters: BTreeMap<String, Counter>,
+    gauges: BTreeMap<String, Gauge>,
+    hists: BTreeMap<String, Hist>,
+    journal: Journal,
+    slow_ops: Vec<SlowOp>,
+    slow_dropped: u64,
+}
+
+/// The metrics registry. Clone-cheap; one per `Fdb` (shareable across
+/// instances of a deployment by attaching the same registry through
+/// [`crate::fdb::FdbBuilder::metrics`]).
+#[derive(Clone, Default)]
+pub struct MetricsRegistry {
+    inner: Rc<RefCell<RegistryInner>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Get-or-create a counter handle. Bind once, record through the
+    /// handle — not through the registry — on hot paths.
+    pub fn counter(&self, name: &str) -> Counter {
+        self.inner
+            .borrow_mut()
+            .counters
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Gauge {
+        self.inner
+            .borrow_mut()
+            .gauges
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Hist {
+        self.inner
+            .borrow_mut()
+            .hists
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Current value of a counter (0 if never created).
+    pub fn counter_value(&self, name: &str) -> u64 {
+        self.inner
+            .borrow()
+            .counters
+            .get(name)
+            .map(|c| c.get())
+            .unwrap_or(0)
+    }
+
+    pub fn gauge_value(&self, name: &str) -> u64 {
+        self.inner
+            .borrow()
+            .gauges
+            .get(name)
+            .map(|g| g.get())
+            .unwrap_or(0)
+    }
+
+    /// Snapshot of a histogram, `None` if it was never created.
+    pub fn hist(&self, name: &str) -> Option<HistogramSnapshot> {
+        self.inner.borrow().hists.get(name).map(|h| h.snapshot())
+    }
+
+    /// Names of all histograms with at least one sample, sorted.
+    pub fn hist_names(&self) -> Vec<String> {
+        self.inner
+            .borrow()
+            .hists
+            .iter()
+            .filter(|(_, h)| h.count() > 0)
+            .map(|(k, _)| k.clone())
+            .collect()
+    }
+
+    // ---- slow-op log ----
+
+    pub fn record_slow_op(&self, class: OpClass, backend: &str, duration: SimTime) {
+        let mut inner = self.inner.borrow_mut();
+        if inner.slow_ops.len() >= SLOW_OP_CAP {
+            inner.slow_dropped += 1;
+            return;
+        }
+        inner.slow_ops.push(SlowOp {
+            class,
+            backend: backend.to_string(),
+            duration,
+        });
+    }
+
+    pub fn slow_ops(&self) -> Vec<SlowOp> {
+        self.inner.borrow().slow_ops.clone()
+    }
+
+    pub fn slow_ops_dropped(&self) -> u64 {
+        self.inner.borrow().slow_dropped
+    }
+
+    // ---- span journal ----
+
+    /// Record one op span into the bounded journal ring (`track` is the
+    /// Chrome-trace tid — one per in-flight engine lane).
+    pub fn record_span(&self, track: u64, name: &'static str, start: SimTime, end: SimTime) {
+        self.inner.borrow_mut().journal.record(track, name, start, end);
+    }
+
+    pub fn set_journal_capacity(&self, cap: usize) {
+        self.inner.borrow_mut().journal.set_capacity(cap);
+    }
+
+    pub fn journal_len(&self) -> usize {
+        self.inner.borrow().journal.len()
+    }
+
+    pub fn journal_dropped(&self) -> u64 {
+        self.inner.borrow().journal.dropped()
+    }
+
+    /// Export the journal as Chrome trace-event JSON (an array of
+    /// complete `"ph": "X"` events; load in `chrome://tracing`).
+    pub fn chrome_trace(&self) -> Json {
+        self.inner.borrow().journal.chrome_trace()
+    }
+
+    // ---- exposition ----
+
+    /// Dump the whole registry as JSON (`--metrics <path>`).
+    pub fn to_json(&self) -> Json {
+        let inner = self.inner.borrow();
+        let mut counters = Json::obj();
+        for (k, c) in &inner.counters {
+            counters = counters.set(k, c.get());
+        }
+        let mut gauges = Json::obj();
+        for (k, g) in &inner.gauges {
+            gauges = gauges.set(k, g.get());
+        }
+        let mut hists = Json::obj();
+        for (k, h) in &inner.hists {
+            if h.count() > 0 {
+                hists = hists.set(k, h.snapshot().to_json());
+            }
+        }
+        let slow: Vec<Json> = inner
+            .slow_ops
+            .iter()
+            .map(|s| {
+                Json::obj()
+                    .set("class", s.class.label())
+                    .set("backend", s.backend.as_str())
+                    .set("duration_us", s.duration.as_nanos() / 1_000)
+            })
+            .collect();
+        Json::obj()
+            .set("counters", counters)
+            .set("gauges", gauges)
+            .set("histograms", hists)
+            .set("slow_ops", slow)
+            .set(
+                "journal",
+                Json::obj()
+                    .set("spans", inner.journal.len())
+                    .set("dropped", inner.journal.dropped()),
+            )
+    }
+
+    /// Render the registry as Prometheus-style text exposition
+    /// (`fdbctl metrics`): counters and gauges as plain samples,
+    /// histograms as quantile lines + cumulative log2 `_bucket` lines
+    /// with `_sum`/`_count`.
+    pub fn render_prometheus(&self) -> String {
+        fn sanitize(name: &str) -> String {
+            let mut out = String::with_capacity(name.len() + 4);
+            out.push_str("fdb_");
+            for c in name.chars() {
+                if c.is_ascii_alphanumeric() {
+                    out.push(c);
+                } else {
+                    out.push('_');
+                }
+            }
+            out
+        }
+        let inner = self.inner.borrow();
+        let mut out = String::new();
+        for (k, c) in &inner.counters {
+            let n = sanitize(k);
+            out.push_str(&format!("# TYPE {n} counter\n{n} {}\n", c.get()));
+        }
+        for (k, g) in &inner.gauges {
+            let n = sanitize(k);
+            out.push_str(&format!("# TYPE {n} gauge\n{n} {}\n", g.get()));
+        }
+        for (k, h) in &inner.hists {
+            if h.count() == 0 {
+                continue;
+            }
+            let snap = h.snapshot();
+            let n = sanitize(k);
+            out.push_str(&format!("# TYPE {n} histogram\n"));
+            let mut cumulative = 0u64;
+            for (le, count) in snap.log2_buckets() {
+                cumulative += count;
+                out.push_str(&format!("{n}_bucket{{le=\"{le}\"}} {cumulative}\n"));
+            }
+            out.push_str(&format!("{n}_bucket{{le=\"+Inf\"}} {}\n", snap.count()));
+            for (q, p) in [("0.5", 50.0), ("0.95", 95.0), ("0.99", 99.0), ("0.999", 99.9)] {
+                out.push_str(&format!(
+                    "{n}{{quantile=\"{q}\"}} {}\n",
+                    snap.percentile(p)
+                ));
+            }
+            out.push_str(&format!("{n}_sum {}\n", snap.sum()));
+            out.push_str(&format!("{n}_count {}\n", snap.count()));
+        }
+        out
+    }
+}
+
+/// Pre-bound per-op-class probe: wait + service histograms and outcome
+/// counters. One name-map lookup at bind time, zero per op.
+#[derive(Clone)]
+pub struct OpProbe {
+    pub wait: Hist,
+    pub service: Hist,
+    pub ok: Counter,
+    pub err: Counter,
+    pub fault: Counter,
+}
+
+/// The engine's pre-bound metric handles, one [`OpProbe`] per
+/// [`OpClass`] plus bytes and in-flight peak. Minted by
+/// [`EngineMetrics::bind`] when a registry is attached.
+pub struct EngineMetrics {
+    probes: Vec<OpProbe>,
+    pub bytes_read: Counter,
+    pub bytes_written: Counter,
+    pub inflight_peak: Gauge,
+}
+
+impl EngineMetrics {
+    pub fn bind(reg: &MetricsRegistry) -> EngineMetrics {
+        let probes = OpClass::ALL
+            .iter()
+            .map(|c| {
+                let l = c.label();
+                OpProbe {
+                    wait: reg.histogram(&format!("engine.wait.{l}")),
+                    service: reg.histogram(&format!("engine.service.{l}")),
+                    ok: reg.counter(&format!("engine.ops.{l}.ok")),
+                    err: reg.counter(&format!("engine.ops.{l}.err")),
+                    fault: reg.counter(&format!("engine.ops.{l}.fault")),
+                }
+            })
+            .collect();
+        EngineMetrics {
+            probes,
+            bytes_read: reg.counter("engine.bytes_read"),
+            bytes_written: reg.counter("engine.bytes_written"),
+            inflight_peak: reg.gauge("engine.inflight_peak"),
+        }
+    }
+
+    pub fn probe(&self, class: OpClass) -> &OpProbe {
+        let idx = OpClass::ALL
+            .iter()
+            .position(|&c| c == class)
+            .expect("OpClass::ALL covers every class");
+        &self.probes[idx]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_share_handles() {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("x");
+        c.add(3);
+        reg.counter("x").inc();
+        assert_eq!(reg.counter_value("x"), 4);
+        let g = reg.gauge("peak");
+        g.set_max(7);
+        g.set_max(3); // lower: ignored
+        assert_eq!(reg.gauge_value("peak"), 7);
+        assert_eq!(reg.counter_value("never"), 0);
+    }
+
+    #[test]
+    fn histogram_percentiles_match_nearest_rank() {
+        let reg = MetricsRegistry::new();
+        let h = reg.histogram("lat");
+        for v in 1..=100u64 {
+            h.observe(v);
+        }
+        let snap = reg.hist("lat").unwrap();
+        assert_eq!(snap.count(), 100);
+        assert_eq!(snap.percentile(50.0), 50);
+        assert_eq!(snap.percentile(99.0), 99);
+        assert_eq!(snap.percentile(99.9), 100);
+        assert_eq!(snap.min(), 1);
+        assert_eq!(snap.max(), 100);
+        assert!((snap.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_percentiles_agree_with_bench_summary() {
+        // the acceptance contract: telemetry p99 == bench p99 on the
+        // same sample, because both use the same nearest-rank rule
+        let reg = MetricsRegistry::new();
+        let h = reg.histogram("lat");
+        let mut s = crate::util::stats::Summary::new();
+        // awkward sample sizes where interpolating implementations
+        // would diverge
+        let samples: Vec<u64> = vec![5, 9, 1, 22, 17, 3, 8];
+        for &v in &samples {
+            h.observe(v);
+            s.add(v as f64);
+        }
+        let snap = reg.hist("lat").unwrap();
+        for p in [0.0, 50.0, 95.0, 99.0, 99.9, 100.0] {
+            assert_eq!(snap.percentile(p) as f64, s.percentile(p), "p{p}");
+        }
+    }
+
+    #[test]
+    fn log2_buckets_partition_the_sample() {
+        let reg = MetricsRegistry::new();
+        let h = reg.histogram("sz");
+        for v in [0, 1, 2, 3, 4, 5, 1000, 1024, 1025] {
+            h.observe(v);
+        }
+        let snap = reg.hist("sz").unwrap();
+        let buckets = snap.log2_buckets();
+        let total: u64 = buckets.iter().map(|(_, n)| n).sum();
+        assert_eq!(total, snap.count());
+        // 0 and 1 share the le=1 bucket; 1000/1024 land in le=1024
+        assert!(buckets.contains(&(1, 2)));
+        assert!(buckets.contains(&(1024, 2)));
+        assert!(buckets.contains(&(2048, 1)));
+        // bounds ascend
+        assert!(buckets.windows(2).all(|w| w[0].0 < w[1].0));
+    }
+
+    #[test]
+    fn json_and_prometheus_expose_the_same_values() {
+        let reg = MetricsRegistry::new();
+        reg.counter("ops.total").add(11);
+        reg.gauge("engine.inflight_peak").set_max(4);
+        let h = reg.histogram("engine.service.data-read");
+        h.observe(100);
+        h.observe(200);
+        let j = reg.to_json();
+        assert_eq!(
+            j.get("counters").unwrap().get("ops.total").unwrap().as_f64(),
+            Some(11.0)
+        );
+        let hist = j.get("histograms").unwrap().get("engine.service.data-read").unwrap();
+        assert_eq!(hist.get("count").unwrap().as_f64(), Some(2.0));
+        assert_eq!(hist.get("p99").unwrap().as_f64(), Some(200.0));
+        let text = reg.render_prometheus();
+        assert!(text.contains("fdb_ops_total 11"));
+        assert!(text.contains("fdb_engine_inflight_peak 4"));
+        assert!(text.contains("fdb_engine_service_data_read_count 2"));
+        assert!(text.contains("fdb_engine_service_data_read{quantile=\"0.99\"} 200"));
+        // the JSON round-trips through the offline parser
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn slow_op_log_caps_and_counts_overflow() {
+        let reg = MetricsRegistry::new();
+        for i in 0..(SLOW_OP_CAP + 5) {
+            reg.record_slow_op(OpClass::DataRead, "posix", SimTime::micros(i as u64));
+        }
+        assert_eq!(reg.slow_ops().len(), SLOW_OP_CAP);
+        assert_eq!(reg.slow_ops_dropped(), 5);
+    }
+
+    #[test]
+    fn engine_metrics_probe_per_class() {
+        let reg = MetricsRegistry::new();
+        let em = EngineMetrics::bind(&reg);
+        em.probe(OpClass::DataRead).ok.inc();
+        em.probe(OpClass::DataRead)
+            .service
+            .observe_duration(SimTime::micros(5));
+        em.probe(OpClass::DataWrite).fault.inc();
+        assert_eq!(reg.counter_value("engine.ops.data-read.ok"), 1);
+        assert_eq!(reg.counter_value("engine.ops.data-write.fault"), 1);
+        assert_eq!(reg.hist("engine.service.data-read").unwrap().count(), 1);
+    }
+
+    #[test]
+    fn empty_histograms_are_omitted_from_exposition() {
+        let reg = MetricsRegistry::new();
+        reg.histogram("engine.wait.lock"); // bound but never observed
+        assert!(reg.hist_names().is_empty());
+        assert!(!reg.render_prometheus().contains("engine_wait_lock"));
+        let j = reg.to_json();
+        assert_eq!(j.get("histograms"), Some(&Json::obj()));
+    }
+}

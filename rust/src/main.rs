@@ -15,6 +15,8 @@ fn main() {
     let result = match cmd.as_str() {
         "figures" => coordinator::cmd_figures(&args),
         "hammer" => coordinator::cmd_hammer(&args),
+        "trace" => coordinator::cmd_trace(&args),
+        "metrics" => coordinator::cmd_metrics(&args),
         "crash" => coordinator::cmd_crash(&args),
         "ior" => coordinator::cmd_ior(&args),
         "fieldio" => coordinator::cmd_fieldio(&args),

@@ -141,20 +141,26 @@ impl Trace {
         )
     }
 
-    /// Percentage breakdown, ordered as [`OpClass::ALL`], skipping zeros.
+    /// Percentage breakdown, ordered as [`OpClass::ALL`]. Classes that
+    /// were never recorded are skipped; classes that WERE recorded stay
+    /// listed even at zero duration (instant ops on a virtual-time-free
+    /// backend), reported as `0.0%` — a zero grand total must never
+    /// divide into NaN percentages.
     pub fn breakdown(&self) -> Vec<(OpClass, f64, SimTime)> {
         let total = self.grand_total().as_nanos() as f64;
-        if total == 0.0 {
-            return Vec::new();
-        }
         OpClass::ALL
             .iter()
             .filter_map(|&c| {
                 let t = self.total(c);
-                if t == SimTime::ZERO {
+                if t == SimTime::ZERO && self.count(c) == 0 {
                     None
                 } else {
-                    Some((c, 100.0 * t.as_nanos() as f64 / total, t))
+                    let pct = if total == 0.0 {
+                        0.0
+                    } else {
+                        100.0 * t.as_nanos() as f64 / total
+                    };
+                    Some((c, pct, t))
                 }
             })
             .collect()
@@ -202,6 +208,41 @@ mod tests {
         let t = Trace::new();
         assert!(t.breakdown().is_empty());
         assert_eq!(t.grand_total(), SimTime::ZERO);
+        assert_eq!(t.render(), "");
+    }
+
+    #[test]
+    fn zero_duration_spans_render_zero_percent_not_nan() {
+        // instant ops (a Null backend costs no virtual time): the class
+        // was recorded, the grand total is zero — the breakdown must
+        // list it at exactly 0.0%, never NaN
+        let t = Trace::new();
+        t.record(OpClass::DataRead, SimTime::ZERO);
+        t.record(OpClass::IndexRead, SimTime::ZERO);
+        assert_eq!(t.grand_total(), SimTime::ZERO);
+        let b = t.breakdown();
+        assert_eq!(b.len(), 2);
+        for (_, pct, _) in &b {
+            assert_eq!(*pct, 0.0);
+            assert!(!pct.is_nan());
+        }
+        let rendered = t.render();
+        assert!(rendered.contains("data-read=0.0%"), "{rendered}");
+        assert!(!rendered.contains("NaN"), "{rendered}");
+    }
+
+    #[test]
+    fn zero_duration_class_listed_alongside_real_spans() {
+        // a recorded-but-instant class stays visible next to real time
+        let t = Trace::new();
+        t.record(OpClass::DataRead, SimTime::ZERO);
+        t.record(OpClass::DataWrite, SimTime::micros(10));
+        let b = t.breakdown();
+        assert_eq!(b.len(), 2);
+        let read = b.iter().find(|(c, _, _)| *c == OpClass::DataRead).unwrap();
+        assert_eq!(read.1, 0.0);
+        let write = b.iter().find(|(c, _, _)| *c == OpClass::DataWrite).unwrap();
+        assert!((write.1 - 100.0).abs() < 1e-9);
     }
 
     #[test]

@@ -46,7 +46,12 @@ impl Summary {
         (self.values.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64).sqrt()
     }
 
-    /// Percentile by nearest-rank on the sorted sample, `p` in [0,100].
+    /// Percentile by **nearest-rank** on the sorted sample, `p` in
+    /// [0,100]: the value at 1-based rank `ceil(p/100 * n)`, clamped to
+    /// the sample (p=0 → minimum, p=100 → maximum). No interpolation —
+    /// every percentile is an observed sample, and the telemetry
+    /// histograms ([`crate::fdb::telemetry`]) use the same rule, so a
+    /// bench p99 and a registry p99 over the same sample agree exactly.
     /// Total order via `f64::total_cmp`, so NaN samples (e.g. a rate
     /// computed over a zero-length span) sort last instead of panicking
     /// the comparator.
@@ -56,9 +61,20 @@ impl Summary {
         }
         let mut sorted = self.values.clone();
         sorted.sort_by(f64::total_cmp);
-        let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
-        sorted[rank.min(sorted.len() - 1)]
+        sorted[nearest_rank_index(p, sorted.len())]
     }
+}
+
+/// The 0-based index of the nearest-rank percentile `p` (in [0,100]) in
+/// a sorted sample of `n` elements: `ceil(p/100 * n) - 1`, clamped to
+/// `[0, n-1]`. Shared rule between [`Summary::percentile`] and the
+/// telemetry histograms so both report the same value on one sample.
+pub fn nearest_rank_index(p: f64, n: usize) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    let rank = ((p / 100.0) * n as f64).ceil() as usize;
+    rank.clamp(1, n) - 1
 }
 
 /// Format a throughput in bytes/sec as a human-readable GiB/s string.
@@ -101,7 +117,54 @@ mod tests {
         }
         // finite samples keep their order; NaN sorts last (total_cmp)
         assert_eq!(s.percentile(0.0), 1.0);
-        assert_eq!(s.percentile(50.0), 3.0); // nearest rank 2 of [1,2,3,NaN]
+        assert_eq!(s.percentile(50.0), 2.0); // rank ceil(0.5*4)=2 of [1,2,3,NaN]
         assert!(s.percentile(100.0).is_nan());
+    }
+
+    #[test]
+    fn nearest_rank_n1() {
+        // n=1: every percentile is the single sample
+        let mut s = Summary::new();
+        s.add(7.0);
+        for p in [0.0, 1.0, 50.0, 99.0, 99.9, 100.0] {
+            assert_eq!(s.percentile(p), 7.0, "p{p}");
+        }
+    }
+
+    #[test]
+    fn nearest_rank_n2() {
+        // n=2: rank ceil(p/100*2) — p<=50 hits the lower sample, p>50
+        // the upper; no interpolation ever
+        let mut s = Summary::new();
+        s.add(10.0);
+        s.add(20.0);
+        assert_eq!(s.percentile(0.0), 10.0);
+        assert_eq!(s.percentile(50.0), 10.0);
+        assert_eq!(s.percentile(50.1), 20.0);
+        assert_eq!(s.percentile(99.0), 20.0);
+        assert_eq!(s.percentile(100.0), 20.0);
+    }
+
+    #[test]
+    fn nearest_rank_n100() {
+        // n=100 over 1..=100: pN is exactly the N-th sample (rank = N)
+        let mut s = Summary::new();
+        for x in 1..=100 {
+            s.add(x as f64);
+        }
+        assert_eq!(s.percentile(50.0), 50.0);
+        assert_eq!(s.percentile(95.0), 95.0);
+        assert_eq!(s.percentile(99.0), 99.0);
+        // p99.9: rank ceil(99.9) = 100 → the maximum
+        assert_eq!(s.percentile(99.9), 100.0);
+        assert_eq!(s.percentile(1.0), 1.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+    }
+
+    #[test]
+    fn nearest_rank_index_clamps() {
+        assert_eq!(nearest_rank_index(0.0, 5), 0);
+        assert_eq!(nearest_rank_index(100.0, 5), 4);
+        assert_eq!(nearest_rank_index(50.0, 0), 0);
     }
 }

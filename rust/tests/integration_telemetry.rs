@@ -1,0 +1,297 @@
+//! Telemetry subsystem integration tests.
+//!
+//! The contract of the observability layer: attaching a
+//! `MetricsRegistry` must be **observationally free** — byte- and
+//! order-identical results and an identical virtual clock over a nested
+//! wrapper stack — while the registry's per-class service histograms
+//! agree *exactly* (count and summed nanoseconds) with the `Trace` the
+//! benchmarks have always reported. Plus the slow-op log regression
+//! (an injected `slow:read` fault must surface ops above
+//! `IoProfile::slow_op_us`) and the wall-clock overhead bound on a
+//! Null-backend hammer run.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use fdbr::bench::hammer::{self, HammerConfig};
+use fdbr::bench::scenario::{deploy, RedundancyOpt, SystemKind};
+use fdbr::fdb::{BackendConfig, FaultPlan, Fdb, FdbBuilder, IoProfile, Key, MetricsRegistry};
+use fdbr::hw::profiles::Testbed;
+use fdbr::sim::exec::Sim;
+use fdbr::sim::trace::OpClass;
+use fdbr::util::content::Bytes;
+use fdbr::util::rng::Rng;
+
+fn field_id(step: u32, param: u32) -> Key {
+    fdbr::bench::hammer::field_id(0, step, param, 0)
+}
+
+fn payload(step: u32, param: u32, size: u64) -> Bytes {
+    Bytes::virt(size, (u64::from(step) << 32) | (u64::from(param) << 8) | (size & 0xff))
+}
+
+/// FNV-1a over materialized bytes (payloads here are tiny).
+fn digest(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Everything observable after one archive→retrieve cycle, in order,
+/// plus the virtual clock at the end of the run.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+struct Fingerprint {
+    fetched: Vec<(String, u64, u64)>,
+    end_ns: u64,
+}
+
+/// One randomized workload over a `sharded(replicated(lustre))` nested
+/// stack built straight from `BackendConfig`, with or without a
+/// registry attached. Returns the ordered fingerprint and the registry
+/// (so the caller can check the instrumented run actually recorded).
+fn nested_stack_run(wl: &[(u32, u32, u64)], instrumented: bool) -> (Fingerprint, MetricsRegistry) {
+    let dep = deploy(Testbed::Gcp, SystemKind::Lustre, 2, 2, RedundancyOpt::None);
+    let nested = BackendConfig::Sharded {
+        inner: Box::new(BackendConfig::Replicated {
+            inner: Box::new(dep.backend_config()),
+            copies: 2,
+        }),
+        shards: 2,
+    };
+    let reg = MetricsRegistry::new();
+    let io = IoProfile::depth(4).with_preload_indexes(true).with_coalesce_gap(1 << 16);
+    let nodes = dep.client_nodes();
+    let build = |node, sim: &Sim| -> Fdb {
+        let mut b = FdbBuilder::new(sim).node(node).backend(nested.clone()).io(io);
+        if instrumented {
+            b = b.metrics(&reg);
+        }
+        b.build().expect("nested stack builds")
+    };
+    let mut w = build(&nodes[0], &dep.sim);
+    let mut r = build(&nodes[1], &dep.sim);
+    let out = Rc::new(RefCell::new(Fingerprint::default()));
+    {
+        let out = out.clone();
+        let wl = wl.to_vec();
+        let sim = dep.sim.clone();
+        dep.sim.spawn(async move {
+            let mut batch: Vec<(Key, Bytes)> = Vec::new();
+            let mut ids: Vec<Key> = Vec::new();
+            let mut seen = std::collections::BTreeSet::new();
+            for &(step, param, size) in &wl {
+                let id = field_id(step, param);
+                batch.push((id.clone(), payload(step, param, size)));
+                if seen.insert(id.canonical()) {
+                    ids.push(id);
+                }
+            }
+            w.archive_many(batch).await.unwrap();
+            w.flush().await.unwrap();
+            w.close().await.expect("close");
+            let fetched = r.retrieve_many(&ids).await.unwrap();
+            let mut fp = Fingerprint::default();
+            for (id, bytes) in &fetched {
+                let v = bytes.to_vec();
+                fp.fetched.push((id.canonical(), v.len() as u64, digest(&v)));
+            }
+            fp.end_ns = sim.now().as_nanos();
+            *out.borrow_mut() = fp;
+        });
+        dep.sim.run();
+    }
+    let fp = out.borrow().clone();
+    (fp, reg)
+}
+
+#[test]
+fn metrics_are_observationally_free_over_the_nested_stack() {
+    // the equivalence property: metrics on vs. off is byte- and
+    // order-identical — same fetched bytes, same order, same virtual
+    // end time — over a sharded(replicated(posix)) stack, across
+    // randomized workloads
+    let mut rng = Rng::new(0x0B5E);
+    for _ in 0..3 {
+        let n = 6 + rng.below(10) as usize;
+        let wl: Vec<(u32, u32, u64)> = (0..n)
+            .map(|_| {
+                (
+                    1 + rng.below(5) as u32,
+                    rng.below(4) as u32,
+                    64 + rng.below(6000),
+                )
+            })
+            .collect();
+        let (plain, plain_reg) = nested_stack_run(&wl, false);
+        let (observed, reg) = nested_stack_run(&wl, true);
+        assert!(!plain.fetched.is_empty(), "workload must fetch something");
+        assert_eq!(plain, observed, "telemetry must not perturb results or timing");
+        // not vacuous: the instrumented run really recorded, at every
+        // layer of the stack, and the plain run really did not
+        let reads = reg.hist("engine.service.data-read").map_or(0, |s| s.count());
+        assert!(reads > 0, "instrumented run records engine service times");
+        assert!(
+            reg.hist_names().iter().any(|n| n.starts_with("store.r0.")),
+            "per-replica leaf metrics present: {:?}",
+            reg.hist_names()
+        );
+        assert!(
+            reg.counter_value("cat.s0.posix.archive.ok") + reg.counter_value("cat.s1.posix.archive.ok")
+                > 0,
+            "per-shard catalogue counts present"
+        );
+        assert!(plain_reg.hist_names().is_empty(), "no registry attached, no metrics");
+    }
+}
+
+#[test]
+fn telemetry_overhead_is_bounded_on_null_hammer() {
+    // the overhead bound: registry + ring buffer must add < 5% wall
+    // clock to a Null-backend hammer run. Interleave 5 (off, on) pairs
+    // and compare the minima — the minimum of a deterministic
+    // single-threaded run is stable; a small absolute slack absorbs
+    // timer granularity on a fast run.
+    let cfg = HammerConfig {
+        procs_per_node: 8,
+        nsteps: 12,
+        nparams: 4,
+        nlevels: 2,
+        field_size: 1 << 16,
+        check: false,
+        contention: false,
+        faults_ok: false,
+    };
+    let run = |instrumented: bool| -> std::time::Duration {
+        let mut dep = deploy(Testbed::Gcp, SystemKind::Null, 2, 2, RedundancyOpt::None);
+        let reg = MetricsRegistry::new();
+        if instrumented {
+            dep = dep.with_metrics(&reg);
+        }
+        let t0 = std::time::Instant::now();
+        let _ = hammer::run(&dep, cfg);
+        t0.elapsed()
+    };
+    let mut best_off = std::time::Duration::MAX;
+    let mut best_on = std::time::Duration::MAX;
+    for _ in 0..5 {
+        best_off = best_off.min(run(false));
+        best_on = best_on.min(run(true));
+    }
+    let bound = best_off.mul_f64(1.05) + std::time::Duration::from_millis(2);
+    assert!(
+        best_on <= bound,
+        "telemetry overhead above 5%: off={best_off:?} on={best_on:?}"
+    );
+}
+
+#[test]
+fn slow_op_log_records_injected_slow_reads() {
+    // the slow-op regression: an injected `slow:read` fault (delays,
+    // does not error) must surface in the registry's slow-op log once
+    // `IoProfile::slow_op_us` is set, with class/backend/duration
+    let plan = FaultPlan::parse("seed=7,slow:read:20000").expect("fault spec");
+    let reg = MetricsRegistry::new();
+    let dep = deploy(Testbed::Gcp, SystemKind::Lustre, 2, 2, RedundancyOpt::None)
+        .with_io(IoProfile::default().with_slow_op_us(2000))
+        .with_fault(plan)
+        .with_metrics(&reg);
+    let nodes = dep.client_nodes();
+    let ids: Vec<Key> = (0..8).map(|i| field_id(1 + i, 0)).collect();
+    let mut w = dep.fdb(&nodes[0]);
+    let mut r = dep.fdb(&nodes[1]);
+    {
+        let ids = ids.clone();
+        dep.sim.spawn(async move {
+            let batch: Vec<(Key, Bytes)> = ids
+                .iter()
+                .enumerate()
+                .map(|(i, id)| (id.clone(), payload(1 + i as u32, 0, 4096)))
+                .collect();
+            w.archive_many(batch).await.unwrap();
+            w.flush().await.unwrap();
+            w.close().await.expect("close");
+            let fetched = r.retrieve_many(&ids).await.unwrap();
+            assert_eq!(fetched.len(), ids.len());
+        });
+        dep.sim.run();
+    }
+    let slow = reg.slow_ops();
+    assert!(!slow.is_empty(), "20ms injected delay must cross the 2ms threshold");
+    assert!(
+        slow.iter().all(|op| op.duration.as_nanos() >= 2_000_000),
+        "every logged op is at or above the threshold"
+    );
+    assert!(
+        slow.iter().any(|op| op.class == OpClass::DataRead && !op.backend.is_empty()),
+        "the injected slow reads are logged with class and backend: {slow:?}"
+    );
+
+    // and with the default profile (slow_op_us = 0) the log stays off
+    // even with a registry attached and the same fault injected
+    let plan = FaultPlan::parse("seed=7,slow:read:20000").expect("fault spec");
+    let reg = MetricsRegistry::new();
+    let dep = deploy(Testbed::Gcp, SystemKind::Lustre, 2, 2, RedundancyOpt::None)
+        .with_fault(plan)
+        .with_metrics(&reg);
+    let nodes = dep.client_nodes();
+    let ids2: Vec<Key> = (0..4).map(|i| field_id(1 + i, 0)).collect();
+    let mut w = dep.fdb(&nodes[0]);
+    let mut r = dep.fdb(&nodes[1]);
+    {
+        let ids2 = ids2.clone();
+        dep.sim.spawn(async move {
+            let batch: Vec<(Key, Bytes)> = ids2
+                .iter()
+                .enumerate()
+                .map(|(i, id)| (id.clone(), payload(1 + i as u32, 0, 4096)))
+                .collect();
+            w.archive_many(batch).await.unwrap();
+            w.flush().await.unwrap();
+            w.close().await.expect("close");
+            let _ = r.retrieve_many(&ids2).await.unwrap();
+        });
+        dep.sim.run();
+    }
+    assert!(reg.slow_ops().is_empty(), "slow-op log defaults to off");
+}
+
+#[test]
+fn registry_histograms_agree_exactly_with_the_trace() {
+    // the consistency bar: for every op class, the registry's
+    // `engine.service.<class>` histogram must hold exactly the same
+    // sample count and summed (lock-subtracted) nanoseconds as the
+    // `Trace` the same run reported — the two views never drift
+    let reg = MetricsRegistry::new();
+    let dep = deploy(Testbed::Gcp, SystemKind::Lustre, 2, 2, RedundancyOpt::None)
+        .with_io(IoProfile::depth(4).with_preload_indexes(true))
+        .with_metrics(&reg);
+    let cfg = HammerConfig {
+        procs_per_node: 4,
+        nsteps: 4,
+        nparams: 2,
+        nlevels: 2,
+        field_size: 1 << 16,
+        check: true,
+        contention: false,
+        faults_ok: false,
+    };
+    let (_bw, trace) = hammer::run(&dep, cfg);
+    let mut matched = 0;
+    for class in OpClass::ALL {
+        let name = format!("engine.service.{}", class.label());
+        let (count, sum) = reg.hist(&name).map_or((0, 0), |s| (s.count(), s.sum()));
+        assert_eq!(count, trace.count(class), "{name}: sample count drifted from Trace");
+        assert_eq!(
+            sum,
+            trace.total(class).as_nanos(),
+            "{name}: summed nanoseconds drifted from Trace"
+        );
+        if count > 0 {
+            matched += 1;
+        }
+    }
+    assert!(matched >= 3, "hammer exercises several op classes, matched {matched}");
+}
