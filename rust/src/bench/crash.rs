@@ -12,7 +12,7 @@ use std::rc::Rc;
 
 use super::scenario::{deploy, RedundancyOpt, SystemKind, WrapperOpt};
 use crate::fdb::fault::{FaultAction, FaultClass, FaultPlan, RecoveryStats};
-use crate::fdb::{IoProfile, MetricsRegistry};
+use crate::fdb::{IoProfile, MetricsRegistry, ResilienceProfile};
 use crate::hw::profiles::Testbed;
 use crate::util::content::Bytes;
 
@@ -72,14 +72,16 @@ pub fn crash_archive_with_io(
     field_size: u64,
     io: IoProfile,
 ) -> CrashReport {
-    crash_archive_observed(kind, wrapper, seed, kill_after, nfields, field_size, io, None)
+    crash_archive_observed(kind, wrapper, seed, kill_after, nfields, field_size, io, None, None)
 }
 
 /// [`crash_archive_with_io`] with an optional telemetry registry
 /// attached to both the doomed writer and the recovering instance, so
 /// a run records the WAL-sync counters, the `recovery.*` replay
 /// counters, and the injected-fault outcome counts alongside the
-/// latency histograms (the `crash --metrics` path).
+/// latency histograms (the `crash --metrics` path). `res` layers a
+/// retry/deadline/hedge policy under the scenario (the fail-stop is a
+/// permanent fault, so retries never mask the kill itself).
 #[allow(clippy::too_many_arguments)]
 pub fn crash_archive_observed(
     kind: SystemKind,
@@ -89,6 +91,7 @@ pub fn crash_archive_observed(
     nfields: usize,
     field_size: u64,
     io: IoProfile,
+    res: Option<ResilienceProfile>,
     metrics: Option<&MetricsRegistry>,
 ) -> CrashReport {
     let plan = FaultPlan::new(seed).with_rule(
@@ -100,6 +103,9 @@ pub fn crash_archive_observed(
         .with_wrapper(wrapper)
         .with_io(io)
         .with_fault(plan);
+    if let Some(r) = res {
+        dep = dep.with_resilience(r);
+    }
     if let Some(reg) = metrics {
         dep = dep.with_metrics(reg);
     }

@@ -1,0 +1,284 @@
+//! `degraded_read`: the replica-loss scenario behind `fdbctl degrade`
+//! and `abl_resilience`. A replicated deployment archives a batch of
+//! fields, then a reader runs a retrieve storm while one of *its*
+//! replica stores is fail-stopped mid-storm (a seeded `only=` fault
+//! scoped to that single built instance). The scenario reports the
+//! degraded-read tail latency against a healthy baseline of the same
+//! deployment, plus the resilience counters (hedges launched, retries,
+//! quarantine ejections) that show *how* the loss was absorbed.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use super::scenario::{deploy, RedundancyOpt, SystemKind, WrapperOpt};
+use crate::fdb::fault::{FaultAction, FaultClass, FaultPlan};
+use crate::fdb::wrappers::ReadPolicy;
+use crate::fdb::{IoProfile, MetricsRegistry, ResilienceProfile};
+use crate::hw::profiles::Testbed;
+use crate::util::content::Bytes;
+
+/// Retrieve-storm passes over the full field set. Fixed so the victim
+/// replica keeps taking read traffic well past its kill point — the
+/// quarantine/backoff lifecycle needs repeat visits to exercise.
+const ROUNDS: usize = 4;
+
+/// What one replica-loss run observed. The latency and counter fields
+/// come from the *degraded* leg; `healthy_p99_us` is the same workload
+/// on the same deployment with no fault injected.
+#[derive(Clone, Debug, Default)]
+pub struct DegradeReport {
+    /// fields archived and retrieved each round
+    pub fields: usize,
+    /// retrieve-storm passes completed
+    pub rounds: usize,
+    /// fields returned AND byte-verified across all rounds
+    pub reads_ok: usize,
+    /// retrieve rounds that surfaced a caller-visible error
+    pub read_errors: usize,
+    /// fields returned with wrong bytes, or published fields missing
+    pub verify_failures: usize,
+    /// healthy-baseline data-read p99 (`engine.service.data-read`), µs
+    pub healthy_p99_us: f64,
+    /// degraded-leg data-read p99, µs
+    pub degraded_p99_us: f64,
+    /// degraded leg: `engine.retry.attempts`
+    pub retries: u64,
+    /// degraded leg: `engine.hedge.launched`
+    pub hedges: u64,
+    /// degraded leg: `replica.quarantine.ejected`
+    pub quarantined: u64,
+    /// first caller-visible error, when any surfaced
+    pub first_error: Option<String>,
+}
+
+#[derive(Clone, Default)]
+struct LegStats {
+    rounds: usize,
+    reads_ok: usize,
+    read_errors: usize,
+    verify_failures: usize,
+    first_error: Option<String>,
+}
+
+fn p99_us(reg: &MetricsRegistry) -> f64 {
+    reg.hist("engine.service.data-read")
+        .map(|h| h.percentile(99.0) as f64 / 1e3)
+        .unwrap_or(0.0)
+}
+
+/// One leg: archive `nfields`, publish, then `ROUNDS` retrieve-storm
+/// passes on a second node. `fault` (if any) is scoped by its `only=`
+/// clause to a single reader-side replica instance, so the writer is
+/// always healthy and every field is durably published before the
+/// storm begins.
+#[allow(clippy::too_many_arguments)]
+fn run_leg(
+    kind: SystemKind,
+    copies: usize,
+    fault: Option<FaultPlan>,
+    nfields: usize,
+    field_size: u64,
+    io: IoProfile,
+    res: ResilienceProfile,
+    reg: &MetricsRegistry,
+) -> LegStats {
+    let mut dep = deploy(Testbed::Gcp, kind, 2, 2, RedundancyOpt::None)
+        .with_wrapper(WrapperOpt::Replicated(copies))
+        .with_io(io)
+        .with_read_policy(ReadPolicy::RoundRobin)
+        .with_resilience(res)
+        .with_metrics(reg);
+    if let Some(plan) = fault {
+        dep = dep.with_fault(plan);
+    }
+    let nodes = dep.client_nodes();
+    let ids: Vec<_> = (0..nfields)
+        .map(|i| super::hammer::field_id(0, 1 + (i / 16) as u32, (i % 16) as u32, 0))
+        .collect();
+
+    // phase 1: a healthy writer archives and publishes every field.
+    // NOTE: built BEFORE the reader — fault `only=` instance numbering
+    // (used by [`degraded_read`]) counts on this build order.
+    let mut writer = dep.fdb(&nodes[0]);
+    {
+        let ids = ids.clone();
+        dep.sim.spawn(async move {
+            for id in &ids {
+                let data = Bytes::virt(field_size, super::hammer::field_seed(id));
+                writer.archive(id, data).await.expect("writer is fault-free");
+            }
+            writer.flush().await.expect("publish");
+            writer.close().await.expect("close");
+        });
+        dep.sim.run();
+    }
+
+    // phase 2: the retrieve storm. The victim replica dies partway in;
+    // each round byte-verifies everything that comes back.
+    let mut reader = dep.fdb(&nodes[1]);
+    let out = Rc::new(RefCell::new(LegStats::default()));
+    {
+        let out = out.clone();
+        let ids = ids.clone();
+        dep.sim.spawn(async move {
+            for _ in 0..ROUNDS {
+                match reader.retrieve_many(&ids).await {
+                    Ok(found) => {
+                        let mut o = out.borrow_mut();
+                        let mut returned = 0usize;
+                        for (id, data) in found {
+                            let expect =
+                                Bytes::virt(field_size, super::hammer::field_seed(&id));
+                            if data.content_eq(&expect) {
+                                o.reads_ok += 1;
+                            } else {
+                                o.verify_failures += 1;
+                            }
+                            returned += 1;
+                        }
+                        // every field was published before the storm:
+                        // an absent field is a caller-visible failure
+                        o.verify_failures += ids.len() - returned;
+                    }
+                    Err(e) => {
+                        let mut o = out.borrow_mut();
+                        o.read_errors += 1;
+                        if o.first_error.is_none() {
+                            o.first_error = Some(e.to_string());
+                        }
+                    }
+                }
+                out.borrow_mut().rounds += 1;
+            }
+        });
+        dep.sim.run();
+    }
+    let stats = out.borrow().clone();
+    stats
+}
+
+/// Run the replica-loss scenario: a healthy baseline leg, then the same
+/// workload with reader replica 1 (replica 0 when `copies == 1`)
+/// fail-stopped after `kill_after` reads. Both legs run under the same
+/// [`ResilienceProfile`]; `metrics` (when given) receives the degraded
+/// leg's registry so `--metrics-json` exports the interesting run.
+///
+/// Fault instance numbering: the fault wrapper sits INSIDE the
+/// replication wrapper, so each built replica advances the plan's
+/// shared build counter. The writer instance builds `copies` stores
+/// plus one catalogue (instances `0..=copies`); the reader's replica
+/// `v` is therefore instance `(copies + 1) + v`.
+#[allow(clippy::too_many_arguments)]
+pub fn degraded_read(
+    kind: SystemKind,
+    copies: usize,
+    seed: u64,
+    kill_after: u64,
+    nfields: usize,
+    field_size: u64,
+    io: IoProfile,
+    res: ResilienceProfile,
+    metrics: Option<&MetricsRegistry>,
+) -> DegradeReport {
+    assert!(copies >= 1, "degrade needs a replicated deployment");
+    let healthy_reg = MetricsRegistry::new();
+    run_leg(kind, copies, None, nfields, field_size, io, res, &healthy_reg);
+
+    let own;
+    let reg = match metrics {
+        Some(r) => r,
+        None => {
+            own = MetricsRegistry::new();
+            &own
+        }
+    };
+    let victim = 1usize.min(copies - 1);
+    let plan = FaultPlan::new(seed)
+        .with_rule(FaultClass::Read, FaultAction::FailStop { after: kill_after })
+        .with_only_instance(((copies + 1) + victim) as u64);
+    let degraded = run_leg(kind, copies, Some(plan), nfields, field_size, io, res, reg);
+
+    DegradeReport {
+        fields: nfields,
+        rounds: degraded.rounds,
+        reads_ok: degraded.reads_ok,
+        read_errors: degraded.read_errors,
+        verify_failures: degraded.verify_failures,
+        healthy_p99_us: p99_us(&healthy_reg),
+        degraded_p99_us: p99_us(reg),
+        retries: reg.counter_value("engine.retry.attempts"),
+        hedges: reg.counter_value("engine.hedge.launched"),
+        quarantined: reg.counter_value("replica.quarantine.ejected"),
+        first_error: degraded.first_error,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replica_loss_is_absorbed_with_zero_caller_errors() {
+        // the PR's acceptance bar: replicated:3 under a mid-storm
+        // replica fail-stop completes every read byte-identical, and
+        // the degraded tail stays within 3x of the healthy baseline
+        let res = ResilienceProfile::retries(3)
+            .with_hedge_us(400)
+            .with_quarantine(2, 5_000);
+        let r = degraded_read(
+            SystemKind::Lustre,
+            3,
+            11,
+            4,
+            24,
+            4096,
+            IoProfile::default(),
+            res,
+            None,
+        );
+        assert_eq!(r.read_errors, 0, "resilient reads must mask the dead replica");
+        assert_eq!(r.verify_failures, 0);
+        assert_eq!(r.reads_ok, 24 * ROUNDS, "every field, every round");
+        assert!(r.healthy_p99_us > 0.0, "baseline leg must record latencies");
+        assert!(
+            r.degraded_p99_us <= 3.0 * r.healthy_p99_us,
+            "degraded p99 {}us exceeds 3x healthy p99 {}us",
+            r.degraded_p99_us,
+            r.healthy_p99_us
+        );
+        assert!(
+            r.hedges >= 1,
+            "a dead primary in the rotation must launch hedges"
+        );
+        assert!(
+            r.quarantined >= 1,
+            "repeat failures must eject the dead replica"
+        );
+    }
+
+    #[test]
+    fn bare_fallthrough_masks_the_loss_without_resilience() {
+        // with every resilience knob off, replica fall-through alone
+        // still hides a single fail-stopped replica — the layer buys
+        // tail-latency control and observability, not bare availability
+        // (which is why abl_resilience's off-leg adds a transient error
+        // storm to make the contrast visible)
+        let r = degraded_read(
+            SystemKind::Lustre,
+            3,
+            11,
+            4,
+            16,
+            2048,
+            IoProfile::default(),
+            ResilienceProfile::default(),
+            None,
+        );
+        assert_eq!(r.read_errors, 0);
+        assert_eq!(r.verify_failures, 0);
+        assert_eq!(r.reads_ok, 16 * ROUNDS);
+        assert_eq!(r.retries, 0);
+        assert_eq!(r.hedges, 0);
+        assert_eq!(r.quarantined, 0);
+    }
+}

@@ -4,6 +4,7 @@
 
 pub mod ablations;
 pub mod crash;
+pub mod degrade;
 pub mod fieldio;
 pub mod figures;
 pub mod hammer;

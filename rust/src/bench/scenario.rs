@@ -8,7 +8,8 @@ use crate::ceph::{Ceph, CephConfig, CephPool, Redundancy};
 use crate::daos::{Daos, DaosConfig};
 use crate::fdb::wrappers::ReadPolicy;
 use crate::fdb::{
-    BackendConfig, FaultPlan, Fdb, FdbBuilder, IoProfile, MetricsRegistry, SharedNullCatalogue,
+    BackendConfig, FaultPlan, Fdb, FdbBuilder, IoProfile, MetricsRegistry, ResilienceProfile,
+    SharedNullCatalogue,
 };
 use crate::hw::cluster::Cluster;
 use crate::hw::node::Node;
@@ -130,6 +131,9 @@ pub struct Deployment {
     /// Replica read routing applied to every replicated store built
     /// from this deployment; None = the wrapper's default (round-robin)
     pub read_policy: Option<ReadPolicy>,
+    /// Retry/backoff/deadline/hedging/quarantine policy applied to
+    /// every FDB instance built from this deployment; None = all off
+    pub resilience: Option<ResilienceProfile>,
 }
 
 /// Redundancy options for Figs 4.27/4.28 (mapped per system).
@@ -193,6 +197,7 @@ pub fn deploy(
         fault: None,
         metrics: None,
         read_policy: None,
+        resilience: None,
     }
 }
 
@@ -243,6 +248,14 @@ impl Deployment {
     /// routing, the policy the per-replica histograms feed).
     pub fn with_read_policy(mut self, policy: ReadPolicy) -> Deployment {
         self.read_policy = Some(policy);
+        self
+    }
+
+    /// Apply a [`ResilienceProfile`] to every FDB instance built from
+    /// this deployment: engine retry/backoff and per-op deadlines, plus
+    /// hedged reads and replica quarantine on replicated wrappers.
+    pub fn with_resilience(mut self, res: ResilienceProfile) -> Deployment {
+        self.resilience = Some(res);
         self
     }
 
@@ -320,6 +333,9 @@ impl Deployment {
         }
         if let Some(policy) = self.read_policy {
             b = b.read_policy(policy);
+        }
+        if let Some(res) = self.resilience {
+            b = b.resilience(res);
         }
         b
     }

@@ -8,7 +8,7 @@ use anyhow::{bail, Result};
 use crate::bench::scenario::{deploy, Deployment, RedundancyOpt, SystemKind, WrapperOpt};
 use crate::bench::{fieldio, hammer, ior};
 use crate::fdb::wrappers::ReadPolicy;
-use crate::fdb::MetricsRegistry;
+use crate::fdb::{MetricsRegistry, ResilienceProfile};
 use crate::hw::profiles::Testbed;
 use crate::runtime::{PgenPipeline, PjrtRuntime};
 use crate::util::cli::Args;
@@ -105,6 +105,26 @@ fn parse_io_depth(args: &Args, kind: SystemKind) -> Result<usize> {
         .map_err(|_| anyhow::anyhow!("--io-depth must be a number or `auto` (got `{raw}`)"))
 }
 
+/// The resilience flags shared by `hammer`, `opsrun`, `crash`, and
+/// `degrade`: `--retry <attempts>` (total attempts, 1 = off),
+/// `--retry-backoff-us <us>` (exponential base), `--op-deadline-us
+/// <us>` (0 = off), `--hedge-us <us>` (0 = off), `--quarantine-after
+/// <n>` (0 = off), `--quarantine-backoff-us <us>`. Returns `None` when
+/// every knob sits at its no-op default.
+fn parse_resilience(args: &Args) -> Result<Option<ResilienceProfile>> {
+    let res = ResilienceProfile::retries(num(args, "retry", 1u32)?)
+        .with_backoff_us(num(args, "retry-backoff-us", 200u64)?)
+        .with_op_deadline_us(num(args, "op-deadline-us", 0u64)?)
+        .with_hedge_us(num(args, "hedge-us", 0u64)?)
+        .with_quarantine(
+            num(args, "quarantine-after", 0u32)?,
+            num(args, "quarantine-backoff-us", 10_000u64)?,
+        );
+    res.validate()
+        .map_err(|e| anyhow::anyhow!("--retry/--op-deadline-us/--hedge-us: {e}"))?;
+    Ok(res.enabled().then_some(res))
+}
+
 /// Shared fdb-hammer workload setup for `hammer`, `trace`, and
 /// `metrics`: parse the deployment + workload options and attach the
 /// telemetry registry when one is given.
@@ -145,6 +165,9 @@ fn hammer_workload(
     }
     if let Some(policy) = args.value_of("read-policy").map_err(|e| anyhow::anyhow!(e))? {
         dep = dep.with_read_policy(parse_read_policy(policy)?);
+    }
+    if let Some(res) = parse_resilience(args)? {
+        dep = dep.with_resilience(res);
     }
     if let Some(reg) = reg {
         dep = dep.with_metrics(reg);
@@ -327,6 +350,7 @@ pub fn cmd_crash(args: &Args) -> Result<()> {
         nfields,
         field_size,
         crate::fdb::IoProfile::default().with_durable(true),
+        parse_resilience(args)?,
         reg.as_ref(),
     );
     println!(
@@ -351,6 +375,96 @@ pub fn cmd_crash(args: &Args) -> Result<()> {
         );
     }
     println!("  recovery check: PASSED (index and data agree at the kill point)");
+    if let (Some(reg), Some(path)) = (&reg, &metrics_path) {
+        write_metrics_json(reg, path)?;
+    }
+    Ok(())
+}
+
+/// `fdbctl degrade --seed n [--copies n] [--kill n] [--nfields n]
+/// [--field-size sz] [--retry n] [--op-deadline-us n] [--hedge-us n]
+/// [--quarantine-after n] [--metrics out.json]`: the replica-loss
+/// scenario — a replicated reader loses one replica after `--kill`
+/// reads, mid-retrieve-storm. Exits non-zero if any read surfaces a
+/// caller-visible error or comes back corrupt; reports degraded vs
+/// healthy read p99 and the resilience counters that absorbed the
+/// loss. Unlike the other commands, the resilience layer defaults ON
+/// here (retries + hedging + quarantine) — flags override each knob.
+pub fn cmd_degrade(args: &Args) -> Result<()> {
+    let kind = parse_system(opt(args, "system", "lustre")?)?;
+    if kind == SystemKind::Null {
+        bail!("degrade needs a deployed storage system (lustre|daos|ceph)");
+    }
+    let copies = num(args, "copies", 3usize)?;
+    if copies < 2 {
+        bail!("degrade needs a replicated deployment (--copies >= 2)");
+    }
+    let seed = num(args, "seed", 42u64)?;
+    let nfields = num(args, "nfields", 24usize)?;
+    let kill = num(args, "kill", (nfields / 4) as u64)?;
+    let field_size = size(args, "field-size", 64 << 10)?;
+    let res = ResilienceProfile::retries(num(args, "retry", 3u32)?)
+        .with_seed(seed)
+        .with_backoff_us(num(args, "retry-backoff-us", 200u64)?)
+        .with_op_deadline_us(num(args, "op-deadline-us", 0u64)?)
+        .with_hedge_us(num(args, "hedge-us", 500u64)?)
+        .with_quarantine(
+            num(args, "quarantine-after", 2u32)?,
+            num(args, "quarantine-backoff-us", 5_000u64)?,
+        );
+    res.validate()
+        .map_err(|e| anyhow::anyhow!("--retry/--hedge-us/--quarantine-after: {e}"))?;
+    let metrics_path = args
+        .value_of("metrics")
+        .map_err(|e| anyhow::anyhow!(e))?
+        .map(str::to_string);
+    let reg = metrics_path.as_ref().map(|_| MetricsRegistry::new());
+    let r = crate::bench::degrade::degraded_read(
+        kind,
+        copies,
+        seed,
+        kill,
+        nfields,
+        field_size,
+        crate::fdb::IoProfile::default(),
+        res,
+        reg.as_ref(),
+    );
+    println!(
+        "degrade {} replicated:{copies} seed {seed} kill@{kill}: {} fields × {} retrieve rounds",
+        kind.label(),
+        r.fields,
+        r.rounds,
+    );
+    println!(
+        "  read p99: healthy {:.1} us, degraded {:.1} us ({:.2}x)",
+        r.healthy_p99_us,
+        r.degraded_p99_us,
+        if r.healthy_p99_us > 0.0 {
+            r.degraded_p99_us / r.healthy_p99_us
+        } else {
+            0.0
+        },
+    );
+    println!(
+        "  resilience: {} hedges launched, {} retries, {} quarantine ejections",
+        r.hedges, r.retries, r.quarantined
+    );
+    if r.read_errors > 0 || r.verify_failures > 0 {
+        bail!(
+            "degraded reads FAILED: {} caller-visible errors, {} corrupt/missing fields{}",
+            r.read_errors,
+            r.verify_failures,
+            r.first_error
+                .as_deref()
+                .map(|e| format!(" (first: {e})"))
+                .unwrap_or_default(),
+        );
+    }
+    println!(
+        "  degraded-read check: PASSED ({} reads byte-verified under replica loss)",
+        r.reads_ok
+    );
     if let (Some(reg), Some(path)) = (&reg, &metrics_path) {
         write_metrics_json(reg, path)?;
     }
@@ -494,6 +608,9 @@ pub fn cmd_opsrun(args: &Args) -> Result<()> {
         RedundancyOpt::None,
     )
     .with_io(io);
+    if let Some(res) = parse_resilience(args)? {
+        dep = dep.with_resilience(res);
+    }
     if let Some(reg) = &reg {
         dep = dep.with_metrics(reg);
     }
@@ -602,8 +719,10 @@ pub fn usage() -> &'static str {
                  [--read-policy first|rr|fastest] [--metrics out.json]\n\
                  [--slow-op-us n]  (log + report ops slower than n us)\n\
                  [--durable] [--fault seed=n,failstop:<class>:<n>,torn:write:<n>,\n\
-                  err:<class>:p<f>,slow:<class>:<us>[,only=<i>]]  classes: write|\n\
-                  read|flush|index|index-flush\n\
+                  err:<class>:p<f>[:transient],slow:<class>:<us>[,only=<i>]]\n\
+                  classes: write|read|flush|index|index-flush\n\
+                 [--retry n] [--retry-backoff-us n] [--op-deadline-us n]\n\
+                 [--hedge-us n] [--quarantine-after n] [--quarantine-backoff-us n]\n\
        trace     run the hammer workload, export the op journal as Chrome\n\
                  trace-event JSON    [--out trace.json] [--journal-cap n]\n\
                  [+ all hammer options]\n\
@@ -612,13 +731,19 @@ pub fn usage() -> &'static str {
        crash     seeded crash-recovery smoke on the WAL'd POSIX catalogue\n\
                  [--seed n] [--kill n] [--nfields n] [--field-size sz]\n\
                  [--wrapper none|replicated[:n]|sharded[:n]|tiered]\n\
-                 [--metrics out.json]\n\
+                 [--metrics out.json] [+ resilience flags, see hammer]\n\
+       degrade   replica-loss smoke: one reader replica fail-stopped after\n\
+                 --kill reads, mid-retrieve-storm; exits non-zero if any\n\
+                 degraded read fails or corrupts\n\
+                 [--copies n] [--seed n] [--kill n] [--nfields n]\n\
+                 [--field-size sz] [--metrics out.json]\n\
+                 [+ resilience flags, see hammer — default ON here]\n\
        ior       IOR-like generic benchmark [--system s] [--nops n] [--xfer sz] [--dfs]\n\
        fieldio   Field I/O PoC              [--system s] [--nfields n] [--dummy]\n\
        opsrun    end-to-end operational NWP run with PJRT PGEN compute\n\
                  [--system s] [--members n] [--steps n] [--grid 32|64] [--no-compute]\n\
                  [--io-depth n|auto] [--coalesce-gap sz] [--coalesce-max sz]\n\
-                 [--metrics out.json]\n\
+                 [--metrics out.json] [+ resilience flags, see hammer]\n\
        admin     dataset stats + wipe demo   [--system s] [--nfields n]\n\
      \n\
      systems: lustre | daos | ceph | null      testbeds: nextgenio | gcp"
@@ -799,6 +924,53 @@ mod tests {
         assert_eq!(parse_read_policy("rr").unwrap(), ReadPolicy::RoundRobin);
         assert_eq!(parse_read_policy("fastest").unwrap(), ReadPolicy::Fastest);
         assert!(parse_read_policy("slowest").is_err());
+    }
+
+    #[test]
+    fn hammer_resilience_flags_smoke() {
+        // the resilience layer end-to-end through the CLI: a transient
+        // read-error storm on a replicated store, masked by retries +
+        // hedged reads + quarantine; --check byte-verifies every field
+        let args = Args::parse(
+            "--system lustre --wrapper replicated:2 --retry 3 --hedge-us 500 --quarantine-after 2 --fault seed=5,err:read:p0.2:transient --servers 2 --clients 2 --procs 1 --steps 2 --params 2 --levels 1 --field-size 65536 --check"
+                .split_whitespace()
+                .map(String::from),
+        );
+        cmd_hammer(&args).unwrap();
+    }
+
+    #[test]
+    fn resilience_flag_bounds_are_usage_errors() {
+        for bad in [
+            "--system null --retry 0",
+            "--system null --retry 99",
+            "--system null --retry 3 --retry-backoff-us 0",
+            "--system null --quarantine-after 2 --quarantine-backoff-us 0",
+        ] {
+            let args = Args::parse(bad.split_whitespace().map(String::from));
+            assert!(cmd_hammer(&args).is_err(), "`{bad}` should be rejected");
+        }
+    }
+
+    #[test]
+    fn degrade_command_smoke() {
+        // the CI replica-loss smoke shape: replicated reader loses one
+        // replica mid-storm; the command exits cleanly only when every
+        // degraded read byte-verifies
+        let args = Args::parse(
+            "--copies 2 --seed 7 --kill 3 --nfields 12 --field-size 4096"
+                .split_whitespace()
+                .map(String::from),
+        );
+        cmd_degrade(&args).unwrap();
+    }
+
+    #[test]
+    fn degrade_rejects_unreplicated_deployments() {
+        let args = Args::parse(["--copies".to_string(), "1".to_string()]);
+        assert!(cmd_degrade(&args).is_err());
+        let args = Args::parse(["--system".to_string(), "null".to_string()]);
+        assert!(cmd_degrade(&args).is_err());
     }
 
     #[test]

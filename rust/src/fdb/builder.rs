@@ -158,6 +158,130 @@ impl IoProfile {
     }
 }
 
+/// The resilience policy of one FDB instance: how the I/O engine and
+/// the replicated store respond to slow, failing, or dead backends.
+///
+/// The default is everything OFF — byte-identical legacy behaviour:
+/// one attempt per op, no deadline, no hedging, no quarantine. Each
+/// knob enables one mechanism:
+///
+/// * `max_attempts > 1` — the engine retries transient failures
+///   ([`crate::fdb::telemetry::is_transient`]: deadline timeouts and
+///   `:transient`-marked injected faults) with exponential backoff
+///   (`backoff_us * 2^attempt`) plus seeded jitter, slept in virtual
+///   time so retry storms are deterministic and measurable.
+/// * `op_deadline_us > 0` — a per-op deadline: a backend op still
+///   pending when the deadline fires is abandoned and surfaces as
+///   [`FdbError::Timeout`] (itself retryable).
+/// * `hedge_us > 0` — hedged reads on replicated stores: if the
+///   primary replica hasn't answered after the hedge delay, a second
+///   replica attempt launches; first completion wins, the loser is
+///   cancelled and its bytes discarded.
+/// * `quarantine_after > 0` — replica health tracking: that many
+///   *consecutive* failures eject a replica from the read rotation for
+///   `quarantine_backoff_us` (doubling per relapse); after the backoff
+///   one probe read is allowed and a success reinstates it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ResilienceProfile {
+    /// Total attempts per engine op (1 = retries off; 1..=16).
+    pub max_attempts: u32,
+    /// Base backoff between attempts in µs (doubles per retry, jittered).
+    pub backoff_us: u64,
+    /// Seed for the backoff jitter stream.
+    pub seed: u64,
+    /// Per-op deadline in µs (0 = no deadline).
+    pub op_deadline_us: u64,
+    /// Hedged-read delay in µs on replicated stores (0 = no hedging).
+    pub hedge_us: u64,
+    /// Consecutive failures before a replica is quarantined (0 = off).
+    pub quarantine_after: u32,
+    /// Initial quarantine backoff in µs before a probe is allowed.
+    pub quarantine_backoff_us: u64,
+}
+
+impl Default for ResilienceProfile {
+    fn default() -> ResilienceProfile {
+        ResilienceProfile {
+            max_attempts: 1,
+            backoff_us: 200,
+            seed: 0,
+            op_deadline_us: 0,
+            hedge_us: 0,
+            quarantine_after: 0,
+            quarantine_backoff_us: 10_000,
+        }
+    }
+}
+
+impl ResilienceProfile {
+    /// Shorthand: retries on with `attempts` total attempts.
+    pub fn retries(attempts: u32) -> ResilienceProfile {
+        ResilienceProfile {
+            max_attempts: attempts,
+            ..ResilienceProfile::default()
+        }
+    }
+
+    pub fn with_backoff_us(mut self, micros: u64) -> ResilienceProfile {
+        self.backoff_us = micros;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> ResilienceProfile {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_op_deadline_us(mut self, micros: u64) -> ResilienceProfile {
+        self.op_deadline_us = micros;
+        self
+    }
+
+    pub fn with_hedge_us(mut self, micros: u64) -> ResilienceProfile {
+        self.hedge_us = micros;
+        self
+    }
+
+    pub fn with_quarantine(mut self, after: u32, backoff_us: u64) -> ResilienceProfile {
+        self.quarantine_after = after;
+        self.quarantine_backoff_us = backoff_us;
+        self
+    }
+
+    /// Whether any mechanism is on (the default profile is a no-op).
+    pub fn enabled(&self) -> bool {
+        self.max_attempts > 1
+            || self.op_deadline_us > 0
+            || self.hedge_us > 0
+            || self.quarantine_after > 0
+    }
+
+    /// Bounds check (shared by the builder and the CLI front-ends).
+    pub fn validate(&self) -> Result<(), FdbError> {
+        if self.max_attempts == 0 || self.max_attempts > 16 {
+            return Err(FdbError::InvalidConfig(format!(
+                "retry attempts must be in 1..=16 (got {})",
+                self.max_attempts
+            )));
+        }
+        if self.max_attempts > 1 && self.backoff_us == 0 {
+            return Err(FdbError::InvalidConfig(
+                "retry backoff must be > 0 µs when retries are on \
+                 (a zero backoff is a hot retry storm)"
+                    .to_string(),
+            ));
+        }
+        if self.quarantine_after > 0 && self.quarantine_backoff_us == 0 {
+            return Err(FdbError::InvalidConfig(
+                "quarantine backoff must be > 0 µs when quarantine is on \
+                 (a zero backoff re-probes a dead replica every read)"
+                    .to_string(),
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Which backend pair an FDB instance runs over, plus its knobs.
 /// Wrapper variants (`Tiered`, `Replicated`, `Sharded`) nest other
 /// configs and compose recursively.
@@ -398,6 +522,7 @@ impl BackendConfig {
         sim: &Sim,
         instr: Instr<'_>,
         policy: Option<ReadPolicy>,
+        res: Option<&ResilienceProfile>,
     ) -> Result<Box<dyn Store>, FdbError> {
         let need_node = || {
             FdbError::InvalidConfig(format!("{} backend needs a client node", self.label()))
@@ -451,8 +576,8 @@ impl BackendConfig {
                 instrument_store(Box::new(NullStore), &instr, "null", sim)
             }
             BackendConfig::Tiered { front, back } => Box::new(TieredStore::new(
-                front.build_store(node, sim, child_instr(&instr, "front"), policy)?,
-                back.build_store(node, sim, child_instr(&instr, "back"), policy)?,
+                front.build_store(node, sim, child_instr(&instr, "front"), policy, res)?,
+                back.build_store(node, sim, child_instr(&instr, "back"), policy, res)?,
             )),
             BackendConfig::Replicated { inner, copies } => {
                 let mut replicas = Vec::with_capacity(*copies);
@@ -462,18 +587,24 @@ impl BackendConfig {
                         sim,
                         child_instr(&instr, &format!("r{i}")),
                         policy,
+                        res,
                     )?);
                 }
                 let mut store = ReplicatedStore::new(replicas).with_clock(sim);
                 if let Some(p) = policy {
                     store = store.with_read_policy(p);
                 }
+                if let Some(r) = res {
+                    store = store.with_resilience(r, instr.as_ref().map(|(reg, _)| *reg));
+                }
                 Box::new(store)
             }
-            BackendConfig::Sharded { inner, .. } => inner.build_store(node, sim, instr, policy)?,
+            BackendConfig::Sharded { inner, .. } => {
+                inner.build_store(node, sim, instr, policy, res)?
+            }
             BackendConfig::Fault { inner, plan } => instrument_store(
                 Box::new(FaultStore::new(
-                    inner.build_store(node, sim, None, policy)?,
+                    inner.build_store(node, sim, None, policy, res)?,
                     plan.build_state(Some(sim)),
                 )),
                 &instr,
@@ -597,6 +728,7 @@ pub struct FdbBuilder {
     io: IoProfile,
     metrics: Option<MetricsRegistry>,
     read_policy: Option<ReadPolicy>,
+    resilience: Option<ResilienceProfile>,
 }
 
 impl FdbBuilder {
@@ -610,6 +742,7 @@ impl FdbBuilder {
             io: IoProfile::default(),
             metrics: None,
             read_policy: None,
+            resilience: None,
         }
     }
 
@@ -670,6 +803,16 @@ impl FdbBuilder {
         self
     }
 
+    /// Set the [`ResilienceProfile`]: engine-level retry/backoff and
+    /// per-op deadlines, plus hedged reads and replica quarantine on
+    /// every replicated store in the config tree. The default profile
+    /// (everything off) leaves behaviour byte-identical to a builder
+    /// without this call.
+    pub fn resilience(mut self, res: ResilienceProfile) -> FdbBuilder {
+        self.resilience = Some(res);
+        self
+    }
+
     /// Validate the config tree and wire the matching Store/Catalogue
     /// pair, recursing through wrapper configs.
     pub fn build(self) -> Result<Fdb, FdbError> {
@@ -678,6 +821,9 @@ impl FdbBuilder {
             .ok_or_else(|| FdbError::InvalidConfig("no backend configured".to_string()))?;
         config.validate(self.node.as_ref())?;
         self.io.validate()?;
+        if let Some(res) = &self.resilience {
+            res.validate()?;
+        }
         let schema = self
             .schema
             .unwrap_or_else(|| config.default_schema());
@@ -687,6 +833,7 @@ impl FdbBuilder {
             &self.sim,
             instr.clone(),
             self.read_policy,
+            self.resilience.as_ref(),
         )?;
         let catalogue =
             config.build_catalogue(self.node.as_ref(), &schema, &self.io, &self.sim, instr)?;
@@ -696,6 +843,9 @@ impl FdbBuilder {
         }
         if let Some(reg) = &self.metrics {
             fdb = fdb.with_metrics(reg);
+        }
+        if let Some(res) = self.resilience {
+            fdb = fdb.with_resilience(res);
         }
         Ok(fdb)
     }

@@ -40,19 +40,20 @@ use std::ops::{Deref, DerefMut};
 use std::rc::Rc;
 use std::task::Waker;
 
-use crate::fdb::backend::{Catalogue, CatalogueSession, Store, StoreSession};
+use crate::fdb::backend::{Catalogue, CatalogueSession, LocalBoxFuture, Store, StoreSession};
 use crate::fdb::datahandle::DataHandle;
 use crate::fdb::key::Key;
 use crate::fdb::location::FieldLocation;
 use crate::fdb::plan::{PlanStats, StreamPlanner};
-use crate::fdb::telemetry::{is_injected_fault, EngineMetrics, MetricsRegistry};
-use crate::fdb::FdbError;
-use crate::sim::exec::Sim;
+use crate::fdb::telemetry::{is_injected_fault, is_transient, EngineMetrics, MetricsRegistry};
+use crate::fdb::{FdbError, ResilienceProfile};
+use crate::sim::exec::{Sim, Sleep};
 use crate::sim::futures::{boxed, join_all};
 use crate::sim::resource::Resource;
 use crate::sim::time::SimTime;
 use crate::sim::trace::{OpClass, Trace};
 use crate::util::content::Bytes;
+use crate::util::rng::Rng;
 
 /// RAII session checkout: holds one pooled session, pushes it back on
 /// drop. Minted only under the depth semaphore, so the pool can never
@@ -125,6 +126,62 @@ fn note_failure(failed: &RefCell<Option<(usize, FdbError)>>, i: usize, e: FdbErr
     }
 }
 
+/// Run one store op under the engine's resilience policy: the op
+/// expression is re-evaluated per attempt (each retry mints a fresh
+/// future over the same session), raced against the per-op deadline,
+/// and re-attempted with exponential backoff while the failure is
+/// transient ([`is_transient`]) and attempts remain. A macro rather
+/// than a method because stable Rust can't express "`FnMut` returning
+/// a future that borrows the captured session" as a bound.
+macro_rules! resilient {
+    ($engine:expr, $class:expr, $op:expr) => {{
+        let mut attempt: u32 = 0;
+        loop {
+            let r = $engine.with_deadline($class, $op).await;
+            match r {
+                Err(e) if $engine.should_retry(&e, attempt) => {
+                    attempt += 1;
+                    $engine.retry_backoff(attempt).await;
+                }
+                r => {
+                    if attempt > 0 {
+                        $engine.retry_outcome(r.is_ok());
+                    }
+                    break r;
+                }
+            }
+        }
+    }};
+}
+
+/// Races an op against its deadline timer. The op polls first, so an
+/// op completing at the same virtual instant the deadline fires still
+/// wins. `None` = the deadline fired; dropping the op future abandons
+/// it (its backend timers fire harmlessly into the sim).
+struct DeadlineRace<'a, T> {
+    fut: LocalBoxFuture<'a, T>,
+    timer: Sleep,
+}
+
+impl<'a, T> std::future::Future for DeadlineRace<'a, T> {
+    type Output = Option<T>;
+
+    fn poll(
+        self: std::pin::Pin<&mut Self>,
+        cx: &mut std::task::Context<'_>,
+    ) -> std::task::Poll<Option<T>> {
+        // Unpin: the op is already boxed and Sleep is plain state
+        let this = self.get_mut();
+        if let std::task::Poll::Ready(v) = this.fut.as_mut().poll(cx) {
+            return std::task::Poll::Ready(Some(v));
+        }
+        match std::pin::Pin::new(&mut this.timer).poll(cx) {
+            std::task::Poll::Ready(()) => std::task::Poll::Ready(None),
+            std::task::Poll::Pending => std::task::Poll::Pending,
+        }
+    }
+}
+
 /// The shared bounded-concurrency scheduler. One per [`crate::fdb::Fdb`]
 /// instance; interior-mutable so the executors borrow `&self` while the
 /// caller keeps `&mut` access to its Store/Catalogue for the serial
@@ -145,6 +202,10 @@ pub(crate) struct IoEngine {
     registry: Option<MetricsRegistry>,
     /// Slow-op threshold (raw span duration, ns); 0 disables the log.
     slow_op_ns: u64,
+    /// Retry/backoff/deadline policy (default: everything off).
+    resilience: ResilienceProfile,
+    /// Seeded jitter stream for retry backoff.
+    retry_rng: RefCell<Rng>,
 }
 
 impl IoEngine {
@@ -160,6 +221,8 @@ impl IoEngine {
             metrics: None,
             registry: None,
             slow_op_ns: 0,
+            resilience: ResilienceProfile::default(),
+            retry_rng: RefCell::new(Rng::new(0)),
         }
     }
 
@@ -169,6 +232,14 @@ impl IoEngine {
 
     pub(crate) fn set_trace(&mut self, trace: Trace) {
         self.trace = trace;
+    }
+
+    /// Install the retry/backoff/deadline policy. The jitter stream is
+    /// re-seeded from the profile so two runs with the same seed retry
+    /// at identical virtual instants.
+    pub(crate) fn set_resilience(&mut self, res: ResilienceProfile) {
+        self.retry_rng = RefCell::new(Rng::new(res.seed).fork(0x7265_7472_79)); // "retry"
+        self.resilience = res;
     }
 
     /// Attach a metrics registry: every admitted op records its
@@ -350,6 +421,72 @@ impl IoEngine {
         }
     }
 
+    /// Race `fut` against the profile's per-op deadline. With no
+    /// deadline configured this is a plain await; otherwise an op still
+    /// pending when the timer fires is dropped and surfaces as
+    /// [`FdbError::Timeout`] (counted under `engine.timeout.<class>`).
+    async fn with_deadline<T>(
+        &self,
+        class: OpClass,
+        fut: LocalBoxFuture<'_, Result<T, FdbError>>,
+    ) -> Result<T, FdbError> {
+        let micros = self.resilience.op_deadline_us;
+        if micros == 0 {
+            return fut.await;
+        }
+        let race = DeadlineRace {
+            fut,
+            timer: self.sim.sleep(SimTime::micros(micros)),
+        };
+        match race.await {
+            Some(r) => r,
+            None => {
+                if let Some(reg) = &self.registry {
+                    reg.counter(&format!("engine.timeout.{}", class.label())).inc();
+                }
+                Err(FdbError::Timeout {
+                    class: class.label(),
+                    micros,
+                })
+            }
+        }
+    }
+
+    /// Whether attempt number `attempt` (0-based) failing with `e`
+    /// warrants another go: only transient failures, and only while the
+    /// profile's attempt budget lasts.
+    fn should_retry(&self, e: &FdbError, attempt: u32) -> bool {
+        attempt + 1 < self.resilience.max_attempts && is_transient(e)
+    }
+
+    /// Sleep the backoff before re-attempt `attempt` (1-based):
+    /// `backoff_us * 2^(attempt-1)` plus up to half that of seeded
+    /// jitter, in virtual time so retry storms stay deterministic and
+    /// show up in the measured latency.
+    async fn retry_backoff(&self, attempt: u32) {
+        if let Some(reg) = &self.registry {
+            reg.counter("engine.retry.attempts").inc();
+        }
+        let base = self
+            .resilience
+            .backoff_us
+            .saturating_mul(1u64 << (attempt - 1).min(16));
+        let jitter = self.retry_rng.borrow_mut().below(base / 2 + 1);
+        self.sim.sleep(SimTime::micros(base + jitter)).await;
+    }
+
+    /// Count the final outcome of an op that needed at least one retry.
+    fn retry_outcome(&self, recovered: bool) {
+        if let Some(reg) = &self.registry {
+            reg.counter(if recovered {
+                "engine.retry.recovered"
+            } else {
+                "engine.retry.exhausted"
+            })
+            .inc();
+        }
+    }
+
     /// Record the batch's accumulated lock time once under
     /// [`OpClass::Lock`].
     fn record_lock(&self, lock: SimTime) {
@@ -395,7 +532,13 @@ impl IoEngine {
                         let backend = session.name();
                         let nbytes = data.len();
                         let t0 = self.sim.now();
-                        let r = session.archive(ds, colloc, id, data).await;
+                        // data is virtual content — the per-attempt clone
+                        // is a metadata copy, not a buffer copy
+                        let r = resilient!(
+                            self,
+                            OpClass::DataWrite,
+                            session.archive(ds, colloc, id, data.clone())
+                        );
                         let lock = session.take_lock_time();
                         lock_total.set(lock_total.get() + lock);
                         match r {
@@ -420,11 +563,18 @@ impl IoEngine {
         if let Some((_, e)) = failed.into_inner() {
             return Err(e);
         }
-        Ok(locs
-            .into_inner()
-            .into_iter()
-            .map(|l| l.expect("no failure => every field has a location"))
-            .collect())
+        // no recorded failure => every slot filled; if that invariant
+        // ever breaks the caller gets a typed error, not a process abort
+        let mut out = Vec::with_capacity(n);
+        for loc in locs.into_inner() {
+            out.push(loc.ok_or_else(|| FdbError::Backend {
+                backend: "io-engine",
+                detail: "archive batch finished with a missing field location \
+                         but no recorded failure"
+                    .to_string(),
+            })?);
+        }
+        Ok(out)
     }
 
     /// Batched retrieve execution (uncoalesced): resolve each field's
@@ -498,7 +648,7 @@ impl IoEngine {
                     };
                     let backend = session.name();
                     let t0 = self.sim.now();
-                    let r = session.read(&handle).await;
+                    let r = resilient!(self, OpClass::DataRead, session.read(&handle));
                     let lock = session.take_lock_time();
                     lock_total.set(lock_total.get() + lock);
                     match r {
@@ -627,7 +777,11 @@ impl IoEngine {
                         };
                         let backend = session.name();
                         let t0 = self.sim.now();
-                        let r = session.read_ranges(std::slice::from_ref(&pr.handle)).await;
+                        let r = resilient!(
+                            self,
+                            OpClass::DataRead,
+                            session.read_ranges(std::slice::from_ref(&pr.handle))
+                        );
                         let lock = session.take_lock_time();
                         lock_total.set(lock_total.get() + lock);
                         match r {
@@ -699,7 +853,7 @@ impl IoEngine {
                         };
                         let h = DataHandle::from_location(&loc);
                         let t1 = self.sim.now();
-                        let r = session.read(&h).await;
+                        let r = resilient!(self, OpClass::DataRead, session.read(&h));
                         let lock = session.take_lock_time();
                         lock_total.set(lock_total.get() + lock);
                         match r {
@@ -890,6 +1044,126 @@ mod tests {
         // the slot came back too: both servers acquire without queueing
         block_on_ready(Box::pin(sem.acquire()));
         block_on_ready(Box::pin(sem.acquire()));
+    }
+
+    #[test]
+    fn deadline_converts_hung_op_into_typed_timeout() {
+        let sim = Sim::new();
+        let reg = MetricsRegistry::new();
+        let mut engine = IoEngine::new(&sim);
+        engine.set_metrics(&reg, 0);
+        engine.set_resilience(ResilienceProfile::default().with_op_deadline_us(50));
+        let hit = Rc::new(Cell::new(false));
+        {
+            let hit = hit.clone();
+            let slow = sim.clone();
+            sim.spawn(async move {
+                let fut = boxed(async move {
+                    slow.sleep(SimTime::micros(500)).await;
+                    Ok(0u32)
+                });
+                match engine.with_deadline(OpClass::DataRead, fut).await {
+                    Err(FdbError::Timeout { class, micros }) => {
+                        assert_eq!(class, OpClass::DataRead.label());
+                        assert_eq!(micros, 50);
+                        hit.set(true);
+                    }
+                    other => panic!("expected a timeout, got {other:?}"),
+                }
+            });
+        }
+        let end = sim.run();
+        assert!(hit.get());
+        assert_eq!(end, SimTime::micros(50), "the caller unblocks at the deadline");
+        assert_eq!(
+            reg.counter_value(&format!("engine.timeout.{}", OpClass::DataRead.label())),
+            1
+        );
+    }
+
+    #[test]
+    fn transient_failures_retry_with_backoff_and_recover() {
+        let sim = Sim::new();
+        let reg = MetricsRegistry::new();
+        let mut engine = IoEngine::new(&sim);
+        engine.set_metrics(&reg, 0);
+        engine.set_resilience(
+            ResilienceProfile::retries(4).with_backoff_us(10).with_seed(7),
+        );
+        let got = Rc::new(Cell::new(0u32));
+        {
+            let got = got.clone();
+            sim.spawn(async move {
+                let calls = Cell::new(0u32);
+                let calls = &calls;
+                let r: Result<u32, FdbError> = resilient!(engine, OpClass::DataRead, {
+                    let n = calls.get();
+                    calls.set(n + 1);
+                    boxed(async move {
+                        if n < 2 {
+                            Err(FdbError::Backend {
+                                backend: "fault",
+                                detail: "injected transient Read error".to_string(),
+                            })
+                        } else {
+                            Ok(7u32)
+                        }
+                    })
+                });
+                assert_eq!(calls.get(), 3, "two failures, one success");
+                got.set(r.unwrap());
+            });
+        }
+        let end = sim.run();
+        assert_eq!(got.get(), 7);
+        // exponential backoff in virtual time: 10µs then 20µs, plus jitter
+        assert!(end >= SimTime::micros(30), "backoff must advance the clock");
+        assert_eq!(reg.counter_value("engine.retry.attempts"), 2);
+        assert_eq!(reg.counter_value("engine.retry.recovered"), 1);
+        assert_eq!(reg.counter_value("engine.retry.exhausted"), 0);
+    }
+
+    #[test]
+    fn retry_budget_exhausts_and_permanent_errors_never_retry() {
+        let sim = Sim::new();
+        let reg = MetricsRegistry::new();
+        let mut engine = IoEngine::new(&sim);
+        engine.set_metrics(&reg, 0);
+        engine.set_resilience(ResilienceProfile::retries(2).with_backoff_us(5));
+        sim.spawn(async move {
+            // always-transient failure: one retry, then the budget is gone
+            let transient = Cell::new(0u32);
+            let (t, e) = (&transient, &engine);
+            let r: Result<u32, FdbError> = resilient!(e, OpClass::DataRead, {
+                t.set(t.get() + 1);
+                boxed(async move {
+                    Err(FdbError::Timeout {
+                        class: "data-read",
+                        micros: 1,
+                    })
+                })
+            });
+            assert!(r.is_err());
+            assert_eq!(t.get(), 2, "max_attempts=2 => exactly two attempts");
+            // permanent (unmarked) failure: no retry at all
+            let permanent = Cell::new(0u32);
+            let p = &permanent;
+            let r: Result<u32, FdbError> = resilient!(e, OpClass::DataRead, {
+                p.set(p.get() + 1);
+                boxed(async move {
+                    Err(FdbError::Backend {
+                        backend: "posix",
+                        detail: "enospc".to_string(),
+                    })
+                })
+            });
+            assert!(r.is_err());
+            assert_eq!(p.get(), 1, "permanent errors burn no retry budget");
+        });
+        sim.run();
+        assert_eq!(reg.counter_value("engine.retry.attempts"), 1);
+        assert_eq!(reg.counter_value("engine.retry.exhausted"), 1);
+        assert_eq!(reg.counter_value("engine.retry.recovered"), 0);
     }
 
     #[test]

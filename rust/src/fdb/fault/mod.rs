@@ -25,6 +25,10 @@
 //! failstop:<class>:<n>      after n ops of <class>, EVERY op fails
 //! torn:write:<n>            the n-th write persists a prefix, then errors
 //! err:<class>:p<prob>       each op of <class> fails with probability p
+//! err:<class>:p<prob>:transient   as above, but the injected error is
+//!                           marked RETRYABLE — retry policies
+//!                           ([`crate::fdb::ResilienceProfile`]) re-attempt
+//!                           it; unmarked err faults model permanent damage
 //! slow:<class>:<micros>     delay each op of <class> by <micros> µs
 //! only=<n>                  scope ALL rules to the n-th built instance
 //! ```

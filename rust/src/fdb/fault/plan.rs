@@ -61,7 +61,13 @@ pub enum FaultAction {
     /// then reports failure — a torn write.
     Torn { nth: u64 },
     /// Each operation of the class fails with probability `prob`.
-    Err { prob: f64 },
+    /// `transient` marks the injected error retryable (spec suffix
+    /// `:transient`, e.g. `err:read:p0.3:transient`): the detail string
+    /// carries the marker so [`crate::fdb::telemetry::is_transient`]
+    /// classifies it and retry policies re-attempt the op. Without the
+    /// marker the error models a permanent fault (bad sector, corrupt
+    /// object) that retrying cannot fix.
+    Err { prob: f64, transient: bool },
     /// Each operation of the class is delayed by `micros` of sim time —
     /// a slow replica/device.
     Slow { micros: u64 },
@@ -127,11 +133,22 @@ impl FaultPlan {
                 continue;
             }
             let parts: Vec<&str> = clause.split(':').collect();
-            let [action, class, arg] = parts[..] else {
-                return Err(invalid(format!(
-                    "clause `{clause}` is not action:class:arg"
-                )));
+            let (action, class, arg, modifier) = match parts[..] {
+                [action, class, arg] => (action, class, arg, None),
+                [action, class, arg, modifier] => (action, class, arg, Some(modifier)),
+                _ => {
+                    return Err(invalid(format!(
+                        "clause `{clause}` is not action:class:arg[:modifier]"
+                    )))
+                }
             };
+            if let Some(m) = modifier {
+                if action != "err" || m != "transient" {
+                    return Err(invalid(format!(
+                        "modifier `{m}` only valid as err:<class>:p<f>:transient"
+                    )));
+                }
+            }
             let class = FaultClass::parse(class)
                 .ok_or_else(|| invalid(format!("unknown op class `{class}`")))?;
             let action = match action {
@@ -158,7 +175,10 @@ impl FaultPlan {
                     if !(0.0..=1.0).contains(&p) {
                         return Err(invalid(format!("probability {p} outside [0,1]")));
                     }
-                    FaultAction::Err { prob: p }
+                    FaultAction::Err {
+                        prob: p,
+                        transient: modifier.is_some(),
+                    }
                 }
                 "slow" => FaultAction::Slow {
                     micros: arg
@@ -191,7 +211,13 @@ impl FaultPlan {
                 match a {
                     FaultAction::FailStop { after } => format!("failstop:{class}:{after}"),
                     FaultAction::Torn { nth } => format!("torn:{class}:{nth}"),
-                    FaultAction::Err { prob } => format!("err:{class}:p{prob}"),
+                    FaultAction::Err { prob, transient } => {
+                        if *transient {
+                            format!("err:{class}:p{prob}:transient")
+                        } else {
+                            format!("err:{class}:p{prob}")
+                        }
+                    }
                     FaultAction::Slow { micros } => format!("slow:{class}:{micros}"),
                 }
             })
@@ -290,11 +316,13 @@ impl FaultState {
                         return FaultDecision::TornWrite { keep: len / 2 };
                     }
                 }
-                FaultAction::Err { prob } => {
+                FaultAction::Err { prob, transient } => {
                     if self.rng.f64() < *prob {
-                        return FaultDecision::Fail(injected(format!(
-                            "injected {class:?} error (op {n})"
-                        )));
+                        return FaultDecision::Fail(injected(if *transient {
+                            format!("injected transient {class:?} error (op {n})")
+                        } else {
+                            format!("injected {class:?} error (op {n})")
+                        }));
                     }
                 }
                 FaultAction::Slow { micros } => {
@@ -326,7 +354,10 @@ mod tests {
             (FaultClass::Write, FaultAction::FailStop { after: 5 })
         );
         assert_eq!(plan.rules[1], (FaultClass::Write, FaultAction::Torn { nth: 3 }));
-        assert_eq!(plan.rules[2], (FaultClass::Read, FaultAction::Err { prob: 0.25 }));
+        assert_eq!(
+            plan.rules[2],
+            (FaultClass::Read, FaultAction::Err { prob: 0.25, transient: false })
+        );
         assert_eq!(
             plan.rules[3],
             (FaultClass::Flush, FaultAction::Slow { micros: 100 })
@@ -343,6 +374,9 @@ mod tests {
             "torn:read:1",
             "seed=x",
             "failstop:write",
+            "err:read:p0.5:forever",
+            "slow:read:100:transient",
+            "err:read:p0.5:transient:x",
         ] {
             assert!(FaultPlan::parse(bad).is_err(), "`{bad}` should not parse");
         }
@@ -381,10 +415,43 @@ mod tests {
     }
 
     #[test]
+    fn transient_marker_parses_and_classifies() {
+        // parse: the 4-part err clause round-trips through describe()
+        let plan = FaultPlan::parse("seed=3,err:read:p0.3:transient").unwrap();
+        assert_eq!(
+            plan.rules[0],
+            (FaultClass::Read, FaultAction::Err { prob: 0.3, transient: true })
+        );
+        assert_eq!(plan.describe(), "err:read:p0.3:transient");
+        // classification: transient-marked injected errors are the ONLY
+        // injected err-rule failures a retry policy may re-attempt
+        let fire = |transient: bool| -> FdbError {
+            let plan = FaultPlan::new(1)
+                .with_rule(FaultClass::Read, FaultAction::Err { prob: 1.0, transient });
+            let state = plan.build_state(None);
+            let mut s = state.borrow_mut();
+            match s.on_op(FaultClass::Read, 0) {
+                FaultDecision::Fail(e) => e,
+                _ => panic!("p1.0 must fire"),
+            }
+        };
+        assert!(crate::fdb::telemetry::is_transient(&fire(true)));
+        assert!(!crate::fdb::telemetry::is_transient(&fire(false)));
+        // a fail-stopped instance is permanently dead — never retryable
+        let plan =
+            FaultPlan::new(1).with_rule(FaultClass::Read, FaultAction::FailStop { after: 0 });
+        let state = plan.build_state(None);
+        let FaultDecision::Fail(e) = state.borrow_mut().on_op(FaultClass::Read, 0) else {
+            panic!("fail-stop must fire");
+        };
+        assert!(!crate::fdb::telemetry::is_transient(&e));
+    }
+
+    #[test]
     fn err_probability_is_deterministic_per_seed() {
         let run = |seed| {
-            let plan =
-                FaultPlan::new(seed).with_rule(FaultClass::Read, FaultAction::Err { prob: 0.5 });
+            let plan = FaultPlan::new(seed)
+                .with_rule(FaultClass::Read, FaultAction::Err { prob: 0.5, transient: false });
             let state = plan.build_state(None);
             let mut s = state.borrow_mut();
             (0..64)
@@ -417,7 +484,8 @@ mod tests {
 
     #[test]
     fn instances_draw_independent_streams() {
-        let plan = FaultPlan::new(9).with_rule(FaultClass::Read, FaultAction::Err { prob: 0.5 });
+        let plan = FaultPlan::new(9)
+            .with_rule(FaultClass::Read, FaultAction::Err { prob: 0.5, transient: false });
         let a = plan.build_state(None);
         let b = plan.build_state(None); // e.g. replica 1 of the same config
         let seq = |state: &Rc<RefCell<FaultState>>| {

@@ -22,7 +22,7 @@
 use std::cell::{Cell, RefCell};
 
 use crate::fdb::backend::{Catalogue, Store};
-use crate::fdb::builder::IoProfile;
+use crate::fdb::builder::{IoProfile, ResilienceProfile};
 use crate::fdb::datahandle::DataHandle;
 use crate::fdb::engine::{IoEngine, Pipe};
 use crate::fdb::key::Key;
@@ -121,6 +121,15 @@ impl Fdb {
         self.registry = Some(reg.clone());
         self.slow_op_ns = self.io.slow_op_us.saturating_mul(1_000);
         self.engine.set_metrics(reg, self.io.slow_op_us);
+        self
+    }
+
+    /// Install the engine's retry/backoff/deadline policy (after
+    /// [`Fdb::with_metrics`] if counters should record — the builder
+    /// orders the two correctly). Hedging and quarantine live in the
+    /// replicated store, wired by the builder from the same profile.
+    pub fn with_resilience(mut self, res: ResilienceProfile) -> Fdb {
+        self.engine.set_resilience(res);
         self
     }
 

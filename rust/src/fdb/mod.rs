@@ -84,7 +84,7 @@ pub use backend::{
     Catalogue, CatalogueSession, NullCatalogue, NullStore, SharedNullCatalogue, Store,
     StoreSession,
 };
-pub use builder::{BackendConfig, FdbBuilder, IoProfile};
+pub use builder::{BackendConfig, FdbBuilder, IoProfile, ResilienceProfile};
 pub use fault::{FaultCatalogue, FaultPlan, FaultStore, RecoveryStats};
 pub use datahandle::DataHandle;
 pub use fdb::Fdb;
@@ -93,7 +93,7 @@ pub use location::FieldLocation;
 pub use plan::{PlanStats, ReadPlan};
 pub use request::Request;
 pub use schema::Schema;
-pub use telemetry::{HistogramSnapshot, MetricsRegistry, SlowOp};
+pub use telemetry::{is_transient, HistogramSnapshot, MetricsRegistry, SlowOp};
 
 /// FDB error surface.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -114,11 +114,21 @@ pub enum FdbError {
         detail: String,
     },
     /// Every replica of a [`wrappers::ReplicatedStore`] failed the
-    /// operation; `last` is the final replica's underlying error.
+    /// operation; `last` is an underlying replica error, preferring a
+    /// transient one when the failures were mixed — so the engine's
+    /// retry policy (which classifies this error by recursing into
+    /// `last`) keeps retrying while any replica is worth re-probing.
     AllReplicasFailed {
         op: &'static str,
         copies: usize,
         last: Box<FdbError>,
+    },
+    /// A backend operation outran its per-op deadline
+    /// ([`ResilienceProfile::op_deadline_us`]) and was abandoned by the
+    /// I/O engine. Always retryable.
+    Timeout {
+        class: &'static str,
+        micros: u64,
     },
 }
 
@@ -147,6 +157,9 @@ impl std::fmt::Display for FdbError {
                 f,
                 "all {copies} replicas failed {op}; last error: {last}"
             ),
+            FdbError::Timeout { class, micros } => {
+                write!(f, "{class} op exceeded its {micros} us deadline")
+            }
         }
     }
 }

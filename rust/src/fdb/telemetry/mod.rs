@@ -57,6 +57,25 @@ pub fn is_injected_fault(err: &FdbError) -> bool {
     }
 }
 
+/// Whether an error is worth retrying: deadline timeouts and injected
+/// faults carrying the `transient` marker
+/// ([`crate::fdb::fault::FaultAction::Err`]'s `:transient` spec suffix)
+/// are; everything else — permanent injected faults (fail-stop, torn
+/// writes, unmarked err rules), organic backend failures, config and
+/// schema errors — is not. `AllReplicasFailed` recurses into the last
+/// replica's error: if the final failure was retryable, another sweep
+/// over the replica set may succeed.
+pub fn is_transient(err: &FdbError) -> bool {
+    match err {
+        FdbError::Timeout { .. } => true,
+        FdbError::Backend { backend, detail } => {
+            *backend == "fault" && detail.contains("transient")
+        }
+        FdbError::AllReplicasFailed { last, .. } => is_transient(last),
+        _ => false,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -81,5 +100,42 @@ mod tests {
             }),
         }));
         assert!(!is_injected_fault(&FdbError::UnderspecifiedRequest));
+    }
+
+    #[test]
+    fn transient_classification() {
+        // deadline timeouts are always retryable
+        assert!(is_transient(&FdbError::Timeout {
+            class: "data-read",
+            micros: 500,
+        }));
+        // transient-marked injected faults are retryable...
+        assert!(is_transient(&FdbError::Backend {
+            backend: "fault",
+            detail: "injected transient Read error (op 3)".into(),
+        }));
+        // ...unmarked injected faults and organic failures are not
+        assert!(!is_transient(&FdbError::Backend {
+            backend: "fault",
+            detail: "injected Read error (op 3)".into(),
+        }));
+        assert!(!is_transient(&FdbError::Backend {
+            backend: "fault",
+            detail: "instance is fail-stopped".into(),
+        }));
+        assert!(!is_transient(&FdbError::Backend {
+            backend: "posix",
+            detail: "transient-looking but organic".into(),
+        }));
+        // the classification survives replica-wrapper nesting
+        assert!(is_transient(&FdbError::AllReplicasFailed {
+            op: "read",
+            copies: 3,
+            last: Box::new(FdbError::Timeout {
+                class: "data-read",
+                micros: 100,
+            }),
+        }));
+        assert!(!is_transient(&FdbError::UnderspecifiedRequest));
     }
 }

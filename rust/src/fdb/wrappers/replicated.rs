@@ -1,12 +1,20 @@
 //! [`ReplicatedStore`]: fan-out writes to N replica Stores, reads
 //! balanced across healthy replicas by a [`ReadPolicy`].
 
+use std::cell::RefCell;
+use std::future::Future;
+use std::pin::Pin;
+use std::rc::Rc;
+use std::task::{Context, Poll};
+
 use crate::fdb::backend::{LocalBoxFuture, Store, StoreSession};
+use crate::fdb::builder::ResilienceProfile;
 use crate::fdb::datahandle::DataHandle;
 use crate::fdb::key::Key;
 use crate::fdb::location::FieldLocation;
+use crate::fdb::telemetry::{Counter, MetricsRegistry};
 use crate::fdb::FdbError;
-use crate::sim::exec::Sim;
+use crate::sim::exec::{Sim, Sleep};
 use crate::sim::time::SimTime;
 use crate::util::content::Bytes;
 
@@ -51,6 +59,272 @@ const EWMA_ALPHA: f64 = 0.25;
 /// probes reach it again.
 const FAILURE_PENALTY: f64 = 0.01;
 
+/// Pre-bound hedge telemetry, cloned into every session so all lanes
+/// record into the same counters.
+#[derive(Clone)]
+struct HedgeStats {
+    launched: Counter,
+    won: Counter,
+    wasted_bytes: Counter,
+}
+
+/// One replica's health record in the quarantine ledger.
+#[derive(Clone, Copy)]
+struct ReplicaHealth {
+    /// consecutive read failures since the last success
+    consecutive: u32,
+    /// `Some(t)` = ejected from the read rotation until `t`; once `t`
+    /// passes, the next read through this replica is a reinstatement
+    /// probe
+    quarantined_until: Option<SimTime>,
+    /// current quarantine backoff (µs) — doubles on every failed probe
+    backoff_us: u64,
+}
+
+/// Replica quarantine: consecutive-failure ejection from the read
+/// rotation with probe-on-backoff reinstatement. Shared through an
+/// `Rc<RefCell<…>>` across the parent store and every minted session
+/// (replica vectors are index-aligned), so one lane discovering a dead
+/// replica stops *all* lanes from routing reads to it.
+struct QuarantineState {
+    /// consecutive failures that trigger ejection
+    after: u32,
+    /// initial backoff before a reinstatement probe (µs)
+    base_us: u64,
+    health: Vec<ReplicaHealth>,
+    ejected: Option<Counter>,
+    probes: Option<Counter>,
+    reinstated: Option<Counter>,
+}
+
+impl QuarantineState {
+    /// Whether the read rotation should route around this replica.
+    fn skip(&self, idx: usize, now: SimTime) -> bool {
+        matches!(self.health[idx].quarantined_until, Some(t) if now < t)
+    }
+
+    /// Count a read issued to a quarantined replica (a reinstatement
+    /// probe — either its backoff expired, or every replica is
+    /// quarantined and the rotation probes them all as a last resort).
+    fn mark_probe(&mut self, idx: usize) {
+        if self.health[idx].quarantined_until.is_some() {
+            if let Some(c) = &self.probes {
+                c.inc();
+            }
+        }
+    }
+
+    fn note_success(&mut self, idx: usize) {
+        let h = &mut self.health[idx];
+        if h.quarantined_until.is_some() {
+            if let Some(c) = &self.reinstated {
+                c.inc();
+            }
+        }
+        h.consecutive = 0;
+        h.quarantined_until = None;
+        h.backoff_us = self.base_us;
+    }
+
+    fn note_failure(&mut self, idx: usize, now: SimTime) {
+        let h = &mut self.health[idx];
+        if h.quarantined_until.is_some() {
+            // failed reinstatement probe: relapse with doubled backoff,
+            // capped so a recovered replica is never weeks away
+            h.backoff_us = (h.backoff_us * 2).min(self.base_us * 10);
+            h.quarantined_until = Some(now + SimTime::micros(h.backoff_us));
+        } else {
+            h.consecutive += 1;
+            if h.consecutive >= self.after {
+                h.quarantined_until = Some(now + SimTime::micros(h.backoff_us));
+                if let Some(c) = &self.ejected {
+                    c.inc();
+                }
+            }
+        }
+    }
+}
+
+/// One replica read as a boxed future — `read` or single-range
+/// `read_ranges` (strict vectored semantics preserved).
+fn read_fut<'a>(
+    store: &'a mut Box<dyn Store>,
+    handle: &'a DataHandle,
+    vectored: bool,
+) -> LocalBoxFuture<'a, Result<Bytes, FdbError>> {
+    if vectored {
+        Box::pin(async move {
+            store
+                .read_ranges(std::slice::from_ref(handle))
+                .await
+                .map(|mut bufs| bufs.pop().expect("one buffer per handle"))
+        })
+    } else {
+        store.read(handle)
+    }
+}
+
+/// Simultaneous `&mut` access to two distinct replicas (the hedge race
+/// drives both reads at once).
+fn two_mut(
+    v: &mut [Box<dyn Store>],
+    a: usize,
+    b: usize,
+) -> (&mut Box<dyn Store>, &mut Box<dyn Store>) {
+    assert_ne!(a, b, "hedge needs two distinct replicas");
+    if a < b {
+        let (lo, hi) = v.split_at_mut(b);
+        (&mut lo[a], &mut hi[0])
+    } else {
+        let (lo, hi) = v.split_at_mut(a);
+        (&mut hi[0], &mut lo[b])
+    }
+}
+
+/// What a hedge race resolved to. Errors are carried out (not just the
+/// winner) so the caller can feed every observed failure into the
+/// quarantine ledger and EWMA penalties.
+struct RaceResult {
+    /// `(bytes, hedge_won)`; `None` = both attempts failed
+    winner: Option<(Bytes, bool)>,
+    hedge_launched: bool,
+    primary_err: Option<FdbError>,
+    hedge_err: Option<FdbError>,
+}
+
+/// The hedged-read race: drive the primary replica's read; if it is
+/// still pending when the hedge timer fires — or fails outright — launch
+/// the hedge attempt on the second replica and race both. First `Ok`
+/// wins; the loser future is dropped (cancelled mid-flight, its backend
+/// timers fire harmlessly into the sim). A loser that managed to
+/// *complete* before the winner returned has fetched bytes nobody will
+/// read — counted as `engine.hedge.wasted_bytes`.
+struct HedgeRace<'a, F>
+where
+    F: FnOnce() -> LocalBoxFuture<'a, Result<Bytes, FdbError>>,
+{
+    primary: Option<LocalBoxFuture<'a, Result<Bytes, FdbError>>>,
+    timer: Option<Sleep>,
+    launch: Option<F>,
+    hedge: Option<LocalBoxFuture<'a, Result<Bytes, FdbError>>>,
+    primary_err: Option<FdbError>,
+    hedge_err: Option<FdbError>,
+    hedge_launched: bool,
+    stats: Option<HedgeStats>,
+}
+
+impl<'a, F> Future for HedgeRace<'a, F>
+where
+    F: FnOnce() -> LocalBoxFuture<'a, Result<Bytes, FdbError>>,
+{
+    type Output = RaceResult;
+
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<RaceResult> {
+        // Unpin: both attempts are boxed, the timer is plain state
+        let this = self.get_mut();
+        if let Some(p) = this.primary.as_mut() {
+            match p.as_mut().poll(cx) {
+                Poll::Ready(Ok(bytes)) => {
+                    // primary wins; a hedge that also completed fetched
+                    // bytes nobody will read
+                    if let Some(h) = this.hedge.as_mut() {
+                        match h.as_mut().poll(cx) {
+                            Poll::Ready(Ok(b)) => {
+                                if let Some(s) = &this.stats {
+                                    s.wasted_bytes.add(b.len());
+                                }
+                            }
+                            Poll::Ready(Err(e)) => this.hedge_err = Some(e),
+                            Poll::Pending => {}
+                        }
+                    }
+                    return Poll::Ready(RaceResult {
+                        winner: Some((bytes, false)),
+                        hedge_launched: this.hedge_launched,
+                        primary_err: this.primary_err.take(),
+                        hedge_err: this.hedge_err.take(),
+                    });
+                }
+                Poll::Ready(Err(e)) => {
+                    this.primary = None;
+                    this.primary_err = Some(e);
+                }
+                Poll::Pending => {}
+            }
+        }
+        // launch the hedge when the timer fires — or immediately, if the
+        // primary already failed
+        if this.hedge.is_none() && this.hedge_err.is_none() && this.launch.is_some() {
+            let fire = if this.primary.is_none() {
+                this.timer = None;
+                true
+            } else if let Some(t) = this.timer.as_mut() {
+                match Pin::new(t).poll(cx) {
+                    Poll::Ready(()) => {
+                        this.timer = None;
+                        true
+                    }
+                    Poll::Pending => false,
+                }
+            } else {
+                false
+            };
+            if fire {
+                if let Some(launch) = this.launch.take() {
+                    if let Some(s) = &this.stats {
+                        s.launched.inc();
+                    }
+                    this.hedge_launched = true;
+                    this.hedge = Some(launch());
+                }
+            }
+        }
+        if let Some(h) = this.hedge.as_mut() {
+            match h.as_mut().poll(cx) {
+                Poll::Ready(Ok(bytes)) => {
+                    if let Some(s) = &this.stats {
+                        s.won.inc();
+                    }
+                    // symmetric wasted-work check on the primary
+                    if let Some(p) = this.primary.as_mut() {
+                        match p.as_mut().poll(cx) {
+                            Poll::Ready(Ok(b)) => {
+                                if let Some(s) = &this.stats {
+                                    s.wasted_bytes.add(b.len());
+                                }
+                            }
+                            Poll::Ready(Err(e)) => this.primary_err = Some(e),
+                            Poll::Pending => {}
+                        }
+                    }
+                    return Poll::Ready(RaceResult {
+                        winner: Some((bytes, true)),
+                        hedge_launched: this.hedge_launched,
+                        primary_err: this.primary_err.take(),
+                        hedge_err: this.hedge_err.take(),
+                    });
+                }
+                Poll::Ready(Err(e)) => {
+                    this.hedge = None;
+                    this.hedge_err = Some(e);
+                }
+                Poll::Pending => {}
+            }
+        }
+        if this.primary_err.is_some() && (this.hedge_err.is_some() || this.launch.is_none()) {
+            if this.hedge.is_none() {
+                return Poll::Ready(RaceResult {
+                    winner: None,
+                    hedge_launched: this.hedge_launched,
+                    primary_err: this.primary_err.take(),
+                    hedge_err: this.hedge_err.take(),
+                });
+            }
+        }
+        Poll::Pending
+    }
+}
+
 /// A replicating Store. `archive()` writes the field to every replica
 /// and returns the primary's (replica 0's) location — that is what the
 /// Catalogue indexes. `read()` probes replicas starting at the
@@ -59,6 +333,18 @@ const FAILURE_PENALTY: f64 = 0.01;
 /// [`FdbError::BackendMismatch`] and are skipped. If every replica
 /// fails, the typed [`FdbError::AllReplicasFailed`] carries the replica
 /// count and the last underlying error.
+///
+/// Two resilience mechanisms layer on top
+/// ([`ReplicatedStore::with_resilience`]):
+///
+/// * **Hedged reads** — after `hedge_us` with no answer from the first
+///   replica, a second attempt launches on the next replica in the
+///   rotation; first completion wins, the loser is cancelled.
+/// * **Quarantine** — replicas failing `quarantine_after` consecutive
+///   reads are ejected from the rotation until a backoff expires and a
+///   probe read reinstates them, so [`ReadPolicy`] variants stop
+///   routing to dead replicas (the serial fall-through still works, it
+///   just stops being the common path).
 pub struct ReplicatedStore {
     replicas: Vec<Box<dyn Store>>,
     policy: ReadPolicy,
@@ -73,6 +359,12 @@ pub struct ReplicatedStore {
     /// the failure penalty, kept separate from `ewma` so penalized
     /// estimates never feed back into the penalty
     slowest_healthy: f64,
+    /// hedged-read delay; ZERO = hedging off
+    hedge: SimTime,
+    /// pre-bound hedge counters (`None` = metrics off)
+    hedge_stats: Option<HedgeStats>,
+    /// shared replica-health ledger (`None` = quarantine off)
+    quarantine: Option<Rc<RefCell<QuarantineState>>>,
 }
 
 impl ReplicatedStore {
@@ -88,12 +380,67 @@ impl ReplicatedStore {
             clock: None,
             ewma,
             slowest_healthy: 0.0,
+            hedge: SimTime::ZERO,
+            hedge_stats: None,
+            quarantine: None,
         }
     }
 
     pub fn with_read_policy(mut self, policy: ReadPolicy) -> ReplicatedStore {
         self.policy = policy;
         self
+    }
+
+    /// Wire hedged reads and replica quarantine from a resilience
+    /// profile; `reg` binds the `engine.hedge.*` /
+    /// `replica.quarantine.*` counters (the builder passes its
+    /// registry). Quarantine and hedging both need the virtual clock
+    /// ([`ReplicatedStore::with_clock`], call it first); without one
+    /// they stay off.
+    pub fn with_resilience(
+        mut self,
+        res: &ResilienceProfile,
+        reg: Option<&MetricsRegistry>,
+    ) -> ReplicatedStore {
+        if res.hedge_us > 0 {
+            self.hedge = SimTime::micros(res.hedge_us);
+            self.hedge_stats = reg.map(|reg| HedgeStats {
+                launched: reg.counter("engine.hedge.launched"),
+                won: reg.counter("engine.hedge.won"),
+                wasted_bytes: reg.counter("engine.hedge.wasted_bytes"),
+            });
+        }
+        if res.quarantine_after > 0 && self.clock.is_some() {
+            self.quarantine = Some(Rc::new(RefCell::new(QuarantineState {
+                after: res.quarantine_after,
+                base_us: res.quarantine_backoff_us,
+                health: vec![
+                    ReplicaHealth {
+                        consecutive: 0,
+                        quarantined_until: None,
+                        backoff_us: res.quarantine_backoff_us,
+                    };
+                    self.replicas.len()
+                ],
+                ejected: reg.map(|r| r.counter("replica.quarantine.ejected")),
+                probes: reg.map(|r| r.counter("replica.quarantine.probes")),
+                reinstated: reg.map(|r| r.counter("replica.quarantine.reinstated")),
+            })));
+        }
+        self
+    }
+
+    /// Which replicas are currently ejected from the read rotation
+    /// (diagnostics and tests). All `false` when quarantine is off.
+    pub fn quarantined_now(&self) -> Vec<bool> {
+        match (&self.quarantine, &self.clock) {
+            (Some(q), Some(clock)) => {
+                let now = clock.now();
+                let q = q.borrow();
+                (0..self.replicas.len()).map(|i| q.skip(i, now)).collect()
+            }
+            _ => vec![false; self.replicas.len()],
+        }
     }
 
     /// Attach the virtual clock [`ReadPolicy::Fastest`] observes read
@@ -155,6 +502,75 @@ impl ReplicatedStore {
         });
     }
 
+    /// The full probe order for one read: the policy's rotation, with
+    /// quarantined replicas routed around. If EVERY replica is
+    /// quarantined the unfiltered rotation is used — availability
+    /// degrades to the plain fall-through, never below it.
+    fn probe_order(&mut self, now: Option<SimTime>) -> Vec<usize> {
+        let copies = self.replicas.len();
+        let start = self.read_start();
+        let order: Vec<usize> = (0..copies).map(|k| (start + k) % copies).collect();
+        let (Some(q), Some(now)) = (&self.quarantine, now) else {
+            return order;
+        };
+        let q = q.borrow();
+        let avail: Vec<usize> = order.iter().copied().filter(|&i| !q.skip(i, now)).collect();
+        if avail.is_empty() {
+            order
+        } else {
+            avail
+        }
+    }
+
+    /// Count a read issued to a quarantined replica as a reinstatement
+    /// probe.
+    fn mark_probe(&self, idx: usize) {
+        if let Some(q) = &self.quarantine {
+            q.borrow_mut().mark_probe(idx);
+        }
+    }
+
+    fn note_quarantine_success(&self, idx: usize) {
+        if let Some(q) = &self.quarantine {
+            q.borrow_mut().note_success(idx);
+        }
+    }
+
+    /// Feed one read failure into the `Fastest` penalty and the
+    /// quarantine ledger.
+    fn note_read_failure(&mut self, idx: usize, observing: bool) {
+        // charge the failure so `Fastest` stops probing a dead replica
+        // first on every read (an instant error must not read as
+        // "lowest latency"); based on the slowest SUCCESSFUL sample so
+        // it tops healthy reads of any size without compounding
+        if observing {
+            self.observe(idx, FAILURE_PENALTY.max(4.0 * self.slowest_healthy));
+        }
+        if let (Some(q), Some(clock)) = (&self.quarantine, &self.clock) {
+            q.borrow_mut().note_failure(idx, clock.now());
+        }
+    }
+
+    /// Feed one successful read into the `Fastest` EWMA (per-byte
+    /// normalized) and the quarantine ledger.
+    fn note_read_success(
+        &mut self,
+        idx: usize,
+        t0: Option<SimTime>,
+        handle: &DataHandle,
+    ) {
+        if let Some(t0) = t0 {
+            let now = self.clock.as_ref().expect("observing implies clock").now();
+            // per-byte normalization: a replica that served a large
+            // coalesced range must not look slow next to one that
+            // served a single small field
+            let sample = (now - t0).as_secs_f64() / handle.total_len().max(1) as f64;
+            self.slowest_healthy = self.slowest_healthy.max(sample);
+            self.observe(idx, sample);
+        }
+        self.note_quarantine_success(idx);
+    }
+
     /// One policy-routed read: probe replicas starting at the policy's
     /// pick, first healthy answer wins; latency is observed for
     /// [`ReadPolicy::Fastest`]. Shared by `read` (one raw handle, probed
@@ -164,15 +580,88 @@ impl ReplicatedStore {
     /// over to the next replica instead of passing corrupt bytes up).
     /// The policy applies **per merged range**, so one plan's ranges
     /// spread over replicas like individual reads would.
+    /// Fold one replica failure into the error that
+    /// [`FdbError::AllReplicasFailed`] will surface as `last`. A
+    /// transient error is never displaced by a permanent one: the
+    /// engine's retry policy classifies the whole failure by `last`
+    /// (via [`crate::fdb::telemetry::is_transient`]), and a read where
+    /// *any* replica failed transiently is worth retrying even when the
+    /// final replica probed happened to be fail-stopped.
+    fn keep_retryable(last: &mut Option<FdbError>, e: FdbError) {
+        let prev_transient = last
+            .as_ref()
+            .is_some_and(crate::fdb::telemetry::is_transient);
+        if !prev_transient || crate::fdb::telemetry::is_transient(&e) {
+            *last = Some(e);
+        }
+    }
+
     async fn read_one(&mut self, handle: &DataHandle, vectored: bool) -> Result<Bytes, FdbError> {
         let copies = self.replicas.len();
-        let start = self.read_start();
         // the estimates only steer `Fastest` — skip the bookkeeping
         // (two clock samples + EWMA fold per read) for other policies
         let observing = self.policy == ReadPolicy::Fastest && self.clock.is_some();
+        let now = self.clock.as_ref().map(|s| s.now());
+        let order = self.probe_order(now);
         let mut last = None;
-        for k in 0..copies {
-            let idx = (start + k) % copies;
+        let mut rest = &order[..];
+
+        // hedged fast path: race the first two candidates
+        if self.hedge > SimTime::ZERO && order.len() >= 2 {
+            if let Some(clock) = self.clock.clone() {
+                let (pi, hi) = (order[0], order[1]);
+                self.mark_probe(pi);
+                let t0 = clock.now();
+                let rr = {
+                    let timer = clock.sleep(self.hedge);
+                    let (pstore, hstore) = two_mut(&mut self.replicas, pi, hi);
+                    HedgeRace {
+                        primary: Some(read_fut(pstore, handle, vectored)),
+                        timer: Some(timer),
+                        launch: Some(move || read_fut(hstore, handle, vectored)),
+                        hedge: None,
+                        primary_err: None,
+                        hedge_err: None,
+                        hedge_launched: false,
+                        stats: self.hedge_stats.clone(),
+                    }
+                    .await
+                };
+                if rr.hedge_launched {
+                    self.mark_probe(hi);
+                }
+                if rr.primary_err.is_some() {
+                    self.note_read_failure(pi, observing);
+                }
+                if rr.hedge_err.is_some() {
+                    self.note_read_failure(hi, observing);
+                }
+                match rr.winner {
+                    Some((bytes, hedge_won)) => {
+                        let widx = if hedge_won { hi } else { pi };
+                        // the sample spans the whole race window — a
+                        // conservative overestimate for a hedge winner
+                        // (includes the hedge delay), but failures and
+                        // penalties stay exact
+                        self.note_read_success(
+                            widx,
+                            if observing { Some(t0) } else { None },
+                            handle,
+                        );
+                        return Ok(bytes);
+                    }
+                    None => {
+                        for e in [rr.primary_err, rr.hedge_err].into_iter().flatten() {
+                            Self::keep_retryable(&mut last, e);
+                        }
+                        rest = &order[2..];
+                    }
+                }
+            }
+        }
+
+        for &idx in rest {
+            self.mark_probe(idx);
             let t0 = if observing {
                 self.clock.as_ref().map(|s| s.now())
             } else {
@@ -188,28 +677,12 @@ impl ReplicatedStore {
             };
             match r {
                 Ok(bytes) => {
-                    if let Some(t0) = t0 {
-                        let now = self.clock.as_ref().expect("observing implies clock").now();
-                        // per-byte normalization: a replica that served a
-                        // large coalesced range must not look slow next
-                        // to one that served a single small field
-                        let sample =
-                            (now - t0).as_secs_f64() / handle.total_len().max(1) as f64;
-                        self.slowest_healthy = self.slowest_healthy.max(sample);
-                        self.observe(idx, sample);
-                    }
+                    self.note_read_success(idx, t0, handle);
                     return Ok(bytes);
                 }
                 Err(e) => {
-                    // charge the failure so `Fastest` stops probing a
-                    // dead replica first on every read (an instant error
-                    // must not read as "lowest latency"); based on the
-                    // slowest SUCCESSFUL sample so it tops healthy reads
-                    // of any size without compounding on itself
-                    if observing {
-                        self.observe(idx, FAILURE_PENALTY.max(4.0 * self.slowest_healthy));
-                    }
-                    last = Some(e);
+                    self.note_read_failure(idx, observing);
+                    Self::keep_retryable(&mut last, e);
                 }
             }
         }
@@ -325,7 +798,10 @@ impl Store for ReplicatedStore {
     fn session(&mut self) -> Option<Box<dyn StoreSession>> {
         // fan a session out of every replica: the session's writes still
         // hit all N copies, and its reads rotate (or race by latency)
-        // independently — each session gathers its own EWMA estimates
+        // independently — each session gathers its own EWMA estimates.
+        // Hedge settings are copied; the quarantine ledger is SHARED
+        // (replica vectors are index-aligned), so one lane discovering a
+        // dead replica routes every lane around it.
         let mut replicas = Vec::with_capacity(self.replicas.len());
         for replica in &mut self.replicas {
             replicas.push(replica.session()?.into_store());
@@ -334,6 +810,9 @@ impl Store for ReplicatedStore {
         if let Some(sim) = &self.clock {
             session = session.with_clock(sim);
         }
+        session.hedge = self.hedge;
+        session.hedge_stats = self.hedge_stats.clone();
+        session.quarantine = self.quarantine.clone();
         Some(Box::new(session))
     }
 }
@@ -344,6 +823,37 @@ mod tests {
     use crate::fdb::backend::{block_on_ready as block_on, NullStore};
     use std::cell::Cell;
     use std::rc::Rc;
+
+    #[test]
+    fn all_replicas_failed_keeps_a_retryable_last() {
+        // mixed failure: one replica died transiently, another is
+        // fail-stopped — the surfaced `last` must stay transient no
+        // matter the probe order, or the retry layer gives up on a
+        // read that a retry would have recovered
+        let transient = || FdbError::Backend {
+            backend: "fault",
+            detail: "injected transient Read error (op 3)".into(),
+        };
+        let permanent = || FdbError::Backend {
+            backend: "fault",
+            detail: "fail-stop after 4 Read ops".into(),
+        };
+        let mut last = None;
+        ReplicatedStore::keep_retryable(&mut last, transient());
+        ReplicatedStore::keep_retryable(&mut last, permanent());
+        assert!(crate::fdb::telemetry::is_transient(last.as_ref().unwrap()));
+
+        let mut last = None;
+        ReplicatedStore::keep_retryable(&mut last, permanent());
+        ReplicatedStore::keep_retryable(&mut last, transient());
+        assert!(crate::fdb::telemetry::is_transient(last.as_ref().unwrap()));
+
+        // all-permanent: the newest permanent error wins (no masking)
+        let mut last = None;
+        ReplicatedStore::keep_retryable(&mut last, permanent());
+        ReplicatedStore::keep_retryable(&mut last, permanent());
+        assert!(!crate::fdb::telemetry::is_transient(last.as_ref().unwrap()));
+    }
 
     /// A Null-semantics store that counts the reads it serves — lets the
     /// rotation tests observe which replica a read landed on.
@@ -645,6 +1155,277 @@ mod tests {
         }
         assert_eq!((c0.get(), c1.get()), (4, 0));
         assert!(rep.latency_estimates().iter().all(|e| e.is_none()));
+    }
+
+    /// A store whose reads fail while `fail` is set — flips healthy for
+    /// the quarantine reinstatement tests.
+    struct FlakyStore {
+        fail: Rc<Cell<bool>>,
+        reads: Rc<Cell<usize>>,
+    }
+
+    impl Store for FlakyStore {
+        fn name(&self) -> &'static str {
+            "null"
+        }
+
+        fn archive<'a>(
+            &'a mut self,
+            _ds: &'a Key,
+            _colloc: &'a Key,
+            _id: &'a Key,
+            data: Bytes,
+        ) -> LocalBoxFuture<'a, Result<FieldLocation, FdbError>> {
+            crate::fdb::backend::ready(Ok(FieldLocation::Null { length: data.len() }))
+        }
+
+        fn read<'a>(
+            &'a mut self,
+            handle: &'a DataHandle,
+        ) -> LocalBoxFuture<'a, Result<Bytes, FdbError>> {
+            self.reads.set(self.reads.get() + 1);
+            crate::fdb::backend::ready(if self.fail.get() {
+                Err(FdbError::Backend {
+                    backend: "null",
+                    detail: "replica down".to_string(),
+                })
+            } else {
+                match handle {
+                    DataHandle::Null { length } => Ok(Bytes::virt(*length, 0)),
+                    other => Err(FdbError::BackendMismatch {
+                        store: "null",
+                        handle: other.backend_name(),
+                    }),
+                }
+            })
+        }
+
+        fn session(&mut self) -> Option<Box<dyn StoreSession>> {
+            // sessions share the fault switch and the probe counter
+            Some(Box::new(FlakyStore {
+                fail: self.fail.clone(),
+                reads: self.reads.clone(),
+            }))
+        }
+    }
+
+    #[test]
+    fn hedged_read_wins_when_primary_is_slow() {
+        use crate::fdb::telemetry::MetricsRegistry;
+        let sim = Sim::new();
+        let (rep, (_, slow_reads), (_, fast_reads)) = delayed_pair(
+            &sim,
+            SimTime::micros(1000), // replica 0: slow primary
+            SimTime::micros(50),   // replica 1: fast hedge target
+        );
+        let reg = MetricsRegistry::new();
+        let res = crate::fdb::ResilienceProfile::default().with_hedge_us(100);
+        let mut rep = rep
+            .with_read_policy(ReadPolicy::FirstHealthy)
+            .with_resilience(&res, Some(&reg));
+        sim.spawn(async move {
+            let h = DataHandle::Null { length: 8 };
+            assert_eq!(rep.read(&h).await.unwrap().len(), 8);
+        });
+        let end = sim.run();
+        // hedge launches at 100µs, completes at 150µs — the caller never
+        // waits out the primary's 1000µs
+        assert_eq!(end, SimTime::micros(150));
+        assert_eq!(slow_reads.get(), 0, "primary was cancelled mid-flight");
+        assert_eq!(fast_reads.get(), 1);
+        assert_eq!(reg.counter_value("engine.hedge.launched"), 1);
+        assert_eq!(reg.counter_value("engine.hedge.won"), 1);
+        assert_eq!(reg.counter_value("engine.hedge.wasted_bytes"), 0);
+    }
+
+    #[test]
+    fn fast_primary_never_launches_a_hedge() {
+        use crate::fdb::telemetry::MetricsRegistry;
+        let sim = Sim::new();
+        let (rep, (_, r0), (_, r1)) =
+            delayed_pair(&sim, SimTime::micros(50), SimTime::micros(50));
+        let reg = MetricsRegistry::new();
+        let res = crate::fdb::ResilienceProfile::default().with_hedge_us(200);
+        let mut rep = rep
+            .with_read_policy(ReadPolicy::FirstHealthy)
+            .with_resilience(&res, Some(&reg));
+        sim.spawn(async move {
+            let h = DataHandle::Null { length: 8 };
+            for _ in 0..3 {
+                rep.read(&h).await.unwrap();
+            }
+        });
+        let end = sim.run();
+        assert_eq!(end, SimTime::micros(150), "three serial 50µs reads");
+        assert_eq!((r0.get(), r1.get()), (3, 0));
+        assert_eq!(reg.counter_value("engine.hedge.launched"), 0);
+    }
+
+    #[test]
+    fn failed_primary_launches_hedge_immediately() {
+        use crate::fdb::telemetry::MetricsRegistry;
+        let sim = Sim::new();
+        let probes = Rc::new(Cell::new(0));
+        let fast_reads = Rc::new(Cell::new(0));
+        let dead = FailStore {
+            probes: probes.clone(),
+        };
+        let healthy = DelayStore {
+            sim: sim.clone(),
+            delay: Rc::new(Cell::new(SimTime::micros(50))),
+            reads: fast_reads.clone(),
+        };
+        let reg = MetricsRegistry::new();
+        let res = crate::fdb::ResilienceProfile::default().with_hedge_us(500);
+        let mut rep = ReplicatedStore::new(vec![Box::new(dead), Box::new(healthy)])
+            .with_read_policy(ReadPolicy::FirstHealthy)
+            .with_clock(&sim)
+            .with_resilience(&res, Some(&reg));
+        sim.spawn(async move {
+            let h = DataHandle::Null { length: 8 };
+            assert_eq!(rep.read(&h).await.unwrap().len(), 8);
+        });
+        let end = sim.run();
+        // the primary fails instantly; the hedge fires without waiting
+        // out the 500µs hedge delay
+        assert_eq!(end, SimTime::micros(50));
+        assert_eq!(probes.get(), 1);
+        assert_eq!(fast_reads.get(), 1);
+        assert_eq!(reg.counter_value("engine.hedge.launched"), 1);
+        assert_eq!(reg.counter_value("engine.hedge.won"), 1);
+    }
+
+    #[test]
+    fn hedge_loser_that_completes_counts_wasted_bytes() {
+        use crate::fdb::telemetry::MetricsRegistry;
+        let sim = Sim::new();
+        // primary: 100µs; hedge launches at 50µs and also takes 50µs, so
+        // both complete at the same virtual instant — the primary wins
+        // the race and the hedge's fetched bytes are wasted work
+        let (rep, (_, r0), (_, r1)) =
+            delayed_pair(&sim, SimTime::micros(100), SimTime::micros(50));
+        let reg = MetricsRegistry::new();
+        let res = crate::fdb::ResilienceProfile::default().with_hedge_us(50);
+        let mut rep = rep
+            .with_read_policy(ReadPolicy::FirstHealthy)
+            .with_resilience(&res, Some(&reg));
+        sim.spawn(async move {
+            let h = DataHandle::Null { length: 32 };
+            assert_eq!(rep.read(&h).await.unwrap().len(), 32);
+        });
+        let end = sim.run();
+        assert_eq!(end, SimTime::micros(100));
+        assert_eq!((r0.get(), r1.get()), (1, 1), "both replicas served");
+        assert_eq!(reg.counter_value("engine.hedge.launched"), 1);
+        assert_eq!(reg.counter_value("engine.hedge.won"), 0, "primary won");
+        assert_eq!(reg.counter_value("engine.hedge.wasted_bytes"), 32);
+    }
+
+    #[test]
+    fn quarantine_ejects_dead_replica_and_reinstates_after_probe() {
+        use crate::fdb::telemetry::MetricsRegistry;
+        let sim = Sim::new();
+        let fail = Rc::new(Cell::new(true));
+        let flaky_reads = Rc::new(Cell::new(0));
+        let healthy_reads = Rc::new(Cell::new(0));
+        let reg = MetricsRegistry::new();
+        let res = crate::fdb::ResilienceProfile::default().with_quarantine(2, 1_000);
+        let mut rep = ReplicatedStore::new(vec![
+            Box::new(FlakyStore {
+                fail: fail.clone(),
+                reads: flaky_reads.clone(),
+            }),
+            Box::new(CountingStore {
+                reads: healthy_reads.clone(),
+            }),
+        ])
+        .with_read_policy(ReadPolicy::FirstHealthy)
+        .with_clock(&sim)
+        .with_resilience(&res, Some(&reg));
+        let sim2 = sim.clone();
+        let flaky = flaky_reads.clone();
+        sim.spawn(async move {
+            let h = DataHandle::Null { length: 8 };
+            // two consecutive failures trip the threshold; both reads
+            // fall through to the healthy replica
+            rep.read(&h).await.unwrap();
+            rep.read(&h).await.unwrap();
+            assert_eq!(rep.quarantined_now(), vec![true, false]);
+            assert_eq!(flaky.get(), 2);
+            // while quarantined, reads route straight to the healthy one
+            rep.read(&h).await.unwrap();
+            assert_eq!(flaky.get(), 2, "no traffic to a quarantined replica");
+            // the replica recovers; once the backoff expires, one probe
+            // read reinstates it
+            fail.set(false);
+            sim2.sleep(SimTime::micros(1_500)).await;
+            rep.read(&h).await.unwrap();
+            assert_eq!(flaky.get(), 3, "reinstatement probe");
+            assert_eq!(rep.quarantined_now(), vec![false, false]);
+        });
+        sim.run();
+        assert_eq!(healthy_reads.get(), 3);
+        assert_eq!(reg.counter_value("replica.quarantine.ejected"), 1);
+        assert_eq!(reg.counter_value("replica.quarantine.probes"), 1);
+        assert_eq!(reg.counter_value("replica.quarantine.reinstated"), 1);
+    }
+
+    #[test]
+    fn all_replicas_quarantined_still_probes_as_last_resort() {
+        let sim = Sim::new();
+        let fail = Rc::new(Cell::new(true));
+        let reads = Rc::new(Cell::new(0));
+        let res = crate::fdb::ResilienceProfile::default().with_quarantine(1, 10_000);
+        let mut rep = ReplicatedStore::new(vec![Box::new(FlakyStore {
+            fail: fail.clone(),
+            reads: reads.clone(),
+        })])
+        .with_clock(&sim)
+        .with_resilience(&res, None);
+        sim.spawn(async move {
+            let h = DataHandle::Null { length: 8 };
+            // one failure quarantines the only replica
+            assert!(rep.read(&h).await.is_err());
+            assert_eq!(rep.quarantined_now(), vec![true]);
+            // with everyone quarantined the rotation probes anyway —
+            // availability never drops below the plain fall-through
+            fail.set(false);
+            assert_eq!(rep.read(&h).await.unwrap().len(), 8);
+            assert_eq!(rep.quarantined_now(), vec![false]);
+        });
+        sim.run();
+        assert_eq!(reads.get(), 2);
+    }
+
+    #[test]
+    fn sessions_share_one_quarantine_ledger() {
+        let sim = Sim::new();
+        let fail = Rc::new(Cell::new(true));
+        let reads = Rc::new(Cell::new(0));
+        let res = crate::fdb::ResilienceProfile::default().with_quarantine(1, 10_000);
+        let mut rep = ReplicatedStore::new(vec![
+            Box::new(FlakyStore {
+                fail: fail.clone(),
+                reads: reads.clone(),
+            }),
+            Box::new(NullStore),
+        ])
+        .with_read_policy(ReadPolicy::FirstHealthy)
+        .with_clock(&sim)
+        .with_resilience(&res, None);
+        let mut lane = rep.session().expect("replicated session").into_store();
+        sim.spawn(async move {
+            let h = DataHandle::Null { length: 8 };
+            // the parent discovers the dead replica...
+            rep.read(&h).await.unwrap();
+            assert_eq!(rep.quarantined_now(), vec![true, false]);
+            // ...and the session lane routes around it without ever
+            // probing (the ledger is shared, not per-lane)
+            let before = reads.get();
+            lane.read(&h).await.unwrap();
+            assert_eq!(reads.get(), before);
+        });
+        sim.run();
     }
 
     #[test]

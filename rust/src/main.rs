@@ -18,6 +18,7 @@ fn main() {
         "trace" => coordinator::cmd_trace(&args),
         "metrics" => coordinator::cmd_metrics(&args),
         "crash" => coordinator::cmd_crash(&args),
+        "degrade" => coordinator::cmd_degrade(&args),
         "ior" => coordinator::cmd_ior(&args),
         "fieldio" => coordinator::cmd_fieldio(&args),
         "opsrun" => coordinator::cmd_opsrun(&args),

@@ -1,0 +1,186 @@
+//! Resilience-layer property tests: under a seeded transient read-error
+//! storm the engine's retry budget bounds the total ops issued, a
+//! recovered retrieve is byte-identical to the no-fault baseline, and
+//! the admission semaphore still caps in-flight ops while hedged reads
+//! race below it.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use fdbr::bench::hammer::{field_id as hammer_id, field_seed};
+use fdbr::bench::scenario::{deploy, RedundancyOpt, SystemKind, WrapperOpt};
+use fdbr::fdb::{FaultPlan, FdbError, IoProfile, Key, MetricsRegistry, ResilienceProfile};
+use fdbr::hw::profiles::Testbed;
+use fdbr::util::content::Bytes;
+
+const FIELD: u64 = 4096;
+
+fn field(i: usize) -> Key {
+    hammer_id(0, 1 + (i / 16) as u32, (i % 16) as u32, 0)
+}
+
+/// Archive `nfields` on a replicated Lustre deployment, publish, then
+/// retrieve the whole set from a second node under `fault` (a spec for
+/// the per-replica fault wrapper) and `res`. Returns the retrieve
+/// outcome; `reg` collects the run's telemetry.
+fn run_storm(
+    copies: usize,
+    fault: Option<&str>,
+    res: Option<ResilienceProfile>,
+    depth: usize,
+    nfields: usize,
+    reg: &MetricsRegistry,
+) -> Result<Vec<(Key, Bytes)>, FdbError> {
+    let mut dep = deploy(Testbed::Gcp, SystemKind::Lustre, 2, 2, RedundancyOpt::None)
+        .with_wrapper(WrapperOpt::Replicated(copies))
+        .with_io(IoProfile::depth(depth).with_preload_indexes(true))
+        .with_metrics(reg);
+    if let Some(spec) = fault {
+        dep = dep.with_fault(FaultPlan::parse(spec).expect("fault spec"));
+    }
+    if let Some(r) = res {
+        dep = dep.with_resilience(r);
+    }
+    let nodes = dep.client_nodes();
+    let ids: Vec<Key> = (0..nfields).map(field).collect();
+
+    let mut w = dep.fdb(&nodes[0]);
+    let batch: Vec<(Key, Bytes)> = ids
+        .iter()
+        .map(|id| (id.clone(), Bytes::virt(FIELD, field_seed(id))))
+        .collect();
+    dep.sim.spawn(async move {
+        w.archive_many(batch).await.expect("storm is read-class");
+        w.flush().await.expect("publish");
+        w.close().await.expect("close");
+    });
+    dep.sim.run();
+
+    let mut r = dep.fdb(&nodes[1]);
+    let out = Rc::new(RefCell::new(None));
+    {
+        let out = out.clone();
+        let ids = ids.clone();
+        dep.sim.spawn(async move {
+            *out.borrow_mut() = Some(r.retrieve_many(&ids).await);
+        });
+        dep.sim.run();
+    }
+    let got = out.borrow_mut().take().expect("reader ran");
+    got
+}
+
+#[test]
+fn retry_budget_bounds_total_issued_ops() {
+    // property: with a max-attempts budget of A over F fields, the
+    // engine never issues more than A ops per admitted read — so
+    // first attempts + retries stays within A x ops (and ops <= F:
+    // coalescing can merge reads, never multiply 4 KiB fields)
+    let nfields = 48usize;
+    let res = ResilienceProfile::retries(5).with_backoff_us(100).with_seed(3);
+    let reg = MetricsRegistry::new();
+    let fetched = run_storm(
+        3,
+        Some("seed=9,err:read:p0.5:transient"),
+        Some(res),
+        4,
+        nfields,
+        &reg,
+    )
+    .expect("a 5-attempt budget over 3 replicas absorbs a p0.5 storm");
+    assert_eq!(fetched.len(), nfields, "every published field found");
+
+    let ops = reg
+        .hist("engine.service.data-read")
+        .expect("data reads ran")
+        .count();
+    let retries = reg.counter_value("engine.retry.attempts");
+    assert!(ops >= 1);
+    assert!(ops <= nfields as u64, "coalescing never multiplies ops");
+    assert!(
+        retries >= 1,
+        "a p0.5 storm over {nfields} fields must trigger at least one retry"
+    );
+    assert!(
+        ops + retries <= 5 * ops,
+        "issued ops ({ops} + {retries} retries) exceed the 5-attempt budget"
+    );
+    assert!(
+        ops + retries <= 5 * nfields as u64,
+        "issued ops exceed attempts-budget x fields"
+    );
+    assert!(
+        reg.counter_value("engine.retry.recovered") >= 1,
+        "recovered retries must be counted"
+    );
+    assert_eq!(
+        reg.counter_value("engine.retry.exhausted"),
+        0,
+        "nothing exhausted the budget in this run"
+    );
+}
+
+#[test]
+fn recovered_reads_are_byte_identical_to_the_no_fault_baseline() {
+    // property: when the retry layer recovers every read, the caller
+    // cannot tell the storm happened — same ids, same bytes, same
+    // order as the identical workload with no fault injected
+    let nfields = 32usize;
+    let res = ResilienceProfile::retries(5).with_backoff_us(100).with_seed(3);
+    let base_reg = MetricsRegistry::new();
+    let baseline = run_storm(3, None, Some(res), 4, nfields, &base_reg).expect("no faults");
+    let storm_reg = MetricsRegistry::new();
+    let stormed = run_storm(
+        3,
+        Some("seed=9,err:read:p0.5:transient"),
+        Some(res),
+        4,
+        nfields,
+        &storm_reg,
+    )
+    .expect("recovered");
+
+    assert_eq!(baseline.len(), nfields);
+    assert_eq!(stormed.len(), baseline.len());
+    for ((bid, bdata), (sid, sdata)) in baseline.iter().zip(stormed.iter()) {
+        assert_eq!(bid, sid, "retrieve order must match the baseline");
+        assert!(sdata.content_eq(bdata), "bytes differ for {sid}");
+        let expect = Bytes::virt(FIELD, field_seed(sid));
+        assert!(sdata.content_eq(&expect), "bytes differ from ground truth");
+    }
+    assert_eq!(base_reg.counter_value("engine.retry.attempts"), 0);
+    assert!(storm_reg.counter_value("engine.retry.attempts") >= 1);
+}
+
+#[test]
+fn inflight_peak_respects_depth_with_hedges_in_flight() {
+    // property: hedged replica reads race INSIDE one admitted engine op,
+    // so the admission semaphore's observed peak stays within the
+    // configured depth even while hedges are launching
+    let depth = 4usize;
+    let res = ResilienceProfile::retries(3)
+        .with_backoff_us(100)
+        .with_seed(3)
+        .with_hedge_us(50);
+    let reg = MetricsRegistry::new();
+    let fetched = run_storm(
+        2,
+        Some("seed=5,err:read:p0.3:transient"),
+        Some(res),
+        depth,
+        48,
+        &reg,
+    )
+    .expect("recovered");
+    assert_eq!(fetched.len(), 48);
+    assert!(
+        reg.counter_value("engine.hedge.launched") >= 1,
+        "a 50us hedge delay under an error storm must launch hedges"
+    );
+    let peak = reg.gauge_value("engine.inflight_peak");
+    assert!(peak >= 1, "the run must record an in-flight peak");
+    assert!(
+        peak <= depth as u64,
+        "in-flight peak {peak} exceeds the configured depth {depth}"
+    );
+}
