@@ -99,6 +99,7 @@ fn main() {
                 path: format!("/f{}", i % 4),
                 offset: (i / 4) * 1024,
                 length: 1024,
+                checksum: None,
             })
         })
         .collect();

@@ -242,6 +242,73 @@ mod tests {
     }
 
     #[test]
+    fn corrupt_replay_targets_are_gated_out_of_recovery() {
+        // the recover() integrity gate, driven by a torn-write + corrupt
+        // schedule: every payload rots on disk as it lands (the WAL
+        // intent checksums are computed before the store sees the
+        // bytes), and the 4th data write is torn — which errors before
+        // its intent is logged, killing the writer. Recovery must read
+        // each replay target back, fail its checksum, count it
+        // `data_corrupt`, and index nothing: corrupt data must never
+        // become visible through a recovered catalogue.
+        let plan = FaultPlan::new(5)
+            .with_rule(FaultClass::Write, FaultAction::Corrupt { prob: 1.0 })
+            .with_rule(FaultClass::Write, FaultAction::Torn { nth: 3 });
+        let mut dep = deploy(Testbed::Gcp, SystemKind::Lustre, 2, 2, RedundancyOpt::None)
+            .with_io(IoProfile::default().with_durable(true))
+            .with_fault(plan);
+        let nodes = dep.client_nodes();
+        let ids: Vec<_> = (0..6)
+            .map(|i| super::super::hammer::field_id(0, 1 + i as u32, 0, 0))
+            .collect();
+        let mut w = dep.fdb(&nodes[0]);
+        let archived = Rc::new(RefCell::new(0usize));
+        {
+            let ids = ids.clone();
+            let archived = archived.clone();
+            dep.sim.spawn(async move {
+                for id in &ids {
+                    let data = Bytes::virt(2048, super::super::hammer::field_seed(id));
+                    if w.archive(id, data).await.is_err() {
+                        break;
+                    }
+                    *archived.borrow_mut() += 1;
+                }
+                drop(w); // dies on the torn write, WAL unflushed
+            });
+            dep.sim.run();
+        }
+        assert_eq!(*archived.borrow(), 3, "the torn 4th write kills the writer");
+        dep.fault = None;
+        let mut rec = dep.fdb(&nodes[1]);
+        let ds = ids[0].project(&rec.schema.dataset.clone()).unwrap();
+        let out = Rc::new(RefCell::new((RecoveryStats::default(), 0usize)));
+        {
+            let out = out.clone();
+            let ids = ids.clone();
+            dep.sim.spawn(async move {
+                let stats = rec.recover(&ds).await.expect("recover");
+                rec.flush().await.expect("flush");
+                rec.invalidate_preload(&ds);
+                let mut found = 0;
+                for id in &ids {
+                    if rec.retrieve(id).await.expect("retrieve").is_some() {
+                        found += 1;
+                    }
+                }
+                *out.borrow_mut() = (stats, found);
+            });
+            dep.sim.run();
+        }
+        let (stats, found) = *out.borrow();
+        assert_eq!(stats.wal_files, 1, "the dead writer's WAL was scanned");
+        assert_eq!(stats.data_corrupt, 3, "every rotten replay target gated");
+        assert_eq!(stats.replayed, 0, "corrupt data must never be indexed");
+        assert_eq!(stats.data_missing, 0, "torn write logged no intent");
+        assert_eq!(found, 0, "no corrupt field surfaces post-recovery");
+    }
+
+    #[test]
     fn committed_intents_are_not_replayed() {
         // a writer that flushed before dying: the flush's commit
         // watermark means recovery replays nothing, yet all fields stay

@@ -10,6 +10,7 @@ pub mod figures;
 pub mod hammer;
 pub mod ior;
 pub mod scenario;
+pub mod scrub;
 
 use crate::sim::time::SimTime;
 

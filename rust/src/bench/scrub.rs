@@ -1,0 +1,410 @@
+//! `scrub_storm`: the end-to-end integrity scenario behind `fdbctl
+//! fsck` and `abl_scrub`. One deployment archives a dataset while
+//! seeded damage lands in all three classes fsck exists to find:
+//!
+//! * **corruption** — a `corrupt:write` fault plan scoped to the
+//!   writer's replica-0 store rots primary copies *on disk* (the
+//!   catalogue checksum is computed before the store sees the payload,
+//!   so the rot is detectable); an optional `corrupt:read` plan scoped
+//!   to one reader replica adds transient wire rot on top.
+//! * **ghosts** — one collocation's container is quarantined behind the
+//!   catalogue's back, leaving every entry of that collocation pointing
+//!   at nothing.
+//! * **orphans** — another collocation's entries are forgotten while
+//!   its container stays on disk.
+//!
+//! The scenario then runs `Fdb::fsck` (optionally `--repair` plus a
+//! detect-only convergence pass) on the *writer* instance — the one
+//! whose replicated store learned the secondary-copy locations at
+//! archive time — and finally a fresh reader retrieves every surviving
+//! field through the verified read path, byte-checking each one.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use super::scenario::{deploy, RedundancyOpt, SystemKind};
+use crate::fdb::fault::{FaultAction, FaultClass, FaultPlan};
+use crate::fdb::scrub::FsckReport;
+use crate::fdb::{BackendConfig, Fdb, FdbBuilder, Key, MetricsRegistry, Request};
+use crate::hw::profiles::Testbed;
+use crate::util::content::Bytes;
+
+/// Fields per collocation (the ghost/orphan seeding granularity: one
+/// collocation = one per-process data file on the POSIX backend).
+pub const GROUP: usize = 16;
+
+/// One integrity-storm configuration. Ghost/orphan seeding needs the
+/// bare (copies = 1) POSIX-family backend — container granularity and
+/// the store inventory only exist there; repair-from-replica needs
+/// `copies >= 2`.
+#[derive(Clone, Copy, Debug)]
+pub struct ScrubConfig {
+    pub kind: SystemKind,
+    /// replica count; 1 = bare backend (no replication wrapper)
+    pub copies: usize,
+    pub seed: u64,
+    /// total fields archived, spread over `nfields / GROUP` collocations
+    pub nfields: usize,
+    pub field_size: u64,
+    /// `corrupt:write` probability on the writer's replica-0 store
+    /// (persistent disk rot on primary copies)
+    pub write_rot: f64,
+    /// `corrupt:read` probability on the reader's replica-0 store
+    /// (transient wire rot, absorbed by verified-read failover)
+    pub read_rot: f64,
+    /// quarantine collocation 0's container behind the catalogue's back
+    pub ghosts: bool,
+    /// forget collocation 1's entries, leaving its container on disk
+    pub orphans: bool,
+    /// run fsck in repair mode, then a detect-only convergence pass
+    pub repair: bool,
+}
+
+impl Default for ScrubConfig {
+    fn default() -> ScrubConfig {
+        ScrubConfig {
+            kind: SystemKind::Lustre,
+            copies: 2,
+            seed: 42,
+            nfields: 3 * GROUP,
+            field_size: 64 << 10,
+            write_rot: 0.0,
+            read_rot: 0.0,
+            ghosts: false,
+            orphans: false,
+            repair: false,
+        }
+    }
+}
+
+/// What one storm observed.
+#[derive(Clone, Debug, Default)]
+pub struct ScrubReport {
+    /// fields archived
+    pub fields: usize,
+    /// ghost entries seeded (`GROUP` when the ghost leg ran)
+    pub seeded_ghosts: u64,
+    /// orphan containers seeded (1 when the orphan leg ran)
+    pub seeded_orphans: u64,
+    /// the first fsck pass (repair mode when `cfg.repair`)
+    pub first: FsckReport,
+    /// the detect-only convergence pass (repair runs only)
+    pub second: Option<FsckReport>,
+    /// reader-leg fields returned AND byte-verified
+    pub reads_ok: usize,
+    /// reader-leg fields that surfaced a caller-visible error
+    pub read_errors: usize,
+    /// reader-leg fields returned with wrong bytes, or absent
+    pub verify_failures: usize,
+    /// first caller-visible reader error, when any surfaced
+    pub first_error: Option<String>,
+}
+
+impl ScrubReport {
+    /// The storm's acceptance bar: every seeded problem detected, and —
+    /// on repair runs — the pass converged, the follow-up pass is
+    /// clean, and the reader saw zero caller-visible damage.
+    pub fn passed(&self, repaired: bool) -> bool {
+        let detected = self.first.ghosts >= self.seeded_ghosts
+            && self.first.orphans >= self.seeded_orphans;
+        if !repaired {
+            return detected;
+        }
+        detected
+            && self.first.converged()
+            && self.second.as_ref().is_some_and(|s| s.clean())
+            && self.read_errors == 0
+            && self.verify_failures == 0
+    }
+}
+
+/// The identifier of field `i` in collocation group `g`: the stock
+/// POSIX schema collocates on `type,levtype`, so a per-group `levtype`
+/// value gives each group its own collocation (its own data file).
+fn scrub_id(g: usize, i: usize) -> Key {
+    super::hammer::field_id(0, 1 + i as u32, 0, 0).with("levtype", format!("l{g}"))
+}
+
+/// Run the storm. `metrics` (when given) receives the deployment's
+/// registry, so `integrity.*` counters are inspectable afterwards.
+pub fn scrub_storm(cfg: &ScrubConfig, metrics: Option<&MetricsRegistry>) -> ScrubReport {
+    assert!(cfg.copies >= 1, "scrub_storm needs at least one copy");
+    assert!(
+        !(cfg.ghosts || cfg.orphans) || cfg.copies == 1,
+        "ghost/orphan seeding is container-granular: bare backend only"
+    );
+    assert!(
+        cfg.nfields >= 3 * GROUP,
+        "the storm needs a ghost group, an orphan group, and a healthy residue"
+    );
+    let dep = deploy(Testbed::Gcp, cfg.kind, 2, 2, RedundancyOpt::None);
+    let mut bcfg = dep.backend_config();
+    if cfg.write_rot > 0.0 {
+        // inner fault layer: persistent disk rot on the writer's
+        // replica-0 store (instance 0 of this layer — writer stores
+        // build before the writer catalogue and the reader)
+        bcfg = BackendConfig::Fault {
+            inner: Box::new(bcfg),
+            plan: FaultPlan::new(cfg.seed)
+                .with_rule(FaultClass::Write, FaultAction::Corrupt { prob: cfg.write_rot })
+                .with_only_instance(0),
+        };
+    }
+    if cfg.read_rot > 0.0 {
+        // outer fault layer (its own instance counter): transient wire
+        // rot on the reader's replica-0 store. Build order — writer
+        // stores 0..copies-1, writer catalogue `copies`, reader
+        // replica 0 = `copies + 1`.
+        bcfg = BackendConfig::Fault {
+            inner: Box::new(bcfg),
+            plan: FaultPlan::new(cfg.seed.wrapping_add(0x5c12_ab5c))
+                .with_rule(FaultClass::Read, FaultAction::Corrupt { prob: cfg.read_rot })
+                .with_only_instance((cfg.copies + 1) as u64),
+        };
+    }
+    if cfg.copies >= 2 {
+        bcfg = BackendConfig::Replicated {
+            inner: Box::new(bcfg),
+            copies: cfg.copies,
+        };
+    }
+    let own;
+    let reg = match metrics {
+        Some(r) => r,
+        None => {
+            own = MetricsRegistry::new();
+            &own
+        }
+    };
+    let build = |node: &Rc<crate::hw::node::Node>| -> Fdb {
+        FdbBuilder::new(&dep.sim)
+            .node(node)
+            .backend(bcfg.clone())
+            .metrics(reg)
+            .build()
+            .expect("hand-built config is valid")
+    };
+    let ids: Vec<Key> = (0..cfg.nfields)
+        .map(|i| scrub_id(i / GROUP, i % GROUP))
+        .collect();
+    let nodes = dep.client_nodes();
+
+    // phase 1 — the writer: archive everything (write rot lands here),
+    // seed ghost/orphan damage, then scrub. fsck MUST run on this
+    // instance: its replicated store learned the secondary-copy
+    // locations at archive time, which is what repair rewrites from.
+    let mut writer = build(&nodes[0]);
+    let out = Rc::new(RefCell::new(ScrubReport {
+        fields: cfg.nfields,
+        seeded_ghosts: if cfg.ghosts { GROUP as u64 } else { 0 },
+        seeded_orphans: if cfg.orphans { 1 } else { 0 },
+        ..Default::default()
+    }));
+    {
+        let out = out.clone();
+        let ids = ids.clone();
+        let cfg = *cfg;
+        dep.sim.spawn(async move {
+            for id in &ids {
+                let data = Bytes::virt(cfg.field_size, super::hammer::field_seed(id));
+                writer.archive(id, data).await.expect("archive");
+            }
+            writer.flush().await.expect("publish");
+            writer.close().await.expect("close");
+            let ds = ids[0]
+                .project(&writer.schema.dataset.clone())
+                .expect("dataset key");
+            if cfg.ghosts {
+                // group 0's container disappears; its entries stay
+                let entries = writer.list(&ds, &Request::default()).await;
+                let container = entries
+                    .iter()
+                    .find(|(id, _)| id == &ids[0])
+                    .map(|(_, loc)| loc.container_uri())
+                    .expect("victim entry listed");
+                let (store, _) = writer.backend_mut();
+                let gone = store
+                    .quarantine_object(&ds, &container)
+                    .await
+                    .expect("quarantine the ghost container");
+                assert!(gone, "ghost seeding needs a quarantine-capable store");
+            }
+            if cfg.orphans {
+                // group 1's entries disappear; its container stays
+                for id in &ids[GROUP..2 * GROUP] {
+                    let (_, colloc, elem) = writer.schema.split(id).expect("schema");
+                    let (_, cat) = writer.backend_mut();
+                    cat.forget(&ds, &colloc, &elem, id)
+                        .await
+                        .expect("forget the orphan group's entries");
+                }
+                let (_, cat) = writer.backend_mut();
+                cat.flush().await.expect("persist tombstones");
+            }
+            writer.invalidate_preload(&ds);
+            let first = writer.fsck(&ds, cfg.repair).await.expect("fsck");
+            let second = if cfg.repair {
+                Some(writer.fsck(&ds, false).await.expect("fsck convergence pass"))
+            } else {
+                None
+            };
+            let mut o = out.borrow_mut();
+            o.first = first;
+            o.second = second;
+        });
+        dep.sim.run();
+    }
+
+    // phase 2 — a fresh reader retrieves every field expected to
+    // survive, through the verified read path (reader-side wire rot is
+    // live here; with copies >= 2 failover must absorb it).
+    let mut reader = build(&nodes[1]);
+    {
+        let out = out.clone();
+        let expected: Vec<Key> = ids
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| {
+                !(cfg.ghosts && i / GROUP == 0) && !(cfg.orphans && i / GROUP == 1)
+            })
+            .map(|(_, id)| id.clone())
+            .collect();
+        let field_size = cfg.field_size;
+        dep.sim.spawn(async move {
+            for id in &expected {
+                let one = std::slice::from_ref(id);
+                let fetched = reader.retrieve_many(one).await;
+                let mut o = out.borrow_mut();
+                match fetched {
+                    Ok(found) => match found.into_iter().next() {
+                        Some((_, data)) => {
+                            let expect =
+                                Bytes::virt(field_size, super::hammer::field_seed(id));
+                            if data.content_eq(&expect) {
+                                o.reads_ok += 1;
+                            } else {
+                                o.verify_failures += 1;
+                            }
+                        }
+                        None => o.verify_failures += 1,
+                    },
+                    Err(e) => {
+                        o.read_errors += 1;
+                        if o.first_error.is_none() {
+                            o.first_error = Some(e.to_string());
+                        }
+                    }
+                }
+            }
+        });
+        dep.sim.run();
+    }
+    out.borrow().clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detect_only_finds_every_seeded_problem_class() {
+        // bare POSIX, all three damage classes at once, no repair:
+        // p = 1.0 write rot makes the corruption count exact (every
+        // entry of the healthy-residue group), and the ghost/orphan
+        // groups are seeded with known sizes
+        let cfg = ScrubConfig {
+            copies: 1,
+            write_rot: 1.0,
+            ghosts: true,
+            orphans: true,
+            ..Default::default()
+        };
+        let r = scrub_storm(&cfg, None);
+        assert_eq!(r.first.entries, 2 * GROUP as u64, "orphan group delisted");
+        assert_eq!(r.first.ghosts, GROUP as u64, "every ghost entry found");
+        assert_eq!(r.first.orphans, 1, "the orphaned container found");
+        assert_eq!(
+            r.first.corrupt,
+            GROUP as u64,
+            "every rotten residue field found"
+        );
+        assert_eq!(r.first.repaired, 0, "detect-only must not touch data");
+        assert!(r.passed(false));
+        // and the rot is caller-visible on the bare backend: every
+        // residue read fails its checksum with no replica to fall to
+        assert_eq!(r.read_errors, GROUP, "disk rot must not read clean");
+    }
+
+    #[test]
+    fn repair_drops_ghosts_and_quarantines_orphans_to_convergence() {
+        let cfg = ScrubConfig {
+            copies: 1,
+            ghosts: true,
+            orphans: true,
+            repair: true,
+            ..Default::default()
+        };
+        let r = scrub_storm(&cfg, None);
+        assert_eq!(r.first.ghosts_dropped, GROUP as u64);
+        assert_eq!(r.first.orphans_quarantined, 1);
+        assert!(r.first.converged(), "repair must converge: {}", r.first);
+        let second = r.second.as_ref().expect("convergence pass ran");
+        assert!(second.clean(), "second pass must be clean: {second}");
+        assert_eq!(second.entries, GROUP as u64, "only the residue remains");
+        assert_eq!(r.reads_ok, GROUP, "the residue reads back verified");
+        assert!(r.passed(true));
+    }
+
+    #[test]
+    fn replicated_repair_heals_disk_rot_and_masks_wire_rot() {
+        // the PR's acceptance bar: every primary copy rotten on disk
+        // (p = 1.0), transient wire rot on the reader's replica 0 —
+        // with replication >= 2 and --repair, fsck heals every copy,
+        // the convergence pass is clean, and the reader observes ZERO
+        // caller-visible corruption
+        let reg = MetricsRegistry::new();
+        let cfg = ScrubConfig {
+            copies: 2,
+            write_rot: 1.0,
+            read_rot: 0.25,
+            repair: true,
+            ..Default::default()
+        };
+        let r = scrub_storm(&cfg, Some(&reg));
+        assert_eq!(
+            r.first.corrupt, r.fields as u64,
+            "every rotten primary copy found"
+        );
+        assert_eq!(
+            r.first.repaired, r.fields as u64,
+            "every rotten copy rewritten from its healthy replica"
+        );
+        assert!(r.first.converged());
+        assert!(r.second.as_ref().expect("convergence pass").clean());
+        assert_eq!(r.read_errors, 0, "first error: {:?}", r.first_error);
+        assert_eq!(r.verify_failures, 0);
+        assert_eq!(r.reads_ok, r.fields, "every field byte-verified");
+        assert!(r.passed(true));
+        assert_eq!(
+            reg.counter_value("integrity.fsck_repaired"),
+            r.fields as u64
+        );
+    }
+
+    #[test]
+    fn unrepaired_disk_rot_surfaces_to_readers() {
+        // contrast leg: same rot, no repair — the primary copy is the
+        // one every replica reads, so the corruption reaches callers as
+        // the typed error (this is what a non-zero fsck exit guards)
+        let cfg = ScrubConfig {
+            copies: 2,
+            write_rot: 1.0,
+            ..Default::default()
+        };
+        let r = scrub_storm(&cfg, None);
+        assert_eq!(r.first.corrupt, r.fields as u64);
+        assert_eq!(r.first.repaired, 0);
+        assert_eq!(r.read_errors, r.fields, "rot must not read clean");
+        assert_eq!(r.reads_ok, 0);
+    }
+}

@@ -471,6 +471,114 @@ pub fn cmd_degrade(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `fdbctl fsck`: the online scrub/repair smoke — archive a dataset
+/// with seeded damage (bit rot via `corrupt:*` fault rules, ghost
+/// entries, orphaned containers), run the catalogue↔store cross-check,
+/// optionally `--repair` plus a detect-only convergence pass, then
+/// byte-verify every surviving field through a fresh reader.
+///
+/// Exit codes: 0 = clean (or the repair converged, the second pass is
+/// clean, and readers saw zero corruption); 1 = unrepaired damage;
+/// 2 = usage.
+pub fn cmd_fsck(args: &Args) -> Result<()> {
+    use crate::bench::scrub::{scrub_storm, ScrubConfig, GROUP};
+
+    fn usage_err(msg: &str) -> ! {
+        eprintln!("fsck: {msg}");
+        std::process::exit(2);
+    }
+    let kind = parse_system(opt(args, "system", "lustre")?)?;
+    let copies = num(args, "copies", 2usize)?;
+    let ghosts = args.flag("ghosts");
+    let orphans = args.flag("orphans");
+    let repair = args.flag("repair");
+    let write_rot = num(args, "write-rot", 0.0f64)?;
+    let read_rot = num(args, "read-rot", 0.0f64)?;
+    if kind == SystemKind::Null {
+        usage_err("needs a byte-addressed backend (lustre|daos|ceph)");
+    }
+    if copies == 0 {
+        usage_err("--copies must be >= 1");
+    }
+    if (ghosts || orphans) && copies != 1 {
+        usage_err("--ghosts/--orphans seed container-granular damage: use --copies 1");
+    }
+    if !(0.0..=1.0).contains(&write_rot) || !(0.0..=1.0).contains(&read_rot) {
+        usage_err("--write-rot/--read-rot must be probabilities in [0, 1]");
+    }
+    let cfg = ScrubConfig {
+        kind,
+        copies,
+        seed: num(args, "seed", 42u64)?,
+        nfields: num(args, "nfields", 3 * GROUP)?.max(3 * GROUP),
+        field_size: size(args, "field-size", 64 << 10)?,
+        write_rot,
+        read_rot,
+        ghosts,
+        orphans,
+        repair,
+    };
+    let metrics_path = args
+        .value_of("metrics")
+        .map_err(|e| anyhow::anyhow!(e))?
+        .map(str::to_string);
+    let reg = metrics_path.as_ref().map(|_| MetricsRegistry::new());
+    let r = scrub_storm(&cfg, reg.as_ref());
+    println!(
+        "fsck {} copies={copies} seed {} ({} fields; rot write={write_rot} read={read_rot}; \
+         ghosts={ghosts} orphans={orphans})",
+        kind.label(),
+        cfg.seed,
+        r.fields,
+    );
+    println!(
+        "  pass 1{}: {}",
+        if repair { " (repair)" } else { "" },
+        r.first
+    );
+    if let Some(second) = &r.second {
+        println!("  pass 2 (verify): {second}");
+    }
+    println!(
+        "  reader: {} verified, {} errors, {} corrupt/missing{}",
+        r.reads_ok,
+        r.read_errors,
+        r.verify_failures,
+        r.first_error
+            .as_deref()
+            .map(|e| format!(" (first: {e})"))
+            .unwrap_or_default()
+    );
+    if let (Some(reg), Some(path)) = (&reg, &metrics_path) {
+        write_metrics_json(reg, path)?;
+    }
+    let healthy = if repair {
+        r.passed(true)
+    } else {
+        r.first.clean() && r.read_errors == 0 && r.verify_failures == 0
+    };
+    if !healthy {
+        bail!(
+            "fsck found unrepaired damage: {} ghosts, {} orphans, {} corrupt; \
+             reader saw {} errors, {} corrupt/missing fields",
+            r.first.ghosts,
+            r.first.orphans,
+            r.first.corrupt,
+            r.read_errors,
+            r.verify_failures
+        );
+    }
+    println!(
+        "  integrity check: PASSED{}",
+        if repair {
+            " (repair converged, second pass clean)"
+        } else {
+            " (dataset clean)"
+        }
+    );
+    Ok(())
+}
+
 /// `fdbctl ior --system lustre ...`
 pub fn cmd_ior(args: &Args) -> Result<()> {
     let testbed = parse_testbed(opt(args, "testbed", "gcp")?)?;
@@ -719,8 +827,10 @@ pub fn usage() -> &'static str {
                  [--read-policy first|rr|fastest] [--metrics out.json]\n\
                  [--slow-op-us n]  (log + report ops slower than n us)\n\
                  [--durable] [--fault seed=n,failstop:<class>:<n>,torn:write:<n>,\n\
-                  err:<class>:p<f>[:transient],slow:<class>:<us>[,only=<i>]]\n\
+                  err:<class>:p<f>[:transient],slow:<class>:<us>,\n\
+                  corrupt:<class>:p<f>[,only=<i>]]\n\
                   classes: write|read|flush|index|index-flush\n\
+                  (corrupt: seeded bit rot, write|read classes only)\n\
                  [--retry n] [--retry-backoff-us n] [--op-deadline-us n]\n\
                  [--hedge-us n] [--quarantine-after n] [--quarantine-backoff-us n]\n\
        trace     run the hammer workload, export the op journal as Chrome\n\
@@ -738,6 +848,14 @@ pub fn usage() -> &'static str {
                  [--copies n] [--seed n] [--kill n] [--nfields n]\n\
                  [--field-size sz] [--metrics out.json]\n\
                  [+ resilience flags, see hammer — default ON here]\n\
+       fsck      online scrub/repair smoke: seeded bit rot + ghost entries +\n\
+                 orphaned objects, catalogue<->store cross-check, optional repair\n\
+                 with a convergence pass; exits 0 clean/converged, 1 unrepaired,\n\
+                 2 usage\n\
+                 [--copies n] [--seed n] [--nfields n] [--field-size sz]\n\
+                 [--write-rot p] [--read-rot p]  (seeded corrupt:write|read rot)\n\
+                 [--ghosts] [--orphans]  (bare backend only: --copies 1)\n\
+                 [--repair] [--metrics out.json]\n\
        ior       IOR-like generic benchmark [--system s] [--nops n] [--xfer sz] [--dfs]\n\
        fieldio   Field I/O PoC              [--system s] [--nfields n] [--dummy]\n\
        opsrun    end-to-end operational NWP run with PJRT PGEN compute\n\

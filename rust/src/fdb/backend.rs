@@ -29,6 +29,7 @@ use super::fault::wal::RecoveryStats;
 use super::key::Key;
 use super::location::FieldLocation;
 use super::request::Request;
+use super::scrub::{verify_ranges, RangeCheck, ScrubOutcome};
 use super::FdbError;
 use crate::sim::time::SimTime;
 use crate::util::content::Bytes;
@@ -113,6 +114,106 @@ pub trait Store {
             }
             Ok(out)
         })
+    }
+
+    /// [`Store::read`] plus end-to-end integrity: each [`RangeCheck`]
+    /// names a slice of the returned buffer and its expected content
+    /// checksum; a mismatch surfaces as [`FdbError::Corrupt`]. An empty
+    /// `checks` slice verifies nothing (legacy entries), so callers can
+    /// route every read through this method. The default reads then
+    /// verifies; [`crate::fdb::wrappers::ReplicatedStore`] overrides it
+    /// to verify *per replica* and fail over to the next copy.
+    fn read_verified<'a>(
+        &'a mut self,
+        handle: &'a DataHandle,
+        checks: &'a [RangeCheck],
+    ) -> LocalBoxFuture<'a, Result<Bytes, FdbError>> {
+        Box::pin(async move {
+            let buf = self.read(handle).await?;
+            verify_ranges(&buf, checks)?;
+            Ok(buf)
+        })
+    }
+
+    /// [`Store::read_ranges`] with per-handle integrity checks —
+    /// `checks[i]` verifies slices of buffer `i` (coalesced reads carry
+    /// one [`RangeCheck`] per checksummed member field). `checks` may be
+    /// shorter than `handles`; unmatched buffers go unverified.
+    fn read_ranges_verified<'a>(
+        &'a mut self,
+        handles: &'a [DataHandle],
+        checks: &'a [Vec<RangeCheck>],
+    ) -> LocalBoxFuture<'a, Result<Vec<Bytes>, FdbError>> {
+        Box::pin(async move {
+            let bufs = self.read_ranges(handles).await?;
+            for (buf, cks) in bufs.iter().zip(checks) {
+                verify_ranges(buf, cks)?;
+            }
+            Ok(bufs)
+        })
+    }
+
+    /// Rewrite the bytes a handle refers to from verified data (scrub
+    /// repair of a rotten copy). Returns whether the store performed the
+    /// rewrite; the default cannot (sink and immutable backends).
+    fn repair<'a>(
+        &'a mut self,
+        _handle: &'a DataHandle,
+        _data: Bytes,
+    ) -> LocalBoxFuture<'a, Result<bool, FdbError>> {
+        ready(Ok(false))
+    }
+
+    /// Scrub one field: probe every physical copy the store keeps for
+    /// existence, length, and (when `ck` is carried) content checksum;
+    /// with `do_repair`, rewrite damaged copies from a verified one.
+    /// The default probes the single copy a plain backend keeps.
+    fn scrub_field<'a>(
+        &'a mut self,
+        handle: &'a DataHandle,
+        expect_len: u64,
+        ck: Option<u64>,
+        _do_repair: bool,
+    ) -> LocalBoxFuture<'a, Result<ScrubOutcome, FdbError>> {
+        Box::pin(async move {
+            let mut out = ScrubOutcome {
+                copies: 1,
+                ..Default::default()
+            };
+            match self.read(handle).await {
+                Err(_) => out.missing = 1,
+                Ok(buf) => {
+                    let bad_len = buf.len() != expect_len;
+                    let bad_ck = ck.is_some_and(|ck| buf.content_checksum() != ck);
+                    if bad_len || bad_ck {
+                        out.corrupt = 1;
+                    }
+                }
+            }
+            Ok(out)
+        })
+    }
+
+    /// Enumerate a dataset's physical containers as `(container URI,
+    /// length)` pairs — the store side of orphan detection (objects no
+    /// catalogue entry references). `None` (the default) means this
+    /// store cannot enumerate and orphan scanning is skipped for it.
+    fn scrub_inventory<'a>(
+        &'a mut self,
+        _ds: &'a Key,
+    ) -> LocalBoxFuture<'a, Option<Vec<(String, u64)>>> {
+        ready(None)
+    }
+
+    /// Move an unreferenced object out of the data path (fsck orphan
+    /// repair) — e.g. POSIX renames the data file aside. Returns whether
+    /// anything was quarantined; the default cannot.
+    fn quarantine_object<'a>(
+        &'a mut self,
+        _ds: &'a Key,
+        _container: &'a str,
+    ) -> LocalBoxFuture<'a, Result<bool, FdbError>> {
+        ready(Ok(false))
     }
 
     /// Whether this Store can resolve fully-specified identifiers
@@ -252,6 +353,21 @@ pub trait Catalogue {
         ds: &'a Key,
         request: &'a Request,
     ) -> LocalBoxFuture<'a, Vec<(Key, FieldLocation)>>;
+
+    /// Remove one index entry (fsck ghost repair: the entry points at
+    /// data that no longer exists). Returns whether the entry was
+    /// removed or masked; the default catalogue cannot forget
+    /// (append-only formats mask via tombstones instead — see the POSIX
+    /// impl). Callers must treat `Ok(false)` as "ghost left in place".
+    fn forget<'a>(
+        &'a mut self,
+        _ds: &'a Key,
+        _colloc: &'a Key,
+        _elem: &'a Key,
+        _id: &'a Key,
+    ) -> LocalBoxFuture<'a, Result<bool, FdbError>> {
+        ready(Ok(false))
+    }
 
     /// Drop reader-side caches so later flushes become visible.
     fn invalidate_preload(&mut self, _ds: &Key) {}
@@ -412,6 +528,10 @@ impl NullCatalogue {
     fn remove_dataset(&mut self, ds: &Key) {
         self.map.borrow_mut().retain(|k, _| !ds.matches(k));
     }
+
+    fn remove(&mut self, id: &Key) -> bool {
+        self.map.borrow_mut().remove(id).is_some()
+    }
 }
 
 impl Catalogue for NullCatalogue {
@@ -461,6 +581,17 @@ impl Catalogue for NullCatalogue {
     fn deregister_dataset<'a>(&'a mut self, ds: &'a Key) -> LocalBoxFuture<'a, ()> {
         self.remove_dataset(ds);
         ready(())
+    }
+
+    fn forget<'a>(
+        &'a mut self,
+        _ds: &'a Key,
+        _colloc: &'a Key,
+        _elem: &'a Key,
+        id: &'a Key,
+    ) -> LocalBoxFuture<'a, Result<bool, FdbError>> {
+        let removed = self.remove(id);
+        ready(Ok(removed))
     }
 
     fn session(&mut self) -> Option<Box<dyn CatalogueSession>> {
@@ -543,6 +674,17 @@ impl Catalogue for SharedNullCatalogue {
         ready(())
     }
 
+    fn forget<'a>(
+        &'a mut self,
+        _ds: &'a Key,
+        _colloc: &'a Key,
+        _elem: &'a Key,
+        id: &'a Key,
+    ) -> LocalBoxFuture<'a, Result<bool, FdbError>> {
+        let removed = self.inner.borrow_mut().remove(id);
+        ready(Ok(removed))
+    }
+
     fn session(&mut self) -> Option<Box<dyn CatalogueSession>> {
         Some(Box::new(self.clone()))
     }
@@ -621,6 +763,56 @@ mod tests {
         let h = DataHandle::from_location(&l);
         let bytes = block_on(store.read(&h)).unwrap();
         assert_eq!(bytes.len(), 64);
+    }
+
+    #[test]
+    fn default_read_verified_catches_mismatch_and_passes_clean() {
+        let mut store = NullStore;
+        let h = DataHandle::Null { length: 64 };
+        // Null reads regenerate virt(len, 0): its checksum passes
+        let good = Bytes::virt(64, 0).content_checksum();
+        let checks = [super::RangeCheck::whole(64, good)];
+        assert_eq!(block_on(store.read_verified(&h, &checks)).unwrap().len(), 64);
+        // empty checks = legacy entry = no verification
+        assert!(block_on(store.read_verified(&h, &[])).is_ok());
+        // a wrong expected checksum is typed corruption
+        let bad = [super::RangeCheck::whole(64, good ^ 1)];
+        let err = block_on(store.read_verified(&h, &bad)).unwrap_err();
+        assert!(matches!(err, FdbError::Corrupt { .. }), "got {err}");
+    }
+
+    #[test]
+    fn default_scrub_field_classifies_copies() {
+        let mut store = NullStore;
+        let h = DataHandle::Null { length: 64 };
+        let good = Bytes::virt(64, 0).content_checksum();
+        let out = block_on(store.scrub_field(&h, 64, Some(good), false)).unwrap();
+        assert!(out.healthy(), "{out:?}");
+        // wrong checksum → corrupt copy
+        let out = block_on(store.scrub_field(&h, 64, Some(good ^ 1), false)).unwrap();
+        assert_eq!((out.copies, out.corrupt), (1, 1));
+        // wrong length → corrupt copy even without a checksum
+        let out = block_on(store.scrub_field(&h, 65, None, false)).unwrap();
+        assert_eq!(out.corrupt, 1);
+        // unreadable handle → missing copy
+        let foreign = DataHandle::Posix {
+            path: "/f".into(),
+            ranges: vec![(0, 4)],
+        };
+        let out = block_on(store.scrub_field(&foreign, 4, None, false)).unwrap();
+        assert_eq!(out.missing, 1);
+    }
+
+    #[test]
+    fn null_catalogue_forget_removes_one_entry() {
+        let mut cat = NullCatalogue::new();
+        let ds = Key::new();
+        let id = Key::of(&[("step", "1")]);
+        block_on(cat.archive(&ds, &ds, &id, &id, &loc(7))).unwrap();
+        assert!(block_on(cat.forget(&ds, &ds, &id, &id)).unwrap());
+        assert!(block_on(cat.retrieve(&ds, &ds, &id, &id)).is_none());
+        // forgetting a missing entry reports false, not an error
+        assert!(!block_on(cat.forget(&ds, &ds, &id, &id)).unwrap());
     }
 
     #[test]

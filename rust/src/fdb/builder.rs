@@ -590,7 +590,9 @@ impl BackendConfig {
                         res,
                     )?);
                 }
-                let mut store = ReplicatedStore::new(replicas).with_clock(sim);
+                let mut store = ReplicatedStore::new(replicas)
+                    .with_clock(sim)
+                    .with_integrity(instr.as_ref().map(|(reg, _)| *reg));
                 if let Some(p) = policy {
                     store = store.with_read_policy(p);
                 }

@@ -83,6 +83,7 @@ impl DaosStore {
             cont: cont.label.clone(),
             oid,
             length,
+            checksum: None,
         }
     }
 
@@ -107,6 +108,7 @@ impl DaosStore {
             cont: cont.label.clone(),
             oid,
             length,
+            checksum: None,
         }
     }
 
@@ -130,6 +132,7 @@ impl DaosStore {
             cont: label,
             oid,
             length,
+            checksum: None,
         })
     }
 

@@ -41,6 +41,7 @@ impl DataHandle {
                 path,
                 offset,
                 length,
+                ..
             } => DataHandle::Posix {
                 path: path.clone(),
                 ranges: vec![(*offset, *length)],
@@ -50,6 +51,7 @@ impl DataHandle {
                 cont,
                 oid,
                 length,
+                ..
             } => DataHandle::Daos {
                 pool: pool.clone(),
                 cont: cont.clone(),
@@ -61,6 +63,7 @@ impl DataHandle {
                 name,
                 offset,
                 length,
+                ..
             } => DataHandle::Rados {
                 pool: pool.clone(),
                 ns: ns.clone(),
@@ -70,6 +73,7 @@ impl DataHandle {
                 bucket,
                 key,
                 length,
+                ..
             } => DataHandle::S3 {
                 bucket: bucket.clone(),
                 parts: vec![(key.clone(), *length)],
@@ -247,6 +251,7 @@ mod tests {
             path: path.into(),
             offset: off,
             length: len,
+            checksum: None,
         })
     }
 
@@ -309,12 +314,14 @@ mod tests {
             cont: "c".into(),
             oid: Oid::new(1, 1),
             length: 5,
+            checksum: None,
         };
         let l2 = FieldLocation::DaosArray {
             pool: "p".into(),
             cont: "c".into(),
             oid: Oid::new(1, 2),
             length: 6,
+            checksum: None,
         };
         let merged = DataHandle::merge_all(vec![
             DataHandle::from_location(&l1),

@@ -45,6 +45,7 @@ use crate::fdb::datahandle::DataHandle;
 use crate::fdb::key::Key;
 use crate::fdb::location::FieldLocation;
 use crate::fdb::plan::{PlanStats, StreamPlanner};
+use crate::fdb::scrub::RangeCheck;
 use crate::fdb::telemetry::{is_injected_fault, is_transient, EngineMetrics, MetricsRegistry};
 use crate::fdb::{FdbError, ResilienceProfile};
 use crate::sim::exec::{Sim, Sleep};
@@ -115,6 +116,15 @@ impl Drop for Admitted<'_> {
         inflight.set(inflight.get() - 1);
         self.sem.release();
     }
+}
+
+/// The whole-field check set of a single-field read: one
+/// [`RangeCheck`] when the location carries a content checksum, empty
+/// (no verification) for legacy entries.
+fn whole_checks(loc: &FieldLocation) -> Vec<RangeCheck> {
+    loc.checksum()
+        .map(|ck| vec![RangeCheck::whole(loc.length(), ck)])
+        .unwrap_or_default()
 }
 
 /// Record the first error by *input index* — batches report the error
@@ -410,7 +420,9 @@ impl IoEngine {
     }
 
     /// Count a failed op's outcome: injected faults separately from
-    /// organic errors.
+    /// organic errors; a surfaced integrity failure (an unrepaired
+    /// checksum mismatch, never retried — [`is_transient`] rejects it)
+    /// additionally bumps `integrity.corrupt`.
     fn op_err(&self, class: OpClass, e: &FdbError) {
         if let Some(m) = &self.metrics {
             if is_injected_fault(e) {
@@ -418,6 +430,9 @@ impl IoEngine {
             } else {
                 m.probe(class).err.inc();
             }
+        }
+        if let (Some(reg), FdbError::Corrupt { .. }) = (&self.registry, e) {
+            reg.counter("integrity.corrupt").inc();
         }
     }
 
@@ -592,7 +607,9 @@ impl IoEngine {
     ) -> Result<Vec<(Key, Bytes)>, FdbError> {
         let n = ids.len();
         let sem = self.semaphore();
-        let slots: Vec<Slot<Option<DataHandle>>> = (0..n).map(|_| Slot::new()).collect();
+        // locations (not bare handles) cross the slot: the read task
+        // needs the carried checksum for its verified read
+        let slots: Vec<Slot<Option<FieldLocation>>> = (0..n).map(|_| Slot::new()).collect();
         let out: RefCell<Vec<Option<(Key, Bytes)>>> =
             RefCell::new((0..n).map(|_| None).collect());
         let failed: RefCell<Option<(usize, FdbError)>> = RefCell::new(None);
@@ -620,7 +637,7 @@ impl IoEngine {
                         let lock = cs.take_lock_time();
                         lock_total.set(lock_total.get() + lock);
                         self.span(OpClass::IndexRead, t0, lock, backend);
-                        slots[i].put(loc.map(|l| DataHandle::from_location(&l)));
+                        slots[i].put(loc);
                     }));
                 }
             } else {
@@ -632,15 +649,17 @@ impl IoEngine {
                         let lock = catalogue.take_lock_time();
                         lock_total.set(lock_total.get() + lock);
                         self.span(OpClass::IndexRead, t0, lock, backend);
-                        slots[i].put(loc.map(|l| DataHandle::from_location(&l)));
+                        slots[i].put(loc);
                     }
                 }));
             }
             for (i, id) in ids.iter().enumerate() {
                 tasks.push(boxed(async move {
-                    let Some(handle) = slots[i].take().await else {
+                    let Some(loc) = slots[i].take().await else {
                         return; // absent field: cache semantics
                     };
+                    let handle = DataHandle::from_location(&loc);
+                    let checks = whole_checks(&loc);
                     let _adm = self.admit_waited(sem, OpClass::DataRead).await;
                     let mut session = match Checkout::new(&self.store_pool, "store") {
                         Ok(s) => s,
@@ -648,7 +667,11 @@ impl IoEngine {
                     };
                     let backend = session.name();
                     let t0 = self.sim.now();
-                    let r = resilient!(self, OpClass::DataRead, session.read(&handle));
+                    let r = resilient!(
+                        self,
+                        OpClass::DataRead,
+                        session.read_verified(&handle, &checks)
+                    );
                     let lock = session.take_lock_time();
                     lock_total.set(lock_total.get() + lock);
                     match r {
@@ -776,11 +799,15 @@ impl IoEngine {
                             }
                         };
                         let backend = session.name();
+                        let checks = pr.checks();
                         let t0 = self.sim.now();
                         let r = resilient!(
                             self,
                             OpClass::DataRead,
-                            session.read_ranges(std::slice::from_ref(&pr.handle))
+                            session.read_ranges_verified(
+                                std::slice::from_ref(&pr.handle),
+                                std::slice::from_ref(&checks),
+                            )
                         );
                         let lock = session.take_lock_time();
                         lock_total.set(lock_total.get() + lock);
@@ -852,8 +879,13 @@ impl IoEngine {
                             return; // absent field: cache semantics
                         };
                         let h = DataHandle::from_location(&loc);
+                        let checks = whole_checks(&loc);
                         let t1 = self.sim.now();
-                        let r = resilient!(self, OpClass::DataRead, session.read(&h));
+                        let r = resilient!(
+                            self,
+                            OpClass::DataRead,
+                            session.read_verified(&h, &checks)
+                        );
                         let lock = session.take_lock_time();
                         lock_total.set(lock_total.get() + lock);
                         match r {

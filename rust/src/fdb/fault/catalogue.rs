@@ -30,7 +30,7 @@ impl FaultCatalogue {
     async fn gate(&self, class: FaultClass) -> Result<(), FdbError> {
         let decision = self.state.borrow_mut().on_op(class, 0);
         match decision {
-            FaultDecision::Proceed { delay } => {
+            FaultDecision::Proceed { delay, .. } => {
                 if let (Some(d), Some(sim)) = (delay, self.state.borrow().sim()) {
                     sim.sleep(d).await;
                 }
@@ -62,6 +62,21 @@ impl Catalogue for FaultCatalogue {
         Box::pin(async move {
             self.gate(FaultClass::Index).await?;
             self.inner.archive(ds, colloc, elem, id, loc).await
+        })
+    }
+
+    fn forget<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        colloc: &'a Key,
+        elem: &'a Key,
+        id: &'a Key,
+    ) -> LocalBoxFuture<'a, Result<bool, FdbError>> {
+        Box::pin(async move {
+            // an index mutation like archive: fsck ghost-drops contend
+            // with the same injected index faults
+            self.gate(FaultClass::Index).await?;
+            self.inner.forget(ds, colloc, elem, id).await
         })
     }
 

@@ -71,6 +71,12 @@ pub enum FaultAction {
     /// Each operation of the class is delayed by `micros` of sim time —
     /// a slow replica/device.
     Slow { micros: u64 },
+    /// Bit rot: with probability `prob` the operation's payload has one
+    /// byte flipped — written rotten (`corrupt:write:p<f>`) or rotting
+    /// on the way back (`corrupt:read:p<f>`). The operation itself
+    /// *succeeds*; only checksum verification can tell. Write/read
+    /// classes only.
+    Corrupt { prob: f64 },
 }
 
 /// A parsed, cloneable fault plan. Cloning shares the build counter, so
@@ -185,6 +191,21 @@ impl FaultPlan {
                         .parse()
                         .map_err(|_| invalid(format!("bad delay `{arg}`")))?,
                 },
+                "corrupt" => {
+                    if class != FaultClass::Write && class != FaultClass::Read {
+                        return Err(invalid(
+                            "corrupt faults only apply to write/read".into(),
+                        ));
+                    }
+                    let p = arg
+                        .strip_prefix('p')
+                        .and_then(|p| p.parse::<f64>().ok())
+                        .ok_or_else(|| invalid(format!("bad probability `{arg}` (want pN.N)")))?;
+                    if !(0.0..=1.0).contains(&p) {
+                        return Err(invalid(format!("probability {p} outside [0,1]")));
+                    }
+                    FaultAction::Corrupt { prob: p }
+                }
                 other => return Err(invalid(format!("unknown action `{other}`"))),
             };
             plan.rules.push((class, action));
@@ -219,6 +240,7 @@ impl FaultPlan {
                         }
                     }
                     FaultAction::Slow { micros } => format!("slow:{class}:{micros}"),
+                    FaultAction::Corrupt { prob } => format!("corrupt:{class}:p{prob}"),
                 }
             })
             .collect();
@@ -250,12 +272,20 @@ pub struct FaultState {
     rng: Rng,
     dead: bool,
     sim: Option<Sim>,
+    /// payload corruptions injected so far (bit-rot observability: the
+    /// harness can assert scrub found everything that was planted)
+    corruptions: u64,
 }
 
 /// What the wrapper must do for one operation.
 pub enum FaultDecision {
-    /// run the inner op (after `delay`, if any)
-    Proceed { delay: Option<SimTime> },
+    /// run the inner op (after `delay`, if any); with `corrupt` drawn,
+    /// flip the payload byte at `draw % len` — silent bit rot the op
+    /// itself never reports
+    Proceed {
+        delay: Option<SimTime>,
+        corrupt: Option<u64>,
+    },
     /// fail with the given injected error
     Fail(FdbError),
     /// write class only: persist `keep` of the payload's bytes through
@@ -286,6 +316,7 @@ impl FaultState {
             rng: root.fork(instance),
             dead: false,
             sim: sim.cloned(),
+            corruptions: 0,
         }
     }
 
@@ -298,6 +329,7 @@ impl FaultState {
         let n = self.counts[class.idx()];
         self.counts[class.idx()] += 1;
         let mut delay: Option<SimTime> = None;
+        let mut corrupt: Option<u64> = None;
         for (c, action) in &self.rules {
             if *c != class {
                 continue;
@@ -328,9 +360,26 @@ impl FaultState {
                 FaultAction::Slow { micros } => {
                     delay = Some(SimTime::micros(*micros));
                 }
+                FaultAction::Corrupt { prob } => {
+                    if self.rng.f64() < *prob {
+                        corrupt = Some(self.rng.next_u64());
+                    }
+                }
             }
         }
-        FaultDecision::Proceed { delay }
+        FaultDecision::Proceed { delay, corrupt }
+    }
+
+    /// Count one byte-flip actually applied (the wrapper calls this —
+    /// an empty payload has nothing to flip, so the draw alone doesn't
+    /// count).
+    pub fn note_corruption(&mut self) {
+        self.corruptions += 1;
+    }
+
+    /// Payload corruptions injected so far by this instance.
+    pub fn corruptions(&self) -> u64 {
+        self.corruptions
     }
 
     pub fn sim(&self) -> Option<Sim> {
@@ -377,9 +426,41 @@ mod tests {
             "err:read:p0.5:forever",
             "slow:read:100:transient",
             "err:read:p0.5:transient:x",
+            "corrupt:flush:p0.5",
+            "corrupt:index:p0.5",
+            "corrupt:read:0.5",
+            "corrupt:read:p2.0",
+            "corrupt:read:p0.5:transient",
         ] {
             assert!(FaultPlan::parse(bad).is_err(), "`{bad}` should not parse");
         }
+    }
+
+    #[test]
+    fn corrupt_clause_parses_draws_and_round_trips() {
+        let plan = FaultPlan::parse("seed=5,corrupt:read:p0.5,corrupt:write:p1").unwrap();
+        assert_eq!(plan.rules[0], (FaultClass::Read, FaultAction::Corrupt { prob: 0.5 }));
+        assert_eq!(plan.rules[1], (FaultClass::Write, FaultAction::Corrupt { prob: 1.0 }));
+        assert_eq!(plan.describe(), "corrupt:read:p0.5,corrupt:write:p1");
+        // p1.0: every op of the class draws a flip position; the op
+        // still Proceeds — bit rot is silent
+        let state = plan.build_state(None);
+        let mut s = state.borrow_mut();
+        for _ in 0..8 {
+            assert!(matches!(
+                s.on_op(FaultClass::Write, 64),
+                FaultDecision::Proceed { corrupt: Some(_), .. }
+            ));
+        }
+        // flush is untouched by corrupt rules
+        assert!(matches!(
+            s.on_op(FaultClass::Flush, 0),
+            FaultDecision::Proceed { corrupt: None, .. }
+        ));
+        // the draw only counts once the wrapper actually flips a byte
+        assert_eq!(s.corruptions(), 0);
+        s.note_corruption();
+        assert_eq!(s.corruptions(), 1);
     }
 
     #[test]
@@ -472,11 +553,11 @@ mod tests {
         let slow = plan.build_state(None);
         assert!(matches!(
             healthy.borrow_mut().on_op(FaultClass::Read, 0),
-            FaultDecision::Proceed { delay: None }
+            FaultDecision::Proceed { delay: None, .. }
         ));
         assert!(matches!(
             slow.borrow_mut().on_op(FaultClass::Read, 0),
-            FaultDecision::Proceed { delay: Some(d) } if d == SimTime::micros(2000)
+            FaultDecision::Proceed { delay: Some(d), .. } if d == SimTime::micros(2000)
         ));
         // bad instance number rejected
         assert!(FaultPlan::parse("slow:read:10,only=x").is_err());

@@ -15,6 +15,15 @@ use crate::util::content::Bytes;
 
 use super::plan::{FaultClass, FaultDecision, FaultState};
 
+/// One gated operation's fate when it is allowed to run.
+enum Gated {
+    Clean,
+    /// write class only: persist `keep` bytes, then report failure
+    Torn { keep: u64 },
+    /// silent bit rot: flip the payload byte at `draw % len`
+    Corrupt { draw: u64 },
+}
+
 /// A fault-injecting Store wrapper. All state (op counters, RNG, the
 /// fail-stop flag) lives in the shared [`FaultState`], so sessions
 /// minted from this store inherit their parent's fate: a fail-stopped
@@ -29,18 +38,37 @@ impl FaultStore {
         FaultStore { inner, state }
     }
 
-    async fn gate(&self, class: FaultClass, len: u64) -> Result<Option<u64>, FdbError> {
+    async fn gate(&self, class: FaultClass, len: u64) -> Result<Gated, FdbError> {
         let decision = self.state.borrow_mut().on_op(class, len);
         match decision {
-            FaultDecision::Proceed { delay } => {
+            FaultDecision::Proceed { delay, corrupt } => {
                 if let (Some(d), Some(sim)) = (delay, self.state.borrow().sim()) {
                     sim.sleep(d).await;
                 }
-                Ok(None)
+                Ok(match corrupt {
+                    Some(draw) => Gated::Corrupt { draw },
+                    None => Gated::Clean,
+                })
             }
             FaultDecision::Fail(e) => Err(e),
-            FaultDecision::TornWrite { keep } => Ok(Some(keep)),
+            FaultDecision::TornWrite { keep } => Ok(Gated::Torn { keep }),
         }
+    }
+
+    /// Flip one byte of `data` at `draw % len` — the planted bit rot.
+    /// Empty payloads pass through (nothing to flip, nothing counted).
+    fn flip_byte(&self, data: Bytes, draw: u64) -> Bytes {
+        let len = data.len();
+        if len == 0 {
+            return data;
+        }
+        let idx = draw % len;
+        let rotten = data.slice(idx, 1).to_vec()[0] ^ 0xFF;
+        let mut out = data.slice(0, idx);
+        out.append(Bytes::real(vec![rotten]));
+        out.append(data.slice(idx + 1, len - idx - 1));
+        self.state.borrow_mut().note_corruption();
+        out
     }
 }
 
@@ -58,8 +86,16 @@ impl Store for FaultStore {
     ) -> LocalBoxFuture<'a, Result<FieldLocation, FdbError>> {
         Box::pin(async move {
             match self.gate(FaultClass::Write, data.len()).await? {
-                None => self.inner.archive(ds, colloc, id, data).await,
-                Some(keep) => {
+                Gated::Clean => self.inner.archive(ds, colloc, id, data).await,
+                Gated::Corrupt { draw } => {
+                    // bit rot on the write path: the rotten payload
+                    // persists and the op reports success — only the
+                    // archive-time checksum carried in the catalogue
+                    // can expose it later
+                    let rotten = self.flip_byte(data, draw);
+                    self.inner.archive(ds, colloc, id, rotten).await
+                }
+                Gated::Torn { keep } => {
                     // torn write: a prefix of the payload reaches the
                     // inner store, then the operation reports failure —
                     // the caller must treat the field as not archived
@@ -86,8 +122,13 @@ impl Store for FaultStore {
         handle: &'a DataHandle,
     ) -> LocalBoxFuture<'a, Result<Bytes, FdbError>> {
         Box::pin(async move {
-            self.gate(FaultClass::Read, 0).await?;
-            self.inner.read(handle).await
+            match self.gate(FaultClass::Read, 0).await? {
+                Gated::Corrupt { draw } => {
+                    let buf = self.inner.read(handle).await?;
+                    Ok(self.flip_byte(buf, draw))
+                }
+                _ => self.inner.read(handle).await,
+            }
         })
     }
 
@@ -101,11 +142,59 @@ impl Store for FaultStore {
             // at the affected range
             let mut out = Vec::with_capacity(handles.len());
             for handle in handles {
-                self.gate(FaultClass::Read, 0).await?;
-                out.push(self.inner.read(handle).await?);
+                let gated = self.gate(FaultClass::Read, 0).await?;
+                let buf = self.inner.read(handle).await?;
+                out.push(match gated {
+                    Gated::Corrupt { draw } => self.flip_byte(buf, draw),
+                    _ => buf,
+                });
             }
             Ok(out)
         })
+    }
+
+    // Verified reads stay on the trait defaults on purpose: they route
+    // through the gated read/read_ranges above, so verification sits
+    // ABOVE the injected bit rot and catches it. The scrub/repair
+    // plumbing below forwards to the inner store — repair is the
+    // harness's convergence path and must actually reach the bytes.
+
+    fn repair<'a>(
+        &'a mut self,
+        handle: &'a DataHandle,
+        data: Bytes,
+    ) -> LocalBoxFuture<'a, Result<bool, FdbError>> {
+        self.inner.repair(handle, data)
+    }
+
+    /// Scrub probes the bytes *on disk* (the inner store), not the
+    /// gated read path: `corrupt:read` rot is transient wire damage —
+    /// it must trip verified reads, not show up as disk damage — while
+    /// `corrupt:write` rot persisted through archive and the inner
+    /// probe finds it.
+    fn scrub_field<'a>(
+        &'a mut self,
+        handle: &'a DataHandle,
+        expect_len: u64,
+        ck: Option<u64>,
+        do_repair: bool,
+    ) -> LocalBoxFuture<'a, Result<crate::fdb::scrub::ScrubOutcome, FdbError>> {
+        self.inner.scrub_field(handle, expect_len, ck, do_repair)
+    }
+
+    fn scrub_inventory<'a>(
+        &'a mut self,
+        ds: &'a Key,
+    ) -> LocalBoxFuture<'a, Option<Vec<(String, u64)>>> {
+        self.inner.scrub_inventory(ds)
+    }
+
+    fn quarantine_object<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        container: &'a str,
+    ) -> LocalBoxFuture<'a, Result<bool, FdbError>> {
+        self.inner.quarantine_object(ds, container)
     }
 
     fn direct_retrieve_enabled(&self) -> bool {
@@ -212,6 +301,48 @@ mod tests {
         // the whole batch, never a short result
         let err = block_on(s.read_ranges(&handles)).unwrap_err();
         assert!(matches!(err, FdbError::Backend { backend: "fault", .. }));
+    }
+
+    #[test]
+    fn read_corruption_flips_one_byte_and_counts() {
+        let plan =
+            FaultPlan::new(11).with_rule(FaultClass::Read, FaultAction::Corrupt { prob: 1.0 });
+        let state = plan.build_state(None);
+        let mut s = FaultStore::new(Box::new(NullStore), state.clone());
+        let h = DataHandle::Null { length: 64 };
+        let clean = block_on(NullStore.read(&h)).unwrap();
+        let rotten = block_on(s.read(&h)).unwrap();
+        // same length, exactly one differing byte, checksum broken
+        assert_eq!(rotten.len(), 64);
+        let (a, b) = (clean.to_vec(), rotten.to_vec());
+        assert_eq!(a.iter().zip(&b).filter(|(x, y)| x != y).count(), 1);
+        assert_ne!(clean.content_checksum(), rotten.content_checksum());
+        assert_eq!(state.borrow().corruptions(), 1);
+        // the verified read path catches what the plain read cannot
+        let checks = [crate::fdb::scrub::RangeCheck::whole(64, clean.content_checksum())];
+        let err = block_on(s.read_verified(&h, &checks)).unwrap_err();
+        assert!(matches!(err, FdbError::Corrupt { .. }), "got {err}");
+    }
+
+    #[test]
+    fn write_corruption_is_silent_and_scrub_probes_beneath_read_rot() {
+        // corrupt:write:p1 — the archive succeeds (silent rot)
+        let plan =
+            FaultPlan::new(11).with_rule(FaultClass::Write, FaultAction::Corrupt { prob: 1.0 });
+        let state = plan.build_state(None);
+        let mut s = FaultStore::new(Box::new(NullStore), state.clone());
+        assert!(archive_one(&mut s, 32).is_ok());
+        assert_eq!(state.borrow().corruptions(), 1);
+        // corrupt:read rot is wire damage: scrub_field forwards to the
+        // inner store and must see the on-disk bytes as healthy
+        let plan =
+            FaultPlan::new(11).with_rule(FaultClass::Read, FaultAction::Corrupt { prob: 1.0 });
+        let mut s = FaultStore::new(Box::new(NullStore), plan.build_state(None));
+        let h = DataHandle::Null { length: 64 };
+        let disk = block_on(NullStore.read(&h)).unwrap();
+        let outcome =
+            block_on(s.scrub_field(&h, 64, Some(disk.content_checksum()), false)).unwrap();
+        assert!(outcome.healthy(), "scrub saw wire rot as disk damage: {outcome:?}");
     }
 
     #[test]

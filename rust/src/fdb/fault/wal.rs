@@ -16,7 +16,14 @@
 //! payload = [tag u8][seq u64][tag-specific fields]
 //! tag 0 = Intent { colloc str, elem str, uri str, offset u64, length u64 }
 //! tag 1 = Commit {}          (seq is the commit watermark)
+//! tag 2 = Intent + content checksum (tag-0 fields then ck u64)
 //! ```
+//!
+//! Tag 2 exists because [`Dec`] treats truncation as `None` — a trailing
+//! optional field on tag 0 would be indistinguishable from a short
+//! record, so checksummed intents get their own tag. Logs written by
+//! older code (tag-0 only) parse unchanged; the recovered entries are
+//! simply unverified.
 //!
 //! `crc` is FNV-1a over the payload. [`parse_stream`] accepts the
 //! longest valid prefix and reports how many torn/corrupt tail bytes it
@@ -55,6 +62,10 @@ pub enum WalRecord {
         uri: String,
         offset: u64,
         length: u64,
+        /// content checksum of the field payload (tag-2 records); `None`
+        /// for legacy tag-0 intents — recovery then gates on data-file
+        /// size alone
+        ck: Option<u64>,
     },
     /// Commit watermark, appended after a successful catalogue flush:
     /// every intent with `seq < seq` has reached a persisted partial
@@ -79,8 +90,13 @@ impl WalRecord {
                 uri,
                 offset,
                 length,
+                ck,
             } => {
-                e.u8(0).u64(*seq).str(colloc).str(elem).str(uri).u64(*offset).u64(*length);
+                let tag = if ck.is_some() { 2 } else { 0 };
+                e.u8(tag).u64(*seq).str(colloc).str(elem).str(uri).u64(*offset).u64(*length);
+                if let Some(ck) = ck {
+                    e.u64(*ck);
+                }
             }
             WalRecord::Commit { seq } => {
                 e.u8(1).u64(*seq);
@@ -97,13 +113,14 @@ impl WalRecord {
     fn decode(payload: &[u8]) -> Option<WalRecord> {
         let mut d = Dec::new(payload);
         match d.u8()? {
-            0 => Some(WalRecord::Intent {
+            tag @ (0 | 2) => Some(WalRecord::Intent {
                 seq: d.u64()?,
                 colloc: d.str()?,
                 elem: d.str()?,
                 uri: d.str()?,
                 offset: d.u64()?,
                 length: d.u64()?,
+                ck: if tag == 2 { Some(d.u64()?) } else { None },
             }),
             1 => Some(WalRecord::Commit { seq: d.u64()? }),
             _ => None,
@@ -168,6 +185,10 @@ pub struct RecoveryStats {
     /// file's persisted size) — skipped, the field is lost as it would
     /// be on a real machine
     pub data_missing: usize,
+    /// intents whose persisted data bytes fail the logged content
+    /// checksum (bit rot between the WAL append and recovery) — skipped,
+    /// a corrupt replay target must never be indexed
+    pub data_corrupt: usize,
     /// WAL files processed
     pub wal_files: usize,
     /// torn/corrupt tail bytes dropped across those files
@@ -179,6 +200,7 @@ impl RecoveryStats {
         self.replayed += other.replayed;
         self.committed += other.committed;
         self.data_missing += other.data_missing;
+        self.data_corrupt += other.data_corrupt;
         self.wal_files += other.wal_files;
         self.torn_bytes += other.torn_bytes;
     }
@@ -196,7 +218,29 @@ mod tests {
             uri: "posix:///fdb/ds/x.data".into(),
             offset: seq * 128,
             length: 128,
+            ck: None,
         }
+    }
+
+    #[test]
+    fn checksummed_intent_roundtrips_as_tag2() {
+        let rec = WalRecord::Intent {
+            seq: 7,
+            colloc: "levtype=sfc".into(),
+            elem: "step=7".into(),
+            uri: "posix:///fdb/ds/x.data".into(),
+            offset: 896,
+            length: 128,
+            ck: Some(0xfeed_f00d_dead_beef),
+        };
+        let bytes = rec.encode();
+        // tag byte sits right after the 12-byte frame header
+        assert_eq!(bytes[12], 2);
+        let (parsed, torn) = parse_stream(&bytes);
+        assert_eq!(parsed, vec![rec]);
+        assert_eq!(torn, 0);
+        // legacy tag-0 intents still carry tag 0 on the wire
+        assert_eq!(intent(0).encode()[12], 0);
     }
 
     #[test]

@@ -30,6 +30,7 @@ use crate::fdb::location::FieldLocation;
 use crate::fdb::plan::{PlanStats, ReadPlan};
 use crate::fdb::request::Request;
 use crate::fdb::schema::Schema;
+use crate::fdb::scrub::{FsckReport, RangeCheck};
 use crate::fdb::telemetry::{is_injected_fault, EngineMetrics, MetricsRegistry};
 use crate::sim::exec::Sim;
 use crate::sim::futures::{boxed, join_all};
@@ -188,6 +189,25 @@ impl Fdb {
         (self.store.name(), self.catalogue.name())
     }
 
+    /// The whole-field check set of a single-field read: one
+    /// [`RangeCheck`] when the location carries a checksum, empty (no
+    /// verification) for legacy entries.
+    fn whole_checks(loc: &FieldLocation) -> Vec<RangeCheck> {
+        loc.checksum()
+            .map(|ck| vec![RangeCheck::whole(loc.length(), ck)])
+            .unwrap_or_default()
+    }
+
+    /// Count a surfaced integrity failure on the attached registry.
+    /// Surfaced means the caller sees it: with replication the verified
+    /// read paths repair from the next healthy copy instead, and this
+    /// counter stays zero.
+    fn note_corrupt(&self, e: &super::FdbError) {
+        if let (Some(reg), super::FdbError::Corrupt { .. }) = (&self.registry, e) {
+            reg.counter("integrity.corrupt").inc();
+        }
+    }
+
     /// Fill the engine's store-session pool up to the configured depth.
     /// Returns whether the engine's fan-out paths can run; `false`
     /// (depth 1, or a backend without session support) keeps callers on
@@ -233,11 +253,15 @@ impl Fdb {
         data: impl Into<Bytes>,
     ) -> Result<(), super::FdbError> {
         let data: Bytes = data.into();
+        // the end-to-end integrity envelope: checksum the payload ONCE
+        // here, before any store/wrapper touches it, and carry it in the
+        // location → catalogue entry → every verified read
+        let ck = data.content_checksum();
         let (ds, colloc, elem) = self.schema.split(id)?;
         let t0 = self.sim.now();
         let loc = self.store.archive(&ds, &colloc, id, data).await;
         self.account(OpClass::DataWrite, t0);
-        let loc = loc?;
+        let loc = loc?.with_checksum(ck);
         let t1 = self.sim.now();
         let indexed = self.catalogue.archive(&ds, &colloc, &elem, id, &loc).await;
         self.account(OpClass::IndexWrite, t1);
@@ -273,19 +297,23 @@ impl Fdb {
         }
         let indexed = if self.ensure_sessions() {
             let (ids, datas): (Vec<Key>, Vec<Bytes>) = items.into_iter().unzip();
+            let cks: Vec<u64> = datas.iter().map(Bytes::content_checksum).collect();
             let locs = self.engine.archive_batch(&ids, datas, &split).await?;
             ids.into_iter()
                 .zip(split)
-                .zip(locs)
-                .map(|((id, (ds, colloc, elem)), loc)| (id, ds, colloc, elem, loc))
+                .zip(locs.into_iter().zip(cks))
+                .map(|((id, (ds, colloc, elem)), (loc, ck))| {
+                    (id, ds, colloc, elem, loc.with_checksum(ck))
+                })
                 .collect()
         } else {
             let t0 = self.sim.now();
             let mut indexed: Vec<Indexed> = Vec::with_capacity(items.len());
             let mut failed = None;
             for ((id, data), (ds, colloc, elem)) in items.into_iter().zip(split) {
+                let ck = data.content_checksum();
                 match self.store.archive(&ds, &colloc, &id, data).await {
-                    Ok(loc) => indexed.push((id, ds, colloc, elem, loc)),
+                    Ok(loc) => indexed.push((id, ds, colloc, elem, loc.with_checksum(ck))),
                     Err(e) => {
                         failed = Some(e);
                         break;
@@ -361,6 +389,7 @@ impl Fdb {
             reg.counter("recovery.replayed").add(s.replayed as u64);
             reg.counter("recovery.committed").add(s.committed as u64);
             reg.counter("recovery.data_missing").add(s.data_missing as u64);
+            reg.counter("recovery.data_corrupt").add(s.data_corrupt as u64);
             reg.counter("recovery.wal_files").add(s.wal_files as u64);
             reg.counter("recovery.torn_bytes").add(s.torn_bytes as u64);
         }
@@ -421,10 +450,17 @@ impl Fdb {
                 self.account(OpClass::IndexRead, t0);
                 if let Some(loc) = loc {
                     let h = DataHandle::from_location(&loc);
+                    let checks = Self::whole_checks(&loc);
                     let t1 = self.sim.now();
-                    let bytes = self.store.read(&h).await;
+                    let bytes = self.store.read_verified(&h, &checks).await;
                     self.account(OpClass::DataRead, t1);
-                    out.push((id.clone(), bytes?));
+                    match bytes {
+                        Ok(b) => out.push((id.clone(), b)),
+                        Err(e) => {
+                            self.note_corrupt(&e);
+                            return Err(e);
+                        }
+                    }
                 }
             }
             return Ok(out);
@@ -443,7 +479,7 @@ impl Fdb {
                 .retrieve_batch(self.catalogue.as_mut(), ids, &split)
                 .await;
         }
-        let pipe: Pipe<(Key, DataHandle)> = Pipe::new();
+        let pipe: Pipe<(Key, DataHandle, Vec<RangeCheck>)> = Pipe::new();
         let out: RefCell<Vec<(Key, Bytes)>> = RefCell::new(Vec::new());
         let failed: Cell<Option<super::FdbError>> = Cell::new(None);
         let lock_total: Cell<SimTime> = Cell::new(SimTime::ZERO);
@@ -479,15 +515,16 @@ impl Fdb {
                     }
                 }
                 if let Some(loc) = loc {
-                    pipe.push((id.clone(), DataHandle::from_location(&loc)));
+                    let checks = Self::whole_checks(&loc);
+                    pipe.push((id.clone(), DataHandle::from_location(&loc), checks));
                 }
             }
             pipe.close();
         };
         let reads = async {
-            while let Some((id, handle)) = pipe.pop().await {
+            while let Some((id, handle, checks)) = pipe.pop().await {
                 let t0 = sim.now();
-                match store.read(&handle).await {
+                match store.read_verified(&handle, &checks).await {
                     Ok(bytes) => {
                         let lock = store.take_lock_time();
                         lock_total.set(lock_total.get() + lock);
@@ -514,6 +551,11 @@ impl Fdb {
                             } else {
                                 m.probe(OpClass::DataRead).err.inc();
                             }
+                        }
+                        if let (Some(reg), super::FdbError::Corrupt { .. }) =
+                            (registry.as_ref(), &e)
+                        {
+                            reg.counter("integrity.corrupt").inc();
                         }
                         failed.set(Some(e));
                         break;
@@ -597,10 +639,19 @@ impl Fdb {
             if !plan.reads.is_empty() {
                 let handles: Vec<DataHandle> =
                     plan.reads.iter().map(|pr| pr.handle.clone()).collect();
+                let checks: Vec<Vec<RangeCheck>> =
+                    plan.reads.iter().map(|pr| pr.checks()).collect();
                 let t0 = self.sim.now();
-                let r = self.store.read_ranges(&handles).await;
+                let r = self.store.read_ranges_verified(&handles, &checks).await;
                 self.account(OpClass::DataRead, t0);
-                for (pr, buf) in plan.reads.iter().zip(r?) {
+                let r = match r {
+                    Ok(r) => r,
+                    Err(e) => {
+                        self.note_corrupt(&e);
+                        return Err(e);
+                    }
+                };
+                for (pr, buf) in plan.reads.iter().zip(r) {
                     for &(idx, rel, len) in &pr.fields {
                         out[idx] = Some(buf.slice(rel, len));
                     }
@@ -700,6 +751,104 @@ impl Fdb {
         let out = self.store.read(handle).await;
         self.account(OpClass::DataRead, t0);
         out
+    }
+
+    /// Integrity-scenario hook (`fdbctl fsck` scenarios, scrub tests):
+    /// direct mutable access to the backend pair, for seeding the
+    /// damage classes no healthy API path produces — quarantining a
+    /// live container behind the catalogue's back (ghost entries) or
+    /// forgetting entries while their container stays on disk
+    /// (orphaned objects).
+    pub fn backend_mut(&mut self) -> (&mut dyn Store, &mut dyn Catalogue) {
+        (self.store.as_mut(), self.catalogue.as_mut())
+    }
+
+    /// Online scrub (`fdbctl fsck`): cross-check the catalogue against
+    /// the store in both directions.
+    ///
+    /// Catalogue → store: every listed entry's physical copies are
+    /// probed for existence, length, and (when the entry carries one)
+    /// content checksum — an entry with no readable copy is a *ghost*,
+    /// one with damaged copies is *corrupt*. Store → catalogue: the
+    /// store's container inventory (where the backend can enumerate,
+    /// see [`Store::scrub_inventory`]) is matched against the listed
+    /// locations — unreferenced containers are *orphans*.
+    ///
+    /// With `repair`: damaged copies are rewritten from a verified
+    /// replica (inside [`Store::scrub_field`]), ghost entries are
+    /// dropped from the catalogue ([`Catalogue::forget`]), and orphaned
+    /// objects are quarantined out of the data path. A converged repair
+    /// pass ([`FsckReport::converged`]) leaves the next fsck clean.
+    pub async fn fsck(
+        &mut self,
+        ds: &Key,
+        repair: bool,
+    ) -> Result<FsckReport, super::FdbError> {
+        let mut report = FsckReport::default();
+        let entries = self.list(ds, &Request::default()).await;
+        let mut referenced: std::collections::BTreeSet<String> =
+            std::collections::BTreeSet::new();
+        let t0 = self.sim.now();
+        let mut scrubbed: Result<(), super::FdbError> = Ok(());
+        for (id, loc) in &entries {
+            report.entries += 1;
+            referenced.insert(loc.container_uri());
+            let ck = loc.checksum();
+            if ck.is_some() {
+                report.verified += 1;
+            }
+            let handle = DataHandle::from_location(loc);
+            let outcome = match self.store.scrub_field(&handle, loc.length(), ck, repair).await
+            {
+                Ok(o) => o,
+                Err(e) => {
+                    scrubbed = Err(e);
+                    break;
+                }
+            };
+            report.absorb(&outcome);
+            let is_ghost = outcome.copies > 0 && outcome.missing == outcome.copies;
+            if is_ghost && repair {
+                let (_, colloc, elem) = self.schema.split(id)?;
+                if self.catalogue.forget(ds, &colloc, &elem, id).await? {
+                    report.ghosts_dropped += 1;
+                }
+            }
+        }
+        self.account(OpClass::DataRead, t0);
+        scrubbed?;
+        // store → catalogue: anything on disk no entry points at
+        let t1 = self.sim.now();
+        let inventory = self.store.scrub_inventory(ds).await;
+        if let Some(inventory) = inventory {
+            for (container, _len) in inventory {
+                if referenced.contains(&container) {
+                    continue;
+                }
+                report.orphans += 1;
+                if repair && self.store.quarantine_object(ds, &container).await? {
+                    report.orphans_quarantined += 1;
+                }
+            }
+        }
+        self.account(OpClass::DataRead, t1);
+        if repair && report.ghosts_dropped > 0 {
+            // persist the tombstones forget() appended and drop reader
+            // caches so the masked entries disappear from this client
+            let t2 = self.sim.now();
+            let flushed = self.catalogue.flush().await;
+            self.account(OpClass::Flush, t2);
+            flushed?;
+            self.invalidate_preload(ds);
+        }
+        if let Some(reg) = &self.registry {
+            reg.counter("integrity.fsck_runs").inc();
+            reg.counter("integrity.fsck_ghosts").add(report.ghosts);
+            reg.counter("integrity.fsck_orphans").add(report.orphans);
+            reg.counter("integrity.fsck_corrupt").add(report.corrupt);
+            reg.counter("integrity.fsck_repaired").add(report.repaired);
+        }
+        Ok(report)
     }
 
     /// Remove a dataset wholesale (fdb-wipe). Returns whether anything

@@ -5,18 +5,28 @@
 use crate::daos::Oid;
 
 /// Where a field's bytes live, per backend.
+///
+/// Real locations optionally carry a **content checksum** (FNV-1a of the
+/// field payload, [`crate::util::content::Bytes::content_checksum`])
+/// computed at archive time. The checksum rides the URI as a `ck=` query
+/// parameter, so legacy entries without one parse fine (absent checksum =
+/// unverified legacy field, never an error). The `Null` sink never
+/// carries one — its reads regenerate synthetic bytes, not the archived
+/// payload.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum FieldLocation {
     PosixFile {
         path: String,
         offset: u64,
         length: u64,
+        checksum: Option<u64>,
     },
     DaosArray {
         pool: String,
         cont: String,
         oid: Oid,
         length: u64,
+        checksum: Option<u64>,
     },
     RadosObj {
         pool: String,
@@ -24,11 +34,13 @@ pub enum FieldLocation {
         name: String,
         offset: u64,
         length: u64,
+        checksum: Option<u64>,
     },
     S3Obj {
         bucket: String,
         key: String,
         length: u64,
+        checksum: Option<u64>,
     },
     /// zero-cost sink used by the "dummy" client-overhead experiments
     Null { length: u64 },
@@ -45,22 +57,69 @@ impl FieldLocation {
         }
     }
 
+    /// The content checksum recorded at archive time, if any.
+    pub fn checksum(&self) -> Option<u64> {
+        match self {
+            FieldLocation::PosixFile { checksum, .. }
+            | FieldLocation::DaosArray { checksum, .. }
+            | FieldLocation::RadosObj { checksum, .. }
+            | FieldLocation::S3Obj { checksum, .. } => *checksum,
+            FieldLocation::Null { .. } => None,
+        }
+    }
+
+    /// Attach a content checksum. A no-op for `Null` locations — the
+    /// sink regenerates bytes on read, so a payload checksum would only
+    /// report false corruption.
+    pub fn with_checksum(mut self, ck: u64) -> FieldLocation {
+        match &mut self {
+            FieldLocation::PosixFile { checksum, .. }
+            | FieldLocation::DaosArray { checksum, .. }
+            | FieldLocation::RadosObj { checksum, .. }
+            | FieldLocation::S3Obj { checksum, .. } => *checksum = Some(ck),
+            FieldLocation::Null { .. } => {}
+        }
+        self
+    }
+
+    /// The physical container this location lives in, without offset,
+    /// length, or checksum — the identity scrub uses to match catalogue
+    /// references against a store's object inventory.
+    pub fn container_uri(&self) -> String {
+        match self {
+            FieldLocation::PosixFile { path, .. } => format!("posix://{path}"),
+            FieldLocation::DaosArray {
+                pool, cont, oid, ..
+            } => format!("daos://{pool}/{cont}?oid={}.{}", oid.hi, oid.lo),
+            FieldLocation::RadosObj { pool, ns, name, .. } => {
+                format!("rados://{pool}/{ns}/{name}")
+            }
+            FieldLocation::S3Obj { bucket, key, .. } => format!("s3://{bucket}/{key}"),
+            FieldLocation::Null { .. } => "null://".to_string(),
+        }
+    }
+
     /// Serialize as a URI string.
     pub fn to_uri(&self) -> String {
+        let ck = |c: &Option<u64>| c.map(|v| format!("&ck={v}")).unwrap_or_default();
         match self {
             FieldLocation::PosixFile {
                 path,
                 offset,
                 length,
-            } => format!("posix://{path}?off={offset}&len={length}"),
+                checksum,
+            } => format!("posix://{path}?off={offset}&len={length}{}", ck(checksum)),
             FieldLocation::DaosArray {
                 pool,
                 cont,
                 oid,
                 length,
+                checksum,
             } => format!(
-                "daos://{pool}/{cont}?oid={}.{}&len={length}",
-                oid.hi, oid.lo
+                "daos://{pool}/{cont}?oid={}.{}&len={length}{}",
+                oid.hi,
+                oid.lo,
+                ck(checksum)
             ),
             FieldLocation::RadosObj {
                 pool,
@@ -68,28 +127,37 @@ impl FieldLocation {
                 name,
                 offset,
                 length,
-            } => format!("rados://{pool}/{ns}/{name}?off={offset}&len={length}"),
+                checksum,
+            } => format!(
+                "rados://{pool}/{ns}/{name}?off={offset}&len={length}{}",
+                ck(checksum)
+            ),
             FieldLocation::S3Obj {
                 bucket,
                 key,
                 length,
-            } => format!("s3://{bucket}/{key}?len={length}"),
+                checksum,
+            } => format!("s3://{bucket}/{key}?len={length}{}", ck(checksum)),
             FieldLocation::Null { length } => format!("null://?len={length}"),
         }
     }
 
-    /// Parse a URI string produced by [`FieldLocation::to_uri`].
+    /// Parse a URI string produced by [`FieldLocation::to_uri`]. Unknown
+    /// query keys are ignored, so URIs written by both older (no `ck=`)
+    /// and newer code parse.
     pub fn parse_uri(uri: &str) -> Option<FieldLocation> {
         let (scheme, rest) = uri.split_once("://")?;
         let (path, query) = rest.split_once('?').unwrap_or((rest, ""));
         let mut off = 0u64;
         let mut len = 0u64;
         let mut oid = (0u64, 0u64);
+        let mut ck = None;
         for kv in query.split('&') {
             if let Some((k, v)) = kv.split_once('=') {
                 match k {
                     "off" => off = v.parse().ok()?,
                     "len" => len = v.parse().ok()?,
+                    "ck" => ck = Some(v.parse().ok()?),
                     "oid" => {
                         let (hi, lo) = v.split_once('.')?;
                         oid = (hi.parse().ok()?, lo.parse().ok()?);
@@ -103,6 +171,7 @@ impl FieldLocation {
                 path: path.to_string(),
                 offset: off,
                 length: len,
+                checksum: ck,
             }),
             "daos" => {
                 let (pool, cont) = path.split_once('/')?;
@@ -111,6 +180,7 @@ impl FieldLocation {
                     cont: cont.to_string(),
                     oid: Oid::new(oid.0, oid.1),
                     length: len,
+                    checksum: ck,
                 })
             }
             "rados" => {
@@ -121,6 +191,7 @@ impl FieldLocation {
                     name: parts.next()?.to_string(),
                     offset: off,
                     length: len,
+                    checksum: ck,
                 })
             }
             "s3" => {
@@ -129,6 +200,7 @@ impl FieldLocation {
                     bucket: bucket.to_string(),
                     key: key.to_string(),
                     length: len,
+                    checksum: ck,
                 })
             }
             "null" => Some(FieldLocation::Null { length: len }),
@@ -148,12 +220,14 @@ mod tests {
                 path: "/ds/data.0".into(),
                 offset: 4096,
                 length: 1 << 20,
+                checksum: None,
             },
             FieldLocation::DaosArray {
                 pool: "fdb".into(),
                 cont: "ds1".into(),
                 oid: Oid::new(1, 42),
                 length: 1 << 20,
+                checksum: Some(0xdead_beef),
             },
             FieldLocation::RadosObj {
                 pool: "fdb".into(),
@@ -161,11 +235,13 @@ mod tests {
                 name: "abc123".into(),
                 offset: 0,
                 length: 512,
+                checksum: Some(u64::MAX),
             },
             FieldLocation::S3Obj {
                 bucket: "fdb-ds1".into(),
                 key: "h-p-1".into(),
                 length: 7,
+                checksum: None,
             },
             FieldLocation::Null { length: 9 },
         ];
@@ -174,7 +250,47 @@ mod tests {
             let back = FieldLocation::parse_uri(&uri).unwrap();
             assert_eq!(loc, back, "uri {uri}");
             assert_eq!(loc.length(), back.length());
+            assert_eq!(loc.checksum(), back.checksum());
         }
+    }
+
+    #[test]
+    fn legacy_uri_without_checksum_parses_as_unverified() {
+        // a pre-integrity catalogue entry: no ck= parameter
+        let loc = FieldLocation::parse_uri("posix:///ds/data.0?off=4096&len=1048576").unwrap();
+        assert_eq!(loc.checksum(), None);
+        assert_eq!(loc.length(), 1 << 20);
+    }
+
+    #[test]
+    fn with_checksum_attaches_except_on_null() {
+        let loc = FieldLocation::PosixFile {
+            path: "/f".into(),
+            offset: 0,
+            length: 8,
+            checksum: None,
+        };
+        assert_eq!(loc.with_checksum(7).checksum(), Some(7));
+        let null = FieldLocation::Null { length: 8 };
+        assert_eq!(null.with_checksum(7).checksum(), None);
+    }
+
+    #[test]
+    fn container_uri_strips_range_and_checksum() {
+        let a = FieldLocation::PosixFile {
+            path: "/ds/data.0".into(),
+            offset: 0,
+            length: 10,
+            checksum: Some(1),
+        };
+        let b = FieldLocation::PosixFile {
+            path: "/ds/data.0".into(),
+            offset: 4096,
+            length: 99,
+            checksum: None,
+        };
+        assert_eq!(a.container_uri(), b.container_uri());
+        assert_eq!(a.container_uri(), "posix:///ds/data.0");
     }
 
     #[test]

@@ -54,6 +54,7 @@ pub mod location;
 pub mod plan;
 pub mod request;
 pub mod schema;
+pub mod scrub;
 pub mod telemetry;
 pub mod wire;
 
@@ -93,6 +94,7 @@ pub use location::FieldLocation;
 pub use plan::{PlanStats, ReadPlan};
 pub use request::Request;
 pub use schema::Schema;
+pub use scrub::FsckReport;
 pub use telemetry::{is_transient, HistogramSnapshot, MetricsRegistry, SlowOp};
 
 /// FDB error surface.
@@ -130,6 +132,14 @@ pub enum FdbError {
         class: &'static str,
         micros: u64,
     },
+    /// Integrity violation: stored bytes no longer match what was
+    /// archived (checksum mismatch, torn/bit-flipped index blob, ...).
+    /// Never transient — retrying the same read returns the same rotten
+    /// bytes; recovery is repair-from-replica or `fdbctl fsck --repair`.
+    Corrupt {
+        what: &'static str,
+        detail: String,
+    },
 }
 
 impl From<schema::SchemaError> for FdbError {
@@ -159,6 +169,9 @@ impl std::fmt::Display for FdbError {
             ),
             FdbError::Timeout { class, micros } => {
                 write!(f, "{class} op exceeded its {micros} us deadline")
+            }
+            FdbError::Corrupt { what, detail } => {
+                write!(f, "corrupt {what}: {detail}")
             }
         }
     }

@@ -62,6 +62,7 @@ fn classify(pos: usize, loc: &FieldLocation) -> (Container, u64, u64) {
             path,
             offset,
             length,
+            ..
         } => (
             Container::Posix { path: path.clone() },
             *offset,
@@ -73,6 +74,7 @@ fn classify(pos: usize, loc: &FieldLocation) -> (Container, u64, u64) {
             name,
             offset,
             length,
+            ..
         } => (
             Container::Rados {
                 pool: pool.clone(),
@@ -87,6 +89,7 @@ fn classify(pos: usize, loc: &FieldLocation) -> (Container, u64, u64) {
             cont,
             oid,
             length,
+            ..
         } => (
             Container::Daos {
                 pool: pool.clone(),
@@ -100,6 +103,7 @@ fn classify(pos: usize, loc: &FieldLocation) -> (Container, u64, u64) {
             bucket,
             key,
             length,
+            ..
         } => (
             Container::S3 {
                 bucket: bucket.clone(),
@@ -148,6 +152,25 @@ pub struct PlannedRead {
     /// `(input position, offset inside the merged buffer, length)` —
     /// how to slice the merged buffer back into per-field bytes
     pub fields: Vec<(usize, u64, u64)>,
+    /// the member fields' content checksums, aligned with `fields` —
+    /// what the executor turns into per-slice
+    /// [`crate::fdb::scrub::RangeCheck`]s (`None` = legacy entry,
+    /// unverified)
+    pub cks: Vec<Option<u64>>,
+}
+
+impl PlannedRead {
+    /// The verification set for this read's buffer: one range check per
+    /// checksummed member field (legacy members contribute nothing).
+    pub fn checks(&self) -> Vec<crate::fdb::scrub::RangeCheck> {
+        self.fields
+            .iter()
+            .zip(&self.cks)
+            .filter_map(|(&(_, rel, len), ck)| {
+                ck.map(|ck| crate::fdb::scrub::RangeCheck { rel, len, ck })
+            })
+            .collect()
+    }
 }
 
 /// Counters a plan reports (and [`crate::fdb::Fdb`] accumulates across
@@ -192,6 +215,7 @@ impl ReadPlan {
             pos: usize,
             off: u64,
             len: u64,
+            ck: Option<u64>,
         }
         // group by container, preserving first-seen order
         let mut groups: Vec<(Vec<Member>, FieldLocation)> = Vec::new();
@@ -202,7 +226,12 @@ impl ReadPlan {
                 groups.push((Vec::new(), loc.clone()));
                 groups.len() - 1
             });
-            groups[gi].0.push(Member { pos, off, len });
+            groups[gi].0.push(Member {
+                pos,
+                off,
+                len,
+                ck: loc.checksum(),
+            });
         }
         let mut reads = Vec::new();
         let mut read_through = 0u64;
@@ -230,9 +259,11 @@ impl ReadPlan {
                     .iter()
                     .map(|m| (m.pos, m.off - start, m.len))
                     .collect();
+                let cks: Vec<Option<u64>> = members[i..j].iter().map(|m| m.ck).collect();
                 reads.push(PlannedRead {
                     handle: ranged_handle(&proto, start, end - start),
                     fields,
+                    cks,
                 });
                 i = j;
             }
@@ -257,6 +288,8 @@ struct OpenRun {
     start: u64,
     end: u64,
     fields: Vec<(usize, u64, u64)>,
+    /// member checksums, aligned with `fields`
+    cks: Vec<Option<u64>>,
     /// first-seen order, so [`StreamPlanner::finish`] drains
     /// deterministically
     seq: u64,
@@ -306,6 +339,7 @@ impl StreamPlanner {
         PlannedRead {
             handle: ranged_handle(&run.proto, run.start, run.end - run.start),
             fields: run.fields,
+            cks: run.cks,
         }
     }
 
@@ -321,6 +355,7 @@ impl StreamPlanner {
             start: off,
             end: off + len,
             fields: vec![(pos, 0, len)],
+            cks: vec![loc.checksum()],
             seq,
         };
         let sealed = match self.open.entry(key) {
@@ -338,6 +373,7 @@ impl StreamPlanner {
                 if mergeable {
                     self.read_through += off.saturating_sub(run.end);
                     run.fields.push((pos, off - run.start, len));
+                    run.cks.push(loc.checksum());
                     run.end = new_end;
                     None
                 } else {
@@ -380,6 +416,7 @@ mod tests {
             path: path.into(),
             offset: off,
             length: len,
+            checksum: None,
         }
     }
 
@@ -473,6 +510,7 @@ mod tests {
             cont: "c".into(),
             oid: crate::daos::Oid::new(1, lo),
             length: 64,
+            checksum: None,
         };
         let p = plan(vec![daos(1), daos(2), FieldLocation::Null { length: 9 }], 1 << 20, 0);
         assert_eq!(p.reads.len(), 3, "distinct arrays and Null never merge");
@@ -563,6 +601,41 @@ mod tests {
         assert_eq!(stats.ops_in, stats.ops_out + stats.ops_merged);
         let covered: u64 = reads.iter().map(|r| r.handle.total_len()).sum();
         assert_eq!(covered, 100);
+    }
+
+    #[test]
+    fn checksums_ride_merged_reads_aligned_with_fields() {
+        let with_ck = |path: &str, off: u64, len: u64, ck: u64| FieldLocation::PosixFile {
+            path: path.into(),
+            offset: off,
+            length: len,
+            checksum: Some(ck),
+        };
+        // checksummed + legacy members merge into one read; the check
+        // set covers exactly the checksummed slices at merged-buffer
+        // offsets
+        let fields: Vec<(usize, FieldLocation)> = vec![
+            with_ck("/f", 100, 50, 0xAA),
+            posix("/f", 150, 25), // legacy, unverified
+            with_ck("/f", 175, 10, 0xBB),
+        ]
+        .into_iter()
+        .enumerate()
+        .collect();
+        let p = ReadPlan::build(&fields, 0, 0);
+        assert_eq!(p.reads.len(), 1);
+        let r = &p.reads[0];
+        assert_eq!(r.cks, vec![Some(0xAA), None, Some(0xBB)]);
+        let checks = r.checks();
+        assert_eq!(checks.len(), 2);
+        assert_eq!((checks[0].rel, checks[0].len, checks[0].ck), (0, 50, 0xAA));
+        assert_eq!((checks[1].rel, checks[1].len, checks[1].ck), (75, 10, 0xBB));
+        // the streaming planner carries the same alignment
+        let locs: Vec<FieldLocation> = fields.into_iter().map(|(_, l)| l).collect();
+        let (reads, _) = stream(&locs, 0, 0);
+        assert_eq!(reads.len(), 1);
+        assert_eq!(reads[0].cks, vec![Some(0xAA), None, Some(0xBB)]);
+        assert_eq!(reads[0].checks(), checks);
     }
 
     #[test]

@@ -20,10 +20,10 @@ use crate::lustre::{Fd, FsError, LustreClient, StripeSpec};
 
 /// One collocation's live (in-memory) indexing state for a writer.
 struct CollocState {
-    /// entries since the last flush: elem canonical → (uri_id, off, len)
-    partial: BTreeMap<String, (u32, u64, u64)>,
+    /// entries since the last flush: elem canonical → (uri_id, off, len, ck)
+    partial: BTreeMap<String, (u32, u64, u64, Option<u64>)>,
     /// all entries of this process lifetime
-    full: BTreeMap<String, (u32, u64, u64)>,
+    full: BTreeMap<String, (u32, u64, u64, Option<u64>)>,
     axes_partial: Axes,
     axes_full: Axes,
     /// URI store: uri string → id, plus the ordered table
@@ -85,6 +85,11 @@ pub struct PosixCatalogue {
     /// count from the metrics registry (`cat.<label>.wal_syncs`);
     /// standalone (registry-less) by default.
     wal_syncs: Counter,
+    /// corrupt index blobs hit on the read path (typed
+    /// [`FdbError::Corrupt`] from the blob parser): the lookup skips the
+    /// rotten blob — an older index may still resolve the entry — but
+    /// the damage is counted, never silently swallowed
+    index_corrupt: Counter,
 }
 
 impl PosixCatalogue {
@@ -101,6 +106,7 @@ impl PosixCatalogue {
             in_group: false,
             group_dirty: std::collections::HashSet::new(),
             wal_syncs: Counter::new(),
+            index_corrupt: Counter::new(),
         }
     }
 
@@ -118,6 +124,20 @@ impl PosixCatalogue {
     pub fn with_wal_counter(mut self, counter: Counter) -> PosixCatalogue {
         counter.add(self.wal_syncs.get());
         self.wal_syncs = counter;
+        self
+    }
+
+    /// Corrupt index blobs skipped on the read path so far.
+    pub fn index_corrupt_count(&self) -> u64 {
+        self.index_corrupt.get()
+    }
+
+    /// Replace the corrupt-blob counter with a registry-owned handle
+    /// (`cat.<label>.index_corrupt`), preserving any already-counted
+    /// damage.
+    pub fn with_corrupt_counter(mut self, counter: Counter) -> PosixCatalogue {
+        counter.add(self.index_corrupt.get());
+        self.index_corrupt = counter;
         self
     }
 
@@ -224,6 +244,66 @@ impl PosixCatalogue {
         elem: &Key,
         loc: &FieldLocation,
     ) -> Result<(), FdbError> {
+        // URI store: split the location into a file root + (offset, len);
+        // the content checksum rides alongside — posix entries carry it
+        // in the index entry, other backends inside their full URI
+        let (uri_root, off, len) = match loc {
+            FieldLocation::PosixFile {
+                path,
+                offset,
+                length,
+                ..
+            } => (format!("posix://{path}"), *offset, *length),
+            other => (other.to_uri(), 0, other.length()),
+        };
+        self.archive_raw(ds, colloc, elem, uri_root, off, len, loc.checksum())
+            .await
+    }
+
+    /// URI root of a tombstone entry (see [`Self::forget`]): no reader
+    /// can expand it, so newest-wins masking hides every older entry for
+    /// the identifier.
+    pub(crate) const TOMBSTONE_URI: &'static str = "tombstone://";
+
+    /// Drop an identifier from the index by archiving a **tombstone** —
+    /// an entry whose URI root expands to nothing. The retrieve/list
+    /// paths need zero changes: masking does the forgetting, and the
+    /// tombstone persists through the regular flush()/WAL machinery
+    /// (fsck ghost-drops are therefore themselves crash-safe in durable
+    /// mode).
+    pub async fn forget(
+        &mut self,
+        ds: &Key,
+        colloc: &Key,
+        elem: &Key,
+    ) -> Result<bool, FdbError> {
+        self.archive_raw(
+            ds,
+            colloc,
+            elem,
+            Self::TOMBSTONE_URI.to_string(),
+            0,
+            0,
+            None,
+        )
+        .await?;
+        Ok(true)
+    }
+
+    /// The shared indexing path behind [`Self::archive`] and
+    /// [`Self::forget`]: dataset/collocation init, the durable-mode WAL
+    /// intent, then the in-memory index mutation.
+    #[allow(clippy::too_many_arguments)]
+    async fn archive_raw(
+        &mut self,
+        ds: &Key,
+        colloc: &Key,
+        elem: &Key,
+        uri_root: String,
+        off: u64,
+        len: u64,
+        ck: Option<u64>,
+    ) -> Result<(), FdbError> {
         let client_id = self.client.id;
         let state = self.ensure_dataset(ds).await?;
         let dir = state.dir.clone();
@@ -258,15 +338,6 @@ impl PosixCatalogue {
                 },
             );
         }
-        // URI store: split the location into a file root + (offset, len)
-        let (uri_root, off, len) = match loc {
-            FieldLocation::PosixFile {
-                path,
-                offset,
-                length,
-            } => (format!("posix://{path}"), *offset, *length),
-            other => (other.to_uri(), 0, other.length()),
-        };
         let ec = elem.canonical();
         // durable mode: log the intent (fdatasync'd) BEFORE any in-memory
         // mutation, so an entry is either recoverable from the WAL or was
@@ -283,6 +354,7 @@ impl PosixCatalogue {
                 uri: uri_root.clone(),
                 offset: off,
                 length: len,
+                ck,
             }
             .encode();
             self.client
@@ -306,8 +378,8 @@ impl PosixCatalogue {
             cs.uris.push(uri_root);
             next_id
         });
-        cs.partial.insert(ec.clone(), (uri_id, off, len));
-        cs.full.insert(ec, (uri_id, off, len));
+        cs.partial.insert(ec.clone(), (uri_id, off, len, ck));
+        cs.full.insert(ec, (uri_id, off, len, ck));
         cs.axes_partial.insert_key(elem);
         cs.axes_full.insert_key(elem);
         Ok(())
@@ -428,11 +500,12 @@ impl PosixCatalogue {
                     let entries: Vec<index::IndexEntry> = cs
                         .partial
                         .iter()
-                        .map(|(elem, &(uri_id, offset, length))| index::IndexEntry {
+                        .map(|(elem, &(uri_id, offset, length, ck))| index::IndexEntry {
                             elem: elem.clone(),
                             uri_id,
                             offset,
                             length,
+                            ck,
                         })
                         .collect();
                     let blob = index::serialize(&entries);
@@ -515,11 +588,12 @@ impl PosixCatalogue {
                     let entries: Vec<index::IndexEntry> = cs
                         .full
                         .iter()
-                        .map(|(elem, &(uri_id, offset, length))| index::IndexEntry {
+                        .map(|(elem, &(uri_id, offset, length, ck))| index::IndexEntry {
                             elem: elem.clone(),
                             uri_id,
                             offset,
                             length,
+                            ck,
                         })
                         .collect();
                     let blob = index::serialize(&entries);
@@ -635,20 +709,60 @@ impl PosixCatalogue {
                     uri,
                     offset,
                     length,
+                    ck,
                     ..
                 } = rec
                 else {
                     continue;
                 };
+                let ckey = Key::parse(&colloc).unwrap_or_default();
+                let ekey = Key::parse(&elem).unwrap_or_default();
+                // a crashed fsck's ghost-drop: re-apply the tombstone
+                if uri == Self::TOMBSTONE_URI {
+                    self.archive_raw(
+                        ds,
+                        &ckey,
+                        &ekey,
+                        Self::TOMBSTONE_URI.to_string(),
+                        0,
+                        0,
+                        None,
+                    )
+                    .await?;
+                    stats.replayed += 1;
+                    continue;
+                }
                 // durability gate: only replay entries whose data the
                 // store actually persisted before the crash
                 let loc = if let Some(p) = uri.strip_prefix("posix://") {
                     match self.client.stat(p).await {
-                        Some(size) if offset + length <= size => FieldLocation::PosixFile {
-                            path: p.to_string(),
-                            offset,
-                            length,
-                        },
+                        Some(size) if offset + length <= size => {
+                            // integrity gate: when the intent carries a
+                            // content checksum, read the persisted range
+                            // back and verify it — a corrupt replay
+                            // target must never be indexed
+                            if let Some(want) = ck {
+                                let good = match self.client.open(p).await {
+                                    Ok(Some(fd)) => {
+                                        match self.client.read(&fd, offset, length).await {
+                                            Ok(bytes) => bytes.content_checksum() == want,
+                                            Err(_) => false,
+                                        }
+                                    }
+                                    _ => false,
+                                };
+                                if !good {
+                                    stats.data_corrupt += 1;
+                                    continue;
+                                }
+                            }
+                            FieldLocation::PosixFile {
+                                path: p.to_string(),
+                                offset,
+                                length,
+                                checksum: ck,
+                            }
+                        }
                         _ => {
                             stats.data_missing += 1;
                             continue;
@@ -663,9 +777,7 @@ impl PosixCatalogue {
                         }
                     }
                 };
-                let ck = Key::parse(&colloc).unwrap_or_default();
-                let ek = Key::parse(&elem).unwrap_or_default();
-                self.archive(ds, &ck, &ek, &loc).await?;
+                self.archive(ds, &ckey, &ekey, &loc).await?;
                 stats.replayed += 1;
             }
             // durable mode re-logged every replayed intent above, so the
@@ -755,23 +867,36 @@ impl PosixCatalogue {
         entries
     }
 
+    /// Unwrap a blob-parser result: a typed [`FdbError::Corrupt`] is
+    /// counted (`index_corrupt`) and mapped to `None` so the caller
+    /// skips the rotten blob — an older index may still hold the entry.
+    fn parsed<T>(&self, r: Result<T, FdbError>) -> Option<T> {
+        match r {
+            Ok(v) => Some(v),
+            Err(_) => {
+                self.index_corrupt.inc();
+                None
+            }
+        }
+    }
+
     /// Load one index blob from its file: 3 reads (prelude, header, page)
     /// for a point lookup; `2 + npages` reads for a full scan.
     async fn load_index_lookup(
         &mut self,
         r: &IndexRef,
         elem: &Key,
-    ) -> Option<(u32, u64, u64)> {
+    ) -> Option<(u32, u64, u64, Option<u64>)> {
         let fd = self.client.open(&r.index_path).await.ok()??;
         let prelude = self.client.read(&fd, r.offset, 12).await.ok()?.to_vec();
-        let (header_len, count) = index::parse_prelude(&prelude)?;
+        let (header_len, count, v2) = self.parsed(index::parse_prelude(&prelude))?;
         let hdr_bytes = self
             .client
             .read(&fd, r.offset + 12, header_len as u64)
             .await
             .ok()?
             .to_vec();
-        let header = index::parse_header(&hdr_bytes, count)?;
+        let header = self.parsed(index::parse_header(&hdr_bytes, count, v2))?;
         let ec = elem.canonical();
         let page = index::page_for(&header, &ec)?;
         let page_bytes = self
@@ -780,11 +905,11 @@ impl PosixCatalogue {
             .await
             .ok()?
             .to_vec();
-        let entries = index::parse_page(&page_bytes)?;
+        let entries = self.parsed(index::parse_page(&page_bytes, v2))?;
         entries
             .into_iter()
             .find(|e| e.elem == ec)
-            .map(|e| (e.uri_id, e.offset, e.length))
+            .map(|e| (e.uri_id, e.offset, e.length, e.ck))
     }
 
     async fn load_index_full(&mut self, r: &IndexRef) -> Vec<index::IndexEntry> {
@@ -794,7 +919,8 @@ impl PosixCatalogue {
         let Ok(prelude) = self.client.read(&fd, r.offset, 12).await else {
             return Vec::new();
         };
-        let Some((header_len, count)) = index::parse_prelude(&prelude.to_vec()) else {
+        let Some((header_len, count, v2)) = self.parsed(index::parse_prelude(&prelude.to_vec()))
+        else {
             return Vec::new();
         };
         let Ok(hdr_bytes) = self
@@ -804,13 +930,14 @@ impl PosixCatalogue {
         else {
             return Vec::new();
         };
-        let Some(header) = index::parse_header(&hdr_bytes.to_vec(), count) else {
+        let Some(header) = self.parsed(index::parse_header(&hdr_bytes.to_vec(), count, v2))
+        else {
             return Vec::new();
         };
         let mut out = Vec::new();
         for p in &header.pages {
             if let Ok(bytes) = self.client.read(&fd, r.offset + p.off, p.len).await {
-                if let Some(es) = index::parse_page(&bytes.to_vec()) {
+                if let Some(es) = self.parsed(index::parse_page(&bytes.to_vec(), v2)) {
                     out.extend(es);
                 }
             }
@@ -818,15 +945,25 @@ impl PosixCatalogue {
         out
     }
 
-    fn expand_uri(r: &IndexRef, uri_id: u32, off: u64, len: u64) -> Option<FieldLocation> {
+    fn expand_uri(
+        r: &IndexRef,
+        uri_id: u32,
+        off: u64,
+        len: u64,
+        ck: Option<u64>,
+    ) -> Option<FieldLocation> {
         let root = r.uris.get(uri_id as usize)?;
         if let Some(path) = root.strip_prefix("posix://") {
             Some(FieldLocation::PosixFile {
                 path: path.to_string(),
                 offset: off,
                 length: len,
+                checksum: ck,
             })
         } else {
+            // non-posix roots are full URIs (checksum included); unknown
+            // schemes — tombstones — expand to nothing, masking every
+            // older entry for the identifier
             FieldLocation::parse_uri(root)
         }
     }
@@ -865,10 +1002,11 @@ impl PosixCatalogue {
             if self.index_cache_on {
                 let entries = self.load_index_cached(&r).await;
                 if let Some(e) = entries.iter().find(|e| e.elem == ec) {
-                    return Self::expand_uri(&r, e.uri_id, e.offset, e.length);
+                    return Self::expand_uri(&r, e.uri_id, e.offset, e.length, e.ck);
                 }
-            } else if let Some((uri_id, off, len)) = self.load_index_lookup(&r, elem).await {
-                return Self::expand_uri(&r, uri_id, off, len);
+            } else if let Some((uri_id, off, len, ck)) = self.load_index_lookup(&r, elem).await
+            {
+                return Self::expand_uri(&r, uri_id, off, len, ck);
             }
         }
         None
@@ -907,7 +1045,7 @@ impl PosixCatalogue {
                 if !seen.insert(full.canonical()) {
                     continue; // an older duplicate — masked by newer
                 }
-                if let Some(loc) = Self::expand_uri(&r, e.uri_id, e.offset, e.length) {
+                if let Some(loc) = Self::expand_uri(&r, e.uri_id, e.offset, e.length, e.ck) {
                     out.push((full, loc));
                 }
             }
@@ -946,8 +1084,20 @@ impl crate::fdb::backend::Catalogue for PosixCatalogue {
                 .with_index_cache(self.index_cache_on)
                 .with_durable(self.durable)
                 // sessions share the parent's WAL-sync counter handle
-                .with_wal_counter(self.wal_syncs.clone()),
+                .with_wal_counter(self.wal_syncs.clone())
+                // ... and its corrupt-blob tally
+                .with_corrupt_counter(self.index_corrupt.clone()),
         ))
+    }
+
+    fn forget<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        colloc: &'a Key,
+        elem: &'a Key,
+        _id: &'a Key,
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, Result<bool, FdbError>> {
+        Box::pin(PosixCatalogue::forget(self, ds, colloc, elem))
     }
 
     fn begin_archive_group(&mut self) {

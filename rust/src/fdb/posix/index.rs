@@ -9,17 +9,40 @@
 //!   first_elem str, page_off u64 (relative to blob start), page_len u64
 //! pages: sequence of entries
 //!   entry: elem str, uri_id u32, offset u64, length u64
+//!          (v2 blobs append: has_ck u8, ck u64 if has_ck == 1)
 //! ```
+//!
+//! Two magics coexist: [`MAGIC`] marks legacy v1 blobs (entries without
+//! content checksums), [`MAGIC2`] the v2 form whose entries carry an
+//! optional field checksum. Writers emit v2; readers accept both, so
+//! indexes persisted before the integrity work keep resolving (their
+//! entries are simply unverified).
 //!
 //! Lookup therefore costs three read ops (prelude → header → leaf page);
 //! a full scan costs `2 + npages` — reproducing the "multiple read system
 //! calls" behaviour of the real FDB's B*-trees.
+//!
+//! Every parse function returns a typed [`FdbError::Corrupt`] on
+//! truncated or bit-flipped input (they used to be `Option`s the callers
+//! unwrapped or silently dropped), so a rotten index blob surfaces as an
+//! integrity fault instead of a panic or a silently-absent entry.
 
 use crate::fdb::wire::{Dec, Enc};
+use crate::fdb::FdbError;
 
+/// v1 blobs: entries without content checksums.
 pub const MAGIC: u32 = 0xFDB_1DE7;
+/// v2 blobs: entries carry an optional content checksum.
+pub const MAGIC2: u32 = 0xFDB_1DE8;
 /// Target serialized page size (like a 4 KiB B-tree node).
 pub const PAGE_BYTES: usize = 4096;
+
+fn corrupt(detail: String) -> FdbError {
+    FdbError::Corrupt {
+        what: "index",
+        detail,
+    }
+}
 
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct IndexEntry {
@@ -27,6 +50,9 @@ pub struct IndexEntry {
     pub uri_id: u32,
     pub offset: u64,
     pub length: u64,
+    /// content checksum of the field payload (v2 blobs; `None` for
+    /// legacy v1 entries — existence/length-checked only)
+    pub ck: Option<u64>,
 }
 
 #[derive(Clone, Debug)]
@@ -41,9 +67,11 @@ pub struct PageMeta {
 pub struct IndexHeader {
     pub count: u32,
     pub pages: Vec<PageMeta>,
+    /// whether the blob's pages use the v2 entry encoding
+    pub v2: bool,
 }
 
-/// Serialize `entries` (must be sorted by `elem`) into an index blob.
+/// Serialize `entries` (must be sorted by `elem`) into a v2 index blob.
 pub fn serialize(entries: &[IndexEntry]) -> Vec<u8> {
     debug_assert!(entries.windows(2).all(|w| w[0].elem <= w[1].elem));
     // 1. cut entries into pages of ~PAGE_BYTES
@@ -55,6 +83,14 @@ pub fn serialize(entries: &[IndexEntry]) -> Vec<u8> {
             cur_first = Some(e.elem.clone());
         }
         cur.str(&e.elem).u32(e.uri_id).u64(e.offset).u64(e.length);
+        match e.ck {
+            Some(ck) => {
+                cur.u8(1).u64(ck);
+            }
+            None => {
+                cur.u8(0);
+            }
+        }
         if cur.buf.len() >= PAGE_BYTES {
             pages.push((cur_first.take().unwrap(), std::mem::take(&mut cur).finish()));
             cur = Enc::new();
@@ -84,7 +120,7 @@ pub fn serialize(entries: &[IndexEntry]) -> Vec<u8> {
     debug_assert_eq!(header.len(), header_len);
     // 3. assemble
     let mut out = Enc::new();
-    out.u32(MAGIC);
+    out.u32(MAGIC2);
     let mut blob = out.finish();
     blob.extend_from_slice(&(header.len() as u32).to_le_bytes());
     blob.extend_from_slice(&(entries.len() as u32).to_le_bytes());
@@ -95,45 +131,97 @@ pub fn serialize(entries: &[IndexEntry]) -> Vec<u8> {
     blob
 }
 
-/// Parse the 12-byte prelude → (header_len, entry count).
-pub fn parse_prelude(bytes: &[u8]) -> Option<(u32, u32)> {
+/// Parse the 12-byte prelude → (header_len, entry count, v2?).
+pub fn parse_prelude(bytes: &[u8]) -> Result<(u32, u32, bool), FdbError> {
     let mut d = Dec::new(bytes);
-    if d.u32()? != MAGIC {
-        return None;
-    }
-    let header_len = d.u32()?;
-    let count = d.u32()?;
-    Some((header_len, count))
+    let magic = d
+        .u32()
+        .ok_or_else(|| corrupt(format!("prelude truncated: {} bytes", bytes.len())))?;
+    let v2 = match magic {
+        MAGIC => false,
+        MAGIC2 => true,
+        other => {
+            return Err(corrupt(format!(
+                "bad magic {other:#010x} (want {MAGIC:#010x} or {MAGIC2:#010x})"
+            )))
+        }
+    };
+    let header_len = d
+        .u32()
+        .ok_or_else(|| corrupt("prelude truncated before header_len".into()))?;
+    let count = d
+        .u32()
+        .ok_or_else(|| corrupt("prelude truncated before count".into()))?;
+    Ok((header_len, count, v2))
 }
 
 /// Parse the header region (bytes immediately after the prelude).
-pub fn parse_header(bytes: &[u8], count: u32) -> Option<IndexHeader> {
+pub fn parse_header(bytes: &[u8], count: u32, v2: bool) -> Result<IndexHeader, FdbError> {
     let mut d = Dec::new(bytes);
-    let npages = d.u32()?;
+    let npages = d
+        .u32()
+        .ok_or_else(|| corrupt("header truncated before page count".into()))?;
     let mut pages = Vec::with_capacity(npages as usize);
-    for _ in 0..npages {
+    for i in 0..npages {
+        let first_elem = d
+            .str()
+            .ok_or_else(|| corrupt(format!("header truncated in page {i}/{npages} key")))?;
+        let off = d
+            .u64()
+            .ok_or_else(|| corrupt(format!("header truncated in page {i}/{npages} offset")))?;
+        let len = d
+            .u64()
+            .ok_or_else(|| corrupt(format!("header truncated in page {i}/{npages} length")))?;
         pages.push(PageMeta {
-            first_elem: d.str()?,
-            off: d.u64()?,
-            len: d.u64()?,
+            first_elem,
+            off,
+            len,
         });
     }
-    Some(IndexHeader { count, pages })
+    Ok(IndexHeader { count, pages, v2 })
 }
 
-/// Parse one page's entries.
-pub fn parse_page(bytes: &[u8]) -> Option<Vec<IndexEntry>> {
+/// Parse one page's entries (`v2` selects the entry encoding).
+pub fn parse_page(bytes: &[u8], v2: bool) -> Result<Vec<IndexEntry>, FdbError> {
     let mut d = Dec::new(bytes);
     let mut out = Vec::new();
     while d.remaining() > 0 {
+        let at = out.len();
+        let elem = d
+            .str()
+            .ok_or_else(|| corrupt(format!("page truncated in entry {at} key")))?;
+        let uri_id = d
+            .u32()
+            .ok_or_else(|| corrupt(format!("page truncated in entry {at} uri id")))?;
+        let offset = d
+            .u64()
+            .ok_or_else(|| corrupt(format!("page truncated in entry {at} offset")))?;
+        let length = d
+            .u64()
+            .ok_or_else(|| corrupt(format!("page truncated in entry {at} length")))?;
+        let ck = if v2 {
+            match d
+                .u8()
+                .ok_or_else(|| corrupt(format!("page truncated in entry {at} ck flag")))?
+            {
+                0 => None,
+                1 => Some(d.u64().ok_or_else(|| {
+                    corrupt(format!("page truncated in entry {at} checksum"))
+                })?),
+                f => return Err(corrupt(format!("entry {at}: bad ck flag {f}"))),
+            }
+        } else {
+            None
+        };
         out.push(IndexEntry {
-            elem: d.str()?,
-            uri_id: d.u32()?,
-            offset: d.u64()?,
-            length: d.u64()?,
+            elem,
+            uri_id,
+            offset,
+            length,
+            ck,
         });
     }
-    Some(out)
+    Ok(out)
 }
 
 /// Which page may contain `elem` (binary search over first keys).
@@ -163,6 +251,7 @@ mod tests {
                 uri_id: (i % 3) as u32,
                 offset: (i * 1024) as u64,
                 length: 1024,
+                ck: if i % 2 == 0 { Some(i as u64) } else { None },
             })
             .collect();
         v.sort_by(|a, b| a.elem.cmp(&b.elem));
@@ -170,12 +259,12 @@ mod tests {
     }
 
     fn parse_all(blob: &[u8]) -> Vec<IndexEntry> {
-        let (hl, count) = parse_prelude(&blob[..12]).unwrap();
-        let header = parse_header(&blob[12..12 + hl as usize], count).unwrap();
+        let (hl, count, v2) = parse_prelude(&blob[..12]).unwrap();
+        let header = parse_header(&blob[12..12 + hl as usize], count, v2).unwrap();
         let mut out = Vec::new();
         for p in &header.pages {
             out.extend(
-                parse_page(&blob[p.off as usize..(p.off + p.len) as usize]).unwrap(),
+                parse_page(&blob[p.off as usize..(p.off + p.len) as usize], v2).unwrap(),
             );
         }
         out
@@ -192,9 +281,10 @@ mod tests {
     fn roundtrip_multipage() {
         let es = entries(2000);
         let blob = serialize(&es);
-        let (hl, count) = parse_prelude(&blob[..12]).unwrap();
+        let (hl, count, v2) = parse_prelude(&blob[..12]).unwrap();
         assert_eq!(count, 2000);
-        let header = parse_header(&blob[12..12 + hl as usize], count).unwrap();
+        assert!(v2);
+        let header = parse_header(&blob[12..12 + hl as usize], count, v2).unwrap();
         assert!(header.pages.len() > 5, "expected multiple pages");
         assert_eq!(parse_all(&blob), es);
     }
@@ -203,13 +293,14 @@ mod tests {
     fn lookup_via_page_directory() {
         let es = entries(2000);
         let blob = serialize(&es);
-        let (hl, count) = parse_prelude(&blob[..12]).unwrap();
-        let header = parse_header(&blob[12..12 + hl as usize], count).unwrap();
+        let (hl, count, v2) = parse_prelude(&blob[..12]).unwrap();
+        let header = parse_header(&blob[12..12 + hl as usize], count, v2).unwrap();
         for probe in [0usize, 1, 999, 1999] {
             let elem = &es[probe].elem;
             let page = page_for(&header, elem).unwrap();
             let items =
-                parse_page(&blob[page.off as usize..(page.off + page.len) as usize]).unwrap();
+                parse_page(&blob[page.off as usize..(page.off + page.len) as usize], v2)
+                    .unwrap();
             let found = items.iter().find(|e| &e.elem == elem).unwrap();
             assert_eq!(found, &es[probe]);
         }
@@ -219,11 +310,12 @@ mod tests {
     fn missing_key_page_scan_misses() {
         let es = entries(100);
         let blob = serialize(&es);
-        let (hl, count) = parse_prelude(&blob[..12]).unwrap();
-        let header = parse_header(&blob[12..12 + hl as usize], count).unwrap();
+        let (hl, count, v2) = parse_prelude(&blob[..12]).unwrap();
+        let header = parse_header(&blob[12..12 + hl as usize], count, v2).unwrap();
         if let Some(page) = page_for(&header, "zzz=unknown") {
             let items =
-                parse_page(&blob[page.off as usize..(page.off + page.len) as usize]).unwrap();
+                parse_page(&blob[page.off as usize..(page.off + page.len) as usize], v2)
+                    .unwrap();
             assert!(items.iter().all(|e| e.elem != "zzz=unknown"));
         }
     }
@@ -231,17 +323,90 @@ mod tests {
     #[test]
     fn empty_index() {
         let blob = serialize(&[]);
-        let (hl, count) = parse_prelude(&blob[..12]).unwrap();
+        let (hl, count, v2) = parse_prelude(&blob[..12]).unwrap();
         assert_eq!(count, 0);
-        let header = parse_header(&blob[12..12 + hl as usize], count).unwrap();
+        let header = parse_header(&blob[12..12 + hl as usize], count, v2).unwrap();
         assert!(header.pages.is_empty());
         assert!(page_for(&header, "anything").is_none());
+    }
+
+    #[test]
+    fn legacy_v1_blob_parses_without_checksums() {
+        // hand-assemble a v1 blob: MAGIC prelude + one page of v1 entries
+        let mut page = Enc::new();
+        page.str("step=1").u32(0).u64(0).u64(512);
+        page.str("step=2").u32(0).u64(512).u64(512);
+        let page = page.finish();
+        let mut header = Enc::new();
+        header.u32(1);
+        let mut measure = Enc::new();
+        measure.u32(1).str("step=1").u64(0).u64(0);
+        let hl = measure.finish().len();
+        header
+            .str("step=1")
+            .u64(12 + hl as u64)
+            .u64(page.len() as u64);
+        let header = header.finish();
+        assert_eq!(header.len(), hl);
+        let mut blob = Vec::new();
+        blob.extend_from_slice(&MAGIC.to_le_bytes());
+        blob.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        blob.extend_from_slice(&2u32.to_le_bytes());
+        blob.extend_from_slice(&header);
+        blob.extend_from_slice(&page);
+        let parsed = parse_all(&blob);
+        assert_eq!(parsed.len(), 2);
+        assert!(parsed.iter().all(|e| e.ck.is_none()));
+        assert_eq!(parsed[1].offset, 512);
     }
 
     #[test]
     fn bad_magic_rejected() {
         let mut blob = serialize(&entries(3));
         blob[0] ^= 0xFF;
-        assert!(parse_prelude(&blob[..12]).is_none());
+        let err = parse_prelude(&blob[..12]).unwrap_err();
+        assert!(matches!(err, FdbError::Corrupt { what: "index", .. }), "{err}");
+    }
+
+    #[test]
+    fn truncated_blob_is_typed_corrupt_not_panic() {
+        let blob = serialize(&entries(40));
+        // prelude shorter than 12 bytes
+        assert!(matches!(
+            parse_prelude(&blob[..7]),
+            Err(FdbError::Corrupt { .. })
+        ));
+        let (hl, count, v2) = parse_prelude(&blob[..12]).unwrap();
+        // header cut mid-page-directory
+        let hdr = &blob[12..12 + hl as usize];
+        assert!(matches!(
+            parse_header(&hdr[..hdr.len() / 2], count, v2),
+            Err(FdbError::Corrupt { .. })
+        ));
+        // page cut mid-entry
+        let header = parse_header(hdr, count, v2).unwrap();
+        let p = &header.pages[0];
+        let page = &blob[p.off as usize..(p.off + p.len) as usize];
+        assert!(matches!(
+            parse_page(&page[..page.len() - 3], v2),
+            Err(FdbError::Corrupt { .. })
+        ));
+    }
+
+    #[test]
+    fn bit_flipped_page_is_typed_corrupt() {
+        let es = entries(8);
+        let blob = serialize(&es);
+        let (hl, count, v2) = parse_prelude(&blob[..12]).unwrap();
+        let header = parse_header(&blob[12..12 + hl as usize], count, v2).unwrap();
+        let p = &header.pages[0];
+        let mut page = blob[p.off as usize..(p.off + p.len) as usize].to_vec();
+        // flip a bit in the high byte of the first entry's key-length
+        // prefix so the string read runs far off the end of the page
+        page[2] ^= 0x40;
+        match parse_page(&page, v2) {
+            Err(FdbError::Corrupt { what, .. }) => assert_eq!(what, "index"),
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
     }
 }

@@ -98,6 +98,7 @@ impl PosixStore {
             path: fd.path().to_string(),
             offset,
             length,
+            checksum: None,
         })
     }
 
@@ -239,6 +240,103 @@ impl crate::fdb::backend::Store for PosixStore {
                 out.push(bytes);
             }
             Ok(out)
+        })
+    }
+
+    /// Scrub repair: rewrite the handle's byte ranges in place from
+    /// verified data (positional writes + fdatasync). The shared-file
+    /// layout makes this the canonical-copy repair under replication.
+    fn repair<'a>(
+        &'a mut self,
+        handle: &'a crate::fdb::DataHandle,
+        data: Bytes,
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, Result<bool, crate::fdb::FdbError>> {
+        Box::pin(async move {
+            let crate::fdb::DataHandle::Posix { path, ranges } = handle else {
+                return Err(crate::fdb::FdbError::BackendMismatch {
+                    store: "posix",
+                    handle: handle.backend_name(),
+                });
+            };
+            let fd = self.open_data(path).await?;
+            let mut rel = 0u64;
+            for &(off, len) in ranges {
+                self.client
+                    .pwrite_data(&fd, off, data.slice(rel, len))
+                    .await
+                    .map_err(|e| fs_err("pwrite", path, e))?;
+                rel += len;
+            }
+            self.client
+                .fdatasync(&fd)
+                .await
+                .map_err(|e| fs_err("fdatasync", path, e))?;
+            Ok(true)
+        })
+    }
+
+    /// Orphan detection: every `*.data` file under the dataset directory
+    /// (quarantined `*.orphan` files are already out of the data path).
+    fn scrub_inventory<'a>(
+        &'a mut self,
+        ds: &'a Key,
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, Option<Vec<(String, u64)>>> {
+        Box::pin(async move {
+            let dir = self.dataset_dir(ds);
+            let Ok(children) = self.client.readdir(&dir).await else {
+                // no dataset directory: nothing stored, nothing orphaned
+                return Some(Vec::new());
+            };
+            let mut out = Vec::new();
+            for child in children {
+                if !child.ends_with(".data") {
+                    continue;
+                }
+                let path = format!("{dir}/{child}");
+                if let Some(size) = self.client.stat(&path).await {
+                    out.push((format!("posix://{path}"), size));
+                }
+            }
+            Some(out)
+        })
+    }
+
+    /// Orphan repair: copy the unreferenced data file aside as
+    /// `<path>.orphan` and unlink the original (no rename in the
+    /// simulated VFS), so reads can never resolve into it again.
+    fn quarantine_object<'a>(
+        &'a mut self,
+        _ds: &'a Key,
+        container: &'a str,
+    ) -> crate::fdb::backend::LocalBoxFuture<'a, Result<bool, crate::fdb::FdbError>> {
+        Box::pin(async move {
+            let Some(path) = container.strip_prefix("posix://") else {
+                return Ok(false);
+            };
+            let bytes = self
+                .client
+                .read_all(path)
+                .await
+                .map_err(|e| fs_err("read", path, e))?;
+            let aside = format!("{path}.orphan");
+            let fd = self
+                .client
+                .create(&aside, StripeSpec::fdb_data())
+                .await
+                .map_err(|e| fs_err("create", &aside, e))?;
+            self.client
+                .write_data(&fd, bytes)
+                .await
+                .map_err(|e| fs_err("write", &aside, e))?;
+            self.client
+                .fdatasync(&fd)
+                .await
+                .map_err(|e| fs_err("fdatasync", &aside, e))?;
+            self.client
+                .unlink(path)
+                .await
+                .map_err(|e| fs_err("unlink", path, e))?;
+            Ok(true)
         })
     }
 

@@ -161,6 +161,7 @@ impl RadosStore {
                     name,
                     offset: 0,
                     length,
+                    checksum: None,
                 }
             }
             RadosLayout::SpannedPerProcess | RadosLayout::SingleLargePerProcess => {
@@ -217,6 +218,7 @@ impl RadosStore {
                     },
                     offset: if self.config.async_io { 0 } else { offset },
                     length: dlen,
+                    checksum: None,
                 }
             }
         }

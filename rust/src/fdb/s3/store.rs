@@ -91,6 +91,7 @@ impl S3Store {
             bucket,
             key,
             length,
+            checksum: None,
         })
     }
 
@@ -144,6 +145,7 @@ impl S3Store {
             bucket: bucket.to_string(),
             key: format!("{obj_key}?part-offset={offset}&len={length}"),
             length,
+            checksum: None,
         })
     }
 

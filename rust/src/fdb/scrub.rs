@@ -1,0 +1,243 @@
+//! Integrity primitives for the scrub/repair subsystem (`fdbctl fsck`):
+//! the per-range checksum expectations verified reads carry, the
+//! per-field outcome a store scrub reports, and the dataset-level
+//! [`FsckReport`] returned by [`crate::fdb::Fdb::fsck`].
+//!
+//! The checksum is the streamed FNV-1a of the field payload
+//! ([`crate::util::content::Bytes::content_checksum`]), computed once at
+//! archive time and carried in [`crate::fdb::FieldLocation`] / the
+//! catalogue entry. Entries without one are legacy fields: readable,
+//! scrubbed for existence and length only, never an error.
+
+use crate::fdb::FdbError;
+use crate::util::content::Bytes;
+
+/// One field's expected bytes inside a (possibly coalesced) read: the
+/// slice `[rel, rel+len)` of the returned buffer must checksum to `ck`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RangeCheck {
+    /// offset of the field's first byte relative to the read buffer
+    pub rel: u64,
+    /// field length in bytes
+    pub len: u64,
+    /// expected FNV-1a content checksum
+    pub ck: u64,
+}
+
+impl RangeCheck {
+    /// A whole-buffer check (single-field read).
+    pub fn whole(len: u64, ck: u64) -> RangeCheck {
+        RangeCheck { rel: 0, len, ck }
+    }
+}
+
+/// Verify a read buffer against its expected per-range checksums.
+/// Returns the typed [`FdbError::Corrupt`] naming the first mismatching
+/// range. An empty `checks` slice verifies nothing (legacy entries).
+pub fn verify_ranges(buf: &Bytes, checks: &[RangeCheck]) -> Result<(), FdbError> {
+    for c in checks {
+        let got = buf.slice(c.rel, c.len);
+        if got.len() != c.len {
+            return Err(FdbError::Corrupt {
+                what: "field",
+                detail: format!(
+                    "short read: {} of {} bytes at +{}",
+                    got.len(),
+                    c.len,
+                    c.rel
+                ),
+            });
+        }
+        let actual = got.content_checksum();
+        if actual != c.ck {
+            return Err(FdbError::Corrupt {
+                what: "field",
+                detail: format!(
+                    "checksum mismatch at +{} len {}: stored {:#018x}, read {:#018x}",
+                    c.rel, c.len, c.ck, actual
+                ),
+            });
+        }
+    }
+    Ok(())
+}
+
+/// What a store-level scrub of one field found, summed over however many
+/// physical copies the store keeps (1 for plain backends, N under
+/// replication).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ScrubOutcome {
+    /// physical copies examined
+    pub copies: u64,
+    /// copies that could not be read at all (missing object / short file)
+    pub missing: u64,
+    /// copies whose bytes fail the length or checksum cross-check
+    pub corrupt: u64,
+    /// damaged copies rewritten from a verified source this scrub
+    pub repaired: u64,
+}
+
+impl ScrubOutcome {
+    /// Whether every copy of the field is (now) healthy.
+    pub fn healthy(&self) -> bool {
+        self.missing == 0 && self.corrupt == self.repaired
+    }
+}
+
+/// The catalogue↔store cross-check result for one dataset.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FsckReport {
+    /// catalogue entries examined
+    pub entries: u64,
+    /// entries whose checksum was cross-checked (legacy entries without
+    /// one are existence/length-checked only)
+    pub verified: u64,
+    /// catalogue entries whose data is gone from the store
+    pub ghosts: u64,
+    /// store objects no catalogue entry references
+    pub orphans: u64,
+    /// fields with at least one corrupt copy
+    pub corrupt: u64,
+    /// damaged copies rewritten from a verified replica (repair mode)
+    pub repaired: u64,
+    /// ghost entries dropped from the catalogue (repair mode)
+    pub ghosts_dropped: u64,
+    /// orphaned objects quarantined out of the data path (repair mode)
+    pub orphans_quarantined: u64,
+}
+
+impl FsckReport {
+    /// A clean pass: nothing missing, nothing rotten, nothing dangling.
+    pub fn clean(&self) -> bool {
+        self.ghosts == 0 && self.orphans == 0 && self.corrupt == 0
+    }
+
+    /// Whether a `--repair` pass converged: every problem found was
+    /// repaired in-pass (the next fsck will report clean).
+    pub fn converged(&self) -> bool {
+        self.ghosts == self.ghosts_dropped
+            && self.orphans == self.orphans_quarantined
+            && self.corrupt == self.repaired
+    }
+
+    /// Fold one field's scrub outcome into the dataset tallies.
+    pub fn absorb(&mut self, field: &ScrubOutcome) {
+        // a field with NO readable copy at all is a ghost (the entry
+        // points at nothing); partial damage is corruption
+        if field.copies > 0 && field.missing == field.copies {
+            self.ghosts += 1;
+        } else if field.missing > 0 || field.corrupt > 0 {
+            self.corrupt += 1;
+        }
+        self.repaired += field.repaired;
+    }
+}
+
+impl std::fmt::Display for FsckReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} entries ({} verified): {} ghosts, {} orphans, {} corrupt; \
+             repaired {} copies, dropped {} ghosts, quarantined {} orphans",
+            self.entries,
+            self.verified,
+            self.ghosts,
+            self.orphans,
+            self.corrupt,
+            self.repaired,
+            self.ghosts_dropped,
+            self.orphans_quarantined
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn verify_ranges_passes_and_fails() {
+        let a = Bytes::virt(100, 5);
+        let b = Bytes::virt(60, 9);
+        let mut buf = a.clone();
+        buf.append(b.clone());
+        let checks = [
+            RangeCheck {
+                rel: 0,
+                len: 100,
+                ck: a.content_checksum(),
+            },
+            RangeCheck {
+                rel: 100,
+                len: 60,
+                ck: b.content_checksum(),
+            },
+        ];
+        verify_ranges(&buf, &checks).unwrap();
+        // no checks = legacy entry = no verification
+        verify_ranges(&buf, &[]).unwrap();
+        // a flipped byte in the second field trips only via its range
+        let mut raw = buf.to_vec();
+        raw[120] ^= 0xFF;
+        let rotten = Bytes::real(raw);
+        verify_ranges(&rotten, &checks[..1]).unwrap();
+        let err = verify_ranges(&rotten, &checks).unwrap_err();
+        assert!(matches!(err, FdbError::Corrupt { .. }), "got {err}");
+    }
+
+    #[test]
+    fn verify_ranges_rejects_short_buffer() {
+        let a = Bytes::virt(100, 5);
+        let short = a.slice(0, 50);
+        let err = verify_ranges(
+            &short,
+            &[RangeCheck::whole(100, a.content_checksum())],
+        )
+        .unwrap_err();
+        assert!(matches!(err, FdbError::Corrupt { .. }));
+    }
+
+    #[test]
+    fn report_classifies_ghost_vs_corrupt() {
+        let mut rep = FsckReport::default();
+        rep.absorb(&ScrubOutcome {
+            copies: 2,
+            missing: 2,
+            ..Default::default()
+        });
+        rep.absorb(&ScrubOutcome {
+            copies: 2,
+            missing: 0,
+            corrupt: 1,
+            repaired: 1,
+            ..Default::default()
+        });
+        rep.absorb(&ScrubOutcome {
+            copies: 1,
+            ..Default::default()
+        });
+        assert_eq!((rep.ghosts, rep.corrupt, rep.repaired), (1, 1, 1));
+        assert!(!rep.clean());
+    }
+
+    #[test]
+    fn convergence_requires_full_repair() {
+        let rep = FsckReport {
+            entries: 4,
+            ghosts: 1,
+            ghosts_dropped: 1,
+            corrupt: 2,
+            repaired: 2,
+            orphans: 1,
+            orphans_quarantined: 1,
+            ..Default::default()
+        };
+        assert!(rep.converged());
+        let partial = FsckReport {
+            corrupt: 2,
+            repaired: 1,
+            ..Default::default()
+        };
+        assert!(!partial.converged());
+    }
+}

@@ -195,6 +195,76 @@ impl Store for InstrumentStore {
         })
     }
 
+    fn read_verified<'a>(
+        &'a mut self,
+        handle: &'a DataHandle,
+        checks: &'a [crate::fdb::scrub::RangeCheck],
+    ) -> LocalBoxFuture<'a, Result<Bytes, FdbError>> {
+        Box::pin(async move {
+            // forwarded (not defaulted) so an inner override — replica
+            // failover on corruption — stays in the path; recorded under
+            // the same read probe
+            let t0 = self.clock.start();
+            let result = self.inner.read_verified(handle, checks).await;
+            self.probes.read.observe(self.clock.elapsed(t0), &result);
+            if let Ok(b) = &result {
+                self.probes.bytes_read.add(b.len());
+            }
+            result
+        })
+    }
+
+    fn read_ranges_verified<'a>(
+        &'a mut self,
+        handles: &'a [DataHandle],
+        checks: &'a [Vec<crate::fdb::scrub::RangeCheck>],
+    ) -> LocalBoxFuture<'a, Result<Vec<Bytes>, FdbError>> {
+        Box::pin(async move {
+            let t0 = self.clock.start();
+            let result = self.inner.read_ranges_verified(handles, checks).await;
+            self.probes.read.observe(self.clock.elapsed(t0), &result);
+            if let Ok(bs) = &result {
+                self.probes
+                    .bytes_read
+                    .add(bs.iter().map(|b| b.len()).sum());
+            }
+            result
+        })
+    }
+
+    fn repair<'a>(
+        &'a mut self,
+        handle: &'a DataHandle,
+        data: Bytes,
+    ) -> LocalBoxFuture<'a, Result<bool, FdbError>> {
+        self.inner.repair(handle, data)
+    }
+
+    fn scrub_field<'a>(
+        &'a mut self,
+        handle: &'a DataHandle,
+        expect_len: u64,
+        ck: Option<u64>,
+        do_repair: bool,
+    ) -> LocalBoxFuture<'a, Result<crate::fdb::scrub::ScrubOutcome, FdbError>> {
+        self.inner.scrub_field(handle, expect_len, ck, do_repair)
+    }
+
+    fn scrub_inventory<'a>(
+        &'a mut self,
+        ds: &'a Key,
+    ) -> LocalBoxFuture<'a, Option<Vec<(String, u64)>>> {
+        self.inner.scrub_inventory(ds)
+    }
+
+    fn quarantine_object<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        container: &'a str,
+    ) -> LocalBoxFuture<'a, Result<bool, FdbError>> {
+        self.inner.quarantine_object(ds, container)
+    }
+
     fn direct_retrieve_enabled(&self) -> bool {
         self.inner.direct_retrieve_enabled()
     }
@@ -305,6 +375,19 @@ impl Catalogue for InstrumentCatalogue {
             self.probes.flush.observe(self.clock.elapsed(t0), &result);
             result
         })
+    }
+
+    fn forget<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        colloc: &'a Key,
+        elem: &'a Key,
+        id: &'a Key,
+    ) -> LocalBoxFuture<'a, Result<bool, FdbError>> {
+        // forwarded (not defaulted): the default is a no-op `Ok(false)`,
+        // which would silently disable fsck ghost-drops through an
+        // instrumented catalogue
+        self.inner.forget(ds, colloc, elem, id)
     }
 
     fn close<'a>(&'a mut self) -> LocalBoxFuture<'a, Result<(), FdbError>> {

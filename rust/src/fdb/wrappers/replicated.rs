@@ -2,6 +2,7 @@
 //! balanced across healthy replicas by a [`ReadPolicy`].
 
 use std::cell::RefCell;
+use std::collections::BTreeMap;
 use std::future::Future;
 use std::pin::Pin;
 use std::rc::Rc;
@@ -12,6 +13,7 @@ use crate::fdb::builder::ResilienceProfile;
 use crate::fdb::datahandle::DataHandle;
 use crate::fdb::key::Key;
 use crate::fdb::location::FieldLocation;
+use crate::fdb::scrub::{verify_ranges, RangeCheck, ScrubOutcome};
 use crate::fdb::telemetry::{Counter, MetricsRegistry};
 use crate::fdb::FdbError;
 use crate::sim::exec::{Sim, Sleep};
@@ -365,6 +367,15 @@ pub struct ReplicatedStore {
     hedge_stats: Option<HedgeStats>,
     /// shared replica-health ledger (`None` = quarantine off)
     quarantine: Option<Rc<RefCell<QuarantineState>>>,
+    /// Archive-time per-replica locations, keyed by the primary handle
+    /// — the "replica catalogue" scrub and repair use to reach the
+    /// secondary copies (the Catalogue only ever indexes the primary's
+    /// location). Shared with sessions so engine-lane archives record
+    /// here too; a fresh process starts empty and scrub degrades to
+    /// probing every replica through the primary's handle.
+    replica_locs: Rc<RefCell<BTreeMap<String, Vec<FieldLocation>>>>,
+    /// `integrity.replica_repaired` counter (`None` = metrics off)
+    repaired: Option<Counter>,
 }
 
 impl ReplicatedStore {
@@ -383,7 +394,26 @@ impl ReplicatedStore {
             hedge: SimTime::ZERO,
             hedge_stats: None,
             quarantine: None,
+            replica_locs: Rc::new(RefCell::new(BTreeMap::new())),
+            repaired: None,
         }
+    }
+
+    /// Bind the `integrity.replica_repaired` counter (the builder
+    /// passes its registry) so scrub and read-path repairs are
+    /// observable.
+    pub fn with_integrity(mut self, reg: Option<&MetricsRegistry>) -> ReplicatedStore {
+        self.repaired = reg.map(|r| r.counter("integrity.replica_repaired"));
+        self
+    }
+
+    /// The map key for one field's archive-time replica locations: the
+    /// primary's handle in debug form (deterministic, checksum-free —
+    /// [`DataHandle::from_location`] drops the checksum, so keys built
+    /// from a bare archive return and from a checksummed catalogue
+    /// entry agree).
+    fn loc_key(handle: &DataHandle) -> String {
+        format!("{handle:?}")
     }
 
     pub fn with_read_policy(mut self, policy: ReadPolicy) -> ReplicatedStore {
@@ -596,7 +626,25 @@ impl ReplicatedStore {
         }
     }
 
-    async fn read_one(&mut self, handle: &DataHandle, vectored: bool) -> Result<Bytes, FdbError> {
+    /// Rewrite replicas that served corrupt bytes from a copy that
+    /// verified — best-effort: a failed repair leaves the copy for the
+    /// next `fsck` pass.
+    async fn heal_corrupt(&mut self, corrupt: &[usize], handle: &DataHandle, good: &Bytes) {
+        for &idx in corrupt {
+            if let Ok(true) = self.replicas[idx].repair(handle, good.clone()).await {
+                if let Some(c) = &self.repaired {
+                    c.inc();
+                }
+            }
+        }
+    }
+
+    async fn read_one(
+        &mut self,
+        handle: &DataHandle,
+        vectored: bool,
+        checks: &[RangeCheck],
+    ) -> Result<Bytes, FdbError> {
         let copies = self.replicas.len();
         // the estimates only steer `Fastest` — skip the bookkeeping
         // (two clock samples + EWMA fold per read) for other policies
@@ -604,7 +652,12 @@ impl ReplicatedStore {
         let now = self.clock.as_ref().map(|s| s.now());
         let order = self.probe_order(now);
         let mut last = None;
-        let mut rest = &order[..];
+        // replicas whose bytes failed verification — healed from the
+        // first copy that verifies before returning (repair-from-replica)
+        let mut corrupt: Vec<usize> = Vec::new();
+        // raced replicas already counted as failed (or rotten) — the
+        // serial fall-through must not probe them a second time
+        let mut skip: Vec<usize> = Vec::new();
 
         // hedged fast path: race the first two candidates
         if self.hedge > SimTime::ZERO && order.len() >= 2 {
@@ -632,35 +685,53 @@ impl ReplicatedStore {
                 }
                 if rr.primary_err.is_some() {
                     self.note_read_failure(pi, observing);
+                    skip.push(pi);
                 }
                 if rr.hedge_err.is_some() {
                     self.note_read_failure(hi, observing);
+                    skip.push(hi);
                 }
                 match rr.winner {
                     Some((bytes, hedge_won)) => {
                         let widx = if hedge_won { hi } else { pi };
-                        // the sample spans the whole race window — a
-                        // conservative overestimate for a hedge winner
-                        // (includes the hedge delay), but failures and
-                        // penalties stay exact
-                        self.note_read_success(
-                            widx,
-                            if observing { Some(t0) } else { None },
-                            handle,
-                        );
-                        return Ok(bytes);
+                        match verify_ranges(&bytes, checks) {
+                            Ok(()) => {
+                                // the sample spans the whole race window —
+                                // a conservative overestimate for a hedge
+                                // winner (includes the hedge delay), but
+                                // failures and penalties stay exact
+                                self.note_read_success(
+                                    widx,
+                                    if observing { Some(t0) } else { None },
+                                    handle,
+                                );
+                                return Ok(bytes);
+                            }
+                            Err(e) => {
+                                // the winner's bytes are rot: count a
+                                // failed probe and fall through to the
+                                // rest of the ring (a cancelled loser is
+                                // still fair game)
+                                self.note_read_failure(widx, observing);
+                                corrupt.push(widx);
+                                skip.push(widx);
+                                Self::keep_retryable(&mut last, e);
+                            }
+                        }
                     }
                     None => {
                         for e in [rr.primary_err, rr.hedge_err].into_iter().flatten() {
                             Self::keep_retryable(&mut last, e);
                         }
-                        rest = &order[2..];
                     }
                 }
             }
         }
 
-        for &idx in rest {
+        for &idx in &order {
+            if skip.contains(&idx) {
+                continue;
+            }
             self.mark_probe(idx);
             let t0 = if observing {
                 self.clock.as_ref().map(|s| s.now())
@@ -676,20 +747,35 @@ impl ReplicatedStore {
                 self.replicas[idx].read(handle).await
             };
             match r {
-                Ok(bytes) => {
-                    self.note_read_success(idx, t0, handle);
-                    return Ok(bytes);
-                }
+                Ok(bytes) => match verify_ranges(&bytes, checks) {
+                    Ok(()) => {
+                        self.note_read_success(idx, t0, handle);
+                        self.heal_corrupt(&corrupt, handle, &bytes).await;
+                        return Ok(bytes);
+                    }
+                    Err(e) => {
+                        self.note_read_failure(idx, observing);
+                        corrupt.push(idx);
+                        Self::keep_retryable(&mut last, e);
+                    }
+                },
                 Err(e) => {
                     self.note_read_failure(idx, observing);
                     Self::keep_retryable(&mut last, e);
                 }
             }
         }
+        let last = last.expect("at least one replica");
+        // every probed copy rotten: surface the typed corruption itself,
+        // not the replica wrapper — it is the signal telemetry counts
+        // and the engine's retry policy must never retry
+        if matches!(last, FdbError::Corrupt { .. }) {
+            return Err(last);
+        }
         Err(FdbError::AllReplicasFailed {
             op: "read",
             copies,
-            last: Box::new(last.expect("at least one replica")),
+            last: Box::new(last),
         })
     }
 }
@@ -707,14 +793,19 @@ impl Store for ReplicatedStore {
         data: Bytes,
     ) -> LocalBoxFuture<'a, Result<FieldLocation, FdbError>> {
         Box::pin(async move {
-            let mut primary = None;
+            let mut locs = Vec::with_capacity(self.replicas.len());
             for replica in &mut self.replicas {
-                let loc = replica.archive(ds, colloc, id, data.clone()).await?;
-                if primary.is_none() {
-                    primary = Some(loc);
-                }
+                locs.push(replica.archive(ds, colloc, id, data.clone()).await?);
             }
-            Ok(primary.expect("at least one replica"))
+            let primary = locs[0].clone();
+            if locs.len() > 1 {
+                // remember where the secondary copies went — the
+                // catalogue only indexes the primary's location, and
+                // scrub repair needs to reach the other copies
+                let key = Self::loc_key(&DataHandle::from_location(&primary));
+                self.replica_locs.borrow_mut().insert(key, locs);
+            }
+            Ok(primary)
         })
     }
 
@@ -731,7 +822,7 @@ impl Store for ReplicatedStore {
         &'a mut self,
         handle: &'a DataHandle,
     ) -> LocalBoxFuture<'a, Result<Bytes, FdbError>> {
-        Box::pin(self.read_one(handle, false))
+        Box::pin(self.read_one(handle, false, &[]))
     }
 
     /// Vectored reads apply the [`ReadPolicy`] per merged range: each
@@ -746,10 +837,145 @@ impl Store for ReplicatedStore {
         Box::pin(async move {
             let mut out = Vec::with_capacity(handles.len());
             for handle in handles {
-                out.push(self.read_one(handle, true).await?);
+                out.push(self.read_one(handle, true, &[]).await?);
             }
             Ok(out)
         })
+    }
+
+    /// Verified reads route corruption into the replica fall-through:
+    /// bytes failing their checksum count as a failed probe, the next
+    /// replica serves, and the rotten copy is rewritten in place from
+    /// the verified bytes — callers never see the damage while at
+    /// least one copy (or access path) is clean.
+    fn read_verified<'a>(
+        &'a mut self,
+        handle: &'a DataHandle,
+        checks: &'a [RangeCheck],
+    ) -> LocalBoxFuture<'a, Result<Bytes, FdbError>> {
+        Box::pin(self.read_one(handle, false, checks))
+    }
+
+    fn read_ranges_verified<'a>(
+        &'a mut self,
+        handles: &'a [DataHandle],
+        checks: &'a [Vec<RangeCheck>],
+    ) -> LocalBoxFuture<'a, Result<Vec<Bytes>, FdbError>> {
+        Box::pin(async move {
+            let mut out = Vec::with_capacity(handles.len());
+            for (i, handle) in handles.iter().enumerate() {
+                let cks = checks.get(i).map(Vec::as_slice).unwrap_or(&[]);
+                out.push(self.read_one(handle, true, cks).await?);
+            }
+            Ok(out)
+        })
+    }
+
+    /// Repair fans out to every copy: each replica rewrites its own
+    /// archive-time location when one is recorded, else the shared
+    /// handle.
+    fn repair<'a>(
+        &'a mut self,
+        handle: &'a DataHandle,
+        data: Bytes,
+    ) -> LocalBoxFuture<'a, Result<bool, FdbError>> {
+        Box::pin(async move {
+            let locs = self
+                .replica_locs
+                .borrow()
+                .get(&Self::loc_key(handle))
+                .cloned();
+            let mut any = false;
+            for (i, replica) in self.replicas.iter_mut().enumerate() {
+                let own = locs
+                    .as_ref()
+                    .and_then(|l| l.get(i))
+                    .map(DataHandle::from_location);
+                let h = own.as_ref().unwrap_or(handle);
+                any |= replica.repair(h, data.clone()).await.unwrap_or(false);
+            }
+            Ok(any)
+        })
+    }
+
+    /// Scrub probes every replica's copy (via the archive-time location
+    /// map; a fresh process without one probes all replicas through the
+    /// primary's handle, which still reaches the bytes on shared
+    /// storage). With `do_repair`, damaged copies are rewritten from a
+    /// copy that verifies.
+    fn scrub_field<'a>(
+        &'a mut self,
+        handle: &'a DataHandle,
+        expect_len: u64,
+        ck: Option<u64>,
+        do_repair: bool,
+    ) -> LocalBoxFuture<'a, Result<ScrubOutcome, FdbError>> {
+        Box::pin(async move {
+            let locs = self
+                .replica_locs
+                .borrow()
+                .get(&Self::loc_key(handle))
+                .cloned();
+            let handles: Vec<DataHandle> = (0..self.replicas.len())
+                .map(|i| match locs.as_ref().and_then(|l| l.get(i)) {
+                    Some(loc) => DataHandle::from_location(loc),
+                    None => handle.clone(),
+                })
+                .collect();
+            let mut out = ScrubOutcome::default();
+            let mut healthy: Vec<usize> = Vec::new();
+            let mut damaged: Vec<usize> = Vec::new();
+            for (i, h) in handles.iter().enumerate() {
+                let o = self.replicas[i].scrub_field(h, expect_len, ck, false).await?;
+                out.copies += o.copies;
+                out.missing += o.missing;
+                out.corrupt += o.corrupt;
+                if o.missing == 0 && o.corrupt == 0 {
+                    healthy.push(i);
+                } else {
+                    damaged.push(i);
+                }
+            }
+            if do_repair && !damaged.is_empty() {
+                let checks: Vec<RangeCheck> = ck
+                    .map(|c| vec![RangeCheck::whole(expect_len, c)])
+                    .unwrap_or_default();
+                let mut good: Option<Bytes> = None;
+                for &i in &healthy {
+                    // the repair source must itself verify — this read
+                    // runs through the live path, where injected wire
+                    // rot can strike again
+                    if let Ok(b) = self.replicas[i].read_verified(&handles[i], &checks).await {
+                        if b.len() == expect_len {
+                            good = Some(b);
+                            break;
+                        }
+                    }
+                }
+                if let Some(good) = good {
+                    for &i in &damaged {
+                        if let Ok(true) = self.replicas[i].repair(&handles[i], good.clone()).await
+                        {
+                            out.repaired += 1;
+                            if let Some(c) = &self.repaired {
+                                c.inc();
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(out)
+        })
+    }
+
+    /// No inventory under replication: secondary copies are by design
+    /// unreferenced by the catalogue (only the primary's location is
+    /// indexed), so an orphan scan would flag every one of them.
+    fn scrub_inventory<'a>(
+        &'a mut self,
+        _ds: &'a Key,
+    ) -> LocalBoxFuture<'a, Option<Vec<(String, u64)>>> {
+        crate::fdb::backend::ready(None)
     }
 
     /// Catalogue-bypassing retrieval is forwarded when EVERY replica
@@ -813,6 +1039,10 @@ impl Store for ReplicatedStore {
         session.hedge = self.hedge;
         session.hedge_stats = self.hedge_stats.clone();
         session.quarantine = self.quarantine.clone();
+        // the replica-location map is SHARED: engine-lane archives must
+        // record where the secondaries went for scrub to find them
+        session.replica_locs = self.replica_locs.clone();
+        session.repaired = self.repaired.clone();
         Some(Box::new(session))
     }
 }
@@ -1426,6 +1656,140 @@ mod tests {
             assert_eq!(reads.get(), before);
         });
         sim.run();
+    }
+
+    /// A Null-semantics store serving ROTTEN bytes while `rotten` is
+    /// set; `repair` clears the flag — models a copy whose bit-rot a
+    /// rewrite genuinely fixes.
+    struct RottenStore {
+        rotten: Rc<Cell<bool>>,
+        repairs: Rc<Cell<usize>>,
+    }
+
+    impl Store for RottenStore {
+        fn name(&self) -> &'static str {
+            "null"
+        }
+
+        fn archive<'a>(
+            &'a mut self,
+            _ds: &'a Key,
+            _colloc: &'a Key,
+            _id: &'a Key,
+            data: Bytes,
+        ) -> LocalBoxFuture<'a, Result<FieldLocation, FdbError>> {
+            crate::fdb::backend::ready(Ok(FieldLocation::Null { length: data.len() }))
+        }
+
+        fn read<'a>(
+            &'a mut self,
+            handle: &'a DataHandle,
+        ) -> LocalBoxFuture<'a, Result<Bytes, FdbError>> {
+            crate::fdb::backend::ready(match handle {
+                DataHandle::Null { length } => {
+                    let fill = if self.rotten.get() { 7 } else { 0 };
+                    Ok(Bytes::virt(*length, fill))
+                }
+                other => Err(FdbError::BackendMismatch {
+                    store: "null",
+                    handle: other.backend_name(),
+                }),
+            })
+        }
+
+        fn repair<'a>(
+            &'a mut self,
+            _handle: &'a DataHandle,
+            _data: Bytes,
+        ) -> LocalBoxFuture<'a, Result<bool, FdbError>> {
+            self.rotten.set(false);
+            self.repairs.set(self.repairs.get() + 1);
+            crate::fdb::backend::ready(Ok(true))
+        }
+    }
+
+    fn rotten_pair() -> (ReplicatedStore, Rc<Cell<bool>>, Rc<Cell<usize>>) {
+        let rotten = Rc::new(Cell::new(true));
+        let repairs = Rc::new(Cell::new(0));
+        let rep = ReplicatedStore::new(vec![
+            Box::new(RottenStore {
+                rotten: rotten.clone(),
+                repairs: repairs.clone(),
+            }),
+            Box::new(NullStore),
+        ])
+        .with_read_policy(ReadPolicy::FirstHealthy);
+        (rep, rotten, repairs)
+    }
+
+    #[test]
+    fn verified_read_fails_over_corruption_and_heals_the_copy() {
+        let (mut rep, rotten, repairs) = rotten_pair();
+        let h = DataHandle::Null { length: 16 };
+        let clean = Bytes::virt(16, 0);
+        let checks = [RangeCheck::whole(16, clean.content_checksum())];
+        // the primary serves rot; the caller still gets verified bytes
+        let got = block_on(rep.read_verified(&h, &checks)).unwrap();
+        assert_eq!(got.content_checksum(), clean.content_checksum());
+        // ...and the rotten copy was rewritten in place on the way out
+        assert_eq!(repairs.get(), 1);
+        assert!(!rotten.get());
+        // an UNVERIFIED read would have returned the rot silently —
+        // which is exactly why every engine path now carries checks
+        let again = block_on(rep.read_verified(&h, &checks)).unwrap();
+        assert_eq!(again.content_checksum(), clean.content_checksum());
+        assert_eq!(repairs.get(), 1, "healthy copies are not rewritten");
+    }
+
+    #[test]
+    fn every_copy_rotten_surfaces_typed_corruption() {
+        let rotten = Rc::new(Cell::new(true));
+        let repairs = Rc::new(Cell::new(0));
+        // two rotten replicas, repair disabled by never clearing: use
+        // two independent stores sharing the flag so both serve rot
+        let mut rep = ReplicatedStore::new(vec![
+            Box::new(RottenStore {
+                rotten: rotten.clone(),
+                repairs: repairs.clone(),
+            }),
+            Box::new(RottenStore {
+                rotten: rotten.clone(),
+                repairs: repairs.clone(),
+            }),
+        ]);
+        let h = DataHandle::Null { length: 16 };
+        let clean = Bytes::virt(16, 0);
+        let checks = [RangeCheck::whole(16, clean.content_checksum())];
+        let err = block_on(rep.read_verified(&h, &checks)).unwrap_err();
+        assert!(matches!(err, FdbError::Corrupt { .. }), "got {err}");
+        assert_eq!(repairs.get(), 0, "no verified source, no repair");
+    }
+
+    #[test]
+    fn scrub_probes_all_replicas_and_repairs_from_verified_copy() {
+        let rotten = Rc::new(Cell::new(true));
+        let repairs = Rc::new(Cell::new(0));
+        let mut rep = ReplicatedStore::new(vec![
+            Box::new(NullStore),
+            Box::new(RottenStore {
+                rotten: rotten.clone(),
+                repairs: repairs.clone(),
+            }),
+        ]);
+        let h = DataHandle::Null { length: 16 };
+        let ck = Bytes::virt(16, 0).content_checksum();
+        // detect-only: the damaged secondary is found, nothing rewritten
+        let o = block_on(rep.scrub_field(&h, 16, Some(ck), false)).unwrap();
+        assert_eq!((o.copies, o.missing, o.corrupt, o.repaired), (2, 0, 1, 0));
+        assert!(!o.healthy());
+        // repair: rewritten from the primary's verified bytes
+        let o = block_on(rep.scrub_field(&h, 16, Some(ck), true)).unwrap();
+        assert_eq!((o.corrupt, o.repaired), (1, 1));
+        assert!(o.healthy());
+        assert_eq!(repairs.get(), 1);
+        // the next pass is clean — fsck convergence at the store layer
+        let o = block_on(rep.scrub_field(&h, 16, Some(ck), true)).unwrap();
+        assert_eq!((o.copies, o.missing, o.corrupt, o.repaired), (2, 0, 0, 0));
     }
 
     #[test]

@@ -55,6 +55,19 @@ impl Catalogue for ShardedCatalogue {
         self.shards[shard].archive(ds, colloc, elem, id, loc)
     }
 
+    fn forget<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        colloc: &'a Key,
+        elem: &'a Key,
+        id: &'a Key,
+    ) -> LocalBoxFuture<'a, Result<bool, FdbError>> {
+        // same routing as archive: the shard owning the collocation
+        // holds the entry an fsck ghost-drop removes
+        let shard = self.shard_of(colloc);
+        self.shards[shard].forget(ds, colloc, elem, id)
+    }
+
     fn flush<'a>(&'a mut self) -> LocalBoxFuture<'a, Result<(), FdbError>> {
         Box::pin(async move {
             for shard in &mut self.shards {

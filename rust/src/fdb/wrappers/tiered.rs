@@ -1,10 +1,15 @@
 //! [`TieredStore`]: a fast front Store absorbing writes ahead of a
 //! backing object Store (SCM/NVMe burst-buffer pattern, arXiv:2404.03107).
 
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
 use crate::fdb::backend::{LocalBoxFuture, Store, StoreSession};
 use crate::fdb::datahandle::DataHandle;
 use crate::fdb::key::Key;
 use crate::fdb::location::FieldLocation;
+use crate::fdb::scrub::RangeCheck;
 use crate::fdb::FdbError;
 use crate::sim::time::SimTime;
 use crate::util::content::Bytes;
@@ -20,8 +25,16 @@ use crate::util::content::Bytes;
 pub struct TieredStore {
     front: Box<dyn Store>,
     back: Box<dyn Store>,
-    /// fields absorbed since the last flush, pending write-through
-    pending: Vec<(Key, Key, Key, Bytes)>,
+    /// fields absorbed since the last flush, pending write-through —
+    /// each with the front location the Catalogue indexed, so the spill
+    /// can record where the back-tier copy of that entry landed
+    pending: Vec<(Key, Key, Key, Bytes, FieldLocation)>,
+    /// spill-time back-tier locations, keyed by the front handle (the
+    /// one the Catalogue references) — the map scrub repair uses to
+    /// reach the redundant write-through copy. Shared with sessions so
+    /// engine-lane spills record here too; a fresh process starts empty
+    /// and a damaged front copy is then detect-only.
+    spilled: Rc<RefCell<BTreeMap<String, FieldLocation>>>,
 }
 
 impl TieredStore {
@@ -30,6 +43,7 @@ impl TieredStore {
             front,
             back,
             pending: Vec::new(),
+            spilled: Rc::new(RefCell::new(BTreeMap::new())),
         }
     }
 
@@ -38,15 +52,29 @@ impl TieredStore {
         self.pending.len()
     }
 
+    /// The spill map key for one field: the front handle in debug form
+    /// (deterministic, checksum-free — [`DataHandle::from_location`]
+    /// drops the checksum, so keys built from a bare archive return and
+    /// from a checksummed catalogue entry agree).
+    fn loc_key(handle: &DataHandle) -> String {
+        format!("{handle:?}")
+    }
+
     /// Write every absorbed field through to the backing tier. On a
     /// back-tier error the failed field and everything after it stay
     /// pending, so a later flush retries them.
     async fn spill(&mut self) -> Result<(), FdbError> {
         let pending = std::mem::take(&mut self.pending);
-        for (i, (ds, colloc, id, data)) in pending.iter().enumerate() {
-            if let Err(e) = self.back.archive(ds, colloc, id, data.clone()).await {
-                self.pending = pending[i..].to_vec();
-                return Err(e);
+        for (i, (ds, colloc, id, data, front_loc)) in pending.iter().enumerate() {
+            match self.back.archive(ds, colloc, id, data.clone()).await {
+                Ok(back_loc) => {
+                    let key = Self::loc_key(&DataHandle::from_location(front_loc));
+                    self.spilled.borrow_mut().insert(key, back_loc);
+                }
+                Err(e) => {
+                    self.pending = pending[i..].to_vec();
+                    return Err(e);
+                }
             }
         }
         Ok(())
@@ -68,7 +96,7 @@ impl Store for TieredStore {
         Box::pin(async move {
             let loc = self.front.archive(ds, colloc, id, data.clone()).await?;
             self.pending
-                .push((ds.clone(), colloc.clone(), id.clone(), data));
+                .push((ds.clone(), colloc.clone(), id.clone(), data, loc.clone()));
             Ok(loc)
         })
     }
@@ -116,6 +144,80 @@ impl Store for TieredStore {
         })
     }
 
+    /// Repair routes like `read`: the front is tried first and a
+    /// [`FdbError::BackendMismatch`] (or an inability to rewrite) falls
+    /// through to the back, so a damaged copy is rewritten in whichever
+    /// tier minted its handle.
+    fn repair<'a>(
+        &'a mut self,
+        handle: &'a DataHandle,
+        data: Bytes,
+    ) -> LocalBoxFuture<'a, Result<bool, FdbError>> {
+        Box::pin(async move {
+            match self.front.repair(handle, data.clone()).await {
+                Ok(true) => Ok(true),
+                Ok(false) | Err(FdbError::BackendMismatch { .. }) => {
+                    self.back.repair(handle, data).await
+                }
+                Err(e) => Err(e),
+            }
+        })
+    }
+
+    /// Scrub probes the FRONT tier: every catalogue entry points at the
+    /// location the front minted at archive time, so the bytes an entry
+    /// references live there. With `do_repair`, a damaged front copy is
+    /// rewritten from the back tier's write-through copy (located via
+    /// the spill map, read verified) — the spill is exactly the
+    /// redundant copy a burst buffer repairs from.
+    fn scrub_field<'a>(
+        &'a mut self,
+        handle: &'a DataHandle,
+        expect_len: u64,
+        ck: Option<u64>,
+        do_repair: bool,
+    ) -> LocalBoxFuture<'a, Result<crate::fdb::scrub::ScrubOutcome, FdbError>> {
+        Box::pin(async move {
+            let mut out = self.front.scrub_field(handle, expect_len, ck, false).await?;
+            if do_repair && (out.missing > 0 || out.corrupt > 0) {
+                let back_loc = self.spilled.borrow().get(&Self::loc_key(handle)).cloned();
+                if let Some(back_loc) = back_loc {
+                    let checks: Vec<RangeCheck> = ck
+                        .map(|c| vec![RangeCheck::whole(expect_len, c)])
+                        .unwrap_or_default();
+                    let bh = DataHandle::from_location(&back_loc);
+                    // the repair source must itself verify before it is
+                    // written back over the damaged front copy
+                    if let Ok(good) = self.back.read_verified(&bh, &checks).await {
+                        if good.len() == expect_len
+                            && matches!(self.front.repair(handle, good).await, Ok(true))
+                        {
+                            out.repaired += 1;
+                        }
+                    }
+                }
+            }
+            Ok(out)
+        })
+    }
+
+    /// Inventory covers the FRONT tier only — the catalogue references
+    /// front containers, so back-tier objects would all read as orphans.
+    fn scrub_inventory<'a>(
+        &'a mut self,
+        ds: &'a Key,
+    ) -> LocalBoxFuture<'a, Option<Vec<(String, u64)>>> {
+        self.front.scrub_inventory(ds)
+    }
+
+    fn quarantine_object<'a>(
+        &'a mut self,
+        ds: &'a Key,
+        container: &'a str,
+    ) -> LocalBoxFuture<'a, Result<bool, FdbError>> {
+        self.front.quarantine_object(ds, container)
+    }
+
     /// Direct (catalogue-bypassing) retrieval is forwarded from the
     /// FRONT tier only: every archived field lands there first, so a
     /// direct-capable front resolves unflushed fields too. A
@@ -142,7 +244,7 @@ impl Store for TieredStore {
 
     fn wipe_dataset<'a>(&'a mut self, ds: &'a Key) -> LocalBoxFuture<'a, bool> {
         Box::pin(async move {
-            self.pending.retain(|(d, _, _, _)| d != ds);
+            self.pending.retain(|(d, _, _, _, _)| d != ds);
             let front = self.front.wipe_dataset(ds).await;
             let back = self.back.wipe_dataset(ds).await;
             front || back
@@ -156,10 +258,13 @@ impl Store for TieredStore {
     fn session(&mut self) -> Option<Box<dyn crate::fdb::backend::StoreSession>> {
         // a tiered session pairs sessions of both tiers; its absorbed
         // fields spill through its own back session on (Fdb-driven)
-        // session flush
+        // session flush — into the SHARED spill map, so scrub repair
+        // reaches engine-lane spills too
         let front = self.front.session()?.into_store();
         let back = self.back.session()?.into_store();
-        Some(Box::new(TieredStore::new(front, back)))
+        let mut session = TieredStore::new(front, back);
+        session.spilled = self.spilled.clone();
+        Some(Box::new(session))
     }
 }
 

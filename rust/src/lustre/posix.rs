@@ -360,6 +360,28 @@ impl LustreClient {
         Ok(offset)
     }
 
+    /// Positional write of a (possibly virtual) byte string — the
+    /// scrub/repair path rewriting a damaged range in place.
+    pub async fn pwrite_data(&mut self, fd: &Fd, offset: u64, data: Bytes) -> Result<(), FsError> {
+        self.syscall().await;
+        self.lock(fd.ino, LockMode::Pw).await;
+        let dlen = data.len();
+        self.fs
+            .sim
+            .sleep(transfer_time(dlen, self.fs.config.memcpy_bw))
+            .await;
+        {
+            let mut files = self.fs.files.borrow_mut();
+            let f = files.get_mut(&fd.ino).ok_or(FsError::NotFound)?;
+            f.data.write(offset, data);
+        }
+        let d = self.dirty.entry(fd.ino).or_insert(0);
+        *d += dlen;
+        let now_dirty = *d;
+        self.publish_dirty(fd.ino, now_dirty);
+        Ok(())
+    }
+
     /// Positional write at an arbitrary offset (extends the file if needed).
     pub async fn pwrite(&mut self, fd: &Fd, offset: u64, buf: &[u8]) -> Result<(), FsError> {
         self.syscall().await;

@@ -19,6 +19,7 @@ fn main() {
         "metrics" => coordinator::cmd_metrics(&args),
         "crash" => coordinator::cmd_crash(&args),
         "degrade" => coordinator::cmd_degrade(&args),
+        "fsck" => coordinator::cmd_fsck(&args),
         "ior" => coordinator::cmd_ior(&args),
         "fieldio" => coordinator::cmd_fieldio(&args),
         "opsrun" => coordinator::cmd_opsrun(&args),

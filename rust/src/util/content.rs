@@ -79,6 +79,12 @@ pub fn virtual_stream(seed: u64, skip: u64, len: u64) -> Vec<u8> {
     out[word_off..word_off + len as usize].to_vec()
 }
 
+/// FNV-1a offset basis (same parameters as the WAL record checksum, so
+/// every integrity check in the tree speaks one hash).
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a prime.
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
 /// A logical byte string of real and virtual chunks.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct Bytes {
@@ -174,6 +180,43 @@ impl Bytes {
             out.extend(c.materialize());
         }
         out
+    }
+
+    /// FNV-1a checksum of the logical content. Equal to hashing
+    /// `self.to_vec()` but streamed chunk-wise — virtual chunks fold the
+    /// PRNG stream word by word, so a TiB-scale payload checksums without
+    /// a single large allocation. Two `Bytes` with equal content (however
+    /// chunked) produce the same checksum.
+    pub fn content_checksum(&self) -> u64 {
+        let mut h = FNV_OFFSET;
+        let fold = |h: u64, b: u8| (h ^ b as u64).wrapping_mul(FNV_PRIME);
+        for c in &self.chunks {
+            match c {
+                Chunk::Real(v) => {
+                    for &b in v {
+                        h = fold(h, b);
+                    }
+                }
+                Chunk::Virtual { len, seed, skip } => {
+                    let mut rng = Rng::new(*seed);
+                    for _ in 0..skip / 8 {
+                        rng.next_u64();
+                    }
+                    let mut off = (skip % 8) as usize;
+                    let mut remaining = *len;
+                    while remaining > 0 {
+                        let w = rng.next_u64().to_le_bytes();
+                        let take = ((8 - off) as u64).min(remaining) as usize;
+                        for &b in &w[off..off + take] {
+                            h = fold(h, b);
+                        }
+                        remaining -= take as u64;
+                        off = 0;
+                    }
+                }
+            }
+        }
+        h
     }
 
     /// Content equality with lazy virtual materialization only where a
@@ -358,6 +401,38 @@ mod tests {
         let r = Bytes::real(v.to_vec());
         assert!(v.content_eq(&r));
         assert!(!v.content_eq(&Bytes::virt(64, 4)));
+    }
+
+    /// Reference FNV-1a over a materialized buffer.
+    fn fnv1a(data: &[u8]) -> u64 {
+        data.iter()
+            .fold(FNV_OFFSET, |h, &b| (h ^ b as u64).wrapping_mul(FNV_PRIME))
+    }
+
+    #[test]
+    fn checksum_matches_materialized_fnv() {
+        let cases = vec![
+            Bytes::new(),
+            Bytes::real(b"hello world".to_vec()),
+            Bytes::virt(1000, 42),
+            Bytes::virt(999, 7).slice(100, 50), // non-zero skip
+        ];
+        for b in cases {
+            assert_eq!(b.content_checksum(), fnv1a(&b.to_vec()));
+        }
+        // mixed chunking: same content, different chunk structure
+        let v = Bytes::virt(64, 3);
+        let mut mixed = v.slice(0, 10);
+        mixed.append(Bytes::real(v.to_vec()[10..].to_vec()));
+        assert_eq!(mixed.content_checksum(), v.content_checksum());
+    }
+
+    #[test]
+    fn checksum_detects_a_single_flipped_bit() {
+        let v = Bytes::virt(4096, 11);
+        let mut raw = v.to_vec();
+        raw[1234] ^= 0x01;
+        assert_ne!(Bytes::real(raw).content_checksum(), v.content_checksum());
     }
 
     #[test]

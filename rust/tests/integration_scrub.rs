@@ -1,0 +1,286 @@
+//! Integrity-scenario integration tests behind `fdbctl fsck`:
+//!
+//! * the **interrupted wipe**: a crash between the store half of
+//!   `fdb-wipe` and the catalogue deregistration leaves every entry a
+//!   ghost — fsck must detect the whole class, `--repair` must converge
+//!   (second pass clean), and no entry may resolve afterwards;
+//! * the **nested-stack repair property**: over random workloads on the
+//!   full recursive composition `sharded(tiered(posix,
+//!   replicated(posix)))` with every front-tier copy rotten on disk,
+//!   `fsck --repair` heals the front from the back tier's write-through
+//!   copies and the repaired dataset reads back byte-identical to the
+//!   same workload on the no-fault stack.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use fdbr::bench::scenario::{deploy, RedundancyOpt, SystemKind, SystemUnderTest};
+use fdbr::fdb::fault::{FaultAction, FaultClass, FaultPlan};
+use fdbr::fdb::{BackendConfig, FdbBuilder, FsckReport, Key, Store};
+use fdbr::hw::profiles::Testbed;
+use fdbr::lustre::Lustre;
+use fdbr::util::content::Bytes;
+use fdbr::util::prop;
+
+/// Field `i` of collocation group `g`: the stock POSIX schema
+/// collocates on `type,levtype`, so a per-group `levtype` gives each
+/// group its own container file.
+fn group_id(g: usize, i: usize) -> Key {
+    fdbr::bench::hammer::field_id(0, 1 + i as u32, 0, 0).with("levtype", format!("l{g}"))
+}
+
+#[test]
+fn interrupted_wipe_ghost_state_fsck_repair_converges() {
+    let dep = deploy(Testbed::Gcp, SystemKind::Lustre, 2, 2, RedundancyOpt::None);
+    let SystemUnderTest::Lustre(fs) = &dep.system else {
+        unreachable!()
+    };
+    let config = BackendConfig::Posix {
+        fs: fs.clone(),
+        root: "/fdb".to_string(),
+    };
+    let nodes = dep.client_nodes();
+    let mut w = FdbBuilder::new(&dep.sim)
+        .node(&nodes[0])
+        .backend(config.clone())
+        .build()
+        .unwrap();
+    let sim2 = dep.sim.clone();
+    let opnode = nodes[1].clone();
+    let out = Rc::new(RefCell::new((
+        FsckReport::default(),
+        FsckReport::default(),
+        0usize,
+    )));
+    let out2 = out.clone();
+    dep.sim.spawn(async move {
+        // two collocation groups → two container files on disk
+        let ids: Vec<Key> = (0..8).map(|i| group_id(i / 4, i % 4)).collect();
+        for (i, id) in ids.iter().enumerate() {
+            w.archive(id, Bytes::virt(256, i as u64)).await.unwrap();
+        }
+        w.flush().await.unwrap();
+        w.close().await.unwrap();
+        let ds = ids[0].project(&w.schema.dataset.clone()).unwrap();
+        // `fdb-wipe` is one store wipe followed by one catalogue
+        // deregistration. Crash the process between the two: every
+        // container is gone from the data path while the catalogue
+        // still lists all entries. (Seeded via per-container
+        // quarantine — the store half of the wipe — because on POSIX
+        // the dataset directory is shared with the catalogue, whose
+        // TOC/index files a mid-wipe crash would also leave behind.)
+        let (store, _) = w.backend_mut();
+        let inventory = store
+            .scrub_inventory(&ds)
+            .await
+            .expect("posix stores can inventory");
+        assert_eq!(inventory.len(), 2, "one container per collocation group");
+        for (container, _len) in &inventory {
+            let gone = store.quarantine_object(&ds, container).await.unwrap();
+            assert!(gone, "wipe half must remove {container}");
+        }
+        drop(w); // the crashed process
+
+        // a fresh operator instance finds and repairs the ghost state
+        let mut op = FdbBuilder::new(&sim2)
+            .node(&opnode)
+            .backend(config)
+            .build()
+            .unwrap();
+        let first = op.fsck(&ds, true).await.expect("fsck --repair");
+        let second = op.fsck(&ds, false).await.expect("fsck convergence pass");
+        let mut found = 0usize;
+        for id in &ids {
+            if op.retrieve(id).await.unwrap().is_some() {
+                found += 1;
+            }
+        }
+        *out2.borrow_mut() = (first, second, found);
+    });
+    dep.sim.run();
+    let (first, second, found) = *out.borrow();
+    assert_eq!(first.entries, 8);
+    assert_eq!(first.ghosts, 8, "every surviving entry is a ghost");
+    assert_eq!(first.ghosts_dropped, 8, "repair drops the whole class");
+    assert_eq!(first.corrupt, 0);
+    assert_eq!(
+        first.orphans, 0,
+        "wiped containers are gone from the inventory, not orphaned"
+    );
+    assert!(first.converged(), "repair must converge: {first}");
+    assert!(second.clean(), "second pass must be clean: {second}");
+    assert_eq!(second.entries, 0, "the catalogue caught up with the wipe");
+    assert_eq!(found, 0, "no ghost entry resolves after repair");
+}
+
+/// One randomized workload: fields addressed by (step, param) with
+/// per-field payload sizes. Repeats re-archive (replace) the field.
+#[derive(Clone, Debug)]
+struct Workload {
+    fields: Vec<(u32, u32, u64)>,
+}
+
+fn gen_workload(rng: &mut fdbr::util::rng::Rng) -> Workload {
+    let n = 1 + rng.below(12) as usize;
+    let fields = (0..n)
+        .map(|_| {
+            (
+                1 + rng.below(4) as u32,
+                rng.below(3) as u32,
+                64 + rng.below(4096),
+            )
+        })
+        .collect();
+    Workload { fields }
+}
+
+fn payload(step: u32, param: u32, size: u64) -> Bytes {
+    Bytes::virt(size, (u64::from(step) << 32) | u64::from(param))
+}
+
+/// FNV-1a over materialized bytes (payloads here are tiny).
+fn digest(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// The "everything at once" composition: a sharded catalogue over a
+/// tiered store whose back tier is 2-way replicated posix. With `rot`,
+/// a fault layer on the FRONT leaf corrupts every front-tier write of
+/// the first store built from it (`only_instance(0)` = the writer —
+/// the catalogue is built from the back config, so it never advances
+/// this layer's counter).
+fn nested_config(fs: &Rc<Lustre>, rot: bool) -> BackendConfig {
+    let mut front = BackendConfig::Posix {
+        fs: fs.clone(),
+        root: "/scm".to_string(),
+    };
+    if rot {
+        front = BackendConfig::Fault {
+            inner: Box::new(front),
+            plan: FaultPlan::new(0xD15C_0707)
+                .with_rule(FaultClass::Write, FaultAction::Corrupt { prob: 1.0 })
+                .with_only_instance(0),
+        };
+    }
+    BackendConfig::Sharded {
+        inner: Box::new(BackendConfig::Tiered {
+            front: Box::new(front),
+            back: Box::new(BackendConfig::Replicated {
+                inner: Box::new(BackendConfig::Posix {
+                    fs: fs.clone(),
+                    root: "/fdb".to_string(),
+                }),
+                copies: 2,
+            }),
+        }),
+        shards: 2,
+    }
+}
+
+/// Run one workload on the nested stack: writer archives (flush +
+/// close), then — on the `rot` leg — the writer runs `fsck --repair`
+/// plus a detect-only convergence pass (asserting every referenced
+/// front copy was found rotten and repaired), and finally a fresh
+/// reader on the second node fingerprints every unique field.
+fn nested_fingerprint(rot: bool, wl: &Workload) -> Vec<(String, u64, u64)> {
+    let dep = deploy(Testbed::Gcp, SystemKind::Lustre, 2, 2, RedundancyOpt::None);
+    let SystemUnderTest::Lustre(fs) = &dep.system else {
+        unreachable!()
+    };
+    let config = nested_config(fs, rot);
+    if rot {
+        assert!(config.describe().contains("fault["), "{}", config.describe());
+    } else {
+        assert_eq!(config.describe(), "sharded2(tiered(posix,replicated2(posix)))");
+    }
+    let nodes = dep.client_nodes();
+    // build order matters: the writer's front store is fault instance 0
+    let mut w = FdbBuilder::new(&dep.sim)
+        .node(&nodes[0])
+        .backend(config.clone())
+        .build()
+        .unwrap();
+    let mut r = FdbBuilder::new(&dep.sim)
+        .node(&nodes[1])
+        .backend(config)
+        .build()
+        .unwrap();
+    let out = Rc::new(RefCell::new(Vec::new()));
+    let out2 = out.clone();
+    let wl = wl.clone();
+    dep.sim.spawn(async move {
+        let mut ids: Vec<Key> = Vec::new();
+        let mut seen = std::collections::BTreeSet::new();
+        for &(step, param, size) in &wl.fields {
+            let id = fdbr::bench::hammer::field_id(0, step, param, 0);
+            w.archive(&id, payload(step, param, size)).await.unwrap();
+            if seen.insert(id.canonical()) {
+                ids.push(id);
+            }
+        }
+        w.flush().await.unwrap();
+        w.close().await.expect("close");
+        let ds = ids[0].project(&w.schema.dataset.clone()).unwrap();
+        if rot {
+            // fsck on the WRITER: its tiered store recorded the
+            // spill-time back-tier locations repair rewrites from
+            let n = ids.len() as u64;
+            let first = w.fsck(&ds, true).await.expect("fsck --repair");
+            assert_eq!(first.entries, n);
+            assert_eq!(first.verified, n, "every entry carries a checksum");
+            assert_eq!(first.corrupt, n, "every referenced front copy is rotten");
+            assert_eq!(
+                first.repaired, n,
+                "every front copy rewritten from its back-tier spill copy"
+            );
+            assert_eq!(first.ghosts, 0);
+            assert_eq!(first.orphans, 0);
+            assert!(first.converged(), "repair must converge: {first}");
+            let second = w.fsck(&ds, false).await.expect("convergence pass");
+            assert!(second.clean(), "second pass must be clean: {second}");
+        } else {
+            // the healthy stack scrubs clean in the first place
+            let report = w.fsck(&ds, false).await.expect("fsck");
+            assert!(report.clean(), "healthy stack must fsck clean: {report}");
+        }
+        // fingerprint through a fresh reader (its front store is fault
+        // instance 1 — out of the `only_instance(0)` scope, so what it
+        // observes is exactly what is on disk after repair)
+        let mut fp = Vec::new();
+        for id in &ids {
+            let h = r
+                .retrieve(id)
+                .await
+                .unwrap()
+                .unwrap_or_else(|| panic!("missing {id}"));
+            let bytes = r.read(&h).await.unwrap().to_vec();
+            fp.push((id.canonical(), bytes.len() as u64, digest(&bytes)));
+        }
+        *out2.borrow_mut() = fp;
+    });
+    dep.sim.run();
+    let fp = out.borrow().clone();
+    fp
+}
+
+#[test]
+fn nested_stack_repair_is_byte_identical_to_no_fault_baseline() {
+    // property: for random workloads, rotting EVERY front-tier copy on
+    // disk and then running `fsck --repair` yields a dataset that reads
+    // back byte-identical to the same workload on the no-fault stack
+    prop::check_no_shrink(0x5C12B, 3, gen_workload, |wl| {
+        let baseline = nested_fingerprint(false, wl);
+        assert!(!baseline.is_empty(), "workload must index at least one field");
+        let healed = nested_fingerprint(true, wl);
+        assert_eq!(
+            healed, baseline,
+            "repaired nested stack must be byte-identical to the baseline"
+        );
+        true
+    });
+}

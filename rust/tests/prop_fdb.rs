@@ -252,6 +252,7 @@ fn prop_datahandle_merge_preserves_bytes_and_never_increases_ops() {
                         path: format!("/f{}", rng.index(nfiles)),
                         offset: rng.below(10_000),
                         length: rng.below(500) + 1,
+                        checksum: None,
                     })
                 })
                 .collect();
